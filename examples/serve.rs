@@ -1,0 +1,67 @@
+//! Inference-serving driver (deliverable (b), DESIGN.md S11): load the
+//! AOT-compiled FuSe student model, serve a stream of single-image
+//! requests through the dynamic batcher, and report latency/throughput.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example serve -- [requests]
+//! ```
+
+use fuseconv::coordinator::batcher::BatchPolicy;
+use fuseconv::coordinator::server::Server;
+use fuseconv::runtime::{default_artifacts_dir, Manifest, PjrtEngine, Synth};
+use std::time::{Duration, Instant};
+
+fn main() {
+    let n: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(128);
+    let dir = default_artifacts_dir();
+    if !dir.join("manifest.txt").exists() {
+        eprintln!("artifacts not built — run `make artifacts` first");
+        std::process::exit(1);
+    }
+    let manifest = Manifest::load(&dir).unwrap();
+    let hw = manifest.const_usize("image_hw").unwrap();
+    let classes = manifest.const_usize("num_classes").unwrap();
+
+    println!("== serving the FuSe student model (batch≤8, 5 ms deadline) ==");
+    let server = Server::start_with(
+        move || PjrtEngine::from_artifacts(&dir, "student_init.bin").unwrap(),
+        BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(5) },
+    );
+
+    // open-loop client: bursts of 4 requests with small gaps
+    let mut synth = Synth::new(hw, classes, 2026);
+    let t0 = Instant::now();
+    let mut pending = Vec::with_capacity(n);
+    for i in 0..n {
+        let (x, _) = synth.batch(1);
+        pending.push(server.submit(x));
+        if i % 4 == 3 {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    }
+    let mut correct_shape = 0;
+    for rx in pending {
+        let resp = rx.recv_timeout(Duration::from_secs(300)).expect("response");
+        if resp.output.len() == classes {
+            correct_shape += 1;
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let stats = server.shutdown();
+    let s = stats.latency_summary().unwrap();
+
+    println!("served {} requests ({correct_shape} well-formed) in {wall:.2}s", stats.served);
+    println!(
+        "throughput {:.1} req/s over {} batches (mean batch {:.2})",
+        stats.served as f64 / wall,
+        stats.batches,
+        stats.mean_batch()
+    );
+    println!(
+        "latency: p50 {:.1} ms  p90 {:.1} ms  p99 {:.1} ms  max {:.1} ms",
+        s.p50 / 1e3,
+        s.p90 / 1e3,
+        s.p99 / 1e3,
+        s.max / 1e3
+    );
+}

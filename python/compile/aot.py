@@ -1,0 +1,166 @@
+"""AOT export: lower every L2 graph to HLO **text** + a manifest the Rust
+runtime parses. Python runs only here (``make artifacts``); the request
+path is pure Rust + PJRT.
+
+HLO text — NOT ``lowered.compiler_ir().serialize()`` — is the interchange
+format: jax ≥ 0.5 emits HloModuleProtos with 64-bit instruction ids that
+the image's xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the
+text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md and gen_hlo.py).
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile import model as M
+from compile import nos as N
+from compile import train as T
+
+TRAIN_B = 16
+INFER_B = 8
+FEATURE_BLOCK = 3  # paper Fig 12 visualizes the 3rd mobile bottleneck
+
+
+def to_hlo_text(fn, example_args) -> str:
+    # keep_unused: the feature-extraction graphs read only a prefix of the
+    # parameter list; the Rust runtime feeds the full set positionally, so
+    # unused arguments must stay in the HLO signature.
+    lowered = jax.jit(fn, keep_unused=True).lower(*example_args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec_args(specs):
+    return [jax.ShapeDtypeStruct(s.shape, jnp.float32) for s in specs]
+
+
+def data_args(batch):
+    x = jax.ShapeDtypeStruct((batch, 3, M.IMAGE_HW, M.IMAGE_HW), jnp.float32)
+    y = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    return x, y
+
+
+class Manifest:
+    def __init__(self):
+        self.lines = []
+
+    def const(self, key, value):
+        self.lines.append(f"const {key} {value}")
+
+    def begin_graph(self, name, filename):
+        self.lines.append(f"graph {name} {filename}")
+
+    def io(self, kind, aval):
+        dims = "x".join(str(d) for d in aval.shape) if aval.shape else "scalar"
+        dt = {jnp.float32: "f32", jnp.int32: "i32"}.get(aval.dtype.type, str(aval.dtype))
+        self.lines.append(f"  {kind} {dt} {dims}")
+
+    def params_block(self, label, specs):
+        self.lines.append(f"params {label} {len(specs)}")
+        for s in specs:
+            dims = "x".join(str(d) for d in s.shape)
+            self.lines.append(f"  p {s.name} {dims}")
+
+    def write(self, path):
+        with open(path, "w") as f:
+            f.write("\n".join(self.lines) + "\n")
+
+
+def export_graph(man: Manifest, outdir: str, name: str, fn, args):
+    text = to_hlo_text(fn, args)
+    fname = f"{name}.hlo.txt"
+    with open(os.path.join(outdir, fname), "w") as f:
+        f.write(text)
+    man.begin_graph(name, fname)
+    for a in args:
+        man.io("in", a)
+    # output avals from an abstract eval
+    out = jax.eval_shape(fn, *args)
+    for o in jax.tree_util.tree_leaves(out):
+        man.io("out", o)
+    print(f"  wrote {fname} ({len(text) / 1e6:.1f} MB, {len(args)} inputs)")
+
+
+def write_init(path: str, params: list):
+    flat = np.concatenate([np.asarray(p, np.float32).ravel() for p in params])
+    flat.tofile(path)
+    print(f"  wrote {os.path.basename(path)} ({flat.nbytes / 1e3:.0f} kB)")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+    outdir = args.out
+    os.makedirs(outdir, exist_ok=True)
+
+    teacher = M.teacher()
+    student = M.student()
+    scaffold = N.Scaffold()
+
+    man = Manifest()
+    man.const("image_hw", M.IMAGE_HW)
+    man.const("num_classes", M.NUM_CLASSES)
+    man.const("train_batch", TRAIN_B)
+    man.const("infer_batch", INFER_B)
+    man.const("num_blocks", len(teacher.blocks))
+    man.const("ksize", M.KSIZE)
+    man.const("feature_block", FEATURE_BLOCK)
+    man.const("num_teacher_params", len(teacher.specs))
+    man.const("num_student_params", len(student.specs))
+    man.const("num_scaffold_params", len(scaffold.specs))
+    man.params_block("teacher", teacher.specs)
+    man.params_block("student", student.specs)
+    man.params_block("scaffold", scaffold.specs)
+
+    lr = jax.ShapeDtypeStruct((), jnp.float32)
+    x, y = data_args(TRAIN_B)
+    mask = jax.ShapeDtypeStruct((len(teacher.blocks),), jnp.float32)
+
+    print("exporting graphs:")
+    step, n = T.make_plain_step(teacher)
+    export_graph(man, outdir, "teacher_train_step", step,
+                 spec_args(teacher.specs) * 2 + [x, y, lr])
+
+    step, n = T.make_plain_step(student)
+    export_graph(man, outdir, "student_train_step", step,
+                 spec_args(student.specs) * 2 + [x, y, lr])
+
+    step, n, nt = T.make_nos_step(scaffold)
+    export_graph(man, outdir, "nos_train_step", step,
+                 spec_args(scaffold.specs) * 2 + spec_args(teacher.specs)
+                 + [x, y, mask, lr])
+
+    fn, n = T.make_collapse(scaffold)
+    export_graph(man, outdir, "collapse", fn, spec_args(scaffold.specs))
+
+    xi, _ = data_args(INFER_B)
+    fn, n = T.make_infer(student)
+    export_graph(man, outdir, "student_infer", fn, spec_args(student.specs) + [xi])
+    fn, n = T.make_infer(teacher)
+    export_graph(man, outdir, "teacher_infer", fn, spec_args(teacher.specs) + [xi])
+
+    x1 = jax.ShapeDtypeStruct((1, 3, M.IMAGE_HW, M.IMAGE_HW), jnp.float32)
+    fn, n = T.make_feature(teacher, FEATURE_BLOCK)
+    export_graph(man, outdir, "feature_teacher", fn, spec_args(teacher.specs) + [x1])
+    fn, n = T.make_feature(student, FEATURE_BLOCK)
+    export_graph(man, outdir, "feature_student", fn, spec_args(student.specs) + [x1])
+
+    write_init(os.path.join(outdir, "teacher_init.bin"), teacher.init(seed=1))
+    write_init(os.path.join(outdir, "student_init.bin"), student.init(seed=2))
+    man.write(os.path.join(outdir, "manifest.txt"))
+    print(f"manifest: {os.path.join(outdir, 'manifest.txt')}")
+
+
+if __name__ == "__main__":
+    main()

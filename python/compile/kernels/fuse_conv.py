@@ -1,0 +1,335 @@
+"""Layer-1 Pallas kernels for FuSeConv (paper §3.1) and its neighbours.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's hardware
+story is a 16×16 systolic array with the ST-OS dataflow — each independent
+1D convolution occupies one array row with a broadcast weight. The TPU
+analogue we express with Pallas is: *grid over (batch, channel)* so each
+grid step is one "systolic row's" worth of independent 1D convolutions,
+with the channel's full spatial plane staged in VMEM (BlockSpec) and the
+K-tap reduction unrolled — a broadcastable scalar weight per tap, exactly
+the ST-OS weight-broadcast structure. Pointwise (1×1) convolution is the
+MXU-shaped matmul and is tiled accordingly.
+
+All kernels run with ``interpret=True``: real Mosaic lowering emits a TPU
+custom-call the CPU PJRT plugin cannot execute; interpret mode lowers to
+plain HLO so the same graph runs under the Rust runtime. Correctness is
+pinned against ``ref.py`` by ``python/tests/test_kernels.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+# ---------------------------------------------------------------------------
+# FuSe 1D convolutions
+# ---------------------------------------------------------------------------
+
+
+
+# Channel-tile selection: stage (B, ct, H, W) blocks in VMEM, keeping the
+# block under ~2 MiB (the TPU VMEM-budget heuristic; on CPU-interpret this
+# also bounds the grid length, which dominates wallclock).
+_VMEM_BUDGET = 2 * 1024 * 1024
+
+
+def _channel_tile(b: int, c: int, h: int, w: int, bytes_per: int = 4) -> int:
+    per_channel = b * h * w * bytes_per
+    ct = max(1, _VMEM_BUDGET // max(per_channel, 1))
+    return min(c, ct)
+
+
+def _fuse_row_kernel(x_ref, w_ref, o_ref, *, k: int, stride: int):
+    """(B, CT, H, W) block: 1xK conv along width for CT channels at once.
+
+    The K-tap loop is unrolled; each tap is a per-channel broadcast weight
+    times a strided slice — the software image of ST-OS's row-broadcast.
+    """
+    x = x_ref[...]
+    b, ct, h, w_out = o_ref.shape
+    acc = jnp.zeros((b, ct, h, w_out), dtype=jnp.float32)
+    for t in range(k):
+        sl = jax.lax.slice(
+            x, (0, 0, 0, t), (b, ct, h, t + 1 + (w_out - 1) * stride), (1, 1, 1, stride)
+        )
+        acc = acc + w_ref[:, t][None, :, None, None].astype(jnp.float32) * sl.astype(jnp.float32)
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+def _fuse_col_kernel(x_ref, w_ref, o_ref, *, k: int, stride: int):
+    """(B, CT, H, W) block: Kx1 conv along height for CT channels at once."""
+    x = x_ref[...]
+    b, ct, h_out, w = o_ref.shape
+    acc = jnp.zeros((b, ct, h_out, w), dtype=jnp.float32)
+    for t in range(k):
+        sl = jax.lax.slice(
+            x, (0, 0, t, 0), (b, ct, t + 1 + (h_out - 1) * stride, w), (1, 1, stride, 1)
+        )
+        acc = acc + w_ref[:, t][None, :, None, None].astype(jnp.float32) * sl.astype(jnp.float32)
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+def _conv1d_out(n: int, k: int, stride: int) -> int:
+    return (n - k) // stride + 1
+
+
+@functools.partial(jax.jit, static_argnames=("stride",))
+def fuse_row(x: jax.Array, w: jax.Array, stride: int = 1) -> jax.Array:
+    """Row half of FuSeConv: x (B, C, H, W) ⊛ w (C, K) → (B, C, H', W').
+
+    VALID padding along the filter axis; the caller pads (the L2 model pads
+    SAME, and subsamples rows for stride along the orthogonal axis).
+    """
+    b, c, h, w_in = x.shape
+    c2, k = w.shape
+    assert c == c2, f"channels {c} vs filters {c2}"
+    w_out = _conv1d_out(w_in, k, stride)
+    h_out = _conv1d_out(h, 1, stride)  # orthogonal axis subsampling
+    xs = x[:, :, :: stride, :] if stride > 1 else x
+    out_shape = jax.ShapeDtypeStruct((b, c, h_out, w_out), x.dtype)
+    ct = _channel_tile(b, c, h_out, w_in)
+    return pl.pallas_call(
+        functools.partial(_fuse_row_kernel, k=k, stride=stride),
+        grid=(pl.cdiv(c, ct),),
+        in_specs=[
+            pl.BlockSpec((b, ct, h_out, w_in), lambda j: (0, j, 0, 0)),
+            pl.BlockSpec((ct, k), lambda j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((b, ct, h_out, w_out), lambda j: (0, j, 0, 0)),
+        out_shape=out_shape,
+        interpret=True,
+    )(xs, w)
+
+
+@functools.partial(jax.jit, static_argnames=("stride",))
+def fuse_col(x: jax.Array, w: jax.Array, stride: int = 1) -> jax.Array:
+    """Column half of FuSeConv: x (B, C, H, W) ⊛ w (C, K) → (B, C, H', W')."""
+    b, c, h, w_in = x.shape
+    c2, k = w.shape
+    assert c == c2
+    h_out = _conv1d_out(h, k, stride)
+    w_out = _conv1d_out(w_in, 1, stride)
+    xs = x[:, :, :, ::stride] if stride > 1 else x
+    out_shape = jax.ShapeDtypeStruct((b, c, h_out, w_out), x.dtype)
+    ct = _channel_tile(b, c, h, w_out)
+    return pl.pallas_call(
+        functools.partial(_fuse_col_kernel, k=k, stride=stride),
+        grid=(pl.cdiv(c, ct),),
+        in_specs=[
+            pl.BlockSpec((b, ct, h, w_out), lambda j: (0, j, 0, 0)),
+            pl.BlockSpec((ct, k), lambda j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((b, ct, h_out, w_out), lambda j: (0, j, 0, 0)),
+        out_shape=out_shape,
+        interpret=True,
+    )(xs, w)
+
+
+# ---------------------------------------------------------------------------
+# Pointwise (1×1) convolution — the MXU-shaped GEMM
+# ---------------------------------------------------------------------------
+
+# MXU-friendly tiles: multiples of (8, 128) systolic geometry, shrunk when
+# the problem is smaller.
+def _tile(n: int, pref: int) -> int:
+    return min(pref, n)
+
+
+def _pointwise_kernel(x_ref, w_ref, o_ref):
+    """x (M_t, Cin) @ w (Cin, N_t) in fp32 accumulation."""
+    o_ref[...] = jnp.dot(
+        x_ref[...].astype(jnp.float32),
+        w_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    ).astype(o_ref.dtype)
+
+
+@jax.jit
+def pointwise(x: jax.Array, w: jax.Array) -> jax.Array:
+    """1×1 convolution: x (B, C, H, W), w (C, C') → (B, C', H, W)."""
+    b, c, h, wd = x.shape
+    c2, cout = w.shape
+    assert c == c2
+    m = b * h * wd
+    xm = jnp.transpose(x, (0, 2, 3, 1)).reshape(m, c)
+    mt = _tile(m, 128)
+    nt = _tile(cout, 128)
+    grid = (pl.cdiv(m, mt), pl.cdiv(cout, nt))
+    om = pl.pallas_call(
+        _pointwise_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((mt, c), lambda i, j: (i, 0)),
+            pl.BlockSpec((c, nt), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((mt, nt), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, cout), x.dtype),
+        interpret=True,
+    )(xm, w)
+    return jnp.transpose(om.reshape(b, h, wd, cout), (0, 3, 1, 2))
+
+
+# ---------------------------------------------------------------------------
+# Depthwise K×K — the teacher operator (baseline + NOS teacher)
+# ---------------------------------------------------------------------------
+
+
+def _depthwise_kernel(x_ref, w_ref, o_ref, *, k: int, stride: int):
+    """(B, CT, H, W) block: KxK depthwise conv for CT channels at once."""
+    x = x_ref[...]
+    b, ct, h_out, w_out = o_ref.shape
+    acc = jnp.zeros((b, ct, h_out, w_out), dtype=jnp.float32)
+    for dy in range(k):
+        for dx in range(k):
+            sl = jax.lax.slice(
+                x,
+                (0, 0, dy, dx),
+                (b, ct, dy + 1 + (h_out - 1) * stride, dx + 1 + (w_out - 1) * stride),
+                (1, 1, stride, stride),
+            )
+            acc = acc + w_ref[:, dy, dx][None, :, None, None].astype(jnp.float32) * sl.astype(
+                jnp.float32
+            )
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("stride",))
+def depthwise(x: jax.Array, w: jax.Array, stride: int = 1) -> jax.Array:
+    """Depthwise conv: x (B, C, H, W), w (C, K, K) → (B, C, H', W')."""
+    b, c, h, wd = x.shape
+    c2, k, k2 = w.shape
+    assert c == c2 and k == k2
+    h_out = _conv1d_out(h, k, stride)
+    w_out = _conv1d_out(wd, k, stride)
+    ct = _channel_tile(b, c, h, wd)
+    return pl.pallas_call(
+        functools.partial(_depthwise_kernel, k=k, stride=stride),
+        grid=(pl.cdiv(c, ct),),
+        in_specs=[
+            pl.BlockSpec((b, ct, h, wd), lambda j: (0, j, 0, 0)),
+            pl.BlockSpec((ct, k, k), lambda j: (j, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((b, ct, h_out, w_out), lambda j: (0, j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, c, h_out, w_out), x.dtype),
+        interpret=True,
+    )(x, w)
+
+
+# ---------------------------------------------------------------------------
+# FuSeConv composite (Half / Full variants, SAME padding)
+# ---------------------------------------------------------------------------
+
+
+def _same_pad_w(x, k):
+    lo = (k - 1) // 2
+    return jnp.pad(x, ((0, 0), (0, 0), (0, 0), (lo, k - 1 - lo)))
+
+
+def _same_pad_h(x, k):
+    lo = (k - 1) // 2
+    return jnp.pad(x, ((0, 0), (0, 0), (lo, k - 1 - lo), (0, 0)))
+
+
+def fuse_conv(x: jax.Array, w_row: jax.Array, w_col: jax.Array, stride: int = 1,
+              full: bool = False) -> jax.Array:
+    """The FuSeConv operator (paper Fig 4a), SAME padding.
+
+    Half (default): row filters act on the first C/2 channels, column
+    filters on the rest → C output channels. Full: both act on all C
+    channels → 2C output channels.
+    """
+    b, c, h, wd = x.shape
+    if full:
+        xr, xc = x, x
+    else:
+        assert c % 2 == 0, "FuSe-Half needs even channels"
+        xr, xc = x[:, : c // 2], x[:, c // 2 :]
+    kr = w_row.shape[1]
+    kc = w_col.shape[1]
+    r = fuse_row(_same_pad_w(xr, kr), w_row, stride=stride)
+    cc = fuse_col(_same_pad_h(xc, kc), w_col, stride=stride)
+    return jnp.concatenate([r, cc], axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Differentiable wrappers (L2 training path)
+#
+# Interpret-mode pallas_call has no reverse-mode rule, so each kernel gets a
+# custom VJP: forward runs the Pallas kernel, backward is the vjp of the
+# pure-jnp oracle in ref.py (pytest pins kernel == ref, so the gradient is
+# consistent with the forward to numerical tolerance). The backward ops are
+# plain XLA convolutions — fine for the AOT-lowered train-step graphs.
+# ---------------------------------------------------------------------------
+
+from compile.kernels import ref as _ref  # noqa: E402
+
+
+def make_fuse_conv(stride: int = 1, full: bool = False):
+    """Differentiable FuSeConv(x, w_row, w_col) for fixed (stride, full)."""
+
+    def _ref_fn(x, wr, wc):
+        return _ref.fuse_conv_ref(x, wr, wc, stride=stride, full=full)
+
+    @jax.custom_vjp
+    def op(x, wr, wc):
+        return fuse_conv(x, wr, wc, stride=stride, full=full)
+
+    def fwd(x, wr, wc):
+        return op(x, wr, wc), (x, wr, wc)
+
+    def bwd(res, g):
+        x, wr, wc = res
+        _, vjp = jax.vjp(_ref_fn, x, wr, wc)
+        return vjp(g)
+
+    op.defvjp(fwd, bwd)
+    return op
+
+
+def make_depthwise(stride: int = 1):
+    """Differentiable depthwise(x, w) with SAME padding for fixed stride."""
+
+    def _pad(x, k):
+        lo = (k - 1) // 2
+        return jnp.pad(x, ((0, 0), (0, 0), (lo, k - 1 - lo), (lo, k - 1 - lo)))
+
+    def _ref_fn(x, w):
+        return _ref.depthwise_ref(_pad(x, w.shape[-1]), w, stride=stride)
+
+    @jax.custom_vjp
+    def op(x, w):
+        return depthwise(_pad(x, w.shape[-1]), w, stride=stride)
+
+    def fwd(x, w):
+        return op(x, w), (x, w)
+
+    def bwd(res, g):
+        x, w = res
+        _, vjp = jax.vjp(_ref_fn, x, w)
+        return vjp(g)
+
+    op.defvjp(fwd, bwd)
+    return op
+
+
+@jax.custom_vjp
+def pointwise_ad(x, w):
+    """Differentiable pointwise(x, w)."""
+    return pointwise(x, w)
+
+
+def _pw_fwd(x, w):
+    return pointwise_ad(x, w), (x, w)
+
+
+def _pw_bwd(res, g):
+    x, w = res
+    _, vjp = jax.vjp(_ref.pointwise_ref, x, w)
+    return vjp(g)
+
+
+pointwise_ad.defvjp(_pw_fwd, _pw_bwd)

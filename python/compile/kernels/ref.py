@@ -1,0 +1,78 @@
+"""Pure-jnp oracles for every Pallas kernel (the build-time correctness
+contract — pytest asserts allclose between kernels and these)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def fuse_row_ref(x: jax.Array, w: jax.Array, stride: int = 1) -> jax.Array:
+    """1×K conv along width, per channel. x (B,C,H,W), w (C,K) — VALID."""
+    b, c, h, wd = x.shape
+    _, k = w.shape
+    xs = x[:, :, ::stride, :] if stride > 1 else x
+    # grouped conv with feature_group_count = C
+    rhs = w[:, None, None, :]  # (C, 1, 1, K) => OIHW with O=C, I=1
+    return jax.lax.conv_general_dilated(
+        xs.astype(jnp.float32),
+        rhs.astype(jnp.float32),
+        window_strides=(1, stride),
+        padding="VALID",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+        feature_group_count=c,
+    ).astype(x.dtype)
+
+
+def fuse_col_ref(x: jax.Array, w: jax.Array, stride: int = 1) -> jax.Array:
+    """K×1 conv along height, per channel."""
+    b, c, h, wd = x.shape
+    _, k = w.shape
+    xs = x[:, :, :, ::stride] if stride > 1 else x
+    rhs = w[:, None, :, None]  # (C, 1, K, 1)
+    return jax.lax.conv_general_dilated(
+        xs.astype(jnp.float32),
+        rhs.astype(jnp.float32),
+        window_strides=(stride, 1),
+        padding="VALID",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+        feature_group_count=c,
+    ).astype(x.dtype)
+
+
+def pointwise_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    """1×1 conv. x (B,C,H,W), w (C,C')."""
+    return jnp.einsum(
+        "bchw,cd->bdhw", x.astype(jnp.float32), w.astype(jnp.float32)
+    ).astype(x.dtype)
+
+
+def depthwise_ref(x: jax.Array, w: jax.Array, stride: int = 1) -> jax.Array:
+    """K×K depthwise, VALID. x (B,C,H,W), w (C,K,K)."""
+    c = x.shape[1]
+    rhs = w[:, None, :, :]
+    return jax.lax.conv_general_dilated(
+        x.astype(jnp.float32),
+        rhs.astype(jnp.float32),
+        window_strides=(stride, stride),
+        padding="VALID",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+        feature_group_count=c,
+    ).astype(x.dtype)
+
+
+def fuse_conv_ref(x, w_row, w_col, stride: int = 1, full: bool = False):
+    """Composite FuSeConv with SAME padding — mirrors kernels.fuse_conv."""
+    b, c, h, wd = x.shape
+    if full:
+        xr, xc = x, x
+    else:
+        xr, xc = x[:, : c // 2], x[:, c // 2 :]
+    kr, kc = w_row.shape[1], w_col.shape[1]
+    lo_r = (kr - 1) // 2
+    lo_c = (kc - 1) // 2
+    xr = jnp.pad(xr, ((0, 0), (0, 0), (0, 0), (lo_r, kr - 1 - lo_r)))
+    xc = jnp.pad(xc, ((0, 0), (0, 0), (lo_c, kc - 1 - lo_c), (0, 0)))
+    r = fuse_row_ref(xr, w_row, stride=stride)
+    cc = fuse_col_ref(xc, w_col, stride=stride)
+    return jnp.concatenate([r, cc], axis=1)

@@ -1,0 +1,207 @@
+"""Layer-2 JAX model: *EdgeNet*, a MobileNetV2-style bottleneck classifier
+for 32×32 inputs used by the end-to-end training/serving experiments
+(DESIGN.md S9, substitution #1 — ImageNet-scale nets are infeasible here,
+and the paper's accuracy claims are *trends*, which reproduce at this
+scale).
+
+The network exists in two operator variants sharing the same macro
+architecture, exactly like the paper's in-place replacement:
+
+* ``variant="dw"``   — depthwise K×K bottlenecks (the teacher / baseline);
+* ``variant="fuse"`` — FuSe-Half row/column bottlenecks (the student).
+
+Parameters are a flat ``list`` of arrays with a deterministic spec so the
+Rust runtime can allocate, initialize, and feed them positionally through
+the AOT-compiled HLO graphs.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile.kernels import fuse_conv as kernels
+
+
+def instance_norm(y: jax.Array, eps: float = 1e-5) -> jax.Array:
+    """Per-sample, per-channel spatial standardization (BN-free nets train
+    poorly at depth; instance norm is stateless, so the AOT train/infer
+    graphs need no running statistics)."""
+    mu = jnp.mean(y, axis=(2, 3), keepdims=True)
+    var = jnp.var(y, axis=(2, 3), keepdims=True)
+    return (y - mu) * jax.lax.rsqrt(var + eps)
+
+# (expansion t, channels c, repeats n, first-stride s) — V2-style stages
+# sized for 32×32 inputs.
+STAGES = ((1, 16, 1, 1), (4, 24, 2, 2), (4, 32, 2, 2), (4, 64, 2, 2))
+STEM_C = 16
+HEAD_C = 128
+NUM_CLASSES = 10
+KSIZE = 3
+IMAGE_HW = 32
+
+
+@dataclass
+class ParamSpec:
+    name: str
+    shape: tuple
+
+    @property
+    def size(self) -> int:
+        return int(np.prod(self.shape))
+
+
+@dataclass
+class BlockCfg:
+    index: int
+    cin: int
+    cout: int
+    expand: int  # expanded channel count
+    stride: int
+    residual: bool
+
+
+@dataclass
+class EdgeNet:
+    """EdgeNet definition. ``variant``: "dw" (teacher) or "fuse" (student)."""
+
+    variant: str = "dw"
+    blocks: list = field(default_factory=list)
+    specs: list = field(default_factory=list)
+
+    def __post_init__(self):
+        assert self.variant in ("dw", "fuse")
+        cin = STEM_C
+        idx = 0
+        for t, c, n, s in STAGES:
+            for rep in range(n):
+                stride = s if rep == 0 else 1
+                self.blocks.append(
+                    BlockCfg(
+                        index=idx,
+                        cin=cin,
+                        cout=c,
+                        expand=cin * t,
+                        stride=stride,
+                        residual=(stride == 1 and cin == c),
+                    )
+                )
+                cin = c
+                idx += 1
+        self.specs = self._build_specs()
+
+    # -- parameter bookkeeping ------------------------------------------------
+
+    def _op_specs(self, b: BlockCfg) -> list:
+        k = KSIZE
+        if self.variant == "dw":
+            return [ParamSpec(f"b{b.index}.dw", (b.expand, k, k))]
+        half = b.expand // 2
+        return [
+            ParamSpec(f"b{b.index}.fuse_row", (half, k)),
+            ParamSpec(f"b{b.index}.fuse_col", (half, k)),
+        ]
+
+    def _build_specs(self) -> list:
+        specs = [ParamSpec("stem.w", (STEM_C, 3, KSIZE, KSIZE))]
+        for b in self.blocks:
+            if b.expand != b.cin:
+                specs.append(ParamSpec(f"b{b.index}.expand", (b.cin, b.expand)))
+                specs.append(ParamSpec(f"b{b.index}.expand_b", (b.expand,)))
+            specs.extend(self._op_specs(b))
+            specs.append(ParamSpec(f"b{b.index}.op_scale", (b.expand,)))
+            specs.append(ParamSpec(f"b{b.index}.op_bias", (b.expand,)))
+            specs.append(ParamSpec(f"b{b.index}.project", (b.expand, b.cout)))
+            specs.append(ParamSpec(f"b{b.index}.project_b", (b.cout,)))
+        specs.append(ParamSpec("head.w", (self.blocks[-1].cout, HEAD_C)))
+        specs.append(ParamSpec("head.b", (HEAD_C,)))
+        specs.append(ParamSpec("fc.w", (HEAD_C, NUM_CLASSES)))
+        specs.append(ParamSpec("fc.b", (NUM_CLASSES,)))
+        return specs
+
+    def num_params(self) -> int:
+        return sum(s.size for s in self.specs)
+
+    def init(self, seed: int = 0) -> list:
+        """He-style init, deterministic in `seed`; returns list of f32."""
+        rng = np.random.default_rng(seed)
+        out = []
+        for s in self.specs:
+            if s.name.endswith(("_b", ".b", "op_bias")):
+                out.append(np.zeros(s.shape, np.float32))
+            elif s.name.endswith("op_scale"):
+                out.append(np.ones(s.shape, np.float32))
+            else:
+                fan_in = int(np.prod(s.shape[:-1])) if len(s.shape) > 1 else s.shape[0]
+                std = float(np.sqrt(2.0 / max(fan_in, 1)))
+                out.append(rng.normal(0.0, std, s.shape).astype(np.float32))
+        return out
+
+    # -- forward ---------------------------------------------------------------
+
+    def _take(self, params: list, cursor: list) -> jax.Array:
+        v = params[cursor[0]]
+        cursor[0] += 1
+        return v
+
+    def apply(self, params: list, x: jax.Array, feature_block: int | None = None):
+        """Forward pass. x: (B, 3, 32, 32) → logits (B, 10).
+
+        With ``feature_block = i``, returns the block-i output feature map
+        instead (the Fig 12 visualization hook).
+        """
+        assert len(params) == len(self.specs), (
+            f"got {len(params)} params, expected {len(self.specs)}"
+        )
+        cur = [0]
+        stem_w = self._take(params, cur)
+        x = jax.lax.conv_general_dilated(
+            x, stem_w, (1, 1), "SAME", dimension_numbers=("NCHW", "OIHW", "NCHW")
+        )
+        x = jax.nn.relu(instance_norm(x))
+        for b in self.blocks:
+            y = x
+            if b.expand != b.cin:
+                w = self._take(params, cur)
+                bias = self._take(params, cur)
+                y = instance_norm(kernels.pointwise_ad(y, w)) + bias[None, :, None, None]
+                y = jax.nn.relu(y)
+            if self.variant == "dw":
+                wd = self._take(params, cur)
+                op = kernels.make_depthwise(stride=b.stride)
+                y = op(y, wd)
+            else:
+                wr = self._take(params, cur)
+                wc = self._take(params, cur)
+                op = kernels.make_fuse_conv(stride=b.stride, full=False)
+                y = op(y, wr, wc)
+            scale = self._take(params, cur)
+            bias = self._take(params, cur)
+            y = instance_norm(y) * scale[None, :, None, None] + bias[None, :, None, None]
+            y = jax.nn.relu(y)
+            w = self._take(params, cur)
+            pb = self._take(params, cur)
+            y = kernels.pointwise_ad(y, w) + pb[None, :, None, None]
+            if b.residual:
+                y = y + x
+            x = y
+            if feature_block is not None and b.index == feature_block:
+                return x
+        w = self._take(params, cur)
+        hb = self._take(params, cur)
+        x = jax.nn.relu(instance_norm(kernels.pointwise_ad(x, w)) + hb[None, :, None, None])
+        x = jnp.mean(x, axis=(2, 3))  # global average pool
+        w = self._take(params, cur)
+        fb = self._take(params, cur)
+        return x @ w + fb
+
+
+def teacher() -> EdgeNet:
+    return EdgeNet(variant="dw")
+
+
+def student() -> EdgeNet:
+    return EdgeNet(variant="fuse")

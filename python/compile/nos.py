@@ -1,0 +1,147 @@
+"""Neural Operator Scaffolding (paper §4.1) in JAX.
+
+The scaffold holds, per bottleneck block, the *teacher* depthwise kernel
+``T_w ∈ R^{C×K×K}`` plus one shared K×K adapter ``A`` (the paper uses the
+same matrix for row and column filters, shared across all filters of the
+layer — K² extra parameters per block). The FuSe student weights are the
+linear projections
+
+    R_w[c] = A · T_w[c, :, mid]     (row filter, channel c)
+    C_w[c] = A · T_w[c, mid, :]     (column filter, channel c)
+
+Training samples each scaffolded block as depthwise or FuSe (the OFA-style
+schedule); the sampling mask arrives as a runtime input so the AOT graph
+is sampled by the Rust coordinator. After training, ``collapse`` folds the
+adapters in and discards the scaffold — inference runs pure FuSeConv.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model as M
+from compile.kernels import fuse_conv as kernels
+
+KSIZE = M.KSIZE
+
+
+class Scaffold:
+    """Parameter layout: the teacher EdgeNet's specs + one adapter/block."""
+
+    def __init__(self):
+        self.teacher = M.teacher()
+        self.student = M.student()
+        self.specs = list(self.teacher.specs) + [
+            M.ParamSpec(f"b{b.index}.adapter", (KSIZE, KSIZE))
+            for b in self.teacher.blocks
+        ]
+        self.num_teacher_params = len(self.teacher.specs)
+        self.num_blocks = len(self.teacher.blocks)
+
+    def num_params(self) -> int:
+        return sum(s.size for s in self.specs)
+
+    def init_from_teacher(self, teacher_params: list) -> list:
+        """Scaffold init: copy the (pre)trained teacher, identity adapters."""
+        assert len(teacher_params) == self.num_teacher_params
+        adapters = [np.eye(KSIZE, dtype=np.float32) for _ in range(self.num_blocks)]
+        return list(teacher_params) + adapters
+
+    # -- weight derivation ----------------------------------------------------
+
+    def derive_fuse(self, dw_w: jax.Array, adapter: jax.Array):
+        """(C,K,K) teacher kernel + (K,K) adapter → row (C/2,K), col (C/2,K).
+
+        Row filters come from the first C/2 channels' centre columns, column
+        filters from the other C/2 channels' centre rows (FuSe-Half split).
+        """
+        c = dw_w.shape[0]
+        mid = KSIZE // 2
+        rows = dw_w[: c // 2, :, mid]  # (C/2, K): centre column per channel
+        cols = dw_w[c // 2 :, mid, :]  # (C/2, K): centre row per channel
+        w_row = rows @ adapter.T  # R_w[c] = A · T_w[c,:,mid]
+        w_col = cols @ adapter.T
+        return w_row, w_col
+
+    # -- forward ---------------------------------------------------------------
+
+    def apply(self, params: list, x: jax.Array, mask: jax.Array,
+              feature_block: int | None = None):
+        """Scaffolded forward. ``mask``: (num_blocks,) in [0,1] — 1 selects
+        the FuSe path of that block, 0 the depthwise path (training samples
+        hard 0/1; the blend keeps the graph static)."""
+        assert len(params) == len(self.specs)
+        tp = params[: self.num_teacher_params]
+        adapters = params[self.num_teacher_params :]
+
+        net = self.teacher
+        cur = [0]
+        take = lambda: net._take(tp, cur)  # noqa: E731
+
+        stem_w = take()
+        h = jax.lax.conv_general_dilated(
+            x, stem_w, (1, 1), "SAME", dimension_numbers=("NCHW", "OIHW", "NCHW")
+        )
+        h = jax.nn.relu(M.instance_norm(h))
+        for b in net.blocks:
+            y = h
+            if b.expand != b.cin:
+                w = take()
+                bias = take()
+                y = M.instance_norm(kernels.pointwise_ad(y, w)) + bias[None, :, None, None]
+                y = jax.nn.relu(y)
+            dw_w = take()
+            # both paths, blended by the sampled mask
+            dw_op = kernels.make_depthwise(stride=b.stride)
+            out_dw = dw_op(y, dw_w)
+            w_row, w_col = self.derive_fuse(dw_w, adapters[b.index])
+            fuse_op = kernels.make_fuse_conv(stride=b.stride, full=False)
+            out_fuse = fuse_op(y, w_row, w_col)
+            m = mask[b.index]
+            y = m * out_fuse + (1.0 - m) * out_dw
+            scale = take()
+            bias = take()
+            y = M.instance_norm(y) * scale[None, :, None, None] + bias[None, :, None, None]
+            y = jax.nn.relu(y)
+            w = take()
+            pb = take()
+            y = kernels.pointwise_ad(y, w) + pb[None, :, None, None]
+            if b.residual:
+                y = y + h
+            h = y
+            if feature_block is not None and b.index == feature_block:
+                return h
+        w = take()
+        hb = take()
+        h = jax.nn.relu(M.instance_norm(kernels.pointwise_ad(h, w)) + hb[None, :, None, None])
+        h = jnp.mean(h, axis=(2, 3))
+        w = take()
+        fb = take()
+        return h @ w + fb
+
+    # -- collapse ---------------------------------------------------------------
+
+    def collapse(self, params: list) -> list:
+        """Fold adapters into standalone FuSe-student parameters (the
+        "remove the scaffold" step). Returns params in student spec order."""
+        assert len(params) == len(self.specs)
+        tp = list(params[: self.num_teacher_params])
+        adapters = params[self.num_teacher_params :]
+        out = []
+        ti = 0
+        # teacher and student specs walk in lockstep; dw kernels expand
+        # into (row, col) pairs.
+        for spec in self.teacher.specs:
+            v = tp[ti]
+            if spec.name.endswith(".dw"):
+                block = int(spec.name.split(".")[0][1:])
+                w_row, w_col = self.derive_fuse(jnp.asarray(v), jnp.asarray(adapters[block]))
+                out.append(w_row)
+                out.append(w_col)
+            else:
+                out.append(jnp.asarray(v))
+            ti += 1
+        assert len(out) == len(self.student.specs)
+        return out

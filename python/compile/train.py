@@ -1,0 +1,138 @@
+"""Training-step definitions (L2) — lowered AOT and executed by the Rust
+runtime. Paper §5.3: the teacher trains with cross-entropy; NOS training
+adds the Hinton-style soft-label distillation loss on teacher logits and
+samples each scaffolded block's operator per step.
+
+Optimizer: SGD with momentum 0.9 (the paper's NOS schedule uses SGD+0.9;
+the cosine LR schedule lives in the Rust driver, which passes `lr` in)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile import model as M
+from compile import nos as N
+
+MOMENTUM = 0.9
+KD_ALPHA = 0.7  # weight of the distillation term in the NOS loss
+KD_TEMP = 1.0  # paper uses plain soft labels (T = 1)
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean CE over the batch; labels are int32 class ids."""
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
+
+
+def kd_loss(student_logits: jax.Array, teacher_logits: jax.Array) -> jax.Array:
+    """KL(teacher ‖ student) on softened logits (Hinton et al. [19])."""
+    t = jax.nn.softmax(teacher_logits / KD_TEMP)
+    logs = jax.nn.log_softmax(student_logits / KD_TEMP)
+    logt = jax.nn.log_softmax(teacher_logits / KD_TEMP)
+    return jnp.mean(jnp.sum(t * (logt - logs), axis=1)) * (KD_TEMP ** 2)
+
+
+def accuracy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    return jnp.mean((jnp.argmax(logits, axis=1) == labels).astype(jnp.float32))
+
+
+def _sgd(params: list, vel: list, grads: list, lr: jax.Array):
+    new_vel = [MOMENTUM * v + g for v, g in zip(vel, grads)]
+    new_params = [p - lr * v for p, v in zip(params, new_vel)]
+    return new_params, new_vel
+
+
+def make_plain_step(net: M.EdgeNet):
+    """CE training step for a plain (teacher or in-place student) net.
+
+    Signature (all f32 unless noted):
+        (params..., vel..., x, y:int32, lr) ->
+        (params'..., vel'..., loss, acc)
+    """
+    n = len(net.specs)
+
+    def step(*args):
+        params = list(args[:n])
+        vel = list(args[n : 2 * n])
+        x, y, lr = args[2 * n], args[2 * n + 1], args[2 * n + 2]
+
+        def loss_fn(ps):
+            logits = net.apply(ps, x)
+            return cross_entropy(logits, y), logits
+
+        (loss, logits), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        acc = accuracy(logits, y)
+        new_params, new_vel = _sgd(params, vel, grads, lr)
+        return tuple(new_params) + tuple(new_vel) + (loss, acc)
+
+    return step, n
+
+
+def make_nos_step(scaffold: N.Scaffold):
+    """NOS training step (paper §4.1).
+
+    Signature:
+        (scaffold_params..., vel..., teacher_params...,
+         x, y:int32, mask:(B_blocks,), lr) ->
+        (scaffold_params'..., vel'..., loss, acc)
+
+    The teacher parameters are frozen inputs (the pretrained depthwise
+    net); mask samples each block's operator for this step.
+    """
+    n = scaffold.num_params_count = len(scaffold.specs)
+    nt = scaffold.num_teacher_params
+
+    def step(*args):
+        params = list(args[:n])
+        vel = list(args[n : 2 * n])
+        teacher_params = list(args[2 * n : 2 * n + nt])
+        x = args[2 * n + nt]
+        y = args[2 * n + nt + 1]
+        mask = args[2 * n + nt + 2]
+        lr = args[2 * n + nt + 3]
+
+        teacher_logits = scaffold.teacher.apply(teacher_params, x)
+
+        def loss_fn(ps):
+            logits = scaffold.apply(ps, x, mask)
+            ce = cross_entropy(logits, y)
+            kd = kd_loss(logits, teacher_logits)
+            return (1.0 - KD_ALPHA) * ce + KD_ALPHA * kd, logits
+
+        (loss, logits), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        acc = accuracy(logits, y)
+        new_params, new_vel = _sgd(params, vel, grads, lr)
+        return tuple(new_params) + tuple(new_vel) + (loss, acc)
+
+    return step, n, nt
+
+
+def make_infer(net: M.EdgeNet):
+    """(params..., x) -> logits."""
+    n = len(net.specs)
+
+    def infer(*args):
+        return (net.apply(list(args[:n]), args[n]),)
+
+    return infer, n
+
+
+def make_feature(net: M.EdgeNet, block: int):
+    """(params..., x) -> block feature map (the Fig 12 hook)."""
+    n = len(net.specs)
+
+    def feat(*args):
+        return (net.apply(list(args[:n]), args[n], feature_block=block),)
+
+    return feat, n
+
+
+def make_collapse(scaffold: N.Scaffold):
+    """(scaffold_params...) -> (student_params...)."""
+    n = len(scaffold.specs)
+
+    def collapse(*args):
+        return tuple(scaffold.collapse(list(args[:n])))
+
+    return collapse, n

@@ -1,0 +1,104 @@
+"""L2 model tests: shapes, parameter bookkeeping, and trainability."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model as M
+from compile import train as T
+
+
+def batch(b=4, seed=0):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(b, 3, M.IMAGE_HW, M.IMAGE_HW)).astype(np.float32))
+    y = jnp.asarray(rng.integers(0, M.NUM_CLASSES, size=(b,)).astype(np.int32))
+    return x, y
+
+
+def test_teacher_and_student_share_macro_architecture():
+    t, s = M.teacher(), M.student()
+    assert len(t.blocks) == len(s.blocks) == 7
+    for bt, bs in zip(t.blocks, s.blocks):
+        assert (bt.cin, bt.cout, bt.stride) == (bs.cin, bs.cout, bs.stride)
+
+
+def test_student_has_fewer_params_than_teacher():
+    # FuSe-Half replaces K²C dw params with KC
+    t, s = M.teacher(), M.student()
+    assert s.num_params() < t.num_params()
+    dw_params = sum(
+        np.prod(sp.shape) for sp in t.specs if sp.name.endswith(".dw")
+    )
+    fuse_params = sum(
+        np.prod(sp.shape) for sp in s.specs if "fuse" in sp.name
+    )
+    assert fuse_params * M.KSIZE == dw_params
+
+
+def test_forward_shapes():
+    x, _ = batch(b=2)
+    for net in (M.teacher(), M.student()):
+        params = [jnp.asarray(p) for p in net.init(0)]
+        logits = net.apply(params, x)
+        assert logits.shape == (2, M.NUM_CLASSES)
+        assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_feature_block_hook():
+    x, _ = batch(b=1)
+    net = M.teacher()
+    params = [jnp.asarray(p) for p in net.init(0)]
+    f = net.apply(params, x, feature_block=3)
+    # block 3 is the first stride-2 block of stage 3: 8x8 spatial, 32 ch
+    assert f.shape[0] == 1
+    assert f.ndim == 4
+
+
+def test_init_deterministic():
+    net = M.teacher()
+    a = net.init(7)
+    b = net.init(7)
+    for pa, pb in zip(a, b):
+        np.testing.assert_array_equal(pa, pb)
+    c = net.init(8)
+    assert any(not np.array_equal(pa, pc) for pa, pc in zip(a, c))
+
+
+def test_plain_train_step_reduces_loss():
+    net = M.student()
+    step, n = T.make_plain_step(net)
+    step = jax.jit(step)
+    params = [jnp.asarray(p) for p in net.init(0)]
+    vel = [jnp.zeros_like(p) for p in params]
+    x, y = batch(b=8, seed=1)
+    lr = jnp.float32(0.05)
+    losses = []
+    for _ in range(8):
+        out = step(*params, *vel, x, y, lr)
+        params = list(out[:n])
+        vel = list(out[n : 2 * n])
+        losses.append(float(out[2 * n]))
+    # same batch: loss must fall substantially
+    assert losses[-1] < losses[0] * 0.9, losses
+
+
+def test_accuracy_metric():
+    logits = jnp.asarray([[2.0, 1.0], [0.0, 3.0]])
+    labels = jnp.asarray([0, 1], dtype=jnp.int32)
+    assert float(T.accuracy(logits, labels)) == 1.0
+    labels = jnp.asarray([1, 1], dtype=jnp.int32)
+    assert float(T.accuracy(logits, labels)) == 0.5
+
+
+def test_cross_entropy_sane():
+    logits = jnp.zeros((4, 10))
+    labels = jnp.asarray([0, 1, 2, 3], dtype=jnp.int32)
+    ce = float(T.cross_entropy(logits, labels))
+    np.testing.assert_allclose(ce, np.log(10.0), rtol=1e-6)
+
+
+def test_kd_loss_zero_when_identical():
+    logits = jnp.asarray(np.random.default_rng(0).normal(size=(4, 10)), jnp.float32)
+    assert abs(float(T.kd_loss(logits, logits))) < 1e-6
+    other = logits + 1.0  # uniform shift leaves softmax unchanged
+    assert abs(float(T.kd_loss(other, logits))) < 1e-5

@@ -1,0 +1,81 @@
+#![allow(dead_code)]
+//! Minimal benchmarking harness shared by the `cargo bench` targets
+//! (criterion is unavailable offline). Provides wall-clock timing with
+//! warmup + repetitions, table-style reporting identical in spirit to the
+//! paper's tables/figures, and CSV dumps next to the bench output.
+
+use std::time::Instant;
+
+/// Time `f` with `warmup` + `iters` runs; returns per-iteration seconds.
+pub fn time_it<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Timing {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    Timing::from(samples)
+}
+
+#[derive(Debug, Clone)]
+pub struct Timing {
+    pub samples: Vec<f64>,
+}
+
+impl Timing {
+    pub fn from(mut samples: Vec<f64>) -> Timing {
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Timing { samples }
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.samples[self.samples.len() / 2]
+    }
+
+    pub fn min(&self) -> f64 {
+        self.samples[0]
+    }
+
+    pub fn report(&self, label: &str) {
+        println!(
+            "  [bench] {label:40} mean {:>10.3} ms   p50 {:>10.3} ms   min {:>10.3} ms   (n={})",
+            self.mean() * 1e3,
+            self.p50() * 1e3,
+            self.min() * 1e3,
+            self.samples.len()
+        );
+    }
+}
+
+/// Write a CSV next to the bench output for plotting.
+pub fn write_csv(name: &str, content: &str) {
+    let dir = std::path::Path::new("bench_results");
+    let _ = std::fs::create_dir_all(dir);
+    let path = dir.join(name);
+    if std::fs::write(&path, content).is_ok() {
+        println!("  [csv] wrote {}", path.display());
+    }
+}
+
+/// Section banner.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+/// Should this section run, given argv selectors? With no selectors,
+/// everything runs.
+pub fn selected(selectors: &[String], key: &str) -> bool {
+    selectors.is_empty() || selectors.iter().any(|s| s.trim_start_matches("--") == key)
+}
+
+/// Collect CLI selectors (skipping cargo-bench's --bench flag).
+pub fn selectors() -> Vec<String> {
+    std::env::args().skip(1).filter(|a| a != "--bench").collect()
+}

@@ -1,0 +1,219 @@
+//! Regenerates the paper's TABLES (experiment index E2, E3, E4, E16).
+//!
+//!   --table2         ST-OS VLSI overheads (paper Table 2)
+//!   --table2-detail  component breakdown (paper §5.2)
+//!   --table3         ImageNet acc / MACs / params for 5 nets × 5 variants
+//!   --table4         NAS networks: acc / MACs / params / 16×16 latency
+//!
+//! Run all: `cargo bench --bench paper_tables`
+
+#[path = "benchkit.rs"]
+mod benchkit;
+
+use benchkit::{section, selected, selectors, write_csv};
+use fuseconv::coordinator::mapping::greedy_half;
+use fuseconv::coordinator::search::{AccuracyPredictor, TrainMethod};
+use fuseconv::coordinator::{Evaluator, HybridSpace};
+use fuseconv::nn::models;
+use fuseconv::nn::{fuse_all, fuse_network, Network, Selection, Variant};
+use fuseconv::sim::{simulate_network, SimConfig};
+use fuseconv::vlsi;
+
+fn main() {
+    let sel = selectors();
+    if selected(&sel, "table2") {
+        table2();
+    }
+    if selected(&sel, "table2-detail") {
+        table2_detail();
+    }
+    if selected(&sel, "table3") {
+        table3();
+    }
+    if selected(&sel, "table4") {
+        table4();
+    }
+}
+
+fn table2() {
+    section("Table 2 — ST-OS area/power overheads vs array size");
+    println!(
+        "{:>10} {:>12} {:>12} {:>12} {:>12}",
+        "array", "area %", "paper", "power %", "paper"
+    );
+    let mut csv = String::from("size,area_pct,paper_area,power_pct,paper_power\n");
+    for (s, pa, pp) in vlsi::PAPER_TABLE2 {
+        let o = vlsi::st_os_overhead(s, s);
+        println!(
+            "{:>7}x{:<3} {:>12.1} {:>12.1} {:>12.1} {:>12.1}",
+            s,
+            s,
+            o.area_pct(),
+            pa,
+            o.power_pct(),
+            pp
+        );
+        csv.push_str(&format!("{s},{:.2},{pa},{:.2},{pp}\n", o.area_pct(), o.power_pct()));
+    }
+    write_csv("table2.csv", &csv);
+}
+
+fn table2_detail() {
+    section("Table 2 detail — overhead composition (gate-equivalents)");
+    for s in vlsi::table2_sizes() {
+        let o = vlsi::st_os_overhead(s, s);
+        println!(
+            "{:>3}x{:<3} base_area {:>12.0}  extra_area {:>9.0}  base_pwr {:>8.0}  extra_pwr {:>7.2}",
+            s, s, o.base_area, o.extra_area, o.base_power, o.extra_power
+        );
+    }
+}
+
+/// Row of Table 3: name, accuracy (predictor, anchored to the paper's
+/// measurements), MACs, params.
+fn t3_row(csv: &mut String, name: &str, acc: f64, net: &Network) {
+    println!(
+        "{:36} {:>8.2} {:>10.1} {:>11.2}",
+        name,
+        acc,
+        net.macs_millions(),
+        net.params_millions()
+    );
+    csv.push_str(&format!(
+        "{name},{acc:.2},{:.1},{:.2}\n",
+        net.macs_millions(),
+        net.params_millions()
+    ));
+}
+
+fn table3() {
+    section("Table 3 — ImageNet accuracy / MACs / params (in-place variants)");
+    println!("{:36} {:>8} {:>10} {:>11}", "network", "acc %", "MACs (M)", "params (M)");
+    let ev = Evaluator::new(SimConfig::default());
+    let mut csv = String::from("network,acc,macs_m,params_m\n");
+    for base in models::paper_five() {
+        let space = HybridSpace::new(&base, &ev);
+        let pred = AccuracyPredictor::for_space(&space);
+
+        t3_row(&mut csv, &base.name, pred.anchor.base_acc, &base);
+
+        // Full / Half variants: anchored drops from the paper.
+        let full = fuse_all(&base, Variant::Full);
+        t3_row(&mut csv, &full.name, pred.anchor.base_acc - pred.anchor.drop_full, &full);
+        let half = fuse_all(&base, Variant::Half);
+        t3_row(&mut csv, &half.name, pred.predict_all(TrainMethod::InPlace), &half);
+
+        // 50% variants: greedy-by-latency block choice (paper §6.2).
+        let mask = greedy_half(&space);
+        let blocks: Vec<usize> = space
+            .blocks
+            .iter()
+            .zip(&mask)
+            .filter(|(_, &m)| m)
+            .map(|(&b, _)| b)
+            .collect();
+        let full50 = fuse_network(&base, Variant::Full, &Selection::Blocks(blocks.clone()));
+        let frac: f64 = mask
+            .iter()
+            .zip(&pred.block_weight)
+            .filter(|(&m, _)| m)
+            .map(|(_, &w)| w)
+            .sum();
+        t3_row(
+            &mut csv,
+            &format!("{}-50%", full.name),
+            pred.anchor.base_acc - pred.anchor.drop_full * frac,
+            &full50,
+        );
+        let half50 = fuse_network(&base, Variant::Half, &Selection::Blocks(blocks));
+        t3_row(
+            &mut csv,
+            &format!("{}-50%", half.name),
+            pred.predict_mask(&mask, TrainMethod::InPlace),
+            &half50,
+        );
+        println!();
+    }
+    write_csv("table3.csv", &csv);
+}
+
+fn table4() {
+    section("Table 4 — NAS networks on a 16x16 systolic array");
+    let cfg = SimConfig::default();
+    println!(
+        "{:36} {:>8} {:>10} {:>11} {:>10}",
+        "network", "acc %", "MACs (M)", "params (M)", "lat (ms)"
+    );
+    let mut csv = String::from("network,acc,macs_m,params_m,latency_ms\n");
+    // (zoo name, paper-reported accuracy)
+    let rows: &[(&str, f64)] = &[
+        ("mnasnet-b1", 73.5),
+        ("proxylessnas", 74.6),
+        ("single-path-nas", 74.7),
+        ("fbnet-c", 74.9),
+        ("efficientnet-lite0", 75.1),
+        ("efficientnet-edgetpu-s", 77.2),
+        ("mobilenet-v3-large", 75.3),
+        ("ofa", 77.1),
+        ("fuse-ofa-1", 76.7),
+        ("fuse-ofa-2", 77.2),
+    ];
+    for &(name, acc) in rows {
+        let net = models::by_name(name).unwrap();
+        let sim = simulate_network(&net, &cfg);
+        println!(
+            "{:36} {:>8.2} {:>10.1} {:>11.2} {:>10.3}",
+            net.name,
+            acc,
+            net.macs_millions(),
+            net.params_millions(),
+            sim.latency_ms
+        );
+        csv.push_str(&format!(
+            "{},{acc},{:.1},{:.2},{:.3}\n",
+            net.name,
+            net.macs_millions(),
+            net.params_millions(),
+            sim.latency_ms
+        ));
+    }
+    // ours: FuSe-Half conversions of the two strongest baselines (NOS acc)
+    let ev = Evaluator::new(SimConfig::default());
+    for base_name in ["mnasnet-b1", "mobilenet-v3-large"] {
+        let base = models::by_name(base_name).unwrap();
+        let space = HybridSpace::new(&base, &ev);
+        let pred = AccuracyPredictor::for_space(&space);
+        let half = fuse_all(&base, Variant::Half);
+        let sim = simulate_network(&half, &cfg);
+        let acc = pred.predict_all(TrainMethod::Nos);
+        println!(
+            "{:36} {:>8.2} {:>10.1} {:>11.2} {:>10.3}  (ours, NOS)",
+            half.name,
+            acc,
+            half.macs_millions(),
+            half.params_millions(),
+            sim.latency_ms
+        );
+        csv.push_str(&format!(
+            "{},{acc:.2},{:.1},{:.2},{:.3}\n",
+            half.name,
+            half.macs_millions(),
+            half.params_millions(),
+            sim.latency_ms
+        ));
+    }
+    write_csv("table4.csv", &csv);
+
+    // Shape checks the paper's narrative depends on:
+    let fuse2 = simulate_network(&models::by_name("fuse-ofa-2").unwrap(), &cfg);
+    let edgetpu = simulate_network(&models::by_name("efficientnet-edgetpu-s").unwrap(), &cfg);
+    let ofa = simulate_network(&models::by_name("ofa").unwrap(), &cfg);
+    println!(
+        "\nshape checks: FuSe-OFA-2 faster than EfficientNet-EdgeTPU-S: {} ({:.2}x); \
+         faster than OFA: {} ({:.2}x)",
+        fuse2.total_cycles < edgetpu.total_cycles,
+        edgetpu.total_cycles as f64 / fuse2.total_cycles as f64,
+        fuse2.total_cycles < ofa.total_cycles,
+        ofa.total_cycles as f64 / fuse2.total_cycles as f64,
+    );
+}

@@ -1,0 +1,239 @@
+//! Regenerates the paper's search + training experiments (index E11–E15).
+//!
+//!   --fig13  EA pareto frontiers for hybrid MobileNetV3-L / MnasNet-B1
+//!   --fig14  EA-found vs manual hybrid layer maps (text visualization)
+//!   --fig15  OFA NAS pareto with vs without the FuSe operator
+//!   --fig12  teacher/student feature-map similarity (needs artifacts)
+//!   --nos    NOS vs in-place accuracy at small scale (needs artifacts)
+//!
+//! `--fig12`/`--nos` run the AOT graphs; they skip (with a notice) when
+//! `make artifacts` has not been run. Run all: `cargo bench --bench
+//! search_benches`
+
+#[path = "benchkit.rs"]
+mod benchkit;
+
+use benchkit::{section, selected, selectors, write_csv};
+use fuseconv::coordinator::mapping::greedy_half;
+use fuseconv::coordinator::search::{
+    run_ea, run_nas, AccuracyPredictor, EaConfig, NasConfig, TrainMethod,
+};
+use fuseconv::coordinator::{Evaluator, HybridSpace};
+use fuseconv::nn::models;
+use fuseconv::sim::SimConfig;
+use std::sync::Arc;
+
+fn main() {
+    let sel = selectors();
+    if selected(&sel, "fig13") {
+        fig13();
+    }
+    if selected(&sel, "fig14") {
+        fig14();
+    }
+    if selected(&sel, "fig15") {
+        fig15();
+    }
+    if selected(&sel, "fig12") {
+        fig12();
+    }
+    if selected(&sel, "nos") {
+        nos();
+    }
+}
+
+fn fig13() {
+    section("Fig 13 — EA pareto frontier for hybrid networks (NOS-trained)");
+    let ev = Evaluator::new(SimConfig::default());
+    let mut csv = String::from("network,acc,latency_ms,macs_m\n");
+    for name in ["mobilenet-v3-large", "mnasnet-b1"] {
+        let base = models::by_name(name).unwrap();
+        let space = HybridSpace::new(&base, &ev);
+        let pred = AccuracyPredictor::for_space(&space);
+        let cfg = EaConfig { population: 100, iterations: 100, seed: 42, ..EaConfig::default() };
+        let t0 = std::time::Instant::now();
+        let r = run_ea(&space, &pred, TrainMethod::Nos, &cfg);
+        println!(
+            "\n{name}: {} candidates in {:.2}s; frontier ({} points):",
+            r.evaluated,
+            t0.elapsed().as_secs_f64(),
+            r.frontier.len()
+        );
+        for c in &r.frontier {
+            println!("  acc {:>6.2}%  lat {:>7.3} ms  MACs {:>6.1} M", c.acc, c.latency_ms, c.macs as f64 / 1e6);
+            csv.push_str(&format!("{name},{:.3},{:.4},{:.1}\n", c.acc, c.latency_ms, c.macs as f64 / 1e6));
+        }
+        // Endpoints for reference (the paper's Fig 13 anchors)
+        let n = space.num_blocks();
+        let base_acc = pred.predict_mask(&vec![false; n], TrainMethod::Nos);
+        let base_lat = space.latency_ms(&vec![false; n]);
+        let full_acc = pred.predict_mask(&vec![true; n], TrainMethod::Nos);
+        let full_lat = space.latency_ms(&vec![true; n]);
+        println!(
+            "  [anchors] baseline {base_acc:.2}% @ {base_lat:.3} ms   all-FuSe(NOS) {full_acc:.2}% @ {full_lat:.3} ms"
+        );
+        // paper claim: best hybrid within ~0.4% of baseline at much lower latency
+        let best = &r.best_acc;
+        println!(
+            "  [claim] best hybrid {:.2}% @ {:.3} ms -> gap to baseline {:.2}% at {:.2}x lower latency",
+            best.acc,
+            best.latency_ms,
+            base_acc - best.acc,
+            base_lat / best.latency_ms
+        );
+    }
+    write_csv("fig13.csv", &csv);
+}
+
+fn fig14() {
+    section("Fig 14 — hybrid layer maps: manual vs EA-found (MobileNetV3-Large)");
+    let ev = Evaluator::new(SimConfig::default());
+    let base = models::by_name("mobilenet-v3-large").unwrap();
+    let space = HybridSpace::new(&base, &ev);
+    let pred = AccuracyPredictor::for_space(&space);
+
+    let manual = greedy_half(&space);
+    let cfg = EaConfig { population: 100, iterations: 60, seed: 7, ..EaConfig::default() };
+    let r = run_ea(&space, &pred, TrainMethod::Nos, &cfg);
+    // pick the frontier point that dominates/ties manual accuracy
+    let manual_acc = pred.predict_mask(&manual, TrainMethod::Nos);
+    let ea_pick = r
+        .frontier
+        .iter()
+        .filter(|c| c.acc >= manual_acc - 0.05)
+        .min_by(|a, b| a.latency_ms.partial_cmp(&b.latency_ms).unwrap())
+        .unwrap_or(&r.best_acc);
+
+    let render = |mask: &[bool]| -> String {
+        mask.iter().map(|&m| if m { 'F' } else { 'd' }).collect()
+    };
+    println!("  block:              {}", (0..space.num_blocks()).map(|i| char::from_digit((i % 10) as u32, 10).unwrap()).collect::<String>());
+    println!(
+        "  manual (greedy 50%): {}  acc {:.2}%  lat {:.3} ms",
+        render(&manual),
+        manual_acc,
+        space.latency_ms(&manual)
+    );
+    println!(
+        "  EA-found:            {}  acc {:.2}%  lat {:.3} ms",
+        render(&ea_pick.mask),
+        ea_pick.acc,
+        ea_pick.latency_ms
+    );
+    let ea_fuse = ea_pick.mask.iter().filter(|&&m| m).count();
+    let manual_fuse = manual.iter().filter(|&&m| m).count();
+    println!(
+        "\n(paper: the EA hybrid uses MORE FuSe blocks ({ea_fuse} vs {manual_fuse}) \
+         while keeping accuracy — it picks the cheap-to-convert blocks)"
+    );
+}
+
+fn fig15() {
+    section("Fig 15 — OFA NAS pareto: baseline space vs +FuSe operator");
+    let mut csv = String::from("space,acc,latency_ms,macs_m\n");
+    for (label, allow_fuse) in [("ofa-baseline", false), ("ofa+fuse", true)] {
+        let ev = Arc::new(Evaluator::new(SimConfig::default()));
+        let cfg = NasConfig {
+            population: 32,
+            iterations: 20,
+            allow_fuse,
+            seed: 42,
+            threads: 0,
+            ..NasConfig::default()
+        };
+        let t0 = std::time::Instant::now();
+        let r = run_nas(ev, &cfg);
+        println!(
+            "\n{label}: {} genomes in {:.1}s; frontier ({}):",
+            r.evaluated,
+            t0.elapsed().as_secs_f64(),
+            r.frontier.len()
+        );
+        for c in &r.frontier {
+            println!(
+                "  acc {:>6.2}%  lat {:>7.3} ms  MACs {:>6.1} M  params {:>5.2} M",
+                c.acc, c.latency_ms, c.macs_millions, c.params_millions
+            );
+            csv.push_str(&format!(
+                "{label},{:.3},{:.4},{:.1}\n",
+                c.acc, c.latency_ms, c.macs_millions
+            ));
+        }
+    }
+    write_csv("fig15.csv", &csv);
+    println!("\n(paper: the +FuSe frontier dominates — more accurate AND faster)");
+}
+
+fn artifacts() -> Option<std::path::PathBuf> {
+    let dir = fuseconv::runtime::default_artifacts_dir();
+    if dir.join("manifest.txt").exists() {
+        Some(dir)
+    } else {
+        println!("  [skip] artifacts not built — run `make artifacts` first");
+        None
+    }
+}
+
+fn fig12() {
+    section("Fig 12 — teacher/student feature similarity (NOS vs in-place)");
+    let Some(dir) = artifacts() else { return };
+    // A short pipeline run is enough to show the separation.
+    match fuseconv::runtime::pipeline::run_nos_pipeline(
+        dir.to_str().unwrap(),
+        40,
+        0.06,
+        23,
+        128,
+        false,
+    ) {
+        Ok(r) => {
+            println!(
+                "  feature cosine similarity to teacher: in-place {:.3} vs NOS {:.3}",
+                r.feature_sim_inplace, r.feature_sim_nos
+            );
+            println!("  (paper: NOS feature maps match the teacher, in-place ones do not)");
+            write_csv(
+                "fig12.csv",
+                &format!(
+                    "variant,similarity\nin-place,{:.4}\nnos,{:.4}\n",
+                    r.feature_sim_inplace, r.feature_sim_nos
+                ),
+            );
+        }
+        Err(e) => println!("  [error] {e:#}"),
+    }
+}
+
+fn nos() {
+    section("§6.2/§6.3 — in-place drop and NOS recovery at small scale");
+    let Some(dir) = artifacts() else { return };
+    // 150 steps/phase: the NOS fine-tuning needs the full budget to beat
+    // in-place training (see EXPERIMENTS.md E12); shorter runs under-train
+    // the scaffold and invert the ordering.
+    match fuseconv::runtime::pipeline::run_nos_pipeline(
+        dir.to_str().unwrap(),
+        150,
+        0.06,
+        17,
+        256,
+        false,
+    ) {
+        Ok(r) => {
+            println!(
+                "  teacher {:.3}  in-place {:.3}  NOS {:.3}  -> recovery {:.0}%",
+                r.teacher_acc,
+                r.inplace_acc,
+                r.nos_acc,
+                100.0 * r.nos_recovery()
+            );
+            write_csv(
+                "nos_small_scale.csv",
+                &format!(
+                    "variant,acc\nteacher,{:.4}\ninplace,{:.4}\nnos,{:.4}\n",
+                    r.teacher_acc, r.inplace_acc, r.nos_acc
+                ),
+            );
+        }
+        Err(e) => println!("  [error] {e:#}"),
+    }
+}

@@ -1,0 +1,148 @@
+//! L3 performance microbenchmarks (§Perf instrument in EXPERIMENTS.md):
+//! simulator layer/network throughput, hybrid-space evaluation rate, EA
+//! and NAS end-to-end timing, batcher overhead.
+//!
+//! Run: `cargo bench --bench sim_micro`
+
+#[path = "benchkit.rs"]
+mod benchkit;
+
+use benchkit::{section, selected, selectors, time_it};
+use fuseconv::coordinator::search::{run_ea, AccuracyPredictor, EaConfig, TrainMethod};
+use fuseconv::coordinator::{Evaluator, HybridSpace};
+use fuseconv::nn::models;
+use fuseconv::nn::{fuse_all, Variant};
+use fuseconv::rng::Rng;
+use fuseconv::sim::{simulate_layer, simulate_network, SimConfig};
+
+fn main() {
+    let sel = selectors();
+    if selected(&sel, "layers") {
+        layer_throughput();
+    }
+    if selected(&sel, "networks") {
+        network_throughput();
+    }
+    if selected(&sel, "hybrid") {
+        hybrid_eval_rate();
+    }
+    if selected(&sel, "ea") {
+        ea_end_to_end();
+    }
+    if selected(&sel, "batcher") {
+        batcher_overhead();
+    }
+}
+
+fn layer_throughput() {
+    section("simulator: single-layer simulation cost");
+    let cfg = SimConfig::default();
+    let net = models::by_name("mobilenet-v3-large").unwrap();
+    // representative layers: big dw, big pw, fuse pair
+    let dw = net
+        .layers
+        .iter()
+        .find(|l| matches!(l.class(), fuseconv::nn::OpClass::Depthwise))
+        .unwrap();
+    let pw = net
+        .layers
+        .iter()
+        .find(|l| matches!(l.class(), fuseconv::nn::OpClass::Pointwise))
+        .unwrap();
+    let fused = fuse_all(&net, Variant::Half);
+    let fu = fused
+        .layers
+        .iter()
+        .find(|l| matches!(l.class(), fuseconv::nn::OpClass::FuSe))
+        .unwrap();
+    for (label, layer) in [("depthwise", dw), ("pointwise", pw), ("fuse-row", fu)] {
+        let t = time_it(3, 30, || {
+            std::hint::black_box(simulate_layer(layer, &cfg));
+        });
+        t.report(&format!("simulate_layer({label})"));
+    }
+}
+
+fn network_throughput() {
+    section("simulator: whole-network simulation cost");
+    let cfg = SimConfig::default();
+    for name in ["mobilenet-v2", "mobilenet-v3-large", "efficientnet-edgetpu-s"] {
+        let net = models::by_name(name).unwrap();
+        let t = time_it(2, 15, || {
+            std::hint::black_box(simulate_network(&net, &cfg));
+        });
+        t.report(&format!("simulate_network({name})"));
+    }
+    // larger array sizes scale the fold counts
+    let net = models::by_name("mobilenet-v2").unwrap();
+    for size in [8usize, 64] {
+        let cfg = SimConfig::with_size(size);
+        let t = time_it(2, 10, || {
+            std::hint::black_box(simulate_network(&net, &cfg));
+        });
+        t.report(&format!("simulate_network(mbv2, {size}x{size})"));
+    }
+}
+
+fn hybrid_eval_rate() {
+    section("coordinator: hybrid-space genome evaluation rate");
+    let ev = Evaluator::new(SimConfig::default());
+    let base = models::by_name("mobilenet-v3-large").unwrap();
+
+    let t = time_it(1, 5, || {
+        std::hint::black_box(HybridSpace::new(&base, &ev));
+    });
+    t.report("HybridSpace::new (pre-factorization, cached evaluator)");
+
+    let space = HybridSpace::new(&base, &ev);
+    let n = space.num_blocks();
+    let mut rng = Rng::new(1);
+    let masks: Vec<Vec<bool>> =
+        (0..10_000).map(|_| (0..n).map(|_| rng.chance(0.5)).collect()).collect();
+    let t = time_it(2, 10, || {
+        let mut acc = 0u64;
+        for m in &masks {
+            acc = acc.wrapping_add(space.cycles(m));
+        }
+        std::hint::black_box(acc);
+    });
+    println!(
+        "  [rate] {:.1} M genome evals/s",
+        10_000.0 / t.p50() / 1e6
+    );
+    t.report("10k mask evaluations");
+}
+
+fn ea_end_to_end() {
+    section("coordinator: EA / search end-to-end");
+    let ev = Evaluator::new(SimConfig::default());
+    let base = models::by_name("mobilenet-v3-large").unwrap();
+    let space = HybridSpace::new(&base, &ev);
+    let pred = AccuracyPredictor::for_space(&space);
+    let cfg = EaConfig { population: 100, iterations: 100, seed: 1, ..EaConfig::default() };
+    let t = time_it(1, 5, || {
+        std::hint::black_box(run_ea(&space, &pred, TrainMethod::Nos, &cfg));
+    });
+    t.report("run_ea(pop=100, iters=100)");
+}
+
+fn batcher_overhead() {
+    section("coordinator: serving path overhead (mock engine)");
+    use fuseconv::coordinator::batcher::{BatchPolicy, Batcher};
+    use std::time::Instant;
+    let mut b: Batcher<u64> = Batcher::new(BatchPolicy::default());
+    let t = time_it(2, 20, || {
+        for i in 0..10_000u64 {
+            b.push(i);
+            if b.len() >= 8 {
+                std::hint::black_box(b.take_batch());
+            }
+        }
+        while !b.is_empty() {
+            std::hint::black_box(b.take_batch());
+        }
+        std::hint::black_box(b.ready(Instant::now()));
+    });
+    println!("  [rate] {:.1} M requests/s through the batcher", 10_000.0 / t.p50() / 1e6);
+    t.report("10k push+batch cycles");
+}

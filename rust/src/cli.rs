@@ -1,0 +1,219 @@
+//! Minimal command-line parser (clap is unavailable offline).
+//!
+//! Supports the subset the `fuseconv` binary, examples, and bench targets
+//! need: subcommands, `--flag`, `--key value` / `--key=value`, and trailing
+//! positionals, with typed getters and a generated usage string.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+#[derive(Debug, Clone)]
+pub struct ArgSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub takes_value: bool,
+    pub default: Option<&'static str>,
+}
+
+/// Declarative CLI definition for one (sub)command.
+#[derive(Debug, Clone, Default)]
+pub struct Cli {
+    pub name: &'static str,
+    pub about: &'static str,
+    specs: Vec<ArgSpec>,
+}
+
+/// Parse result: option map + positionals.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+#[derive(Debug)]
+pub enum CliError {
+    Unknown(String),
+    MissingValue(String),
+    BadValue { key: String, value: String, want: &'static str },
+}
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CliError::Unknown(k) => write!(f, "unknown option --{k}"),
+            CliError::MissingValue(k) => write!(f, "option --{k} requires a value"),
+            CliError::BadValue { key, value, want } => {
+                write!(f, "option --{key}: cannot parse {value:?} as {want}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CliError {}
+
+impl Cli {
+    pub fn new(name: &'static str, about: &'static str) -> Cli {
+        Cli { name, about, specs: Vec::new() }
+    }
+
+    /// `--name <value>` option with an optional default.
+    pub fn opt(mut self, name: &'static str, help: &'static str, default: Option<&'static str>) -> Cli {
+        self.specs.push(ArgSpec { name, help, takes_value: true, default });
+        self
+    }
+
+    /// Boolean `--name` flag.
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Cli {
+        self.specs.push(ArgSpec { name, help, takes_value: false, default: None });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "{} — {}", self.name, self.about);
+        let _ = writeln!(s, "\noptions:");
+        for spec in &self.specs {
+            let lhs = if spec.takes_value {
+                format!("--{} <v>", spec.name)
+            } else {
+                format!("--{}", spec.name)
+            };
+            let dflt = spec.default.map(|d| format!(" [default: {d}]")).unwrap_or_default();
+            let _ = writeln!(s, "  {lhs:<24} {}{dflt}", spec.help);
+        }
+        s
+    }
+
+    /// Parse raw argv tokens (without the program name).
+    pub fn parse(&self, argv: &[String]) -> Result<Args, CliError> {
+        let mut out = Args::default();
+        for spec in &self.specs {
+            if let Some(d) = spec.default {
+                out.values.insert(spec.name.to_string(), d.to_string());
+            }
+        }
+        let mut it = argv.iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(body) = tok.strip_prefix("--") {
+                let (key, inline) = match body.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let spec = self
+                    .specs
+                    .iter()
+                    .find(|s| s.name == key)
+                    .ok_or_else(|| CliError::Unknown(key.clone()))?;
+                if spec.takes_value {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .cloned()
+                            .ok_or_else(|| CliError::MissingValue(key.clone()))?,
+                    };
+                    out.values.insert(key, v);
+                } else {
+                    out.flags.push(key);
+                }
+            } else {
+                out.positional.push(tok.clone());
+            }
+        }
+        Ok(out)
+    }
+}
+
+impl Args {
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str(&self, name: &str) -> String {
+        self.get(name)
+            .unwrap_or_else(|| panic!("missing option --{name} (no default)"))
+            .to_string()
+    }
+
+    pub fn usize(&self, name: &str) -> Result<usize, CliError> {
+        let v = self.str(name);
+        v.parse().map_err(|_| CliError::BadValue { key: name.to_string(), value: v, want: "usize" })
+    }
+
+    pub fn u64(&self, name: &str) -> Result<u64, CliError> {
+        let v = self.str(name);
+        v.parse().map_err(|_| CliError::BadValue { key: name.to_string(), value: v, want: "u64" })
+    }
+
+    pub fn f64(&self, name: &str) -> Result<f64, CliError> {
+        let v = self.str(name);
+        v.parse().map_err(|_| CliError::BadValue { key: name.to_string(), value: v, want: "f64" })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cli() -> Cli {
+        Cli::new("t", "test")
+            .opt("size", "array size", Some("16"))
+            .opt("model", "network", None)
+            .flag("verbose", "chatty")
+    }
+
+    fn v(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = cli().parse(&v(&[])).unwrap();
+        assert_eq!(a.usize("size").unwrap(), 16);
+        assert!(a.get("model").is_none());
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn space_and_equals_forms() {
+        let a = cli().parse(&v(&["--size", "32", "--model=mbv2"])).unwrap();
+        assert_eq!(a.usize("size").unwrap(), 32);
+        assert_eq!(a.str("model"), "mbv2");
+    }
+
+    #[test]
+    fn flags_and_positionals() {
+        let a = cli().parse(&v(&["--verbose", "run", "fast"])).unwrap();
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["run", "fast"]);
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        assert!(matches!(cli().parse(&v(&["--nope"])), Err(CliError::Unknown(_))));
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(matches!(cli().parse(&v(&["--model"])), Err(CliError::MissingValue(_))));
+    }
+
+    #[test]
+    fn bad_typed_value() {
+        let a = cli().parse(&v(&["--size", "large"])).unwrap();
+        assert!(matches!(a.usize("size"), Err(CliError::BadValue { .. })));
+    }
+
+    #[test]
+    fn usage_mentions_options() {
+        let u = cli().usage();
+        assert!(u.contains("--size"));
+        assert!(u.contains("--verbose"));
+        assert!(u.contains("default: 16"));
+    }
+}

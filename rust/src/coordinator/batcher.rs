@@ -1,0 +1,152 @@
+//! Dynamic request batcher for the inference-serving driver (DESIGN.md
+//! S11). Requests accumulate until either the batch is full or the oldest
+//! request has waited `max_wait`; the resulting batch goes to the engine.
+//! This is the standard edge-serving policy: batch-1 latency when idle,
+//! larger batches under load.
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+/// A queued request with its arrival time.
+#[derive(Debug)]
+pub struct Pending<T> {
+    pub item: T,
+    pub arrived: Instant,
+}
+
+/// Batch-forming policy.
+#[derive(Debug, Clone)]
+pub struct BatchPolicy {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> BatchPolicy {
+        BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(2) }
+    }
+}
+
+/// FIFO queue with batch extraction.
+#[derive(Debug)]
+pub struct Batcher<T> {
+    queue: VecDeque<Pending<T>>,
+    pub policy: BatchPolicy,
+}
+
+impl<T> Batcher<T> {
+    pub fn new(policy: BatchPolicy) -> Batcher<T> {
+        Batcher { queue: VecDeque::new(), policy }
+    }
+
+    pub fn push(&mut self, item: T) {
+        self.queue.push_back(Pending { item, arrived: Instant::now() });
+    }
+
+    pub fn push_at(&mut self, item: T, arrived: Instant) {
+        self.queue.push_back(Pending { item, arrived });
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Should a batch be dispatched *now*?
+    pub fn ready(&self, now: Instant) -> bool {
+        if self.queue.is_empty() {
+            return false;
+        }
+        self.queue.len() >= self.policy.max_batch
+            || now.duration_since(self.queue.front().unwrap().arrived) >= self.policy.max_wait
+    }
+
+    /// Extract up to `max_batch` oldest requests.
+    pub fn take_batch(&mut self) -> Vec<Pending<T>> {
+        let n = self.queue.len().min(self.policy.max_batch);
+        self.queue.drain(..n).collect()
+    }
+
+    /// Time until the oldest request hits its deadline (None if empty).
+    pub fn next_deadline(&self, now: Instant) -> Option<Duration> {
+        self.queue.front().map(|p| {
+            let waited = now.duration_since(p.arrived);
+            self.policy.max_wait.saturating_sub(waited)
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn policy(max_batch: usize, ms: u64) -> BatchPolicy {
+        BatchPolicy { max_batch, max_wait: Duration::from_millis(ms) }
+    }
+
+    #[test]
+    fn dispatches_when_full() {
+        let mut b = Batcher::new(policy(4, 1000));
+        let now = Instant::now();
+        for i in 0..4 {
+            b.push_at(i, now);
+        }
+        assert!(b.ready(now));
+        let batch = b.take_batch();
+        assert_eq!(batch.len(), 4);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn not_ready_below_batch_before_deadline() {
+        let mut b = Batcher::new(policy(4, 1000));
+        let now = Instant::now();
+        b.push_at(1, now);
+        assert!(!b.ready(now));
+    }
+
+    #[test]
+    fn deadline_triggers_partial_batch() {
+        let mut b = Batcher::new(policy(4, 10));
+        let t0 = Instant::now();
+        b.push_at(1, t0);
+        let later = t0 + Duration::from_millis(11);
+        assert!(b.ready(later));
+        assert_eq!(b.take_batch().len(), 1);
+    }
+
+    #[test]
+    fn take_batch_caps_at_max() {
+        let mut b = Batcher::new(policy(3, 0));
+        let now = Instant::now();
+        for i in 0..7 {
+            b.push_at(i, now);
+        }
+        assert_eq!(b.take_batch().len(), 3);
+        assert_eq!(b.len(), 4);
+    }
+
+    #[test]
+    fn fifo_order_preserved() {
+        let mut b = Batcher::new(policy(8, 0));
+        let now = Instant::now();
+        for i in 0..5 {
+            b.push_at(i, now);
+        }
+        let items: Vec<i32> = b.take_batch().into_iter().map(|p| p.item).collect();
+        assert_eq!(items, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn next_deadline_counts_down() {
+        let mut b = Batcher::new(policy(8, 10));
+        let t0 = Instant::now();
+        b.push_at(0, t0);
+        let d = b.next_deadline(t0 + Duration::from_millis(4)).unwrap();
+        assert!(d <= Duration::from_millis(6));
+        assert!(b.next_deadline(t0 + Duration::from_millis(20)).unwrap() == Duration::ZERO);
+    }
+}

@@ -1,0 +1,258 @@
+//! Network evaluation services on top of the simulator.
+//!
+//! Two layers of reuse make search affordable:
+//! * a layer-level memo cache (identical (op, h, w, cfg) → same `LayerSim`);
+//! * `HybridSpace`, which pre-simulates each bottleneck block in both its
+//!   depthwise and FuSe form so evaluating one EA genome is a vector sum
+//!   instead of a network simulation.
+
+use crate::nn::{fuse_network, Layer, Network, Selection, Variant};
+use crate::sim::{simulate_layer, LayerSim, SimConfig};
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+/// Cache key: the layer's hardware-relevant identity.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+struct LayerKey {
+    op: String, // OpKind derives Debug deterministically
+    h: usize,
+    w: usize,
+}
+
+fn key_of(l: &Layer) -> LayerKey {
+    LayerKey { op: format!("{:?}", l.op), h: l.h, w: l.w }
+}
+
+/// Memoizing evaluator for one hardware configuration.
+pub struct Evaluator {
+    pub cfg: SimConfig,
+    cache: Mutex<HashMap<LayerKey, (u64, u64)>>, // (total_cycles, pe_cycles)
+}
+
+/// Whole-network evaluation summary.
+#[derive(Debug, Clone)]
+pub struct NetEval {
+    pub name: String,
+    pub cycles: u64,
+    pub latency_ms: f64,
+    pub macs: u64,
+    pub params: u64,
+}
+
+impl Evaluator {
+    pub fn new(cfg: SimConfig) -> Evaluator {
+        Evaluator { cfg, cache: Mutex::new(HashMap::new()) }
+    }
+
+    /// Cycles for one layer (cached).
+    pub fn layer_cycles(&self, l: &Layer) -> u64 {
+        let key = key_of(l);
+        if let Some(&(c, _)) = self.cache.lock().unwrap().get(&key) {
+            return c;
+        }
+        let sim = simulate_layer(l, &self.cfg);
+        self.cache.lock().unwrap().insert(key, (sim.total_cycles, sim.pe_cycles));
+        sim.total_cycles
+    }
+
+    /// Full (uncached) layer simulation when the detail is needed.
+    pub fn layer_detail(&self, l: &Layer) -> LayerSim {
+        simulate_layer(l, &self.cfg)
+    }
+
+    pub fn eval(&self, net: &Network) -> NetEval {
+        let cycles: u64 = net.layers.iter().map(|l| self.layer_cycles(l)).sum();
+        NetEval {
+            name: net.name.clone(),
+            cycles,
+            latency_ms: self.cfg.cycles_to_ms(cycles),
+            macs: net.total_macs(),
+            params: net.total_params(),
+        }
+    }
+
+    pub fn cache_len(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+}
+
+/// Pre-factored hybrid search space over one base network: per bottleneck
+/// block, the cycle/param/mac cost in depthwise form vs FuSe-Half form.
+/// Evaluating a genome (bitmask) is O(#blocks).
+pub struct HybridSpace {
+    pub base: Network,
+    pub blocks: Vec<usize>,
+    /// Cycles of block b with depthwise / with FuSe-Half.
+    pub dw_cycles: Vec<u64>,
+    pub fuse_cycles: Vec<u64>,
+    pub dw_macs: Vec<u64>,
+    pub fuse_macs: Vec<u64>,
+    pub dw_params: Vec<u64>,
+    pub fuse_params: Vec<u64>,
+    /// Everything outside bottleneck blocks.
+    pub fixed_cycles: u64,
+    pub fixed_macs: u64,
+    pub fixed_params: u64,
+    pub cfg: SimConfig,
+}
+
+impl HybridSpace {
+    pub fn new(base: &Network, ev: &Evaluator) -> HybridSpace {
+        let fused = fuse_network(base, Variant::Half, &Selection::All);
+        let blocks = base.bottleneck_blocks();
+
+        let block_stats = |net: &Network, b: usize| -> (u64, u64, u64) {
+            let ls: Vec<&Layer> = net.layers.iter().filter(|l| l.block == Some(b)).collect();
+            (
+                ls.iter().map(|l| ev.layer_cycles(l)).sum(),
+                ls.iter().map(|l| l.macs()).sum(),
+                ls.iter().map(|l| l.params()).sum(),
+            )
+        };
+
+        let mut dw_cycles = Vec::new();
+        let mut fuse_cycles = Vec::new();
+        let mut dw_macs = Vec::new();
+        let mut fuse_macs = Vec::new();
+        let mut dw_params = Vec::new();
+        let mut fuse_params = Vec::new();
+        for &b in &blocks {
+            let (c, m, p) = block_stats(base, b);
+            dw_cycles.push(c);
+            dw_macs.push(m);
+            dw_params.push(p);
+            let (c, m, p) = block_stats(&fused, b);
+            fuse_cycles.push(c);
+            fuse_macs.push(m);
+            fuse_params.push(p);
+        }
+        let fixed: Vec<&Layer> = base.layers.iter().filter(|l| l.block.is_none()).collect();
+        HybridSpace {
+            base: base.clone(),
+            blocks,
+            dw_cycles,
+            fuse_cycles,
+            dw_macs,
+            fuse_macs,
+            dw_params,
+            fuse_params,
+            fixed_cycles: fixed.iter().map(|l| ev.layer_cycles(l)).sum(),
+            fixed_macs: fixed.iter().map(|l| l.macs()).sum(),
+            fixed_params: fixed.iter().map(|l| l.params()).sum(),
+            cfg: ev.cfg.clone(),
+        }
+    }
+
+    pub fn num_blocks(&self) -> usize {
+        self.blocks.len()
+    }
+
+    /// Cycles of the hybrid selected by `mask` (true = FuSe).
+    pub fn cycles(&self, mask: &[bool]) -> u64 {
+        assert_eq!(mask.len(), self.num_blocks());
+        let mut c = self.fixed_cycles;
+        for (i, &m) in mask.iter().enumerate() {
+            c += if m { self.fuse_cycles[i] } else { self.dw_cycles[i] };
+        }
+        c
+    }
+
+    pub fn latency_ms(&self, mask: &[bool]) -> f64 {
+        self.cfg.cycles_to_ms(self.cycles(mask))
+    }
+
+    pub fn macs(&self, mask: &[bool]) -> u64 {
+        let mut v = self.fixed_macs;
+        for (i, &m) in mask.iter().enumerate() {
+            v += if m { self.fuse_macs[i] } else { self.dw_macs[i] };
+        }
+        v
+    }
+
+    pub fn params(&self, mask: &[bool]) -> u64 {
+        let mut v = self.fixed_params;
+        for (i, &m) in mask.iter().enumerate() {
+            v += if m { self.fuse_params[i] } else { self.dw_params[i] };
+        }
+        v
+    }
+
+    /// Realize the mask as an actual network (for reporting/inspection).
+    pub fn realize(&self, mask: &[bool]) -> Network {
+        fuse_network(&self.base, Variant::Half, &Selection::Mask(mask.to_vec()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::models::mobilenet_v3;
+    use crate::sim::simulate_network;
+
+    #[test]
+    fn evaluator_matches_direct_simulation() {
+        let ev = Evaluator::new(SimConfig::default());
+        let net = mobilenet_v3::small();
+        let e = ev.eval(&net);
+        let s = simulate_network(&net, &SimConfig::default());
+        assert_eq!(e.cycles, s.total_cycles);
+        assert_eq!(e.macs, net.total_macs());
+    }
+
+    #[test]
+    fn cache_hits_across_evals() {
+        let ev = Evaluator::new(SimConfig::default());
+        let net = mobilenet_v3::small();
+        ev.eval(&net);
+        let n1 = ev.cache_len();
+        ev.eval(&net); // second run: all hits
+        assert_eq!(ev.cache_len(), n1);
+        assert!(n1 <= net.layers.len());
+    }
+
+    #[test]
+    fn hybrid_space_extremes_match_full_networks() {
+        let ev = Evaluator::new(SimConfig::default());
+        let base = mobilenet_v3::small();
+        let space = HybridSpace::new(&base, &ev);
+        let n = space.num_blocks();
+
+        // all-false == baseline
+        let all_dw = vec![false; n];
+        assert_eq!(space.cycles(&all_dw), ev.eval(&base).cycles);
+        assert_eq!(space.macs(&all_dw), base.total_macs());
+        assert_eq!(space.params(&all_dw), base.total_params());
+
+        // all-true == FuSe-Half
+        let all_fuse = vec![true; n];
+        let fused = crate::nn::fuse_all(&base, Variant::Half);
+        assert_eq!(space.cycles(&all_fuse), ev.eval(&fused).cycles);
+        assert_eq!(space.macs(&all_fuse), fused.total_macs());
+    }
+
+    #[test]
+    fn hybrid_monotone_in_mask() {
+        // converting more blocks can only reduce cycles (FuSe ≤ dw per block)
+        let ev = Evaluator::new(SimConfig::default());
+        let space = HybridSpace::new(&mobilenet_v3::small(), &ev);
+        let n = space.num_blocks();
+        let mut mask = vec![false; n];
+        let mut prev = space.cycles(&mask);
+        for i in 0..n {
+            mask[i] = true;
+            let cur = space.cycles(&mask);
+            assert!(cur <= prev, "block {i} increased cycles");
+            prev = cur;
+        }
+    }
+
+    #[test]
+    fn realize_matches_fast_path() {
+        let ev = Evaluator::new(SimConfig::default());
+        let space = HybridSpace::new(&mobilenet_v3::small(), &ev);
+        let n = space.num_blocks();
+        let mask: Vec<bool> = (0..n).map(|i| i % 2 == 0).collect();
+        let net = space.realize(&mask);
+        assert_eq!(ev.eval(&net).cycles, space.cycles(&mask));
+    }
+}

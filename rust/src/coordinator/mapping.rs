@@ -1,0 +1,88 @@
+//! Block-selection policies for the partial (50 %) FuSe variants.
+//!
+//! Table 3's `-50%` rows convert only half the bottleneck blocks, "chosen
+//! greedily based on the impact on latency" — i.e. convert the blocks whose
+//! conversion saves the most cycles first.
+
+use super::evaluator::HybridSpace;
+
+/// Mask converting the `count` blocks with the largest cycle savings.
+pub fn greedy_by_latency(space: &HybridSpace, count: usize) -> Vec<bool> {
+    let n = space.num_blocks();
+    let mut savings: Vec<(usize, u64)> = (0..n)
+        .map(|i| (i, space.dw_cycles[i].saturating_sub(space.fuse_cycles[i])))
+        .collect();
+    savings.sort_by_key(|&(_, s)| std::cmp::Reverse(s));
+    let mut mask = vec![false; n];
+    for &(i, _) in savings.iter().take(count.min(n)) {
+        mask[i] = true;
+    }
+    mask
+}
+
+/// The paper's 50 % variant.
+pub fn greedy_half(space: &HybridSpace) -> Vec<bool> {
+    greedy_by_latency(space, (space.num_blocks() + 1) / 2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::evaluator::Evaluator;
+    use crate::nn::models::mobilenet_v2;
+    use crate::sim::SimConfig;
+
+    fn space() -> HybridSpace {
+        HybridSpace::new(&mobilenet_v2::build(), &Evaluator::new(SimConfig::default()))
+    }
+
+    #[test]
+    fn converts_exactly_half() {
+        let sp = space();
+        let mask = greedy_half(&sp);
+        let n = sp.num_blocks();
+        assert_eq!(mask.iter().filter(|&&m| m).count(), (n + 1) / 2);
+    }
+
+    #[test]
+    fn greedy_is_optimal_for_its_budget() {
+        // any other mask with the same count must be no faster
+        let sp = space();
+        let k = 5;
+        let mask = greedy_by_latency(&sp, k);
+        let greedy_cycles = sp.cycles(&mask);
+        let n = sp.num_blocks();
+        // compare against 50 random masks of the same cardinality
+        let mut rng = crate::rng::Rng::new(3);
+        for _ in 0..50 {
+            let mut other = vec![false; n];
+            let mut idx: Vec<usize> = (0..n).collect();
+            rng.shuffle(&mut idx);
+            for &i in idx.iter().take(k) {
+                other[i] = true;
+            }
+            assert!(sp.cycles(&other) >= greedy_cycles);
+        }
+    }
+
+    #[test]
+    fn half_variant_latency_between_base_and_full() {
+        let sp = space();
+        let n = sp.num_blocks();
+        let half = sp.cycles(&greedy_half(&sp));
+        let base = sp.cycles(&vec![false; n]);
+        let full = sp.cycles(&vec![true; n]);
+        assert!(full <= half && half <= base);
+        // greedy-by-latency captures most of the benefit (paper: the 50%
+        // variants retain most of the speedup)
+        let captured = (base - half) as f64 / (base - full) as f64;
+        assert!(captured > 0.6, "captured only {captured}");
+    }
+
+    #[test]
+    fn zero_budget_is_baseline() {
+        let sp = space();
+        let mask = greedy_by_latency(&sp, 0);
+        assert!(mask.iter().all(|&m| !m));
+    }
+}

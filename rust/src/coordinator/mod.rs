@@ -1,0 +1,12 @@
+//! L3 coordinator: network evaluation over the simulator, hybrid-network
+//! search (EA + OFA-NAS), block-selection policies, and the inference
+//! serving loop.
+
+pub mod batcher;
+pub mod evaluator;
+pub mod mapping;
+pub mod search;
+pub mod server;
+
+pub use evaluator::{Evaluator, HybridSpace, NetEval};
+pub use server::{Engine, Server};

@@ -1,0 +1,13 @@
+//! Search strategies over FuSe design spaces: evolutionary hybrid search
+//! (Fig 13), OFA-space NAS with the FuSe operator choice (Fig 15), the
+//! calibrated accuracy predictor, and pareto utilities.
+
+pub mod ea;
+pub mod nas;
+pub mod pareto;
+pub mod predictor;
+
+pub use ea::{run_ea, Candidate, EaConfig, EaResult};
+pub use nas::{run_nas, NasCandidate, NasConfig, NasResult};
+pub use pareto::{pareto_front, pareto_ranks, Point};
+pub use predictor::{paper_anchor, predict_ofa, AccuracyPredictor, TrainMethod};

@@ -1,0 +1,180 @@
+//! NAS over the OFA design space with the FuSe operator choice (paper §6.5,
+//! Fig 15): evolutionary sampling of `OfaGenome`s, latency from the
+//! simulator, accuracy from the calibrated OFA predictor. Run twice — with
+//! `allow_fuse` off (baseline OFA curve) and on (FuSe-OFA curve) — the
+//! FuSe-enabled frontier should dominate, as in the paper.
+
+use super::super::evaluator::Evaluator;
+use super::pareto::{pareto_front, pareto_ranks, Point};
+use super::predictor::{predict_ofa, TrainMethod};
+use crate::exec::Pool;
+use crate::nn::models::ofa::OfaGenome;
+use crate::rng::Rng;
+use std::sync::Arc;
+
+#[derive(Debug, Clone)]
+pub struct NasConfig {
+    pub population: usize,
+    pub iterations: usize,
+    pub mutation_p: f64,
+    pub allow_fuse: bool,
+    pub seed: u64,
+    pub threads: usize,
+}
+
+impl Default for NasConfig {
+    fn default() -> NasConfig {
+        NasConfig {
+            population: 32,
+            iterations: 16,
+            mutation_p: 0.15,
+            allow_fuse: true,
+            seed: 42,
+            threads: 0,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct NasCandidate {
+    pub genome: OfaGenome,
+    pub acc: f64,
+    pub latency_ms: f64,
+    pub macs_millions: f64,
+    pub params_millions: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct NasResult {
+    pub frontier: Vec<NasCandidate>,
+    pub evaluated: usize,
+}
+
+fn evaluate(genome: OfaGenome, ev: &Evaluator) -> NasCandidate {
+    let net = genome.realize("nas");
+    let e = ev.eval(&net);
+    let macs_m = e.macs as f64 / 1e6;
+    NasCandidate {
+        acc: predict_ofa(&genome, macs_m, TrainMethod::Nos),
+        latency_ms: e.latency_ms,
+        macs_millions: macs_m,
+        params_millions: e.params as f64 / 1e6,
+        genome,
+    }
+}
+
+/// Evolutionary NAS. Population evaluation is parallel (genome realization
+/// + simulation dominate; the evaluator's layer cache is shared).
+pub fn run_nas(ev: Arc<Evaluator>, cfg: &NasConfig) -> NasResult {
+    let mut rng = Rng::new(cfg.seed);
+    let pool = Pool::new(cfg.threads);
+
+    let eval_batch = |genomes: Vec<OfaGenome>, pool: &Pool, ev: &Arc<Evaluator>| {
+        let ev = Arc::clone(ev);
+        pool.scope_map(genomes, move |g| evaluate(g, &ev))
+    };
+
+    let init: Vec<OfaGenome> =
+        (0..cfg.population).map(|_| OfaGenome::random(&mut rng, cfg.allow_fuse)).collect();
+    let mut pop = eval_batch(init, &pool, &ev);
+    let mut all = pop.clone();
+
+    for _ in 0..cfg.iterations {
+        let pts: Vec<Point<usize>> = pop
+            .iter()
+            .enumerate()
+            .map(|(i, c)| Point { acc: c.acc, latency_ms: c.latency_ms, tag: i })
+            .collect();
+        let ranks = pareto_ranks(&pts);
+        let mut order: Vec<usize> = (0..pop.len()).collect();
+        order.sort_by_key(|&i| ranks[i]);
+        let elite: Vec<usize> = order[..(pop.len() / 4).max(2)].to_vec();
+
+        let mut children: Vec<OfaGenome> = Vec::with_capacity(cfg.population);
+        while children.len() < cfg.population {
+            let child = if rng.chance(0.5) {
+                pop[*rng.choose(&elite)].genome.mutate(&mut rng, cfg.mutation_p)
+            } else {
+                let a = &pop[*rng.choose(&elite)].genome;
+                let b = &pop[*rng.choose(&elite)].genome;
+                a.crossover(b, &mut rng)
+            };
+            children.push(child);
+        }
+        pop = eval_batch(children, &pool, &ev);
+        all.extend(pop.iter().cloned());
+    }
+
+    let pts: Vec<Point<usize>> = all
+        .iter()
+        .enumerate()
+        .map(|(i, c)| Point { acc: c.acc, latency_ms: c.latency_ms, tag: i })
+        .collect();
+    let frontier = pareto_front(&pts).into_iter().map(|p| all[p.tag].clone()).collect();
+    NasResult { frontier, evaluated: all.len() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::SimConfig;
+
+    fn tiny(allow_fuse: bool, seed: u64) -> NasResult {
+        let ev = Arc::new(Evaluator::new(SimConfig::default()));
+        let cfg = NasConfig {
+            population: 8,
+            iterations: 4,
+            allow_fuse,
+            seed,
+            threads: 2,
+            ..NasConfig::default()
+        };
+        run_nas(ev, &cfg)
+    }
+
+    #[test]
+    fn produces_nonempty_frontier() {
+        let r = tiny(true, 5);
+        assert!(!r.frontier.is_empty());
+        assert_eq!(r.evaluated, 8 + 4 * 8);
+    }
+
+    #[test]
+    fn fuse_frontier_dominates_baseline_in_latency() {
+        // Fig 15's core claim: with FuSe in the space, the frontier reaches
+        // much lower latency at comparable accuracy.
+        let base = tiny(false, 6);
+        let fuse = tiny(true, 6);
+        let base_fastest =
+            base.frontier.iter().map(|c| c.latency_ms).fold(f64::MAX, f64::min);
+        let fuse_fastest =
+            fuse.frontier.iter().map(|c| c.latency_ms).fold(f64::MAX, f64::min);
+        assert!(
+            fuse_fastest < base_fastest * 0.75,
+            "fuse {fuse_fastest} vs base {base_fastest}"
+        );
+    }
+
+    #[test]
+    fn baseline_run_contains_no_fuse() {
+        let r = tiny(false, 7);
+        for c in &r.frontier {
+            for s in 0..5 {
+                for d in 0..c.genome.depths[s] {
+                    assert!(!c.genome.blocks[s][d].fuse);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = tiny(true, 9);
+        let b = tiny(true, 9);
+        assert_eq!(a.frontier.len(), b.frontier.len());
+        for (x, y) in a.frontier.iter().zip(&b.frontier) {
+            assert!((x.acc - y.acc).abs() < 1e-12);
+            assert!((x.latency_ms - y.latency_ms).abs() < 1e-12);
+        }
+    }
+}

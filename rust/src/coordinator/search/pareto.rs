@@ -1,0 +1,118 @@
+//! Pareto-frontier utilities for the accuracy-vs-latency trade-off plots
+//! (Figs 13 and 15).
+
+/// A candidate point: maximize `acc`, minimize `latency_ms`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Point<T> {
+    pub acc: f64,
+    pub latency_ms: f64,
+    pub tag: T,
+}
+
+/// `a` dominates `b` iff it is no worse in both objectives and strictly
+/// better in at least one.
+pub fn dominates<T>(a: &Point<T>, b: &Point<T>) -> bool {
+    (a.acc >= b.acc && a.latency_ms <= b.latency_ms)
+        && (a.acc > b.acc || a.latency_ms < b.latency_ms)
+}
+
+/// Non-dominated subset, sorted by latency ascending.
+pub fn pareto_front<T: Clone>(points: &[Point<T>]) -> Vec<Point<T>> {
+    let mut front: Vec<Point<T>> = Vec::new();
+    for p in points {
+        if points.iter().any(|q| dominates(q, p)) {
+            continue;
+        }
+        // dedupe identical objective pairs
+        if !front
+            .iter()
+            .any(|q| (q.acc - p.acc).abs() < 1e-12 && (q.latency_ms - p.latency_ms).abs() < 1e-12)
+        {
+            front.push(p.clone());
+        }
+    }
+    front.sort_by(|a, b| a.latency_ms.partial_cmp(&b.latency_ms).unwrap());
+    front
+}
+
+/// Pareto rank of every point (0 = frontier, 1 = frontier after removing
+/// rank-0, ...) — used for EA selection.
+pub fn pareto_ranks<T>(points: &[Point<T>]) -> Vec<usize> {
+    let n = points.len();
+    let mut rank = vec![usize::MAX; n];
+    let mut assigned = 0;
+    let mut level = 0;
+    while assigned < n {
+        let mut this_level = Vec::new();
+        for i in 0..n {
+            if rank[i] != usize::MAX {
+                continue;
+            }
+            let dominated = (0..n).any(|j| {
+                j != i && rank[j] == usize::MAX && dominates(&points[j], &points[i])
+            });
+            if !dominated {
+                this_level.push(i);
+            }
+        }
+        if this_level.is_empty() {
+            // all remaining are mutually identical duplicates
+            for i in 0..n {
+                if rank[i] == usize::MAX {
+                    this_level.push(i);
+                }
+            }
+        }
+        for i in this_level {
+            rank[i] = level;
+            assigned += 1;
+        }
+        level += 1;
+    }
+    rank
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p(acc: f64, lat: f64) -> Point<usize> {
+        Point { acc, latency_ms: lat, tag: 0 }
+    }
+
+    #[test]
+    fn dominance_rules() {
+        assert!(dominates(&p(75.0, 1.0), &p(74.0, 2.0)));
+        assert!(dominates(&p(75.0, 1.0), &p(75.0, 2.0)));
+        assert!(!dominates(&p(75.0, 1.0), &p(75.0, 1.0))); // equal: no
+        assert!(!dominates(&p(75.0, 2.0), &p(74.0, 1.0))); // trade-off
+    }
+
+    #[test]
+    fn front_extraction() {
+        let pts = vec![p(70.0, 1.0), p(75.0, 3.0), p(72.0, 2.0), p(71.0, 2.5), p(74.0, 2.9)];
+        let front = pareto_front(&pts);
+        let accs: Vec<f64> = front.iter().map(|q| q.acc).collect();
+        // 71.0@2.5 is dominated by 72.0@2.0; everything else survives
+        assert_eq!(accs, vec![70.0, 72.0, 74.0, 75.0]);
+        // sorted by latency, acc strictly increasing along the front
+        for w in front.windows(2) {
+            assert!(w[0].latency_ms < w[1].latency_ms);
+            assert!(w[0].acc < w[1].acc);
+        }
+    }
+
+    #[test]
+    fn ranks_layered() {
+        let pts = vec![p(75.0, 1.0), p(74.0, 2.0), p(73.0, 3.0)];
+        // first dominates the rest
+        assert_eq!(pareto_ranks(&pts), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn duplicate_points_share_rank() {
+        let pts = vec![p(70.0, 1.0), p(70.0, 1.0)];
+        let r = pareto_ranks(&pts);
+        assert_eq!(r[0], r[1]);
+    }
+}

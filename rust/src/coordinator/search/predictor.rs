@@ -1,0 +1,244 @@
+//! Accuracy model for search (DESIGN.md S7).
+//!
+//! The paper trains every candidate on ImageNet (8×V100, 350 epochs);
+//! offline we substitute a *calibrated predictor* anchored to the paper's
+//! own measurements (Table 3 baselines and in-place drops, §6.3 NOS
+//! recovery rates of 37 % / 74 %), plus small-scale real training evidence
+//! from the runtime (examples/train_e2e). The predictor only has to rank
+//! candidates the way ImageNet training would — its anchors pin the
+//! endpoints, and the per-block interpolation encodes the standard
+//! capacity heuristic (accuracy sensitivity follows parameter share, with
+//! a deterministic per-block perturbation so search has structure to
+//! exploit).
+
+use super::super::evaluator::HybridSpace;
+use crate::nn::models::ofa::OfaGenome;
+
+/// How the candidate is trained — in-place replacement or NOS scaffolding.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TrainMethod {
+    InPlace,
+    Nos,
+}
+
+/// Per-network anchors from the paper.
+#[derive(Debug, Clone, Copy)]
+pub struct Anchor {
+    pub base_acc: f64,
+    /// Accuracy delta of converting ALL blocks, in-place (Table 3).
+    pub drop_half: f64,
+    pub drop_full: f64,
+    /// Fraction of the drop NOS recovers (§6.3: 37 % for MobileNetV3-L,
+    /// 74 % for MnasNet-B1; others default to their mean).
+    pub nos_recovery: f64,
+}
+
+/// Table 3 anchors.
+pub fn paper_anchor(name: &str) -> Option<Anchor> {
+    let a = |base: f64, half: f64, full: f64, rec: f64| Anchor {
+        base_acc: base,
+        drop_half: base - half,
+        drop_full: base - full,
+        nos_recovery: rec,
+    };
+    Some(match name {
+        n if n.starts_with("MobileNet-V1") => a(70.60, 72.00, 72.86, 0.55),
+        n if n.starts_with("MobileNet-V2") => a(72.00, 70.80, 72.49, 0.55),
+        n if n.starts_with("MobileNet-V3-Small") => a(67.40, 64.55, 67.17, 0.55),
+        n if n.starts_with("MobileNet-V3-Large") => a(75.20, 73.02, 74.40, 0.37),
+        n if n.starts_with("MnasNet-B1") => a(73.50, 71.48, 73.16, 0.74),
+        _ => return None,
+    })
+}
+
+/// Deterministic per-block sensitivity jitter in [0.85, 1.15] — stands in
+/// for the block-level idiosyncrasies real training exhibits (Fig 14: the
+/// EA keeps a few specific depthwise blocks).
+fn jitter(net: &str, block: usize) -> f64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in net.bytes().chain(block.to_le_bytes()) {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    0.85 + 0.30 * ((h >> 11) as f64 / (1u64 << 53) as f64)
+}
+
+/// Predictor over one base network's hybrid space.
+pub struct AccuracyPredictor {
+    pub anchor: Anchor,
+    /// Per-block share of the total in-place drop (sums to 1).
+    pub block_weight: Vec<f64>,
+    net_name: String,
+}
+
+impl AccuracyPredictor {
+    pub fn for_space(space: &HybridSpace) -> AccuracyPredictor {
+        let name = space.base.name.clone();
+        let anchor = paper_anchor(&name)
+            .unwrap_or(Anchor { base_acc: 75.0, drop_half: 2.1, drop_full: 0.3, nos_recovery: 0.55 });
+        // Sensitivity follows depthwise parameter share with jitter.
+        let raw: Vec<f64> = space
+            .dw_params
+            .iter()
+            .enumerate()
+            .map(|(i, &p)| (p.max(1) as f64).powf(0.8) * jitter(&name, i))
+            .collect();
+        let sum: f64 = raw.iter().sum();
+        AccuracyPredictor {
+            anchor,
+            block_weight: raw.into_iter().map(|r| r / sum).collect(),
+            net_name: name,
+        }
+    }
+
+    pub fn net_name(&self) -> &str {
+        &self.net_name
+    }
+
+    /// Accuracy of the hybrid selected by `mask` (true = FuSe-Half).
+    pub fn predict_mask(&self, mask: &[bool], method: TrainMethod) -> f64 {
+        assert_eq!(mask.len(), self.block_weight.len());
+        let converted: f64 = mask
+            .iter()
+            .zip(&self.block_weight)
+            .filter(|(&m, _)| m)
+            .map(|(_, &w)| w)
+            .sum();
+        let drop = self.anchor.drop_half * converted;
+        let recovered = match method {
+            TrainMethod::InPlace => 0.0,
+            TrainMethod::Nos => drop.max(0.0) * self.anchor.nos_recovery,
+        };
+        self.anchor.base_acc - drop + recovered
+    }
+
+    /// Accuracy with every block converted (the Table 3 "FuSe-Half" row).
+    pub fn predict_all(&self, method: TrainMethod) -> f64 {
+        self.predict_mask(&vec![true; self.block_weight.len()], method)
+    }
+}
+
+/// Parametric accuracy model over the OFA design space (Fig 15 / Table 4).
+/// Calibrated to: OFA best 77.1 % @ 369 M, FuSe-OFA-1 76.7 % @ 376 M,
+/// FuSe-OFA-2 77.2 % @ 426 M (all NOS-trained).
+pub fn predict_ofa(genome: &OfaGenome, macs_millions: f64, method: TrainMethod) -> f64 {
+    let total_depth: usize = genome.depths.iter().sum();
+    let mut ksum = 0.0;
+    let mut fuse_blocks = 0.0;
+    let mut blocks = 0.0;
+    for s in 0..5 {
+        for d in 0..genome.depths[s] {
+            let g = genome.blocks[s][d];
+            ksum += g.kernel as f64;
+            fuse_blocks += if g.fuse { 1.0 } else { 0.0 };
+            blocks += 1.0;
+        }
+    }
+    let mean_k = ksum / blocks;
+    let frac_fuse = fuse_blocks / blocks;
+
+    // capacity + receptive field + depth (constants solved against the
+    // three Table-4 anchors — see the calibration test below)
+    let acc = 62.63 + 2.05 * macs_millions.ln() + 0.22 * mean_k + 0.045 * total_depth as f64;
+    // operator penalty, largely recovered by NOS (OFA-style scaffolding)
+    let drop = 1.9 * frac_fuse;
+    let recovered = match method {
+        TrainMethod::InPlace => 0.0,
+        TrainMethod::Nos => 0.744 * drop,
+    };
+    acc - drop + recovered
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::evaluator::Evaluator;
+    use crate::nn::models::{mnasnet, mobilenet_v3};
+    use crate::sim::SimConfig;
+
+    fn space(net: crate::nn::Network) -> HybridSpace {
+        HybridSpace::new(&net, &Evaluator::new(SimConfig::default()))
+    }
+
+    #[test]
+    fn endpoints_match_table3() {
+        let sp = space(mobilenet_v3::large());
+        let p = AccuracyPredictor::for_space(&sp);
+        let n = sp.num_blocks();
+        // no conversion = baseline
+        assert!((p.predict_mask(&vec![false; n], TrainMethod::InPlace) - 75.20).abs() < 1e-9);
+        // full conversion in-place = Table 3 FuSe-Half row
+        assert!((p.predict_all(TrainMethod::InPlace) - 73.02).abs() < 1e-9);
+    }
+
+    #[test]
+    fn nos_recovery_matches_section_6_3() {
+        // MobileNetV3-Large: +0.8 (37 % of 2.18); MnasNet-B1: +1.5 (74 %).
+        let sp = space(mobilenet_v3::large());
+        let p = AccuracyPredictor::for_space(&sp);
+        let gain = p.predict_all(TrainMethod::Nos) - p.predict_all(TrainMethod::InPlace);
+        assert!((gain - 0.8).abs() < 0.05, "v3l gain {gain}");
+
+        let sp = space(mnasnet::build());
+        let p = AccuracyPredictor::for_space(&sp);
+        let gain = p.predict_all(TrainMethod::Nos) - p.predict_all(TrainMethod::InPlace);
+        assert!((gain - 1.5).abs() < 0.05, "mnas gain {gain}");
+    }
+
+    #[test]
+    fn partial_conversion_interpolates_monotonically() {
+        let sp = space(mobilenet_v3::large());
+        let p = AccuracyPredictor::for_space(&sp);
+        let n = sp.num_blocks();
+        let mut mask = vec![false; n];
+        let mut prev = p.predict_mask(&mask, TrainMethod::InPlace);
+        for i in 0..n {
+            mask[i] = true;
+            let cur = p.predict_mask(&mask, TrainMethod::InPlace);
+            assert!(cur <= prev + 1e-12);
+            prev = cur;
+        }
+    }
+
+    #[test]
+    fn block_weights_normalized_and_heterogeneous() {
+        let sp = space(mobilenet_v3::large());
+        let p = AccuracyPredictor::for_space(&sp);
+        let sum: f64 = p.block_weight.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-9);
+        let min = p.block_weight.iter().cloned().fold(f64::MAX, f64::min);
+        let max = p.block_weight.iter().cloned().fold(0.0, f64::max);
+        // late big blocks dominate: search has room to convert cheap blocks
+        assert!(max / min > 3.0, "weights too uniform {:?}", p.block_weight);
+    }
+
+    #[test]
+    fn ofa_calibration_near_table4() {
+        let ofa = OfaGenome::reference_ofa();
+        let f1 = OfaGenome::reference_fuse_ofa_1();
+        let f2 = OfaGenome::reference_fuse_ofa_2();
+        let m = |g: &OfaGenome| g.realize("x").macs_millions();
+        let a_ofa = predict_ofa(&ofa, m(&ofa), TrainMethod::Nos);
+        let a_f1 = predict_ofa(&f1, m(&f1), TrainMethod::Nos);
+        let a_f2 = predict_ofa(&f2, m(&f2), TrainMethod::Nos);
+        assert!((a_ofa - 77.1).abs() < 0.6, "ofa {a_ofa}");
+        assert!((a_f1 - 76.7).abs() < 0.6, "fuse-ofa-1 {a_f1}");
+        assert!((a_f2 - 77.2).abs() < 0.6, "fuse-ofa-2 {a_f2}");
+        // ordering as in Table 4
+        assert!(a_f2 > a_f1);
+    }
+
+    #[test]
+    fn nos_always_at_least_in_place_for_ofa() {
+        use crate::rng::Rng;
+        let mut rng = Rng::new(21);
+        for _ in 0..30 {
+            let g = OfaGenome::random(&mut rng, true);
+            let m = g.realize("x").macs_millions();
+            assert!(
+                predict_ofa(&g, m, TrainMethod::Nos) + 1e-12
+                    >= predict_ofa(&g, m, TrainMethod::InPlace)
+            );
+        }
+    }
+}

@@ -1,0 +1,300 @@
+//! Inference-serving loop: a dispatcher thread drains the dynamic batcher
+//! and drives an [`Engine`] (the PJRT executable in production, a mock in
+//! tests). Per-request latency and batch statistics come back with each
+//! response — this is the L3 hot path the §Perf pass profiles.
+
+use super::batcher::{BatchPolicy, Batcher};
+use crate::stats::Summary;
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+/// Something that can run a batch of flattened image tensors.
+///
+/// Implementations need not be `Send` — the PJRT client is thread-bound —
+/// so the server constructs the engine *inside* its dispatcher thread via
+/// [`Server::start_with`].
+pub trait Engine: 'static {
+    /// Elements per single input (e.g. 3·H·W).
+    fn input_len(&self) -> usize;
+    /// Elements per single output (e.g. #classes).
+    fn output_len(&self) -> usize;
+    /// Largest batch the compiled executable accepts.
+    fn max_batch(&self) -> usize;
+    /// Run one batch: `inputs.len() == n × input_len()`; must return
+    /// `n × output_len()` elements.
+    fn infer(&self, inputs: &[f32], n: usize) -> Vec<f32>;
+}
+
+/// One client request.
+pub struct Request {
+    pub id: u64,
+    pub input: Vec<f32>,
+    pub reply: mpsc::Sender<Response>,
+}
+
+/// Completed inference.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: u64,
+    pub output: Vec<f32>,
+    pub queue_us: u64,
+    pub batch_size: usize,
+    pub latency_us: u64,
+}
+
+/// Serving statistics, accumulated by the dispatcher.
+#[derive(Debug, Default, Clone)]
+pub struct ServerStats {
+    pub served: u64,
+    pub batches: u64,
+    pub latencies_us: Vec<f64>,
+    pub batch_sizes: Vec<f64>,
+}
+
+impl ServerStats {
+    pub fn latency_summary(&self) -> Option<Summary> {
+        if self.latencies_us.is_empty() {
+            None
+        } else {
+            Some(Summary::of(&self.latencies_us))
+        }
+    }
+
+    pub fn mean_batch(&self) -> f64 {
+        if self.batch_sizes.is_empty() {
+            0.0
+        } else {
+            self.batch_sizes.iter().sum::<f64>() / self.batch_sizes.len() as f64
+        }
+    }
+}
+
+/// Handle to a running server.
+pub struct Server {
+    tx: mpsc::Sender<ServerMsg>,
+    dispatcher: Option<thread::JoinHandle<ServerStats>>,
+    next_id: std::sync::atomic::AtomicU64,
+}
+
+enum ServerMsg {
+    Req(Request),
+    Shutdown,
+}
+
+impl Server {
+    /// Start with an engine constructed on the dispatcher thread (required
+    /// for thread-bound engines like the PJRT one).
+    pub fn start_with<E, F>(factory: F, policy: BatchPolicy) -> Server
+    where
+        E: Engine,
+        F: FnOnce() -> E + Send + 'static,
+    {
+        let (tx, rx) = mpsc::channel::<ServerMsg>();
+        let rx = Arc::new(Mutex::new(rx));
+        let dispatcher = thread::Builder::new()
+            .name("fuseconv-dispatch".into())
+            .spawn(move || dispatch_loop(factory(), policy, rx))
+            .expect("spawn dispatcher");
+        Server { tx, dispatcher: Some(dispatcher), next_id: 0.into() }
+    }
+
+    /// Convenience for `Send` engines.
+    pub fn start<E: Engine + Send>(engine: E, policy: BatchPolicy) -> Server {
+        Server::start_with(move || engine, policy)
+    }
+
+    /// Submit one input; returns a receiver for the response.
+    pub fn submit(&self, input: Vec<f32>) -> mpsc::Receiver<Response> {
+        let (reply, rx) = mpsc::channel();
+        let id = self.next_id.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        self.tx
+            .send(ServerMsg::Req(Request { id, input, reply }))
+            .expect("server alive");
+        rx
+    }
+
+    /// Stop the dispatcher and collect statistics.
+    pub fn shutdown(mut self) -> ServerStats {
+        let _ = self.tx.send(ServerMsg::Shutdown);
+        self.dispatcher.take().expect("not yet shut down").join().expect("dispatcher join")
+    }
+}
+
+fn dispatch_loop<E: Engine>(
+    engine: E,
+    policy: BatchPolicy,
+    rx: Arc<Mutex<mpsc::Receiver<ServerMsg>>>,
+) -> ServerStats {
+    let mut batcher: Batcher<Request> = Batcher::new(BatchPolicy {
+        max_batch: policy.max_batch.min(engine.max_batch()),
+        ..policy
+    });
+    let mut stats = ServerStats::default();
+    let mut open = true;
+
+    while open || !batcher.is_empty() {
+        // Pull what's available without exceeding the batch deadline.
+        let now = Instant::now();
+        let wait = batcher.next_deadline(now).unwrap_or(Duration::from_millis(50));
+        if open {
+            match rx.lock().unwrap().recv_timeout(wait) {
+                Ok(ServerMsg::Req(r)) => batcher.push(r),
+                Ok(ServerMsg::Shutdown) => open = false,
+                Err(mpsc::RecvTimeoutError::Timeout) => {}
+                Err(mpsc::RecvTimeoutError::Disconnected) => open = false,
+            }
+            // opportunistically drain anything else queued
+            while let Ok(msg) = rx.lock().unwrap().try_recv() {
+                match msg {
+                    ServerMsg::Req(r) => batcher.push(r),
+                    ServerMsg::Shutdown => open = false,
+                }
+            }
+        }
+
+        let now = Instant::now();
+        if batcher.ready(now) || (!open && !batcher.is_empty()) {
+            let batch = batcher.take_batch();
+            let n = batch.len();
+            let in_len = engine.input_len();
+            let mut flat = Vec::with_capacity(n * in_len);
+            for p in &batch {
+                assert_eq!(p.item.input.len(), in_len, "bad input length");
+                flat.extend_from_slice(&p.item.input);
+            }
+            let t0 = Instant::now();
+            let out = engine.infer(&flat, n);
+            let infer_us = t0.elapsed().as_micros() as u64;
+            assert_eq!(out.len(), n * engine.output_len(), "engine output length");
+            let done = Instant::now();
+            stats.batches += 1;
+            stats.batch_sizes.push(n as f64);
+            for (i, p) in batch.into_iter().enumerate() {
+                let queue_us = done.duration_since(p.arrived).as_micros() as u64 - infer_us.min(
+                    done.duration_since(p.arrived).as_micros() as u64,
+                );
+                let resp = Response {
+                    id: p.item.id,
+                    output: out[i * engine.output_len()..(i + 1) * engine.output_len()].to_vec(),
+                    queue_us,
+                    batch_size: n,
+                    latency_us: done.duration_since(p.arrived).as_micros() as u64,
+                };
+                stats.served += 1;
+                stats.latencies_us.push(resp.latency_us as f64);
+                let _ = p.item.reply.send(resp);
+            }
+        }
+    }
+    stats
+}
+
+#[cfg(test)]
+pub mod testutil {
+    use super::*;
+
+    /// Mock engine: output[j] = sum(input of sample j) + j-th class index.
+    pub struct MockEngine {
+        pub in_len: usize,
+        pub out_len: usize,
+        pub max_b: usize,
+        pub delay: Duration,
+    }
+
+    impl Engine for MockEngine {
+        fn input_len(&self) -> usize {
+            self.in_len
+        }
+        fn output_len(&self) -> usize {
+            self.out_len
+        }
+        fn max_batch(&self) -> usize {
+            self.max_b
+        }
+        fn infer(&self, inputs: &[f32], n: usize) -> Vec<f32> {
+            if !self.delay.is_zero() {
+                thread::sleep(self.delay);
+            }
+            let mut out = Vec::with_capacity(n * self.out_len);
+            for j in 0..n {
+                let s: f32 = inputs[j * self.in_len..(j + 1) * self.in_len].iter().sum();
+                for k in 0..self.out_len {
+                    out.push(s + k as f32);
+                }
+            }
+            out
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::testutil::MockEngine;
+    use super::*;
+
+    fn mock(delay_ms: u64) -> MockEngine {
+        MockEngine {
+            in_len: 4,
+            out_len: 2,
+            max_b: 8,
+            delay: Duration::from_millis(delay_ms),
+        }
+    }
+
+    #[test]
+    fn serves_single_request() {
+        let server = Server::start(mock(0), BatchPolicy::default());
+        let rx = server.submit(vec![1.0, 2.0, 3.0, 4.0]);
+        let resp = rx.recv_timeout(Duration::from_secs(2)).unwrap();
+        assert_eq!(resp.output, vec![10.0, 11.0]);
+        let stats = server.shutdown();
+        assert_eq!(stats.served, 1);
+    }
+
+    #[test]
+    fn batches_under_load() {
+        let server = Server::start(
+            mock(3),
+            BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(20) },
+        );
+        let rxs: Vec<_> = (0..24).map(|i| server.submit(vec![i as f32; 4])).collect();
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let resp = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+            assert_eq!(resp.output[0], (i * 4) as f32);
+        }
+        let stats = server.shutdown();
+        assert_eq!(stats.served, 24);
+        // batching actually happened (fewer batches than requests)
+        assert!(stats.batches < 24, "batches {}", stats.batches);
+        assert!(stats.mean_batch() > 1.0);
+    }
+
+    #[test]
+    fn shutdown_drains_queue() {
+        let server = Server::start(
+            mock(1),
+            BatchPolicy { max_batch: 64, max_wait: Duration::from_secs(10) },
+        );
+        let rxs: Vec<_> = (0..5).map(|i| server.submit(vec![i as f32; 4])).collect();
+        let stats = server.shutdown(); // deadline far away: drain on shutdown
+        assert_eq!(stats.served, 5);
+        for rx in rxs {
+            assert!(rx.try_recv().is_ok());
+        }
+    }
+
+    #[test]
+    fn latency_stats_populated() {
+        let server = Server::start(mock(0), BatchPolicy::default());
+        for _ in 0..10 {
+            let rx = server.submit(vec![0.0; 4]);
+            let _ = rx.recv_timeout(Duration::from_secs(2)).unwrap();
+        }
+        let stats = server.shutdown();
+        let s = stats.latency_summary().unwrap();
+        assert_eq!(s.n, 10);
+        assert!(s.p99 >= s.p50);
+    }
+}

@@ -1,0 +1,141 @@
+//! Scoped thread-pool executor (tokio is unavailable offline; the
+//! coordinator's parallelism needs — EA population evaluation, batch-sweep
+//! simulation, serving workers — are CPU-bound fork/join, so a small
+//! work-queue pool over std threads is the right tool anyway).
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+/// Fixed-size thread pool executing boxed jobs; `scope_map` provides the
+/// fork/join pattern used across the coordinator.
+pub struct Pool {
+    workers: Vec<thread::JoinHandle<()>>,
+    tx: Option<mpsc::Sender<Job>>,
+}
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+impl Pool {
+    /// `threads == 0` means "number of available CPUs".
+    pub fn new(threads: usize) -> Pool {
+        let threads = if threads == 0 { available_parallelism() } else { threads };
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let workers = (0..threads)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                thread::Builder::new()
+                    .name(format!("fuseconv-worker-{i}"))
+                    .spawn(move || loop {
+                        let job = { rx.lock().unwrap().recv() };
+                        match job {
+                            Ok(job) => job(),
+                            Err(_) => break, // sender dropped: shut down
+                        }
+                    })
+                    .expect("spawn worker")
+            })
+            .collect();
+        Pool { workers, tx: Some(tx) }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Apply `f` to every item, in parallel, preserving order of results.
+    pub fn scope_map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
+    where
+        T: Send + 'static,
+        R: Send + 'static,
+        F: Fn(T) -> R + Send + Sync + 'static,
+    {
+        let n = items.len();
+        let f = Arc::new(f);
+        let (rtx, rrx) = mpsc::channel::<(usize, R)>();
+        for (i, item) in items.into_iter().enumerate() {
+            let f = Arc::clone(&f);
+            let rtx = rtx.clone();
+            self.tx
+                .as_ref()
+                .expect("pool alive")
+                .send(Box::new(move || {
+                    let r = f(item);
+                    // Receiver outlives all jobs within this call; a send
+                    // failure would mean scope_map returned early (it can't).
+                    let _ = rtx.send((i, r));
+                }))
+                .expect("pool send");
+        }
+        drop(rtx);
+        let mut slots: Vec<Option<R>> = (0..n).map(|_| None).collect();
+        for _ in 0..n {
+            let (i, r) = rrx.recv().expect("worker result");
+            slots[i] = Some(r);
+        }
+        slots.into_iter().map(|s| s.expect("all slots filled")).collect()
+    }
+}
+
+impl Drop for Pool {
+    fn drop(&mut self) {
+        drop(self.tx.take()); // close the channel; workers exit on recv Err
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+pub fn available_parallelism() -> usize {
+    thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn map_preserves_order() {
+        let pool = Pool::new(4);
+        let out = pool.scope_map((0..100).collect(), |x: i32| x * x);
+        assert_eq!(out, (0..100).map(|x| x * x).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn actually_parallel_workers() {
+        let pool = Pool::new(3);
+        assert_eq!(pool.threads(), 3);
+        static COUNT: AtomicUsize = AtomicUsize::new(0);
+        let out = pool.scope_map((0..10).collect(), |_x: usize| {
+            COUNT.fetch_add(1, Ordering::SeqCst);
+            thread::sleep(std::time::Duration::from_millis(1));
+            1usize
+        });
+        assert_eq!(out.iter().sum::<usize>(), 10);
+        assert_eq!(COUNT.load(Ordering::SeqCst), 10);
+    }
+
+    #[test]
+    fn empty_input_ok() {
+        let pool = Pool::new(2);
+        let out: Vec<i32> = pool.scope_map(Vec::<i32>::new(), |x| x);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn zero_means_auto() {
+        let pool = Pool::new(0);
+        assert!(pool.threads() >= 1);
+    }
+
+    #[test]
+    fn pool_reusable_across_calls() {
+        let pool = Pool::new(2);
+        for round in 0..5 {
+            let out = pool.scope_map(vec![round; 8], |x: usize| x + 1);
+            assert_eq!(out, vec![round + 1; 8]);
+        }
+    }
+}

@@ -1,0 +1,27 @@
+//! # fuseconv
+//!
+//! A production-grade reproduction of *"Design and Scaffolded Training of an
+//! Efficient DNN Operator for Computer Vision on the Edge"* (Ganesan & Kumar,
+//! 2021): the **FuSeConv** operator, the **ST-OS** systolic-array dataflow,
+//! and **NOS** scaffolded training — as a three-layer Rust + JAX + Pallas
+//! stack.
+//!
+//! * [`sim`] — cycle-level systolic-array simulator (SCALE-Sim-FuSe rebuilt).
+//! * [`nn`] — network IR + model zoo + the FuSe transform.
+//! * [`coordinator`] — network evaluation, EA / OFA-NAS search, serving.
+//! * [`vlsi`] — ST-OS area/power overhead model (Table 2).
+//! * [`runtime`] — PJRT loader executing the AOT-compiled JAX/Pallas
+//!   artifacts (training + inference drivers).
+//! * [`cli`], [`exec`], [`rng`], [`stats`], [`testkit`] — in-repo substrates
+//!   for the offline build environment.
+
+pub mod cli;
+pub mod coordinator;
+pub mod exec;
+pub mod nn;
+pub mod rng;
+pub mod runtime;
+pub mod sim;
+pub mod stats;
+pub mod testkit;
+pub mod vlsi;

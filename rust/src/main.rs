@@ -1,0 +1,367 @@
+//! `fuseconv` — CLI entry point for the FuSeConv/ST-OS/NOS reproduction.
+//!
+//! Subcommands:
+//!   zoo        list networks with MACs/params
+//!   simulate   run one network through the systolic simulator
+//!   speedup    baseline-vs-FuSe comparison (Fig 8a style)
+//!   vlsi       ST-OS area/power overheads (Table 2)
+//!   search-ea  hybrid evolutionary search (Fig 13)
+//!   search-nas OFA-space NAS with FuSe choice (Fig 15)
+//!   trace      per-layer cycle trace CSV
+//!   train      end-to-end NOS pipeline on the AOT artifacts
+//!   serve      batched inference serving demo on the AOT artifacts
+
+use fuseconv::cli::Cli;
+use fuseconv::coordinator::search::{
+    run_ea, run_nas, AccuracyPredictor, EaConfig, NasConfig, TrainMethod,
+};
+use fuseconv::coordinator::{Evaluator, HybridSpace};
+use fuseconv::nn::models;
+use fuseconv::nn::{fuse_all, Variant};
+use fuseconv::sim::{simulate_network, Dataflow, SimConfig};
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some((cmd, rest)) = argv.split_first() else {
+        print_help();
+        std::process::exit(2);
+    };
+    let rest = rest.to_vec();
+    let code = match cmd.as_str() {
+        "zoo" => cmd_zoo(),
+        "simulate" => cmd_simulate(&rest),
+        "speedup" => cmd_speedup(&rest),
+        "vlsi" => cmd_vlsi(),
+        "search-ea" => cmd_search_ea(&rest),
+        "search-nas" => cmd_search_nas(&rest),
+        "trace" => cmd_trace(&rest),
+        "train" => cmd_train(&rest),
+        "serve" => cmd_serve(&rest),
+        "help" | "--help" | "-h" => {
+            print_help();
+            0
+        }
+        other => {
+            eprintln!("unknown subcommand {other:?}\n");
+            print_help();
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn print_help() {
+    println!(
+        "fuseconv — FuSeConv + ST-OS + NOS (Ganesan & Kumar, 2021) reproduction\n\n\
+         usage: fuseconv <subcommand> [options]\n\n\
+         subcommands:\n  \
+         zoo         list model zoo with MACs/params\n  \
+         simulate    simulate one network  (--model, --size, --dataflow os|ws, --no-stos)\n  \
+         speedup     Fig 8a comparison     (--size)\n  \
+         vlsi        Table 2 ST-OS overheads\n  \
+         search-ea   hybrid EA search      (--model, --pop, --iters, --seed)\n  \
+         search-nas  OFA NAS               (--pop, --iters, --seed, --no-fuse)\n  \
+         trace       cycle trace CSV       (--model, --layer)\n  \
+         train       NOS pipeline on artifacts (--steps, --artifacts)\n  \
+         serve       serving demo          (--requests, --artifacts)"
+    );
+}
+
+fn sim_config(args: &fuseconv::cli::Args) -> SimConfig {
+    let size = args.usize("size").unwrap_or(16);
+    let mut cfg = SimConfig::with_size(size);
+    if args.get("dataflow") == Some("ws") {
+        cfg.dataflow = Dataflow::WeightStationary;
+    }
+    if args.flag("no-stos") {
+        cfg.stos = false;
+    }
+    cfg
+}
+
+fn cmd_zoo() -> i32 {
+    println!("{:28} {:>10} {:>11} {:>8}", "network", "MACs (M)", "params (M)", "blocks");
+    for name in models::ZOO_NAMES {
+        let net = models::by_name(name).unwrap();
+        println!(
+            "{:28} {:>10.1} {:>11.2} {:>8}",
+            name,
+            net.macs_millions(),
+            net.params_millions(),
+            net.bottleneck_blocks().len()
+        );
+    }
+    0
+}
+
+fn cmd_simulate(argv: &[String]) -> i32 {
+    let cli = Cli::new("simulate", "simulate a network on the systolic array")
+        .opt("model", "zoo network name", Some("mobilenet-v2"))
+        .opt("size", "array dimension", Some("16"))
+        .opt("dataflow", "os|ws", Some("os"))
+        .flag("no-stos", "disable ST-OS broadcast support")
+        .flag("fuse", "apply FuSe-Half transform first")
+        .flag("layers", "print per-layer detail");
+    let args = match cli.parse(argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}\n{}", cli.usage());
+            return 2;
+        }
+    };
+    let Some(mut net) = models::by_name(&args.str("model")) else {
+        eprintln!("unknown model; try `fuseconv zoo`");
+        return 2;
+    };
+    if args.flag("fuse") {
+        net = fuse_all(&net, Variant::Half);
+    }
+    let cfg = sim_config(&args);
+    let sim = simulate_network(&net, &cfg);
+    println!(
+        "{} on {}: {:.3} ms ({} cycles), util {:.1}%",
+        sim.network,
+        sim.config_label,
+        sim.latency_ms,
+        sim.total_cycles,
+        100.0 * sim.overall_utilization()
+    );
+    for (class, cycles) in sim.cycles_by_class() {
+        println!("  {:?}: {:.1}%", class, 100.0 * cycles as f64 / sim.total_cycles as f64);
+    }
+    if args.flag("layers") {
+        for l in &sim.layers {
+            println!(
+                "  {:32} {:>10} cycles  util {:>5.1}%  dram {:>6.1} B/cyc avg",
+                l.name,
+                l.total_cycles,
+                100.0 * l.utilization,
+                l.mem.dram_bw_avg
+            );
+        }
+    }
+    0
+}
+
+fn cmd_speedup(argv: &[String]) -> i32 {
+    let cli = Cli::new("speedup", "Fig 8a: baseline vs FuSe on the array")
+        .opt("size", "array dimension", Some("16"))
+        .opt("dataflow", "os|ws", Some("os"))
+        .flag("no-stos", "unused (always on for FuSe runs)");
+    let args = cli.parse(argv).unwrap();
+    let cfg = sim_config(&args);
+    println!(
+        "{:22} {:>9} {:>9} {:>9} {:>7} {:>7}",
+        "network", "base ms", "half ms", "full ms", "spd-H", "spd-F"
+    );
+    for net in models::paper_five() {
+        let sb = simulate_network(&net, &cfg);
+        let sh = simulate_network(&fuse_all(&net, Variant::Half), &cfg);
+        let sf = simulate_network(&fuse_all(&net, Variant::Full), &cfg);
+        println!(
+            "{:22} {:>9.3} {:>9.3} {:>9.3} {:>6.2}x {:>6.2}x",
+            net.name,
+            sb.latency_ms,
+            sh.latency_ms,
+            sf.latency_ms,
+            sb.total_cycles as f64 / sh.total_cycles as f64,
+            sb.total_cycles as f64 / sf.total_cycles as f64
+        );
+    }
+    0
+}
+
+fn cmd_vlsi() -> i32 {
+    println!("{:>10} {:>12} {:>12}   (paper Table 2)", "array", "area ovh %", "power ovh %");
+    for s in fuseconv::vlsi::table2_sizes() {
+        let o = fuseconv::vlsi::st_os_overhead(s, s);
+        println!("{:>7}x{:<3} {:>12.1} {:>12.1}", s, s, o.area_pct(), o.power_pct());
+    }
+    0
+}
+
+fn cmd_search_ea(argv: &[String]) -> i32 {
+    let cli = Cli::new("search-ea", "evolutionary hybrid search")
+        .opt("model", "base network", Some("mobilenet-v3-large"))
+        .opt("size", "array dimension", Some("16"))
+        .opt("dataflow", "os|ws", Some("os"))
+        .opt("pop", "population", Some("100"))
+        .opt("iters", "iterations", Some("100"))
+        .opt("seed", "rng seed", Some("42"))
+        .flag("no-stos", "disable ST-OS")
+        .flag("in-place", "predict without NOS");
+    let args = cli.parse(argv).unwrap();
+    let Some(net) = models::by_name(&args.str("model")) else {
+        eprintln!("unknown model");
+        return 2;
+    };
+    let ev = Evaluator::new(sim_config(&args));
+    let space = HybridSpace::new(&net, &ev);
+    let pred = AccuracyPredictor::for_space(&space);
+    let method = if args.flag("in-place") { TrainMethod::InPlace } else { TrainMethod::Nos };
+    let cfg = EaConfig {
+        population: args.usize("pop").unwrap(),
+        iterations: args.usize("iters").unwrap(),
+        seed: args.u64("seed").unwrap(),
+        ..EaConfig::default()
+    };
+    let t0 = std::time::Instant::now();
+    let r = run_ea(&space, &pred, method, &cfg);
+    println!(
+        "# evaluated {} candidates in {:.2}s; frontier:",
+        r.evaluated,
+        t0.elapsed().as_secs_f64()
+    );
+    println!("{:>8} {:>9} {:>10} {:>11}  mask (F=FuSe, d=depthwise)", "acc %", "lat ms", "MACs (M)", "params (M)");
+    for c in &r.frontier {
+        let mask: String = c.mask.iter().map(|&m| if m { 'F' } else { 'd' }).collect();
+        println!(
+            "{:>8.2} {:>9.3} {:>10.1} {:>11.2}  {}",
+            c.acc,
+            c.latency_ms,
+            c.macs as f64 / 1e6,
+            c.params as f64 / 1e6,
+            mask
+        );
+    }
+    0
+}
+
+fn cmd_search_nas(argv: &[String]) -> i32 {
+    let cli = Cli::new("search-nas", "OFA-space NAS")
+        .opt("size", "array dimension", Some("16"))
+        .opt("dataflow", "os|ws", Some("os"))
+        .opt("pop", "population", Some("32"))
+        .opt("iters", "iterations", Some("16"))
+        .opt("seed", "rng seed", Some("42"))
+        .opt("threads", "worker threads (0=auto)", Some("0"))
+        .flag("no-stos", "disable ST-OS")
+        .flag("no-fuse", "search without the FuSe operator (baseline OFA)");
+    let args = cli.parse(argv).unwrap();
+    let ev = std::sync::Arc::new(Evaluator::new(sim_config(&args)));
+    let cfg = NasConfig {
+        population: args.usize("pop").unwrap(),
+        iterations: args.usize("iters").unwrap(),
+        seed: args.u64("seed").unwrap(),
+        threads: args.usize("threads").unwrap(),
+        allow_fuse: !args.flag("no-fuse"),
+        ..NasConfig::default()
+    };
+    let t0 = std::time::Instant::now();
+    let r = run_nas(ev, &cfg);
+    println!(
+        "# evaluated {} genomes in {:.2}s; frontier:",
+        r.evaluated,
+        t0.elapsed().as_secs_f64()
+    );
+    println!("{:>8} {:>9} {:>10} {:>11}", "acc %", "lat ms", "MACs (M)", "params (M)");
+    for c in &r.frontier {
+        println!(
+            "{:>8.2} {:>9.3} {:>10.1} {:>11.2}",
+            c.acc, c.latency_ms, c.macs_millions, c.params_millions
+        );
+    }
+    0
+}
+
+fn cmd_trace(argv: &[String]) -> i32 {
+    let cli = Cli::new("trace", "cycle-trace one layer")
+        .opt("model", "zoo network", Some("mobilenet-v2"))
+        .opt("size", "array dimension", Some("16"))
+        .opt("dataflow", "os|ws", Some("os"))
+        .opt("layer", "layer index", Some("1"))
+        .opt("windows", "max trace windows", Some("64"))
+        .flag("no-stos", "disable ST-OS")
+        .flag("fuse", "FuSe-Half transform first");
+    let args = cli.parse(argv).unwrap();
+    let Some(mut net) = models::by_name(&args.str("model")) else {
+        eprintln!("unknown model");
+        return 2;
+    };
+    if args.flag("fuse") {
+        net = fuse_all(&net, Variant::Half);
+    }
+    let idx = args.usize("layer").unwrap();
+    if idx >= net.layers.len() {
+        eprintln!("layer {idx} out of range ({} layers)", net.layers.len());
+        return 2;
+    }
+    let cfg = sim_config(&args);
+    let fs = fuseconv::sim::engine::schedule_layer(&net.layers[idx], &cfg);
+    let trace = fuseconv::sim::trace::expand(&fs, args.usize("windows").unwrap());
+    print!("# {} / {}\n{}", net.name, net.layers[idx].name, fuseconv::sim::trace::to_csv(&trace));
+    0
+}
+
+fn cmd_train(argv: &[String]) -> i32 {
+    let cli = Cli::new("train", "end-to-end NOS pipeline on AOT artifacts")
+        .opt("artifacts", "artifacts dir", Some("artifacts"))
+        .opt("steps", "training steps per phase", Some("150"))
+        .opt("lr", "initial learning rate", Some("0.06"))
+        .opt("seed", "data seed", Some("17"))
+        .opt("eval", "eval samples", Some("256"));
+    let args = cli.parse(argv).unwrap();
+    match fuseconv::runtime::pipeline::run_nos_pipeline(
+        &args.str("artifacts"),
+        args.usize("steps").unwrap(),
+        args.f64("lr").unwrap() as f32,
+        args.u64("seed").unwrap(),
+        args.usize("eval").unwrap(),
+        true,
+    ) {
+        Ok(_) => 0,
+        Err(e) => {
+            eprintln!("train failed: {e:#}");
+            1
+        }
+    }
+}
+
+fn cmd_serve(argv: &[String]) -> i32 {
+    let cli = Cli::new("serve", "batched serving demo")
+        .opt("artifacts", "artifacts dir", Some("artifacts"))
+        .opt("requests", "number of requests", Some("64"))
+        .opt("max-batch", "dynamic batch cap", Some("8"))
+        .opt("max-wait-ms", "batch deadline", Some("5"));
+    let args = cli.parse(argv).unwrap();
+    use fuseconv::coordinator::batcher::BatchPolicy;
+    use fuseconv::coordinator::server::Server;
+    use fuseconv::runtime::{PjrtEngine, Synth};
+
+    let dir = std::path::PathBuf::from(args.str("artifacts"));
+    if !dir.join("manifest.txt").exists() {
+        eprintln!("artifacts not built; run `make artifacts`");
+        return 1;
+    }
+    let manifest = fuseconv::runtime::Manifest::load(&dir).unwrap();
+    let hw = manifest.const_usize("image_hw").unwrap();
+    let classes = manifest.const_usize("num_classes").unwrap();
+    let policy = BatchPolicy {
+        max_batch: args.usize("max-batch").unwrap(),
+        max_wait: std::time::Duration::from_millis(args.u64("max-wait-ms").unwrap()),
+    };
+    let server = Server::start_with(
+        move || PjrtEngine::from_artifacts(&dir, "student_init.bin").unwrap(),
+        policy,
+    );
+    let n = args.usize("requests").unwrap();
+    let mut synth = Synth::new(hw, classes, 99);
+    let mut pending = Vec::new();
+    for _ in 0..n {
+        let (x, _) = synth.batch(1);
+        pending.push(server.submit(x));
+    }
+    for rx in pending {
+        let _ = rx.recv_timeout(std::time::Duration::from_secs(300)).expect("response");
+    }
+    let stats = server.shutdown();
+    let s = stats.latency_summary().unwrap();
+    println!(
+        "served {} requests in {} batches (mean batch {:.1})",
+        stats.served,
+        stats.batches,
+        stats.mean_batch()
+    );
+    println!("latency_us: p50 {:.0}  p90 {:.0}  p99 {:.0}  max {:.0}", s.p50, s.p90, s.p99, s.max);
+    0
+}

@@ -1,0 +1,229 @@
+//! The FuSeConv in-place replacement transform (paper §3.1, §6.2).
+//!
+//! Given a baseline network with depthwise-separable bottlenecks, rewrite a
+//! selected subset of its blocks so each depthwise K×K becomes the FuSe
+//! row/column pair:
+//!
+//! * `Half` — row filters over C/2 channels, column filters over the other
+//!   C/2; output stays C channels (a true drop-in).
+//! * `Full` — both orientations over all C channels; output becomes 2C, so
+//!   the *following* squeeze-excite and pointwise-project layers widen to 2C
+//!   inputs (this is why Table 3's Full variants have more MACs/params than
+//!   the baselines).
+
+use super::graph::Network;
+use super::layer::Layer;
+use super::ops::OpKind;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Variant {
+    Full,
+    Half,
+}
+
+/// Which bottleneck blocks to convert.
+#[derive(Debug, Clone)]
+pub enum Selection {
+    /// Every block containing a depthwise op.
+    All,
+    /// Exactly these block ids.
+    Blocks(Vec<usize>),
+    /// Bitmask over `net.bottleneck_blocks()` order (the EA genome).
+    Mask(Vec<bool>),
+}
+
+impl Selection {
+    fn selected_blocks(&self, net: &Network) -> Vec<usize> {
+        let bn = net.bottleneck_blocks();
+        match self {
+            Selection::All => bn,
+            Selection::Blocks(ids) => ids.clone(),
+            Selection::Mask(mask) => {
+                assert_eq!(
+                    mask.len(),
+                    bn.len(),
+                    "mask length {} != bottleneck count {}",
+                    mask.len(),
+                    bn.len()
+                );
+                bn.into_iter().zip(mask).filter(|(_, &m)| m).map(|(b, _)| b).collect()
+            }
+        }
+    }
+}
+
+/// Apply the FuSe transform. Returns a new network named
+/// `{base}-FuSe-{Full|Half}[-partial]`.
+pub fn fuse_network(net: &Network, variant: Variant, selection: &Selection) -> Network {
+    let chosen: std::collections::BTreeSet<usize> =
+        selection.selected_blocks(net).into_iter().collect();
+    let total = net.bottleneck_blocks().len();
+    let mut out: Vec<Layer> = Vec::with_capacity(net.layers.len() + chosen.len());
+
+    // When a Full replacement doubles the live channel count we must widen
+    // the next SE and the next pointwise in the same block.
+    let mut widen_in_block: Option<usize> = None;
+
+    for l in &net.layers {
+        if widen_in_block.is_some() && l.block != widen_in_block {
+            // Block ended without a pointwise? That would leave a dangling
+            // 2C tensor — model definitions always project, so treat as bug.
+            panic!("FuSe-Full: block ended before projecting 2C channels back");
+        }
+        match (l.op, l.block) {
+            (OpKind::Depthwise { k, stride, c }, Some(b)) if chosen.contains(&b) => {
+                let (rc, cc, outc) = match variant {
+                    Variant::Full => (c, c, 2 * c),
+                    Variant::Half => {
+                        assert!(c % 2 == 0, "FuSe-Half on odd channel count {c}");
+                        (c / 2, c / 2, c)
+                    }
+                };
+                let mut row = Layer::new(
+                    format!("{}.fuse_row", l.name),
+                    OpKind::FuseRow { k, stride, c: rc },
+                    l.h,
+                    l.w,
+                )
+                .with_act(l.act);
+                row.block = l.block;
+                let mut col = Layer::new(
+                    format!("{}.fuse_col", l.name),
+                    OpKind::FuseCol { k, stride, c: cc },
+                    l.h,
+                    l.w,
+                )
+                .with_act(l.act);
+                col.block = l.block;
+                out.push(row);
+                out.push(col);
+                if outc == 2 * c {
+                    widen_in_block = Some(b);
+                }
+            }
+            (OpKind::SqueezeExcite { c, reduced }, _) if widen_in_block.is_some() => {
+                let mut se = l.clone();
+                se.op = OpKind::SqueezeExcite { c: 2 * c, reduced };
+                out.push(se);
+            }
+            (OpKind::Pointwise { cin, cout }, _) if widen_in_block.is_some() => {
+                let mut pw = l.clone();
+                pw.op = OpKind::Pointwise { cin: 2 * cin, cout };
+                out.push(pw);
+                widen_in_block = None; // projection restores the width
+            }
+            _ => out.push(l.clone()),
+        }
+    }
+    assert!(widen_in_block.is_none(), "FuSe-Full: unterminated widening");
+
+    let suffix = match variant {
+        Variant::Full => "FuSe-Full",
+        Variant::Half => "FuSe-Half",
+    };
+    let partial = if chosen.len() < total {
+        format!("-{}of{}", chosen.len(), total)
+    } else {
+        String::new()
+    };
+    Network {
+        name: format!("{}-{}{}", net.name, suffix, partial),
+        layers: out,
+        num_blocks: net.num_blocks,
+    }
+}
+
+/// Convenience: convert every depthwise block.
+pub fn fuse_all(net: &Network, variant: Variant) -> Network {
+    fuse_network(net, variant, &Selection::All)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::graph::NetBuilder;
+    use crate::nn::ops::Act;
+
+    /// Two-block toy net shaped like MobileNetV2 bottlenecks.
+    fn toy() -> Network {
+        let mut b = NetBuilder::new("toy", 32, 3);
+        b.conv("stem", 3, 2, 16, Act::Relu6);
+        b.begin_block();
+        b.pw("b0.expand", 48, Act::Relu6).dw("b0.dw", 3, 1, Act::Relu6).pw("b0.project", 24, Act::None);
+        b.end_block();
+        b.begin_block();
+        b.pw("b1.expand", 144, Act::Relu6)
+            .dw("b1.dw", 5, 2, Act::Relu6)
+            .se("b1.se", 36)
+            .pw("b1.project", 32, Act::None);
+        b.end_block();
+        b.global_pool("pool").fc("fc", 10, Act::None);
+        b.build()
+    }
+
+    #[test]
+    fn half_is_dropin_same_shapes() {
+        let base = toy();
+        let half = fuse_all(&base, Variant::Half);
+        // one extra layer per converted dw (row+col replaces dw)
+        assert_eq!(half.layers.len(), base.layers.len() + 2);
+        // final cursor equivalence: last layers identical
+        assert_eq!(half.layers.last().unwrap().op, base.layers.last().unwrap().op);
+        // params strictly fewer (K²C -> KC per dw)
+        assert!(half.total_params() < base.total_params());
+        assert!(half.total_macs() < base.total_macs());
+        assert!(half.name.contains("FuSe-Half"));
+    }
+
+    #[test]
+    fn full_widens_se_and_project() {
+        let base = toy();
+        let full = fuse_all(&base, Variant::Full);
+        // SE widened to 2C
+        let se = full.layers.iter().find(|l| l.name == "b1.se").unwrap();
+        assert_eq!(se.op, OpKind::SqueezeExcite { c: 288, reduced: 36 });
+        // project widened input
+        let pj = full.layers.iter().find(|l| l.name == "b1.project").unwrap();
+        assert_eq!(pj.op, OpKind::Pointwise { cin: 288, cout: 32 });
+        // Full has MORE macs+params than baseline (paper Table 3)
+        assert!(full.total_macs() > base.total_macs());
+        assert!(full.total_params() > base.total_params());
+    }
+
+    #[test]
+    fn partial_selection_converts_subset() {
+        let base = toy();
+        let p = fuse_network(&base, Variant::Half, &Selection::Blocks(vec![1]));
+        assert!(p.layers.iter().any(|l| l.name == "b0.dw")); // untouched
+        assert!(p.layers.iter().any(|l| l.name == "b1.dw.fuse_row"));
+        assert!(p.name.contains("1of2"));
+    }
+
+    #[test]
+    fn mask_selection_matches_blocks() {
+        let base = toy();
+        let a = fuse_network(&base, Variant::Half, &Selection::Mask(vec![false, true]));
+        let b = fuse_network(&base, Variant::Half, &Selection::Blocks(vec![1]));
+        assert_eq!(a.total_macs(), b.total_macs());
+        assert_eq!(a.layers.len(), b.layers.len());
+    }
+
+    #[test]
+    fn half_macs_reduction_is_k_fold_on_dw() {
+        use crate::nn::ops::OpClass;
+        let base = toy();
+        let half = fuse_all(&base, Variant::Half);
+        let dw_macs = base.macs_by_class()[&OpClass::Depthwise];
+        let fuse_macs = half.macs_by_class()[&OpClass::FuSe];
+        // both blocks use k=3 and k=5: fuse = sum(dw_i / k_i); verify bounds
+        assert!(fuse_macs * 3 <= dw_macs);
+        assert!(fuse_macs * 5 >= dw_macs);
+    }
+
+    #[test]
+    #[should_panic(expected = "mask length")]
+    fn wrong_mask_length_panics() {
+        let base = toy();
+        fuse_network(&base, Variant::Half, &Selection::Mask(vec![true]));
+    }
+}

@@ -1,0 +1,263 @@
+//! Network = named, ordered list of layers plus block structure.
+//!
+//! The builder tracks the "cursor" (current spatial dims + channels) so model
+//! definitions read like the tables in the MobileNet/MnasNet papers, and
+//! mistakes in chaining (channel mismatches) fail loudly at build time.
+
+use super::layer::Layer;
+use super::ops::{Act, OpClass, OpKind};
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub struct Network {
+    pub name: String,
+    pub layers: Vec<Layer>,
+    /// Number of mobile-bottleneck blocks (contiguous `block` ids).
+    pub num_blocks: usize,
+}
+
+impl Network {
+    pub fn total_macs(&self) -> u64 {
+        self.layers.iter().map(|l| l.macs()).sum()
+    }
+
+    pub fn total_params(&self) -> u64 {
+        self.layers.iter().map(|l| l.params()).sum()
+    }
+
+    pub fn macs_millions(&self) -> f64 {
+        self.total_macs() as f64 / 1e6
+    }
+
+    pub fn params_millions(&self) -> f64 {
+        self.total_params() as f64 / 1e6
+    }
+
+    /// MACs per operator class (Fig 9a attribution).
+    pub fn macs_by_class(&self) -> BTreeMap<OpClass, u64> {
+        let mut m = BTreeMap::new();
+        for l in &self.layers {
+            *m.entry(l.class()).or_insert(0) += l.macs();
+        }
+        m
+    }
+
+    /// Layers of a given bottleneck block.
+    pub fn block_layers(&self, b: usize) -> Vec<&Layer> {
+        self.layers.iter().filter(|l| l.block == Some(b)).collect()
+    }
+
+    /// Indices of blocks that contain a depthwise or FuSe op (i.e. the
+    /// replaceable mobile-bottleneck blocks of the paper's search space).
+    pub fn bottleneck_blocks(&self) -> Vec<usize> {
+        (0..self.num_blocks)
+            .filter(|&b| {
+                self.layers.iter().any(|l| {
+                    l.block == Some(b)
+                        && matches!(l.class(), OpClass::Depthwise | OpClass::FuSe)
+                })
+            })
+            .collect()
+    }
+}
+
+/// Builder that threads spatial dims + channels through the definition.
+pub struct NetBuilder {
+    name: String,
+    h: usize,
+    w: usize,
+    c: usize,
+    layers: Vec<Layer>,
+    block: Option<usize>,
+    next_block: usize,
+}
+
+impl NetBuilder {
+    pub fn new(name: impl Into<String>, input_hw: usize, input_c: usize) -> NetBuilder {
+        NetBuilder {
+            name: name.into(),
+            h: input_hw,
+            w: input_hw,
+            c: input_c,
+            layers: Vec::new(),
+            block: None,
+            next_block: 0,
+        }
+    }
+
+    pub fn cursor(&self) -> (usize, usize, usize) {
+        (self.h, self.w, self.c)
+    }
+
+    fn push(&mut self, name: String, op: OpKind, act: Act) -> &mut Self {
+        assert_eq!(
+            op.cin(),
+            self.c,
+            "{}: layer {} expects cin={} but cursor has {} channels",
+            self.name,
+            name,
+            op.cin(),
+            self.c
+        );
+        let mut l = Layer::new(name, op, self.h, self.w).with_act(act);
+        l.block = self.block;
+        self.h = l.out_h();
+        self.w = l.out_w();
+        self.c = l.out_c();
+        self.layers.push(l);
+        self
+    }
+
+    /// Begin a mobile-bottleneck block; layers added until `end_block` share
+    /// the block id.
+    pub fn begin_block(&mut self) -> usize {
+        let b = self.next_block;
+        self.block = Some(b);
+        self.next_block += 1;
+        b
+    }
+
+    pub fn end_block(&mut self) {
+        self.block = None;
+    }
+
+    pub fn conv(&mut self, name: &str, k: usize, stride: usize, cout: usize, act: Act) -> &mut Self {
+        let cin = self.c;
+        self.push(name.into(), OpKind::Conv2d { k, stride, cin, cout }, act)
+    }
+
+    pub fn dw(&mut self, name: &str, k: usize, stride: usize, act: Act) -> &mut Self {
+        let c = self.c;
+        self.push(name.into(), OpKind::Depthwise { k, stride, c }, act)
+    }
+
+    pub fn pw(&mut self, name: &str, cout: usize, act: Act) -> &mut Self {
+        let cin = self.c;
+        self.push(name.into(), OpKind::Pointwise { cin, cout }, act)
+    }
+
+    /// FuSe pair (row+col). `full`: both orientations over all channels
+    /// (output 2C); otherwise Half (C/2 + C/2, output C). Emitted as two
+    /// layers that the simulator schedules independently; the *cursor*
+    /// channel count after the pair is 2C (Full) or C (Half).
+    pub fn fuse(&mut self, name: &str, k: usize, stride: usize, full: bool, act: Act) -> &mut Self {
+        let c = self.c;
+        if full {
+            let row = OpKind::FuseRow { k, stride, c };
+            let col = OpKind::FuseCol { k, stride, c };
+            // Row half:
+            let mut l = Layer::new(format!("{name}.row"), row, self.h, self.w).with_act(act);
+            l.block = self.block;
+            self.layers.push(l);
+            let mut l = Layer::new(format!("{name}.col"), col, self.h, self.w).with_act(act);
+            l.block = self.block;
+            // advance cursor once (both see the same input)
+            self.h = l.out_h();
+            self.w = l.out_w();
+            self.c = 2 * c;
+            self.layers.push(l);
+        } else {
+            assert!(c % 2 == 0, "FuSe-Half requires even channels, got {c}");
+            let row = OpKind::FuseRow { k, stride, c: c / 2 };
+            let col = OpKind::FuseCol { k, stride, c: c / 2 };
+            let mut l = Layer::new(format!("{name}.row"), row, self.h, self.w).with_act(act);
+            l.block = self.block;
+            self.layers.push(l);
+            let mut l = Layer::new(format!("{name}.col"), col, self.h, self.w).with_act(act);
+            l.block = self.block;
+            self.h = l.out_h();
+            self.w = l.out_w();
+            self.c = c;
+            self.layers.push(l);
+        }
+        self
+    }
+
+    pub fn se(&mut self, name: &str, reduced: usize) -> &mut Self {
+        let c = self.c;
+        self.push(name.into(), OpKind::SqueezeExcite { c, reduced }, Act::HSigmoid)
+    }
+
+    pub fn add(&mut self, name: &str) -> &mut Self {
+        let c = self.c;
+        self.push(name.into(), OpKind::Add { c }, Act::None)
+    }
+
+    pub fn global_pool(&mut self, name: &str) -> &mut Self {
+        let c = self.c;
+        self.push(name.into(), OpKind::GlobalPool { c }, Act::None)
+    }
+
+    pub fn fc(&mut self, name: &str, cout: usize, act: Act) -> &mut Self {
+        let cin = self.c;
+        self.push(name.into(), OpKind::Fc { cin, cout }, act)
+    }
+
+    pub fn build(&mut self) -> Network {
+        Network {
+            name: std::mem::take(&mut self.name),
+            layers: std::mem::take(&mut self.layers),
+            num_blocks: self.next_block,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_threads_shapes() {
+        let mut b = NetBuilder::new("t", 32, 3);
+        b.conv("stem", 3, 2, 8, Act::Relu);
+        assert_eq!(b.cursor(), (16, 16, 8));
+        b.dw("dw1", 3, 2, Act::Relu).pw("pw1", 16, Act::None);
+        assert_eq!(b.cursor(), (8, 8, 16));
+        let net = b.build();
+        assert_eq!(net.layers.len(), 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "expects cin")]
+    fn channel_mismatch_panics() {
+        let mut b = NetBuilder::new("t", 32, 3);
+        b.push("bad".into(), OpKind::Pointwise { cin: 7, cout: 8 }, Act::None);
+    }
+
+    #[test]
+    fn fuse_half_keeps_channels_full_doubles() {
+        let mut b = NetBuilder::new("t", 16, 8);
+        b.fuse("f", 3, 1, false, Act::Relu);
+        assert_eq!(b.cursor(), (16, 16, 8));
+        let mut b2 = NetBuilder::new("t2", 16, 8);
+        b2.fuse("f", 3, 1, true, Act::Relu);
+        assert_eq!(b2.cursor(), (16, 16, 16));
+    }
+
+    #[test]
+    fn blocks_are_tracked() {
+        let mut b = NetBuilder::new("t", 32, 8);
+        let blk = b.begin_block();
+        b.pw("expand", 48, Act::Relu6).dw("dw", 3, 1, Act::Relu6).pw("project", 8, Act::None);
+        b.end_block();
+        b.global_pool("pool");
+        let net = b.build();
+        assert_eq!(net.num_blocks, 1);
+        assert_eq!(net.block_layers(blk).len(), 3);
+        assert_eq!(net.bottleneck_blocks(), vec![0]);
+        assert_eq!(net.layers.last().unwrap().block, None);
+    }
+
+    #[test]
+    fn macs_by_class_splits() {
+        let mut b = NetBuilder::new("t", 32, 8);
+        b.begin_block();
+        b.dw("dw", 3, 1, Act::Relu).pw("pw", 16, Act::None);
+        b.end_block();
+        let net = b.build();
+        let by = net.macs_by_class();
+        assert_eq!(by[&OpClass::Depthwise], 32 * 32 * 9 * 8);
+        assert_eq!(by[&OpClass::Pointwise], 32 * 32 * 8 * 16);
+        assert_eq!(net.total_macs(), by.values().sum::<u64>());
+    }
+}

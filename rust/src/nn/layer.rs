@@ -1,0 +1,161 @@
+//! A layer = one operator applied at a concrete spatial position in the
+//! network, with exact output-shape / MAC accounting. These are the records
+//! the simulator consumes and the quantities Tables 3–4 report.
+
+use super::ops::{Act, OpClass, OpKind};
+
+/// Concrete layer instance: operator + input spatial dims.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Layer {
+    pub name: String,
+    pub op: OpKind,
+    /// Input feature-map height/width (spatial), before padding.
+    pub h: usize,
+    pub w: usize,
+    pub act: Act,
+    /// Index of the mobile-bottleneck block this layer belongs to
+    /// (None for stem/head layers). Used by Fig 8(b)/Fig 10 grouping.
+    pub block: Option<usize>,
+}
+
+/// SAME-style padding as used by all the paper's networks: output spatial
+/// size = ceil(input / stride).
+fn out_dim(input: usize, stride: usize) -> usize {
+    (input + stride - 1) / stride
+}
+
+impl Layer {
+    pub fn new(name: impl Into<String>, op: OpKind, h: usize, w: usize) -> Layer {
+        Layer { name: name.into(), op, h, w, act: Act::None, block: None }
+    }
+
+    pub fn with_act(mut self, act: Act) -> Layer {
+        self.act = act;
+        self
+    }
+
+    pub fn in_block(mut self, b: usize) -> Layer {
+        self.block = Some(b);
+        self
+    }
+
+    /// Output spatial height.
+    pub fn out_h(&self) -> usize {
+        match self.op {
+            OpKind::Fc { .. } | OpKind::GlobalPool { .. } => 1,
+            OpKind::SqueezeExcite { .. } | OpKind::Add { .. } => self.h,
+            op => out_dim(self.h, op.stride()),
+        }
+    }
+
+    /// Output spatial width.
+    pub fn out_w(&self) -> usize {
+        match self.op {
+            OpKind::Fc { .. } | OpKind::GlobalPool { .. } => 1,
+            OpKind::SqueezeExcite { .. } | OpKind::Add { .. } => self.w,
+            op => out_dim(self.w, op.stride()),
+        }
+    }
+
+    pub fn out_c(&self) -> usize {
+        self.op.cout()
+    }
+
+    /// Multiply-accumulate count (the unit Tables 3–4 use; one MAC = one
+    /// multiply + one add).
+    pub fn macs(&self) -> u64 {
+        let (oh, ow) = (self.out_h() as u64, self.out_w() as u64);
+        match self.op {
+            OpKind::Conv2d { k, cin, cout, .. } => oh * ow * (k * k * cin * cout) as u64,
+            OpKind::Depthwise { k, c, .. } => oh * ow * (k * k * c) as u64,
+            OpKind::Pointwise { cin, cout } => oh * ow * (cin * cout) as u64,
+            OpKind::FuseRow { k, c, .. } | OpKind::FuseCol { k, c, .. } => {
+                oh * ow * (k * c) as u64
+            }
+            OpKind::Fc { cin, cout } => (cin * cout) as u64,
+            // pool/add are not MACs; SE's two FCs are.
+            OpKind::GlobalPool { .. } | OpKind::Add { .. } => 0,
+            OpKind::SqueezeExcite { c, reduced } => 2 * (c * reduced) as u64,
+        }
+    }
+
+    pub fn params(&self) -> u64 {
+        self.op.params()
+    }
+
+    pub fn class(&self) -> OpClass {
+        self.op.class()
+    }
+
+    /// Input feature-map element count (for SRAM/DRAM footprint modelling).
+    pub fn ifmap_elems(&self) -> u64 {
+        (self.h * self.w) as u64 * self.op.cin() as u64
+    }
+
+    /// Output feature-map element count.
+    pub fn ofmap_elems(&self) -> u64 {
+        (self.out_h() * self.out_w()) as u64 * self.out_c() as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn same_padding_output_dims() {
+        // stride-2 conv over 224 -> 112 (SAME)
+        let l = Layer::new("stem", OpKind::Conv2d { k: 3, stride: 2, cin: 3, cout: 32 }, 224, 224);
+        assert_eq!((l.out_h(), l.out_w(), l.out_c()), (112, 112, 32));
+        // stride-2 over odd dim: 7 -> 4
+        let l = Layer::new("x", OpKind::Depthwise { k: 3, stride: 2, c: 8 }, 7, 7);
+        assert_eq!(l.out_h(), 4);
+    }
+
+    #[test]
+    fn mac_formulas_match_paper_section2() {
+        // Paper §2.1: standard conv NMC'K²C; depthwise-separable NMC(K²+C').
+        let (h, w, c, cp, k) = (56usize, 56usize, 64usize, 128usize, 3usize);
+        let std_conv = Layer::new("c", OpKind::Conv2d { k, stride: 1, cin: c, cout: cp }, h, w);
+        assert_eq!(std_conv.macs(), (h * w * cp * k * k * c) as u64);
+
+        let dw = Layer::new("d", OpKind::Depthwise { k, stride: 1, c }, h, w);
+        let pw = Layer::new("p", OpKind::Pointwise { cin: c, cout: cp }, h, w);
+        assert_eq!(dw.macs() + pw.macs(), (h * w * c * (k * k + cp)) as u64);
+    }
+
+    #[test]
+    fn fuse_half_mac_reduction_matches_paper_3_2_1() {
+        // Paper §3.2.1: NMC(K²+C') -> NMC(K+C').
+        let (h, w, c, cp, k) = (28usize, 28usize, 96usize, 192usize, 3usize);
+        let row = Layer::new("r", OpKind::FuseRow { k, stride: 1, c: c / 2 }, h, w);
+        let col = Layer::new("c", OpKind::FuseCol { k, stride: 1, c: c / 2 }, h, w);
+        let pw = Layer::new("p", OpKind::Pointwise { cin: c, cout: cp }, h, w);
+        assert_eq!(row.macs() + col.macs() + pw.macs(), (h * w * c * (k + cp)) as u64);
+    }
+
+    #[test]
+    fn footprints() {
+        let l = Layer::new("p", OpKind::Pointwise { cin: 16, cout: 32 }, 8, 8);
+        assert_eq!(l.ifmap_elems(), 8 * 8 * 16);
+        assert_eq!(l.ofmap_elems(), 8 * 8 * 32);
+    }
+
+    #[test]
+    fn fc_and_pool_shapes() {
+        let p = Layer::new("pool", OpKind::GlobalPool { c: 1280 }, 7, 7);
+        assert_eq!((p.out_h(), p.out_w(), p.out_c()), (1, 1, 1280));
+        assert_eq!(p.macs(), 0);
+        let f = Layer::new("fc", OpKind::Fc { cin: 1280, cout: 1000 }, 1, 1);
+        assert_eq!(f.macs(), 1_280_000);
+        assert_eq!(f.params(), 1_281_000);
+    }
+
+    #[test]
+    fn se_block_macs() {
+        let se = Layer::new("se", OpKind::SqueezeExcite { c: 64, reduced: 16 }, 28, 28);
+        assert_eq!(se.macs(), 2 * 64 * 16);
+        assert_eq!(se.out_c(), 64);
+        assert_eq!(se.out_h(), 28);
+    }
+}

@@ -1,0 +1,14 @@
+//! Network IR: operators, layers, graphs, the FuSeConv transform, and the
+//! model zoo. This is the shared vocabulary between the simulator (S1), the
+//! coordinator's search (S5/S6), and the report generators.
+
+pub mod fuse;
+pub mod graph;
+pub mod layer;
+pub mod models;
+pub mod ops;
+
+pub use fuse::{fuse_all, fuse_network, Selection, Variant};
+pub use graph::{NetBuilder, Network};
+pub use layer::Layer;
+pub use ops::{Act, OpClass, OpKind};

@@ -1,0 +1,89 @@
+//! MnasNet-B1 (Tan et al., 2019), 224×224, width 1.0.
+//! Paper Table 3 reference: 73.5 % top-1, 325 M MACs, 4.38 M params.
+
+use super::mbconv;
+use crate::nn::graph::{NetBuilder, Network};
+use crate::nn::ops::Act;
+
+/// MnasNet-B1 stages: (kernel, expansion, channels, repeats, first-stride).
+/// From the MnasNet paper Fig 7(a); B1 has no squeeze-excite.
+const CFG: &[(usize, usize, usize, usize, usize)] = &[
+    (3, 3, 24, 3, 2),
+    (5, 3, 40, 3, 2),
+    (5, 6, 80, 3, 2),
+    (3, 6, 96, 2, 1),
+    (5, 6, 192, 4, 2),
+    (3, 6, 320, 1, 1),
+];
+
+pub fn build() -> Network {
+    let mut b = NetBuilder::new("MnasNet-B1", 224, 3);
+    b.conv("stem", 3, 2, 32, Act::Relu);
+    // SepConv block: dw3x3 + pw -> 16 (expansion 1)
+    b.begin_block();
+    b.dw("sep.dw", 3, 1, Act::Relu);
+    b.pw("sep.pw", 16, Act::None);
+    b.end_block();
+    let mut idx = 0;
+    for &(k, t, c, n, s) in CFG {
+        for rep in 0..n {
+            let (_, _, cin) = b.cursor();
+            let stride = if rep == 0 { s } else { 1 };
+            mbconv(&mut b, &format!("b{idx}"), k, stride, cin * t, c, 0, Act::Relu);
+            idx += 1;
+        }
+    }
+    b.conv("head", 1, 1, 1280, Act::Relu);
+    b.global_pool("pool");
+    b.fc("fc", 1000, Act::None);
+    b.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::fuse::{fuse_all, Variant};
+
+    #[test]
+    fn macs_and_params_match_table3() {
+        let net = build();
+        assert!((305.0..=340.0).contains(&net.macs_millions()), "{}", net.macs_millions());
+        assert!((4.1..=4.6).contains(&net.params_millions()), "{}", net.params_millions());
+    }
+
+    #[test]
+    fn seventeen_bottlenecks() {
+        // sepconv + 16 MBConv blocks
+        assert_eq!(build().bottleneck_blocks().len(), 17);
+    }
+
+    #[test]
+    fn fuse_half_matches_table3() {
+        // Table 3: 305 M MACs, 4.25 M params.
+        let half = fuse_all(&build(), Variant::Half);
+        assert!((290.0..=325.0).contains(&half.macs_millions()), "{}", half.macs_millions());
+        assert!((4.0..=4.5).contains(&half.params_millions()));
+    }
+
+    #[test]
+    fn fuse_full_matches_table3() {
+        // Table 3: 440 M MACs, 5.66 M params.
+        let full = fuse_all(&build(), Variant::Full);
+        assert!((410.0..=470.0).contains(&full.macs_millions()), "{}", full.macs_millions());
+        assert!((5.3..=6.0).contains(&full.params_millions()), "{}", full.params_millions());
+    }
+
+    #[test]
+    fn kernel_five_stages_present() {
+        use crate::nn::ops::OpKind;
+        let ks: Vec<usize> = build()
+            .layers
+            .iter()
+            .filter_map(|l| match l.op {
+                OpKind::Depthwise { k, .. } => Some(k),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(ks.iter().filter(|&&k| k == 5).count(), 10);
+    }
+}

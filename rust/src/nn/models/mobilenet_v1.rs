@@ -1,0 +1,80 @@
+//! MobileNet-V1 (Howard et al., 2017), 224×224, width 1.0.
+//! Paper Table 3 reference: 70.60 % top-1, 589 M MACs, 4.23 M params.
+
+use crate::nn::graph::{NetBuilder, Network};
+use crate::nn::ops::Act;
+
+/// Depthwise-separable "block": dw 3×3 (stride s) + pw to `cout`.
+fn sep(b: &mut NetBuilder, name: &str, stride: usize, cout: usize) {
+    b.begin_block();
+    b.dw(&format!("{name}.dw"), 3, stride, Act::Relu);
+    b.pw(&format!("{name}.pw"), cout, Act::Relu);
+    b.end_block();
+}
+
+pub fn build() -> Network {
+    let mut b = NetBuilder::new("MobileNet-V1", 224, 3);
+    b.conv("stem", 3, 2, 32, Act::Relu);
+    sep(&mut b, "sep1", 1, 64);
+    sep(&mut b, "sep2", 2, 128);
+    sep(&mut b, "sep3", 1, 128);
+    sep(&mut b, "sep4", 2, 256);
+    sep(&mut b, "sep5", 1, 256);
+    sep(&mut b, "sep6", 2, 512);
+    for i in 0..5 {
+        sep(&mut b, &format!("sep7_{i}"), 1, 512);
+    }
+    sep(&mut b, "sep12", 2, 1024);
+    sep(&mut b, "sep13", 1, 1024);
+    b.global_pool("pool");
+    b.fc("fc", 1000, Act::None);
+    b.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::fuse::{fuse_all, Variant};
+
+    #[test]
+    fn macs_and_params_match_table3() {
+        let net = build();
+        let macs_m = net.macs_millions();
+        let params_m = net.params_millions();
+        // Paper: 589 M MACs (the canonical 569 M figure counts slightly
+        // differently), 4.23 M params. Allow 5 %.
+        assert!((560.0..=620.0).contains(&macs_m), "MACs {macs_m}");
+        assert!((4.0..=4.5).contains(&params_m), "params {params_m}");
+    }
+
+    #[test]
+    fn thirteen_bottlenecks() {
+        assert_eq!(build().bottleneck_blocks().len(), 13);
+    }
+
+    #[test]
+    fn fuse_half_close_to_table3() {
+        // Table 3: MobileNet-V1 FuSe-Half = 573 M MACs, 4.20 M params.
+        let half = fuse_all(&build(), Variant::Half);
+        assert!((540.0..=600.0).contains(&half.macs_millions()), "{}", half.macs_millions());
+        assert!((3.9..=4.45).contains(&half.params_millions()));
+    }
+
+    #[test]
+    fn fuse_full_close_to_table3() {
+        // Table 3: FuSe-Full = 1122 M MACs, 7.36 M params (pointwise inputs
+        // double).
+        let full = fuse_all(&build(), Variant::Full);
+        assert!((1000.0..=1200.0).contains(&full.macs_millions()), "{}", full.macs_millions());
+        assert!((6.8..=7.9).contains(&full.params_millions()), "{}", full.params_millions());
+    }
+
+    #[test]
+    fn final_feature_map_is_7x7() {
+        let net = build();
+        // layer before pool
+        let pre_pool = &net.layers[net.layers.len() - 3];
+        assert_eq!((pre_pool.out_h(), pre_pool.out_w()), (7, 7));
+        assert_eq!(pre_pool.out_c(), 1024);
+    }
+}

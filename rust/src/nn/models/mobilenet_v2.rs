@@ -1,0 +1,95 @@
+//! MobileNet-V2 (Sandler et al., 2018), 224×224, width 1.0.
+//! Paper Table 3 reference: 72.0 % top-1, 315 M MACs, 3.50 M params.
+
+use super::mbconv;
+use crate::nn::graph::{NetBuilder, Network};
+use crate::nn::ops::Act;
+
+/// Inverted-residual settings from the MobileNetV2 paper Table 2:
+/// (expansion t, channels c, repeats n, first-stride s).
+const CFG: &[(usize, usize, usize, usize)] = &[
+    (1, 16, 1, 1),
+    (6, 24, 2, 2),
+    (6, 32, 3, 2),
+    (6, 64, 4, 2),
+    (6, 96, 3, 1),
+    (6, 160, 3, 2),
+    (6, 320, 1, 1),
+];
+
+pub fn build() -> Network {
+    let mut b = NetBuilder::new("MobileNet-V2", 224, 3);
+    b.conv("stem", 3, 2, 32, Act::Relu6);
+    let mut idx = 0;
+    for &(t, c, n, s) in CFG {
+        for rep in 0..n {
+            let (_, _, cin) = b.cursor();
+            let stride = if rep == 0 { s } else { 1 };
+            mbconv(&mut b, &format!("b{idx}"), 3, stride, cin * t, c, 0, Act::Relu6);
+            idx += 1;
+        }
+    }
+    b.conv("head", 1, 1, 1280, Act::Relu6);
+    b.global_pool("pool");
+    b.fc("fc", 1000, Act::None);
+    b.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::fuse::{fuse_all, Variant};
+    use crate::nn::ops::OpClass;
+
+    #[test]
+    fn macs_and_params_match_table3() {
+        let net = build();
+        assert!((295.0..=330.0).contains(&net.macs_millions()), "{}", net.macs_millions());
+        assert!((3.3..=3.7).contains(&net.params_millions()), "{}", net.params_millions());
+    }
+
+    #[test]
+    fn seventeen_bottlenecks() {
+        assert_eq!(build().bottleneck_blocks().len(), 17);
+    }
+
+    #[test]
+    fn fuse_half_matches_table3() {
+        // Table 3: 300 M MACs, 3.46 M params.
+        let half = fuse_all(&build(), Variant::Half);
+        assert!((285.0..=315.0).contains(&half.macs_millions()), "{}", half.macs_millions());
+        assert!((3.25..=3.65).contains(&half.params_millions()));
+    }
+
+    #[test]
+    fn fuse_full_matches_table3() {
+        // Table 3: 430 M MACs, 4.46 M params.
+        let full = fuse_all(&build(), Variant::Full);
+        assert!((400.0..=460.0).contains(&full.macs_millions()), "{}", full.macs_millions());
+        assert!((4.2..=4.8).contains(&full.params_millions()), "{}", full.params_millions());
+    }
+
+    #[test]
+    fn depthwise_macs_are_small_fraction() {
+        // The §2 motivation: dw is ~10 % of MACs yet dominates latency.
+        let net = build();
+        let by = net.macs_by_class();
+        let dw = by[&OpClass::Depthwise] as f64;
+        let total = net.total_macs() as f64;
+        assert!(dw / total < 0.15, "dw fraction {}", dw / total);
+        assert!(dw / total > 0.02);
+    }
+
+    #[test]
+    fn spatial_pipeline_dims() {
+        let net = build();
+        // the last bottleneck runs at 7x7
+        let last_dw = net
+            .layers
+            .iter()
+            .filter(|l| matches!(l.class(), OpClass::Depthwise))
+            .next_back()
+            .unwrap();
+        assert_eq!((last_dw.h, last_dw.w), (7, 7));
+    }
+}

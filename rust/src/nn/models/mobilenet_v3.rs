@@ -1,0 +1,127 @@
+//! MobileNet-V3 Small & Large (Howard et al., 2019), 224×224, width 1.0.
+//! Paper Table 3 reference: Small 67.4 % / 66 M MACs / 2.93 M params,
+//! Large 75.2 % / 238 M MACs / 5.47 M params.
+
+use super::mbconv;
+use crate::nn::graph::{NetBuilder, Network};
+use crate::nn::ops::Act;
+
+use Act::{HSwish as HS, Relu as RE};
+
+/// Row of the MobileNetV3 spec tables: (k, exp, out, se, act, stride).
+struct Row(usize, usize, usize, bool, Act, usize);
+
+fn build_from(name: &str, rows: &[Row], last_conv: usize, head: usize) -> Network {
+    let mut b = NetBuilder::new(name, 224, 3);
+    b.conv("stem", 3, 2, 16, HS);
+    for (i, &Row(k, exp, out, se, act, s)) in rows.iter().enumerate() {
+        // V3 SE reduces the *expanded* channels by 4 (nearest multiple of 8).
+        let se_reduced = if se { ((exp / 4) + 7) / 8 * 8 } else { 0 };
+        mbconv(&mut b, &format!("b{i}"), k, s, exp, out, se_reduced, act);
+    }
+    b.conv("last_conv", 1, 1, last_conv, HS);
+    b.global_pool("pool");
+    b.fc("head", head, HS);
+    b.fc("fc", 1000, Act::None);
+    b.build()
+}
+
+pub fn large() -> Network {
+    let rows = [
+        Row(3, 16, 16, false, RE, 1),
+        Row(3, 64, 24, false, RE, 2),
+        Row(3, 72, 24, false, RE, 1),
+        Row(5, 72, 40, true, RE, 2),
+        Row(5, 120, 40, true, RE, 1),
+        Row(5, 120, 40, true, RE, 1),
+        Row(3, 240, 80, false, HS, 2),
+        Row(3, 200, 80, false, HS, 1),
+        Row(3, 184, 80, false, HS, 1),
+        Row(3, 184, 80, false, HS, 1),
+        Row(3, 480, 112, true, HS, 1),
+        Row(3, 672, 112, true, HS, 1),
+        Row(5, 672, 160, true, HS, 2),
+        Row(5, 960, 160, true, HS, 1),
+        Row(5, 960, 160, true, HS, 1),
+    ];
+    build_from("MobileNet-V3-Large", &rows, 960, 1280)
+}
+
+pub fn small() -> Network {
+    let rows = [
+        Row(3, 16, 16, true, RE, 2),
+        Row(3, 72, 24, false, RE, 2),
+        Row(3, 88, 24, false, RE, 1),
+        Row(5, 96, 40, true, HS, 2),
+        Row(5, 240, 40, true, HS, 1),
+        Row(5, 240, 40, true, HS, 1),
+        Row(5, 120, 48, true, HS, 1),
+        Row(5, 144, 48, true, HS, 1),
+        Row(5, 288, 96, true, HS, 2),
+        Row(5, 576, 96, true, HS, 1),
+        Row(5, 576, 96, true, HS, 1),
+    ];
+    build_from("MobileNet-V3-Small", &rows, 576, 1024)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::fuse::{fuse_all, Variant};
+
+    #[test]
+    fn large_matches_table3() {
+        let net = large();
+        assert!((215.0..=250.0).contains(&net.macs_millions()), "{}", net.macs_millions());
+        assert!((5.0..=5.9).contains(&net.params_millions()), "{}", net.params_millions());
+        assert_eq!(net.bottleneck_blocks().len(), 15);
+    }
+
+    #[test]
+    fn small_matches_table3() {
+        let net = small();
+        assert!((55.0..=75.0).contains(&net.macs_millions()), "{}", net.macs_millions());
+        assert!((2.4..=3.2).contains(&net.params_millions()), "{}", net.params_millions());
+        assert_eq!(net.bottleneck_blocks().len(), 11);
+    }
+
+    #[test]
+    fn large_fuse_half_matches_table3() {
+        // Table 3: 225 M MACs, 5.40 M params.
+        let half = fuse_all(&large(), Variant::Half);
+        assert!((195.0..=240.0).contains(&half.macs_millions()), "{}", half.macs_millions());
+        assert!((4.9..=5.8).contains(&half.params_millions()));
+    }
+
+    #[test]
+    fn large_fuse_full_widens() {
+        // Table 3: 322 M MACs (params 10.57 M includes their doubled-SE
+        // accounting; we tolerate a range).
+        let full = fuse_all(&large(), Variant::Full);
+        assert!((290.0..=360.0).contains(&full.macs_millions()), "{}", full.macs_millions());
+        assert!(full.params_millions() > large().params_millions());
+    }
+
+    #[test]
+    fn small_has_se_in_first_block() {
+        let net = small();
+        assert!(net.layers.iter().any(|l| l.name == "b0.se"));
+    }
+
+    #[test]
+    fn large_kernel_mix() {
+        // V3-Large uses both 3x3 and 5x5 depthwise kernels.
+        use crate::nn::ops::OpKind;
+        let net = large();
+        let ks: Vec<usize> = net
+            .layers
+            .iter()
+            .filter_map(|l| match l.op {
+                OpKind::Depthwise { k, .. } => Some(k),
+                _ => None,
+            })
+            .collect();
+        assert!(ks.contains(&3) && ks.contains(&5));
+        assert_eq!(ks.len(), 15);
+    }
+}

@@ -1,0 +1,151 @@
+//! Model zoo: the paper's evaluation networks reconstructed layer-by-layer
+//! from their source papers (MobileNet V1/V2/V3, MnasNet-B1), plus the
+//! Table-4 NAS comparison points and the OFA search space.
+//!
+//! MAC/parameter totals are asserted against the paper's Table 3/Table 4
+//! values in each module's tests (within a small tolerance — the paper
+//! rounds to millions and differs slightly in counting conventions for
+//! bias/BN terms).
+
+pub mod mnasnet;
+pub mod mobilenet_v1;
+pub mod mobilenet_v2;
+pub mod mobilenet_v3;
+pub mod nas_zoo;
+pub mod ofa;
+
+use super::graph::{NetBuilder, Network};
+use super::ops::Act;
+
+/// Inverted-residual (MBConv) block shared by every network in the zoo:
+/// optional expand 1×1 → depthwise k×k (stride s) → optional SE → project
+/// 1×1 → optional residual add. `se_reduced == 0` disables SE.
+pub fn mbconv(
+    b: &mut NetBuilder,
+    name: &str,
+    k: usize,
+    stride: usize,
+    expand: usize,
+    cout: usize,
+    se_reduced: usize,
+    act: Act,
+) {
+    let (_, _, cin) = b.cursor();
+    let residual = stride == 1 && cin == cout;
+    b.begin_block();
+    if expand != cin {
+        b.pw(&format!("{name}.expand"), expand, act);
+    }
+    b.dw(&format!("{name}.dw"), k, stride, act);
+    if se_reduced > 0 {
+        b.se(&format!("{name}.se"), se_reduced);
+    }
+    b.pw(&format!("{name}.project"), cout, Act::None);
+    if residual {
+        b.add(&format!("{name}.add"));
+    }
+    b.end_block();
+}
+
+/// Fused-MBConv (EfficientNet-EdgeTPU): the expand 1×1 + depthwise k×k are
+/// replaced by a single full k×k convolution — the paper's §7 notes this
+/// costs up to 12× the MACs but utilizes systolic hardware.
+pub fn fused_mbconv(
+    b: &mut NetBuilder,
+    name: &str,
+    k: usize,
+    stride: usize,
+    expand: usize,
+    cout: usize,
+    act: Act,
+) {
+    let (_, _, cin) = b.cursor();
+    let residual = stride == 1 && cin == cout;
+    b.begin_block();
+    b.conv(&format!("{name}.fused"), k, stride, expand, act);
+    b.pw(&format!("{name}.project"), cout, Act::None);
+    if residual {
+        b.add(&format!("{name}.add"));
+    }
+    b.end_block();
+}
+
+/// Look a zoo network up by CLI name.
+pub fn by_name(name: &str) -> Option<Network> {
+    Some(match name {
+        "mobilenet-v1" | "mbv1" => mobilenet_v1::build(),
+        "mobilenet-v2" | "mbv2" => mobilenet_v2::build(),
+        "mobilenet-v3-small" | "mbv3s" => mobilenet_v3::small(),
+        "mobilenet-v3-large" | "mbv3l" => mobilenet_v3::large(),
+        "mnasnet-b1" | "mnasnet" => mnasnet::build(),
+        "proxylessnas" => nas_zoo::proxylessnas_mobile(),
+        "single-path-nas" => nas_zoo::single_path_nas(),
+        "fbnet-c" => nas_zoo::fbnet_c(),
+        "efficientnet-lite0" => nas_zoo::efficientnet_lite0(),
+        "efficientnet-edgetpu-s" => nas_zoo::efficientnet_edgetpu_s(),
+        "ofa" => nas_zoo::ofa_baseline(),
+        "fuse-ofa-1" => nas_zoo::fuse_ofa_1(),
+        "fuse-ofa-2" => nas_zoo::fuse_ofa_2(),
+        _ => return None,
+    })
+}
+
+/// The five efficient networks of Fig 8(a)/Table 3.
+pub fn paper_five() -> Vec<Network> {
+    vec![
+        mobilenet_v1::build(),
+        mobilenet_v2::build(),
+        mobilenet_v3::small(),
+        mobilenet_v3::large(),
+        mnasnet::build(),
+    ]
+}
+
+pub const ZOO_NAMES: &[&str] = &[
+    "mobilenet-v1",
+    "mobilenet-v2",
+    "mobilenet-v3-small",
+    "mobilenet-v3-large",
+    "mnasnet-b1",
+    "proxylessnas",
+    "single-path-nas",
+    "fbnet-c",
+    "efficientnet-lite0",
+    "efficientnet-edgetpu-s",
+    "ofa",
+    "fuse-ofa-1",
+    "fuse-ofa-2",
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_resolves_all_names() {
+        for name in ZOO_NAMES {
+            let net = by_name(name).unwrap_or_else(|| panic!("missing {name}"));
+            assert!(!net.layers.is_empty(), "{name} empty");
+            assert!(net.total_macs() > 0);
+        }
+        assert!(by_name("nonesuch").is_none());
+    }
+
+    #[test]
+    fn paper_five_are_the_evaluation_networks() {
+        let names: Vec<String> = paper_five().iter().map(|n| n.name.clone()).collect();
+        assert_eq!(names.len(), 5);
+        assert!(names.iter().any(|n| n.contains("V3-Large")));
+    }
+
+    #[test]
+    fn every_zoo_network_has_bottlenecks() {
+        for name in ZOO_NAMES {
+            let net = by_name(name).unwrap();
+            assert!(
+                !net.bottleneck_blocks().is_empty(),
+                "{name} has no dw/FuSe bottleneck blocks"
+            );
+        }
+    }
+}

@@ -1,0 +1,286 @@
+//! Once-For-All (OFA) search space (Cai et al., 2019) extended with the
+//! per-block FuSeConv choice (paper §4.2 / §6.5, Fig 15).
+//!
+//! The space follows OFA's MobileNetV3-Large backbone: 5 stages with
+//! elastic depth {2,3,4}, elastic expand ratio {3,4,6} ("width"), elastic
+//! kernel {3,5,7} — and, in our extension, an elastic operator bit per
+//! block: depthwise (false) or FuSe-Half (true).
+
+use crate::nn::graph::{NetBuilder, Network};
+use crate::nn::ops::Act;
+use crate::rng::Rng;
+
+pub const STAGE_WIDTHS: [usize; 5] = [24, 40, 80, 112, 160];
+pub const STAGE_STRIDES: [usize; 5] = [2, 2, 2, 1, 2];
+/// SE placement per stage as in MobileNetV3-Large.
+pub const STAGE_SE: [bool; 5] = [false, true, false, true, true];
+pub const MAX_DEPTH: usize = 4;
+pub const KERNEL_CHOICES: [usize; 3] = [3, 5, 7];
+pub const EXPAND_CHOICES: [usize; 3] = [3, 4, 6];
+
+/// One block's elastic settings.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BlockGene {
+    pub kernel: usize,
+    pub expand: usize,
+    pub fuse: bool,
+}
+
+/// Full genome: per-stage depth + per-block genes (MAX_DEPTH slots per
+/// stage; slots beyond `depth` are ignored but kept so mutation is uniform).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct OfaGenome {
+    pub depths: [usize; 5],
+    pub blocks: [[BlockGene; MAX_DEPTH]; 5],
+    /// Whether the search may use FuSe at all (Fig 15's baseline curve
+    /// fixes this to false).
+    pub allow_fuse: bool,
+}
+
+impl OfaGenome {
+    pub fn uniform(kernel: usize, expand: usize, depth: usize, fuse: bool) -> OfaGenome {
+        OfaGenome {
+            depths: [depth; 5],
+            blocks: [[BlockGene { kernel, expand, fuse }; MAX_DEPTH]; 5],
+            allow_fuse: fuse,
+        }
+    }
+
+    /// Random genome (NAS sampling).
+    pub fn random(rng: &mut Rng, allow_fuse: bool) -> OfaGenome {
+        let mut g = OfaGenome::uniform(3, 4, 3, false);
+        g.allow_fuse = allow_fuse;
+        for s in 0..5 {
+            g.depths[s] = 2 + rng.below(3); // {2,3,4}
+            for b in 0..MAX_DEPTH {
+                g.blocks[s][b] = BlockGene {
+                    kernel: *rng.choose(&KERNEL_CHOICES),
+                    expand: *rng.choose(&EXPAND_CHOICES),
+                    fuse: allow_fuse && rng.chance(0.5),
+                };
+            }
+        }
+        g
+    }
+
+    /// Mutate each gene with probability `p` (OFA/EA convention).
+    pub fn mutate(&self, rng: &mut Rng, p: f64) -> OfaGenome {
+        let mut g = self.clone();
+        for s in 0..5 {
+            if rng.chance(p) {
+                g.depths[s] = 2 + rng.below(3);
+            }
+            for b in 0..MAX_DEPTH {
+                if rng.chance(p) {
+                    g.blocks[s][b].kernel = *rng.choose(&KERNEL_CHOICES);
+                }
+                if rng.chance(p) {
+                    g.blocks[s][b].expand = *rng.choose(&EXPAND_CHOICES);
+                }
+                if g.allow_fuse && rng.chance(p) {
+                    g.blocks[s][b].fuse = !g.blocks[s][b].fuse;
+                }
+            }
+        }
+        g
+    }
+
+    /// Uniform crossover.
+    pub fn crossover(&self, other: &OfaGenome, rng: &mut Rng) -> OfaGenome {
+        let mut g = self.clone();
+        for s in 0..5 {
+            if rng.chance(0.5) {
+                g.depths[s] = other.depths[s];
+            }
+            for b in 0..MAX_DEPTH {
+                if rng.chance(0.5) {
+                    g.blocks[s][b] = other.blocks[s][b];
+                }
+            }
+        }
+        g.allow_fuse = self.allow_fuse || other.allow_fuse;
+        g
+    }
+
+    /// Instantiate the genome as a concrete network.
+    pub fn realize(&self, name: &str) -> Network {
+        let mut b = NetBuilder::new(name, 224, 3);
+        b.conv("stem", 3, 2, 16, Act::HSwish);
+        // fixed first bottleneck (as in OFA's backbone)
+        b.begin_block();
+        b.dw("b0.dw", 3, 1, Act::Relu);
+        b.pw("b0.project", 16, Act::None);
+        b.end_block();
+        let mut idx = 1;
+        for s in 0..5 {
+            for d in 0..self.depths[s] {
+                let gene = self.blocks[s][d];
+                let (_, _, cin) = b.cursor();
+                let stride = if d == 0 { STAGE_STRIDES[s] } else { 1 };
+                let cout = STAGE_WIDTHS[s];
+                let expand = cin * gene.expand;
+                let se_reduced = if STAGE_SE[s] { ((expand / 4) + 7) / 8 * 8 } else { 0 };
+                let act = if s < 2 { Act::Relu } else { Act::HSwish };
+                let residual = stride == 1 && cin == cout;
+                let nm = format!("b{idx}");
+                b.begin_block();
+                b.pw(&format!("{nm}.expand"), expand, act);
+                if gene.fuse {
+                    b.fuse(&format!("{nm}.fuse"), gene.kernel, stride, false, act);
+                } else {
+                    b.dw(&format!("{nm}.dw"), gene.kernel, stride, act);
+                }
+                if se_reduced > 0 {
+                    b.se(&format!("{nm}.se"), se_reduced);
+                }
+                b.pw(&format!("{nm}.project"), cout, Act::None);
+                if residual {
+                    b.add(&format!("{nm}.add"));
+                }
+                b.end_block();
+                idx += 1;
+            }
+        }
+        b.conv("last_conv", 1, 1, 960, Act::HSwish);
+        b.global_pool("pool");
+        b.fc("head", 1280, Act::HSwish);
+        b.fc("fc", 1000, Act::None);
+        b.build()
+    }
+
+    /// Total number of elastic blocks realized.
+    pub fn num_blocks(&self) -> usize {
+        self.depths.iter().sum::<usize>() + 1
+    }
+
+    // ---- Reference genomes for Table 4 (searched; frozen for
+    // reproducibility — see EXPERIMENTS.md E15) ----
+
+    /// Baseline OFA subnet matching the paper's quoted 369 M MACs.
+    pub fn reference_ofa() -> OfaGenome {
+        let mut g = OfaGenome::uniform(5, 6, 3, false);
+        g.depths = [3, 3, 4, 4, 4];
+        for s in 0..5 {
+            for d in 0..MAX_DEPTH {
+                g.blocks[s][d].kernel = if s >= 3 { 7 } else { 5 };
+                g.blocks[s][d].expand = if s == 0 { 4 } else { 6 };
+            }
+        }
+        g
+    }
+
+    /// FuSe-OFA-1: latency-leaning searched net (Table 4: 376 M, 76.7 %).
+    pub fn reference_fuse_ofa_1() -> OfaGenome {
+        let mut g = Self::reference_ofa();
+        g.allow_fuse = true;
+        for s in 0..5 {
+            for d in 0..MAX_DEPTH {
+                g.blocks[s][d].fuse = true;
+                // FuSe rows/cols are cheap; search selected wider kernels
+                g.blocks[s][d].kernel = 7;
+                g.blocks[s][d].expand = 6;
+            }
+        }
+        g.depths = [3, 3, 4, 4, 4];
+        g
+    }
+
+    /// FuSe-OFA-2: accuracy-leaning searched net (Table 4: 426 M, 77.2 %).
+    pub fn reference_fuse_ofa_2() -> OfaGenome {
+        let mut g = Self::reference_fuse_ofa_1();
+        g.depths = [4, 4, 4, 4, 4];
+        // two hybrid depthwise blocks retained where the EA kept them —
+        // late, low-resolution stages (high accuracy weight, little latency)
+        g.blocks[3][0].fuse = false;
+        g.blocks[4][0].fuse = false;
+        g
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn realize_produces_valid_network() {
+        let g = OfaGenome::uniform(3, 4, 3, false);
+        let net = g.realize("t");
+        assert_eq!(net.bottleneck_blocks().len(), g.num_blocks());
+        assert!(net.total_macs() > 0);
+    }
+
+    #[test]
+    fn random_genomes_in_bounds() {
+        let mut rng = Rng::new(11);
+        for _ in 0..50 {
+            let g = OfaGenome::random(&mut rng, true);
+            for s in 0..5 {
+                assert!((2..=4).contains(&g.depths[s]));
+                for b in 0..MAX_DEPTH {
+                    assert!(KERNEL_CHOICES.contains(&g.blocks[s][b].kernel));
+                    assert!(EXPAND_CHOICES.contains(&g.blocks[s][b].expand));
+                }
+            }
+            // realizable
+            let net = g.realize("r");
+            assert!(net.total_macs() > 0);
+        }
+    }
+
+    #[test]
+    fn no_fuse_when_disallowed() {
+        let mut rng = Rng::new(12);
+        for _ in 0..20 {
+            let g = OfaGenome::random(&mut rng, false);
+            let net = g.realize("nf");
+            use crate::nn::ops::OpClass;
+            assert!(!net.macs_by_class().contains_key(&OpClass::FuSe));
+        }
+    }
+
+    #[test]
+    fn mutation_changes_something_eventually() {
+        let mut rng = Rng::new(13);
+        let g = OfaGenome::uniform(3, 4, 3, true);
+        let mut changed = false;
+        for _ in 0..20 {
+            if g.mutate(&mut rng, 0.3) != g {
+                changed = true;
+                break;
+            }
+        }
+        assert!(changed);
+    }
+
+    #[test]
+    fn crossover_mixes_parents() {
+        let mut rng = Rng::new(14);
+        let a = OfaGenome::uniform(3, 3, 2, false);
+        let b = OfaGenome::uniform(7, 6, 4, false);
+        let c = a.crossover(&b, &mut rng);
+        // depth genes must come from one of the parents
+        for s in 0..5 {
+            assert!(c.depths[s] == 2 || c.depths[s] == 4);
+        }
+    }
+
+    #[test]
+    fn reference_genomes_realize() {
+        for (g, lo, hi) in [
+            (OfaGenome::reference_ofa(), 280.0, 460.0),
+            (OfaGenome::reference_fuse_ofa_1(), 280.0, 470.0),
+            (OfaGenome::reference_fuse_ofa_2(), 320.0, 530.0),
+        ] {
+            let net = g.realize("ref");
+            let m = net.macs_millions();
+            assert!((lo..=hi).contains(&m), "MACs {m}");
+        }
+    }
+
+    #[test]
+    fn deeper_genome_has_more_macs() {
+        let shallow = OfaGenome::uniform(3, 3, 2, false).realize("s");
+        let deep = OfaGenome::uniform(3, 3, 4, false).realize("d");
+        assert!(deep.total_macs() > shallow.total_macs());
+    }
+}

@@ -1,0 +1,168 @@
+//! Operator kinds in the network IR.
+//!
+//! The IR mirrors what SCALE-Sim-FuSe consumes: each layer is one hardware-
+//! mappable operator with explicit shapes. FuSeConv appears as the pair
+//! `FuseRow` + `FuseCol` (paper §3.1): 1×K row filters and K×1 column
+//! filters. The `Half` variant gives each half of the channels to one
+//! orientation; `Full` runs both orientations over all channels.
+
+/// Nonlinearity attached to a layer. Irrelevant to cycle counts (the paper's
+/// simulator ignores activations too) but kept so the IR can regenerate the
+/// exact network definitions and parameter counts.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Act {
+    None,
+    Relu,
+    Relu6,
+    HSwish,
+    HSigmoid,
+}
+
+/// One hardware-mappable operator.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OpKind {
+    /// Standard spatial convolution `k×k`, `cin → cout`.
+    Conv2d { k: usize, stride: usize, cin: usize, cout: usize },
+    /// Depthwise convolution `k×k` over `c` channels (one filter/channel).
+    Depthwise { k: usize, stride: usize, c: usize },
+    /// 1×1 convolution (pointwise), `cin → cout`.
+    Pointwise { cin: usize, cout: usize },
+    /// FuSeConv row half: `1×k` filters over `c` channels.
+    FuseRow { k: usize, stride: usize, c: usize },
+    /// FuSeConv column half: `k×1` filters over `c` channels.
+    FuseCol { k: usize, stride: usize, c: usize },
+    /// Fully connected `cin → cout` (batch-1 GEMV).
+    Fc { cin: usize, cout: usize },
+    /// Global average pool over `c` channels.
+    GlobalPool { c: usize },
+    /// Squeeze-and-excite block: pool + FC(c→r) + FC(r→c) + scale.
+    SqueezeExcite { c: usize, reduced: usize },
+    /// Residual elementwise add over `c` channels.
+    Add { c: usize },
+}
+
+/// Coarse operator class used by the paper's Fig 9(a) latency attribution.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum OpClass {
+    Depthwise,
+    Pointwise,
+    FuSe,
+    OtherConv,
+    Other,
+}
+
+impl OpKind {
+    pub fn class(&self) -> OpClass {
+        match self {
+            OpKind::Depthwise { .. } => OpClass::Depthwise,
+            OpKind::Pointwise { .. } => OpClass::Pointwise,
+            OpKind::FuseRow { .. } | OpKind::FuseCol { .. } => OpClass::FuSe,
+            OpKind::Conv2d { .. } => OpClass::OtherConv,
+            OpKind::Fc { .. }
+            | OpKind::GlobalPool { .. }
+            | OpKind::SqueezeExcite { .. }
+            | OpKind::Add { .. } => OpClass::Other,
+        }
+    }
+
+    /// Output channel count.
+    pub fn cout(&self) -> usize {
+        match *self {
+            OpKind::Conv2d { cout, .. } => cout,
+            OpKind::Depthwise { c, .. } => c,
+            OpKind::Pointwise { cout, .. } => cout,
+            OpKind::FuseRow { c, .. } => c,
+            OpKind::FuseCol { c, .. } => c,
+            OpKind::Fc { cout, .. } => cout,
+            OpKind::GlobalPool { c } => c,
+            OpKind::SqueezeExcite { c, .. } => c,
+            OpKind::Add { c } => c,
+        }
+    }
+
+    /// Input channel count.
+    pub fn cin(&self) -> usize {
+        match *self {
+            OpKind::Conv2d { cin, .. } => cin,
+            OpKind::Depthwise { c, .. } => c,
+            OpKind::Pointwise { cin, .. } => cin,
+            OpKind::FuseRow { c, .. } => c,
+            OpKind::FuseCol { c, .. } => c,
+            OpKind::Fc { cin, .. } => cin,
+            OpKind::GlobalPool { c } => c,
+            OpKind::SqueezeExcite { c, .. } => c,
+            OpKind::Add { c } => c,
+        }
+    }
+
+    pub fn stride(&self) -> usize {
+        match *self {
+            OpKind::Conv2d { stride, .. }
+            | OpKind::Depthwise { stride, .. }
+            | OpKind::FuseRow { stride, .. }
+            | OpKind::FuseCol { stride, .. } => stride,
+            _ => 1,
+        }
+    }
+
+    /// Trainable parameter count (weights only; BN folded, bias on FC).
+    pub fn params(&self) -> u64 {
+        match *self {
+            OpKind::Conv2d { k, cin, cout, .. } => (k * k * cin * cout) as u64,
+            OpKind::Depthwise { k, c, .. } => (k * k * c) as u64,
+            OpKind::Pointwise { cin, cout } => (cin * cout) as u64,
+            OpKind::FuseRow { k, c, .. } | OpKind::FuseCol { k, c, .. } => (k * c) as u64,
+            OpKind::Fc { cin, cout } => (cin * cout + cout) as u64,
+            OpKind::GlobalPool { .. } | OpKind::Add { .. } => 0,
+            OpKind::SqueezeExcite { c, reduced } => (c * reduced + reduced + reduced * c + c) as u64,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn classes_are_as_in_fig9a() {
+        assert_eq!(OpKind::Depthwise { k: 3, stride: 1, c: 8 }.class(), OpClass::Depthwise);
+        assert_eq!(OpKind::Pointwise { cin: 8, cout: 16 }.class(), OpClass::Pointwise);
+        assert_eq!(OpKind::FuseRow { k: 3, stride: 1, c: 4 }.class(), OpClass::FuSe);
+        assert_eq!(OpKind::FuseCol { k: 3, stride: 1, c: 4 }.class(), OpClass::FuSe);
+        assert_eq!(OpKind::Conv2d { k: 3, stride: 2, cin: 3, cout: 32 }.class(), OpClass::OtherConv);
+        assert_eq!(OpKind::Fc { cin: 1280, cout: 1000 }.class(), OpClass::Other);
+    }
+
+    #[test]
+    fn param_counts() {
+        // depthwise 3x3 over 32 ch = 288; FuSe row 3 over 16 ch = 48
+        assert_eq!(OpKind::Depthwise { k: 3, stride: 1, c: 32 }.params(), 288);
+        assert_eq!(OpKind::FuseRow { k: 3, stride: 1, c: 16 }.params(), 48);
+        assert_eq!(OpKind::Pointwise { cin: 32, cout: 64 }.params(), 2048);
+        assert_eq!(OpKind::Fc { cin: 10, cout: 5 }.params(), 55);
+        assert_eq!(OpKind::Conv2d { k: 3, stride: 2, cin: 3, cout: 32 }.params(), 864);
+    }
+
+    #[test]
+    fn fuse_pair_param_reduction_matches_paper() {
+        // Paper §3.2.1: depthwise K² C params -> FuSe-Half K C params
+        // (row K·C/2 + col K·C/2).
+        let c = 128;
+        let k = 3;
+        let dw = OpKind::Depthwise { k, stride: 1, c }.params();
+        let half = OpKind::FuseRow { k, stride: 1, c: c / 2 }.params()
+            + OpKind::FuseCol { k, stride: 1, c: c / 2 }.params();
+        assert_eq!(dw, (k * k * c) as u64);
+        assert_eq!(half, (k * c) as u64);
+        assert_eq!(dw / half, k as u64);
+    }
+
+    #[test]
+    fn cin_cout_stride_accessors() {
+        let op = OpKind::Conv2d { k: 3, stride: 2, cin: 3, cout: 32 };
+        assert_eq!(op.cin(), 3);
+        assert_eq!(op.cout(), 32);
+        assert_eq!(op.stride(), 2);
+        assert_eq!(OpKind::Fc { cin: 4, cout: 7 }.stride(), 1);
+    }
+}

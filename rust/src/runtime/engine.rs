@@ -1,0 +1,119 @@
+//! The PJRT-backed serving engine: wraps the compiled `student_infer`
+//! graph + a parameter set behind the coordinator's [`Engine`] trait so
+//! the dynamic batcher can drive it (examples/serve.rs).
+//!
+//! PJRT objects are thread-bound (the xla crate's client is `Rc`-based),
+//! so the engine — including its `Runtime` — is built inside the server's
+//! dispatcher thread via [`Server::start_with`].
+
+use super::executor::{literal_f32, Graph, Runtime};
+use crate::coordinator::server::Engine;
+use anyhow::Result;
+use std::path::Path;
+use std::sync::Arc;
+
+pub struct PjrtEngine {
+    // Runtime kept alive for the graph's client.
+    _rt: Runtime,
+    graph: Arc<Graph>,
+    params: Vec<xla::Literal>,
+    in_len: usize,
+    out_len: usize,
+    batch: usize,
+    hw: usize,
+}
+
+impl PjrtEngine {
+    /// Open artifacts + compile the student inference graph with the given
+    /// parameter blob (e.g. `student_init.bin` or a trained checkpoint).
+    pub fn from_artifacts(dir: impl AsRef<Path>, params_blob: &str) -> Result<PjrtEngine> {
+        let rt = Runtime::open(dir)?;
+        let params = rt.load_init("student", params_blob)?;
+        PjrtEngine::new(rt, params)
+    }
+
+    pub fn new(rt: Runtime, params: Vec<xla::Literal>) -> Result<PjrtEngine> {
+        let graph = rt.graph("student_infer")?;
+        let hw = rt.manifest.const_usize("image_hw")?;
+        let classes = rt.manifest.const_usize("num_classes")?;
+        let batch = rt.manifest.const_usize("infer_batch")?;
+        Ok(PjrtEngine {
+            _rt: rt,
+            graph,
+            params,
+            in_len: 3 * hw * hw,
+            out_len: classes,
+            batch,
+            hw,
+        })
+    }
+}
+
+impl Engine for PjrtEngine {
+    fn input_len(&self) -> usize {
+        self.in_len
+    }
+
+    fn output_len(&self) -> usize {
+        self.out_len
+    }
+
+    fn max_batch(&self) -> usize {
+        self.batch
+    }
+
+    fn infer(&self, inputs: &[f32], n: usize) -> Vec<f32> {
+        assert!(n <= self.batch);
+        // pad the partial batch up to the compiled batch size
+        let mut padded = vec![0.0f32; self.batch * self.in_len];
+        padded[..n * self.in_len].copy_from_slice(inputs);
+        let x = literal_f32(&padded, &[self.batch, 3, self.hw, self.hw]).expect("batch literal");
+        // §Perf: borrow the resident parameter set; only the batch literal
+        // is constructed per request.
+        let mut args: Vec<&xla::Literal> = self.params.iter().collect();
+        args.push(&x);
+        let out = self.graph.run_refs(&args).expect("infer");
+        let logits = out[0].to_vec::<f32>().expect("logits");
+        logits[..n * self.out_len].to_vec()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::batcher::BatchPolicy;
+    use crate::coordinator::server::Server;
+    use std::path::PathBuf;
+    use std::time::Duration;
+
+    fn artifacts_dir() -> PathBuf {
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn serves_through_batcher_e2e() {
+        if !artifacts_dir().join("manifest.txt").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let dir = artifacts_dir();
+        let server = Server::start_with(
+            move || PjrtEngine::from_artifacts(&dir, "student_init.bin").unwrap(),
+            BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(5) },
+        );
+        // probe the engine's geometry from the manifest directly
+        let m = crate::runtime::Manifest::load(&artifacts_dir()).unwrap();
+        let hw = m.const_usize("image_hw").unwrap();
+        let in_len = 3 * hw * hw;
+        let out_len = m.const_usize("num_classes").unwrap();
+        let rxs: Vec<_> = (0..12).map(|_| server.submit(vec![0.05; in_len])).collect();
+        for rx in rxs {
+            let resp = rx.recv_timeout(Duration::from_secs(120)).unwrap();
+            assert_eq!(resp.output.len(), out_len);
+            assert!(resp.output.iter().all(|v| v.is_finite()));
+        }
+        let stats = server.shutdown();
+        assert_eq!(stats.served, 12);
+        assert!(stats.mean_batch() >= 1.0);
+    }
+}

@@ -1,0 +1,252 @@
+//! PJRT execution of the AOT artifacts: load HLO text, compile once per
+//! graph on the CPU client, execute from the Rust hot path.
+//!
+//! Pattern follows /opt/xla-example/load_hlo.rs: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute` → unwrap the result tuple.
+
+use super::manifest::{DType, GraphSpec, Manifest, TensorSpec};
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+/// The runtime: one PJRT client + the artifact manifest + compiled graphs.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    dir: PathBuf,
+    compiled: Mutex<HashMap<String, std::sync::Arc<Graph>>>,
+}
+
+/// One compiled executable with its I/O contract.
+pub struct Graph {
+    exe: xla::PjRtLoadedExecutable,
+    pub spec: GraphSpec,
+}
+
+impl Runtime {
+    /// Open the artifacts directory (does not compile anything yet).
+    pub fn open(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client, manifest, dir, compiled: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch the cached) graph by manifest name.
+    pub fn graph(&self, name: &str) -> Result<std::sync::Arc<Graph>> {
+        if let Some(g) = self.compiled.lock().unwrap().get(name) {
+            return Ok(g.clone());
+        }
+        let spec = self.manifest.graph(name)?.clone();
+        let path = self.dir.join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not utf-8")?,
+        )
+        .with_context(|| format!("parsing {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling graph {name}"))?;
+        let g = std::sync::Arc::new(Graph { exe, spec });
+        self.compiled.lock().unwrap().insert(name.to_string(), g.clone());
+        Ok(g)
+    }
+
+    /// Read a raw f32 init blob, split per the named param block's specs.
+    pub fn load_init(&self, label: &str, file: &str) -> Result<Vec<xla::Literal>> {
+        let specs = self.manifest.param_specs(label)?;
+        let bytes = std::fs::read(self.dir.join(file))
+            .with_context(|| format!("reading init blob {file}"))?;
+        let total: usize = specs.iter().map(|s| s.elements()).sum();
+        if bytes.len() != 4 * total {
+            bail!("init blob {file}: {} bytes, expected {}", bytes.len(), 4 * total);
+        }
+        let floats: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        let mut out = Vec::with_capacity(specs.len());
+        let mut off = 0;
+        for s in specs {
+            let n = s.elements();
+            out.push(literal_f32(&floats[off..off + n], &s.dims)?);
+            off += n;
+        }
+        Ok(out)
+    }
+}
+
+impl Graph {
+    /// Execute with positional inputs; returns the flattened output tuple.
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        self.run_generic(inputs)
+    }
+
+    /// Borrowing variant — the §Perf hot path. `execute` only needs
+    /// `Borrow<Literal>`, so callers that reuse large parameter sets
+    /// (training loops, eval chunks, the serving engine) pass references
+    /// instead of deep-copying literals every call.
+    pub fn run_refs(&self, inputs: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
+        self.run_generic(inputs)
+    }
+
+    fn run_generic<L: std::borrow::Borrow<xla::Literal>>(
+        &self,
+        inputs: &[L],
+    ) -> Result<Vec<xla::Literal>> {
+        if inputs.len() != self.spec.inputs.len() {
+            bail!(
+                "graph {}: got {} inputs, expected {}",
+                self.spec.name,
+                inputs.len(),
+                self.spec.inputs.len()
+            );
+        }
+        let result = self.exe.execute::<L>(inputs)?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: always a tuple.
+        let outs = result.to_tuple()?;
+        if outs.len() != self.spec.outputs.len() {
+            bail!(
+                "graph {}: got {} outputs, expected {}",
+                self.spec.name,
+                outs.len(),
+                self.spec.outputs.len()
+            );
+        }
+        Ok(outs)
+    }
+}
+
+/// Build an f32 literal of the given dims (empty = scalar).
+pub fn literal_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
+    if dims.is_empty() {
+        if data.len() != 1 {
+            bail!("scalar literal from {} values", data.len());
+        }
+        return Ok(xla::Literal::scalar(data[0]));
+    }
+    let n: usize = dims.iter().product();
+    if n != data.len() {
+        bail!("literal_f32: {} values for dims {:?}", data.len(), dims);
+    }
+    let idims: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&idims)?)
+}
+
+/// Build an i32 literal.
+pub fn literal_i32(data: &[i32], dims: &[usize]) -> Result<xla::Literal> {
+    let n: usize = dims.iter().product::<usize>().max(1);
+    if n != data.len() {
+        bail!("literal_i32: {} values for dims {:?}", data.len(), dims);
+    }
+    if dims.is_empty() {
+        return Ok(xla::Literal::scalar(data[0]));
+    }
+    let idims: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&idims)?)
+}
+
+/// Deep-copy a literal (xla::Literal is not Clone; round-trip raw values).
+pub fn clone_literal(l: &xla::Literal) -> Result<xla::Literal> {
+    let shape = l.array_shape()?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    match l.ty()? {
+        xla::ElementType::F32 => literal_f32(&l.to_vec::<f32>()?, &dims),
+        xla::ElementType::S32 => literal_i32(&l.to_vec::<i32>()?, &dims),
+        other => bail!("clone_literal: unsupported type {other:?}"),
+    }
+}
+
+/// Deep-copy a parameter set.
+pub fn clone_params(ps: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+    ps.iter().map(clone_literal).collect()
+}
+
+/// Validate a literal against a manifest TensorSpec (element count level).
+pub fn check_spec(lit: &xla::Literal, spec: &TensorSpec) -> Result<()> {
+    let want = spec.elements();
+    if lit.element_count() != want {
+        bail!("literal has {} elements, spec wants {want}", lit.element_count());
+    }
+    let _ = match spec.dtype {
+        DType::F32 | DType::I32 => (),
+    };
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn have_artifacts() -> bool {
+        artifacts_dir().join("manifest.txt").exists()
+    }
+
+    #[test]
+    fn literal_builders() {
+        let l = literal_f32(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
+        assert_eq!(l.element_count(), 4);
+        let s = literal_f32(&[7.5], &[]).unwrap();
+        assert_eq!(s.get_first_element::<f32>().unwrap(), 7.5);
+        let i = literal_i32(&[1, 2, 3], &[3]).unwrap();
+        assert_eq!(i.to_vec::<i32>().unwrap(), vec![1, 2, 3]);
+        assert!(literal_f32(&[1.0], &[2]).is_err());
+    }
+
+    #[test]
+    fn open_and_compile_infer_graph() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let rt = Runtime::open(artifacts_dir()).unwrap();
+        assert!(rt.platform().to_lowercase().contains("cpu") || !rt.platform().is_empty());
+        let g = rt.graph("student_infer").unwrap();
+        // compile cache: second fetch is the same Arc
+        let g2 = rt.graph("student_infer").unwrap();
+        assert!(std::sync::Arc::ptr_eq(&g, &g2));
+    }
+
+    #[test]
+    fn infer_runs_end_to_end() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let rt = Runtime::open(artifacts_dir()).unwrap();
+        let params = rt.load_init("student", "student_init.bin").unwrap();
+        let g = rt.graph("student_infer").unwrap();
+        let b = rt.manifest.const_usize("infer_batch").unwrap();
+        let hw = rt.manifest.const_usize("image_hw").unwrap();
+        let x = literal_f32(&vec![0.1; b * 3 * hw * hw], &[b, 3, hw, hw]).unwrap();
+        let mut inputs = params;
+        inputs.push(x);
+        let out = g.run(&inputs).unwrap();
+        assert_eq!(out.len(), 1);
+        let logits = out[0].to_vec::<f32>().unwrap();
+        assert_eq!(logits.len(), b * rt.manifest.const_usize("num_classes").unwrap());
+        assert!(logits.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn wrong_arity_rejected() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let rt = Runtime::open(artifacts_dir()).unwrap();
+        let g = rt.graph("student_infer").unwrap();
+        assert!(g.run(&[]).is_err());
+    }
+}

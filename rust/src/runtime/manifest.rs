@@ -1,0 +1,231 @@
+//! Parser for `artifacts/manifest.txt`, the contract between the Python
+//! compile path (aot.py) and this runtime. Line-oriented format:
+//!
+//! ```text
+//! const <key> <value>
+//! params <label> <count>
+//!   p <name> <d0>x<d1>...
+//! graph <name> <filename>
+//!   in  <dtype> <dims|scalar>
+//!   out <dtype> <dims|scalar>
+//! ```
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub dtype: DType,
+    /// Empty = scalar.
+    pub dims: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.dims.iter().product::<usize>().max(1)
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ParamSpec {
+    pub name: String,
+    pub dims: Vec<usize>,
+}
+
+impl ParamSpec {
+    pub fn elements(&self) -> usize {
+        self.dims.iter().product::<usize>().max(1)
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct GraphSpec {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    pub consts: BTreeMap<String, String>,
+    pub params: BTreeMap<String, Vec<ParamSpec>>,
+    pub graphs: BTreeMap<String, GraphSpec>,
+}
+
+fn parse_dims(s: &str) -> Result<Vec<usize>> {
+    if s == "scalar" {
+        return Ok(Vec::new());
+    }
+    s.split('x')
+        .map(|d| d.parse::<usize>().map_err(|e| anyhow!("bad dim {d:?}: {e}")))
+        .collect()
+}
+
+fn parse_dtype(s: &str) -> Result<DType> {
+    match s {
+        "f32" => Ok(DType::F32),
+        "i32" => Ok(DType::I32),
+        other => bail!("unsupported dtype {other}"),
+    }
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let mut m = Manifest::default();
+        let mut cur_graph: Option<String> = None;
+        let mut cur_params: Option<String> = None;
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let toks: Vec<&str> = line.split_whitespace().collect();
+            let ctx = || format!("manifest line {}: {raw:?}", lineno + 1);
+            match toks[0] {
+                "const" => {
+                    if toks.len() != 3 {
+                        bail!("{}: const needs 2 fields", ctx());
+                    }
+                    m.consts.insert(toks[1].into(), toks[2].into());
+                }
+                "params" => {
+                    cur_params = Some(toks[1].to_string());
+                    cur_graph = None;
+                    m.params.insert(toks[1].into(), Vec::new());
+                }
+                "p" => {
+                    let label = cur_params.clone().with_context(ctx)?;
+                    m.params.get_mut(&label).unwrap().push(ParamSpec {
+                        name: toks[1].into(),
+                        dims: parse_dims(toks[2]).with_context(ctx)?,
+                    });
+                }
+                "graph" => {
+                    cur_graph = Some(toks[1].to_string());
+                    cur_params = None;
+                    m.graphs.insert(
+                        toks[1].into(),
+                        GraphSpec {
+                            name: toks[1].into(),
+                            file: toks[2].into(),
+                            inputs: Vec::new(),
+                            outputs: Vec::new(),
+                        },
+                    );
+                }
+                "in" | "out" => {
+                    let g = cur_graph.clone().with_context(ctx)?;
+                    let spec = TensorSpec {
+                        dtype: parse_dtype(toks[1]).with_context(ctx)?,
+                        dims: parse_dims(toks[2]).with_context(ctx)?,
+                    };
+                    let graph = m.graphs.get_mut(&g).unwrap();
+                    if toks[0] == "in" {
+                        graph.inputs.push(spec);
+                    } else {
+                        graph.outputs.push(spec);
+                    }
+                }
+                other => bail!("{}: unknown directive {other}", ctx()),
+            }
+        }
+        Ok(m)
+    }
+
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Manifest::parse(&text)
+    }
+
+    pub fn const_usize(&self, key: &str) -> Result<usize> {
+        self.consts
+            .get(key)
+            .ok_or_else(|| anyhow!("missing const {key}"))?
+            .parse()
+            .map_err(|e| anyhow!("const {key}: {e}"))
+    }
+
+    pub fn graph(&self, name: &str) -> Result<&GraphSpec> {
+        self.graphs.get(name).ok_or_else(|| anyhow!("missing graph {name}"))
+    }
+
+    pub fn param_specs(&self, label: &str) -> Result<&Vec<ParamSpec>> {
+        self.params.get(label).ok_or_else(|| anyhow!("missing params {label}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+const image_hw 32
+const num_classes 10
+params teacher 2
+  p stem.w 16x3x3x3
+  p fc.b 10
+graph infer infer.hlo.txt
+  in f32 8x3x32x32
+  in f32 scalar
+  out f32 8x10
+graph step step.hlo.txt
+  in i32 16
+  out f32 scalar
+";
+
+    #[test]
+    fn parses_consts_params_graphs() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.const_usize("image_hw").unwrap(), 32);
+        let ps = m.param_specs("teacher").unwrap();
+        assert_eq!(ps.len(), 2);
+        assert_eq!(ps[0].dims, vec![16, 3, 3, 3]);
+        assert_eq!(ps[0].elements(), 432);
+        let g = m.graph("infer").unwrap();
+        assert_eq!(g.inputs.len(), 2);
+        assert_eq!(g.inputs[1].dims, Vec::<usize>::new());
+        assert_eq!(g.outputs[0].dims, vec![8, 10]);
+        assert_eq!(m.graph("step").unwrap().inputs[0].dtype, DType::I32);
+    }
+
+    #[test]
+    fn scalar_spec_has_one_element() {
+        let t = TensorSpec { dtype: DType::F32, dims: vec![] };
+        assert_eq!(t.elements(), 1);
+    }
+
+    #[test]
+    fn unknown_directive_rejected() {
+        assert!(Manifest::parse("bogus x y").is_err());
+    }
+
+    #[test]
+    fn missing_lookups_error() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert!(m.graph("nope").is_err());
+        assert!(m.const_usize("nope").is_err());
+        assert!(m.param_specs("nope").is_err());
+    }
+
+    #[test]
+    fn real_manifest_parses_if_built() {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.txt").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(m.graphs.contains_key("student_infer"));
+            assert!(m.graphs.contains_key("nos_train_step"));
+            let nt = m.const_usize("num_teacher_params").unwrap();
+            assert_eq!(m.param_specs("teacher").unwrap().len(), nt);
+        }
+    }
+}

@@ -1,0 +1,26 @@
+//! Runtime: PJRT loading/execution of the AOT artifacts, synthetic data,
+//! training/eval drivers, and the serving engine. After `make artifacts`,
+//! everything here is Python-free.
+
+pub mod data;
+pub mod engine;
+pub mod executor;
+pub mod manifest;
+pub mod pipeline;
+pub mod training;
+
+pub use data::Synth;
+pub use engine::PjrtEngine;
+pub use executor::{literal_f32, literal_i32, Graph, Runtime};
+pub use manifest::Manifest;
+pub use training::{cosine_lr, Session, TrainLog};
+
+/// Default artifacts directory relative to the crate root.
+pub fn default_artifacts_dir() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// True when `make artifacts` has produced a manifest.
+pub fn artifacts_available() -> bool {
+    default_artifacts_dir().join("manifest.txt").exists()
+}

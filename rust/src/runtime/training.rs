@@ -1,0 +1,321 @@
+//! Training drivers: the Rust loop that owns the optimizer state and feeds
+//! the AOT-compiled train-step graphs. This is the e2e evidence path for
+//! the paper's §6.2/§6.3 claims at small scale (in-place replacement vs
+//! NOS), and nothing here touches Python.
+
+use super::data::Synth;
+use super::executor::{literal_f32, literal_i32, Graph, Runtime};
+use crate::rng::Rng;
+use anyhow::{Context, Result};
+
+/// Per-step record: (step, loss, train-batch accuracy).
+#[derive(Debug, Clone, Default)]
+pub struct TrainLog {
+    pub entries: Vec<(usize, f32, f32)>,
+}
+
+impl TrainLog {
+    pub fn last_loss(&self) -> f32 {
+        self.entries.last().map(|e| e.1).unwrap_or(f32::NAN)
+    }
+
+    /// Mean loss over the first/last `k` entries (loss-curve trend).
+    pub fn head_tail_mean(&self, k: usize) -> (f32, f32) {
+        let k = k.min(self.entries.len());
+        let head: f32 = self.entries[..k].iter().map(|e| e.1).sum::<f32>() / k as f32;
+        let tail: f32 =
+            self.entries[self.entries.len() - k..].iter().map(|e| e.1).sum::<f32>() / k as f32;
+        (head, tail)
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from("step,loss,acc\n");
+        for (st, l, a) in &self.entries {
+            s.push_str(&format!("{st},{l},{a}\n"));
+        }
+        s
+    }
+}
+
+/// Cosine learning-rate schedule (paper §5.3.2 uses cosine for NOS).
+pub fn cosine_lr(lr0: f32, step: usize, total: usize) -> f32 {
+    let t = step as f32 / total.max(1) as f32;
+    lr0 * 0.5 * (1.0 + (std::f32::consts::PI * t).cos())
+}
+
+/// Shared bits of a training session against one train-step graph.
+pub struct Session<'a> {
+    pub rt: &'a Runtime,
+    pub hw: usize,
+    pub classes: usize,
+    pub train_b: usize,
+}
+
+impl<'a> Session<'a> {
+    pub fn new(rt: &'a Runtime) -> Result<Session<'a>> {
+        Ok(Session {
+            rt,
+            hw: rt.manifest.const_usize("image_hw")?,
+            classes: rt.manifest.const_usize("num_classes")?,
+            train_b: rt.manifest.const_usize("train_batch")?,
+        })
+    }
+
+    fn batch_literals(&self, synth: &mut Synth) -> Result<(xla::Literal, xla::Literal)> {
+        let (xs, ys) = synth.batch(self.train_b);
+        Ok((
+            literal_f32(&xs, &[self.train_b, 3, self.hw, self.hw])?,
+            literal_i32(&ys, &[self.train_b])?,
+        ))
+    }
+
+    /// Train a plain (teacher or in-place student) network.
+    ///
+    /// `graph` must follow the plain-step contract:
+    /// (params…, vel…, x, y, lr) → (params…, vel…, loss, acc).
+    pub fn train_plain(
+        &self,
+        graph: &Graph,
+        n_params: usize,
+        mut params: Vec<xla::Literal>,
+        steps: usize,
+        lr0: f32,
+        data_seed: u64,
+    ) -> Result<(Vec<xla::Literal>, TrainLog)> {
+        let mut synth = Synth::new(self.hw, self.classes, data_seed);
+        let mut vel: Vec<xla::Literal> = params
+            .iter()
+            .map(|p| zeros_like(p))
+            .collect::<Result<Vec<_>>>()?;
+        let mut log = TrainLog::default();
+        for step in 0..steps {
+            let (x, y) = self.batch_literals(&mut synth)?;
+            let lr = literal_f32(&[cosine_lr(lr0, step, steps)], &[])?;
+            // borrow everything: no literal copies on the step hot path
+            let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(2 * n_params + 3);
+            inputs.extend(params.iter());
+            inputs.extend(vel.iter());
+            inputs.push(&x);
+            inputs.push(&y);
+            inputs.push(&lr);
+            let mut out = graph.run_refs(&inputs).context("train step")?;
+            drop(inputs);
+            let acc = out.pop().unwrap().get_first_element::<f32>()?;
+            let loss = out.pop().unwrap().get_first_element::<f32>()?;
+            vel = out.split_off(n_params);
+            params = out;
+            log.entries.push((step, loss, acc));
+        }
+        Ok((params, log))
+    }
+
+    /// NOS scaffolded training (paper §4.1): per step, each block is
+    /// sampled depthwise (0) or FuSe (1); loss = CE + KD on frozen-teacher
+    /// logits.
+    #[allow(clippy::too_many_arguments)]
+    pub fn train_nos(
+        &self,
+        graph: &Graph,
+        n_scaffold: usize,
+        n_teacher: usize,
+        num_blocks: usize,
+        mut scaffold: Vec<xla::Literal>,
+        teacher: &[xla::Literal],
+        steps: usize,
+        lr0: f32,
+        seed: u64,
+        fuse_prob: f64,
+    ) -> Result<(Vec<xla::Literal>, TrainLog)> {
+        let mut synth = Synth::new(self.hw, self.classes, seed);
+        let mut mask_rng = Rng::new(seed ^ 0x5ca_f01d);
+        let mut vel: Vec<xla::Literal> =
+            scaffold.iter().map(|p| zeros_like(p)).collect::<Result<Vec<_>>>()?;
+        let mut log = TrainLog::default();
+        for step in 0..steps {
+            let (x, y) = self.batch_literals(&mut synth)?;
+            // OFA-style operator sampling. The inference network is
+            // all-FuSe, so sampling is biased toward the student path
+            // (`fuse_prob`); the depthwise path still appears often enough
+            // to keep distilling teacher structure.
+            let mask: Vec<f32> = (0..num_blocks)
+                .map(|_| if mask_rng.chance(fuse_prob) { 1.0 } else { 0.0 })
+                .collect();
+            let mask_l = literal_f32(&mask, &[num_blocks])?;
+            let lr = literal_f32(&[cosine_lr(lr0, step, steps)], &[])?;
+            // frozen teacher params are *borrowed* every step (§Perf: the
+            // previous version deep-copied ~350 kB of literals per step)
+            let mut inputs: Vec<&xla::Literal> =
+                Vec::with_capacity(2 * n_scaffold + n_teacher + 4);
+            inputs.extend(scaffold.iter());
+            inputs.extend(vel.iter());
+            inputs.extend(teacher.iter());
+            inputs.push(&x);
+            inputs.push(&y);
+            inputs.push(&mask_l);
+            inputs.push(&lr);
+            let mut out = graph.run_refs(&inputs).context("nos step")?;
+            drop(inputs);
+            let acc = out.pop().unwrap().get_first_element::<f32>()?;
+            let loss = out.pop().unwrap().get_first_element::<f32>()?;
+            vel = out.split_off(n_scaffold);
+            scaffold = out;
+            log.entries.push((step, loss, acc));
+        }
+        Ok((scaffold, log))
+    }
+
+    /// Evaluate accuracy of an infer graph over the held-out set.
+    pub fn eval_accuracy(
+        &self,
+        infer: &Graph,
+        params: &[xla::Literal],
+        samples: usize,
+    ) -> Result<f64> {
+        let b = self.rt.manifest.const_usize("infer_batch")?;
+        let (xs, ys) = Synth::eval(self.hw, self.classes, samples);
+        let n = self.hw * self.hw * 3;
+        let mut correct = 0usize;
+        let mut total = 0usize;
+        let mut chunk = 0;
+        while (chunk + 1) * b <= samples {
+            let lo = chunk * b;
+            let x = literal_f32(&xs[lo * n..(lo + b) * n], &[b, 3, self.hw, self.hw])?;
+            let mut inputs: Vec<&xla::Literal> = params.iter().collect();
+            inputs.push(&x);
+            let out = infer.run_refs(&inputs)?;
+            let logits = out[0].to_vec::<f32>()?;
+            for i in 0..b {
+                let row = &logits[i * self.classes..(i + 1) * self.classes];
+                let pred = row
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .unwrap()
+                    .0;
+                if pred as i32 == ys[lo + i] {
+                    correct += 1;
+                }
+                total += 1;
+            }
+            chunk += 1;
+        }
+        Ok(correct as f64 / total.max(1) as f64)
+    }
+
+    /// Build the scaffold init: trained teacher params + identity adapters.
+    pub fn scaffold_init(
+        &self,
+        teacher: &[xla::Literal],
+        num_blocks: usize,
+        k: usize,
+    ) -> Result<Vec<xla::Literal>> {
+        let mut out: Vec<xla::Literal> =
+            teacher.iter().map(clone_literal).collect::<Result<Vec<_>>>()?;
+        let mut eye = vec![0.0f32; k * k];
+        for i in 0..k {
+            eye[i * k + i] = 1.0;
+        }
+        for _ in 0..num_blocks {
+            out.push(literal_f32(&eye, &[k, k])?);
+        }
+        Ok(out)
+    }
+
+    /// Cosine similarity between teacher and student block-feature maps on
+    /// one probe image (Fig 12's quantitative counterpart).
+    pub fn feature_similarity(
+        &self,
+        feat_a: &Graph,
+        params_a: &[xla::Literal],
+        feat_b: &Graph,
+        params_b: &[xla::Literal],
+    ) -> Result<f64> {
+        let (xs, _) = Synth::eval(self.hw, self.classes, 1);
+        let x = literal_f32(&xs, &[1, 3, self.hw, self.hw])?;
+        let run = |g: &Graph, ps: &[xla::Literal]| -> Result<Vec<f32>> {
+            let mut inputs: Vec<&xla::Literal> = ps.iter().collect();
+            inputs.push(&x);
+            Ok(g.run_refs(&inputs)?[0].to_vec::<f32>()?)
+        };
+        let a = run(feat_a, params_a)?;
+        let b = run(feat_b, params_b)?;
+        anyhow::ensure!(a.len() == b.len(), "feature shapes differ");
+        let dot: f64 = a.iter().zip(&b).map(|(x, y)| (*x as f64) * (*y as f64)).sum();
+        let na: f64 = a.iter().map(|x| (*x as f64).powi(2)).sum::<f64>().sqrt();
+        let nb: f64 = b.iter().map(|x| (*x as f64).powi(2)).sum::<f64>().sqrt();
+        Ok(dot / (na * nb).max(1e-12))
+    }
+}
+
+pub use super::executor::clone_literal;
+
+fn zeros_like(l: &xla::Literal) -> Result<xla::Literal> {
+    let shape = l.array_shape()?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let n: usize = dims.iter().product::<usize>().max(1);
+    literal_f32(&vec![0.0; n], &dims)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::{Path, PathBuf};
+
+    fn artifacts_dir() -> PathBuf {
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn runtime() -> Option<Runtime> {
+        if artifacts_dir().join("manifest.txt").exists() {
+            Some(Runtime::open(artifacts_dir()).unwrap())
+        } else {
+            eprintln!("skipping: artifacts not built");
+            None
+        }
+    }
+
+    #[test]
+    fn cosine_schedule_endpoints() {
+        assert!((cosine_lr(0.1, 0, 100) - 0.1).abs() < 1e-7);
+        assert!(cosine_lr(0.1, 100, 100) < 1e-7);
+        assert!(cosine_lr(0.1, 50, 100) > 0.04 && cosine_lr(0.1, 50, 100) < 0.06);
+    }
+
+    #[test]
+    fn train_log_trend() {
+        let mut log = TrainLog::default();
+        for i in 0..10 {
+            log.entries.push((i, 10.0 - i as f32, 0.1 * i as f32));
+        }
+        let (head, tail) = log.head_tail_mean(3);
+        assert!(tail < head);
+        assert!(log.to_csv().lines().count() == 11);
+    }
+
+    #[test]
+    fn plain_training_reduces_loss_e2e() {
+        let Some(rt) = runtime() else { return };
+        let session = Session::new(&rt).unwrap();
+        let graph = rt.graph("teacher_train_step").unwrap();
+        let n = rt.manifest.const_usize("num_teacher_params").unwrap();
+        let init = rt.load_init("teacher", "teacher_init.bin").unwrap();
+        let (_params, log) =
+            session.train_plain(&graph, n, init, 60, 0.04, 11).unwrap();
+        let (head, tail) = log.head_tail_mean(10);
+        assert!(
+            tail < head - 0.05,
+            "loss did not fall: head {head} tail {tail} (last {:?})",
+            &log.entries[log.entries.len().saturating_sub(5)..]
+        );
+    }
+
+    #[test]
+    fn clone_literal_roundtrip() {
+        let l = literal_f32(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0], &[2, 3]).unwrap();
+        let c = clone_literal(&l).unwrap();
+        assert_eq!(c.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let i = literal_i32(&[7, 8], &[2]).unwrap();
+        let ci = clone_literal(&i).unwrap();
+        assert_eq!(ci.to_vec::<i32>().unwrap(), vec![7, 8]);
+    }
+}

@@ -1,0 +1,137 @@
+//! Simulator configuration — Table 1 of the paper is the default.
+
+/// Dataflow executed by the PE array for *GEMM-shaped* operators
+/// (standard conv via im2col, pointwise, FC). FuSe layers additionally
+/// use ST-OS when `stos` is enabled, regardless of this baseline choice.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dataflow {
+    OutputStationary,
+    WeightStationary,
+}
+
+/// ST-OS slice-to-row mapping policy (paper §3.4).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MappingPolicy {
+    /// Rows that share a channel get the same filter: one broadcast serves
+    /// many rows → fewest weight-SRAM reads, needs multi-row broadcast.
+    SpatialFirst,
+    /// Rows carry distinct channels: max distinct filters in flight →
+    /// `rows` weight reads per round, no extra broadcast circuitry.
+    ChannelsFirst,
+    /// Channels-first until channels run out, then spill spatial slices of
+    /// the same channels across remaining rows (paper's default).
+    Hybrid,
+}
+
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    /// PE array dimensions (systolic rows × cols).
+    pub rows: usize,
+    pub cols: usize,
+    /// Operating frequency (Table 1: 1 GHz).
+    pub freq_mhz: u64,
+    /// SRAM sizes in KiB (Table 1: 64 KiB each).
+    pub ifmap_sram_kb: usize,
+    pub weight_sram_kb: usize,
+    pub ofmap_sram_kb: usize,
+    /// Main-memory bandwidth in bytes/cycle (edge LPDDR4-class default).
+    pub dram_bw: f64,
+    /// If true, the array stalls when a fold's working set exceeds
+    /// `dram_bw × duration`. SCALE-Sim (and hence the paper's latencies)
+    /// reports *required* bandwidth without throttling — that is the
+    /// default; enable this for the bandwidth-constrained ablation.
+    pub enforce_dram_bw: bool,
+    /// Bytes per tensor element (int8 inference = 1, as SCALE-Sim assumes).
+    pub bytes_per_elem: usize,
+    /// Baseline dataflow for GEMM-shaped ops.
+    pub dataflow: Dataflow,
+    /// Whether the array has the per-row weight-broadcast links (ST-OS).
+    pub stos: bool,
+    pub mapping: MappingPolicy,
+}
+
+impl Default for SimConfig {
+    /// Paper Table 1: 1 GHz, 16×16, OS + ST-OS, 64 KiB × 3.
+    fn default() -> SimConfig {
+        SimConfig {
+            rows: 16,
+            cols: 16,
+            freq_mhz: 1000,
+            ifmap_sram_kb: 64,
+            weight_sram_kb: 64,
+            ofmap_sram_kb: 64,
+            dram_bw: 16.0,
+            enforce_dram_bw: false,
+            bytes_per_elem: 1,
+            dataflow: Dataflow::OutputStationary,
+            stos: true,
+            mapping: MappingPolicy::Hybrid,
+        }
+    }
+}
+
+impl SimConfig {
+    pub fn with_size(size: usize) -> SimConfig {
+        SimConfig { rows: size, cols: size, ..SimConfig::default() }
+    }
+
+    pub fn with_dataflow(mut self, df: Dataflow) -> SimConfig {
+        self.dataflow = df;
+        self
+    }
+
+    pub fn without_stos(mut self) -> SimConfig {
+        self.stos = false;
+        self
+    }
+
+    pub fn num_pes(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    pub fn ifmap_sram_bytes(&self) -> usize {
+        self.ifmap_sram_kb * 1024
+    }
+
+    pub fn weight_sram_bytes(&self) -> usize {
+        self.weight_sram_kb * 1024
+    }
+
+    pub fn ofmap_sram_bytes(&self) -> usize {
+        self.ofmap_sram_kb * 1024
+    }
+
+    /// Cycles → milliseconds at the configured frequency.
+    pub fn cycles_to_ms(&self, cycles: u64) -> f64 {
+        cycles as f64 / (self.freq_mhz as f64 * 1e3)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_matches_table1() {
+        let c = SimConfig::default();
+        assert_eq!((c.rows, c.cols), (16, 16));
+        assert_eq!(c.freq_mhz, 1000);
+        assert_eq!(c.ifmap_sram_kb, 64);
+        assert_eq!(c.weight_sram_kb, 64);
+        assert_eq!(c.ofmap_sram_kb, 64);
+        assert!(c.stos);
+        assert_eq!(c.dataflow, Dataflow::OutputStationary);
+    }
+
+    #[test]
+    fn cycles_to_ms_at_1ghz() {
+        let c = SimConfig::default();
+        assert!((c.cycles_to_ms(1_000_000) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn with_size_square() {
+        let c = SimConfig::with_size(64);
+        assert_eq!(c.num_pes(), 4096);
+    }
+}

@@ -1,0 +1,338 @@
+//! Layer lowering + the per-layer / whole-network simulation drivers.
+//!
+//! This is the SCALE-Sim-FuSe equivalent: every operator in the IR lowers
+//! to a fold schedule under the configured dataflow (OS/WS for GEMM-shaped
+//! ops; ST-OS for FuSe ops when the hardware supports it), then the memory
+//! model prices stalls and bandwidth.
+
+use super::config::{Dataflow, SimConfig};
+use super::fold::{Fold, FoldSet};
+use super::gemm::{os_schedule, ws_schedule, Gemm};
+use super::memory::{apply as apply_memory, MemResult};
+use super::stos::{no_stos_schedule, stos_schedule, Conv1dSet};
+use crate::nn::{Layer, Network, OpClass, OpKind};
+
+/// Simulation result for one layer.
+#[derive(Debug, Clone)]
+pub struct LayerSim {
+    pub name: String,
+    pub class: OpClass,
+    pub block: Option<usize>,
+    pub macs: u64,
+    pub compute_cycles: u64,
+    pub stall_cycles: u64,
+    pub total_cycles: u64,
+    /// Σ active-PE cycles (= MACs executed on the array).
+    pub pe_cycles: u64,
+    /// PE-array utilization over the layer's residency.
+    pub utilization: f64,
+    pub mem: MemResult,
+}
+
+/// Whole-network simulation result.
+#[derive(Debug, Clone)]
+pub struct NetworkSim {
+    pub network: String,
+    pub config_label: String,
+    pub layers: Vec<LayerSim>,
+    pub total_cycles: u64,
+    pub latency_ms: f64,
+}
+
+fn ceil_div(a: usize, b: usize) -> usize {
+    (a + b - 1) / b
+}
+
+/// Lower one layer to its fold schedule.
+pub fn schedule_layer(layer: &Layer, cfg: &SimConfig) -> FoldSet {
+    let (oh, ow) = (layer.out_h(), layer.out_w());
+    let gemm_sched = |g: &Gemm| match cfg.dataflow {
+        Dataflow::OutputStationary => os_schedule(g, cfg),
+        Dataflow::WeightStationary => ws_schedule(g, cfg),
+    };
+    match layer.op {
+        OpKind::Conv2d { k, cin, cout, .. } => gemm_sched(&Gemm {
+            m: oh * ow,
+            n: cout,
+            k: k * k * cin,
+            ifmap_unique: (layer.h * layer.w * cin) as u64,
+            weight_unique: (k * k * cin * cout) as u64,
+        }),
+        OpKind::Pointwise { cin, cout } => gemm_sched(&Gemm {
+            m: oh * ow,
+            n: cout,
+            k: cin,
+            ifmap_unique: (layer.h * layer.w * cin) as u64,
+            weight_unique: (cin * cout) as u64,
+        }),
+        OpKind::Fc { cin, cout } => gemm_sched(&Gemm {
+            m: 1,
+            n: cout,
+            k: cin,
+            ifmap_unique: cin as u64,
+            weight_unique: (cin * cout) as u64,
+        }),
+        OpKind::Depthwise { k, c, .. } => {
+            // §2.3: no cross-channel reuse — each channel is an independent
+            // single-column GEMM; the array repeats it `c` times.
+            let per_channel = Gemm {
+                m: oh * ow,
+                n: 1,
+                k: k * k,
+                ifmap_unique: (layer.h * layer.w) as u64,
+                weight_unique: (k * k) as u64,
+            };
+            let one = gemm_sched(&per_channel);
+            let mut fs = FoldSet::new();
+            for f in one.folds {
+                let mut f = f;
+                f.count *= c as u64;
+                fs.push(f);
+            }
+            fs
+        }
+        OpKind::FuseRow { k, stride, c } => {
+            let set = Conv1dSet {
+                channels: c,
+                slices_per_channel: oh, // output rows (vertical subsample)
+                out_len: ow,
+                k,
+                stride,
+                ifmap_unique: (layer.h * layer.w * c) as u64,
+            };
+            if cfg.stos {
+                stos_schedule(&set, cfg)
+            } else {
+                no_stos_schedule(&set, cfg)
+            }
+        }
+        OpKind::FuseCol { k, stride, c } => {
+            let set = Conv1dSet {
+                channels: c,
+                slices_per_channel: ow, // output columns
+                out_len: oh,
+                k,
+                stride,
+                ifmap_unique: (layer.h * layer.w * c) as u64,
+            };
+            if cfg.stos {
+                stos_schedule(&set, cfg)
+            } else {
+                no_stos_schedule(&set, cfg)
+            }
+        }
+        OpKind::SqueezeExcite { c, reduced } => {
+            // pool (adder tree) + 2 tiny GEMVs + scale
+            let mut fs = FoldSet::new();
+            fs.push(Fold::once(ceil_div(layer.h * layer.w * c, cfg.cols) as u64));
+            for g in [
+                Gemm { m: 1, n: reduced, k: c, ifmap_unique: c as u64, weight_unique: (c * reduced) as u64 },
+                Gemm { m: 1, n: c, k: reduced, ifmap_unique: reduced as u64, weight_unique: (c * reduced) as u64 },
+            ] {
+                for f in gemm_sched(&g).folds {
+                    fs.push(f);
+                }
+            }
+            fs.push(Fold::once(ceil_div(layer.h * layer.w * c, cfg.cols) as u64));
+            fs
+        }
+        OpKind::GlobalPool { c } => {
+            let mut f = Fold::once(ceil_div(layer.h * layer.w * c, cfg.cols) as u64);
+            f.dram_read_bytes = (layer.h * layer.w * c * cfg.bytes_per_elem) as u64;
+            f.dram_write_bytes = (c * cfg.bytes_per_elem) as u64;
+            let mut fs = FoldSet::new();
+            fs.push(f);
+            fs
+        }
+        OpKind::Add { c } => {
+            let elems = layer.h * layer.w * c;
+            let mut f = Fold::once(ceil_div(elems, cfg.cols) as u64);
+            f.dram_read_bytes = (2 * elems * cfg.bytes_per_elem) as u64;
+            f.dram_write_bytes = (elems * cfg.bytes_per_elem) as u64;
+            let mut fs = FoldSet::new();
+            fs.push(f);
+            fs
+        }
+    }
+}
+
+/// Simulate one layer: schedule + memory model + utilization.
+pub fn simulate_layer(layer: &Layer, cfg: &SimConfig) -> LayerSim {
+    let fs = schedule_layer(layer, cfg);
+    let mem = apply_memory(&fs, cfg);
+    let pe_cycles = fs.pe_cycles();
+    let denom = (mem.total_cycles as f64) * cfg.num_pes() as f64;
+    LayerSim {
+        name: layer.name.clone(),
+        class: layer.class(),
+        block: layer.block,
+        macs: layer.macs(),
+        compute_cycles: mem.compute_cycles,
+        stall_cycles: mem.stall_cycles,
+        total_cycles: mem.total_cycles,
+        pe_cycles,
+        utilization: if denom > 0.0 { pe_cycles as f64 / denom } else { 0.0 },
+        mem,
+    }
+}
+
+/// Simulate a whole network (layers execute back-to-back, as in SCALE-Sim).
+pub fn simulate_network(net: &Network, cfg: &SimConfig) -> NetworkSim {
+    let layers: Vec<LayerSim> = net.layers.iter().map(|l| simulate_layer(l, cfg)).collect();
+    let total_cycles = layers.iter().map(|l| l.total_cycles).sum();
+    NetworkSim {
+        network: net.name.clone(),
+        config_label: format!(
+            "{}x{} {:?}{}",
+            cfg.rows,
+            cfg.cols,
+            cfg.dataflow,
+            if cfg.stos { "+ST-OS" } else { "" }
+        ),
+        layers,
+        total_cycles,
+        latency_ms: cfg.cycles_to_ms(total_cycles),
+    }
+}
+
+impl NetworkSim {
+    /// Blended utilization of one bottleneck block (Fig 10).
+    pub fn block_utilization(&self, block: usize) -> f64 {
+        let ls: Vec<&LayerSim> = self.layers.iter().filter(|l| l.block == Some(block)).collect();
+        let cycles: u64 = ls.iter().map(|l| l.total_cycles).sum();
+        let pe: u64 = ls.iter().map(|l| l.pe_cycles).sum();
+        if cycles == 0 {
+            return 0.0;
+        }
+        // denominator uses full-array residency
+        pe as f64 / (cycles as f64 * self.num_pes_guess())
+    }
+
+    fn num_pes_guess(&self) -> f64 {
+        // utilization fields were computed against cfg; recover array size
+        // from any layer with nonzero pe_cycles.
+        for l in &self.layers {
+            if l.utilization > 0.0 && l.total_cycles > 0 {
+                return l.pe_cycles as f64 / (l.utilization * l.total_cycles as f64);
+            }
+        }
+        256.0
+    }
+
+    /// Cycles of one block.
+    pub fn block_cycles(&self, block: usize) -> u64 {
+        self.layers.iter().filter(|l| l.block == Some(block)).map(|l| l.total_cycles).sum()
+    }
+
+    /// Total cycles attributed per operator class (Fig 9a).
+    pub fn cycles_by_class(&self) -> std::collections::BTreeMap<OpClass, u64> {
+        let mut m = std::collections::BTreeMap::new();
+        for l in &self.layers {
+            *m.entry(l.class).or_insert(0) += l.total_cycles;
+        }
+        m
+    }
+
+    /// Whole-network average utilization.
+    pub fn overall_utilization(&self) -> f64 {
+        let pe: u64 = self.layers.iter().map(|l| l.pe_cycles).sum();
+        pe as f64 / (self.total_cycles as f64 * self.num_pes_guess())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::models::mobilenet_v2;
+    use crate::nn::{fuse_all, Variant};
+
+    #[test]
+    fn layer_sim_conserves_macs_for_gemm_ops() {
+        let cfg = SimConfig::default();
+        let l = Layer::new("pw", OpKind::Pointwise { cin: 96, cout: 192 }, 28, 28);
+        let s = simulate_layer(&l, &cfg);
+        assert_eq!(s.pe_cycles, l.macs());
+        assert!(s.utilization > 0.0 && s.utilization <= 1.0);
+    }
+
+    #[test]
+    fn every_op_kind_schedules() {
+        let cfg = SimConfig::default();
+        let ops: Vec<Layer> = vec![
+            Layer::new("c", OpKind::Conv2d { k: 3, stride: 2, cin: 3, cout: 32 }, 224, 224),
+            Layer::new("d", OpKind::Depthwise { k: 3, stride: 1, c: 32 }, 112, 112),
+            Layer::new("p", OpKind::Pointwise { cin: 32, cout: 16 }, 112, 112),
+            Layer::new("fr", OpKind::FuseRow { k: 3, stride: 1, c: 16 }, 112, 112),
+            Layer::new("fc2", OpKind::FuseCol { k: 3, stride: 1, c: 16 }, 112, 112),
+            Layer::new("f", OpKind::Fc { cin: 1280, cout: 1000 }, 1, 1),
+            Layer::new("g", OpKind::GlobalPool { c: 1280 }, 7, 7),
+            Layer::new("s", OpKind::SqueezeExcite { c: 64, reduced: 16 }, 28, 28),
+            Layer::new("a", OpKind::Add { c: 24 }, 56, 56),
+        ];
+        for l in &ops {
+            let s = simulate_layer(l, &cfg);
+            assert!(s.total_cycles > 0, "{} zero cycles", l.name);
+            assert!(s.utilization <= 1.0 + 1e-9, "{} util {}", l.name, s.utilization);
+            if l.macs() > 0 {
+                assert_eq!(s.pe_cycles, l.macs(), "{} MAC mismatch", l.name);
+            }
+        }
+    }
+
+    #[test]
+    fn depthwise_single_column_pathology() {
+        let cfg = SimConfig::default();
+        let dw = Layer::new("dw", OpKind::Depthwise { k: 3, stride: 1, c: 96 }, 56, 56);
+        let s = simulate_layer(&dw, &cfg);
+        assert!(s.utilization < 0.03, "dw util {}", s.utilization);
+    }
+
+    #[test]
+    fn fuse_beats_depthwise_cycles() {
+        let cfg = SimConfig::default();
+        let dw = Layer::new("dw", OpKind::Depthwise { k: 3, stride: 1, c: 96 }, 56, 56);
+        let row = Layer::new("r", OpKind::FuseRow { k: 3, stride: 1, c: 48 }, 56, 56);
+        let col = Layer::new("c", OpKind::FuseCol { k: 3, stride: 1, c: 48 }, 56, 56);
+        let dw_cycles = simulate_layer(&dw, &cfg).total_cycles;
+        let fuse_cycles =
+            simulate_layer(&row, &cfg).total_cycles + simulate_layer(&col, &cfg).total_cycles;
+        let speedup = dw_cycles as f64 / fuse_cycles as f64;
+        assert!(speedup > 10.0, "per-op speedup {speedup}");
+    }
+
+    #[test]
+    fn whole_network_simulates_and_speedup_in_paper_band() {
+        let cfg = SimConfig::default();
+        let base = mobilenet_v2::build();
+        let half = fuse_all(&base, Variant::Half);
+        let sb = simulate_network(&base, &cfg);
+        let sh = simulate_network(&half, &cfg);
+        assert!(sb.total_cycles > 0 && sh.total_cycles > 0);
+        let speedup = sb.total_cycles as f64 / sh.total_cycles as f64;
+        // Fig 8a: FuSe-Half speedups 7.01–9.36×; accept a band around it.
+        assert!(speedup > 3.0, "speedup {speedup} too low");
+        assert!(speedup < 20.0, "speedup {speedup} implausibly high");
+    }
+
+    #[test]
+    fn network_block_accessors() {
+        let cfg = SimConfig::default();
+        let net = mobilenet_v2::build();
+        let sim = simulate_network(&net, &cfg);
+        let b0 = net.bottleneck_blocks()[0];
+        assert!(sim.block_cycles(b0) > 0);
+        let u = sim.block_utilization(b0);
+        assert!(u > 0.0 && u <= 1.0);
+        let by_class = sim.cycles_by_class();
+        let sum: u64 = by_class.values().sum();
+        assert_eq!(sum, sim.total_cycles);
+    }
+
+    #[test]
+    fn ws_dataflow_also_runs() {
+        let cfg = SimConfig::default().with_dataflow(Dataflow::WeightStationary);
+        let net = mobilenet_v2::build();
+        let sim = simulate_network(&net, &cfg);
+        assert!(sim.total_cycles > 0);
+    }
+}

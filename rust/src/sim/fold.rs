@@ -1,0 +1,165 @@
+//! Folds: the simulator's unit of array occupancy.
+//!
+//! A *fold* is one mapping of work onto the PE array (SCALE-Sim's term):
+//! the array computes with a fixed operand tiling for `duration` cycles,
+//! then the next fold is scheduled. Dataflow schedulers emit folds with
+//! per-fold SRAM demand and DRAM prefetch requirements; the memory model
+//! then turns demand into stalls and bandwidth.
+//!
+//! Identical folds are run-length compressed (`count`) — a depthwise layer
+//! on a 16-row array emits tens of thousands of *identical* folds, and the
+//! whole-network simulation stays O(distinct folds).
+
+/// One fold (or `count` identical repetitions of it).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Fold {
+    /// Compute cycles this fold occupies the array (excluding memory stalls).
+    pub duration: u64,
+    /// Σ over cycles of active PEs (= MACs executed, 1 MAC/PE/cycle).
+    pub pe_cycles: u64,
+    /// SRAM word reads during the fold.
+    pub ifmap_reads: u64,
+    pub weight_reads: u64,
+    /// SRAM word writes of outputs.
+    pub ofmap_writes: u64,
+    /// DRAM traffic attributable to this fold (bytes): prefetch of its
+    /// working set (reads) and writeback of produced outputs (writes).
+    pub dram_read_bytes: u64,
+    pub dram_write_bytes: u64,
+    /// Repetitions of this exact fold.
+    pub count: u64,
+}
+
+impl Fold {
+    pub fn once(duration: u64) -> Fold {
+        Fold {
+            duration,
+            pe_cycles: 0,
+            ifmap_reads: 0,
+            weight_reads: 0,
+            ofmap_writes: 0,
+            dram_read_bytes: 0,
+            dram_write_bytes: 0,
+            count: 1,
+        }
+    }
+
+    pub fn total_duration(&self) -> u64 {
+        self.duration * self.count
+    }
+
+    pub fn total_pe_cycles(&self) -> u64 {
+        self.pe_cycles * self.count
+    }
+}
+
+/// A layer's fold schedule.
+#[derive(Debug, Clone, Default)]
+pub struct FoldSet {
+    pub folds: Vec<Fold>,
+}
+
+impl FoldSet {
+    pub fn new() -> FoldSet {
+        FoldSet { folds: Vec::new() }
+    }
+
+    /// Push a fold, merging with the previous entry when identical
+    /// (keeps the run-length compression automatic for schedulers that
+    /// emit folds one by one).
+    pub fn push(&mut self, f: Fold) {
+        if let Some(last) = self.folds.last_mut() {
+            if last.duration == f.duration
+                && last.pe_cycles == f.pe_cycles
+                && last.ifmap_reads == f.ifmap_reads
+                && last.weight_reads == f.weight_reads
+                && last.ofmap_writes == f.ofmap_writes
+                && last.dram_read_bytes == f.dram_read_bytes
+                && last.dram_write_bytes == f.dram_write_bytes
+            {
+                last.count += f.count;
+                return;
+            }
+        }
+        self.folds.push(f);
+    }
+
+    pub fn num_folds(&self) -> u64 {
+        self.folds.iter().map(|f| f.count).sum()
+    }
+
+    pub fn compute_cycles(&self) -> u64 {
+        self.folds.iter().map(|f| f.total_duration()).sum()
+    }
+
+    pub fn pe_cycles(&self) -> u64 {
+        self.folds.iter().map(|f| f.total_pe_cycles()).sum()
+    }
+
+    pub fn sram_reads(&self) -> u64 {
+        self.folds
+            .iter()
+            .map(|f| (f.ifmap_reads + f.weight_reads) * f.count)
+            .sum()
+    }
+
+    pub fn ofmap_writes(&self) -> u64 {
+        self.folds.iter().map(|f| f.ofmap_writes * f.count).sum()
+    }
+
+    pub fn dram_read_bytes(&self) -> u64 {
+        self.folds.iter().map(|f| f.dram_read_bytes * f.count).sum()
+    }
+
+    pub fn dram_write_bytes(&self) -> u64 {
+        self.folds.iter().map(|f| f.dram_write_bytes * f.count).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn f(duration: u64, pe: u64) -> Fold {
+        Fold { duration, pe_cycles: pe, ..Fold::once(duration) }
+    }
+
+    #[test]
+    fn push_merges_identical() {
+        let mut fs = FoldSet::new();
+        for _ in 0..1000 {
+            fs.push(f(10, 100));
+        }
+        assert_eq!(fs.folds.len(), 1);
+        assert_eq!(fs.num_folds(), 1000);
+        assert_eq!(fs.compute_cycles(), 10_000);
+        assert_eq!(fs.pe_cycles(), 100_000);
+    }
+
+    #[test]
+    fn push_keeps_distinct() {
+        let mut fs = FoldSet::new();
+        fs.push(f(10, 100));
+        fs.push(f(12, 90));
+        fs.push(f(10, 100)); // not adjacent to the first — kept separate
+        assert_eq!(fs.folds.len(), 3);
+        assert_eq!(fs.num_folds(), 3);
+    }
+
+    #[test]
+    fn accounting_sums() {
+        let mut fs = FoldSet::new();
+        let mut a = f(5, 50);
+        a.ifmap_reads = 7;
+        a.weight_reads = 3;
+        a.ofmap_writes = 2;
+        a.dram_read_bytes = 11;
+        a.dram_write_bytes = 4;
+        a.count = 3;
+        fs.push(a);
+        assert_eq!(fs.sram_reads(), 30);
+        assert_eq!(fs.ofmap_writes(), 6);
+        assert_eq!(fs.dram_read_bytes(), 33);
+        assert_eq!(fs.dram_write_bytes(), 12);
+    }
+}

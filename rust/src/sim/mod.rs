@@ -1,0 +1,15 @@
+//! Cycle-level systolic-array simulator — the SCALE-Sim-FuSe substrate
+//! (DESIGN.md S1). Behavioral fidelity: fold-granular schedules with exact
+//! MAC conservation, skew fill/drain per dataflow, double-buffered SRAM +
+//! DRAM stall model, per-window bandwidth observation.
+
+pub mod config;
+pub mod engine;
+pub mod fold;
+pub mod gemm;
+pub mod memory;
+pub mod stos;
+pub mod trace;
+
+pub use config::{Dataflow, MappingPolicy, SimConfig};
+pub use engine::{simulate_layer, simulate_network, LayerSim, NetworkSim};

@@ -1,0 +1,233 @@
+//! ST-OS: the paper's Spatial-Tiled Output-Stationary dataflow (§3.3–3.4).
+//!
+//! A FuSe layer is a set of *independent 1D convolutions* (one per spatial
+//! slice per channel). Each 1D conv maps to ONE ROW of the array: the row's
+//! `cols` PEs each hold one adjacent output (output-stationary) while the
+//! per-row broadcast link feeds one filter tap per cycle — so a work unit
+//! (one row × one tile of `cols` outputs) takes exactly `k` compute cycles
+//! and keeps every PE of the row busy. Because weights broadcast rather
+//! than skew through the array, consecutive units pipeline back-to-back:
+//! the only skew cost is a single array fill at layer start. This is the
+//! co-design win over plain OS, where every fold pays the skew.
+
+use super::config::{MappingPolicy, SimConfig};
+use super::fold::{Fold, FoldSet};
+
+/// A set of independent 1D convolutions with identical geometry.
+#[derive(Debug, Clone, Copy)]
+pub struct Conv1dSet {
+    /// Distinct filters (channels); each has `slices_per_channel` slices.
+    pub channels: usize,
+    /// 1D input slices per channel (= output rows for a row-FuSe op).
+    pub slices_per_channel: usize,
+    /// Output length of each 1D conv.
+    pub out_len: usize,
+    /// Filter taps.
+    pub k: usize,
+    /// Convolution stride along the slice.
+    pub stride: usize,
+    /// Unique input elements (whole ifmap half) for DRAM accounting.
+    pub ifmap_unique: u64,
+}
+
+fn ceil_div(a: usize, b: usize) -> usize {
+    (a + b - 1) / b
+}
+
+/// Distinct filters resident across `r_used` concurrently-scheduled rows,
+/// under the given mapping policy (paper §3.4). Spatial-first groups rows
+/// by channel so one broadcast serves the group; channels-first gives each
+/// row its own filter (more SRAM reads, no extra broadcast circuitry);
+/// hybrid = channels-first until channels run out, then spill spatially.
+fn distinct_filters(policy: MappingPolicy, r_used: usize, set: &Conv1dSet) -> usize {
+    match policy {
+        MappingPolicy::SpatialFirst => ceil_div(r_used, set.slices_per_channel.max(1)),
+        MappingPolicy::ChannelsFirst | MappingPolicy::Hybrid => r_used.min(set.channels),
+    }
+}
+
+/// Schedule a FuSe layer's 1D convolutions under ST-OS.
+pub fn stos_schedule(set: &Conv1dSet, cfg: &SimConfig) -> FoldSet {
+    assert!(cfg.stos, "ST-OS schedule requested on an array without broadcast links");
+    let (r, c) = (cfg.rows, cfg.cols);
+    let bpe = cfg.bytes_per_elem as u64;
+    let num_slices = set.channels * set.slices_per_channel;
+    let col_tiles = ceil_div(set.out_len, c);
+    let total_out = (num_slices * set.out_len) as u64;
+    // Ifmap DRAM: each slice streams once; adjacent col tiles share a
+    // (k - stride) halo, refetched per extra tile.
+    let halo = (set.k.saturating_sub(set.stride)) as u64;
+    let ifmap_dram_total =
+        set.ifmap_unique * bpe + (col_tiles as u64 - 1) * num_slices as u64 * halo * bpe;
+
+    let mut fs = FoldSet::new();
+    // One-time array fill: inputs skew into rows at layer start.
+    let mut fill = Fold::once((r + c - 2) as u64);
+    // First working set arrives during fill.
+    fill.dram_read_bytes = (set.channels * set.k) as u64 * bpe; // all filters (tiny)
+    fs.push(fill);
+
+    for tile in 0..col_tiles {
+        let c_used = if tile == col_tiles - 1 { set.out_len - tile * c } else { c };
+        // All slices need this tile; slices are laid across rows in
+        // mapping-policy order, `r` per round.
+        let rounds = ceil_div(num_slices, r);
+        for round in 0..rounds {
+            let r_used = if round == rounds - 1 { num_slices - round * r } else { r };
+            let filters = distinct_filters(cfg.mapping, r_used, set);
+            // `k` broadcast cycles; rounds pipeline back-to-back because
+            // the next round's inputs stream in behind the current one.
+            let mut f = Fold::once(set.k as u64);
+            f.pe_cycles = (r_used * c_used * set.k) as u64;
+            // Each row consumes the input span behind c_used outputs.
+            let span = ((c_used - 1) * set.stride + set.k) as u64;
+            f.ifmap_reads = r_used as u64 * span;
+            f.weight_reads = (filters * set.k) as u64;
+            f.ofmap_writes = (r_used * c_used) as u64;
+            // DRAM amortized evenly over rounds: steady streaming is the
+            // ST-OS signature Fig 11 shows (high average, similar max).
+            let total_rounds = (col_tiles * rounds).max(1) as u64;
+            f.dram_read_bytes = ifmap_dram_total / total_rounds;
+            f.dram_write_bytes = total_out * bpe / total_rounds;
+            fs.push(f);
+        }
+    }
+    fs
+}
+
+/// Fallback when the array lacks ST-OS support: each 1D conv is a tiny
+/// single-column GEMM (m = out_len, n = 1, k = taps) — the §2.3 pathology.
+pub fn no_stos_schedule(set: &Conv1dSet, cfg: &SimConfig) -> FoldSet {
+    use super::gemm::{os_schedule, Gemm};
+    let per_slice = Gemm {
+        m: set.out_len,
+        n: 1,
+        k: set.k,
+        ifmap_unique: set.ifmap_unique / (set.channels * set.slices_per_channel).max(1) as u64,
+        weight_unique: set.k as u64,
+    };
+    let one = os_schedule(&per_slice, cfg);
+    let mut fs = FoldSet::new();
+    let n = (set.channels * set.slices_per_channel) as u64;
+    for f in one.folds {
+        let mut f = f;
+        f.count *= n;
+        fs.push(f);
+    }
+    fs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// MobileNetV2-ish FuSe-Half row op: 56×56, 96 channels half = 48.
+    fn example() -> Conv1dSet {
+        Conv1dSet {
+            channels: 48,
+            slices_per_channel: 56,
+            out_len: 56,
+            k: 3,
+            stride: 1,
+            ifmap_unique: 56 * 56 * 48,
+        }
+    }
+
+    #[test]
+    fn mac_conservation() {
+        let set = example();
+        let cfg = SimConfig::default();
+        let fs = stos_schedule(&set, &cfg);
+        let macs = (set.channels * set.slices_per_channel * set.out_len * set.k) as u64;
+        assert_eq!(fs.pe_cycles(), macs);
+    }
+
+    #[test]
+    fn high_utilization_vs_plain_os() {
+        let set = example();
+        let cfg = SimConfig::default();
+        let st = stos_schedule(&set, &cfg);
+        let st_util = st.pe_cycles() as f64 / (st.compute_cycles() * 256) as f64;
+        assert!(st_util > 0.5, "ST-OS util {st_util}");
+
+        let fallback = no_stos_schedule(&set, &cfg);
+        let fb_util =
+            fallback.pe_cycles() as f64 / (fallback.compute_cycles() * 256) as f64;
+        assert!(fb_util < 0.02, "fallback util {fb_util}");
+        // the speedup of the co-design on this layer
+        assert!(fallback.compute_cycles() > 20 * st.compute_cycles());
+    }
+
+    #[test]
+    fn small_layer_lower_utilization() {
+        // 7×7 late layer: too little parallelism to fill 16 columns
+        let set = Conv1dSet {
+            channels: 80,
+            slices_per_channel: 7,
+            out_len: 7,
+            k: 3,
+            stride: 1,
+            ifmap_unique: 7 * 7 * 80,
+        };
+        let cfg = SimConfig::default();
+        let fs = stos_schedule(&set, &cfg);
+        let util = fs.pe_cycles() as f64 / (fs.compute_cycles() * 256) as f64;
+        // Fig 10: final bottlenecks ~50-60%
+        assert!(util < 0.7, "util {util}");
+        assert!(util > 0.2, "util {util}");
+    }
+
+    #[test]
+    fn mapping_policy_changes_weight_reads() {
+        let set = example();
+        let mut cfg = SimConfig::default();
+        cfg.mapping = MappingPolicy::ChannelsFirst;
+        let cf: u64 = stos_schedule(&set, &cfg)
+            .folds
+            .iter()
+            .map(|f| f.weight_reads * f.count)
+            .sum();
+        cfg.mapping = MappingPolicy::SpatialFirst;
+        let sf: u64 = stos_schedule(&set, &cfg)
+            .folds
+            .iter()
+            .map(|f| f.weight_reads * f.count)
+            .sum();
+        // spatial-first shares one broadcast across rows of a channel
+        assert!(sf < cf, "spatial {sf} !< channels {cf}");
+        // identical compute cycles either way
+        cfg.mapping = MappingPolicy::ChannelsFirst;
+        let a = stos_schedule(&set, &cfg).compute_cycles();
+        cfg.mapping = MappingPolicy::SpatialFirst;
+        let b = stos_schedule(&set, &cfg).compute_cycles();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn stride_two_consumes_wider_span() {
+        let s1 = Conv1dSet { stride: 1, ..example() };
+        let s2 = Conv1dSet { stride: 2, out_len: 28, ..example() };
+        let cfg = SimConfig::default();
+        let r1 = stos_schedule(&s1, &cfg);
+        let r2 = stos_schedule(&s2, &cfg);
+        // stride 2 halves outputs => fewer cycles
+        assert!(r2.compute_cycles() < r1.compute_cycles());
+    }
+
+    #[test]
+    #[should_panic(expected = "without broadcast links")]
+    fn stos_requires_hardware_support() {
+        let cfg = SimConfig::default().without_stos();
+        stos_schedule(&example(), &cfg);
+    }
+
+    #[test]
+    fn dram_reads_cover_ifmap_once() {
+        let set = example();
+        let cfg = SimConfig::default();
+        let fs = stos_schedule(&set, &cfg);
+        assert!(fs.dram_read_bytes() >= set.ifmap_unique);
+        // and not wildly more (halo only)
+        assert!(fs.dram_read_bytes() < set.ifmap_unique * 3);
+    }
+}

@@ -1,0 +1,165 @@
+//! Small statistics toolkit: summaries, percentiles, and online accumulators.
+//!
+//! Used by the simulator's bandwidth reports (Fig 11 needs per-layer average
+//! and maximum bandwidth), the serving driver's latency stats, and the bench
+//! harness (criterion is unavailable offline).
+
+/// Summary of a sample: n, mean, std-dev, min/max, and selected percentiles.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub p99: f64,
+}
+
+impl Summary {
+    pub fn of(xs: &[f64]) -> Summary {
+        assert!(!xs.is_empty(), "Summary::of(empty)");
+        let n = xs.len();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        let mut sorted = xs.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Summary {
+            n,
+            mean,
+            std: var.sqrt(),
+            min: sorted[0],
+            max: sorted[n - 1],
+            p50: percentile_sorted(&sorted, 50.0),
+            p90: percentile_sorted(&sorted, 90.0),
+            p99: percentile_sorted(&sorted, 99.0),
+        }
+    }
+}
+
+/// Linear-interpolated percentile of an ascending-sorted slice.
+pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    assert!((0.0..=100.0).contains(&p));
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let rank = p / 100.0 * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = rank - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// Online mean/max accumulator — O(1) memory; the simulator feeds it one
+/// value per fold window so whole-network runs never buffer cycle series.
+#[derive(Debug, Clone, Default)]
+pub struct Online {
+    pub n: u64,
+    sum: f64,
+    weight: f64,
+    pub max: f64,
+    pub min: f64,
+}
+
+impl Online {
+    pub fn new() -> Online {
+        Online { n: 0, sum: 0.0, weight: 0.0, max: f64::NEG_INFINITY, min: f64::INFINITY }
+    }
+
+    #[inline]
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        self.sum += x;
+        if x > self.max {
+            self.max = x;
+        }
+        if x < self.min {
+            self.min = x;
+        }
+    }
+
+    /// Weighted push: value `x` observed over `w` units (e.g. bandwidth held
+    /// for `w` cycles). Mean becomes time-weighted; max is still pointwise.
+    #[inline]
+    pub fn push_weighted(&mut self, x: f64, w: f64) {
+        self.n += 1;
+        self.sum += x * w;
+        if x > self.max {
+            self.max = x;
+        }
+        if x < self.min {
+            self.min = x;
+        }
+        self.weight += w;
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.weight > 0.0 {
+            self.sum / self.weight
+        } else if self.n > 0 {
+            self.sum / self.n as f64
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Geometric mean of positive values — the paper reports speedups as ranges;
+/// geomean is the right aggregate across networks.
+pub fn geomean(xs: &[f64]) -> f64 {
+    assert!(!xs.is_empty());
+    let s: f64 = xs.iter().map(|x| x.ln()).sum();
+    (s / xs.len() as f64).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basic() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.n, 5);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert!((s.p50 - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [0.0, 10.0];
+        assert!((percentile_sorted(&xs, 50.0) - 5.0).abs() < 1e-12);
+        assert_eq!(percentile_sorted(&xs, 0.0), 0.0);
+        assert_eq!(percentile_sorted(&xs, 100.0), 10.0);
+    }
+
+    #[test]
+    fn online_tracks_mean_max() {
+        let mut o = Online::new();
+        for x in [2.0, 4.0, 6.0] {
+            o.push(x);
+        }
+        assert!((o.mean() - 4.0).abs() < 1e-12);
+        assert_eq!(o.max, 6.0);
+        assert_eq!(o.min, 2.0);
+        assert_eq!(o.n, 3);
+    }
+
+    #[test]
+    fn online_weighted_mean() {
+        let mut o = Online::new();
+        o.push_weighted(10.0, 1.0);
+        o.push_weighted(0.0, 9.0);
+        assert!((o.mean() - 1.0).abs() < 1e-12);
+        assert_eq!(o.max, 10.0);
+    }
+
+    #[test]
+    fn geomean_of_speedups() {
+        let g = geomean(&[4.0, 9.0]);
+        assert!((g - 6.0).abs() < 1e-12);
+    }
+}

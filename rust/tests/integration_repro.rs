@@ -1,0 +1,214 @@
+//! Cross-module integration tests: the paper's claims as executable
+//! assertions over the full zoo (transform → simulate → compare), plus
+//! property-based invariants over randomly generated networks.
+
+use fuseconv::coordinator::search::{
+    run_ea, AccuracyPredictor, EaConfig, TrainMethod,
+};
+use fuseconv::coordinator::{Evaluator, HybridSpace};
+use fuseconv::nn::models;
+use fuseconv::nn::{fuse_all, NetBuilder, Network, OpClass, Variant};
+use fuseconv::rng::Rng;
+use fuseconv::sim::{simulate_network, Dataflow, SimConfig};
+use fuseconv::testkit::{forall, no_shrink, Check};
+
+/// Fig 8(a) band: every evaluation network speeds up substantially with
+/// FuSe-Half + ST-OS, and FuSe-Full is slower than Half but still wins.
+#[test]
+fn speedup_bands_hold_across_the_zoo() {
+    let cfg = SimConfig::default();
+    for net in models::paper_five() {
+        let sb = simulate_network(&net, &cfg);
+        let sh = simulate_network(&fuse_all(&net, Variant::Half), &cfg);
+        let sf = simulate_network(&fuse_all(&net, Variant::Full), &cfg);
+        let spd_h = sb.total_cycles as f64 / sh.total_cycles as f64;
+        let spd_f = sb.total_cycles as f64 / sf.total_cycles as f64;
+        assert!(spd_h > 4.0 && spd_h < 12.0, "{}: Half speedup {spd_h}", net.name);
+        assert!(spd_f > 2.0 && spd_f < 8.0, "{}: Full speedup {spd_f}", net.name);
+        assert!(spd_h > spd_f, "{}: Half must beat Full", net.name);
+    }
+}
+
+/// §2.3: depthwise dominates baseline latency despite being a small
+/// fraction of MACs (the incommensurate-scaling motivation).
+#[test]
+fn depthwise_dominates_baseline_latency() {
+    let cfg = SimConfig::default();
+    for net in models::paper_five() {
+        let sim = simulate_network(&net, &cfg);
+        let by = sim.cycles_by_class();
+        let dw_cycles = *by.get(&OpClass::Depthwise).unwrap_or(&0) as f64;
+        let dw_macs = net.macs_by_class()[&OpClass::Depthwise] as f64;
+        let cycle_share = dw_cycles / sim.total_cycles as f64;
+        let mac_share = dw_macs / net.total_macs() as f64;
+        assert!(cycle_share > 0.6, "{}: dw cycle share {cycle_share}", net.name);
+        assert!(mac_share < 0.2, "{}: dw MAC share {mac_share}", net.name);
+    }
+}
+
+/// Fig 10: utilization contrast between depthwise and FuSe bottlenecks.
+#[test]
+fn utilization_contrast() {
+    let cfg = SimConfig::default();
+    let net = models::by_name("mnasnet-b1").unwrap();
+    let sb = simulate_network(&net, &cfg);
+    let sh = simulate_network(&fuse_all(&net, Variant::Half), &cfg);
+    for b in net.bottleneck_blocks() {
+        let ub = sb.block_utilization(b);
+        let uf = sh.block_utilization(b);
+        assert!(uf > 2.0 * ub, "block {b}: fuse {uf} vs base {ub}");
+        assert!(uf <= 1.0 + 1e-9 && ub <= 1.0 + 1e-9);
+    }
+}
+
+/// ST-OS ablation: without the broadcast links, FuSe networks lose their
+/// advantage (the co-design is load-bearing).
+#[test]
+fn stos_hardware_is_load_bearing() {
+    let with = SimConfig::default();
+    let without = SimConfig::default().without_stos();
+    let half = fuse_all(&models::by_name("mobilenet-v2").unwrap(), Variant::Half);
+    let s_with = simulate_network(&half, &with);
+    let s_without = simulate_network(&half, &without);
+    assert!(
+        s_without.total_cycles > 3 * s_with.total_cycles,
+        "ST-OS gain too small: {} vs {}",
+        s_without.total_cycles,
+        s_with.total_cycles
+    );
+}
+
+/// Property: MAC conservation — for random networks, Σ pe_cycles over a
+/// simulation equals the IR's MAC count (both dataflows).
+#[test]
+fn property_mac_conservation_random_networks() {
+    forall(
+        0xFACE,
+        40,
+        |rng: &mut Rng| random_network(rng),
+        no_shrink,
+        |net: &Network| {
+            for df in [Dataflow::OutputStationary, Dataflow::WeightStationary] {
+                let cfg = SimConfig { dataflow: df, ..SimConfig::default() };
+                let sim = simulate_network(net, &cfg);
+                let pe: u64 = sim.layers.iter().map(|l| l.pe_cycles).sum();
+                if pe != net.total_macs() {
+                    return Check::Fail(format!(
+                        "{df:?}: pe_cycles {pe} != macs {}",
+                        net.total_macs()
+                    ));
+                }
+            }
+            Check::Pass
+        },
+    );
+}
+
+/// Property: utilization bounded, cycles positive, fuse transform preserves
+/// the drop-in contract (same output channel count per block sequence).
+#[test]
+fn property_fuse_transform_invariants() {
+    forall(
+        0xBEEF,
+        40,
+        |rng: &mut Rng| random_network(rng),
+        no_shrink,
+        |net: &Network| {
+            let half = fuse_all(net, Variant::Half);
+            // drop-in: same final layer, fewer-or-equal params
+            if half.layers.last().unwrap().op != net.layers.last().unwrap().op {
+                return Check::Fail("final layer changed".into());
+            }
+            if half.total_params() > net.total_params() {
+                return Check::Fail("params grew under Half".into());
+            }
+            let cfg = SimConfig::default();
+            let sim = simulate_network(&half, &cfg);
+            if sim.total_cycles == 0 {
+                return Check::Fail("zero cycles".into());
+            }
+            for l in &sim.layers {
+                if l.utilization > 1.0 + 1e-9 {
+                    return Check::Fail(format!("{}: util {} > 1", l.name, l.utilization));
+                }
+            }
+            Check::Pass
+        },
+    );
+}
+
+/// Property: hybrid-space fast path == realized-network simulation for
+/// random masks (the EA's core correctness requirement).
+#[test]
+fn property_hybrid_fast_path_consistency() {
+    let ev = Evaluator::new(SimConfig::default());
+    let base = models::by_name("mobilenet-v3-small").unwrap();
+    let space = HybridSpace::new(&base, &ev);
+    let n = space.num_blocks();
+    forall(
+        0xC0DE,
+        30,
+        |rng: &mut Rng| (0..n).map(|_| rng.chance(0.5)).collect::<Vec<bool>>(),
+        no_shrink,
+        |mask: &Vec<bool>| {
+            let fast = space.cycles(mask);
+            let slow = ev.eval(&space.realize(mask)).cycles;
+            Check::from_bool(fast == slow, &format!("fast {fast} != slow {slow}"))
+        },
+    );
+}
+
+/// EA integration: the frontier strictly improves on random search with the
+/// same evaluation budget.
+#[test]
+fn ea_beats_random_search_at_equal_budget() {
+    let ev = Evaluator::new(SimConfig::default());
+    let base = models::by_name("mobilenet-v3-large").unwrap();
+    let space = HybridSpace::new(&base, &ev);
+    let pred = AccuracyPredictor::for_space(&space);
+    let cfg = EaConfig { population: 24, iterations: 20, seed: 5, ..EaConfig::default() };
+    let ea = run_ea(&space, &pred, TrainMethod::Nos, &cfg);
+
+    // random baseline with the same budget
+    let mut rng = Rng::new(5);
+    let n = space.num_blocks();
+    let budget = ea.evaluated;
+    let mut best_random = f64::MIN;
+    let target_lat = ea.best_acc.latency_ms;
+    for _ in 0..budget {
+        let mask: Vec<bool> = (0..n).map(|_| rng.chance(0.5)).collect();
+        if space.latency_ms(&mask) <= target_lat {
+            best_random = best_random.max(pred.predict_mask(&mask, TrainMethod::Nos));
+        }
+    }
+    assert!(
+        ea.best_acc.acc >= best_random - 0.05,
+        "EA {} vs random {best_random}",
+        ea.best_acc.acc
+    );
+}
+
+/// Random MobileNet-style network for property tests.
+fn random_network(rng: &mut Rng) -> Network {
+    let hw = *rng.choose(&[32usize, 56, 64, 96]);
+    let mut b = NetBuilder::new("rand", hw, 3);
+    b.conv("stem", 3, 2, 8 + 8 * rng.below(3), fuseconv::nn::Act::Relu6);
+    let blocks = 1 + rng.below(4);
+    for i in 0..blocks {
+        let (_, _, cin) = b.cursor();
+        let k = *rng.choose(&[3usize, 5]);
+        let t = 1 + rng.below(4);
+        let cout = 8 * (1 + rng.below(6));
+        let stride = 1 + rng.below(2);
+        b.begin_block();
+        if t > 1 {
+            b.pw(&format!("b{i}.expand"), cin * t, fuseconv::nn::Act::Relu6);
+        }
+        b.dw(&format!("b{i}.dw"), k, stride, fuseconv::nn::Act::Relu6);
+        b.pw(&format!("b{i}.project"), cout, fuseconv::nn::Act::None);
+        b.end_block();
+    }
+    b.global_pool("pool");
+    b.fc("fc", 10, fuseconv::nn::Act::None);
+    b.build()
+}

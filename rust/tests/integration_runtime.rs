@@ -1,0 +1,121 @@
+//! Runtime integration tests over the AOT artifacts (skipped with a notice
+//! when `make artifacts` has not run — CI runs them after the build step).
+
+use fuseconv::runtime::{
+    artifacts_available, default_artifacts_dir, literal_f32, Runtime, Session, Synth,
+};
+
+fn runtime() -> Option<Runtime> {
+    if !artifacts_available() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Runtime::open(default_artifacts_dir()).unwrap())
+}
+
+/// Every manifest graph compiles and respects its declared I/O arity.
+#[test]
+fn all_graphs_compile() {
+    let Some(rt) = runtime() else { return };
+    let names: Vec<String> = rt.manifest.graphs.keys().cloned().collect();
+    assert!(names.len() >= 8, "expected 8 graphs, got {names:?}");
+    for name in names {
+        let g = rt.graph(&name).unwrap_or_else(|e| panic!("compile {name}: {e:#}"));
+        assert!(!g.spec.inputs.is_empty(), "{name} has no inputs");
+        assert!(!g.spec.outputs.is_empty(), "{name} has no outputs");
+    }
+}
+
+/// Teacher and student infer graphs produce different logits from the same
+/// input (different operators) but both are finite and well-shaped.
+#[test]
+fn teacher_student_infer_differ() {
+    let Some(rt) = runtime() else { return };
+    let b = rt.manifest.const_usize("infer_batch").unwrap();
+    let hw = rt.manifest.const_usize("image_hw").unwrap();
+    let classes = rt.manifest.const_usize("num_classes").unwrap();
+    let mut synth = Synth::new(hw, classes, 7);
+    let (xs, _) = synth.batch(b);
+    let x = literal_f32(&xs, &[b, 3, hw, hw]).unwrap();
+
+    let run = |graph: &str, blob: &str, label: &str| -> Vec<f32> {
+        let params = rt.load_init(label, blob).unwrap();
+        let g = rt.graph(graph).unwrap();
+        let mut inputs = params;
+        inputs.push(fuseconv::runtime::executor::clone_literal(&x).unwrap());
+        g.run(&inputs).unwrap()[0].to_vec::<f32>().unwrap()
+    };
+    let t = run("teacher_infer", "teacher_init.bin", "teacher");
+    let s = run("student_infer", "student_init.bin", "student");
+    assert_eq!(t.len(), b * classes);
+    assert_eq!(s.len(), b * classes);
+    assert!(t.iter().all(|v| v.is_finite()));
+    assert!(s.iter().all(|v| v.is_finite()));
+    let diff: f32 = t.iter().zip(&s).map(|(a, b)| (a - b).abs()).sum();
+    assert!(diff > 1e-3, "teacher and student identical?");
+}
+
+/// Collapse maps scaffold params (teacher + identity adapters) onto student
+/// shapes, and the collapsed weights reproduce the teacher's centre
+/// row/column (identity-adapter algebra, mirrors python/tests/test_nos.py
+/// but exercised through the compiled HLO graph).
+#[test]
+fn collapse_graph_identity_adapter_algebra() {
+    let Some(rt) = runtime() else { return };
+    let session = Session::new(&rt).unwrap();
+    let teacher = rt.load_init("teacher", "teacher_init.bin").unwrap();
+    let blocks = rt.manifest.const_usize("num_blocks").unwrap();
+    let k = rt.manifest.const_usize("ksize").unwrap();
+    let scaffold = session.scaffold_init(&teacher, blocks, k).unwrap();
+    let g = rt.graph("collapse").unwrap();
+    let out = g.run(&scaffold).unwrap();
+    let student_specs = rt.manifest.param_specs("student").unwrap();
+    assert_eq!(out.len(), student_specs.len());
+    // spot-check block 0: student fuse_row == teacher dw centre column
+    let t_specs = rt.manifest.param_specs("teacher").unwrap();
+    let dw_idx = t_specs.iter().position(|s| s.name == "b0.dw").unwrap();
+    let row_idx = student_specs.iter().position(|s| s.name == "b0.fuse_row").unwrap();
+    let dw = teacher[dw_idx].to_vec::<f32>().unwrap();
+    let row = out[row_idx].to_vec::<f32>().unwrap();
+    let c = t_specs[dw_idx].dims[0];
+    let mid = k / 2;
+    for ch in 0..c / 2 {
+        for t in 0..k {
+            let want = dw[ch * k * k + t * k + mid]; // T_w[ch, t, mid]
+            let got = row[ch * k + t];
+            assert!((want - got).abs() < 1e-5, "ch {ch} tap {t}: {want} vs {got}");
+        }
+    }
+}
+
+/// One NOS step runs and returns finite loss; the scaffold params change.
+#[test]
+fn nos_step_executes() {
+    let Some(rt) = runtime() else { return };
+    let session = Session::new(&rt).unwrap();
+    let teacher = rt.load_init("teacher", "teacher_init.bin").unwrap();
+    let blocks = rt.manifest.const_usize("num_blocks").unwrap();
+    let k = rt.manifest.const_usize("ksize").unwrap();
+    let nsc = rt.manifest.const_usize("num_scaffold_params").unwrap();
+    let nt = rt.manifest.const_usize("num_teacher_params").unwrap();
+    let scaffold = session.scaffold_init(&teacher, blocks, k).unwrap();
+    let g = rt.graph("nos_train_step").unwrap();
+    let (out, log) = session
+        .train_nos(&g, nsc, nt, blocks, scaffold, &teacher, 2, 0.05, 3, 0.5)
+        .unwrap();
+    assert_eq!(out.len(), nsc);
+    assert_eq!(log.entries.len(), 2);
+    assert!(log.entries.iter().all(|(_, l, _)| l.is_finite()));
+}
+
+/// Eval accuracy on untrained params is near chance (sanity of the whole
+/// infer + argmax + labeling path).
+#[test]
+fn untrained_accuracy_near_chance() {
+    let Some(rt) = runtime() else { return };
+    let session = Session::new(&rt).unwrap();
+    let params = rt.load_init("student", "student_init.bin").unwrap();
+    let g = rt.graph("student_infer").unwrap();
+    let acc = session.eval_accuracy(&g, &params, 160).unwrap();
+    assert!(acc < 0.35, "untrained acc suspiciously high: {acc}");
+}
