@@ -6,11 +6,22 @@
 //! make artifacts && cargo run --release --example serve -- [requests]
 //! ```
 
+#[cfg(not(feature = "xla"))]
+fn main() {
+    eprintln!("this example needs the PJRT runtime; rebuild with `--features xla`");
+    std::process::exit(1);
+}
+
+#[cfg(feature = "xla")]
 use fuseconv::coordinator::batcher::BatchPolicy;
+#[cfg(feature = "xla")]
 use fuseconv::coordinator::server::Server;
+#[cfg(feature = "xla")]
 use fuseconv::runtime::{default_artifacts_dir, Manifest, PjrtEngine, Synth};
+#[cfg(feature = "xla")]
 use std::time::{Duration, Instant};
 
+#[cfg(feature = "xla")]
 fn main() {
     let n: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(128);
     let dir = default_artifacts_dir();

@@ -14,8 +14,16 @@
 //! make artifacts && cargo run --release --example train_e2e -- [steps]
 //! ```
 
+#[cfg(not(feature = "xla"))]
+fn main() {
+    eprintln!("this example needs the PJRT runtime; rebuild with `--features xla`");
+    std::process::exit(1);
+}
+
+#[cfg(feature = "xla")]
 use fuseconv::runtime::pipeline::run_nos_pipeline;
 
+#[cfg(feature = "xla")]
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let steps: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(200);

@@ -1,0 +1,31 @@
+"""Collection guards for optional heavy dependencies.
+
+The CI python job (and local runs in minimal environments) must not fail
+at collection time when JAX or hypothesis is absent: every module here
+imports jax at module scope, and test_kernels additionally needs
+hypothesis. Skip collecting what cannot import; pytest still runs (and
+reports) whatever remains.
+"""
+
+import importlib.util
+import sys
+from pathlib import Path
+
+# Make `from compile... import ...` work regardless of invocation cwd.
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+
+
+def _missing(mod: str) -> bool:
+    return importlib.util.find_spec(mod) is None
+
+
+collect_ignore = []
+if _missing("jax"):
+    collect_ignore += [
+        "test_aot.py",
+        "test_kernels.py",
+        "test_model.py",
+        "test_nos.py",
+    ]
+elif _missing("hypothesis"):
+    collect_ignore += ["test_kernels.py"]

@@ -7,52 +7,85 @@
 //!   --fig10  per-bottleneck utilization, base vs FuSe-Half
 //!   --fig11  layerwise DRAM/SRAM bandwidth, MobileNetV3-Large
 //!
+//! Every figure is a sweep (networks × variants × configs); all of them
+//! submit through `sim::sweep::run_sweep` on one shared pool + layer
+//! cache, so the whole bench run prices each distinct layer once.
+//!
 //! Run all: `cargo bench --bench paper_figures`
 
 #[path = "benchkit.rs"]
 mod benchkit;
 
 use benchkit::{section, selected, selectors, write_csv};
+use fuseconv::exec::Pool;
 use fuseconv::nn::models;
 use fuseconv::nn::{fuse_all, OpClass, Variant};
-use fuseconv::sim::{simulate_network, Dataflow, SimConfig};
+use fuseconv::sim::{
+    grid_configs, run_sweep, Dataflow, FuseVariant, LayerCache, SimConfig, SweepOutcome,
+    SweepPlan,
+};
+use std::sync::Arc;
+
+/// Shared sweep substrate for every figure in one bench run.
+struct Ctx {
+    pool: Pool,
+    cache: Arc<LayerCache>,
+}
+
+impl Ctx {
+    fn sweep(&self, plan: &SweepPlan) -> SweepOutcome {
+        run_sweep(plan, &self.pool, &self.cache)
+    }
+}
 
 fn main() {
+    let ctx = Ctx { pool: Pool::new(0), cache: Arc::new(LayerCache::new()) };
     let sel = selectors();
     if selected(&sel, "fig8a") {
-        fig8a();
+        fig8a(&ctx);
     }
     if selected(&sel, "fig8b") {
-        fig8b();
+        fig8b(&ctx);
     }
     if selected(&sel, "fig9a") {
-        fig9a();
+        fig9a(&ctx);
     }
     if selected(&sel, "fig9b") {
-        fig9b();
+        fig9b(&ctx);
     }
     if selected(&sel, "fig10") {
-        fig10();
+        fig10(&ctx);
     }
     if selected(&sel, "fig11") {
-        fig11();
+        fig11(&ctx);
     }
     if selected(&sel, "ablations") {
-        ablations();
+        ablations(&ctx);
     }
+    let cs = ctx.cache.stats();
+    println!(
+        "\n[sweep cache] {} hits / {} misses across all figures ({:.1}% hit rate, {} entries)",
+        cs.hits,
+        cs.misses,
+        100.0 * cs.hit_rate(),
+        cs.entries
+    );
 }
 
 /// Design-choice ablations DESIGN.md calls out (paper §3.3–3.4, §6.1.4):
 /// (a) ST-OS broadcast links on/off, (b) slice-to-row mapping policy,
 /// (c) bandwidth-constrained execution.
-fn ablations() {
+fn ablations(ctx: &Ctx) {
     section("Ablation (a) — ST-OS hardware support on/off (FuSe-Half nets)");
-    let with = SimConfig::default();
-    let without = SimConfig::default().without_stos();
-    for net in models::paper_five() {
-        let half = fuse_all(&net, Variant::Half);
-        let a = simulate_network(&half, &with);
-        let b = simulate_network(&half, &without);
+    let plan = SweepPlan::new(
+        models::paper_five(),
+        vec![FuseVariant::Half],
+        vec![SimConfig::default(), SimConfig::default().without_stos()],
+    );
+    let out = ctx.sweep(&plan);
+    for (i, net) in plan.networks.iter().enumerate() {
+        let a = &out.record(i, 0, 0).sim;
+        let b = &out.record(i, 0, 1).sim;
         println!(
             "{:22} with ST-OS {:>8.3} ms   without {:>8.3} ms   ({:.1}x from the broadcast links)",
             net.name,
@@ -89,14 +122,20 @@ fn ablations() {
     println!("(paper §3.4: spatial-first trades broadcast circuitry for fewer SRAM reads)");
 
     section("Ablation (c) — bandwidth-constrained execution (enforce_dram_bw)");
-    for bw in [8.0, 16.0, 32.0, 64.0, 128.0] {
-        let mut cfg = SimConfig::default();
-        cfg.enforce_dram_bw = true;
-        cfg.dram_bw = bw;
-        let half = fuse_all(&models::by_name("mobilenet-v2").unwrap(), Variant::Half);
-        let base = models::by_name("mobilenet-v2").unwrap();
-        let sb = simulate_network(&base, &cfg);
-        let sh = simulate_network(&half, &cfg);
+    let bws = [8.0, 16.0, 32.0, 64.0, 128.0];
+    let configs: Vec<SimConfig> = bws
+        .iter()
+        .map(|&bw| SimConfig { enforce_dram_bw: true, dram_bw: bw, ..SimConfig::default() })
+        .collect();
+    let plan = SweepPlan::new(
+        vec![models::by_name("mobilenet-v2").unwrap()],
+        vec![FuseVariant::Base, FuseVariant::Half],
+        configs,
+    );
+    let out = ctx.sweep(&plan);
+    for (c, bw) in bws.iter().enumerate() {
+        let sb = &out.record(0, 0, c).sim;
+        let sh = &out.record(0, 1, c).sim;
         println!(
             "dram {bw:>5.0} B/cyc:  base {:>8.3} ms   FuSe-Half {:>8.3} ms   speedup {:>5.2}x",
             sb.latency_ms,
@@ -107,10 +146,22 @@ fn ablations() {
     println!("(ST-OS parallelism is bandwidth-hungry: the speedup grows with DRAM bandwidth)");
 }
 
-fn fig8a() {
+fn fig8a(ctx: &Ctx) {
     section("Fig 8(a) — latency on 16x16: baselines (OS, WS) vs FuSe (ST-OS)");
-    let os = SimConfig::default();
-    let ws = SimConfig::default().with_dataflow(Dataflow::WeightStationary);
+    // Two plans on the shared pool/cache: the figure only needs WS for the
+    // baseline column, so don't simulate Half/Full under WS.
+    let plan = SweepPlan::new(
+        models::paper_five(),
+        vec![FuseVariant::Base, FuseVariant::Half, FuseVariant::Full],
+        vec![SimConfig::default()],
+    );
+    let ws_plan = SweepPlan::new(
+        models::paper_five(),
+        vec![FuseVariant::Base],
+        vec![SimConfig::default().with_dataflow(Dataflow::WeightStationary)],
+    );
+    let out = ctx.sweep(&plan);
+    let ws_out = ctx.sweep(&ws_plan);
     println!(
         "{:22} {:>9} {:>9} {:>9} {:>9} {:>7} {:>7}",
         "network", "OS ms", "WS ms", "half ms", "full ms", "spd-H", "spd-F"
@@ -119,11 +170,11 @@ fn fig8a() {
         String::from("network,base_os_ms,base_ws_ms,half_ms,full_ms,speedup_half,speedup_full\n");
     let mut spd_h = Vec::new();
     let mut spd_f = Vec::new();
-    for net in models::paper_five() {
-        let so = simulate_network(&net, &os);
-        let sw = simulate_network(&net, &ws);
-        let sh = simulate_network(&fuse_all(&net, Variant::Half), &os);
-        let sf = simulate_network(&fuse_all(&net, Variant::Full), &os);
+    for (i, net) in plan.networks.iter().enumerate() {
+        let so = &out.record(i, 0, 0).sim;
+        let sw = &ws_out.record(i, 0, 0).sim;
+        let sh = &out.record(i, 1, 0).sim;
+        let sf = &out.record(i, 2, 0).sim;
         let h = so.total_cycles as f64 / sh.total_cycles as f64;
         let f = so.total_cycles as f64 / sf.total_cycles as f64;
         spd_h.push(h);
@@ -147,13 +198,17 @@ fn fig8a() {
     );
 }
 
-fn fig8b() {
+fn fig8b(ctx: &Ctx) {
     section("Fig 8(b) — per-bottleneck-block speedup, MobileNetV2 FuSe-Half");
-    let cfg = SimConfig::default();
     let base = models::by_name("mobilenet-v2").unwrap();
-    let half = fuse_all(&base, Variant::Half);
-    let sb = simulate_network(&base, &cfg);
-    let sh = simulate_network(&half, &cfg);
+    let plan = SweepPlan::new(
+        vec![base.clone()],
+        vec![FuseVariant::Base, FuseVariant::Half],
+        vec![SimConfig::default()],
+    );
+    let out = ctx.sweep(&plan);
+    let sb = &out.record(0, 0, 0).sim;
+    let sh = &out.record(0, 1, 0).sim;
     let mut csv = String::from("block,base_cycles,fuse_cycles,speedup\n");
     println!("{:>6} {:>12} {:>12} {:>9}", "block", "base cyc", "fuse cyc", "speedup");
     let mut speedups = Vec::new();
@@ -173,14 +228,18 @@ fn fig8b() {
     );
 }
 
-fn fig9a() {
+fn fig9a(ctx: &Ctx) {
     section("Fig 9(a) — latency share per operator class");
-    let cfg = SimConfig::default();
+    let plan = SweepPlan::new(
+        models::paper_five(),
+        vec![FuseVariant::Base, FuseVariant::Half],
+        vec![SimConfig::default()],
+    );
+    let out = ctx.sweep(&plan);
     let mut csv = String::from("network,variant,class,share\n");
-    for net in models::paper_five() {
-        for (variant, n) in [("base", net.clone()), ("fuse-half", fuse_all(&net, Variant::Half))]
-        {
-            let sim = simulate_network(&n, &cfg);
+    for (i, net) in plan.networks.iter().enumerate() {
+        for (v, variant) in [(0, "base"), (1, "fuse-half")] {
+            let sim = &out.record(i, v, 0).sim;
             let by = sim.cycles_by_class();
             let share = |c: OpClass| {
                 *by.get(&c).unwrap_or(&0) as f64 / sim.total_cycles as f64 * 100.0
@@ -210,22 +269,26 @@ fn fig9a() {
     println!("\n(paper: depthwise >90% of baseline latency; FuSe <50% after conversion)");
 }
 
-fn fig9b() {
+fn fig9b(ctx: &Ctx) {
     section("Fig 9(b) — FuSe-Half speedup vs systolic-array size");
     let sizes = [8usize, 16, 32, 64, 128];
+    let plan = SweepPlan::new(
+        models::paper_five(),
+        vec![FuseVariant::Base, FuseVariant::Half],
+        grid_configs(&sizes, &[Dataflow::OutputStationary], &[true]),
+    );
+    let out = ctx.sweep(&plan);
     print!("{:22}", "network");
     for s in sizes {
         print!(" {:>8}", format!("{s}x{s}"));
     }
     println!();
     let mut csv = String::from("network,size,speedup\n");
-    for net in models::paper_five() {
-        let half = fuse_all(&net, Variant::Half);
+    for (i, net) in plan.networks.iter().enumerate() {
         print!("{:22}", net.name);
-        for s in sizes {
-            let cfg = SimConfig::with_size(s);
-            let sb = simulate_network(&net, &cfg);
-            let sh = simulate_network(&half, &cfg);
+        for (c, s) in sizes.iter().enumerate() {
+            let sb = &out.record(i, 0, c).sim;
+            let sh = &out.record(i, 1, c).sim;
             let spd = sb.total_cycles as f64 / sh.total_cycles as f64;
             print!(" {:>7.2}x", spd);
             csv.push_str(&format!("{},{s},{spd:.2}\n", net.name));
@@ -236,14 +299,18 @@ fn fig9b() {
     println!("\n(paper: speedup grows with array size; MobileNetV3-Small saturates early)");
 }
 
-fn fig10() {
+fn fig10(ctx: &Ctx) {
     section("Fig 10 — bottleneck-block PE utilization (base vs FuSe-Half)");
-    let cfg = SimConfig::default();
+    let plan = SweepPlan::new(
+        models::paper_five(),
+        vec![FuseVariant::Base, FuseVariant::Half],
+        vec![SimConfig::default()],
+    );
+    let out = ctx.sweep(&plan);
     let mut csv = String::from("network,block,base_util,fuse_util\n");
-    for net in models::paper_five() {
-        let half = fuse_all(&net, Variant::Half);
-        let sb = simulate_network(&net, &cfg);
-        let sh = simulate_network(&half, &cfg);
+    for (i, net) in plan.networks.iter().enumerate() {
+        let sb = &out.record(i, 0, 0).sim;
+        let sh = &out.record(i, 1, 0).sim;
         let mut base_us = Vec::new();
         let mut fuse_us = Vec::new();
         for b in net.bottleneck_blocks() {
@@ -268,16 +335,18 @@ fn fig10() {
     println!("\n(paper: baselines 5–6%, FuSe 56–100%)");
 }
 
-fn fig11() {
+fn fig11(ctx: &Ctx) {
     section("Fig 11 — layerwise DRAM/SRAM bandwidth, MobileNetV3-Large");
-    let cfg = SimConfig::default();
+    let plan = SweepPlan::new(
+        vec![models::by_name("mobilenet-v3-large").unwrap()],
+        vec![FuseVariant::Base, FuseVariant::Half],
+        vec![SimConfig::default()],
+    );
+    let out = ctx.sweep(&plan);
     let mut csv =
         String::from("variant,layer,class,dram_avg,dram_max,sram_avg,sram_max\n");
-    for (variant, net) in [
-        ("base", models::by_name("mobilenet-v3-large").unwrap()),
-        ("fuse-half", fuse_all(&models::by_name("mobilenet-v3-large").unwrap(), Variant::Half)),
-    ] {
-        let sim = simulate_network(&net, &cfg);
+    for (v, variant) in [(0, "base"), (1, "fuse-half")] {
+        let sim = &out.record(0, v, 0).sim;
         let mut dw_or_fuse_avg: Vec<f64> = Vec::new();
         let mut pw_avg: Vec<f64> = Vec::new();
         let mut dw_max = 0.0f64;

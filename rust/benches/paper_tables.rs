@@ -14,10 +14,12 @@ use benchkit::{section, selected, selectors, write_csv};
 use fuseconv::coordinator::mapping::greedy_half;
 use fuseconv::coordinator::search::{AccuracyPredictor, TrainMethod};
 use fuseconv::coordinator::{Evaluator, HybridSpace};
+use fuseconv::exec::Pool;
 use fuseconv::nn::models;
 use fuseconv::nn::{fuse_all, fuse_network, Network, Selection, Variant};
-use fuseconv::sim::{simulate_network, SimConfig};
+use fuseconv::sim::{run_sweep, FuseVariant, LayerCache, SimConfig, SweepPlan};
 use fuseconv::vlsi;
+use std::sync::Arc;
 
 fn main() {
     let sel = selectors();
@@ -139,7 +141,6 @@ fn table3() {
 
 fn table4() {
     section("Table 4 — NAS networks on a 16x16 systolic array");
-    let cfg = SimConfig::default();
     println!(
         "{:36} {:>8} {:>10} {:>11} {:>10}",
         "network", "acc %", "MACs (M)", "params (M)", "lat (ms)"
@@ -158,9 +159,20 @@ fn table4() {
         ("fuse-ofa-1", 76.7),
         ("fuse-ofa-2", 77.2),
     ];
-    for &(name, acc) in rows {
-        let net = models::by_name(name).unwrap();
-        let sim = simulate_network(&net, &cfg);
+    // The whole comparison column is one sweep: every Table-4 network (and
+    // "ours" — the FuSe-Half conversions) through the 16×16 default config
+    // in parallel on a shared layer cache.
+    let pool = Pool::new(0);
+    let cache = Arc::new(LayerCache::new());
+    let plan = SweepPlan::new(
+        rows.iter().map(|&(name, _)| models::by_name(name).unwrap()).collect(),
+        vec![FuseVariant::Base],
+        vec![SimConfig::default()],
+    );
+    let out = run_sweep(&plan, &pool, &cache);
+    for (i, &(_, acc)) in rows.iter().enumerate() {
+        let net = &plan.networks[i];
+        let sim = &out.record(i, 0, 0).sim;
         println!(
             "{:36} {:>8.2} {:>10.1} {:>11.2} {:>10.3}",
             net.name,
@@ -177,14 +189,23 @@ fn table4() {
             sim.latency_ms
         ));
     }
-    // ours: FuSe-Half conversions of the two strongest baselines (NOS acc)
-    let ev = Evaluator::new(SimConfig::default());
-    for base_name in ["mnasnet-b1", "mobilenet-v3-large"] {
-        let base = models::by_name(base_name).unwrap();
-        let space = HybridSpace::new(&base, &ev);
+    // ours: FuSe-Half conversions of the two strongest baselines (NOS acc),
+    // priced through the same shared cache.
+    let ours_plan = SweepPlan::new(
+        vec![
+            models::by_name("mnasnet-b1").unwrap(),
+            models::by_name("mobilenet-v3-large").unwrap(),
+        ],
+        vec![FuseVariant::Half],
+        vec![SimConfig::default()],
+    );
+    let ours = run_sweep(&ours_plan, &pool, &cache);
+    let ev = Evaluator::with_cache(SimConfig::default(), Arc::clone(&cache));
+    for (i, base) in ours_plan.networks.iter().enumerate() {
+        let space = HybridSpace::new(base, &ev);
         let pred = AccuracyPredictor::for_space(&space);
-        let half = fuse_all(&base, Variant::Half);
-        let sim = simulate_network(&half, &cfg);
+        let half = fuse_all(base, Variant::Half);
+        let sim = &ours.record(i, 0, 0).sim;
         let acc = pred.predict_all(TrainMethod::Nos);
         println!(
             "{:36} {:>8.2} {:>10.1} {:>11.2} {:>10.3}  (ours, NOS)",
@@ -204,10 +225,10 @@ fn table4() {
     }
     write_csv("table4.csv", &csv);
 
-    // Shape checks the paper's narrative depends on:
-    let fuse2 = simulate_network(&models::by_name("fuse-ofa-2").unwrap(), &cfg);
-    let edgetpu = simulate_network(&models::by_name("efficientnet-edgetpu-s").unwrap(), &cfg);
-    let ofa = simulate_network(&models::by_name("ofa").unwrap(), &cfg);
+    // Shape checks the paper's narrative depends on (rows 9, 5, 7 above):
+    let fuse2 = &out.record(9, 0, 0).sim;
+    let edgetpu = &out.record(5, 0, 0).sim;
+    let ofa = &out.record(7, 0, 0).sim;
     println!(
         "\nshape checks: FuSe-OFA-2 faster than EfficientNet-EdgeTPU-S: {} ({:.2}x); \
          faster than OFA: {} ({:.2}x)",

@@ -164,6 +164,7 @@ fn fig15() {
     println!("\n(paper: the +FuSe frontier dominates — more accurate AND faster)");
 }
 
+#[cfg(feature = "xla")]
 fn artifacts() -> Option<std::path::PathBuf> {
     let dir = fuseconv::runtime::default_artifacts_dir();
     if dir.join("manifest.txt").exists() {
@@ -174,6 +175,19 @@ fn artifacts() -> Option<std::path::PathBuf> {
     }
 }
 
+#[cfg(not(feature = "xla"))]
+fn fig12() {
+    section("Fig 12 — teacher/student feature similarity (NOS vs in-place)");
+    println!("  [skip] built without the `xla` feature (PJRT runtime unavailable)");
+}
+
+#[cfg(not(feature = "xla"))]
+fn nos() {
+    section("§6.2/§6.3 — in-place drop and NOS recovery at small scale");
+    println!("  [skip] built without the `xla` feature (PJRT runtime unavailable)");
+}
+
+#[cfg(feature = "xla")]
 fn fig12() {
     section("Fig 12 — teacher/student feature similarity (NOS vs in-place)");
     let Some(dir) = artifacts() else { return };
@@ -204,6 +218,7 @@ fn fig12() {
     }
 }
 
+#[cfg(feature = "xla")]
 fn nos() {
     section("§6.2/§6.3 — in-place drop and NOS recovery at small scale");
     let Some(dir) = artifacts() else { return };

@@ -1,32 +1,23 @@
 //! Network evaluation services on top of the simulator.
 //!
 //! Two layers of reuse make search affordable:
-//! * a layer-level memo cache (identical (op, h, w, cfg) → same `LayerSim`);
+//! * the sweep engine's sharded [`LayerCache`] (identical (op, h, w, cfg)
+//!   → same `LayerSim`), shareable across evaluators, configs, and the
+//!   worker pool;
 //! * `HybridSpace`, which pre-simulates each bottleneck block in both its
 //!   depthwise and FuSe form so evaluating one EA genome is a vector sum
 //!   instead of a network simulation.
 
 use crate::nn::{fuse_network, Layer, Network, Selection, Variant};
-use crate::sim::{simulate_layer, LayerSim, SimConfig};
-use std::collections::HashMap;
-use std::sync::Mutex;
+use crate::sim::{LayerCache, LayerSim, SimConfig};
+use std::sync::Arc;
 
-/// Cache key: the layer's hardware-relevant identity.
-#[derive(Debug, Clone, PartialEq, Eq, Hash)]
-struct LayerKey {
-    op: String, // OpKind derives Debug deterministically
-    h: usize,
-    w: usize,
-}
-
-fn key_of(l: &Layer) -> LayerKey {
-    LayerKey { op: format!("{:?}", l.op), h: l.h, w: l.w }
-}
-
-/// Memoizing evaluator for one hardware configuration.
+/// Memoizing evaluator for one hardware configuration. The cache is the
+/// sweep engine's — pass a shared one via [`Evaluator::with_cache`] to
+/// price layers once across every evaluator/config in the process.
 pub struct Evaluator {
     pub cfg: SimConfig,
-    cache: Mutex<HashMap<LayerKey, (u64, u64)>>, // (total_cycles, pe_cycles)
+    cache: Arc<LayerCache>,
 }
 
 /// Whole-network evaluation summary.
@@ -41,23 +32,24 @@ pub struct NetEval {
 
 impl Evaluator {
     pub fn new(cfg: SimConfig) -> Evaluator {
-        Evaluator { cfg, cache: Mutex::new(HashMap::new()) }
+        Evaluator::with_cache(cfg, Arc::new(LayerCache::new()))
     }
 
-    /// Cycles for one layer (cached).
+    /// Share an existing layer cache (e.g. the sweep engine's or the sim
+    /// server's) so identical layers are priced once process-wide.
+    pub fn with_cache(cfg: SimConfig, cache: Arc<LayerCache>) -> Evaluator {
+        Evaluator { cfg, cache }
+    }
+
+    /// Cycles for one layer (cached). Uses the clone-free shared-result
+    /// path — this is the search hot loop.
     pub fn layer_cycles(&self, l: &Layer) -> u64 {
-        let key = key_of(l);
-        if let Some(&(c, _)) = self.cache.lock().unwrap().get(&key) {
-            return c;
-        }
-        let sim = simulate_layer(l, &self.cfg);
-        self.cache.lock().unwrap().insert(key, (sim.total_cycles, sim.pe_cycles));
-        sim.total_cycles
+        self.cache.simulate_shared(l, &self.cfg).total_cycles
     }
 
-    /// Full (uncached) layer simulation when the detail is needed.
+    /// Full layer simulation when the detail is needed (also cached).
     pub fn layer_detail(&self, l: &Layer) -> LayerSim {
-        simulate_layer(l, &self.cfg)
+        self.cache.simulate(l, &self.cfg)
     }
 
     pub fn eval(&self, net: &Network) -> NetEval {
@@ -71,14 +63,21 @@ impl Evaluator {
         }
     }
 
+    /// Distinct priced layers resident in the underlying cache (spans every
+    /// evaluator sharing it).
     pub fn cache_len(&self) -> usize {
-        self.cache.lock().unwrap().len()
+        self.cache.stats().entries
+    }
+
+    pub fn cache(&self) -> &Arc<LayerCache> {
+        &self.cache
     }
 }
 
 /// Pre-factored hybrid search space over one base network: per bottleneck
 /// block, the cycle/param/mac cost in depthwise form vs FuSe-Half form.
 /// Evaluating a genome (bitmask) is O(#blocks).
+#[derive(Debug, Clone)]
 pub struct HybridSpace {
     pub base: Network,
     pub blocks: Vec<usize>,
@@ -208,6 +207,28 @@ mod tests {
         ev.eval(&net); // second run: all hits
         assert_eq!(ev.cache_len(), n1);
         assert!(n1 <= net.layers.len());
+    }
+
+    #[test]
+    fn evaluators_share_one_cache_across_configs() {
+        use crate::sim::LayerCache;
+        use std::sync::Arc;
+        let cache = Arc::new(LayerCache::new());
+        let ev16 = Evaluator::with_cache(SimConfig::default(), Arc::clone(&cache));
+        let ev32 = Evaluator::with_cache(SimConfig::with_size(32), Arc::clone(&cache));
+        let net = mobilenet_v3::small();
+        ev16.eval(&net);
+        let after16 = cache.stats().entries;
+        ev32.eval(&net);
+        // different config hash ⇒ new entries in the same shared cache
+        assert!(cache.stats().entries > after16);
+        // and both evaluators report the shared total
+        assert_eq!(ev16.cache_len(), ev32.cache_len());
+        // re-evaluating is pure hits
+        let misses = cache.stats().misses;
+        ev16.eval(&net);
+        ev32.eval(&net);
+        assert_eq!(cache.stats().misses, misses);
     }
 
     #[test]

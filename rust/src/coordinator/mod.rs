@@ -9,4 +9,4 @@ pub mod search;
 pub mod server;
 
 pub use evaluator::{Evaluator, HybridSpace, NetEval};
-pub use server::{Engine, Server};
+pub use server::{Engine, Server, SimRequest, SimServer};

@@ -6,7 +6,9 @@
 use super::super::evaluator::HybridSpace;
 use super::pareto::{pareto_front, pareto_ranks, Point};
 use super::predictor::{AccuracyPredictor, TrainMethod};
+use crate::exec::Pool;
 use crate::rng::Rng;
+use std::sync::Arc;
 
 /// Paper §5.3.2 hyperparameters.
 #[derive(Debug, Clone)]
@@ -18,11 +20,22 @@ pub struct EaConfig {
     /// (the rest comes from crossover). Paper: 0.25.
     pub parent_ratio: f64,
     pub seed: u64,
+    /// Worker threads for population evaluation (0 = number of CPUs).
+    /// Genome generation stays serial on the RNG, so results are identical
+    /// for every thread count.
+    pub threads: usize,
 }
 
 impl Default for EaConfig {
     fn default() -> EaConfig {
-        EaConfig { population: 100, iterations: 100, mutation_p: 0.1, parent_ratio: 0.25, seed: 42 }
+        EaConfig {
+            population: 100,
+            iterations: 100,
+            mutation_p: 0.1,
+            parent_ratio: 0.25,
+            seed: 42,
+            threads: 0,
+        }
     }
 }
 
@@ -59,7 +72,23 @@ fn evaluate(
     Candidate { mask, acc, latency_ms, macs, params }
 }
 
-/// Run the EA. Deterministic for a given seed.
+/// Evaluate a batch of genomes across the pool, preserving order (so the
+/// run is deterministic regardless of worker count).
+fn eval_batch(
+    masks: Vec<Vec<bool>>,
+    pool: &Pool,
+    space: &Arc<HybridSpace>,
+    pred: &Arc<AccuracyPredictor>,
+    method: TrainMethod,
+) -> Vec<Candidate> {
+    let space = Arc::clone(space);
+    let pred = Arc::clone(pred);
+    pool.scope_map(masks, move |mask| evaluate(mask, &space, &pred, method))
+}
+
+/// Run the EA. Deterministic for a given seed (and any `threads` setting:
+/// the RNG drives genome *generation* serially; only the per-genome
+/// evaluation fans out across the pool).
 pub fn run_ea(
     space: &HybridSpace,
     pred: &AccuracyPredictor,
@@ -68,17 +97,17 @@ pub fn run_ea(
 ) -> EaResult {
     let n = space.num_blocks();
     let mut rng = Rng::new(cfg.seed);
+    let pool = Pool::new(cfg.threads);
+    let space_arc = Arc::new(space.clone());
+    let pred_arc = Arc::new(pred.clone());
     // Seed the population with the two known anchors (all-depthwise and
     // all-FuSe) plus random genomes — the paper's EA likewise starts from
     // the trained endpoint networks.
-    let mut pop: Vec<Candidate> = vec![
-        evaluate(vec![false; n], space, pred, method),
-        evaluate(vec![true; n], space, pred, method),
-    ];
-    pop.extend((2..cfg.population).map(|_| {
-        let mask: Vec<bool> = (0..n).map(|_| rng.chance(0.5)).collect();
-        evaluate(mask, space, pred, method)
-    }));
+    let mut init: Vec<Vec<bool>> = vec![vec![false; n], vec![true; n]];
+    init.extend(
+        (2..cfg.population).map(|_| (0..n).map(|_| rng.chance(0.5)).collect::<Vec<bool>>()),
+    );
+    let mut pop = eval_batch(init, &pool, &space_arc, &pred_arc, method);
     let mut all: Vec<Candidate> = pop.clone();
 
     for _ in 0..cfg.iterations {
@@ -98,8 +127,11 @@ pub fn run_ea(
         for &i in elite.iter().take(cfg.population / 10) {
             next.push(pop[i].clone());
         }
-        while next.len() < cfg.population {
-            let child_mask = if rng.chance(cfg.parent_ratio) {
+        // Generate child genomes serially (deterministic RNG order), then
+        // submit the whole batch through the pool.
+        let mut children: Vec<Vec<bool>> = Vec::with_capacity(cfg.population - next.len());
+        while next.len() + children.len() < cfg.population {
+            let child_mask: Vec<bool> = if rng.chance(cfg.parent_ratio) {
                 // mutation of one elite parent
                 let p = &pop[*rng.choose(elite)];
                 p.mask.iter().map(|&b| if rng.chance(cfg.mutation_p) { !b } else { b }).collect()
@@ -113,8 +145,9 @@ pub fn run_ea(
                     .map(|(&x, &y)| if rng.chance(0.5) { x } else { y })
                     .collect()
             };
-            next.push(evaluate(child_mask, space, pred, method));
+            children.push(child_mask);
         }
+        next.extend(eval_batch(children, &pool, &space_arc, &pred_arc, method));
         all.extend(next.iter().cloned());
         pop = next;
     }
@@ -161,6 +194,31 @@ mod tests {
         let (_, b) = small_run(7);
         assert_eq!(a.frontier.len(), b.frontier.len());
         assert_eq!(a.best_acc.mask, b.best_acc.mask);
+    }
+
+    #[test]
+    fn thread_count_does_not_change_results() {
+        let ev = Evaluator::new(SimConfig::default());
+        let space = HybridSpace::new(&mobilenet_v3::large(), &ev);
+        let pred = AccuracyPredictor::for_space(&space);
+        let run = |threads: usize| {
+            let cfg = EaConfig {
+                population: 16,
+                iterations: 6,
+                seed: 3,
+                threads,
+                ..EaConfig::default()
+            };
+            run_ea(&space, &pred, TrainMethod::Nos, &cfg)
+        };
+        let a = run(1);
+        let b = run(4);
+        assert_eq!(a.evaluated, b.evaluated);
+        assert_eq!(a.frontier.len(), b.frontier.len());
+        for (x, y) in a.frontier.iter().zip(&b.frontier) {
+            assert_eq!(x.mask, y.mask);
+            assert_eq!(x.latency_ms, y.latency_ms);
+        }
     }
 
     #[test]

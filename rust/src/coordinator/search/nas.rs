@@ -64,7 +64,9 @@ fn evaluate(genome: OfaGenome, ev: &Evaluator) -> NasCandidate {
 }
 
 /// Evolutionary NAS. Population evaluation is parallel (genome realization
-/// + simulation dominate; the evaluator's layer cache is shared).
+/// + simulation dominate; the evaluator's sharded sweep-engine layer cache
+/// is shared across all workers, so recurring block geometries across
+/// genomes are priced once).
 pub fn run_nas(ev: Arc<Evaluator>, cfg: &NasConfig) -> NasResult {
     let mut rng = Rng::new(cfg.seed);
     let pool = Pool::new(cfg.threads);

@@ -64,6 +64,7 @@ fn jitter(net: &str, block: usize) -> f64 {
 }
 
 /// Predictor over one base network's hybrid space.
+#[derive(Debug, Clone)]
 pub struct AccuracyPredictor {
     pub anchor: Anchor,
     /// Per-block share of the total in-place drop (sums to 1).

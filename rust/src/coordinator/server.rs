@@ -1,9 +1,22 @@
-//! Inference-serving loop: a dispatcher thread drains the dynamic batcher
-//! and drives an [`Engine`] (the PJRT executable in production, a mock in
-//! tests). Per-request latency and batch statistics come back with each
-//! response — this is the L3 hot path the §Perf pass profiles.
+//! Serving loops.
+//!
+//! * [`Server`] — inference serving: a dispatcher thread drains the
+//!   dynamic batcher and drives an [`Engine`] (the PJRT executable in
+//!   production, a mock in tests). Per-request latency and batch
+//!   statistics come back with each response — this is the L3 hot path
+//!   the §Perf pass profiles.
+//! * [`SimServer`] — simulation-as-a-service: scenario requests
+//!   (network × variant × config) fan out across the worker pool through
+//!   the sweep engine's shared layer cache, instead of the serial
+//!   one-`simulate_network`-at-a-time loop clients used to run themselves.
 
 use super::batcher::{BatchPolicy, Batcher};
+use crate::exec::Pool;
+use crate::nn::Network;
+use crate::sim::{
+    run_sweep, simulate_network_cached, CacheStats, FuseVariant, LayerCache, NetworkSim,
+    SimConfig, SweepOutcome, SweepPlan,
+};
 use crate::stats::Summary;
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
@@ -191,6 +204,64 @@ fn dispatch_loop<E: Engine>(
     stats
 }
 
+/// One simulation scenario: a network, the FuSe form to apply, and the
+/// hardware config to price it under.
+#[derive(Debug, Clone)]
+pub struct SimRequest {
+    pub network: Network,
+    pub variant: FuseVariant,
+    pub cfg: SimConfig,
+}
+
+/// Simulation-serving handle: submit scenarios, receive [`NetworkSim`]s.
+/// All workers share one sweep-engine layer cache, so a traffic mix that
+/// revisits networks/configs (EA populations, dashboard queries, repeated
+/// what-if scenarios) degenerates to cache lookups.
+pub struct SimServer {
+    pool: Pool,
+    cache: Arc<LayerCache>,
+    submitted: std::sync::atomic::AtomicU64,
+}
+
+impl SimServer {
+    /// `threads == 0` means one worker per CPU.
+    pub fn new(threads: usize) -> SimServer {
+        SimServer::with_cache(threads, Arc::new(LayerCache::new()))
+    }
+
+    /// Share a cache with other subsystems (sweeps, evaluators).
+    pub fn with_cache(threads: usize, cache: Arc<LayerCache>) -> SimServer {
+        SimServer { pool: Pool::new(threads), cache, submitted: 0.into() }
+    }
+
+    /// Submit one scenario; returns a receiver for the result.
+    pub fn submit(&self, req: SimRequest) -> mpsc::Receiver<NetworkSim> {
+        let (tx, rx) = mpsc::channel();
+        let cache = Arc::clone(&self.cache);
+        self.submitted.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        self.pool.spawn(move || {
+            let net = req.variant.apply(&req.network);
+            // The client may have hung up (dropped the receiver); that is
+            // not the server's problem.
+            let _ = tx.send(simulate_network_cached(&net, &req.cfg, &cache));
+        });
+        rx
+    }
+
+    /// Run a whole sweep plan synchronously on the server's pool + cache.
+    pub fn sweep(&self, plan: &SweepPlan) -> SweepOutcome {
+        run_sweep(plan, &self.pool, &self.cache)
+    }
+
+    pub fn submitted(&self) -> u64 {
+        self.submitted.load(std::sync::atomic::Ordering::Relaxed)
+    }
+
+    pub fn cache_stats(&self) -> CacheStats {
+        self.cache.stats()
+    }
+}
+
 #[cfg(test)]
 pub mod testutil {
     use super::*;
@@ -283,6 +354,59 @@ mod tests {
         for rx in rxs {
             assert!(rx.try_recv().is_ok());
         }
+    }
+
+    #[test]
+    fn sim_server_matches_direct_simulation() {
+        use crate::nn::models;
+        use crate::sim::simulate_network;
+        let server = SimServer::new(2);
+        let net = models::by_name("mobilenet-v2").unwrap();
+        let rx = server.submit(SimRequest {
+            network: net.clone(),
+            variant: FuseVariant::Half,
+            cfg: SimConfig::default(),
+        });
+        let sim = rx.recv_timeout(Duration::from_secs(60)).unwrap();
+        let expect = simulate_network(&FuseVariant::Half.apply(&net), &SimConfig::default());
+        assert_eq!(sim.total_cycles, expect.total_cycles);
+        assert_eq!(sim.network, expect.network);
+        assert_eq!(server.submitted(), 1);
+    }
+
+    #[test]
+    fn sim_server_repeat_traffic_hits_cache() {
+        use crate::nn::models;
+        let server = SimServer::new(3);
+        let net = models::by_name("mobilenet-v3-small").unwrap();
+        let mk = || SimRequest {
+            network: net.clone(),
+            variant: FuseVariant::Base,
+            cfg: SimConfig::default(),
+        };
+        let rxs: Vec<_> = (0..6).map(|_| server.submit(mk())).collect();
+        let sims: Vec<_> = rxs
+            .into_iter()
+            .map(|rx| rx.recv_timeout(Duration::from_secs(60)).unwrap())
+            .collect();
+        assert!(sims.windows(2).all(|w| w[0].total_cycles == w[1].total_cycles));
+        let stats = server.cache_stats();
+        assert!(stats.hits > 0, "repeat scenarios never hit the cache: {stats:?}");
+        assert!(stats.entries <= net.layers.len());
+    }
+
+    #[test]
+    fn sim_server_runs_sweep_plans() {
+        use crate::nn::models;
+        let server = SimServer::new(2);
+        let plan = SweepPlan::new(
+            vec![models::by_name("mobilenet-v3-small").unwrap()],
+            vec![FuseVariant::Base, FuseVariant::Half],
+            vec![SimConfig::default(), SimConfig::with_size(8)],
+        );
+        let out = server.sweep(&plan);
+        assert_eq!(out.records().len(), 4);
+        assert!(out.records().iter().all(|r| r.total_cycles() > 0));
     }
 
     #[test]

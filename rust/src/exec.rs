@@ -44,6 +44,13 @@ impl Pool {
         self.workers.len()
     }
 
+    /// Fire-and-forget: enqueue one job. Used by the sim server, where
+    /// requests complete out-of-band via their own reply channels rather
+    /// than through `scope_map`'s fork/join collection.
+    pub fn spawn<F: FnOnce() + Send + 'static>(&self, job: F) {
+        self.tx.as_ref().expect("pool alive").send(Box::new(job)).expect("pool send");
+    }
+
     /// Apply `f` to every item, in parallel, preserving order of results.
     pub fn scope_map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
     where
@@ -128,6 +135,20 @@ mod tests {
     fn zero_means_auto() {
         let pool = Pool::new(0);
         assert!(pool.threads() >= 1);
+    }
+
+    #[test]
+    fn spawn_fire_and_forget() {
+        let pool = Pool::new(2);
+        let (tx, rx) = mpsc::channel();
+        for i in 0..10u64 {
+            let tx = tx.clone();
+            pool.spawn(move || tx.send(i * i).unwrap());
+        }
+        drop(tx);
+        let mut got: Vec<u64> = rx.iter().collect();
+        got.sort_unstable();
+        assert_eq!(got, (0..10).map(|i| i * i).collect::<Vec<_>>());
     }
 
     #[test]

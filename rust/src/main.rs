@@ -3,6 +3,7 @@
 //! Subcommands:
 //!   zoo        list networks with MACs/params
 //!   simulate   run one network through the systolic simulator
+//!   sweep      parallel networks × variants × configs sweep (shared cache)
 //!   speedup    baseline-vs-FuSe comparison (Fig 8a style)
 //!   vlsi       ST-OS area/power overheads (Table 2)
 //!   search-ea  hybrid evolutionary search (Fig 13)
@@ -18,7 +19,10 @@ use fuseconv::coordinator::search::{
 use fuseconv::coordinator::{Evaluator, HybridSpace};
 use fuseconv::nn::models;
 use fuseconv::nn::{fuse_all, Variant};
-use fuseconv::sim::{simulate_network, Dataflow, SimConfig};
+use fuseconv::sim::{
+    grid_configs, run_sweep, run_sweep_serial, simulate_network, Dataflow, FuseVariant,
+    LayerCache, SimConfig, SweepPlan,
+};
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -30,6 +34,7 @@ fn main() {
     let code = match cmd.as_str() {
         "zoo" => cmd_zoo(),
         "simulate" => cmd_simulate(&rest),
+        "sweep" => cmd_sweep(&rest),
         "speedup" => cmd_speedup(&rest),
         "vlsi" => cmd_vlsi(),
         "search-ea" => cmd_search_ea(&rest),
@@ -57,6 +62,8 @@ fn print_help() {
          subcommands:\n  \
          zoo         list model zoo with MACs/params\n  \
          simulate    simulate one network  (--model, --size, --dataflow os|ws, --no-stos)\n  \
+         sweep       parallel zoo×config sweep (--models, --variants, --sizes, --dataflows,\n              \
+                     --stos on|off|both, --threads, --format table|csv|json, --out, --verify)\n  \
          speedup     Fig 8a comparison     (--size)\n  \
          vlsi        Table 2 ST-OS overheads\n  \
          search-ea   hybrid EA search      (--model, --pop, --iters, --seed)\n  \
@@ -139,6 +146,175 @@ fn cmd_simulate(argv: &[String]) -> i32 {
                 l.mem.dram_bw_avg
             );
         }
+    }
+    0
+}
+
+fn cmd_sweep(argv: &[String]) -> i32 {
+    let cli = Cli::new("sweep", "parallel networks × variants × configs simulation sweep")
+        .opt("models", "paper5 | all | comma-separated zoo names", Some("paper5"))
+        .opt("variants", "comma list of base,half,full", Some("base,half,full"))
+        .opt("sizes", "comma list of square array sizes", Some("8,16,32,64"))
+        .opt("dataflows", "comma list of os,ws", Some("os"))
+        .opt("stos", "on | off | both", Some("on"))
+        .opt("threads", "worker threads (0=auto)", Some("0"))
+        .opt("format", "table | csv | json", Some("table"))
+        .opt("out", "write csv/json to this file", None)
+        .flag("verify", "re-run serially and check bit-identical cycle counts");
+    let args = match cli.parse(argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}\n{}", cli.usage());
+            return 2;
+        }
+    };
+
+    // --- grid spec parsing ---
+    let networks: Vec<fuseconv::nn::Network> = match args.str("models").as_str() {
+        "paper5" => models::paper_five(),
+        "all" => models::ZOO_NAMES.iter().map(|n| models::by_name(n).unwrap()).collect(),
+        list => {
+            let mut nets = Vec::new();
+            for name in list.split(',').filter(|s| !s.is_empty()) {
+                match models::by_name(name) {
+                    Some(n) => nets.push(n),
+                    None => {
+                        eprintln!("unknown model {name:?}; try `fuseconv zoo`");
+                        return 2;
+                    }
+                }
+            }
+            nets
+        }
+    };
+    let mut variants = Vec::new();
+    for v in args.str("variants").split(',').filter(|s| !s.is_empty()) {
+        variants.push(match v {
+            "base" => FuseVariant::Base,
+            "half" => FuseVariant::Half,
+            "full" => FuseVariant::Full,
+            other => {
+                eprintln!("unknown variant {other:?} (want base|half|full)");
+                return 2;
+            }
+        });
+    }
+    let mut sizes = Vec::new();
+    for s in args.str("sizes").split(',').filter(|s| !s.is_empty()) {
+        match s.parse::<usize>() {
+            Ok(n) if n > 0 => sizes.push(n),
+            _ => {
+                eprintln!("bad array size {s:?}");
+                return 2;
+            }
+        }
+    }
+    let mut dataflows = Vec::new();
+    for d in args.str("dataflows").split(',').filter(|s| !s.is_empty()) {
+        dataflows.push(match d {
+            "os" => Dataflow::OutputStationary,
+            "ws" => Dataflow::WeightStationary,
+            other => {
+                eprintln!("unknown dataflow {other:?} (want os|ws)");
+                return 2;
+            }
+        });
+    }
+    let stos_modes: Vec<bool> = match args.str("stos").as_str() {
+        "on" => vec![true],
+        "off" => vec![false],
+        "both" => vec![true, false],
+        other => {
+            eprintln!("bad --stos {other:?} (want on|off|both)");
+            return 2;
+        }
+    };
+
+    let plan = SweepPlan::new(networks, variants, grid_configs(&sizes, &dataflows, &stos_modes));
+    if plan.is_empty() {
+        eprintln!("empty sweep (no models, variants, or configs)");
+        return 2;
+    }
+
+    // --- run ---
+    let threads = match args.usize("threads") {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("{e}\n{}", cli.usage());
+            return 2;
+        }
+    };
+    let pool = fuseconv::exec::Pool::new(threads);
+    let cache = std::sync::Arc::new(LayerCache::new());
+    let t0 = std::time::Instant::now();
+    let out = run_sweep(&plan, &pool, &cache);
+    let wall = t0.elapsed().as_secs_f64();
+
+    // --- report ---
+    match args.str("format").as_str() {
+        "csv" => print!("{}", out.to_csv()),
+        "json" => println!("{}", out.to_json()),
+        _ => {
+            println!(
+                "{:26} {:10} {:20} {:>14} {:>10} {:>7}",
+                "network", "variant", "config", "cycles", "ms", "util"
+            );
+            for r in out.records() {
+                println!(
+                    "{:26} {:10} {:20} {:>14} {:>10.3} {:>6.1}%",
+                    r.network,
+                    r.variant.label(),
+                    r.cfg.label(),
+                    r.sim.total_cycles,
+                    r.sim.latency_ms,
+                    100.0 * r.sim.overall_utilization()
+                );
+            }
+        }
+    }
+    if let Some(path) = args.get("out") {
+        let body = if args.str("format") == "json" { out.to_json() } else { out.to_csv() };
+        if let Err(e) = std::fs::write(path, body) {
+            eprintln!("writing {path}: {e}");
+            return 1;
+        }
+        eprintln!("# wrote {path}");
+    }
+    let cs = out.cache_stats;
+    eprintln!(
+        "# {} simulations on {} threads in {wall:.2}s; shared layer cache: {} hits / {} misses \
+         ({:.1}% hit rate, {} entries; schedule reuse {} hits)",
+        plan.len(),
+        pool.threads(),
+        cs.hits,
+        cs.misses,
+        100.0 * cs.hit_rate(),
+        cs.entries,
+        cs.sched_hits,
+    );
+
+    // --- serial cross-check ---
+    if args.flag("verify") {
+        let serial = run_sweep_serial(&plan);
+        let mut bad = 0;
+        for (a, b) in serial.records().iter().zip(out.records()) {
+            if a.total_cycles() != b.total_cycles() {
+                eprintln!(
+                    "MISMATCH {} {} {}: serial {} != parallel {}",
+                    a.network,
+                    a.variant.label(),
+                    a.cfg.label(),
+                    a.total_cycles(),
+                    b.total_cycles()
+                );
+                bad += 1;
+            }
+        }
+        if bad > 0 {
+            eprintln!("# verify FAILED: {bad}/{} cells differ", plan.len());
+            return 1;
+        }
+        eprintln!("# verify OK: all {} cells bit-identical to the serial path", plan.len());
     }
     0
 }
@@ -293,6 +469,19 @@ fn cmd_trace(argv: &[String]) -> i32 {
     0
 }
 
+#[cfg(not(feature = "xla"))]
+fn cmd_train(_argv: &[String]) -> i32 {
+    eprintln!("`train` needs the PJRT runtime; rebuild with `--features xla`");
+    1
+}
+
+#[cfg(not(feature = "xla"))]
+fn cmd_serve(_argv: &[String]) -> i32 {
+    eprintln!("`serve` needs the PJRT runtime; rebuild with `--features xla`");
+    1
+}
+
+#[cfg(feature = "xla")]
 fn cmd_train(argv: &[String]) -> i32 {
     let cli = Cli::new("train", "end-to-end NOS pipeline on AOT artifacts")
         .opt("artifacts", "artifacts dir", Some("artifacts"))
@@ -317,6 +506,7 @@ fn cmd_train(argv: &[String]) -> i32 {
     }
 }
 
+#[cfg(feature = "xla")]
 fn cmd_serve(argv: &[String]) -> i32 {
     let cli = Cli::new("serve", "batched serving demo")
         .opt("artifacts", "artifacts dir", Some("artifacts"))

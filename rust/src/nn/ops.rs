@@ -19,7 +19,7 @@ pub enum Act {
 }
 
 /// One hardware-mappable operator.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum OpKind {
     /// Standard spatial convolution `k×k`, `cin → cout`.
     Conv2d { k: usize, stride: usize, cin: usize, cout: usize },

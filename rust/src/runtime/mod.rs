@@ -3,16 +3,29 @@
 //! everything here is Python-free.
 
 pub mod data;
-pub mod engine;
-pub mod executor;
 pub mod manifest;
+
+// The PJRT execution path needs the external `xla` bindings crate, which is
+// unavailable in the offline build environment; it compiles only under
+// `--features xla`. Everything else (synthetic data, the artifact manifest,
+// the simulator-backed serving path) stays in the default build.
+#[cfg(feature = "xla")]
+pub mod engine;
+#[cfg(feature = "xla")]
+pub mod executor;
+#[cfg(feature = "xla")]
 pub mod pipeline;
+#[cfg(feature = "xla")]
 pub mod training;
 
 pub use data::Synth;
-pub use engine::PjrtEngine;
-pub use executor::{literal_f32, literal_i32, Graph, Runtime};
 pub use manifest::Manifest;
+
+#[cfg(feature = "xla")]
+pub use engine::PjrtEngine;
+#[cfg(feature = "xla")]
+pub use executor::{literal_f32, literal_i32, Graph, Runtime};
+#[cfg(feature = "xla")]
 pub use training::{cosine_lr, Session, TrainLog};
 
 /// Default artifacts directory relative to the crate root.

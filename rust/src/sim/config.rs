@@ -3,14 +3,14 @@
 /// Dataflow executed by the PE array for *GEMM-shaped* operators
 /// (standard conv via im2col, pointwise, FC). FuSe layers additionally
 /// use ST-OS when `stos` is enabled, regardless of this baseline choice.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Dataflow {
     OutputStationary,
     WeightStationary,
 }
 
 /// ST-OS slice-to-row mapping policy (paper §3.4).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum MappingPolicy {
     /// Rows that share a channel get the same filter: one broadcast serves
     /// many rows → fewest weight-SRAM reads, needs multi-row broadcast.
@@ -105,6 +105,51 @@ impl SimConfig {
     pub fn cycles_to_ms(&self, cycles: u64) -> f64 {
         cycles as f64 / (self.freq_mhz as f64 * 1e3)
     }
+
+    /// Human-readable config label, e.g. `16x16 OutputStationary+ST-OS`.
+    pub fn label(&self) -> String {
+        format!(
+            "{}x{} {:?}{}",
+            self.rows,
+            self.cols,
+            self.dataflow,
+            if self.stos { "+ST-OS" } else { "" }
+        )
+    }
+
+    /// Hash of every field that affects layer *lowering* (the fold
+    /// schedule): array geometry, SRAM sizes, element width, dataflow,
+    /// ST-OS support, and the mapping policy. Two configs with equal
+    /// schedule keys produce identical `FoldSet`s for every layer, so the
+    /// sweep engine lowers once and re-prices per memory model.
+    pub fn schedule_key(&self) -> u64 {
+        use std::hash::{Hash, Hasher};
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        self.rows.hash(&mut h);
+        self.cols.hash(&mut h);
+        self.ifmap_sram_kb.hash(&mut h);
+        self.weight_sram_kb.hash(&mut h);
+        self.ofmap_sram_kb.hash(&mut h);
+        self.bytes_per_elem.hash(&mut h);
+        self.dataflow.hash(&mut h);
+        self.stos.hash(&mut h);
+        self.mapping.hash(&mut h);
+        h.finish()
+    }
+
+    /// Hash of every field that affects a layer's *simulation result*
+    /// (schedule fields plus the memory model). Frequency is deliberately
+    /// excluded: it only scales cycles into milliseconds at the network
+    /// level, so configs differing only in `freq_mhz` share cache entries.
+    pub fn price_key(&self) -> u64 {
+        use std::hash::{Hash, Hasher};
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        self.schedule_key().hash(&mut h);
+        self.dram_bw.to_bits().hash(&mut h);
+        self.enforce_dram_bw.hash(&mut h);
+        h.finish()
+    }
+
 }
 
 #[cfg(test)]
@@ -133,5 +178,40 @@ mod tests {
     fn with_size_square() {
         let c = SimConfig::with_size(64);
         assert_eq!(c.num_pes(), 4096);
+    }
+
+    #[test]
+    fn schedule_key_ignores_memory_model_fields() {
+        let a = SimConfig::default();
+        let b = SimConfig {
+            dram_bw: 64.0,
+            enforce_dram_bw: true,
+            freq_mhz: 500,
+            ..SimConfig::default()
+        };
+        assert_eq!(a.schedule_key(), b.schedule_key());
+        assert_ne!(a.price_key(), b.price_key());
+        // but geometry changes both
+        let c = SimConfig::with_size(32);
+        assert_ne!(a.schedule_key(), c.schedule_key());
+        assert_ne!(a.price_key(), c.price_key());
+    }
+
+    #[test]
+    fn price_key_ignores_frequency_only() {
+        let a = SimConfig::default();
+        let b = SimConfig { freq_mhz: 500, ..SimConfig::default() };
+        assert_eq!(a.price_key(), b.price_key());
+    }
+
+    #[test]
+    fn label_mentions_geometry_and_stos() {
+        let l = SimConfig::default().label();
+        assert!(l.contains("16x16"));
+        assert!(l.contains("ST-OS"));
+        let rect = SimConfig { rows: 8, cols: 32, ..SimConfig::default() };
+        let l = rect.without_stos().label();
+        assert!(l.contains("8x32"));
+        assert!(!l.contains("ST-OS"));
     }
 }

@@ -37,10 +37,11 @@ pub struct NetworkSim {
     pub layers: Vec<LayerSim>,
     pub total_cycles: u64,
     pub latency_ms: f64,
-}
-
-fn ceil_div(a: usize, b: usize) -> usize {
-    (a + b - 1) / b
+    /// PE-array size of the config this was simulated under (carried at
+    /// construction; utilization denominators must not be reverse-
+    /// engineered from per-layer utilization, which is wrong for arrays
+    /// whose layers all have zero utilization).
+    pub num_pes: usize,
 }
 
 /// Lower one layer to its fold schedule.
@@ -124,7 +125,7 @@ pub fn schedule_layer(layer: &Layer, cfg: &SimConfig) -> FoldSet {
         OpKind::SqueezeExcite { c, reduced } => {
             // pool (adder tree) + 2 tiny GEMVs + scale
             let mut fs = FoldSet::new();
-            fs.push(Fold::once(ceil_div(layer.h * layer.w * c, cfg.cols) as u64));
+            fs.push(Fold::once((layer.h * layer.w * c).div_ceil(cfg.cols) as u64));
             for g in [
                 Gemm { m: 1, n: reduced, k: c, ifmap_unique: c as u64, weight_unique: (c * reduced) as u64 },
                 Gemm { m: 1, n: c, k: reduced, ifmap_unique: reduced as u64, weight_unique: (c * reduced) as u64 },
@@ -133,11 +134,11 @@ pub fn schedule_layer(layer: &Layer, cfg: &SimConfig) -> FoldSet {
                     fs.push(f);
                 }
             }
-            fs.push(Fold::once(ceil_div(layer.h * layer.w * c, cfg.cols) as u64));
+            fs.push(Fold::once((layer.h * layer.w * c).div_ceil(cfg.cols) as u64));
             fs
         }
         OpKind::GlobalPool { c } => {
-            let mut f = Fold::once(ceil_div(layer.h * layer.w * c, cfg.cols) as u64);
+            let mut f = Fold::once((layer.h * layer.w * c).div_ceil(cfg.cols) as u64);
             f.dram_read_bytes = (layer.h * layer.w * c * cfg.bytes_per_elem) as u64;
             f.dram_write_bytes = (c * cfg.bytes_per_elem) as u64;
             let mut fs = FoldSet::new();
@@ -146,7 +147,7 @@ pub fn schedule_layer(layer: &Layer, cfg: &SimConfig) -> FoldSet {
         }
         OpKind::Add { c } => {
             let elems = layer.h * layer.w * c;
-            let mut f = Fold::once(ceil_div(elems, cfg.cols) as u64);
+            let mut f = Fold::once(elems.div_ceil(cfg.cols) as u64);
             f.dram_read_bytes = (2 * elems * cfg.bytes_per_elem) as u64;
             f.dram_write_bytes = (elems * cfg.bytes_per_elem) as u64;
             let mut fs = FoldSet::new();
@@ -156,10 +157,12 @@ pub fn schedule_layer(layer: &Layer, cfg: &SimConfig) -> FoldSet {
     }
 }
 
-/// Simulate one layer: schedule + memory model + utilization.
-pub fn simulate_layer(layer: &Layer, cfg: &SimConfig) -> LayerSim {
-    let fs = schedule_layer(layer, cfg);
-    let mem = apply_memory(&fs, cfg);
+/// Price an already-lowered schedule: memory model + utilization. The
+/// schedule-once/price-many split lets callers (the sweep engine) reuse one
+/// `FoldSet` across configs that differ only in memory-model fields — see
+/// [`SimConfig::schedule_key`] vs [`SimConfig::price_key`].
+pub fn price_layer(layer: &Layer, fs: &FoldSet, cfg: &SimConfig) -> LayerSim {
+    let mem = apply_memory(fs, cfg);
     let pe_cycles = fs.pe_cycles();
     let denom = (mem.total_cycles as f64) * cfg.num_pes() as f64;
     LayerSim {
@@ -176,26 +179,32 @@ pub fn simulate_layer(layer: &Layer, cfg: &SimConfig) -> LayerSim {
     }
 }
 
+/// Simulate one layer: schedule + memory model + utilization.
+pub fn simulate_layer(layer: &Layer, cfg: &SimConfig) -> LayerSim {
+    price_layer(layer, &schedule_layer(layer, cfg), cfg)
+}
+
 /// Simulate a whole network (layers execute back-to-back, as in SCALE-Sim).
 pub fn simulate_network(net: &Network, cfg: &SimConfig) -> NetworkSim {
     let layers: Vec<LayerSim> = net.layers.iter().map(|l| simulate_layer(l, cfg)).collect();
-    let total_cycles = layers.iter().map(|l| l.total_cycles).sum();
-    NetworkSim {
-        network: net.name.clone(),
-        config_label: format!(
-            "{}x{} {:?}{}",
-            cfg.rows,
-            cfg.cols,
-            cfg.dataflow,
-            if cfg.stos { "+ST-OS" } else { "" }
-        ),
-        layers,
-        total_cycles,
-        latency_ms: cfg.cycles_to_ms(total_cycles),
-    }
+    NetworkSim::assemble(net.name.clone(), layers, cfg)
 }
 
 impl NetworkSim {
+    /// Assemble a network result from per-layer simulations (used by both
+    /// the serial driver above and the sweep engine's cached path).
+    pub fn assemble(network: String, layers: Vec<LayerSim>, cfg: &SimConfig) -> NetworkSim {
+        let total_cycles = layers.iter().map(|l| l.total_cycles).sum();
+        NetworkSim {
+            network,
+            config_label: cfg.label(),
+            layers,
+            total_cycles,
+            latency_ms: cfg.cycles_to_ms(total_cycles),
+            num_pes: cfg.num_pes(),
+        }
+    }
+
     /// Blended utilization of one bottleneck block (Fig 10).
     pub fn block_utilization(&self, block: usize) -> f64 {
         let ls: Vec<&LayerSim> = self.layers.iter().filter(|l| l.block == Some(block)).collect();
@@ -205,18 +214,7 @@ impl NetworkSim {
             return 0.0;
         }
         // denominator uses full-array residency
-        pe as f64 / (cycles as f64 * self.num_pes_guess())
-    }
-
-    fn num_pes_guess(&self) -> f64 {
-        // utilization fields were computed against cfg; recover array size
-        // from any layer with nonzero pe_cycles.
-        for l in &self.layers {
-            if l.utilization > 0.0 && l.total_cycles > 0 {
-                return l.pe_cycles as f64 / (l.utilization * l.total_cycles as f64);
-            }
-        }
-        256.0
+        pe as f64 / (cycles as f64 * self.num_pes as f64)
     }
 
     /// Cycles of one block.
@@ -236,7 +234,7 @@ impl NetworkSim {
     /// Whole-network average utilization.
     pub fn overall_utilization(&self) -> f64 {
         let pe: u64 = self.layers.iter().map(|l| l.pe_cycles).sum();
-        pe as f64 / (self.total_cycles as f64 * self.num_pes_guess())
+        pe as f64 / (self.total_cycles as f64 * self.num_pes as f64)
     }
 }
 
@@ -334,5 +332,46 @@ mod tests {
         let net = mobilenet_v2::build();
         let sim = simulate_network(&net, &cfg);
         assert!(sim.total_cycles > 0);
+    }
+
+    #[test]
+    fn num_pes_carried_from_config_even_with_zero_util_layers() {
+        // A network of MAC-free ops has zero utilization everywhere; the
+        // old reverse-engineering fallback reported 256 PEs regardless of
+        // the actual array. The field must come from the config.
+        let cfg = SimConfig::with_size(32);
+        let net = Network {
+            name: "pool-only".into(),
+            layers: vec![
+                Layer::new("g", OpKind::GlobalPool { c: 64 }, 7, 7),
+                Layer::new("a", OpKind::Add { c: 64 }, 7, 7),
+            ],
+            num_blocks: 0,
+        };
+        let sim = simulate_network(&net, &cfg);
+        assert_eq!(sim.num_pes, 1024);
+        assert_eq!(sim.overall_utilization(), 0.0);
+        // and on a default run it matches the config too
+        let sim = simulate_network(&mobilenet_v2::build(), &SimConfig::default());
+        assert_eq!(sim.num_pes, 256);
+    }
+
+    #[test]
+    fn schedule_once_price_many_matches_direct_simulation() {
+        let base = SimConfig::default();
+        let throttled =
+            SimConfig { enforce_dram_bw: true, dram_bw: 4.0, ..SimConfig::default() };
+        assert_eq!(base.schedule_key(), throttled.schedule_key());
+
+        let l = Layer::new("pw", OpKind::Pointwise { cin: 96, cout: 192 }, 28, 28);
+        // Lower once under the shared schedule, price under both configs.
+        let fs = schedule_layer(&l, &base);
+        for cfg in [&base, &throttled] {
+            let priced = price_layer(&l, &fs, cfg);
+            let direct = simulate_layer(&l, cfg);
+            assert_eq!(priced.total_cycles, direct.total_cycles);
+            assert_eq!(priced.stall_cycles, direct.stall_cycles);
+            assert_eq!(priced.pe_cycles, direct.pe_cycles);
+        }
     }
 }

@@ -24,10 +24,6 @@ pub struct Gemm {
     pub weight_unique: u64,
 }
 
-fn ceil_div(a: usize, b: usize) -> usize {
-    (a + b - 1) / b
-}
-
 /// Words per cycle the im2col gather unit can fetch from the ifmap SRAM.
 /// One gathered input row is *shared across all active columns* (filter
 /// reuse — Fig 3a); depthwise has a single active column, so its gather
@@ -51,8 +47,8 @@ pub const GATHER_WIDTH: usize = 4;
 pub fn os_schedule(g: &Gemm, cfg: &SimConfig) -> FoldSet {
     let (r, c) = (cfg.rows, cfg.cols);
     let bpe = cfg.bytes_per_elem as u64;
-    let rt = ceil_div(g.m, r);
-    let ct = ceil_div(g.n, c);
+    let rt = g.m.div_ceil(r);
+    let ct = g.n.div_ceil(c);
 
     // Does the whole ifmap fit in its SRAM? If not, every column-tile pass
     // re-reads it from DRAM.
@@ -84,7 +80,7 @@ pub fn os_schedule(g: &Gemm, cfg: &SimConfig) -> FoldSet {
             } else {
                 // gather-bound: full skew every fold + serialized gather
                 let skew = (2 * r_used + c_used + g.k).saturating_sub(2);
-                let gather = ceil_div(r_used * g.k, GATHER_WIDTH * c_used);
+                let gather = (r_used * g.k).div_ceil(GATHER_WIDTH * c_used);
                 (skew + gather) as u64
             };
             let mut f = Fold::once(duration);
@@ -114,8 +110,8 @@ pub fn os_schedule(g: &Gemm, cfg: &SimConfig) -> FoldSet {
 pub fn ws_schedule(g: &Gemm, cfg: &SimConfig) -> FoldSet {
     let (r, c) = (cfg.rows, cfg.cols);
     let bpe = cfg.bytes_per_elem as u64;
-    let kt = ceil_div(g.k, r);
-    let ct = ceil_div(g.n, c);
+    let kt = g.k.div_ceil(r);
+    let ct = g.n.div_ceil(c);
 
     let ifmap_bytes = g.ifmap_unique * bpe;
     let ifmap_passes = if ifmap_bytes <= cfg.ifmap_sram_bytes() as u64 { 1 } else { ct as u64 };

@@ -9,7 +9,12 @@ pub mod fold;
 pub mod gemm;
 pub mod memory;
 pub mod stos;
+pub mod sweep;
 pub mod trace;
 
 pub use config::{Dataflow, MappingPolicy, SimConfig};
-pub use engine::{simulate_layer, simulate_network, LayerSim, NetworkSim};
+pub use engine::{price_layer, simulate_layer, simulate_network, LayerSim, NetworkSim};
+pub use sweep::{
+    grid_configs, run_sweep, run_sweep_serial, simulate_network_cached, CacheStats, FuseVariant,
+    LayerCache, SweepOutcome, SweepPlan, SweepRecord,
+};

@@ -30,10 +30,6 @@ pub struct Conv1dSet {
     pub ifmap_unique: u64,
 }
 
-fn ceil_div(a: usize, b: usize) -> usize {
-    (a + b - 1) / b
-}
-
 /// Distinct filters resident across `r_used` concurrently-scheduled rows,
 /// under the given mapping policy (paper §3.4). Spatial-first groups rows
 /// by channel so one broadcast serves the group; channels-first gives each
@@ -41,7 +37,7 @@ fn ceil_div(a: usize, b: usize) -> usize {
 /// hybrid = channels-first until channels run out, then spill spatially.
 fn distinct_filters(policy: MappingPolicy, r_used: usize, set: &Conv1dSet) -> usize {
     match policy {
-        MappingPolicy::SpatialFirst => ceil_div(r_used, set.slices_per_channel.max(1)),
+        MappingPolicy::SpatialFirst => r_used.div_ceil(set.slices_per_channel.max(1)),
         MappingPolicy::ChannelsFirst | MappingPolicy::Hybrid => r_used.min(set.channels),
     }
 }
@@ -52,7 +48,7 @@ pub fn stos_schedule(set: &Conv1dSet, cfg: &SimConfig) -> FoldSet {
     let (r, c) = (cfg.rows, cfg.cols);
     let bpe = cfg.bytes_per_elem as u64;
     let num_slices = set.channels * set.slices_per_channel;
-    let col_tiles = ceil_div(set.out_len, c);
+    let col_tiles = set.out_len.div_ceil(c);
     let total_out = (num_slices * set.out_len) as u64;
     // Ifmap DRAM: each slice streams once; adjacent col tiles share a
     // (k - stride) halo, refetched per extra tile.
@@ -71,7 +67,7 @@ pub fn stos_schedule(set: &Conv1dSet, cfg: &SimConfig) -> FoldSet {
         let c_used = if tile == col_tiles - 1 { set.out_len - tile * c } else { c };
         // All slices need this tile; slices are laid across rows in
         // mapping-policy order, `r` per round.
-        let rounds = ceil_div(num_slices, r);
+        let rounds = num_slices.div_ceil(r);
         for round in 0..rounds {
             let r_used = if round == rounds - 1 { num_slices - round * r } else { r };
             let filters = distinct_filters(cfg.mapping, r_used, set);

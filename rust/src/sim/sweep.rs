@@ -1,0 +1,547 @@
+//! Parallel sweep engine: networks × FuSe variants × `SimConfig` grids
+//! fanned out across the [`Pool`](crate::exec::Pool), with a thread-shared
+//! sharded layer cache so identical layers are priced once across the
+//! whole zoo.
+//!
+//! Every headline number in the paper (Figs 8–10, Table 3) is a sweep of
+//! many networks through many simulator configurations, and the layer
+//! population is massively redundant: the FuSe transform leaves pointwise/
+//! stem/head layers untouched, the zoo shares bottleneck geometries, and a
+//! config grid re-simulates every network per point. The cache is two
+//! level, mirroring the schedule-once/price-many split in
+//! [`engine`](super::engine):
+//!
+//! * **schedule cache** — (op, h, w, [`SimConfig::schedule_key`]) →
+//!   [`FoldSet`]: configs that differ only in memory-model fields (DRAM
+//!   bandwidth, throttling) share one lowering;
+//! * **layer cache** — (op, h, w, [`SimConfig::price_key`]) →
+//!   [`LayerSim`]: the fully priced result, shared across networks,
+//!   variants, and frequency-only config changes.
+//!
+//! Determinism: a sweep's records are indexed by (network, variant,
+//! config) plan position, every layer simulation is a pure function of
+//! (layer, config), and [`Pool::scope_map`] preserves submission order —
+//! so results are bit-identical to the serial path for any worker count.
+
+use super::config::{Dataflow, SimConfig};
+use super::engine::{price_layer, schedule_layer, simulate_network, LayerSim, NetworkSim};
+use super::fold::FoldSet;
+use crate::exec::Pool;
+use crate::nn::{fuse_all, Layer, Network, OpKind, Variant};
+use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Which form of each network a sweep simulates.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FuseVariant {
+    /// The depthwise-separable baseline, unmodified.
+    Base,
+    /// FuSe-Half: every bottleneck's depthwise replaced, C/2 + C/2.
+    Half,
+    /// FuSe-Full: both orientations over all channels (widens SE/project).
+    Full,
+}
+
+impl FuseVariant {
+    pub const ALL: [FuseVariant; 3] = [FuseVariant::Base, FuseVariant::Half, FuseVariant::Full];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            FuseVariant::Base => "base",
+            FuseVariant::Half => "fuse-half",
+            FuseVariant::Full => "fuse-full",
+        }
+    }
+
+    /// Realize the variant (Base is a clone; Half/Full apply the transform).
+    pub fn apply(&self, net: &Network) -> Network {
+        match self {
+            FuseVariant::Base => net.clone(),
+            FuseVariant::Half => fuse_all(net, Variant::Half),
+            FuseVariant::Full => fuse_all(net, Variant::Full),
+        }
+    }
+}
+
+/// Cache key: the layer's hardware-relevant identity plus a config hash.
+/// `name`, `block`, and `act` are excluded — they do not affect cycles —
+/// and are re-attached on retrieval.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+struct Key {
+    op: OpKind,
+    h: usize,
+    w: usize,
+    cfg: u64,
+}
+
+impl Key {
+    fn shard(&self) -> usize {
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        self.hash(&mut h);
+        (h.finish() as usize) % SHARDS
+    }
+}
+
+const SHARDS: usize = 64;
+
+/// Cache counters at a point in time.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CacheStats {
+    /// Priced-layer cache hits/misses.
+    pub hits: u64,
+    pub misses: u64,
+    /// Schedule (lowering) cache hits/misses.
+    pub sched_hits: u64,
+    pub sched_misses: u64,
+    /// Distinct priced layers resident.
+    pub entries: usize,
+}
+
+impl CacheStats {
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// Thread-shared, sharded layer-simulation cache. Generalizes the memo in
+/// `coordinator::evaluator` to span multiple configs (the key carries the
+/// config hash), so one cache serves a whole sweep grid, every search
+/// worker, and the sim server at once. Sharding keeps lock contention
+/// negligible under pool fan-out.
+pub struct LayerCache {
+    sims: Vec<Mutex<HashMap<Key, Arc<LayerSim>>>>,
+    scheds: Vec<Mutex<HashMap<Key, Arc<FoldSet>>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    sched_hits: AtomicU64,
+    sched_misses: AtomicU64,
+}
+
+impl Default for LayerCache {
+    fn default() -> LayerCache {
+        LayerCache::new()
+    }
+}
+
+impl LayerCache {
+    pub fn new() -> LayerCache {
+        LayerCache {
+            sims: (0..SHARDS).map(|_| Mutex::new(HashMap::new())).collect(),
+            scheds: (0..SHARDS).map(|_| Mutex::new(HashMap::new())).collect(),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            sched_hits: AtomicU64::new(0),
+            sched_misses: AtomicU64::new(0),
+        }
+    }
+
+    /// The layer's fold schedule under `cfg`, cached per schedule key.
+    pub fn schedule(&self, layer: &Layer, cfg: &SimConfig) -> Arc<FoldSet> {
+        let key = Key { op: layer.op, h: layer.h, w: layer.w, cfg: cfg.schedule_key() };
+        let shard = &self.scheds[key.shard()];
+        if let Some(fs) = shard.lock().unwrap().get(&key) {
+            self.sched_hits.fetch_add(1, Ordering::Relaxed);
+            return Arc::clone(fs);
+        }
+        self.sched_misses.fetch_add(1, Ordering::Relaxed);
+        let fs = Arc::new(schedule_layer(layer, cfg));
+        shard.lock().unwrap().entry(key).or_insert_with(|| Arc::clone(&fs));
+        fs
+    }
+
+    /// Simulate one layer through the cache. Identity fields (`name`,
+    /// `block`) are patched from the concrete layer so callers see exactly
+    /// what `simulate_layer` would have returned.
+    pub fn simulate(&self, layer: &Layer, cfg: &SimConfig) -> LayerSim {
+        let cached = self.simulate_shared(layer, cfg);
+        let mut sim = (*cached).clone();
+        sim.name = layer.name.clone();
+        sim.block = layer.block;
+        sim
+    }
+
+    /// The canonical cached result (name stripped, block `None`) as a
+    /// cheap `Arc` — the hot path for callers that only read cycle
+    /// counts (search loops) and must not pay a per-hit clone.
+    pub fn simulate_shared(&self, layer: &Layer, cfg: &SimConfig) -> Arc<LayerSim> {
+        let key = Key { op: layer.op, h: layer.h, w: layer.w, cfg: cfg.price_key() };
+        {
+            let shard = &self.sims[key.shard()];
+            let found = shard.lock().unwrap().get(&key).map(Arc::clone);
+            match found {
+                Some(sim) => {
+                    self.hits.fetch_add(1, Ordering::Relaxed);
+                    sim
+                }
+                None => {
+                    self.misses.fetch_add(1, Ordering::Relaxed);
+                    let fs = self.schedule(layer, cfg);
+                    let mut sim = price_layer(layer, &fs, cfg);
+                    sim.name = String::new();
+                    sim.block = None;
+                    let sim = Arc::new(sim);
+                    shard.lock().unwrap().entry(key).or_insert_with(|| Arc::clone(&sim));
+                    sim
+                }
+            }
+        }
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            sched_hits: self.sched_hits.load(Ordering::Relaxed),
+            sched_misses: self.sched_misses.load(Ordering::Relaxed),
+            entries: self.sims.iter().map(|s| s.lock().unwrap().len()).sum(),
+        }
+    }
+}
+
+/// [`simulate_network`] through a shared cache — same result, priced once
+/// per distinct (layer shape, config) anywhere in the process.
+pub fn simulate_network_cached(net: &Network, cfg: &SimConfig, cache: &LayerCache) -> NetworkSim {
+    let layers: Vec<LayerSim> = net.layers.iter().map(|l| cache.simulate(l, cfg)).collect();
+    NetworkSim::assemble(net.name.clone(), layers, cfg)
+}
+
+/// A sweep: the cross product of networks × variants × configs.
+#[derive(Debug, Clone)]
+pub struct SweepPlan {
+    pub networks: Vec<Network>,
+    pub variants: Vec<FuseVariant>,
+    pub configs: Vec<SimConfig>,
+}
+
+impl SweepPlan {
+    pub fn new(
+        networks: Vec<Network>,
+        variants: Vec<FuseVariant>,
+        configs: Vec<SimConfig>,
+    ) -> SweepPlan {
+        SweepPlan { networks, variants, configs }
+    }
+
+    /// Number of (network, variant, config) simulation jobs.
+    pub fn len(&self) -> usize {
+        self.networks.len() * self.variants.len() * self.configs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// The standard config grid: sizes × dataflows × ST-OS modes, everything
+/// else at the paper's Table 1 defaults.
+pub fn grid_configs(
+    sizes: &[usize],
+    dataflows: &[Dataflow],
+    stos_modes: &[bool],
+) -> Vec<SimConfig> {
+    let mut out = Vec::with_capacity(sizes.len() * dataflows.len() * stos_modes.len());
+    for &s in sizes {
+        for &df in dataflows {
+            for &stos in stos_modes {
+                let mut cfg = SimConfig::with_size(s).with_dataflow(df);
+                cfg.stos = stos;
+                out.push(cfg);
+            }
+        }
+    }
+    out
+}
+
+/// One completed (network, variant, config) cell.
+#[derive(Debug, Clone)]
+pub struct SweepRecord {
+    /// Base network name (before the variant transform).
+    pub network: String,
+    pub variant: FuseVariant,
+    pub cfg: SimConfig,
+    /// Full simulation result (the transformed network's name is in here).
+    pub sim: NetworkSim,
+}
+
+impl SweepRecord {
+    pub fn total_cycles(&self) -> u64 {
+        self.sim.total_cycles
+    }
+
+    pub fn latency_ms(&self) -> f64 {
+        self.sim.latency_ms
+    }
+}
+
+/// Sweep results in plan order (network-major, then variant, then config),
+/// plus the shared cache's counters after the run.
+#[derive(Debug)]
+pub struct SweepOutcome {
+    records: Vec<SweepRecord>,
+    variants: usize,
+    configs: usize,
+    pub cache_stats: CacheStats,
+}
+
+fn dataflow_short(df: Dataflow) -> &'static str {
+    match df {
+        Dataflow::OutputStationary => "os",
+        Dataflow::WeightStationary => "ws",
+    }
+}
+
+impl SweepOutcome {
+    /// The cell for the n-th network, v-th variant, c-th config of the plan.
+    pub fn record(&self, n: usize, v: usize, c: usize) -> &SweepRecord {
+        &self.records[(n * self.variants + v) * self.configs + c]
+    }
+
+    pub fn records(&self) -> &[SweepRecord] {
+        &self.records
+    }
+
+    /// Per-cell cycle counts as CSV.
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from(
+            "network,variant,rows,cols,dataflow,stos,total_cycles,latency_ms,utilization,macs_m\n",
+        );
+        for r in &self.records {
+            s.push_str(&format!(
+                "{},{},{},{},{},{},{},{:.6},{:.4},{:.1}\n",
+                r.network,
+                r.variant.label(),
+                r.cfg.rows,
+                r.cfg.cols,
+                dataflow_short(r.cfg.dataflow),
+                r.cfg.stos,
+                r.sim.total_cycles,
+                r.sim.latency_ms,
+                r.sim.overall_utilization(),
+                r.sim.layers.iter().map(|l| l.macs).sum::<u64>() as f64 / 1e6,
+            ));
+        }
+        s
+    }
+
+    /// Per-cell cycle counts as a JSON array (no serde offline; names in
+    /// the zoo are plain ASCII, so escaping quotes/backslashes suffices).
+    pub fn to_json(&self) -> String {
+        fn esc(s: &str) -> String {
+            s.replace('\\', "\\\\").replace('"', "\\\"")
+        }
+        let mut s = String::from("[\n");
+        for (i, r) in self.records.iter().enumerate() {
+            s.push_str(&format!(
+                "  {{\"network\":\"{}\",\"variant\":\"{}\",\"rows\":{},\"cols\":{},\
+                 \"dataflow\":\"{}\",\"stos\":{},\"total_cycles\":{},\"latency_ms\":{:.6},\
+                 \"utilization\":{:.4}}}{}\n",
+                esc(&r.network),
+                r.variant.label(),
+                r.cfg.rows,
+                r.cfg.cols,
+                dataflow_short(r.cfg.dataflow),
+                r.cfg.stos,
+                r.sim.total_cycles,
+                r.sim.latency_ms,
+                r.sim.overall_utilization(),
+                if i + 1 < self.records.len() { "," } else { "" },
+            ));
+        }
+        s.push(']');
+        s
+    }
+}
+
+fn assemble_outcome(
+    plan: &SweepPlan,
+    sims: Vec<NetworkSim>,
+    cache_stats: CacheStats,
+) -> SweepOutcome {
+    let mut records = Vec::with_capacity(sims.len());
+    let mut it = sims.into_iter();
+    for net in &plan.networks {
+        for &variant in &plan.variants {
+            for cfg in &plan.configs {
+                records.push(SweepRecord {
+                    network: net.name.clone(),
+                    variant,
+                    cfg: cfg.clone(),
+                    sim: it.next().expect("one sim per plan cell"),
+                });
+            }
+        }
+    }
+    SweepOutcome {
+        records,
+        variants: plan.variants.len(),
+        configs: plan.configs.len(),
+        cache_stats,
+    }
+}
+
+/// Run the sweep across the pool, sharing `cache` between all workers.
+/// Results are bit-identical to [`run_sweep_serial`] for any thread count.
+pub fn run_sweep(plan: &SweepPlan, pool: &Pool, cache: &Arc<LayerCache>) -> SweepOutcome {
+    // Realize each (network, variant) once — the transform is pure CPU work
+    // that every config cell would otherwise repeat.
+    let realized: Vec<Arc<Network>> = plan
+        .networks
+        .iter()
+        .flat_map(|n| plan.variants.iter().map(|v| Arc::new(v.apply(n))))
+        .collect();
+    let jobs: Vec<(usize, usize)> = (0..realized.len())
+        .flat_map(|nv| (0..plan.configs.len()).map(move |c| (nv, c)))
+        .collect();
+
+    let realized = Arc::new(realized);
+    let configs = Arc::new(plan.configs.clone());
+    let cache_ref = Arc::clone(cache);
+    let sims = pool.scope_map(jobs, move |(nv, c)| {
+        simulate_network_cached(&realized[nv], &configs[c], &cache_ref)
+    });
+    assemble_outcome(plan, sims, cache.stats())
+}
+
+/// Serial reference path: plain [`simulate_network`], no cache, no pool.
+/// The determinism tests (and `fuseconv sweep --verify`) compare against
+/// this bit-for-bit.
+pub fn run_sweep_serial(plan: &SweepPlan) -> SweepOutcome {
+    let mut sims = Vec::with_capacity(plan.len());
+    for net in &plan.networks {
+        for variant in &plan.variants {
+            let realized = variant.apply(net);
+            for cfg in &plan.configs {
+                sims.push(simulate_network(&realized, cfg));
+            }
+        }
+    }
+    assemble_outcome(plan, sims, CacheStats::default())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::models;
+
+    #[test]
+    fn cached_simulation_matches_uncached() {
+        let cache = LayerCache::new();
+        let net = models::by_name("mobilenet-v2").unwrap();
+        for cfg in [SimConfig::default(), SimConfig::with_size(32)] {
+            let a = simulate_network_cached(&net, &cfg, &cache);
+            let b = simulate_network(&net, &cfg);
+            assert_eq!(a.total_cycles, b.total_cycles);
+            assert_eq!(a.num_pes, b.num_pes);
+            assert_eq!(a.layers.len(), b.layers.len());
+            for (x, y) in a.layers.iter().zip(&b.layers) {
+                assert_eq!(x.name, y.name);
+                assert_eq!(x.block, y.block);
+                assert_eq!(x.total_cycles, y.total_cycles);
+                assert_eq!(x.pe_cycles, y.pe_cycles);
+            }
+        }
+        // repeat: all hits
+        let before = cache.stats();
+        simulate_network_cached(&net, &SimConfig::default(), &cache);
+        let after = cache.stats();
+        assert_eq!(after.misses, before.misses);
+        assert_eq!(after.hits, before.hits + net.layers.len() as u64);
+    }
+
+    #[test]
+    fn schedule_cache_shared_across_memory_models() {
+        let cache = LayerCache::new();
+        let net = models::by_name("mobilenet-v3-small").unwrap();
+        let base = SimConfig::default();
+        let throttled =
+            SimConfig { enforce_dram_bw: true, dram_bw: 2.0, ..SimConfig::default() };
+
+        simulate_network_cached(&net, &base, &cache);
+        let s1 = cache.stats();
+        simulate_network_cached(&net, &throttled, &cache);
+        let s2 = cache.stats();
+        // every layer re-priced (different price key) but never re-lowered
+        assert!(s2.misses > s1.misses);
+        assert_eq!(s2.sched_misses, s1.sched_misses, "re-lowered despite shared schedule key");
+        assert!(s2.sched_hits > s1.sched_hits);
+    }
+
+    #[test]
+    fn variant_reuse_produces_cross_network_hits() {
+        // FuSe-Half keeps every pointwise/stem/head layer of the base net,
+        // so sweeping both variants must hit the cache across networks.
+        let cache = Arc::new(LayerCache::new());
+        let pool = Pool::new(2);
+        let plan = SweepPlan::new(
+            vec![models::by_name("mobilenet-v2").unwrap()],
+            vec![FuseVariant::Base, FuseVariant::Half],
+            vec![SimConfig::default()],
+        );
+        let out = run_sweep(&plan, &pool, &cache);
+        assert!(out.cache_stats.hits > 0, "no cross-variant cache hits: {:?}", out.cache_stats);
+    }
+
+    #[test]
+    fn parallel_matches_serial_and_order_is_plan_major() {
+        let plan = SweepPlan::new(
+            vec![
+                models::by_name("mobilenet-v2").unwrap(),
+                models::by_name("mobilenet-v3-small").unwrap(),
+            ],
+            vec![FuseVariant::Base, FuseVariant::Half],
+            grid_configs(&[8, 16], &[Dataflow::OutputStationary], &[true]),
+        );
+        let serial = run_sweep_serial(&plan);
+        let pool = Pool::new(3);
+        let cache = Arc::new(LayerCache::new());
+        let par = run_sweep(&plan, &pool, &cache);
+        assert_eq!(serial.records().len(), plan.len());
+        for (a, b) in serial.records().iter().zip(par.records()) {
+            assert_eq!(a.network, b.network);
+            assert_eq!(a.variant, b.variant);
+            assert_eq!(a.cfg.rows, b.cfg.rows);
+            assert_eq!(a.total_cycles(), b.total_cycles());
+        }
+        // indexed lookup agrees with flat order
+        let r = par.record(1, 1, 0);
+        assert_eq!(r.network, "MobileNet-V3-Small");
+        assert_eq!(r.variant, FuseVariant::Half);
+        assert_eq!(r.cfg.rows, 8);
+    }
+
+    #[test]
+    fn csv_and_json_have_one_row_per_cell() {
+        let plan = SweepPlan::new(
+            vec![models::by_name("mobilenet-v3-small").unwrap()],
+            vec![FuseVariant::Base],
+            grid_configs(&[16], &[Dataflow::OutputStationary, Dataflow::WeightStationary], &[true]),
+        );
+        let out = run_sweep_serial(&plan);
+        let csv = out.to_csv();
+        assert_eq!(csv.lines().count(), 1 + plan.len());
+        assert!(csv.starts_with("network,variant,rows"));
+        assert!(csv.contains(",os,"));
+        assert!(csv.contains(",ws,"));
+        let json = out.to_json();
+        assert_eq!(json.matches("\"network\"").count(), plan.len());
+        assert!(json.starts_with('[') && json.ends_with(']'));
+    }
+
+    #[test]
+    fn grid_configs_cross_product() {
+        let grid = grid_configs(
+            &[8, 16, 32],
+            &[Dataflow::OutputStationary, Dataflow::WeightStationary],
+            &[true, false],
+        );
+        assert_eq!(grid.len(), 12);
+        assert!(grid.iter().any(|c| c.rows == 32 && !c.stos));
+    }
+}

@@ -1,5 +1,8 @@
 //! Runtime integration tests over the AOT artifacts (skipped with a notice
 //! when `make artifacts` has not run — CI runs them after the build step).
+//! The whole file needs the PJRT runtime, so it compiles only under
+//! `--features xla`.
+#![cfg(feature = "xla")]
 
 use fuseconv::runtime::{
     artifacts_available, default_artifacts_dir, literal_f32, Runtime, Session, Synth,

@@ -1,0 +1,134 @@
+//! Sweep-engine integration tests: the parallel zoo×config sweep must be
+//! bit-identical to the serial `simulate_network` path for every worker
+//! count, and the shared layer cache must actually fire across networks.
+
+use fuseconv::exec::Pool;
+use fuseconv::nn::models;
+use fuseconv::sim::{
+    grid_configs, run_sweep, run_sweep_serial, Dataflow, FuseVariant, LayerCache, SimConfig,
+    SweepPlan,
+};
+use std::sync::Arc;
+
+/// The acceptance-criteria sweep: the paper's five networks × {Base, Half,
+/// Full} × a 4-config grid (two sizes × two dataflows).
+fn acceptance_plan() -> SweepPlan {
+    SweepPlan::new(
+        models::paper_five(),
+        vec![FuseVariant::Base, FuseVariant::Half, FuseVariant::Full],
+        grid_configs(
+            &[8, 16],
+            &[Dataflow::OutputStationary, Dataflow::WeightStationary],
+            &[true],
+        ),
+    )
+}
+
+#[test]
+fn parallel_sweep_is_bit_identical_to_serial_for_any_worker_count() {
+    let plan = acceptance_plan();
+    assert_eq!(plan.len(), 5 * 3 * 4);
+    let serial = run_sweep_serial(&plan);
+
+    for workers in [1usize, 2, 7] {
+        let pool = Pool::new(workers);
+        let cache = Arc::new(LayerCache::new());
+        let par = run_sweep(&plan, &pool, &cache);
+        assert_eq!(par.records().len(), serial.records().len());
+        for (s, p) in serial.records().iter().zip(par.records()) {
+            assert_eq!(s.network, p.network);
+            assert_eq!(s.variant, p.variant);
+            assert_eq!(s.cfg.label(), p.cfg.label());
+            assert_eq!(
+                s.total_cycles(),
+                p.total_cycles(),
+                "{} {} {} differs with {workers} workers",
+                s.network,
+                s.variant.label(),
+                s.cfg.label()
+            );
+            // latency is derived purely from cycles — must match exactly too
+            assert_eq!(s.latency_ms().to_bits(), p.latency_ms().to_bits());
+            // and so must the per-layer breakdown
+            for (a, b) in s.sim.layers.iter().zip(&p.sim.layers) {
+                assert_eq!(a.name, b.name);
+                assert_eq!(a.total_cycles, b.total_cycles);
+                assert_eq!(a.stall_cycles, b.stall_cycles);
+                assert_eq!(a.pe_cycles, b.pe_cycles);
+            }
+        }
+    }
+}
+
+#[test]
+fn shared_cache_reports_cross_network_hits() {
+    // The five-network zoo shares bottleneck geometries and the FuSe
+    // transform keeps pointwise/stem/head layers, so a zoo sweep must see
+    // substantial reuse through ONE shared cache.
+    let plan = acceptance_plan();
+    let pool = Pool::new(4);
+    let cache = Arc::new(LayerCache::new());
+    let out = run_sweep(&plan, &pool, &cache);
+    let cs = out.cache_stats;
+    let total_layer_sims: u64 = out
+        .records()
+        .iter()
+        .map(|r| r.sim.layers.len() as u64)
+        .sum();
+    assert_eq!(cs.hits + cs.misses, total_layer_sims);
+    assert!(cs.hits > 0, "no cache hits across the zoo: {cs:?}");
+    // the zoo is redundant enough that reuse should dominate
+    assert!(
+        cs.hit_rate() > 0.3,
+        "hit rate suspiciously low: {:.3} ({cs:?})",
+        cs.hit_rate()
+    );
+    // schedule cache can only be hit at least as often as priced layers
+    // were rebuilt from shared lowerings
+    assert_eq!(cs.sched_hits + cs.sched_misses, cs.misses);
+}
+
+#[test]
+fn sweep_records_match_plan_indexing() {
+    let plan = SweepPlan::new(
+        vec![
+            models::by_name("mobilenet-v1").unwrap(),
+            models::by_name("mobilenet-v2").unwrap(),
+        ],
+        vec![FuseVariant::Base, FuseVariant::Half],
+        grid_configs(&[8, 32], &[Dataflow::OutputStationary], &[true, false]),
+    );
+    let pool = Pool::new(2);
+    let cache = Arc::new(LayerCache::new());
+    let out = run_sweep(&plan, &pool, &cache);
+    for (n, net) in plan.networks.iter().enumerate() {
+        for (v, variant) in plan.variants.iter().enumerate() {
+            for (c, cfg) in plan.configs.iter().enumerate() {
+                let r = out.record(n, v, c);
+                assert_eq!(r.network, net.name);
+                assert_eq!(r.variant, *variant);
+                assert_eq!((r.cfg.rows, r.cfg.stos), (cfg.rows, cfg.stos));
+                assert!(r.total_cycles() > 0);
+            }
+        }
+    }
+}
+
+#[test]
+fn stos_and_dataflow_grid_shapes_the_expected_ordering() {
+    // Sanity over the grid semantics: on the same array, FuSe-Half with
+    // ST-OS beats the depthwise baseline; without ST-OS it loses the edge.
+    let plan = SweepPlan::new(
+        vec![models::by_name("mobilenet-v2").unwrap()],
+        vec![FuseVariant::Base, FuseVariant::Half],
+        grid_configs(&[16], &[Dataflow::OutputStationary], &[true, false]),
+    );
+    let pool = Pool::new(2);
+    let cache = Arc::new(LayerCache::new());
+    let out = run_sweep(&plan, &pool, &cache);
+    let base_stos = out.record(0, 0, 0).total_cycles();
+    let half_stos = out.record(0, 1, 0).total_cycles();
+    let half_nostos = out.record(0, 1, 1).total_cycles();
+    assert!(half_stos * 3 < base_stos, "FuSe+ST-OS not >3x faster");
+    assert!(half_nostos > 3 * half_stos, "ST-OS ablation lost its cost");
+}

@@ -1,0 +1,223 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! The build environment has no network access to crates.io, so this shim
+//! provides the subset of the anyhow API the codebase uses: [`Error`],
+//! [`Result`], the [`anyhow!`]/[`bail!`]/[`ensure!`] macros, and the
+//! [`Context`] extension trait for `Result` and `Option`. Error values
+//! carry a context chain; `{:#}` formatting prints the full chain the way
+//! anyhow does, `{}` prints the outermost message only.
+
+use std::fmt;
+
+/// Chained error value. Like anyhow's, it deliberately does NOT implement
+/// `std::error::Error` so the blanket `From<E: std::error::Error>` impl
+/// cannot conflict with the reflexive `From<Error>`.
+pub struct Error {
+    msg: String,
+    source: Option<Box<Error>>,
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Create an error from a printable message.
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error { msg: m.to_string(), source: None }
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context<C: fmt::Display>(self, c: C) -> Error {
+        Error { msg: c.to_string(), source: Some(Box::new(self)) }
+    }
+
+    /// The context chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        let mut msgs = vec![self.msg.as_str()];
+        let mut cur = &self.source;
+        while let Some(e) = cur {
+            msgs.push(e.msg.as_str());
+            cur = &e.source;
+        }
+        msgs.into_iter()
+    }
+
+    /// The innermost (root-cause) message.
+    pub fn root_cause(&self) -> &str {
+        self.chain().last().unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}`: the whole chain, colon-separated (anyhow's format).
+            let mut first = true;
+            for m in self.chain() {
+                if !first {
+                    write!(f, ": ")?;
+                }
+                write!(f, "{m}")?;
+                first = false;
+            }
+            Ok(())
+        } else {
+            write!(f, "{}", self.msg)
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        let causes: Vec<&str> = self.chain().skip(1).collect();
+        if !causes.is_empty() {
+            write!(f, "\n\nCaused by:")?;
+            for (i, c) in causes.iter().enumerate() {
+                write!(f, "\n    {i}: {c}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        // Preserve the std source chain as context layers.
+        let mut msgs = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            msgs.push(s.to_string());
+            src = s.source();
+        }
+        let mut err = Error { msg: msgs.pop().unwrap(), source: None };
+        while let Some(m) = msgs.pop() {
+            err = Error { msg: m, source: Some(Box::new(err)) };
+        }
+        err
+    }
+}
+
+/// Context-attaching extension for `Result` and `Option`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from format arguments (or a printable value).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(format!("{}", $err))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an error built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: {}", stringify!($cond));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "no such file")
+    }
+
+    #[test]
+    fn display_plain_and_alternate() {
+        let e: Error = io_err().into();
+        let e = e.context("reading manifest");
+        assert_eq!(format!("{e}"), "reading manifest");
+        assert_eq!(format!("{e:#}"), "reading manifest: no such file");
+    }
+
+    #[test]
+    fn debug_shows_cause_chain() {
+        let e = Error::msg("root").context("mid").context("top");
+        let d = format!("{e:?}");
+        assert!(d.starts_with("top"));
+        assert!(d.contains("Caused by:"));
+        assert!(d.contains("root"));
+    }
+
+    #[test]
+    fn question_mark_converts() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert_eq!(format!("{}", inner().unwrap_err()), "no such file");
+    }
+
+    #[test]
+    fn context_on_option() {
+        let v: Option<u32> = None;
+        let e = v.context("missing key").unwrap_err();
+        assert_eq!(e.root_cause(), "missing key");
+        let some: Option<u32> = Some(7);
+        assert_eq!(some.with_context(|| "unused").unwrap(), 7);
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        let key = "freq";
+        let e = anyhow!("missing const {key}");
+        assert_eq!(format!("{e}"), "missing const freq");
+
+        fn f(n: usize) -> Result<usize> {
+            ensure!(n > 2, "n too small: {n}");
+            if n > 100 {
+                bail!("n too big: {}", n);
+            }
+            Ok(n)
+        }
+        assert!(f(1).is_err());
+        assert!(f(200).is_err());
+        assert_eq!(f(10).unwrap(), 10);
+    }
+}
