@@ -17,6 +17,8 @@ use fuseconv::coordinator::batcher::BatchPolicy;
 #[cfg(feature = "xla")]
 use fuseconv::coordinator::server::Server;
 #[cfg(feature = "xla")]
+use fuseconv::coordinator::Reply;
+#[cfg(feature = "xla")]
 use fuseconv::runtime::{default_artifacts_dir, Manifest, PjrtEngine, Synth};
 #[cfg(feature = "xla")]
 use std::time::{Duration, Instant};
@@ -51,10 +53,11 @@ fn main() {
         }
     }
     let mut correct_shape = 0;
-    for rx in pending {
-        let resp = rx.recv_timeout(Duration::from_secs(300)).expect("response");
-        if resp.output.len() == classes {
-            correct_shape += 1;
+    for ticket in pending {
+        match ticket.recv_deadline(Duration::from_secs(300)).result {
+            Ok(Reply::Infer(r)) if r.output.len() == classes => correct_shape += 1,
+            Ok(_) => {}
+            Err(e) => panic!("request failed: {e}"),
         }
     }
     let wall = t0.elapsed().as_secs_f64();

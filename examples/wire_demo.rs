@@ -1,0 +1,91 @@
+//! End-to-end wire-protocol demo, no artifacts or features needed: boot
+//! the TCP/JSON frontend on an ephemeral port with a mock inference
+//! engine + the simulation pool, then drive mixed traffic through a
+//! wire client — exactly what `fuseconv serve` / `fuseconv request` do,
+//! in one process.
+//!
+//! ```sh
+//! cargo run --release --example wire_demo
+//! ```
+
+use fuseconv::coordinator::batcher::BatchPolicy;
+use fuseconv::coordinator::wire::encode_response;
+use fuseconv::coordinator::{
+    ConfigPatch, MockEngine, ModelSpec, Reply, Request, RequestBody, Router, Server,
+    SimServer, WireClient, WireServer,
+};
+use fuseconv::sim::FuseVariant;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn main() {
+    // server side: mock engine (4 floats in, 2 out) + sim pool
+    let router = Router::new(SimServer::new(0)).with_engine(Server::start(
+        MockEngine::new(4, 2, 8),
+        BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(2) },
+    ));
+    let server = WireServer::bind("127.0.0.1:0", Arc::new(router)).expect("bind");
+    let addr = server.local_addr().to_string();
+    println!("listening on {addr}");
+    let listener = std::thread::spawn(move || server.run().expect("serve"));
+
+    // client side: one connection, mixed traffic
+    let mut client = WireClient::connect(&addr, Duration::from_secs(60)).expect("connect");
+    let requests = vec![
+        Request::new(1, RequestBody::Zoo),
+        Request::new(
+            2,
+            RequestBody::Simulate {
+                model: ModelSpec::Zoo("mobilenet-v2".into()),
+                variant: FuseVariant::Half,
+                config: ConfigPatch::sized(16),
+            },
+        ),
+        Request::new(3, RequestBody::Infer { input: vec![1.0, 2.0, 3.0, 4.0] }),
+        Request::new(
+            4,
+            RequestBody::Sweep {
+                models: vec!["mobilenet-v3-small".into()],
+                variants: vec![FuseVariant::Base, FuseVariant::Half],
+                configs: vec![ConfigPatch::sized(8), ConfigPatch::sized(16)],
+            },
+        ),
+        Request::new(5, RequestBody::Stats),
+    ];
+    for req in &requests {
+        client.send(req).expect("send");
+    }
+    for _ in 0..requests.len() {
+        let resp = client.recv().expect("recv");
+        match &resp.result {
+            Ok(Reply::Zoo(entries)) => println!("zoo: {} models", entries.len()),
+            Ok(Reply::Sim(s)) => {
+                println!(
+                    "sim: {} on {} -> {} cycles ({:.3} ms)",
+                    s.network, s.config_label, s.total_cycles, s.latency_ms
+                )
+            }
+            Ok(Reply::Infer(r)) => {
+                println!("infer: output {:?} (batch {})", r.output, r.batch_size)
+            }
+            Ok(Reply::Sweep(rows)) => println!("sweep: {} cells", rows.len()),
+            Ok(Reply::Stats(s)) => println!(
+                "stats: {} sims, cache {}h/{}m, raw frame: {}",
+                s.sim_completed,
+                s.cache_hits,
+                s.cache_misses,
+                encode_response(&resp)
+            ),
+            Ok(Reply::Done) => println!("done"),
+            Err(e) => println!("error: {e}"),
+        }
+    }
+
+    // clean shutdown over the wire
+    let resp = client
+        .roundtrip(&Request::new(6, RequestBody::Shutdown))
+        .expect("shutdown ack");
+    assert_eq!(resp.result, Ok(Reply::Done));
+    listener.join().expect("listener");
+    println!("clean shutdown");
+}

@@ -154,6 +154,31 @@ impl Args {
         let v = self.str(name);
         v.parse().map_err(|_| CliError::BadValue { key: name.to_string(), value: v, want: "f64" })
     }
+
+    /// Typed getter for defaultless options: `None` when absent, an error
+    /// only when present-but-unparsable.
+    fn opt_parse<T: std::str::FromStr>(
+        &self,
+        name: &str,
+        want: &'static str,
+    ) -> Result<Option<T>, CliError> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(v) => v.parse().map(Some).map_err(|_| CliError::BadValue {
+                key: name.to_string(),
+                value: v.to_string(),
+                want,
+            }),
+        }
+    }
+
+    pub fn opt_usize(&self, name: &str) -> Result<Option<usize>, CliError> {
+        self.opt_parse(name, "usize")
+    }
+
+    pub fn opt_u64(&self, name: &str) -> Result<Option<u64>, CliError> {
+        self.opt_parse(name, "u64")
+    }
 }
 
 #[cfg(test)]
@@ -207,6 +232,16 @@ mod tests {
     fn bad_typed_value() {
         let a = cli().parse(&v(&["--size", "large"])).unwrap();
         assert!(matches!(a.usize("size"), Err(CliError::BadValue { .. })));
+    }
+
+    #[test]
+    fn optional_typed_getters() {
+        let a = cli().parse(&v(&[])).unwrap();
+        assert_eq!(a.opt_usize("model").unwrap(), None);
+        let a = cli().parse(&v(&["--model", "12"])).unwrap();
+        assert_eq!(a.opt_usize("model").unwrap(), Some(12));
+        let a = cli().parse(&v(&["--model", "dozen"])).unwrap();
+        assert!(a.opt_usize("model").is_err());
     }
 
     #[test]

@@ -141,6 +141,39 @@ mod tests {
     }
 
     #[test]
+    fn push_at_out_of_order_arrivals_stay_fifo() {
+        // The queue is FIFO by *insertion*, not by arrival stamp: a late
+        // insert with an early arrival time must not jump the line, and
+        // readiness keys off the front entry's stamp.
+        let mut b = Batcher::new(policy(8, 10));
+        let t0 = Instant::now();
+        b.push_at(0, t0 + Duration::from_millis(5)); // inserted first, arrived later
+        b.push_at(1, t0); // inserted second, arrived earlier
+        b.push_at(2, t0 + Duration::from_millis(2));
+        // deadline follows the front entry (arrival t0+5ms), not the
+        // globally oldest stamp
+        let d = b.next_deadline(t0 + Duration::from_millis(5)).unwrap();
+        assert_eq!(d, Duration::from_millis(10));
+        assert!(!b.ready(t0 + Duration::from_millis(12)));
+        assert!(b.ready(t0 + Duration::from_millis(15)));
+        let items: Vec<i32> = b.take_batch().into_iter().map(|p| p.item).collect();
+        assert_eq!(items, vec![0, 1, 2], "insertion order preserved");
+    }
+
+    #[test]
+    fn zero_max_wait_is_batch_one_latency() {
+        // max_wait == 0: a single queued request is due immediately —
+        // the dispatcher must not stall waiting to accumulate a batch.
+        let mut b = Batcher::new(policy(64, 0));
+        let t0 = Instant::now();
+        assert!(b.next_deadline(t0).is_none(), "empty queue has no deadline");
+        b.push_at(7, t0);
+        assert_eq!(b.next_deadline(t0).unwrap(), Duration::ZERO);
+        assert!(b.ready(t0));
+        assert_eq!(b.take_batch().len(), 1);
+    }
+
+    #[test]
     fn next_deadline_counts_down() {
         let mut b = Batcher::new(policy(8, 10));
         let t0 = Instant::now();

@@ -9,7 +9,7 @@
 //!   instead of a network simulation.
 
 use crate::nn::{fuse_network, Layer, Network, Selection, Variant};
-use crate::sim::{LayerCache, LayerSim, SimConfig};
+use crate::sim::{simulate_network_cached, LayerCache, LayerSim, NetworkSim, SimConfig};
 use std::sync::Arc;
 
 /// Memoizing evaluator for one hardware configuration. The cache is the
@@ -50,6 +50,13 @@ impl Evaluator {
     /// Full layer simulation when the detail is needed (also cached).
     pub fn layer_detail(&self, l: &Layer) -> LayerSim {
         self.cache.simulate(l, &self.cfg)
+    }
+
+    /// Whole-network simulation through the shared cache — identical to
+    /// `simulate_network` but priced once per distinct layer anywhere in
+    /// the process. The serving path uses this for detail queries.
+    pub fn net_sim(&self, net: &Network) -> NetworkSim {
+        simulate_network_cached(net, &self.cfg, &self.cache)
     }
 
     pub fn eval(&self, net: &Network) -> NetEval {
@@ -196,6 +203,19 @@ mod tests {
         let s = simulate_network(&net, &SimConfig::default());
         assert_eq!(e.cycles, s.total_cycles);
         assert_eq!(e.macs, net.total_macs());
+    }
+
+    #[test]
+    fn net_sim_matches_uncached_simulation() {
+        let ev = Evaluator::new(SimConfig::default());
+        let net = mobilenet_v3::small();
+        let cached = ev.net_sim(&net);
+        let direct = simulate_network(&net, &SimConfig::default());
+        assert_eq!(cached.total_cycles, direct.total_cycles);
+        assert_eq!(cached.layers.len(), direct.layers.len());
+        assert_eq!(cached.num_pes, direct.num_pes);
+        // and it agrees with the fast path
+        assert_eq!(cached.total_cycles, ev.eval(&net).cycles);
     }
 
     #[test]

@@ -1,12 +1,22 @@
 //! L3 coordinator: network evaluation over the simulator, hybrid-network
-//! search (EA + OFA-NAS), block-selection policies, and the inference
-//! serving loop.
+//! search (EA + OFA-NAS), and the unified serving surface — typed
+//! protocol ([`protocol`]), batched inference + simulation services
+//! behind one [`Service`] trait ([`server`]), the JSON wire codec
+//! ([`wire`]), and the TCP frontend ([`net`]).
 
 pub mod batcher;
 pub mod evaluator;
 pub mod mapping;
+pub mod net;
+pub mod protocol;
 pub mod search;
 pub mod server;
+pub mod wire;
 
 pub use evaluator::{Evaluator, HybridSpace, NetEval};
-pub use server::{Engine, Server, SimRequest, SimServer};
+pub use net::{request_once, WireClient, WireServer};
+pub use protocol::{
+    ConfigPatch, ModelSpec, Reply, Request, RequestBody, Response, ServeError, Service,
+    Ticket, PROTOCOL_VERSION,
+};
+pub use server::{Engine, MockEngine, Router, Server, SimServer};

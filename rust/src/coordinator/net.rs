@@ -1,0 +1,385 @@
+//! Wire-level frontend: a `std::net::TcpListener` speaking the JSON
+//! protocol of [`wire`](super::wire), one newline-delimited frame per
+//! request/response, feeding any shared [`Service`].
+//!
+//! Threading model: one reader thread per connection decodes frames and
+//! performs admission through `Service::call` (which never blocks on the
+//! work), plus one writer thread per connection that redeems [`Ticket`]s
+//! in request order. Responses on one connection are therefore FIFO;
+//! clients that want out-of-order completion open more connections (ids
+//! still match replies to requests either way).
+//!
+//! Lifecycle: a decoded `Shutdown` frame is forwarded to the service
+//! (the [`Router`](super::server::Router) latches closed and acks
+//! `Done`), the ack is flushed, and the accept loop is released.
+//! Shutdown then *drains*: every connection reader polls the stop latch
+//! (reads carry a short timeout), so idle connections close promptly
+//! while queued replies still flush through each connection's writer —
+//! in-flight work is never cut off, and [`WireServer::run`] returns
+//! once every handler has exited. Frames that fail to decode answer
+//! `bad_request` without killing the connection.
+
+use super::protocol::{Request, RequestBody, Response, ServeError, Service, Ticket};
+use super::wire::{
+    decode_response, encode_request, encode_response, parse_json, Json, WireError,
+};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread;
+use std::time::Duration;
+
+/// Upper bound a connection writer waits on any single ticket; a service
+/// that never answers turns into a typed `deadline` error, not a wedged
+/// connection.
+pub const MAX_TICKET_WAIT: Duration = Duration::from_secs(600);
+
+/// Read-poll interval on server-side connections: how often an idle
+/// reader wakes to check the shutdown latch.
+const READ_POLL: Duration = Duration::from_millis(500);
+
+/// A read error that only means "nothing arrived within the timeout"
+/// (Unix reports WouldBlock, Windows TimedOut).
+fn is_timeout(e: &std::io::Error) -> bool {
+    matches!(
+        e.kind(),
+        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+    )
+}
+
+/// A bound TCP frontend. `bind` then `run`; `run` returns after a
+/// `Shutdown` request has been served.
+pub struct WireServer {
+    listener: TcpListener,
+    addr: SocketAddr,
+    service: Arc<dyn Service>,
+}
+
+impl WireServer {
+    /// Bind `addr` (e.g. `127.0.0.1:0` for an ephemeral port) in front
+    /// of `service`.
+    pub fn bind(addr: &str, service: Arc<dyn Service>) -> std::io::Result<WireServer> {
+        let listener = TcpListener::bind(addr)?;
+        let addr = listener.local_addr()?;
+        Ok(WireServer { listener, addr, service })
+    }
+
+    /// The actual bound address (resolves `:0` to the ephemeral port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Accept-and-serve until a `Shutdown` frame arrives; joins every
+    /// connection handler before returning.
+    pub fn run(self) -> std::io::Result<()> {
+        let stop = Arc::new(AtomicBool::new(false));
+        let mut handlers = Vec::new();
+        for conn in self.listener.incoming() {
+            if stop.load(Ordering::Acquire) {
+                break;
+            }
+            let stream = match conn {
+                Ok(s) => s,
+                Err(e) => {
+                    // Transient accept failure (e.g. fd exhaustion):
+                    // back off instead of spinning hot, and say so.
+                    eprintln!("fuseconv serve: accept error: {e}");
+                    thread::sleep(Duration::from_millis(50));
+                    continue;
+                }
+            };
+            let service = Arc::clone(&self.service);
+            let stop = Arc::clone(&stop);
+            let self_addr = self.addr;
+            let h = thread::Builder::new()
+                .name("fuseconv-conn".into())
+                .spawn(move || handle_conn(stream, service, stop, self_addr))
+                .expect("spawn connection handler");
+            handlers.push(h);
+        }
+        for h in handlers {
+            let _ = h.join();
+        }
+        Ok(())
+    }
+}
+
+/// Best-effort id recovery from a frame that failed full decoding, so
+/// the bad_request response still correlates with the client's request.
+fn salvage_id(line: &str) -> u64 {
+    parse_json(line)
+        .ok()
+        .and_then(|v| v.get("id").and_then(Json::as_u64))
+        .unwrap_or(0)
+}
+
+fn handle_conn(
+    stream: TcpStream,
+    service: Arc<dyn Service>,
+    stop: Arc<AtomicBool>,
+    self_addr: SocketAddr,
+) {
+    // Reads poll: an idle connection must notice the shutdown latch and
+    // close instead of parking `run`'s join forever.
+    let _ = stream.set_read_timeout(Some(READ_POLL));
+    let Ok(read_half) = stream.try_clone() else { return };
+    let mut reader = BufReader::new(read_half);
+    let (wtx, wrx) = mpsc::channel::<Ticket>();
+    let mut write_half = stream;
+    let writer = thread::Builder::new()
+        .name("fuseconv-conn-write".into())
+        .spawn(move || {
+            for ticket in wrx {
+                let resp = ticket.recv_deadline(MAX_TICKET_WAIT);
+                let mut line = encode_response(&resp);
+                line.push('\n');
+                if write_half.write_all(line.as_bytes()).is_err() {
+                    break;
+                }
+                let _ = write_half.flush();
+            }
+            let _ = write_half.shutdown(std::net::Shutdown::Both);
+        })
+        .expect("spawn connection writer");
+
+    let mut saw_shutdown = false;
+    // One persistent buffer: a timed-out read keeps any partial frame,
+    // and the next pass appends the rest (no mid-frame desync).
+    let mut buf = String::new();
+    loop {
+        match reader.read_line(&mut buf) {
+            Ok(0) => break, // client closed
+            Ok(_) => {
+                if !buf.ends_with('\n') {
+                    // EOF mid-frame: nothing complete left to serve.
+                    break;
+                }
+                let line = buf.trim();
+                if !line.is_empty() {
+                    let ticket = match super::wire::decode_request(line) {
+                        Ok(req) => {
+                            saw_shutdown = matches!(req.body, RequestBody::Shutdown);
+                            service.call(req)
+                        }
+                        Err(e) => Ticket::immediate(Response::err(
+                            salvage_id(line),
+                            ServeError::BadRequest(e.to_string()),
+                        )),
+                    };
+                    if wtx.send(ticket).is_err() {
+                        break;
+                    }
+                }
+                buf.clear();
+                if saw_shutdown {
+                    break;
+                }
+            }
+            Err(e) if is_timeout(&e) => {
+                if stop.load(Ordering::Acquire) {
+                    break; // shutdown latched elsewhere: close this idle conn
+                }
+            }
+            Err(_) => break,
+        }
+    }
+    // Flush everything queued (including the Shutdown ack), then release
+    // the accept loop with a self-dial if we are the closing connection.
+    drop(wtx);
+    let _ = writer.join();
+    if saw_shutdown {
+        stop.store(true, Ordering::Release);
+        let _ = TcpStream::connect(dial_addr(self_addr));
+    }
+}
+
+/// Where to self-dial to release the accept loop: a wildcard bind
+/// (0.0.0.0 / ::) is not connectable on every platform, so dial the
+/// matching loopback with the bound port instead.
+fn dial_addr(mut addr: SocketAddr) -> SocketAddr {
+    if addr.ip().is_unspecified() {
+        match addr {
+            SocketAddr::V4(_) => {
+                addr.set_ip(std::net::IpAddr::V4(std::net::Ipv4Addr::LOCALHOST))
+            }
+            SocketAddr::V6(_) => {
+                addr.set_ip(std::net::IpAddr::V6(std::net::Ipv6Addr::LOCALHOST))
+            }
+        }
+    }
+    addr
+}
+
+// ---------------------------------------------------------------------------
+// Client
+// ---------------------------------------------------------------------------
+
+/// Blocking wire client: pipelined `send`/`recv` over one connection
+/// (responses arrive in request order), for scripted load and tests.
+pub struct WireClient {
+    reader: BufReader<TcpStream>,
+    stream: TcpStream,
+    /// Partial frame carried across a timed-out `recv`, so a retry
+    /// resumes mid-frame instead of desynchronizing the stream.
+    pending: String,
+}
+
+impl WireClient {
+    /// Connect with `timeout` applied to connect/read/write
+    /// (`Duration::ZERO` disables the timeouts).
+    pub fn connect(addr: &str, timeout: Duration) -> std::io::Result<WireClient> {
+        let sockaddr = addr.to_socket_addrs()?.next().ok_or_else(|| {
+            std::io::Error::new(std::io::ErrorKind::InvalidInput, "unresolvable address")
+        })?;
+        let stream = if timeout.is_zero() {
+            TcpStream::connect(sockaddr)?
+        } else {
+            let s = TcpStream::connect_timeout(&sockaddr, timeout)?;
+            s.set_read_timeout(Some(timeout))?;
+            s.set_write_timeout(Some(timeout))?;
+            s
+        };
+        let reader = BufReader::new(stream.try_clone()?);
+        Ok(WireClient { reader, stream, pending: String::new() })
+    }
+
+    pub fn send(&mut self, req: &Request) -> std::io::Result<()> {
+        let mut line = encode_request(req);
+        line.push('\n');
+        self.stream.write_all(line.as_bytes())?;
+        self.stream.flush()
+    }
+
+    /// Receive one response frame. A timed-out read returns an error but
+    /// keeps the partially-read frame buffered — calling `recv` again
+    /// continues from where the stream left off.
+    pub fn recv(&mut self) -> Result<Response, WireError> {
+        match self.reader.read_line(&mut self.pending) {
+            Ok(0) => {
+                self.pending.clear();
+                Err(WireError("connection closed by server".into()))
+            }
+            Ok(_) => {
+                let result = decode_response(self.pending.trim_end());
+                self.pending.clear();
+                result
+            }
+            // partial bytes stay in self.pending for the next attempt
+            Err(e) => Err(WireError(format!("read: {e}"))),
+        }
+    }
+
+    pub fn roundtrip(&mut self, req: &Request) -> Result<Response, WireError> {
+        self.send(req).map_err(|e| WireError(format!("send: {e}")))?;
+        self.recv()
+    }
+}
+
+/// One-shot convenience: connect, send one request, await its reply.
+pub fn request_once(
+    addr: &str,
+    req: &Request,
+    timeout: Duration,
+) -> Result<Response, WireError> {
+    let mut client = WireClient::connect(addr, timeout)
+        .map_err(|e| WireError(format!("connect {addr}: {e}")))?;
+    client.roundtrip(req)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::protocol::{ConfigPatch, ModelSpec, Reply};
+    use crate::coordinator::server::{Router, SimServer};
+    use crate::sim::FuseVariant;
+
+    fn start_sim_frontend() -> (String, thread::JoinHandle<()>) {
+        let router = Router::new(SimServer::new(2));
+        let server =
+            WireServer::bind("127.0.0.1:0", Arc::new(router)).expect("bind ephemeral");
+        let addr = server.local_addr().to_string();
+        let h = thread::spawn(move || server.run().expect("serve"));
+        (addr, h)
+    }
+
+    #[test]
+    fn frontend_serves_and_shuts_down_cleanly() {
+        let (addr, h) = start_sim_frontend();
+        let mut client = WireClient::connect(&addr, Duration::from_secs(30)).unwrap();
+
+        // zoo
+        let resp = client
+            .roundtrip(&Request::new(1, RequestBody::Zoo))
+            .expect("zoo roundtrip");
+        assert_eq!(resp.id, 1);
+        assert!(matches!(resp.result, Ok(Reply::Zoo(_))));
+
+        // simulate by zoo name
+        let resp = client
+            .roundtrip(&Request::new(
+                2,
+                RequestBody::Simulate {
+                    model: ModelSpec::Zoo("mobilenet-v3-small".into()),
+                    variant: FuseVariant::Half,
+                    config: ConfigPatch::sized(8),
+                },
+            ))
+            .expect("simulate roundtrip");
+        match resp.result {
+            Ok(Reply::Sim(s)) => assert!(s.total_cycles > 0),
+            other => panic!("expected sim, got {other:?}"),
+        }
+
+        // malformed frame answers bad_request without dropping the conn
+        self::send_raw(&mut client, "{\"v\":1,\"id\":42,\"op\":\"nope\"}\n");
+        let resp = client.recv().expect("error response");
+        assert_eq!(resp.id, 42);
+        assert!(matches!(resp.result, Err(ServeError::BadRequest(_))));
+
+        // shutdown: ack arrives, listener exits
+        let resp = client
+            .roundtrip(&Request::new(3, RequestBody::Shutdown))
+            .expect("shutdown ack");
+        assert_eq!(resp.result, Ok(Reply::Done));
+        h.join().expect("listener thread");
+
+        // post-shutdown connects fail (listener gone)
+        assert!(request_once(
+            &addr,
+            &Request::new(4, RequestBody::Stats),
+            Duration::from_millis(500),
+        )
+        .is_err());
+    }
+
+    fn send_raw(client: &mut WireClient, raw: &str) {
+        client.stream.write_all(raw.as_bytes()).unwrap();
+        client.stream.flush().unwrap();
+    }
+
+    #[test]
+    fn pipelined_requests_reply_in_order() {
+        let (addr, h) = start_sim_frontend();
+        let mut client = WireClient::connect(&addr, Duration::from_secs(60)).unwrap();
+        for id in 10..14u64 {
+            client
+                .send(&Request::new(
+                    id,
+                    RequestBody::Simulate {
+                        model: ModelSpec::Zoo("mobilenet-v3-small".into()),
+                        variant: FuseVariant::Base,
+                        config: ConfigPatch::sized(8),
+                    },
+                ))
+                .unwrap();
+        }
+        for id in 10..14u64 {
+            let resp = client.recv().expect("pipelined response");
+            assert_eq!(resp.id, id, "responses must be FIFO per connection");
+            assert!(resp.is_ok());
+        }
+        let _ = client.roundtrip(&Request::new(99, RequestBody::Shutdown));
+        h.join().unwrap();
+    }
+}

@@ -1,0 +1,587 @@
+//! The unified serving protocol (DESIGN.md S12): one versioned, typed
+//! request/response vocabulary shared by every serving surface — the
+//! in-process [`Service`] trait implemented by the batched inference
+//! server and the cache-backed simulation pool, and the wire-level
+//! TCP/JSON frontend in [`net`](super::net).
+//!
+//! Design rules:
+//! * every request carries a client-chosen `id` echoed on its response,
+//!   so replies can be matched over pipelined/wire transports;
+//! * deadlines are explicit (`deadline_ms` from admission) and produce a
+//!   typed [`ServeError::Deadline`], never a hang;
+//! * admission control is part of the contract: a full bounded queue
+//!   answers [`ServeError::Busy`] immediately;
+//! * models are addressed by zoo name *or* shipped inline as layer
+//!   specs, so remote clients need no access to the zoo crate.
+
+use crate::nn::{models, Layer, Network, OpKind};
+use crate::sim::{Dataflow, FuseVariant, MappingPolicy, NetworkSim, SimConfig};
+use std::sync::mpsc;
+use std::time::Duration;
+
+/// Wire/protocol version; bumped on any incompatible change to the
+/// request or response schema.
+pub const PROTOCOL_VERSION: u32 = 1;
+
+/// Largest accepted PE-array side length in a request config — a sanity
+/// bound on remote input, far above any hardware the paper models.
+pub const MAX_ARRAY_DIM: usize = 4096;
+
+// ---------------------------------------------------------------------------
+// Requests
+// ---------------------------------------------------------------------------
+
+/// One request envelope: id + optional deadline + typed body.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Request {
+    /// Client-chosen id, echoed verbatim on the response.
+    pub id: u64,
+    /// Optional deadline, in milliseconds from admission. Work still
+    /// queued when it expires is answered with [`ServeError::Deadline`].
+    pub deadline_ms: Option<u64>,
+    pub body: RequestBody,
+}
+
+impl Request {
+    pub fn new(id: u64, body: RequestBody) -> Request {
+        Request { id, deadline_ms: None, body }
+    }
+
+    pub fn with_deadline_ms(mut self, ms: u64) -> Request {
+        self.deadline_ms = Some(ms);
+        self
+    }
+}
+
+/// The typed operations the serving surface understands.
+#[derive(Debug, Clone, PartialEq)]
+pub enum RequestBody {
+    /// Run one input through the batched inference engine.
+    Infer { input: Vec<f32> },
+    /// Price one (model, variant, config) scenario on the simulator.
+    Simulate { model: ModelSpec, variant: FuseVariant, config: ConfigPatch },
+    /// Price a models × variants × configs grid (zoo names only).
+    Sweep { models: Vec<String>, variants: Vec<FuseVariant>, configs: Vec<ConfigPatch> },
+    /// Serving/cache statistics snapshot.
+    Stats,
+    /// List the model zoo (names + MAC/param totals).
+    Zoo,
+    /// Ask the frontend to stop accepting traffic and exit cleanly.
+    Shutdown,
+}
+
+impl RequestBody {
+    /// Short operation name (used in wire tags and log lines).
+    pub fn op(&self) -> &'static str {
+        match self {
+            RequestBody::Infer { .. } => "infer",
+            RequestBody::Simulate { .. } => "simulate",
+            RequestBody::Sweep { .. } => "sweep",
+            RequestBody::Stats => "stats",
+            RequestBody::Zoo => "zoo",
+            RequestBody::Shutdown => "shutdown",
+        }
+    }
+}
+
+/// How a simulation request names its network: by zoo name, or as an
+/// inline list of layer specs (for networks the server has never seen).
+#[derive(Debug, Clone, PartialEq)]
+pub enum ModelSpec {
+    Zoo(String),
+    Inline { name: String, layers: Vec<LayerSpec> },
+}
+
+impl ModelSpec {
+    /// Resolve to a concrete [`Network`]; unknown zoo names and empty
+    /// inline specs are [`ServeError::BadRequest`]s.
+    pub fn resolve(&self) -> Result<Network, ServeError> {
+        match self {
+            ModelSpec::Zoo(name) => models::by_name(name).ok_or_else(|| {
+                ServeError::BadRequest(format!("unknown zoo model {name:?}"))
+            }),
+            ModelSpec::Inline { name, layers } => {
+                if layers.is_empty() {
+                    return Err(ServeError::BadRequest("inline model has no layers".into()));
+                }
+                let layers: Vec<Layer> = layers.iter().map(|s| s.to_layer()).collect();
+                let num_blocks =
+                    layers.iter().filter_map(|l| l.block).max().map_or(0, |b| b + 1);
+                Ok(Network { name: name.clone(), layers, num_blocks })
+            }
+        }
+    }
+}
+
+/// Wire-friendly layer description: exactly the fields that affect
+/// simulation (operator + input spatial dims + block membership).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LayerSpec {
+    pub name: String,
+    pub op: OpKind,
+    pub h: usize,
+    pub w: usize,
+    pub block: Option<usize>,
+}
+
+impl LayerSpec {
+    pub fn from_layer(l: &Layer) -> LayerSpec {
+        LayerSpec { name: l.name.clone(), op: l.op, h: l.h, w: l.w, block: l.block }
+    }
+
+    pub fn to_layer(&self) -> Layer {
+        let mut l = Layer::new(self.name.clone(), self.op, self.h, self.w);
+        if let Some(b) = self.block {
+            l = l.in_block(b);
+        }
+        l
+    }
+}
+
+/// A partial [`SimConfig`]: only the overridden fields are present, the
+/// rest come from the paper's Table-1 defaults. This is the protocol's
+/// config vocabulary and the CLI's `--size/--dataflow/--no-stos`
+/// equivalents share its validation (via [`Dataflow::parse`] /
+/// [`MappingPolicy::parse`]).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ConfigPatch {
+    /// Square-array shorthand (sets both rows and cols).
+    pub size: Option<usize>,
+    pub rows: Option<usize>,
+    pub cols: Option<usize>,
+    pub freq_mhz: Option<u64>,
+    pub ifmap_sram_kb: Option<usize>,
+    pub weight_sram_kb: Option<usize>,
+    pub ofmap_sram_kb: Option<usize>,
+    pub dram_bw: Option<f64>,
+    pub enforce_dram_bw: Option<bool>,
+    pub bytes_per_elem: Option<usize>,
+    pub dataflow: Option<Dataflow>,
+    pub stos: Option<bool>,
+    pub mapping: Option<MappingPolicy>,
+}
+
+impl ConfigPatch {
+    /// Just the array size (the most common override).
+    pub fn sized(size: usize) -> ConfigPatch {
+        ConfigPatch { size: Some(size), ..ConfigPatch::default() }
+    }
+
+    /// Apply the overrides on top of `base`. `rows`/`cols` win over
+    /// `size` when both are given. Zero-sized arrays are rejected.
+    pub fn apply(&self, base: &SimConfig) -> Result<SimConfig, ServeError> {
+        let mut cfg = base.clone();
+        if let Some(s) = self.size {
+            cfg.rows = s;
+            cfg.cols = s;
+        }
+        if let Some(r) = self.rows {
+            cfg.rows = r;
+        }
+        if let Some(c) = self.cols {
+            cfg.cols = c;
+        }
+        if let Some(f) = self.freq_mhz {
+            cfg.freq_mhz = f;
+        }
+        if let Some(k) = self.ifmap_sram_kb {
+            cfg.ifmap_sram_kb = k;
+        }
+        if let Some(k) = self.weight_sram_kb {
+            cfg.weight_sram_kb = k;
+        }
+        if let Some(k) = self.ofmap_sram_kb {
+            cfg.ofmap_sram_kb = k;
+        }
+        if let Some(bw) = self.dram_bw {
+            cfg.dram_bw = bw;
+        }
+        if let Some(e) = self.enforce_dram_bw {
+            cfg.enforce_dram_bw = e;
+        }
+        if let Some(b) = self.bytes_per_elem {
+            cfg.bytes_per_elem = b;
+        }
+        if let Some(df) = self.dataflow {
+            cfg.dataflow = df;
+        }
+        if let Some(s) = self.stos {
+            cfg.stos = s;
+        }
+        if let Some(m) = self.mapping {
+            cfg.mapping = m;
+        }
+        if cfg.rows == 0 || cfg.cols == 0 {
+            return Err(ServeError::BadRequest(format!(
+                "degenerate array geometry {}x{}",
+                cfg.rows, cfg.cols
+            )));
+        }
+        // Remote input: bound the geometry so arithmetic on rows*cols and
+        // per-fold allocations can't overflow or balloon (paper max 128;
+        // 4096 leaves room for far-future what-ifs).
+        if cfg.rows > MAX_ARRAY_DIM || cfg.cols > MAX_ARRAY_DIM {
+            return Err(ServeError::BadRequest(format!(
+                "array geometry {}x{} exceeds the {MAX_ARRAY_DIM} per-side limit",
+                cfg.rows, cfg.cols
+            )));
+        }
+        if cfg.freq_mhz == 0 || cfg.bytes_per_elem == 0 {
+            return Err(ServeError::BadRequest(
+                "freq_mhz and bytes_per_elem must be positive".into(),
+            ));
+        }
+        Ok(cfg)
+    }
+
+    /// Overrides applied to the paper's Table-1 defaults.
+    pub fn to_config(&self) -> Result<SimConfig, ServeError> {
+        self.apply(&SimConfig::default())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Responses
+// ---------------------------------------------------------------------------
+
+/// One response envelope: the request's id plus either a typed reply or
+/// a typed error.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Response {
+    pub id: u64,
+    pub result: Result<Reply, ServeError>,
+}
+
+impl Response {
+    pub fn ok(id: u64, reply: Reply) -> Response {
+        Response { id, result: Ok(reply) }
+    }
+
+    pub fn err(id: u64, e: ServeError) -> Response {
+        Response { id, result: Err(e) }
+    }
+
+    pub fn is_ok(&self) -> bool {
+        self.result.is_ok()
+    }
+}
+
+/// Successful results, one variant per request kind.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Reply {
+    Infer(InferReply),
+    Sim(SimSummary),
+    Sweep(Vec<SweepRow>),
+    Stats(StatsReply),
+    Zoo(Vec<ZooEntry>),
+    /// Acknowledgement with no payload (e.g. `Shutdown`).
+    Done,
+}
+
+/// Completed inference, with the serving-side latency breakdown.
+#[derive(Debug, Clone, PartialEq)]
+pub struct InferReply {
+    pub output: Vec<f32>,
+    /// Time spent queued before the engine ran (admission → engine start).
+    pub queue_us: u64,
+    /// Size of the dynamic batch this request rode in.
+    pub batch_size: usize,
+    /// End-to-end latency (admission → response).
+    pub latency_us: u64,
+}
+
+/// Network-level simulation summary — the serving-sized digest of a
+/// [`NetworkSim`] (per-layer detail stays in-process; `fuseconv trace`
+/// serves that need).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SimSummary {
+    pub network: String,
+    pub config_label: String,
+    pub total_cycles: u64,
+    pub latency_ms: f64,
+    pub utilization: f64,
+    pub num_layers: usize,
+}
+
+impl SimSummary {
+    pub fn of(sim: &NetworkSim) -> SimSummary {
+        SimSummary {
+            network: sim.network.clone(),
+            config_label: sim.config_label.clone(),
+            total_cycles: sim.total_cycles,
+            latency_ms: sim.latency_ms,
+            utilization: sim.overall_utilization(),
+            num_layers: sim.layers.len(),
+        }
+    }
+}
+
+/// One sweep grid cell.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SweepRow {
+    pub network: String,
+    pub variant: FuseVariant,
+    pub rows: usize,
+    pub cols: usize,
+    pub dataflow: Dataflow,
+    pub stos: bool,
+    pub total_cycles: u64,
+    pub latency_ms: f64,
+}
+
+/// Serving statistics snapshot (inference + simulation + shared cache).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct StatsReply {
+    pub protocol_version: u32,
+    pub infer_served: u64,
+    pub infer_batches: u64,
+    pub sim_submitted: u64,
+    pub sim_completed: u64,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    pub cache_entries: u64,
+}
+
+/// One zoo listing row.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ZooEntry {
+    pub name: String,
+    pub macs_m: f64,
+    pub params_m: f64,
+    pub blocks: usize,
+}
+
+/// Typed serving failures. These travel over the wire, so they carry no
+/// foreign error types — just enough for the client to act.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServeError {
+    /// Bounded admission queue is full; retry with backoff.
+    Busy,
+    /// The request cannot be served as stated (unknown model, bad
+    /// geometry, missing engine, malformed frame, ...).
+    BadRequest(String),
+    /// The request's deadline expired before the work ran to completion.
+    Deadline,
+    /// The service is shutting down (or already gone).
+    Shutdown,
+}
+
+impl ServeError {
+    /// Stable wire code for the error kind.
+    pub fn code(&self) -> &'static str {
+        match self {
+            ServeError::Busy => "busy",
+            ServeError::BadRequest(_) => "bad_request",
+            ServeError::Deadline => "deadline",
+            ServeError::Shutdown => "shutdown",
+        }
+    }
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::Busy => write!(f, "busy: admission queue full"),
+            ServeError::BadRequest(msg) => write!(f, "bad request: {msg}"),
+            ServeError::Deadline => write!(f, "deadline expired"),
+            ServeError::Shutdown => write!(f, "service shutting down"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+// ---------------------------------------------------------------------------
+// Service + Ticket
+// ---------------------------------------------------------------------------
+
+/// Anything that can serve protocol requests. Both halves of the
+/// coordinator implement this — the batched inference [`Server`]
+/// (`coordinator::server`) and the cache-backed [`SimServer`] pool — as
+/// does the [`Router`](super::server::Router) that fronts them for the
+/// TCP listener.
+///
+/// `call` never blocks on the work itself: it performs admission control
+/// and returns a [`Ticket`] the caller redeems for the [`Response`].
+pub trait Service: Send + Sync {
+    fn call(&self, req: Request) -> Ticket;
+}
+
+/// A claim on one in-flight request: wraps the reply channel with
+/// deadline-aware receive semantics so callers can never hang forever.
+#[derive(Debug)]
+pub struct Ticket {
+    id: u64,
+    rx: mpsc::Receiver<Response>,
+}
+
+impl Ticket {
+    /// A ticket plus the sender the service uses to complete it.
+    pub fn pending(id: u64) -> (Ticket, mpsc::Sender<Response>) {
+        let (tx, rx) = mpsc::channel();
+        (Ticket { id, rx }, tx)
+    }
+
+    /// A ticket that is already resolved (admission-time errors and
+    /// immediate replies).
+    pub fn immediate(resp: Response) -> Ticket {
+        let (ticket, tx) = Ticket::pending(resp.id);
+        let _ = tx.send(resp);
+        ticket
+    }
+
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Block until the response arrives. If the serving side dropped the
+    /// reply channel without answering, this is a [`ServeError::Shutdown`].
+    pub fn wait(self) -> Response {
+        let id = self.id;
+        self.rx.recv().unwrap_or_else(|_| Response::err(id, ServeError::Shutdown))
+    }
+
+    /// Block at most `timeout`; expiry yields [`ServeError::Deadline`]
+    /// (the work may still complete server-side, but the claim is gone).
+    pub fn recv_deadline(self, timeout: Duration) -> Response {
+        let id = self.id;
+        match self.rx.recv_timeout(timeout) {
+            Ok(resp) => resp,
+            Err(mpsc::RecvTimeoutError::Timeout) => Response::err(id, ServeError::Deadline),
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                Response::err(id, ServeError::Shutdown)
+            }
+        }
+    }
+
+    /// Non-blocking poll; `None` while the work is still in flight.
+    pub fn try_recv(&self) -> Option<Response> {
+        self.rx.try_recv().ok()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn model_spec_resolves_zoo_names() {
+        let net = ModelSpec::Zoo("mobilenet-v2".into()).resolve().unwrap();
+        assert_eq!(net.name, "MobileNet-V2");
+        let err = ModelSpec::Zoo("nonesuch".into()).resolve().unwrap_err();
+        assert!(matches!(err, ServeError::BadRequest(_)));
+    }
+
+    #[test]
+    fn inline_model_round_trips_layers() {
+        let base = models::by_name("mobilenet-v3-small").unwrap();
+        let specs: Vec<LayerSpec> = base.layers.iter().map(LayerSpec::from_layer).collect();
+        let spec = ModelSpec::Inline { name: base.name.clone(), layers: specs };
+        let rebuilt = spec.resolve().unwrap();
+        assert_eq!(rebuilt.layers.len(), base.layers.len());
+        assert_eq!(rebuilt.num_blocks, base.num_blocks);
+        for (a, b) in rebuilt.layers.iter().zip(&base.layers) {
+            assert_eq!(a.op, b.op);
+            assert_eq!((a.h, a.w, a.block), (b.h, b.w, b.block));
+        }
+        // cycle counts are identical: the spec carries everything the
+        // simulator reads
+        let cfg = SimConfig::default();
+        let a = crate::sim::simulate_network(&rebuilt, &cfg);
+        let b = crate::sim::simulate_network(&base, &cfg);
+        assert_eq!(a.total_cycles, b.total_cycles);
+    }
+
+    #[test]
+    fn empty_inline_model_rejected() {
+        let spec = ModelSpec::Inline { name: "x".into(), layers: vec![] };
+        assert!(spec.resolve().is_err());
+    }
+
+    #[test]
+    fn config_patch_applies_overrides() {
+        let patch = ConfigPatch {
+            size: Some(32),
+            dataflow: Some(Dataflow::WeightStationary),
+            stos: Some(false),
+            freq_mhz: Some(500),
+            ..ConfigPatch::default()
+        };
+        let cfg = patch.to_config().unwrap();
+        assert_eq!((cfg.rows, cfg.cols), (32, 32));
+        assert_eq!(cfg.dataflow, Dataflow::WeightStationary);
+        assert!(!cfg.stos);
+        assert_eq!(cfg.freq_mhz, 500);
+        // untouched fields keep Table-1 defaults
+        assert_eq!(cfg.ifmap_sram_kb, 64);
+    }
+
+    #[test]
+    fn config_patch_rows_cols_win_over_size() {
+        let patch = ConfigPatch {
+            size: Some(32),
+            rows: Some(8),
+            cols: Some(64),
+            ..ConfigPatch::default()
+        };
+        let cfg = patch.to_config().unwrap();
+        assert_eq!((cfg.rows, cfg.cols), (8, 64));
+    }
+
+    #[test]
+    fn config_patch_rejects_degenerate_geometry() {
+        assert!(ConfigPatch::sized(0).to_config().is_err());
+        let patch = ConfigPatch { freq_mhz: Some(0), ..ConfigPatch::default() };
+        assert!(patch.to_config().is_err());
+        // remote-input sanity bound: absurd geometries bounce as
+        // BadRequest instead of reaching the simulator's arithmetic
+        assert!(ConfigPatch::sized(MAX_ARRAY_DIM).to_config().is_ok());
+        assert!(ConfigPatch::sized(MAX_ARRAY_DIM + 1).to_config().is_err());
+        assert!(ConfigPatch::sized(usize::MAX).to_config().is_err());
+    }
+
+    #[test]
+    fn empty_patch_is_table1_default() {
+        let cfg = ConfigPatch::default().to_config().unwrap();
+        let dflt = SimConfig::default();
+        assert_eq!(cfg.price_key(), dflt.price_key());
+        assert_eq!(cfg.freq_mhz, dflt.freq_mhz);
+    }
+
+    #[test]
+    fn ticket_immediate_and_pending() {
+        let t = Ticket::immediate(Response::err(7, ServeError::Busy));
+        assert_eq!(t.id(), 7);
+        let resp = t.wait();
+        assert_eq!(resp.id, 7);
+        assert_eq!(resp.result, Err(ServeError::Busy));
+
+        let (t, tx) = Ticket::pending(9);
+        assert!(t.try_recv().is_none());
+        tx.send(Response::ok(9, Reply::Done)).unwrap();
+        assert_eq!(t.wait(), Response::ok(9, Reply::Done));
+    }
+
+    #[test]
+    fn ticket_recv_deadline_times_out_typed() {
+        let (t, _tx) = Ticket::pending(3);
+        let resp = t.recv_deadline(Duration::from_millis(5));
+        assert_eq!(resp.result, Err(ServeError::Deadline));
+        assert_eq!(resp.id, 3);
+    }
+
+    #[test]
+    fn ticket_dropped_sender_is_shutdown() {
+        let (t, tx) = Ticket::pending(4);
+        drop(tx);
+        assert_eq!(t.wait().result, Err(ServeError::Shutdown));
+    }
+
+    #[test]
+    fn serve_error_codes_are_stable() {
+        assert_eq!(ServeError::Busy.code(), "busy");
+        assert_eq!(ServeError::BadRequest("x".into()).code(), "bad_request");
+        assert_eq!(ServeError::Deadline.code(), "deadline");
+        assert_eq!(ServeError::Shutdown.code(), "shutdown");
+    }
+}

@@ -1,25 +1,36 @@
-//! Serving loops.
+//! Serving loops behind the unified [`Service`] trait.
 //!
-//! * [`Server`] — inference serving: a dispatcher thread drains the
+//! * [`Server`] — batched inference: a dispatcher thread drains the
 //!   dynamic batcher and drives an [`Engine`] (the PJRT executable in
-//!   production, a mock in tests). Per-request latency and batch
-//!   statistics come back with each response — this is the L3 hot path
-//!   the §Perf pass profiles.
+//!   production, [`MockEngine`] in tests and `--engine mock` mode).
+//!   Admission is a *bounded* queue: a full queue answers
+//!   [`ServeError::Busy`] instead of growing without limit.
 //! * [`SimServer`] — simulation-as-a-service: scenario requests
-//!   (network × variant × config) fan out across the worker pool through
-//!   the sweep engine's shared layer cache, instead of the serial
-//!   one-`simulate_network`-at-a-time loop clients used to run themselves.
+//!   (model × variant × config) fan out across the worker pool through
+//!   the sweep engine's shared layer cache, with a bounded in-flight
+//!   window for the same backpressure contract.
+//! * [`Router`] — one [`Service`] fronting both, used by the TCP/JSON
+//!   frontend (`coordinator::net`) and `fuseconv serve`.
+//!
+//! Both halves speak only protocol types: requests arrive as
+//! [`Request`]s and leave as [`Response`]s through [`Ticket`]s, whether
+//! the caller is in-process or a wire client.
 
-use super::batcher::{BatchPolicy, Batcher};
+use super::batcher::{BatchPolicy, Batcher, Pending};
+use super::protocol::{
+    ConfigPatch, InferReply, ModelSpec, Reply, Request, RequestBody, Response, ServeError,
+    Service, SimSummary, StatsReply, SweepRow, Ticket, ZooEntry, PROTOCOL_VERSION,
+};
 use crate::exec::Pool;
-use crate::nn::Network;
+use crate::nn::models;
 use crate::sim::{
-    run_sweep, simulate_network_cached, CacheStats, FuseVariant, LayerCache, NetworkSim,
-    SimConfig, SweepOutcome, SweepPlan,
+    run_sweep, simulate_network_cached, CacheStats, FuseVariant, LayerCache, SweepOutcome,
+    SweepPlan,
 };
 use crate::stats::Summary;
-use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
 use std::thread;
 use std::time::{Duration, Instant};
 
@@ -40,24 +51,50 @@ pub trait Engine: 'static {
     fn infer(&self, inputs: &[f32], n: usize) -> Vec<f32>;
 }
 
-/// One client request.
-pub struct Request {
-    pub id: u64,
-    pub input: Vec<f32>,
-    pub reply: mpsc::Sender<Response>,
+/// Deterministic arithmetic engine — no artifacts required:
+/// `output[j·out_len + k] = Σ input_j + k`. Backs `fuseconv serve
+/// --engine mock`, the wire integration tests, and the unit tests here.
+pub struct MockEngine {
+    pub in_len: usize,
+    pub out_len: usize,
+    pub max_b: usize,
+    pub delay: Duration,
 }
 
-/// Completed inference.
-#[derive(Debug, Clone)]
-pub struct Response {
-    pub id: u64,
-    pub output: Vec<f32>,
-    pub queue_us: u64,
-    pub batch_size: usize,
-    pub latency_us: u64,
+impl MockEngine {
+    pub fn new(in_len: usize, out_len: usize, max_b: usize) -> MockEngine {
+        MockEngine { in_len, out_len, max_b, delay: Duration::ZERO }
+    }
 }
 
-/// Serving statistics, accumulated by the dispatcher.
+impl Engine for MockEngine {
+    fn input_len(&self) -> usize {
+        self.in_len
+    }
+    fn output_len(&self) -> usize {
+        self.out_len
+    }
+    fn max_batch(&self) -> usize {
+        self.max_b
+    }
+    fn infer(&self, inputs: &[f32], n: usize) -> Vec<f32> {
+        if !self.delay.is_zero() {
+            thread::sleep(self.delay);
+        }
+        let mut out = Vec::with_capacity(n * self.out_len);
+        for j in 0..n {
+            let s: f32 = inputs[j * self.in_len..(j + 1) * self.in_len].iter().sum();
+            for k in 0..self.out_len {
+                out.push(s + k as f32);
+            }
+        }
+        out
+    }
+}
+
+/// Serving statistics, accumulated by the dispatcher and returned by
+/// [`Server::shutdown`]. Live counters for `Stats` requests are kept
+/// separately (atomics shared with the [`Server`] handle).
 #[derive(Debug, Default, Clone)]
 pub struct ServerStats {
     pub served: u64,
@@ -84,33 +121,61 @@ impl ServerStats {
     }
 }
 
-/// Handle to a running server.
-pub struct Server {
-    tx: mpsc::Sender<ServerMsg>,
-    dispatcher: Option<thread::JoinHandle<ServerStats>>,
-    next_id: std::sync::atomic::AtomicU64,
+/// Default bound on the inference admission queue.
+pub const DEFAULT_INFER_QUEUE: usize = 1024;
+
+/// One admitted inference job (internal to the dispatcher).
+struct InferJob {
+    id: u64,
+    input: Vec<f32>,
+    deadline: Option<Instant>,
+    reply: mpsc::Sender<Response>,
+    accepted: Instant,
 }
 
 enum ServerMsg {
-    Req(Request),
+    Req(InferJob),
     Shutdown,
+}
+
+/// Handle to a running batched-inference server.
+pub struct Server {
+    tx: mpsc::SyncSender<ServerMsg>,
+    dispatcher: Option<thread::JoinHandle<ServerStats>>,
+    next_id: AtomicU64,
+    served: Arc<AtomicU64>,
+    batches: Arc<AtomicU64>,
 }
 
 impl Server {
     /// Start with an engine constructed on the dispatcher thread (required
-    /// for thread-bound engines like the PJRT one).
+    /// for thread-bound engines like the PJRT one) and the default
+    /// admission-queue bound.
     pub fn start_with<E, F>(factory: F, policy: BatchPolicy) -> Server
     where
         E: Engine,
         F: FnOnce() -> E + Send + 'static,
     {
-        let (tx, rx) = mpsc::channel::<ServerMsg>();
-        let rx = Arc::new(Mutex::new(rx));
+        Server::start_with_queue(factory, policy, DEFAULT_INFER_QUEUE)
+    }
+
+    /// As [`Server::start_with`], with an explicit admission-queue bound:
+    /// once `queue` requests are admitted-but-undispatched, further calls
+    /// answer [`ServeError::Busy`].
+    pub fn start_with_queue<E, F>(factory: F, policy: BatchPolicy, queue: usize) -> Server
+    where
+        E: Engine,
+        F: FnOnce() -> E + Send + 'static,
+    {
+        let (tx, rx) = mpsc::sync_channel::<ServerMsg>(queue.max(1));
+        let served = Arc::new(AtomicU64::new(0));
+        let batches = Arc::new(AtomicU64::new(0));
+        let (served2, batches2) = (Arc::clone(&served), Arc::clone(&batches));
         let dispatcher = thread::Builder::new()
             .name("fuseconv-dispatch".into())
-            .spawn(move || dispatch_loop(factory(), policy, rx))
+            .spawn(move || dispatch_loop(factory(), policy, rx, served2, batches2))
             .expect("spawn dispatcher");
-        Server { tx, dispatcher: Some(dispatcher), next_id: 0.into() }
+        Server { tx, dispatcher: Some(dispatcher), next_id: 0.into(), served, batches }
     }
 
     /// Convenience for `Send` engines.
@@ -118,30 +183,69 @@ impl Server {
         Server::start_with(move || engine, policy)
     }
 
-    /// Submit one input; returns a receiver for the response.
-    pub fn submit(&self, input: Vec<f32>) -> mpsc::Receiver<Response> {
-        let (reply, rx) = mpsc::channel();
-        let id = self.next_id.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-        self.tx
-            .send(ServerMsg::Req(Request { id, input, reply }))
-            .expect("server alive");
-        rx
+    /// Submit one input under a server-assigned request id.
+    pub fn submit(&self, input: Vec<f32>) -> Ticket {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        self.call(Request::new(id, RequestBody::Infer { input }))
     }
 
-    /// Stop the dispatcher and collect statistics.
+    /// Requests completed since start (live; for `Stats`).
+    pub fn served(&self) -> u64 {
+        self.served.load(Ordering::Relaxed)
+    }
+
+    /// Batches dispatched since start (live; for `Stats`).
+    pub fn batches(&self) -> u64 {
+        self.batches.load(Ordering::Relaxed)
+    }
+
+    /// Stop the dispatcher (draining the queue) and collect statistics.
     pub fn shutdown(mut self) -> ServerStats {
         let _ = self.tx.send(ServerMsg::Shutdown);
         self.dispatcher.take().expect("not yet shut down").join().expect("dispatcher join")
     }
 }
 
+impl Service for Server {
+    fn call(&self, req: Request) -> Ticket {
+        let id = req.id;
+        match req.body {
+            RequestBody::Infer { input } => {
+                let deadline =
+                    req.deadline_ms.map(|ms| Instant::now() + Duration::from_millis(ms));
+                let (ticket, reply) = Ticket::pending(id);
+                let job =
+                    InferJob { id, input, deadline, reply, accepted: Instant::now() };
+                match self.tx.try_send(ServerMsg::Req(job)) {
+                    Ok(()) => ticket,
+                    Err(mpsc::TrySendError::Full(_)) => {
+                        Ticket::immediate(Response::err(id, ServeError::Busy))
+                    }
+                    Err(mpsc::TrySendError::Disconnected(_)) => {
+                        Ticket::immediate(Response::err(id, ServeError::Shutdown))
+                    }
+                }
+            }
+            other => Ticket::immediate(Response::err(
+                id,
+                ServeError::BadRequest(format!(
+                    "inference server cannot serve {:?} requests",
+                    other.op()
+                )),
+            )),
+        }
+    }
+}
+
 fn dispatch_loop<E: Engine>(
     engine: E,
     policy: BatchPolicy,
-    rx: Arc<Mutex<mpsc::Receiver<ServerMsg>>>,
+    rx: mpsc::Receiver<ServerMsg>,
+    served: Arc<AtomicU64>,
+    batches: Arc<AtomicU64>,
 ) -> ServerStats {
-    let mut batcher: Batcher<Request> = Batcher::new(BatchPolicy {
-        max_batch: policy.max_batch.min(engine.max_batch()),
+    let mut batcher: Batcher<InferJob> = Batcher::new(BatchPolicy {
+        max_batch: policy.max_batch.min(engine.max_batch()).max(1),
         ..policy
     });
     let mut stats = ServerStats::default();
@@ -152,16 +256,24 @@ fn dispatch_loop<E: Engine>(
         let now = Instant::now();
         let wait = batcher.next_deadline(now).unwrap_or(Duration::from_millis(50));
         if open {
-            match rx.lock().unwrap().recv_timeout(wait) {
-                Ok(ServerMsg::Req(r)) => batcher.push(r),
+            match rx.recv_timeout(wait) {
+                // Arrival is stamped at *admission*, so time spent in the
+                // bounded channel counts against max_wait too.
+                Ok(ServerMsg::Req(j)) => {
+                    let at = j.accepted;
+                    batcher.push_at(j, at);
+                }
                 Ok(ServerMsg::Shutdown) => open = false,
                 Err(mpsc::RecvTimeoutError::Timeout) => {}
                 Err(mpsc::RecvTimeoutError::Disconnected) => open = false,
             }
             // opportunistically drain anything else queued
-            while let Ok(msg) = rx.lock().unwrap().try_recv() {
+            while let Ok(msg) = rx.try_recv() {
                 match msg {
-                    ServerMsg::Req(r) => batcher.push(r),
+                    ServerMsg::Req(j) => {
+                        let at = j.accepted;
+                        batcher.push_at(j, at);
+                    }
                     ServerMsg::Shutdown => open = false,
                 }
             }
@@ -170,57 +282,82 @@ fn dispatch_loop<E: Engine>(
         let now = Instant::now();
         if batcher.ready(now) || (!open && !batcher.is_empty()) {
             let batch = batcher.take_batch();
-            let n = batch.len();
+            // Typed rejections before the engine sees the batch: malformed
+            // inputs and expired deadlines never panic the dispatcher.
             let in_len = engine.input_len();
+            let mut live: Vec<Pending<InferJob>> = Vec::with_capacity(batch.len());
+            for p in batch {
+                if p.item.input.len() != in_len {
+                    let resp = Response::err(
+                        p.item.id,
+                        ServeError::BadRequest(format!(
+                            "input length {} != engine input length {}",
+                            p.item.input.len(),
+                            in_len
+                        )),
+                    );
+                    let _ = p.item.reply.send(resp);
+                } else if p.item.deadline.is_some_and(|d| now > d) {
+                    let _ = p.item.reply.send(Response::err(p.item.id, ServeError::Deadline));
+                } else {
+                    live.push(p);
+                }
+            }
+            if live.is_empty() {
+                continue;
+            }
+            let n = live.len();
             let mut flat = Vec::with_capacity(n * in_len);
-            for p in &batch {
-                assert_eq!(p.item.input.len(), in_len, "bad input length");
+            for p in &live {
                 flat.extend_from_slice(&p.item.input);
             }
             let t0 = Instant::now();
             let out = engine.infer(&flat, n);
             let infer_us = t0.elapsed().as_micros() as u64;
-            assert_eq!(out.len(), n * engine.output_len(), "engine output length");
+            let out_len = engine.output_len();
+            assert_eq!(out.len(), n * out_len, "engine output length");
             let done = Instant::now();
             stats.batches += 1;
+            batches.fetch_add(1, Ordering::Relaxed);
             stats.batch_sizes.push(n as f64);
-            for (i, p) in batch.into_iter().enumerate() {
-                let queue_us = done.duration_since(p.arrived).as_micros() as u64 - infer_us.min(
-                    done.duration_since(p.arrived).as_micros() as u64,
-                );
-                let resp = Response {
-                    id: p.item.id,
-                    output: out[i * engine.output_len()..(i + 1) * engine.output_len()].to_vec(),
+            for (i, p) in live.into_iter().enumerate() {
+                let latency_us = done.duration_since(p.arrived).as_micros() as u64;
+                // Queue time = everything that wasn't the engine run.
+                let queue_us = latency_us.saturating_sub(infer_us);
+                let reply = InferReply {
+                    output: out[i * out_len..(i + 1) * out_len].to_vec(),
                     queue_us,
                     batch_size: n,
-                    latency_us: done.duration_since(p.arrived).as_micros() as u64,
+                    latency_us,
                 };
                 stats.served += 1;
-                stats.latencies_us.push(resp.latency_us as f64);
-                let _ = p.item.reply.send(resp);
+                served.fetch_add(1, Ordering::Relaxed);
+                stats.latencies_us.push(latency_us as f64);
+                let _ = p.item.reply.send(Response::ok(p.item.id, Reply::Infer(reply)));
             }
         }
     }
     stats
 }
 
-/// One simulation scenario: a network, the FuSe form to apply, and the
-/// hardware config to price it under.
-#[derive(Debug, Clone)]
-pub struct SimRequest {
-    pub network: Network,
-    pub variant: FuseVariant,
-    pub cfg: SimConfig,
-}
+// ---------------------------------------------------------------------------
+// Simulation serving
+// ---------------------------------------------------------------------------
 
-/// Simulation-serving handle: submit scenarios, receive [`NetworkSim`]s.
+/// Default bound on concurrently admitted simulation jobs.
+pub const DEFAULT_SIM_CAPACITY: usize = 256;
+
+/// Simulation-serving handle: protocol requests in, [`Ticket`]s out.
 /// All workers share one sweep-engine layer cache, so a traffic mix that
-/// revisits networks/configs (EA populations, dashboard queries, repeated
+/// revisits models/configs (EA populations, dashboard queries, repeated
 /// what-if scenarios) degenerates to cache lookups.
 pub struct SimServer {
-    pool: Pool,
+    pool: Arc<Pool>,
     cache: Arc<LayerCache>,
-    submitted: std::sync::atomic::AtomicU64,
+    capacity: usize,
+    inflight: Arc<AtomicUsize>,
+    submitted: AtomicU64,
+    completed: Arc<AtomicU64>,
 }
 
 impl SimServer {
@@ -231,79 +368,315 @@ impl SimServer {
 
     /// Share a cache with other subsystems (sweeps, evaluators).
     pub fn with_cache(threads: usize, cache: Arc<LayerCache>) -> SimServer {
-        SimServer { pool: Pool::new(threads), cache, submitted: 0.into() }
+        SimServer::with_capacity(threads, cache, DEFAULT_SIM_CAPACITY)
     }
 
-    /// Submit one scenario; returns a receiver for the result.
-    pub fn submit(&self, req: SimRequest) -> mpsc::Receiver<NetworkSim> {
-        let (tx, rx) = mpsc::channel();
-        let cache = Arc::clone(&self.cache);
-        self.submitted.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-        self.pool.spawn(move || {
-            let net = req.variant.apply(&req.network);
-            // The client may have hung up (dropped the receiver); that is
-            // not the server's problem.
-            let _ = tx.send(simulate_network_cached(&net, &req.cfg, &cache));
-        });
-        rx
+    /// Explicit admission bound: once `capacity` jobs are in flight,
+    /// further `Simulate`/`Sweep` calls answer [`ServeError::Busy`].
+    pub fn with_capacity(
+        threads: usize,
+        cache: Arc<LayerCache>,
+        capacity: usize,
+    ) -> SimServer {
+        SimServer {
+            pool: Arc::new(Pool::new(threads)),
+            cache,
+            capacity: capacity.max(1),
+            inflight: Arc::new(AtomicUsize::new(0)),
+            submitted: 0.into(),
+            completed: Arc::new(AtomicU64::new(0)),
+        }
     }
 
-    /// Run a whole sweep plan synchronously on the server's pool + cache.
+    /// Try to take one admission slot.
+    fn admit(&self) -> bool {
+        let mut cur = self.inflight.load(Ordering::Relaxed);
+        loop {
+            if cur >= self.capacity {
+                return false;
+            }
+            match self.inflight.compare_exchange_weak(
+                cur,
+                cur + 1,
+                Ordering::AcqRel,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return true,
+                Err(actual) => cur = actual,
+            }
+        }
+    }
+
+    /// Run a whole sweep plan synchronously on the server's pool + cache
+    /// (in-process callers; wire traffic goes through `Sweep` requests).
     pub fn sweep(&self, plan: &SweepPlan) -> SweepOutcome {
         run_sweep(plan, &self.pool, &self.cache)
     }
 
+    /// Scenario requests admitted since start.
     pub fn submitted(&self) -> u64 {
-        self.submitted.load(std::sync::atomic::Ordering::Relaxed)
+        self.submitted.load(Ordering::Relaxed)
+    }
+
+    /// Scenario requests completed since start.
+    pub fn completed(&self) -> u64 {
+        self.completed.load(Ordering::Relaxed)
     }
 
     pub fn cache_stats(&self) -> CacheStats {
         self.cache.stats()
     }
+
+    /// Live statistics (inference counters are zero; the [`Router`]
+    /// overlays them when an engine is attached).
+    pub fn stats_reply(&self) -> StatsReply {
+        let cs = self.cache_stats();
+        StatsReply {
+            protocol_version: PROTOCOL_VERSION,
+            infer_served: 0,
+            infer_batches: 0,
+            sim_submitted: self.submitted(),
+            sim_completed: self.completed(),
+            cache_hits: cs.hits,
+            cache_misses: cs.misses,
+            cache_entries: cs.entries as u64,
+        }
+    }
 }
 
-#[cfg(test)]
-pub mod testutil {
-    use super::*;
+impl Service for SimServer {
+    fn call(&self, req: Request) -> Ticket {
+        let id = req.id;
+        let deadline = req.deadline_ms.map(|ms| Instant::now() + Duration::from_millis(ms));
+        match req.body {
+            RequestBody::Simulate { model, variant, config } => {
+                if !self.admit() {
+                    return Ticket::immediate(Response::err(id, ServeError::Busy));
+                }
+                self.submitted.fetch_add(1, Ordering::Relaxed);
+                let (ticket, reply) = Ticket::pending(id);
+                let cache = Arc::clone(&self.cache);
+                let inflight = Arc::clone(&self.inflight);
+                let completed = Arc::clone(&self.completed);
+                self.pool.spawn(move || {
+                    // Unwind guard: a panicking scenario must neither kill
+                    // the pool worker nor leak its admission slot.
+                    let result = catch_unwind(AssertUnwindSafe(|| {
+                        simulate_one(&model, variant, &config, deadline, &cache)
+                    }))
+                    .unwrap_or_else(|_| {
+                        Err(ServeError::BadRequest("simulation panicked".into()))
+                    });
+                    completed.fetch_add(1, Ordering::Relaxed);
+                    inflight.fetch_sub(1, Ordering::Release);
+                    // The client may have hung up (dropped the ticket);
+                    // that is not the server's problem.
+                    let _ = reply.send(Response { id, result: result.map(Reply::Sim) });
+                });
+                ticket
+            }
+            RequestBody::Sweep { models, variants, configs } => {
+                if !self.admit() {
+                    return Ticket::immediate(Response::err(id, ServeError::Busy));
+                }
+                self.submitted.fetch_add(1, Ordering::Relaxed);
+                let (ticket, reply) = Ticket::pending(id);
+                let pool = Arc::clone(&self.pool);
+                let cache = Arc::clone(&self.cache);
+                let inflight = Arc::clone(&self.inflight);
+                let completed = Arc::clone(&self.completed);
+                // A sweep is a whole fork/join grid: run it from a fresh
+                // coordinator thread so the pool's workers stay job-sized
+                // (a sweep *on* a worker would deadlock the join).
+                let _detached = thread::Builder::new()
+                    .name("fuseconv-sweep-req".into())
+                    .spawn(move || {
+                        let result = catch_unwind(AssertUnwindSafe(|| {
+                            sweep_request(models, variants, configs, deadline, &pool, &cache)
+                        }))
+                        .unwrap_or_else(|_| {
+                            Err(ServeError::BadRequest("sweep panicked".into()))
+                        });
+                        completed.fetch_add(1, Ordering::Relaxed);
+                        inflight.fetch_sub(1, Ordering::Release);
+                        let _ = reply.send(Response { id, result: result.map(Reply::Sweep) });
+                    })
+                    .expect("spawn sweep thread");
+                ticket
+            }
+            RequestBody::Stats => {
+                Ticket::immediate(Response::ok(id, Reply::Stats(self.stats_reply())))
+            }
+            RequestBody::Zoo => Ticket::immediate(Response::ok(id, Reply::Zoo(zoo_entries()))),
+            RequestBody::Shutdown => {
+                // Lifecycle belongs to the frontend (Router / listener).
+                Ticket::immediate(Response::ok(id, Reply::Done))
+            }
+            RequestBody::Infer { .. } => Ticket::immediate(Response::err(
+                id,
+                ServeError::BadRequest(
+                    "no inference engine behind the simulation service".into(),
+                ),
+            )),
+        }
+    }
+}
 
-    /// Mock engine: output[j] = sum(input of sample j) + j-th class index.
-    pub struct MockEngine {
-        pub in_len: usize,
-        pub out_len: usize,
-        pub max_b: usize,
-        pub delay: Duration,
+/// One `Simulate` scenario, start to finish (runs on a pool worker).
+fn simulate_one(
+    model: &ModelSpec,
+    variant: FuseVariant,
+    config: &ConfigPatch,
+    deadline: Option<Instant>,
+    cache: &LayerCache,
+) -> Result<SimSummary, ServeError> {
+    if deadline.is_some_and(|d| Instant::now() > d) {
+        return Err(ServeError::Deadline);
+    }
+    let net = model.resolve()?;
+    let cfg = config.to_config()?;
+    let realized = variant.apply(&net);
+    Ok(SimSummary::of(&simulate_network_cached(&realized, &cfg, cache)))
+}
+
+/// One `Sweep` request: resolve the grid, run it, summarize the cells.
+fn sweep_request(
+    models: Vec<String>,
+    variants: Vec<FuseVariant>,
+    configs: Vec<ConfigPatch>,
+    deadline: Option<Instant>,
+    pool: &Pool,
+    cache: &Arc<LayerCache>,
+) -> Result<Vec<SweepRow>, ServeError> {
+    if deadline.is_some_and(|d| Instant::now() > d) {
+        return Err(ServeError::Deadline);
+    }
+    let networks = models
+        .iter()
+        .map(|m| ModelSpec::Zoo(m.clone()).resolve())
+        .collect::<Result<Vec<_>, _>>()?;
+    let cfgs = configs
+        .iter()
+        .map(|p| p.to_config())
+        .collect::<Result<Vec<_>, _>>()?;
+    let plan = SweepPlan::new(networks, variants, cfgs);
+    if plan.is_empty() {
+        return Err(ServeError::BadRequest("empty sweep grid".into()));
+    }
+    let out = run_sweep(&plan, pool, cache);
+    Ok(out
+        .records()
+        .iter()
+        .map(|r| SweepRow {
+            network: r.network.clone(),
+            variant: r.variant,
+            rows: r.cfg.rows,
+            cols: r.cfg.cols,
+            dataflow: r.cfg.dataflow,
+            stos: r.cfg.stos,
+            total_cycles: r.total_cycles(),
+            latency_ms: r.latency_ms(),
+        })
+        .collect())
+}
+
+/// The zoo listing served to `Zoo` requests.
+pub fn zoo_entries() -> Vec<ZooEntry> {
+    models::zoo_table()
+        .into_iter()
+        .map(|(name, macs_m, params_m, blocks)| ZooEntry {
+            name: name.to_string(),
+            macs_m,
+            params_m,
+            blocks,
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// Router
+// ---------------------------------------------------------------------------
+
+/// One [`Service`] fronting both serving halves: `Infer` goes to the
+/// engine, `Simulate`/`Sweep`/`Zoo` to the simulation pool, `Stats`
+/// merges both, `Shutdown` flips the closing latch the TCP frontend
+/// polls. After `Shutdown`, every call answers [`ServeError::Shutdown`].
+pub struct Router {
+    infer: Option<Server>,
+    sim: SimServer,
+    closing: AtomicBool,
+}
+
+impl Router {
+    /// Simulation-only deployment (no inference engine attached).
+    pub fn new(sim: SimServer) -> Router {
+        Router { infer: None, sim, closing: AtomicBool::new(false) }
     }
 
-    impl Engine for MockEngine {
-        fn input_len(&self) -> usize {
-            self.in_len
+    /// Attach a batched inference server for `Infer` traffic.
+    pub fn with_engine(mut self, server: Server) -> Router {
+        self.infer = Some(server);
+        self
+    }
+
+    /// Has a `Shutdown` request been accepted?
+    pub fn closing(&self) -> bool {
+        self.closing.load(Ordering::Acquire)
+    }
+
+    pub fn sim(&self) -> &SimServer {
+        &self.sim
+    }
+
+    /// Combined live statistics.
+    pub fn stats_reply(&self) -> StatsReply {
+        let mut s = self.sim.stats_reply();
+        if let Some(srv) = &self.infer {
+            s.infer_served = srv.served();
+            s.infer_batches = srv.batches();
         }
-        fn output_len(&self) -> usize {
-            self.out_len
+        s
+    }
+
+    /// Tear down: stop the inference dispatcher (draining its queue) and
+    /// return its final statistics, if an engine was attached.
+    pub fn into_stats(mut self) -> Option<ServerStats> {
+        self.infer.take().map(Server::shutdown)
+    }
+}
+
+impl Service for Router {
+    fn call(&self, req: Request) -> Ticket {
+        let id = req.id;
+        if self.closing() {
+            return Ticket::immediate(Response::err(id, ServeError::Shutdown));
         }
-        fn max_batch(&self) -> usize {
-            self.max_b
-        }
-        fn infer(&self, inputs: &[f32], n: usize) -> Vec<f32> {
-            if !self.delay.is_zero() {
-                thread::sleep(self.delay);
+        match req.body {
+            RequestBody::Infer { .. } => match &self.infer {
+                Some(srv) => srv.call(req),
+                None => Ticket::immediate(Response::err(
+                    id,
+                    ServeError::BadRequest(
+                        "this endpoint has no inference engine (simulation-only)".into(),
+                    ),
+                )),
+            },
+            RequestBody::Stats => {
+                Ticket::immediate(Response::ok(id, Reply::Stats(self.stats_reply())))
             }
-            let mut out = Vec::with_capacity(n * self.out_len);
-            for j in 0..n {
-                let s: f32 = inputs[j * self.in_len..(j + 1) * self.in_len].iter().sum();
-                for k in 0..self.out_len {
-                    out.push(s + k as f32);
-                }
+            RequestBody::Shutdown => {
+                self.closing.store(true, Ordering::Release);
+                Ticket::immediate(Response::ok(id, Reply::Done))
             }
-            out
+            _ => self.sim.call(req),
         }
     }
 }
 
 #[cfg(test)]
 mod tests {
-    use super::testutil::MockEngine;
     use super::*;
+    use crate::sim::{simulate_network, SimConfig};
 
     fn mock(delay_ms: u64) -> MockEngine {
         MockEngine {
@@ -314,12 +687,28 @@ mod tests {
         }
     }
 
+    /// Unwrap an inference reply or panic with the error.
+    fn infer_ok(resp: Response) -> InferReply {
+        match resp.result {
+            Ok(Reply::Infer(r)) => r,
+            other => panic!("expected infer reply, got {other:?}"),
+        }
+    }
+
+    fn sim_ok(resp: Response) -> SimSummary {
+        match resp.result {
+            Ok(Reply::Sim(s)) => s,
+            other => panic!("expected sim reply, got {other:?}"),
+        }
+    }
+
     #[test]
     fn serves_single_request() {
         let server = Server::start(mock(0), BatchPolicy::default());
-        let rx = server.submit(vec![1.0, 2.0, 3.0, 4.0]);
-        let resp = rx.recv_timeout(Duration::from_secs(2)).unwrap();
-        assert_eq!(resp.output, vec![10.0, 11.0]);
+        let t = server.submit(vec![1.0, 2.0, 3.0, 4.0]);
+        let r = infer_ok(t.recv_deadline(Duration::from_secs(2)));
+        assert_eq!(r.output, vec![10.0, 11.0]);
+        assert_eq!(server.served(), 1);
         let stats = server.shutdown();
         assert_eq!(stats.served, 1);
     }
@@ -330,10 +719,11 @@ mod tests {
             mock(3),
             BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(20) },
         );
-        let rxs: Vec<_> = (0..24).map(|i| server.submit(vec![i as f32; 4])).collect();
-        for (i, rx) in rxs.into_iter().enumerate() {
-            let resp = rx.recv_timeout(Duration::from_secs(5)).unwrap();
-            assert_eq!(resp.output[0], (i * 4) as f32);
+        let tickets: Vec<_> = (0..24).map(|i| server.submit(vec![i as f32; 4])).collect();
+        for (i, t) in tickets.into_iter().enumerate() {
+            let r = infer_ok(t.recv_deadline(Duration::from_secs(5)));
+            assert_eq!(r.output[0], (i * 4) as f32);
+            assert!(r.batch_size >= 1);
         }
         let stats = server.shutdown();
         assert_eq!(stats.served, 24);
@@ -343,61 +733,224 @@ mod tests {
     }
 
     #[test]
-    fn shutdown_drains_queue() {
+    fn shutdown_drains_full_queue() {
+        // queue far beyond one batch, deadline far away: everything is
+        // still buffered when shutdown lands, and the drain path must
+        // flush it as multiple batches.
         let server = Server::start(
             mock(1),
-            BatchPolicy { max_batch: 64, max_wait: Duration::from_secs(10) },
+            BatchPolicy { max_batch: 4, max_wait: Duration::from_secs(10) },
         );
-        let rxs: Vec<_> = (0..5).map(|i| server.submit(vec![i as f32; 4])).collect();
+        let tickets: Vec<_> = (0..11).map(|i| server.submit(vec![i as f32; 4])).collect();
         let stats = server.shutdown(); // deadline far away: drain on shutdown
-        assert_eq!(stats.served, 5);
-        for rx in rxs {
-            assert!(rx.try_recv().is_ok());
+        assert_eq!(stats.served, 11);
+        assert!(stats.batches >= 3, "drain must respect max_batch: {}", stats.batches);
+        for t in tickets {
+            assert!(t.try_recv().is_some());
         }
     }
 
     #[test]
-    fn sim_server_matches_direct_simulation() {
-        use crate::nn::models;
-        use crate::sim::simulate_network;
+    fn queue_time_never_exceeds_total_latency() {
+        // Regression for the old self-referential `min` expression: with a
+        // slow engine and batched arrivals, queue_us must stay ≤ latency_us.
+        let server = Server::start(
+            mock(10),
+            BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) },
+        );
+        let tickets: Vec<_> = (0..12).map(|i| server.submit(vec![i as f32; 4])).collect();
+        for t in tickets {
+            let r = infer_ok(t.recv_deadline(Duration::from_secs(10)));
+            assert!(
+                r.queue_us <= r.latency_us,
+                "queue {} > latency {}",
+                r.queue_us,
+                r.latency_us
+            );
+        }
+        server.shutdown();
+    }
+
+    #[test]
+    fn full_admission_queue_answers_busy() {
+        // max_batch 1 + 100 ms engine: the dispatcher picks up the first
+        // request and sleeps in infer; the queue (bound 1) then holds one
+        // pending request, so a third submission must bounce as Busy.
+        let server = Server::start_with_queue(
+            || MockEngine {
+                in_len: 4,
+                out_len: 2,
+                max_b: 1,
+                delay: Duration::from_millis(100),
+            },
+            BatchPolicy { max_batch: 1, max_wait: Duration::ZERO },
+            1,
+        );
+        let t1 = server.submit(vec![0.0; 4]);
+        thread::sleep(Duration::from_millis(30)); // let the dispatcher start batch 1
+        let t2 = server.submit(vec![1.0; 4]);
+        let t3 = server.submit(vec![2.0; 4]);
+        let r3 = t3.wait();
+        assert_eq!(r3.result, Err(ServeError::Busy), "expected Busy, got {r3:?}");
+        // the admitted requests still complete
+        infer_ok(t1.recv_deadline(Duration::from_secs(5)));
+        infer_ok(t2.recv_deadline(Duration::from_secs(5)));
+        server.shutdown();
+    }
+
+    #[test]
+    fn expired_deadline_returns_typed_error() {
+        let server = Server::start_with_queue(
+            || MockEngine {
+                in_len: 4,
+                out_len: 2,
+                max_b: 1,
+                delay: Duration::from_millis(60),
+            },
+            BatchPolicy { max_batch: 1, max_wait: Duration::ZERO },
+            8,
+        );
+        let t1 = server.submit(vec![0.0; 4]); // occupies the engine ~60ms
+        let t2 = server.call(
+            Request::new(999, RequestBody::Infer { input: vec![1.0; 4] })
+                .with_deadline_ms(5),
+        );
+        infer_ok(t1.recv_deadline(Duration::from_secs(5)));
+        let r2 = t2.recv_deadline(Duration::from_secs(5));
+        assert_eq!(r2.id, 999);
+        assert_eq!(r2.result, Err(ServeError::Deadline));
+        server.shutdown();
+    }
+
+    #[test]
+    fn wrong_input_length_is_bad_request_not_panic() {
+        let server = Server::start(mock(0), BatchPolicy::default());
+        let t = server.submit(vec![1.0; 3]); // engine wants 4
+        let r = t.recv_deadline(Duration::from_secs(2));
+        assert!(
+            matches!(r.result, Err(ServeError::BadRequest(_))),
+            "got {:?}",
+            r.result
+        );
+        let stats = server.shutdown();
+        assert_eq!(stats.served, 0);
+    }
+
+    #[test]
+    fn non_infer_requests_rejected_by_inference_server() {
+        let server = Server::start(mock(0), BatchPolicy::default());
+        let t = server.call(Request::new(5, RequestBody::Stats));
+        assert!(matches!(t.wait().result, Err(ServeError::BadRequest(_))));
+        server.shutdown();
+    }
+
+    fn simulate_req(id: u64, model: &str, variant: FuseVariant, config: ConfigPatch) -> Request {
+        Request::new(
+            id,
+            RequestBody::Simulate { model: ModelSpec::Zoo(model.into()), variant, config },
+        )
+    }
+
+    #[test]
+    fn sim_service_matches_direct_simulation() {
         let server = SimServer::new(2);
+        let t = server.call(simulate_req(1, "mobilenet-v2", FuseVariant::Half, ConfigPatch::default()));
+        let sim = sim_ok(t.recv_deadline(Duration::from_secs(60)));
         let net = models::by_name("mobilenet-v2").unwrap();
-        let rx = server.submit(SimRequest {
-            network: net.clone(),
-            variant: FuseVariant::Half,
-            cfg: SimConfig::default(),
-        });
-        let sim = rx.recv_timeout(Duration::from_secs(60)).unwrap();
-        let expect = simulate_network(&FuseVariant::Half.apply(&net), &SimConfig::default());
+        let expect =
+            simulate_network(&FuseVariant::Half.apply(&net), &SimConfig::default());
         assert_eq!(sim.total_cycles, expect.total_cycles);
         assert_eq!(sim.network, expect.network);
+        assert_eq!(sim.num_layers, expect.layers.len());
         assert_eq!(server.submitted(), 1);
     }
 
     #[test]
-    fn sim_server_repeat_traffic_hits_cache() {
-        use crate::nn::models;
+    fn sim_service_repeat_traffic_hits_cache() {
         let server = SimServer::new(3);
-        let net = models::by_name("mobilenet-v3-small").unwrap();
-        let mk = || SimRequest {
-            network: net.clone(),
-            variant: FuseVariant::Base,
-            cfg: SimConfig::default(),
-        };
-        let rxs: Vec<_> = (0..6).map(|_| server.submit(mk())).collect();
-        let sims: Vec<_> = rxs
+        let tickets: Vec<_> = (0..6)
+            .map(|i| {
+                server.call(simulate_req(
+                    i,
+                    "mobilenet-v3-small",
+                    FuseVariant::Base,
+                    ConfigPatch::default(),
+                ))
+            })
+            .collect();
+        let sims: Vec<_> = tickets
             .into_iter()
-            .map(|rx| rx.recv_timeout(Duration::from_secs(60)).unwrap())
+            .map(|t| sim_ok(t.recv_deadline(Duration::from_secs(60))))
             .collect();
         assert!(sims.windows(2).all(|w| w[0].total_cycles == w[1].total_cycles));
         let stats = server.cache_stats();
         assert!(stats.hits > 0, "repeat scenarios never hit the cache: {stats:?}");
+        let net = models::by_name("mobilenet-v3-small").unwrap();
         assert!(stats.entries <= net.layers.len());
+        assert_eq!(server.completed(), 6);
     }
 
     #[test]
-    fn sim_server_runs_sweep_plans() {
-        use crate::nn::models;
+    fn sim_service_unknown_model_is_bad_request() {
+        let server = SimServer::new(1);
+        let t = server.call(simulate_req(7, "nonesuch", FuseVariant::Base, ConfigPatch::default()));
+        let r = t.recv_deadline(Duration::from_secs(10));
+        assert!(matches!(r.result, Err(ServeError::BadRequest(_))), "got {:?}", r.result);
+    }
+
+    #[test]
+    fn sim_service_bounded_admission_answers_busy() {
+        // capacity 1, one worker: the first (cold, whole-network) job
+        // holds the only slot for milliseconds while the burst lands.
+        let server = SimServer::with_capacity(1, Arc::new(LayerCache::new()), 1);
+        let tickets: Vec<_> = (0..8)
+            .map(|i| {
+                server.call(simulate_req(
+                    i,
+                    "mobilenet-v2",
+                    FuseVariant::Full,
+                    ConfigPatch::sized(32),
+                ))
+            })
+            .collect();
+        let mut ok = 0;
+        let mut busy = 0;
+        for t in tickets {
+            match t.recv_deadline(Duration::from_secs(60)).result {
+                Ok(Reply::Sim(_)) => ok += 1,
+                Err(ServeError::Busy) => busy += 1,
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        assert_eq!(ok + busy, 8);
+        assert!(ok >= 1, "at least the first admitted job completes");
+        assert!(busy >= 1, "burst past capacity must bounce as Busy");
+    }
+
+    #[test]
+    fn sim_service_sweep_request_covers_grid() {
+        let server = SimServer::new(2);
+        let t = server.call(Request::new(
+            3,
+            RequestBody::Sweep {
+                models: vec!["mobilenet-v3-small".into()],
+                variants: vec![FuseVariant::Base, FuseVariant::Half],
+                configs: vec![ConfigPatch::default(), ConfigPatch::sized(8)],
+            },
+        ));
+        let r = t.recv_deadline(Duration::from_secs(120));
+        match r.result {
+            Ok(Reply::Sweep(rows)) => {
+                assert_eq!(rows.len(), 4);
+                assert!(rows.iter().all(|row| row.total_cycles > 0));
+                assert!(rows.iter().any(|row| row.rows == 8));
+            }
+            other => panic!("expected sweep rows, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn sim_service_runs_sweep_plans_in_process() {
         let server = SimServer::new(2);
         let plan = SweepPlan::new(
             vec![models::by_name("mobilenet-v3-small").unwrap()],
@@ -410,15 +963,70 @@ mod tests {
     }
 
     #[test]
+    fn sim_service_zoo_and_stats() {
+        let server = SimServer::new(1);
+        let t = server.call(Request::new(1, RequestBody::Zoo));
+        match t.wait().result {
+            Ok(Reply::Zoo(entries)) => {
+                assert_eq!(entries.len(), models::ZOO_NAMES.len());
+                assert!(entries.iter().all(|e| e.macs_m > 0.0));
+            }
+            other => panic!("expected zoo, got {other:?}"),
+        }
+        let t = server.call(Request::new(2, RequestBody::Stats));
+        match t.wait().result {
+            Ok(Reply::Stats(s)) => assert_eq!(s.protocol_version, PROTOCOL_VERSION),
+            other => panic!("expected stats, got {other:?}"),
+        }
+    }
+
+    #[test]
     fn latency_stats_populated() {
         let server = Server::start(mock(0), BatchPolicy::default());
         for _ in 0..10 {
-            let rx = server.submit(vec![0.0; 4]);
-            let _ = rx.recv_timeout(Duration::from_secs(2)).unwrap();
+            let t = server.submit(vec![0.0; 4]);
+            infer_ok(t.recv_deadline(Duration::from_secs(2)));
         }
         let stats = server.shutdown();
         let s = stats.latency_summary().unwrap();
         assert_eq!(s.n, 10);
         assert!(s.p99 >= s.p50);
+    }
+
+    #[test]
+    fn router_dispatches_by_request_kind() {
+        let router = Router::new(SimServer::new(2))
+            .with_engine(Server::start(mock(0), BatchPolicy::default()));
+        // infer through the engine
+        let t = router.call(Request::new(1, RequestBody::Infer { input: vec![1.0; 4] }));
+        let r = infer_ok(t.recv_deadline(Duration::from_secs(5)));
+        assert_eq!(r.output.len(), 2);
+        // simulate through the pool
+        let t = router.call(simulate_req(2, "mobilenet-v3-small", FuseVariant::Base, ConfigPatch::default()));
+        assert!(sim_ok(t.recv_deadline(Duration::from_secs(60))).total_cycles > 0);
+        // stats merges both halves
+        let t = router.call(Request::new(3, RequestBody::Stats));
+        match t.wait().result {
+            Ok(Reply::Stats(s)) => {
+                assert_eq!(s.infer_served, 1);
+                assert_eq!(s.sim_submitted, 1);
+            }
+            other => panic!("expected stats, got {other:?}"),
+        }
+        // shutdown latches
+        let t = router.call(Request::new(4, RequestBody::Shutdown));
+        assert_eq!(t.wait().result, Ok(Reply::Done));
+        assert!(router.closing());
+        let t = router.call(Request::new(5, RequestBody::Stats));
+        assert_eq!(t.wait().result, Err(ServeError::Shutdown));
+        assert!(router.into_stats().is_some());
+    }
+
+    #[test]
+    fn router_without_engine_rejects_infer() {
+        let router = Router::new(SimServer::new(1));
+        let t = router.call(Request::new(1, RequestBody::Infer { input: vec![0.0; 4] }));
+        assert!(matches!(t.wait().result, Err(ServeError::BadRequest(_))));
+        assert!(router.into_stats().is_none());
     }
 }

@@ -1,0 +1,1393 @@
+//! Wire codec for the serving protocol: a hand-rolled, zero-dependency
+//! JSON reader/writer plus the encode/decode rules for every
+//! [`protocol`](super::protocol) type. One request or response is one
+//! newline-delimited JSON object (see README §Wire protocol).
+//!
+//! The codec is total: `decode(encode(x)) == x` for every protocol value
+//! (the round-trip tests below cover each variant), and decoding never
+//! panics on malformed input — it returns a [`WireError`] the frontend
+//! turns into a [`ServeError::BadRequest`].
+//!
+//! Numbers: JSON integers decode losslessly into `u64`/`i64` (cycle
+//! counts exceed 2^53, so going through `f64` would corrupt them);
+//! floats use Rust's shortest round-trip formatting.
+
+use super::protocol::{
+    ConfigPatch, InferReply, LayerSpec, ModelSpec, Reply, Request, RequestBody, Response,
+    ServeError, SimSummary, StatsReply, SweepRow, ZooEntry, PROTOCOL_VERSION,
+};
+use crate::nn::OpKind;
+use crate::sim::{Dataflow, FuseVariant, MappingPolicy, SimConfig};
+use std::fmt::Write as _;
+
+/// Codec failure: carries a human-readable reason (surface it to the
+/// client as a `bad_request`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WireError(pub String);
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "wire: {}", self.0)
+    }
+}
+
+impl std::error::Error for WireError {}
+
+fn err<T>(msg: impl Into<String>) -> Result<T, WireError> {
+    Err(WireError(msg.into()))
+}
+
+// ---------------------------------------------------------------------------
+// JSON values
+// ---------------------------------------------------------------------------
+
+/// A parsed JSON value. Integers are kept exact (`UInt`/`Int`) and only
+/// fractional/exponent literals become `Num`.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    UInt(u64),
+    Int(i64),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(pairs) => pairs.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Json::UInt(n) => Some(*n),
+            Json::Int(n) if *n >= 0 => Some(*n as u64),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_u64().map(|n| n as usize)
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::UInt(n) => Some(*n as f64),
+            Json::Int(n) => Some(*n as f64),
+            Json::Num(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s.as_str()),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(items) => Some(items.as_slice()),
+            _ => None,
+        }
+    }
+
+    pub fn is_null(&self) -> bool {
+        matches!(self, Json::Null)
+    }
+
+    /// Serialize (compact, single line — safe for newline framing).
+    pub fn write(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(true) => out.push_str("true"),
+            Json::Bool(false) => out.push_str("false"),
+            Json::UInt(n) => {
+                let _ = write!(out, "{n}");
+            }
+            Json::Int(n) => {
+                let _ = write!(out, "{n}");
+            }
+            Json::Num(x) => {
+                if x.is_finite() {
+                    let _ = write!(out, "{x}");
+                } else {
+                    // NaN/inf are not JSON; the protocol never produces
+                    // them, but never emit an unparsable frame.
+                    out.push_str("null");
+                }
+            }
+            Json::Str(s) => write_json_string(s, out),
+            Json::Arr(items) => {
+                out.push('[');
+                for (i, item) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    item.write(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(pairs) => {
+                out.push('{');
+                for (i, (k, v)) in pairs.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    write_json_string(k, out);
+                    out.push(':');
+                    v.write(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+impl std::fmt::Display for Json {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let mut s = String::new();
+        self.write(&mut s);
+        f.write_str(&s)
+    }
+}
+
+fn write_json_string(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+/// Parse one JSON document; trailing garbage (other than whitespace) is
+/// an error, so a frame is exactly one value.
+pub fn parse_json(text: &str) -> Result<Json, WireError> {
+    let mut p = Parser { bytes: text.as_bytes(), pos: 0 };
+    p.skip_ws();
+    let v = p.value(0)?;
+    p.skip_ws();
+    if p.pos != p.bytes.len() {
+        return err(format!("trailing garbage at byte {}", p.pos));
+    }
+    Ok(v)
+}
+
+const MAX_DEPTH: usize = 64;
+
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn skip_ws(&mut self) {
+        while let Some(&b) = self.bytes.get(self.pos) {
+            if b == b' ' || b == b'\t' || b == b'\n' || b == b'\r' {
+                self.pos += 1;
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn eat(&mut self, expected: u8) -> Result<(), WireError> {
+        if self.peek() == Some(expected) {
+            self.pos += 1;
+            Ok(())
+        } else {
+            err(format!(
+                "expected {:?} at byte {}",
+                expected as char, self.pos
+            ))
+        }
+    }
+
+    fn eat_lit(&mut self, lit: &str) -> Result<(), WireError> {
+        let end = self.pos + lit.len();
+        if self.bytes.len() >= end && &self.bytes[self.pos..end] == lit.as_bytes() {
+            self.pos = end;
+            Ok(())
+        } else {
+            err(format!("bad literal at byte {}", self.pos))
+        }
+    }
+
+    fn value(&mut self, depth: usize) -> Result<Json, WireError> {
+        if depth > MAX_DEPTH {
+            return err("nesting too deep");
+        }
+        match self.peek() {
+            None => err("unexpected end of input"),
+            Some(b'n') => {
+                self.eat_lit("null")?;
+                Ok(Json::Null)
+            }
+            Some(b't') => {
+                self.eat_lit("true")?;
+                Ok(Json::Bool(true))
+            }
+            Some(b'f') => {
+                self.eat_lit("false")?;
+                Ok(Json::Bool(false))
+            }
+            Some(b'"') => Ok(Json::Str(self.string()?)),
+            Some(b'[') => {
+                self.pos += 1;
+                let mut items = Vec::new();
+                self.skip_ws();
+                if self.peek() == Some(b']') {
+                    self.pos += 1;
+                    return Ok(Json::Arr(items));
+                }
+                loop {
+                    self.skip_ws();
+                    items.push(self.value(depth + 1)?);
+                    self.skip_ws();
+                    match self.peek() {
+                        Some(b',') => self.pos += 1,
+                        Some(b']') => {
+                            self.pos += 1;
+                            return Ok(Json::Arr(items));
+                        }
+                        _ => return err(format!("expected ',' or ']' at byte {}", self.pos)),
+                    }
+                }
+            }
+            Some(b'{') => {
+                self.pos += 1;
+                let mut pairs = Vec::new();
+                self.skip_ws();
+                if self.peek() == Some(b'}') {
+                    self.pos += 1;
+                    return Ok(Json::Obj(pairs));
+                }
+                loop {
+                    self.skip_ws();
+                    let key = self.string()?;
+                    self.skip_ws();
+                    self.eat(b':')?;
+                    self.skip_ws();
+                    let val = self.value(depth + 1)?;
+                    pairs.push((key, val));
+                    self.skip_ws();
+                    match self.peek() {
+                        Some(b',') => self.pos += 1,
+                        Some(b'}') => {
+                            self.pos += 1;
+                            return Ok(Json::Obj(pairs));
+                        }
+                        _ => return err(format!("expected ',' or '}}' at byte {}", self.pos)),
+                    }
+                }
+            }
+            Some(_) => self.number(),
+        }
+    }
+
+    fn string(&mut self) -> Result<String, WireError> {
+        self.eat(b'"')?;
+        let mut out = String::new();
+        loop {
+            match self.peek() {
+                None => return err("unterminated string"),
+                Some(b'"') => {
+                    self.pos += 1;
+                    return Ok(out);
+                }
+                Some(b'\\') => {
+                    self.pos += 1;
+                    match self.peek() {
+                        Some(b'"') => {
+                            out.push('"');
+                            self.pos += 1;
+                        }
+                        Some(b'\\') => {
+                            out.push('\\');
+                            self.pos += 1;
+                        }
+                        Some(b'/') => {
+                            out.push('/');
+                            self.pos += 1;
+                        }
+                        Some(b'n') => {
+                            out.push('\n');
+                            self.pos += 1;
+                        }
+                        Some(b't') => {
+                            out.push('\t');
+                            self.pos += 1;
+                        }
+                        Some(b'r') => {
+                            out.push('\r');
+                            self.pos += 1;
+                        }
+                        Some(b'b') => {
+                            out.push('\u{0008}');
+                            self.pos += 1;
+                        }
+                        Some(b'f') => {
+                            out.push('\u{000c}');
+                            self.pos += 1;
+                        }
+                        Some(b'u') => {
+                            self.pos += 1;
+                            let hi = self.hex4()?;
+                            let cp = if (0xD800..0xDC00).contains(&hi) {
+                                // surrogate pair: require the low half
+                                self.eat(b'\\')?;
+                                self.eat(b'u')?;
+                                let lo = self.hex4()?;
+                                if !(0xDC00..0xE000).contains(&lo) {
+                                    return err("bad low surrogate");
+                                }
+                                0x10000 + ((hi - 0xD800) << 10) + (lo - 0xDC00)
+                            } else {
+                                hi
+                            };
+                            match char::from_u32(cp) {
+                                Some(c) => out.push(c),
+                                None => return err("bad \\u escape"),
+                            }
+                        }
+                        _ => return err("bad escape"),
+                    }
+                }
+                Some(b) if b < 0x20 => return err("raw control char in string"),
+                Some(_) => {
+                    // copy one UTF-8 scalar (input is &str, so boundaries
+                    // are valid; find the next char start)
+                    let start = self.pos;
+                    self.pos += 1;
+                    while self
+                        .bytes
+                        .get(self.pos)
+                        .is_some_and(|&b| (b & 0xC0) == 0x80)
+                    {
+                        self.pos += 1;
+                    }
+                    let chunk = std::str::from_utf8(&self.bytes[start..self.pos])
+                        .map_err(|_| WireError("invalid utf-8".into()))?;
+                    out.push_str(chunk);
+                }
+            }
+        }
+    }
+
+    fn hex4(&mut self) -> Result<u32, WireError> {
+        let end = self.pos + 4;
+        if self.bytes.len() < end {
+            return err("truncated \\u escape");
+        }
+        let s = std::str::from_utf8(&self.bytes[self.pos..end])
+            .map_err(|_| WireError("bad \\u escape".into()))?;
+        let v = u32::from_str_radix(s, 16).map_err(|_| WireError("bad \\u escape".into()))?;
+        self.pos = end;
+        Ok(v)
+    }
+
+    fn number(&mut self) -> Result<Json, WireError> {
+        let start = self.pos;
+        if self.peek() == Some(b'-') {
+            self.pos += 1;
+        }
+        let mut fractional = false;
+        while let Some(b) = self.peek() {
+            match b {
+                b'0'..=b'9' => self.pos += 1,
+                b'.' | b'e' | b'E' | b'+' | b'-' => {
+                    fractional = true;
+                    self.pos += 1;
+                }
+                _ => break,
+            }
+        }
+        let text = std::str::from_utf8(&self.bytes[start..self.pos])
+            .map_err(|_| WireError("bad number".into()))?;
+        if text.is_empty() || text == "-" {
+            return err(format!("expected a value at byte {start}"));
+        }
+        if !fractional {
+            if let Ok(n) = text.parse::<u64>() {
+                return Ok(Json::UInt(n));
+            }
+            if let Ok(n) = text.parse::<i64>() {
+                return Ok(Json::Int(n));
+            }
+        }
+        match text.parse::<f64>() {
+            Ok(x) => Ok(Json::Num(x)),
+            Err(_) => err(format!("bad number {text:?}")),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Builder / accessor helpers
+// ---------------------------------------------------------------------------
+
+fn obj(pairs: Vec<(&str, Json)>) -> Json {
+    Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+fn need<'a>(v: &'a Json, key: &str) -> Result<&'a Json, WireError> {
+    v.get(key).ok_or_else(|| WireError(format!("missing field {key:?}")))
+}
+
+fn need_u64(v: &Json, key: &str) -> Result<u64, WireError> {
+    need(v, key)?
+        .as_u64()
+        .ok_or_else(|| WireError(format!("field {key:?} must be a non-negative integer")))
+}
+
+fn need_usize(v: &Json, key: &str) -> Result<usize, WireError> {
+    Ok(need_u64(v, key)? as usize)
+}
+
+fn need_f64(v: &Json, key: &str) -> Result<f64, WireError> {
+    need(v, key)?
+        .as_f64()
+        .ok_or_else(|| WireError(format!("field {key:?} must be a number")))
+}
+
+fn need_str<'a>(v: &'a Json, key: &str) -> Result<&'a str, WireError> {
+    need(v, key)?
+        .as_str()
+        .ok_or_else(|| WireError(format!("field {key:?} must be a string")))
+}
+
+fn need_bool(v: &Json, key: &str) -> Result<bool, WireError> {
+    need(v, key)?
+        .as_bool()
+        .ok_or_else(|| WireError(format!("field {key:?} must be a boolean")))
+}
+
+fn need_arr<'a>(v: &'a Json, key: &str) -> Result<&'a [Json], WireError> {
+    need(v, key)?
+        .as_arr()
+        .ok_or_else(|| WireError(format!("field {key:?} must be an array")))
+}
+
+fn opt_u64(v: &Json, key: &str) -> Result<Option<u64>, WireError> {
+    match v.get(key) {
+        None => Ok(None),
+        Some(Json::Null) => Ok(None),
+        Some(x) => x
+            .as_u64()
+            .map(Some)
+            .ok_or_else(|| WireError(format!("field {key:?} must be a non-negative integer"))),
+    }
+}
+
+fn opt_usize(v: &Json, key: &str) -> Result<Option<usize>, WireError> {
+    Ok(opt_u64(v, key)?.map(|n| n as usize))
+}
+
+fn opt_f64(v: &Json, key: &str) -> Result<Option<f64>, WireError> {
+    match v.get(key) {
+        None => Ok(None),
+        Some(Json::Null) => Ok(None),
+        Some(x) => x
+            .as_f64()
+            .map(Some)
+            .ok_or_else(|| WireError(format!("field {key:?} must be a number"))),
+    }
+}
+
+fn opt_bool(v: &Json, key: &str) -> Result<Option<bool>, WireError> {
+    match v.get(key) {
+        None => Ok(None),
+        Some(Json::Null) => Ok(None),
+        Some(x) => x
+            .as_bool()
+            .map(Some)
+            .ok_or_else(|| WireError(format!("field {key:?} must be a boolean"))),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Domain enums: string forms shared with the CLI
+// ---------------------------------------------------------------------------
+
+fn variant_to_json(v: FuseVariant) -> Json {
+    Json::Str(v.label().to_string())
+}
+
+fn variant_from_json(v: &Json) -> Result<FuseVariant, WireError> {
+    let s = v.as_str().ok_or_else(|| WireError("variant must be a string".into()))?;
+    FuseVariant::parse(s).ok_or_else(|| WireError(format!("unknown variant {s:?}")))
+}
+
+fn dataflow_from_str(s: &str) -> Result<Dataflow, WireError> {
+    Dataflow::parse(s).ok_or_else(|| WireError(format!("unknown dataflow {s:?} (want os|ws)")))
+}
+
+fn mapping_from_str(s: &str) -> Result<MappingPolicy, WireError> {
+    MappingPolicy::parse(s).ok_or_else(|| {
+        WireError(format!("unknown mapping {s:?} (want spatial-first|channels-first|hybrid)"))
+    })
+}
+
+// ---------------------------------------------------------------------------
+// OpKind / LayerSpec / ModelSpec
+// ---------------------------------------------------------------------------
+
+fn op_to_json(op: &OpKind) -> Json {
+    let u = |n: usize| Json::UInt(n as u64);
+    match *op {
+        OpKind::Conv2d { k, stride, cin, cout } => obj(vec![
+            ("kind", Json::Str("conv2d".into())),
+            ("k", u(k)),
+            ("stride", u(stride)),
+            ("cin", u(cin)),
+            ("cout", u(cout)),
+        ]),
+        OpKind::Depthwise { k, stride, c } => obj(vec![
+            ("kind", Json::Str("depthwise".into())),
+            ("k", u(k)),
+            ("stride", u(stride)),
+            ("c", u(c)),
+        ]),
+        OpKind::Pointwise { cin, cout } => obj(vec![
+            ("kind", Json::Str("pointwise".into())),
+            ("cin", u(cin)),
+            ("cout", u(cout)),
+        ]),
+        OpKind::FuseRow { k, stride, c } => obj(vec![
+            ("kind", Json::Str("fuse_row".into())),
+            ("k", u(k)),
+            ("stride", u(stride)),
+            ("c", u(c)),
+        ]),
+        OpKind::FuseCol { k, stride, c } => obj(vec![
+            ("kind", Json::Str("fuse_col".into())),
+            ("k", u(k)),
+            ("stride", u(stride)),
+            ("c", u(c)),
+        ]),
+        OpKind::Fc { cin, cout } => obj(vec![
+            ("kind", Json::Str("fc".into())),
+            ("cin", u(cin)),
+            ("cout", u(cout)),
+        ]),
+        OpKind::GlobalPool { c } => {
+            obj(vec![("kind", Json::Str("global_pool".into())), ("c", u(c))])
+        }
+        OpKind::SqueezeExcite { c, reduced } => obj(vec![
+            ("kind", Json::Str("squeeze_excite".into())),
+            ("c", u(c)),
+            ("reduced", u(reduced)),
+        ]),
+        OpKind::Add { c } => obj(vec![("kind", Json::Str("add".into())), ("c", u(c))]),
+    }
+}
+
+fn op_from_json(v: &Json) -> Result<OpKind, WireError> {
+    let kind = need_str(v, "kind")?;
+    Ok(match kind {
+        "conv2d" => OpKind::Conv2d {
+            k: need_usize(v, "k")?,
+            stride: need_usize(v, "stride")?,
+            cin: need_usize(v, "cin")?,
+            cout: need_usize(v, "cout")?,
+        },
+        "depthwise" => OpKind::Depthwise {
+            k: need_usize(v, "k")?,
+            stride: need_usize(v, "stride")?,
+            c: need_usize(v, "c")?,
+        },
+        "pointwise" => OpKind::Pointwise {
+            cin: need_usize(v, "cin")?,
+            cout: need_usize(v, "cout")?,
+        },
+        "fuse_row" => OpKind::FuseRow {
+            k: need_usize(v, "k")?,
+            stride: need_usize(v, "stride")?,
+            c: need_usize(v, "c")?,
+        },
+        "fuse_col" => OpKind::FuseCol {
+            k: need_usize(v, "k")?,
+            stride: need_usize(v, "stride")?,
+            c: need_usize(v, "c")?,
+        },
+        "fc" => OpKind::Fc { cin: need_usize(v, "cin")?, cout: need_usize(v, "cout")? },
+        "global_pool" => OpKind::GlobalPool { c: need_usize(v, "c")? },
+        "squeeze_excite" => OpKind::SqueezeExcite {
+            c: need_usize(v, "c")?,
+            reduced: need_usize(v, "reduced")?,
+        },
+        "add" => OpKind::Add { c: need_usize(v, "c")? },
+        other => return err(format!("unknown op kind {other:?}")),
+    })
+}
+
+fn layer_spec_to_json(l: &LayerSpec) -> Json {
+    let mut pairs = vec![
+        ("name", Json::Str(l.name.clone())),
+        ("op", op_to_json(&l.op)),
+        ("h", Json::UInt(l.h as u64)),
+        ("w", Json::UInt(l.w as u64)),
+    ];
+    if let Some(b) = l.block {
+        pairs.push(("block", Json::UInt(b as u64)));
+    }
+    obj(pairs)
+}
+
+fn layer_spec_from_json(v: &Json) -> Result<LayerSpec, WireError> {
+    Ok(LayerSpec {
+        name: need_str(v, "name")?.to_string(),
+        op: op_from_json(need(v, "op")?)?,
+        h: need_usize(v, "h")?,
+        w: need_usize(v, "w")?,
+        block: opt_usize(v, "block")?,
+    })
+}
+
+fn model_to_json(m: &ModelSpec) -> Json {
+    match m {
+        ModelSpec::Zoo(name) => obj(vec![("zoo", Json::Str(name.clone()))]),
+        ModelSpec::Inline { name, layers } => obj(vec![
+            ("name", Json::Str(name.clone())),
+            ("layers", Json::Arr(layers.iter().map(layer_spec_to_json).collect())),
+        ]),
+    }
+}
+
+fn model_from_json(v: &Json) -> Result<ModelSpec, WireError> {
+    if let Some(zoo) = v.get("zoo") {
+        let name = zoo
+            .as_str()
+            .ok_or_else(|| WireError("model.zoo must be a string".into()))?;
+        return Ok(ModelSpec::Zoo(name.to_string()));
+    }
+    if v.get("layers").is_some() {
+        let layers = need_arr(v, "layers")?
+            .iter()
+            .map(layer_spec_from_json)
+            .collect::<Result<Vec<_>, _>>()?;
+        return Ok(ModelSpec::Inline { name: need_str(v, "name")?.to_string(), layers });
+    }
+    err("model must have \"zoo\" or \"layers\"")
+}
+
+// ---------------------------------------------------------------------------
+// ConfigPatch / SimConfig
+// ---------------------------------------------------------------------------
+
+fn patch_to_json(p: &ConfigPatch) -> Json {
+    let mut pairs: Vec<(&str, Json)> = Vec::new();
+    if let Some(n) = p.size {
+        pairs.push(("size", Json::UInt(n as u64)));
+    }
+    if let Some(n) = p.rows {
+        pairs.push(("rows", Json::UInt(n as u64)));
+    }
+    if let Some(n) = p.cols {
+        pairs.push(("cols", Json::UInt(n as u64)));
+    }
+    if let Some(n) = p.freq_mhz {
+        pairs.push(("freq_mhz", Json::UInt(n)));
+    }
+    if let Some(n) = p.ifmap_sram_kb {
+        pairs.push(("ifmap_sram_kb", Json::UInt(n as u64)));
+    }
+    if let Some(n) = p.weight_sram_kb {
+        pairs.push(("weight_sram_kb", Json::UInt(n as u64)));
+    }
+    if let Some(n) = p.ofmap_sram_kb {
+        pairs.push(("ofmap_sram_kb", Json::UInt(n as u64)));
+    }
+    if let Some(x) = p.dram_bw {
+        pairs.push(("dram_bw", Json::Num(x)));
+    }
+    if let Some(b) = p.enforce_dram_bw {
+        pairs.push(("enforce_dram_bw", Json::Bool(b)));
+    }
+    if let Some(n) = p.bytes_per_elem {
+        pairs.push(("bytes_per_elem", Json::UInt(n as u64)));
+    }
+    if let Some(df) = p.dataflow {
+        pairs.push(("dataflow", Json::Str(df.short().to_string())));
+    }
+    if let Some(b) = p.stos {
+        pairs.push(("stos", Json::Bool(b)));
+    }
+    if let Some(m) = p.mapping {
+        pairs.push(("mapping", Json::Str(m.label().to_string())));
+    }
+    obj(pairs)
+}
+
+fn patch_from_json(v: &Json) -> Result<ConfigPatch, WireError> {
+    if !matches!(v, Json::Obj(_)) {
+        return err("config must be an object");
+    }
+    let dataflow = match v.get("dataflow") {
+        None => None,
+        Some(Json::Null) => None,
+        Some(x) => {
+            let s = x
+                .as_str()
+                .ok_or_else(|| WireError("config.dataflow must be a string".into()))?;
+            Some(dataflow_from_str(s)?)
+        }
+    };
+    let mapping = match v.get("mapping") {
+        None => None,
+        Some(Json::Null) => None,
+        Some(x) => {
+            let s = x
+                .as_str()
+                .ok_or_else(|| WireError("config.mapping must be a string".into()))?;
+            Some(mapping_from_str(s)?)
+        }
+    };
+    Ok(ConfigPatch {
+        size: opt_usize(v, "size")?,
+        rows: opt_usize(v, "rows")?,
+        cols: opt_usize(v, "cols")?,
+        freq_mhz: opt_u64(v, "freq_mhz")?,
+        ifmap_sram_kb: opt_usize(v, "ifmap_sram_kb")?,
+        weight_sram_kb: opt_usize(v, "weight_sram_kb")?,
+        ofmap_sram_kb: opt_usize(v, "ofmap_sram_kb")?,
+        dram_bw: opt_f64(v, "dram_bw")?,
+        enforce_dram_bw: opt_bool(v, "enforce_dram_bw")?,
+        bytes_per_elem: opt_usize(v, "bytes_per_elem")?,
+        dataflow,
+        stos: opt_bool(v, "stos")?,
+        mapping,
+    })
+}
+
+/// Full [`SimConfig`] as JSON (every field explicit).
+pub fn sim_config_to_json(c: &SimConfig) -> Json {
+    obj(vec![
+        ("rows", Json::UInt(c.rows as u64)),
+        ("cols", Json::UInt(c.cols as u64)),
+        ("freq_mhz", Json::UInt(c.freq_mhz)),
+        ("ifmap_sram_kb", Json::UInt(c.ifmap_sram_kb as u64)),
+        ("weight_sram_kb", Json::UInt(c.weight_sram_kb as u64)),
+        ("ofmap_sram_kb", Json::UInt(c.ofmap_sram_kb as u64)),
+        ("dram_bw", Json::Num(c.dram_bw)),
+        ("enforce_dram_bw", Json::Bool(c.enforce_dram_bw)),
+        ("bytes_per_elem", Json::UInt(c.bytes_per_elem as u64)),
+        ("dataflow", Json::Str(c.dataflow.short().to_string())),
+        ("stos", Json::Bool(c.stos)),
+        ("mapping", Json::Str(c.mapping.label().to_string())),
+    ])
+}
+
+/// Decode a full or partial `SimConfig`: absent fields keep Table-1
+/// defaults (so this accepts both [`sim_config_to_json`] output and a
+/// sparse override object).
+pub fn sim_config_from_json(v: &Json) -> Result<SimConfig, WireError> {
+    let patch = patch_from_json(v)?;
+    patch.to_config().map_err(|e| WireError(e.to_string()))
+}
+
+// ---------------------------------------------------------------------------
+// Requests
+// ---------------------------------------------------------------------------
+
+fn f32s_to_json(xs: &[f32]) -> Json {
+    Json::Arr(xs.iter().map(|&x| Json::Num(x as f64)).collect())
+}
+
+fn f32s_from_json(v: &Json, key: &str) -> Result<Vec<f32>, WireError> {
+    need_arr(v, key)?
+        .iter()
+        .map(|x| {
+            x.as_f64()
+                .map(|f| f as f32)
+                .ok_or_else(|| WireError(format!("{key:?} must hold numbers")))
+        })
+        .collect()
+}
+
+/// Encode one request as a single-line JSON frame (no trailing newline).
+pub fn encode_request(req: &Request) -> String {
+    let mut pairs: Vec<(&str, Json)> = vec![
+        ("v", Json::UInt(PROTOCOL_VERSION as u64)),
+        ("id", Json::UInt(req.id)),
+    ];
+    if let Some(ms) = req.deadline_ms {
+        pairs.push(("deadline_ms", Json::UInt(ms)));
+    }
+    pairs.push(("op", Json::Str(req.body.op().to_string())));
+    match &req.body {
+        RequestBody::Infer { input } => pairs.push(("input", f32s_to_json(input))),
+        RequestBody::Simulate { model, variant, config } => {
+            pairs.push(("model", model_to_json(model)));
+            pairs.push(("variant", variant_to_json(*variant)));
+            pairs.push(("config", patch_to_json(config)));
+        }
+        RequestBody::Sweep { models, variants, configs } => {
+            pairs.push((
+                "models",
+                Json::Arr(models.iter().map(|m| Json::Str(m.clone())).collect()),
+            ));
+            pairs.push((
+                "variants",
+                Json::Arr(variants.iter().map(|&v| variant_to_json(v)).collect()),
+            ));
+            pairs.push(("configs", Json::Arr(configs.iter().map(patch_to_json).collect())));
+        }
+        RequestBody::Stats | RequestBody::Zoo | RequestBody::Shutdown => {}
+    }
+    let mut out = String::new();
+    obj(pairs).write(&mut out);
+    out
+}
+
+fn check_version(v: &Json) -> Result<(), WireError> {
+    let ver = need_u64(v, "v")?;
+    if ver != PROTOCOL_VERSION as u64 {
+        return err(format!(
+            "protocol version {ver} not supported (this server speaks v{PROTOCOL_VERSION})"
+        ));
+    }
+    Ok(())
+}
+
+/// Decode one request frame.
+pub fn decode_request(text: &str) -> Result<Request, WireError> {
+    let v = parse_json(text)?;
+    check_version(&v)?;
+    let id = need_u64(&v, "id")?;
+    let deadline_ms = opt_u64(&v, "deadline_ms")?;
+    let op = need_str(&v, "op")?;
+    let body = match op {
+        "infer" => RequestBody::Infer { input: f32s_from_json(&v, "input")? },
+        "simulate" => RequestBody::Simulate {
+            model: model_from_json(need(&v, "model")?)?,
+            variant: match v.get("variant") {
+                None => FuseVariant::Base,
+                Some(j) => variant_from_json(j)?,
+            },
+            config: match v.get("config") {
+                None => ConfigPatch::default(),
+                Some(j) => patch_from_json(j)?,
+            },
+        },
+        "sweep" => {
+            let models = need_arr(&v, "models")?
+                .iter()
+                .map(|m| {
+                    m.as_str()
+                        .map(str::to_string)
+                        .ok_or_else(|| WireError("models must hold strings".into()))
+                })
+                .collect::<Result<Vec<_>, _>>()?;
+            let variants = match v.get("variants") {
+                None => vec![FuseVariant::Base],
+                Some(Json::Arr(items)) => items
+                    .iter()
+                    .map(variant_from_json)
+                    .collect::<Result<Vec<_>, _>>()?,
+                Some(_) => return err("variants must be an array"),
+            };
+            let configs = match v.get("configs") {
+                None => vec![ConfigPatch::default()],
+                Some(Json::Arr(items)) => {
+                    items.iter().map(patch_from_json).collect::<Result<Vec<_>, _>>()?
+                }
+                Some(_) => return err("configs must be an array"),
+            };
+            RequestBody::Sweep { models, variants, configs }
+        }
+        "stats" => RequestBody::Stats,
+        "zoo" => RequestBody::Zoo,
+        "shutdown" => RequestBody::Shutdown,
+        other => return err(format!("unknown op {other:?}")),
+    };
+    Ok(Request { id, deadline_ms, body })
+}
+
+// ---------------------------------------------------------------------------
+// Responses
+// ---------------------------------------------------------------------------
+
+fn sweep_row_to_json(r: &SweepRow) -> Json {
+    obj(vec![
+        ("network", Json::Str(r.network.clone())),
+        ("variant", variant_to_json(r.variant)),
+        ("rows", Json::UInt(r.rows as u64)),
+        ("cols", Json::UInt(r.cols as u64)),
+        ("dataflow", Json::Str(r.dataflow.short().to_string())),
+        ("stos", Json::Bool(r.stos)),
+        ("total_cycles", Json::UInt(r.total_cycles)),
+        ("latency_ms", Json::Num(r.latency_ms)),
+    ])
+}
+
+fn sweep_row_from_json(v: &Json) -> Result<SweepRow, WireError> {
+    Ok(SweepRow {
+        network: need_str(v, "network")?.to_string(),
+        variant: variant_from_json(need(v, "variant")?)?,
+        rows: need_usize(v, "rows")?,
+        cols: need_usize(v, "cols")?,
+        dataflow: dataflow_from_str(need_str(v, "dataflow")?)?,
+        stos: need_bool(v, "stos")?,
+        total_cycles: need_u64(v, "total_cycles")?,
+        latency_ms: need_f64(v, "latency_ms")?,
+    })
+}
+
+fn reply_to_json(reply: &Reply) -> Json {
+    match reply {
+        Reply::Infer(r) => obj(vec![
+            ("kind", Json::Str("infer".into())),
+            ("output", f32s_to_json(&r.output)),
+            ("queue_us", Json::UInt(r.queue_us)),
+            ("batch_size", Json::UInt(r.batch_size as u64)),
+            ("latency_us", Json::UInt(r.latency_us)),
+        ]),
+        Reply::Sim(s) => obj(vec![
+            ("kind", Json::Str("sim".into())),
+            ("network", Json::Str(s.network.clone())),
+            ("config_label", Json::Str(s.config_label.clone())),
+            ("total_cycles", Json::UInt(s.total_cycles)),
+            ("latency_ms", Json::Num(s.latency_ms)),
+            ("utilization", Json::Num(s.utilization)),
+            ("num_layers", Json::UInt(s.num_layers as u64)),
+        ]),
+        Reply::Sweep(rows) => obj(vec![
+            ("kind", Json::Str("sweep".into())),
+            ("rows", Json::Arr(rows.iter().map(sweep_row_to_json).collect())),
+        ]),
+        Reply::Stats(s) => obj(vec![
+            ("kind", Json::Str("stats".into())),
+            ("protocol_version", Json::UInt(s.protocol_version as u64)),
+            ("infer_served", Json::UInt(s.infer_served)),
+            ("infer_batches", Json::UInt(s.infer_batches)),
+            ("sim_submitted", Json::UInt(s.sim_submitted)),
+            ("sim_completed", Json::UInt(s.sim_completed)),
+            ("cache_hits", Json::UInt(s.cache_hits)),
+            ("cache_misses", Json::UInt(s.cache_misses)),
+            ("cache_entries", Json::UInt(s.cache_entries)),
+        ]),
+        Reply::Zoo(entries) => obj(vec![
+            ("kind", Json::Str("zoo".into())),
+            (
+                "models",
+                Json::Arr(
+                    entries
+                        .iter()
+                        .map(|e| {
+                            obj(vec![
+                                ("name", Json::Str(e.name.clone())),
+                                ("macs_m", Json::Num(e.macs_m)),
+                                ("params_m", Json::Num(e.params_m)),
+                                ("blocks", Json::UInt(e.blocks as u64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ]),
+        Reply::Done => obj(vec![("kind", Json::Str("done".into()))]),
+    }
+}
+
+fn reply_from_json(v: &Json) -> Result<Reply, WireError> {
+    let kind = need_str(v, "kind")?;
+    Ok(match kind {
+        "infer" => Reply::Infer(InferReply {
+            output: f32s_from_json(v, "output")?,
+            queue_us: need_u64(v, "queue_us")?,
+            batch_size: need_usize(v, "batch_size")?,
+            latency_us: need_u64(v, "latency_us")?,
+        }),
+        "sim" => Reply::Sim(SimSummary {
+            network: need_str(v, "network")?.to_string(),
+            config_label: need_str(v, "config_label")?.to_string(),
+            total_cycles: need_u64(v, "total_cycles")?,
+            latency_ms: need_f64(v, "latency_ms")?,
+            utilization: need_f64(v, "utilization")?,
+            num_layers: need_usize(v, "num_layers")?,
+        }),
+        "sweep" => Reply::Sweep(
+            need_arr(v, "rows")?
+                .iter()
+                .map(sweep_row_from_json)
+                .collect::<Result<Vec<_>, _>>()?,
+        ),
+        "stats" => Reply::Stats(StatsReply {
+            protocol_version: need_u64(v, "protocol_version")? as u32,
+            infer_served: need_u64(v, "infer_served")?,
+            infer_batches: need_u64(v, "infer_batches")?,
+            sim_submitted: need_u64(v, "sim_submitted")?,
+            sim_completed: need_u64(v, "sim_completed")?,
+            cache_hits: need_u64(v, "cache_hits")?,
+            cache_misses: need_u64(v, "cache_misses")?,
+            cache_entries: need_u64(v, "cache_entries")?,
+        }),
+        "zoo" => Reply::Zoo(
+            need_arr(v, "models")?
+                .iter()
+                .map(|e| {
+                    Ok(ZooEntry {
+                        name: need_str(e, "name")?.to_string(),
+                        macs_m: need_f64(e, "macs_m")?,
+                        params_m: need_f64(e, "params_m")?,
+                        blocks: need_usize(e, "blocks")?,
+                    })
+                })
+                .collect::<Result<Vec<_>, WireError>>()?,
+        ),
+        "done" => Reply::Done,
+        other => return err(format!("unknown reply kind {other:?}")),
+    })
+}
+
+fn serve_error_to_json(e: &ServeError) -> Json {
+    let mut pairs = vec![("code", Json::Str(e.code().to_string()))];
+    if let ServeError::BadRequest(detail) = e {
+        pairs.push(("detail", Json::Str(detail.clone())));
+    }
+    obj(pairs)
+}
+
+fn serve_error_from_json(v: &Json) -> Result<ServeError, WireError> {
+    Ok(match need_str(v, "code")? {
+        "busy" => ServeError::Busy,
+        "bad_request" => ServeError::BadRequest(
+            v.get("detail").and_then(Json::as_str).unwrap_or("").to_string(),
+        ),
+        "deadline" => ServeError::Deadline,
+        "shutdown" => ServeError::Shutdown,
+        other => return err(format!("unknown error code {other:?}")),
+    })
+}
+
+/// Encode one response as a single-line JSON frame (no trailing newline).
+pub fn encode_response(resp: &Response) -> String {
+    let mut pairs: Vec<(&str, Json)> = vec![
+        ("v", Json::UInt(PROTOCOL_VERSION as u64)),
+        ("id", Json::UInt(resp.id)),
+    ];
+    match &resp.result {
+        Ok(reply) => pairs.push(("ok", reply_to_json(reply))),
+        Err(e) => pairs.push(("err", serve_error_to_json(e))),
+    }
+    let mut out = String::new();
+    obj(pairs).write(&mut out);
+    out
+}
+
+/// Decode one response frame.
+pub fn decode_response(text: &str) -> Result<Response, WireError> {
+    let v = parse_json(text)?;
+    check_version(&v)?;
+    let id = need_u64(&v, "id")?;
+    if let Some(ok) = v.get("ok") {
+        return Ok(Response { id, result: Ok(reply_from_json(ok)?) });
+    }
+    if let Some(e) = v.get("err") {
+        return Ok(Response { id, result: Err(serve_error_from_json(e)?) });
+    }
+    err("response must have \"ok\" or \"err\"")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rt_request(req: Request) {
+        let line = encode_request(&req);
+        assert!(!line.contains('\n'), "frames must be single-line: {line}");
+        let back = decode_request(&line).unwrap();
+        assert_eq!(back, req, "round-trip mismatch for {line}");
+    }
+
+    fn rt_response(resp: Response) {
+        let line = encode_response(&resp);
+        assert!(!line.contains('\n'), "frames must be single-line: {line}");
+        let back = decode_response(&line).unwrap();
+        assert_eq!(back, resp, "round-trip mismatch for {line}");
+    }
+
+    #[test]
+    fn json_scalars_round_trip() {
+        for text in ["null", "true", "false", "0", "-7", "18446744073709551615", "1.5"] {
+            let v = parse_json(text).unwrap();
+            let mut out = String::new();
+            v.write(&mut out);
+            assert_eq!(out, text);
+        }
+        // big u64 survives exactly (would corrupt through f64)
+        assert_eq!(parse_json("9007199254740993").unwrap().as_u64(), Some(9007199254740993));
+        // exponents parse as floats
+        assert_eq!(parse_json("2e3").unwrap().as_f64(), Some(2000.0));
+    }
+
+    #[test]
+    fn json_strings_escape_and_unescape() {
+        let v = parse_json(r#""a\"b\\c\nd\u0041\u00e9""#).unwrap();
+        assert_eq!(v.as_str(), Some("a\"b\\c\ndA\u{e9}"));
+        let v = parse_json(r#""\ud83d\ude00""#).unwrap();
+        assert_eq!(v.as_str(), Some("\u{1F600}"));
+        // writer escapes what it must
+        let mut out = String::new();
+        Json::Str("x\"y\\z\n\t\u{1}".into()).write(&mut out);
+        assert_eq!(out, r#""x\"y\\z\n\t\u0001""#);
+        assert_eq!(parse_json(&out).unwrap().as_str(), Some("x\"y\\z\n\t\u{1}"));
+    }
+
+    #[test]
+    fn json_structures_parse() {
+        let v = parse_json(r#" { "a" : [1, 2.5, {"b": true}], "c": null } "#).unwrap();
+        assert_eq!(v.get("a").unwrap().as_arr().unwrap().len(), 3);
+        assert!(v.get("c").unwrap().is_null());
+        assert_eq!(parse_json("[]").unwrap(), Json::Arr(vec![]));
+        assert_eq!(parse_json("{}").unwrap(), Json::Obj(vec![]));
+    }
+
+    #[test]
+    fn json_malformed_inputs_error_not_panic() {
+        for text in [
+            "", "{", "[1,", "{\"a\":}", "nul", "\"abc", "{\"a\" 1}", "[1] 2", "--4",
+            "\"\\u12\"", "\"\\q\"", "{\"a\":1,}",
+        ] {
+            assert!(parse_json(text).is_err(), "accepted malformed {text:?}");
+        }
+    }
+
+    #[test]
+    fn infer_request_round_trips() {
+        rt_request(Request::new(
+            1,
+            RequestBody::Infer { input: vec![0.0, 1.5, -2.25, 3.0e-3] },
+        ));
+        rt_request(
+            Request::new(2, RequestBody::Infer { input: vec![] }).with_deadline_ms(250),
+        );
+    }
+
+    #[test]
+    fn simulate_request_round_trips_zoo_and_inline() {
+        rt_request(Request::new(
+            3,
+            RequestBody::Simulate {
+                model: ModelSpec::Zoo("mobilenet-v2".into()),
+                variant: FuseVariant::Half,
+                config: ConfigPatch::sized(32),
+            },
+        ));
+        // one layer of every op kind, so every arm of the codec runs
+        let ops = vec![
+            OpKind::Conv2d { k: 3, stride: 2, cin: 3, cout: 32 },
+            OpKind::Depthwise { k: 3, stride: 1, c: 32 },
+            OpKind::Pointwise { cin: 32, cout: 64 },
+            OpKind::FuseRow { k: 3, stride: 1, c: 16 },
+            OpKind::FuseCol { k: 3, stride: 1, c: 16 },
+            OpKind::Fc { cin: 1280, cout: 1000 },
+            OpKind::GlobalPool { c: 1280 },
+            OpKind::SqueezeExcite { c: 64, reduced: 16 },
+            OpKind::Add { c: 64 },
+        ];
+        let layers: Vec<LayerSpec> = ops
+            .into_iter()
+            .enumerate()
+            .map(|(i, op)| LayerSpec {
+                name: format!("l{i}"),
+                op,
+                h: 16 + i,
+                w: 16 + i,
+                block: if i % 2 == 0 { Some(i / 2) } else { None },
+            })
+            .collect();
+        rt_request(
+            Request::new(
+                4,
+                RequestBody::Simulate {
+                    model: ModelSpec::Inline { name: "custom \"net\"".into(), layers },
+                    variant: FuseVariant::Full,
+                    config: ConfigPatch {
+                        rows: Some(8),
+                        cols: Some(64),
+                        freq_mhz: Some(800),
+                        ifmap_sram_kb: Some(32),
+                        weight_sram_kb: Some(32),
+                        ofmap_sram_kb: Some(128),
+                        dram_bw: Some(12.5),
+                        enforce_dram_bw: Some(true),
+                        bytes_per_elem: Some(2),
+                        dataflow: Some(Dataflow::WeightStationary),
+                        stos: Some(false),
+                        mapping: Some(MappingPolicy::ChannelsFirst),
+                        ..ConfigPatch::default()
+                    },
+                },
+            )
+            .with_deadline_ms(60_000),
+        );
+    }
+
+    #[test]
+    fn sweep_stats_zoo_shutdown_requests_round_trip() {
+        rt_request(Request::new(
+            5,
+            RequestBody::Sweep {
+                models: vec!["mobilenet-v1".into(), "mnasnet-b1".into()],
+                variants: vec![FuseVariant::Base, FuseVariant::Half, FuseVariant::Full],
+                configs: vec![ConfigPatch::sized(8), ConfigPatch::sized(16)],
+            },
+        ));
+        rt_request(Request::new(6, RequestBody::Stats));
+        rt_request(Request::new(7, RequestBody::Zoo));
+        rt_request(Request::new(8, RequestBody::Shutdown));
+    }
+
+    #[test]
+    fn responses_round_trip_every_reply_kind() {
+        rt_response(Response::ok(
+            1,
+            Reply::Infer(InferReply {
+                output: vec![0.25, -1.0, 7.5],
+                queue_us: 420,
+                batch_size: 8,
+                latency_us: 1234,
+            }),
+        ));
+        rt_response(Response::ok(
+            2,
+            Reply::Sim(SimSummary {
+                network: "MobileNet-V2".into(),
+                config_label: "16x16 OutputStationary+ST-OS".into(),
+                total_cycles: 9_007_199_254_740_993, // > 2^53: must stay exact
+                latency_ms: 3.25,
+                utilization: 0.875,
+                num_layers: 66,
+            }),
+        ));
+        rt_response(Response::ok(
+            3,
+            Reply::Sweep(vec![SweepRow {
+                network: "MnasNet-B1".into(),
+                variant: FuseVariant::Half,
+                rows: 16,
+                cols: 16,
+                dataflow: Dataflow::OutputStationary,
+                stos: true,
+                total_cycles: 123_456_789,
+                latency_ms: 0.125,
+            }]),
+        ));
+        rt_response(Response::ok(
+            4,
+            Reply::Stats(StatsReply {
+                protocol_version: PROTOCOL_VERSION,
+                infer_served: 10,
+                infer_batches: 3,
+                sim_submitted: 7,
+                sim_completed: 6,
+                cache_hits: 100,
+                cache_misses: 20,
+                cache_entries: 15,
+            }),
+        ));
+        rt_response(Response::ok(
+            5,
+            Reply::Zoo(vec![ZooEntry {
+                name: "mobilenet-v2".into(),
+                macs_m: 300.5,
+                params_m: 3.5,
+                blocks: 17,
+            }]),
+        ));
+        rt_response(Response::ok(6, Reply::Done));
+    }
+
+    #[test]
+    fn responses_round_trip_every_error() {
+        rt_response(Response::err(1, ServeError::Busy));
+        rt_response(Response::err(2, ServeError::BadRequest("unknown model \"x\"".into())));
+        rt_response(Response::err(3, ServeError::Deadline));
+        rt_response(Response::err(4, ServeError::Shutdown));
+    }
+
+    #[test]
+    fn sim_config_round_trips_fully() {
+        let mut cfg = SimConfig::with_size(32);
+        cfg.dataflow = Dataflow::WeightStationary;
+        cfg.stos = false;
+        cfg.mapping = MappingPolicy::SpatialFirst;
+        cfg.dram_bw = 24.5;
+        cfg.enforce_dram_bw = true;
+        cfg.freq_mhz = 750;
+        cfg.bytes_per_elem = 2;
+        let j = sim_config_to_json(&cfg);
+        let back = sim_config_from_json(&j).unwrap();
+        assert_eq!(back.price_key(), cfg.price_key());
+        assert_eq!(back.freq_mhz, cfg.freq_mhz);
+        assert_eq!(back.dram_bw, cfg.dram_bw);
+        assert_eq!(back.mapping, cfg.mapping);
+    }
+
+    #[test]
+    fn decode_rejects_wrong_version_and_bad_ops() {
+        let mut line = encode_request(&Request::new(1, RequestBody::Stats));
+        line = line.replace("\"v\":1", "\"v\":99");
+        assert!(decode_request(&line).is_err());
+        assert!(decode_request(r#"{"v":1,"id":1,"op":"frobnicate"}"#).is_err());
+        assert!(decode_request(r#"{"v":1,"op":"stats"}"#).is_err(), "id is required");
+        assert!(decode_request("not json").is_err());
+    }
+
+    #[test]
+    fn simulate_defaults_when_variant_and_config_absent() {
+        let req =
+            decode_request(r#"{"v":1,"id":9,"op":"simulate","model":{"zoo":"mbv2"}}"#).unwrap();
+        match req.body {
+            RequestBody::Simulate { model, variant, config } => {
+                assert_eq!(model, ModelSpec::Zoo("mbv2".into()));
+                assert_eq!(variant, FuseVariant::Base);
+                assert_eq!(config, ConfigPatch::default());
+            }
+            other => panic!("wrong body {other:?}"),
+        }
+    }
+
+    #[test]
+    fn variant_strings_accept_short_and_long_forms() {
+        for (s, want) in [
+            ("base", FuseVariant::Base),
+            ("half", FuseVariant::Half),
+            ("fuse-half", FuseVariant::Half),
+            ("full", FuseVariant::Full),
+            ("fuse-full", FuseVariant::Full),
+        ] {
+            assert_eq!(FuseVariant::parse(s), Some(want), "{s}");
+        }
+        assert_eq!(FuseVariant::parse("quarter"), None);
+    }
+}

@@ -10,7 +10,8 @@
 //!   search-nas OFA-space NAS with FuSe choice (Fig 15)
 //!   trace      per-layer cycle trace CSV
 //!   train      end-to-end NOS pipeline on the AOT artifacts
-//!   serve      batched inference serving demo on the AOT artifacts
+//!   serve      TCP/JSON serving frontend (inference + simulation traffic)
+//!   request    wire client for a running `fuseconv serve`
 
 use fuseconv::cli::Cli;
 use fuseconv::coordinator::search::{
@@ -42,6 +43,7 @@ fn main() {
         "trace" => cmd_trace(&rest),
         "train" => cmd_train(&rest),
         "serve" => cmd_serve(&rest),
+        "request" => cmd_request(&rest),
         "help" | "--help" | "-h" => {
             print_help();
             0
@@ -70,33 +72,46 @@ fn print_help() {
          search-nas  OFA NAS               (--pop, --iters, --seed, --no-fuse)\n  \
          trace       cycle trace CSV       (--model, --layer)\n  \
          train       NOS pipeline on artifacts (--steps, --artifacts)\n  \
-         serve       serving demo          (--requests, --artifacts)"
+         serve       TCP/JSON frontend     (--listen, --engine mock|none|pjrt, --threads,\n              \
+                     --sim-capacity, --queue, --port-file)\n  \
+         request     wire client           (--connect, --op infer|simulate|sweep|stats|zoo|shutdown,\n              \
+                     --model, --variant, --size, --count)"
     );
 }
 
-fn sim_config(args: &fuseconv::cli::Args) -> SimConfig {
-    let size = args.usize("size").unwrap_or(16);
+/// Build a `SimConfig` from the shared `--size/--dataflow/--no-stos`
+/// options. Unknown `--dataflow` values are a usage error (they used to
+/// fall through to output-stationary silently); the wire protocol's
+/// config parsing shares the same [`Dataflow::parse`] validation.
+fn sim_config(args: &fuseconv::cli::Args) -> Result<SimConfig, String> {
+    let size = args.usize("size").map_err(|e| e.to_string())?;
     let mut cfg = SimConfig::with_size(size);
-    if args.get("dataflow") == Some("ws") {
-        cfg.dataflow = Dataflow::WeightStationary;
+    if let Some(df) = args.get("dataflow") {
+        cfg.dataflow =
+            Dataflow::parse(df).ok_or_else(|| format!("bad --dataflow {df:?} (want os|ws)"))?;
     }
     if args.flag("no-stos") {
         cfg.stos = false;
     }
-    cfg
+    Ok(cfg)
+}
+
+/// [`sim_config`], reporting failures against `cli`'s usage text — the
+/// one error path shared by every subcommand taking the config flags.
+fn sim_config_or_usage(args: &fuseconv::cli::Args, cli: &Cli) -> Option<SimConfig> {
+    match sim_config(args) {
+        Ok(cfg) => Some(cfg),
+        Err(e) => {
+            eprintln!("{e}\n{}", cli.usage());
+            None
+        }
+    }
 }
 
 fn cmd_zoo() -> i32 {
     println!("{:28} {:>10} {:>11} {:>8}", "network", "MACs (M)", "params (M)", "blocks");
-    for name in models::ZOO_NAMES {
-        let net = models::by_name(name).unwrap();
-        println!(
-            "{:28} {:>10.1} {:>11.2} {:>8}",
-            name,
-            net.macs_millions(),
-            net.params_millions(),
-            net.bottleneck_blocks().len()
-        );
+    for (name, macs_m, params_m, blocks) in models::zoo_table() {
+        println!("{:28} {:>10.1} {:>11.2} {:>8}", name, macs_m, params_m, blocks);
     }
     0
 }
@@ -123,7 +138,9 @@ fn cmd_simulate(argv: &[String]) -> i32 {
     if args.flag("fuse") {
         net = fuse_all(&net, Variant::Half);
     }
-    let cfg = sim_config(&args);
+    let Some(cfg) = sim_config_or_usage(&args, &cli) else {
+        return 2;
+    };
     let sim = simulate_network(&net, &cfg);
     println!(
         "{} on {}: {:.3} ms ({} cycles), util {:.1}%",
@@ -189,15 +206,13 @@ fn cmd_sweep(argv: &[String]) -> i32 {
     };
     let mut variants = Vec::new();
     for v in args.str("variants").split(',').filter(|s| !s.is_empty()) {
-        variants.push(match v {
-            "base" => FuseVariant::Base,
-            "half" => FuseVariant::Half,
-            "full" => FuseVariant::Full,
-            other => {
-                eprintln!("unknown variant {other:?} (want base|half|full)");
+        match FuseVariant::parse(v) {
+            Some(variant) => variants.push(variant),
+            None => {
+                eprintln!("unknown variant {v:?} (want base|half|full)");
                 return 2;
             }
-        });
+        }
     }
     let mut sizes = Vec::new();
     for s in args.str("sizes").split(',').filter(|s| !s.is_empty()) {
@@ -211,14 +226,13 @@ fn cmd_sweep(argv: &[String]) -> i32 {
     }
     let mut dataflows = Vec::new();
     for d in args.str("dataflows").split(',').filter(|s| !s.is_empty()) {
-        dataflows.push(match d {
-            "os" => Dataflow::OutputStationary,
-            "ws" => Dataflow::WeightStationary,
-            other => {
-                eprintln!("unknown dataflow {other:?} (want os|ws)");
+        match Dataflow::parse(d) {
+            Some(df) => dataflows.push(df),
+            None => {
+                eprintln!("unknown dataflow {d:?} (want os|ws)");
                 return 2;
             }
-        });
+        }
     }
     let stos_modes: Vec<bool> = match args.str("stos").as_str() {
         "on" => vec![true],
@@ -324,8 +338,16 @@ fn cmd_speedup(argv: &[String]) -> i32 {
         .opt("size", "array dimension", Some("16"))
         .opt("dataflow", "os|ws", Some("os"))
         .flag("no-stos", "unused (always on for FuSe runs)");
-    let args = cli.parse(argv).unwrap();
-    let cfg = sim_config(&args);
+    let args = match cli.parse(argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}\n{}", cli.usage());
+            return 2;
+        }
+    };
+    let Some(cfg) = sim_config_or_usage(&args, &cli) else {
+        return 2;
+    };
     println!(
         "{:22} {:>9} {:>9} {:>9} {:>7} {:>7}",
         "network", "base ms", "half ms", "full ms", "spd-H", "spd-F"
@@ -371,7 +393,10 @@ fn cmd_search_ea(argv: &[String]) -> i32 {
         eprintln!("unknown model");
         return 2;
     };
-    let ev = Evaluator::new(sim_config(&args));
+    let Some(cfg) = sim_config_or_usage(&args, &cli) else {
+        return 2;
+    };
+    let ev = Evaluator::new(cfg);
     let space = HybridSpace::new(&net, &ev);
     let pred = AccuracyPredictor::for_space(&space);
     let method = if args.flag("in-place") { TrainMethod::InPlace } else { TrainMethod::Nos };
@@ -414,7 +439,10 @@ fn cmd_search_nas(argv: &[String]) -> i32 {
         .flag("no-stos", "disable ST-OS")
         .flag("no-fuse", "search without the FuSe operator (baseline OFA)");
     let args = cli.parse(argv).unwrap();
-    let ev = std::sync::Arc::new(Evaluator::new(sim_config(&args)));
+    let Some(cfg) = sim_config_or_usage(&args, &cli) else {
+        return 2;
+    };
+    let ev = std::sync::Arc::new(Evaluator::new(cfg));
     let cfg = NasConfig {
         population: args.usize("pop").unwrap(),
         iterations: args.usize("iters").unwrap(),
@@ -462,7 +490,9 @@ fn cmd_trace(argv: &[String]) -> i32 {
         eprintln!("layer {idx} out of range ({} layers)", net.layers.len());
         return 2;
     }
-    let cfg = sim_config(&args);
+    let Some(cfg) = sim_config_or_usage(&args, &cli) else {
+        return 2;
+    };
     let fs = fuseconv::sim::engine::schedule_layer(&net.layers[idx], &cfg);
     let trace = fuseconv::sim::trace::expand(&fs, args.usize("windows").unwrap());
     print!("# {} / {}\n{}", net.name, net.layers[idx].name, fuseconv::sim::trace::to_csv(&trace));
@@ -475,10 +505,322 @@ fn cmd_train(_argv: &[String]) -> i32 {
     1
 }
 
+/// `fuseconv serve --listen addr` — the TCP/JSON frontend. Simulation
+/// traffic always works; inference traffic needs an engine (`mock` by
+/// default, `pjrt` with `--features xla`, `none` to reject it).
+fn cmd_serve(argv: &[String]) -> i32 {
+    use fuseconv::coordinator::batcher::BatchPolicy;
+    use fuseconv::coordinator::{Router, SimServer, WireServer, PROTOCOL_VERSION};
+
+    let cli = Cli::new("serve", "TCP/JSON serving frontend for inference + simulation")
+        .opt("listen", "bind address (port 0 = ephemeral)", Some("127.0.0.1:7878"))
+        .opt("threads", "simulation worker threads (0=auto)", Some("0"))
+        .opt("sim-capacity", "bounded simulation admission window", Some("256"))
+        .opt("queue", "bounded inference admission queue", Some("1024"))
+        .opt("engine", "inference engine: mock | none | pjrt", Some("mock"))
+        .opt("engine-input", "mock engine input length", Some("4"))
+        .opt("engine-output", "mock engine output length", Some("2"))
+        .opt("max-batch", "dynamic batch cap", Some("8"))
+        .opt("max-wait-ms", "batch deadline (ms)", Some("2"))
+        .opt("port-file", "write the bound address here once listening", None)
+        .opt("artifacts", "artifacts dir (pjrt engine only)", Some("artifacts"));
+    let args = match cli.parse(argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}\n{}", cli.usage());
+            return 2;
+        }
+    };
+    let (threads, sim_capacity, queue, max_batch, max_wait) = match (
+        args.usize("threads"),
+        args.usize("sim-capacity"),
+        args.usize("queue"),
+        args.usize("max-batch"),
+        args.u64("max-wait-ms"),
+    ) {
+        (Ok(t), Ok(sc), Ok(q), Ok(mb), Ok(mw)) => (t, sc, q, mb, mw),
+        _ => {
+            eprintln!("bad numeric option\n{}", cli.usage());
+            return 2;
+        }
+    };
+    let sim = SimServer::with_capacity(
+        threads,
+        std::sync::Arc::new(LayerCache::new()),
+        sim_capacity,
+    );
+    let policy = BatchPolicy {
+        max_batch,
+        max_wait: std::time::Duration::from_millis(max_wait),
+    };
+    let router = match args.str("engine").as_str() {
+        "none" => Router::new(sim),
+        "mock" => {
+            use fuseconv::coordinator::{MockEngine, Server};
+            let (in_len, out_len) = match (args.usize("engine-input"), args.usize("engine-output"))
+            {
+                (Ok(i), Ok(o)) if i > 0 && o > 0 => (i, o),
+                _ => {
+                    eprintln!("bad --engine-input/--engine-output\n{}", cli.usage());
+                    return 2;
+                }
+            };
+            let max_b = max_batch.max(1);
+            Router::new(sim).with_engine(Server::start_with_queue(
+                move || MockEngine::new(in_len, out_len, max_b),
+                policy,
+                queue,
+            ))
+        }
+        "pjrt" => match pjrt_router(sim, policy, queue, &args.str("artifacts")) {
+            Ok(r) => r,
+            Err(e) => {
+                eprintln!("{e}");
+                return 1;
+            }
+        },
+        other => {
+            eprintln!("unknown --engine {other:?} (want mock|none|pjrt)\n{}", cli.usage());
+            return 2;
+        }
+    };
+
+    let listen = args.str("listen");
+    let wire = match WireServer::bind(&listen, std::sync::Arc::new(router)) {
+        Ok(w) => w,
+        Err(e) => {
+            eprintln!("bind {listen}: {e}");
+            return 1;
+        }
+    };
+    let addr = wire.local_addr();
+    eprintln!(
+        "fuseconv serve: listening on {addr} (protocol v{PROTOCOL_VERSION}); \
+         send {{\"op\":\"shutdown\"}} to stop"
+    );
+    if let Some(path) = args.get("port-file") {
+        if let Err(e) = std::fs::write(path, addr.to_string()) {
+            eprintln!("writing {path}: {e}");
+            return 1;
+        }
+    }
+    match wire.run() {
+        Ok(()) => {
+            eprintln!("fuseconv serve: clean shutdown");
+            0
+        }
+        Err(e) => {
+            eprintln!("serve failed: {e}");
+            1
+        }
+    }
+}
+
+#[cfg(feature = "xla")]
+fn pjrt_router(
+    sim: fuseconv::coordinator::SimServer,
+    policy: fuseconv::coordinator::batcher::BatchPolicy,
+    queue: usize,
+    artifacts: &str,
+) -> Result<fuseconv::coordinator::Router, String> {
+    use fuseconv::coordinator::{Router, Server};
+    let dir = std::path::PathBuf::from(artifacts);
+    if !dir.join("manifest.txt").exists() {
+        return Err("artifacts not built; run `make artifacts`".into());
+    }
+    Ok(Router::new(sim).with_engine(Server::start_with_queue(
+        move || fuseconv::runtime::PjrtEngine::from_artifacts(&dir, "student_init.bin").unwrap(),
+        policy,
+        queue,
+    )))
+}
+
 #[cfg(not(feature = "xla"))]
-fn cmd_serve(_argv: &[String]) -> i32 {
-    eprintln!("`serve` needs the PJRT runtime; rebuild with `--features xla`");
-    1
+fn pjrt_router(
+    _sim: fuseconv::coordinator::SimServer,
+    _policy: fuseconv::coordinator::batcher::BatchPolicy,
+    _queue: usize,
+    _artifacts: &str,
+) -> Result<fuseconv::coordinator::Router, String> {
+    Err("--engine pjrt needs the PJRT runtime; rebuild with `--features xla`".into())
+}
+
+/// `fuseconv request` — wire client for a running `fuseconv serve`
+/// (scripted load: `--count N` pipelines N copies on one connection).
+fn cmd_request(argv: &[String]) -> i32 {
+    use fuseconv::coordinator::wire::encode_response;
+    use fuseconv::coordinator::{ConfigPatch, ModelSpec, Request, RequestBody, WireClient};
+
+    let cli = Cli::new("request", "send protocol requests to a running `fuseconv serve`")
+        .opt("connect", "server address host:port", Some("127.0.0.1:7878"))
+        .opt("op", "infer | simulate | sweep | stats | zoo | shutdown", Some("simulate"))
+        .opt("model", "zoo model (simulate)", Some("mobilenet-v2"))
+        .opt("models", "comma list of zoo models (sweep)", Some("mobilenet-v2"))
+        .opt("variant", "base|half|full (simulate)", Some("base"))
+        .opt("variants", "comma list of variants (sweep)", Some("base,half"))
+        .opt("size", "square array size override", None)
+        .opt("sizes", "comma list of array sizes (sweep)", Some("8,16"))
+        .opt("dataflow", "os|ws override", None)
+        .opt("input", "comma-separated floats (infer)", Some("0,0,0,0"))
+        .opt("count", "repeat the request N times on one connection", Some("1"))
+        .opt("deadline-ms", "per-request deadline", None)
+        .opt("timeout-ms", "client receive timeout", Some("60000"))
+        .opt("id", "starting request id", Some("1"))
+        .flag("no-stos", "disable ST-OS in the request config");
+    let args = match cli.parse(argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}\n{}", cli.usage());
+            return 2;
+        }
+    };
+
+    // shared config overrides (simulate + sweep)
+    let patch = {
+        let size = match args.opt_usize("size") {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("{e}\n{}", cli.usage());
+                return 2;
+            }
+        };
+        let dataflow = match args.get("dataflow") {
+            None => None,
+            Some(df) => match Dataflow::parse(df) {
+                Some(d) => Some(d),
+                None => {
+                    eprintln!("bad --dataflow {df:?} (want os|ws)\n{}", cli.usage());
+                    return 2;
+                }
+            },
+        };
+        ConfigPatch {
+            size,
+            dataflow,
+            stos: if args.flag("no-stos") { Some(false) } else { None },
+            ..ConfigPatch::default()
+        }
+    };
+
+    let body = match args.str("op").as_str() {
+        "infer" => {
+            let mut input = Vec::new();
+            for tok in args.str("input").split(',').filter(|s| !s.is_empty()) {
+                match tok.trim().parse::<f32>() {
+                    Ok(x) => input.push(x),
+                    Err(_) => {
+                        eprintln!("bad --input element {tok:?}");
+                        return 2;
+                    }
+                }
+            }
+            RequestBody::Infer { input }
+        }
+        "simulate" => {
+            let Some(variant) = FuseVariant::parse(&args.str("variant")) else {
+                eprintln!("bad --variant (want base|half|full)\n{}", cli.usage());
+                return 2;
+            };
+            RequestBody::Simulate {
+                model: ModelSpec::Zoo(args.str("model")),
+                variant,
+                config: patch,
+            }
+        }
+        "sweep" => {
+            let models: Vec<String> = args
+                .str("models")
+                .split(',')
+                .filter(|s| !s.is_empty())
+                .map(str::to_string)
+                .collect();
+            let mut variants = Vec::new();
+            for tok in args.str("variants").split(',').filter(|s| !s.is_empty()) {
+                match FuseVariant::parse(tok) {
+                    Some(v) => variants.push(v),
+                    None => {
+                        eprintln!("bad variant {tok:?} (want base|half|full)");
+                        return 2;
+                    }
+                }
+            }
+            let mut configs = Vec::new();
+            for tok in args.str("sizes").split(',').filter(|s| !s.is_empty()) {
+                match tok.parse::<usize>() {
+                    Ok(n) if n > 0 => {
+                        configs.push(ConfigPatch { size: Some(n), ..patch.clone() })
+                    }
+                    _ => {
+                        eprintln!("bad array size {tok:?}");
+                        return 2;
+                    }
+                }
+            }
+            RequestBody::Sweep { models, variants, configs }
+        }
+        "stats" => RequestBody::Stats,
+        "zoo" => RequestBody::Zoo,
+        "shutdown" => RequestBody::Shutdown,
+        other => {
+            eprintln!("unknown --op {other:?}\n{}", cli.usage());
+            return 2;
+        }
+    };
+
+    let (count, base_id, timeout_ms, deadline_ms) = match (
+        args.usize("count"),
+        args.u64("id"),
+        args.u64("timeout-ms"),
+        args.opt_u64("deadline-ms"),
+    ) {
+        (Ok(c), Ok(i), Ok(t), Ok(d)) => (c.max(1), i, t, d),
+        _ => {
+            eprintln!("bad numeric option\n{}", cli.usage());
+            return 2;
+        }
+    };
+
+    let addr = args.str("connect");
+    let timeout = std::time::Duration::from_millis(timeout_ms);
+    let mut client = match WireClient::connect(&addr, timeout) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("connect {addr}: {e}");
+            return 1;
+        }
+    };
+    // pipeline all requests, then collect all responses (FIFO per conn)
+    for i in 0..count {
+        let mut req = Request::new(base_id + i as u64, body.clone());
+        if let Some(ms) = deadline_ms {
+            req = req.with_deadline_ms(ms);
+        }
+        if let Err(e) = client.send(&req) {
+            eprintln!("send: {e}");
+            return 1;
+        }
+    }
+    let mut failures = 0usize;
+    for _ in 0..count {
+        match client.recv() {
+            Ok(resp) => {
+                println!("{}", encode_response(&resp));
+                if !resp.is_ok() {
+                    failures += 1;
+                }
+            }
+            Err(e) => {
+                eprintln!("{e}");
+                return 1;
+            }
+        }
+    }
+    if failures > 0 {
+        eprintln!("# {failures}/{count} requests failed");
+        1
+    } else {
+        0
+    }
 }
 
 #[cfg(feature = "xla")]
@@ -506,52 +848,3 @@ fn cmd_train(argv: &[String]) -> i32 {
     }
 }
 
-#[cfg(feature = "xla")]
-fn cmd_serve(argv: &[String]) -> i32 {
-    let cli = Cli::new("serve", "batched serving demo")
-        .opt("artifacts", "artifacts dir", Some("artifacts"))
-        .opt("requests", "number of requests", Some("64"))
-        .opt("max-batch", "dynamic batch cap", Some("8"))
-        .opt("max-wait-ms", "batch deadline", Some("5"));
-    let args = cli.parse(argv).unwrap();
-    use fuseconv::coordinator::batcher::BatchPolicy;
-    use fuseconv::coordinator::server::Server;
-    use fuseconv::runtime::{PjrtEngine, Synth};
-
-    let dir = std::path::PathBuf::from(args.str("artifacts"));
-    if !dir.join("manifest.txt").exists() {
-        eprintln!("artifacts not built; run `make artifacts`");
-        return 1;
-    }
-    let manifest = fuseconv::runtime::Manifest::load(&dir).unwrap();
-    let hw = manifest.const_usize("image_hw").unwrap();
-    let classes = manifest.const_usize("num_classes").unwrap();
-    let policy = BatchPolicy {
-        max_batch: args.usize("max-batch").unwrap(),
-        max_wait: std::time::Duration::from_millis(args.u64("max-wait-ms").unwrap()),
-    };
-    let server = Server::start_with(
-        move || PjrtEngine::from_artifacts(&dir, "student_init.bin").unwrap(),
-        policy,
-    );
-    let n = args.usize("requests").unwrap();
-    let mut synth = Synth::new(hw, classes, 99);
-    let mut pending = Vec::new();
-    for _ in 0..n {
-        let (x, _) = synth.batch(1);
-        pending.push(server.submit(x));
-    }
-    for rx in pending {
-        let _ = rx.recv_timeout(std::time::Duration::from_secs(300)).expect("response");
-    }
-    let stats = server.shutdown();
-    let s = stats.latency_summary().unwrap();
-    println!(
-        "served {} requests in {} batches (mean batch {:.1})",
-        stats.served,
-        stats.batches,
-        stats.mean_batch()
-    );
-    println!("latency_us: p50 {:.0}  p90 {:.0}  p99 {:.0}  max {:.0}", s.p50, s.p90, s.p99, s.max);
-    0
-}

@@ -21,7 +21,7 @@ pub struct Layer {
 /// SAME-style padding as used by all the paper's networks: output spatial
 /// size = ceil(input / stride).
 fn out_dim(input: usize, stride: usize) -> usize {
-    (input + stride - 1) / stride
+    input.div_ceil(stride)
 }
 
 impl Layer {

@@ -101,6 +101,19 @@ pub fn paper_five() -> Vec<Network> {
     ]
 }
 
+/// One row per zoo network: `(name, MACs in millions, params in
+/// millions, #bottleneck blocks)`. Shared by `fuseconv zoo` and the
+/// serving protocol's `Zoo` reply, so both surfaces list the same facts.
+pub fn zoo_table() -> Vec<(&'static str, f64, f64, usize)> {
+    ZOO_NAMES
+        .iter()
+        .map(|&name| {
+            let net = by_name(name).expect("ZOO_NAMES entries resolve");
+            (name, net.macs_millions(), net.params_millions(), net.bottleneck_blocks().len())
+        })
+        .collect()
+}
+
 pub const ZOO_NAMES: &[&str] = &[
     "mobilenet-v1",
     "mobilenet-v2",
@@ -136,6 +149,17 @@ mod tests {
         let names: Vec<String> = paper_five().iter().map(|n| n.name.clone()).collect();
         assert_eq!(names.len(), 5);
         assert!(names.iter().any(|n| n.contains("V3-Large")));
+    }
+
+    #[test]
+    fn zoo_table_covers_every_network() {
+        let table = zoo_table();
+        assert_eq!(table.len(), ZOO_NAMES.len());
+        for (name, macs_m, params_m, blocks) in table {
+            assert!(macs_m > 0.0, "{name} zero MACs");
+            assert!(params_m > 0.0, "{name} zero params");
+            assert!(blocks > 0, "{name} zero blocks");
+        }
     }
 
     #[test]

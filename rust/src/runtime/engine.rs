@@ -106,11 +106,15 @@ mod tests {
         let hw = m.const_usize("image_hw").unwrap();
         let in_len = 3 * hw * hw;
         let out_len = m.const_usize("num_classes").unwrap();
-        let rxs: Vec<_> = (0..12).map(|_| server.submit(vec![0.05; in_len])).collect();
-        for rx in rxs {
-            let resp = rx.recv_timeout(Duration::from_secs(120)).unwrap();
-            assert_eq!(resp.output.len(), out_len);
-            assert!(resp.output.iter().all(|v| v.is_finite()));
+        let tickets: Vec<_> = (0..12).map(|_| server.submit(vec![0.05; in_len])).collect();
+        for t in tickets {
+            match t.recv_deadline(Duration::from_secs(120)).result {
+                Ok(crate::coordinator::Reply::Infer(r)) => {
+                    assert_eq!(r.output.len(), out_len);
+                    assert!(r.output.iter().all(|v| v.is_finite()));
+                }
+                other => panic!("expected infer reply, got {other:?}"),
+            }
         }
         let stats = server.shutdown();
         assert_eq!(stats.served, 12);

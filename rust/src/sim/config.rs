@@ -9,6 +9,28 @@ pub enum Dataflow {
     WeightStationary,
 }
 
+impl Dataflow {
+    /// The short CLI/wire form (`os` / `ws`). [`Dataflow::parse`] is the
+    /// inverse; every surface (CLI flags, sweep specs, wire configs)
+    /// shares this one vocabulary.
+    pub fn short(&self) -> &'static str {
+        match self {
+            Dataflow::OutputStationary => "os",
+            Dataflow::WeightStationary => "ws",
+        }
+    }
+
+    /// Parse the short form; `None` for anything else (callers turn that
+    /// into a usage error / `bad_request` — never a silent default).
+    pub fn parse(s: &str) -> Option<Dataflow> {
+        match s {
+            "os" => Some(Dataflow::OutputStationary),
+            "ws" => Some(Dataflow::WeightStationary),
+            _ => None,
+        }
+    }
+}
+
 /// ST-OS slice-to-row mapping policy (paper §3.4).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum MappingPolicy {
@@ -21,6 +43,26 @@ pub enum MappingPolicy {
     /// Channels-first until channels run out, then spill spatial slices of
     /// the same channels across remaining rows (paper's default).
     Hybrid,
+}
+
+impl MappingPolicy {
+    /// Stable CLI/wire label. [`MappingPolicy::parse`] is the inverse.
+    pub fn label(&self) -> &'static str {
+        match self {
+            MappingPolicy::SpatialFirst => "spatial-first",
+            MappingPolicy::ChannelsFirst => "channels-first",
+            MappingPolicy::Hybrid => "hybrid",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<MappingPolicy> {
+        match s {
+            "spatial-first" => Some(MappingPolicy::SpatialFirst),
+            "channels-first" => Some(MappingPolicy::ChannelsFirst),
+            "hybrid" => Some(MappingPolicy::Hybrid),
+            _ => None,
+        }
+    }
 }
 
 #[derive(Debug, Clone)]
@@ -202,6 +244,19 @@ mod tests {
         let a = SimConfig::default();
         let b = SimConfig { freq_mhz: 500, ..SimConfig::default() };
         assert_eq!(a.price_key(), b.price_key());
+    }
+
+    #[test]
+    fn dataflow_and_mapping_strings_round_trip() {
+        for df in [Dataflow::OutputStationary, Dataflow::WeightStationary] {
+            assert_eq!(Dataflow::parse(df.short()), Some(df));
+        }
+        assert_eq!(Dataflow::parse("systolic"), None);
+        for m in [MappingPolicy::SpatialFirst, MappingPolicy::ChannelsFirst, MappingPolicy::Hybrid]
+        {
+            assert_eq!(MappingPolicy::parse(m.label()), Some(m));
+        }
+        assert_eq!(MappingPolicy::parse("rows-first"), None);
     }
 
     #[test]

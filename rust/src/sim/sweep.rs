@@ -55,6 +55,18 @@ impl FuseVariant {
         }
     }
 
+    /// Parse a CLI/wire variant name; accepts both the short forms
+    /// (`half`) and the canonical labels (`fuse-half`). `None` for
+    /// unknown names — callers report, never default.
+    pub fn parse(s: &str) -> Option<FuseVariant> {
+        match s {
+            "base" => Some(FuseVariant::Base),
+            "half" | "fuse-half" => Some(FuseVariant::Half),
+            "full" | "fuse-full" => Some(FuseVariant::Full),
+            _ => None,
+        }
+    }
+
     /// Realize the variant (Base is a clone; Half/Full apply the transform).
     pub fn apply(&self, net: &Network) -> Network {
         match self {
@@ -290,13 +302,6 @@ pub struct SweepOutcome {
     pub cache_stats: CacheStats,
 }
 
-fn dataflow_short(df: Dataflow) -> &'static str {
-    match df {
-        Dataflow::OutputStationary => "os",
-        Dataflow::WeightStationary => "ws",
-    }
-}
-
 impl SweepOutcome {
     /// The cell for the n-th network, v-th variant, c-th config of the plan.
     pub fn record(&self, n: usize, v: usize, c: usize) -> &SweepRecord {
@@ -319,7 +324,7 @@ impl SweepOutcome {
                 r.variant.label(),
                 r.cfg.rows,
                 r.cfg.cols,
-                dataflow_short(r.cfg.dataflow),
+                r.cfg.dataflow.short(),
                 r.cfg.stos,
                 r.sim.total_cycles,
                 r.sim.latency_ms,
@@ -346,7 +351,7 @@ impl SweepOutcome {
                 r.variant.label(),
                 r.cfg.rows,
                 r.cfg.cols,
-                dataflow_short(r.cfg.dataflow),
+                r.cfg.dataflow.short(),
                 r.cfg.stos,
                 r.sim.total_cycles,
                 r.sim.latency_ms,

@@ -1,0 +1,244 @@
+//! Wire-level integration: the TCP/JSON frontend under concurrent mixed
+//! traffic (acceptance criteria for the unified serving API).
+//!
+//! * ≥ 32 concurrent Infer/Simulate requests through one listener, zero
+//!   dropped replies, every id answered;
+//! * `Simulate` by zoo name over the wire returns cycle counts identical
+//!   to a direct in-process `simulate_network`;
+//! * a full bounded queue answers `busy` — it never hangs.
+
+use fuseconv::coordinator::batcher::BatchPolicy;
+use fuseconv::coordinator::{
+    ConfigPatch, MockEngine, ModelSpec, Reply, Request, RequestBody, Router, ServeError,
+    Server, SimServer, WireClient, WireServer,
+};
+use fuseconv::nn::models;
+use fuseconv::sim::{simulate_network, FuseVariant, LayerCache, SimConfig};
+use std::sync::Arc;
+use std::thread;
+use std::time::Duration;
+
+/// Boot a full frontend (mock engine + sim pool) on an ephemeral port.
+fn start_frontend(sim_capacity: usize) -> (String, thread::JoinHandle<()>) {
+    let sim = SimServer::with_capacity(2, Arc::new(LayerCache::new()), sim_capacity);
+    let router = Router::new(sim).with_engine(Server::start(
+        MockEngine::new(4, 2, 8),
+        BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(2) },
+    ));
+    let server = WireServer::bind("127.0.0.1:0", Arc::new(router)).expect("bind ephemeral");
+    let addr = server.local_addr().to_string();
+    let handle = thread::spawn(move || server.run().expect("frontend run"));
+    (addr, handle)
+}
+
+fn shutdown_frontend(addr: &str, handle: thread::JoinHandle<()>) {
+    let mut client = WireClient::connect(addr, Duration::from_secs(10)).expect("connect");
+    let resp = client
+        .roundtrip(&Request::new(u64::MAX, RequestBody::Shutdown))
+        .expect("shutdown ack");
+    assert_eq!(resp.result, Ok(Reply::Done));
+    handle.join().expect("listener thread");
+}
+
+#[test]
+fn concurrent_mixed_traffic_zero_dropped_replies() {
+    let (addr, handle) = start_frontend(256);
+
+    // 32 client threads, each its own connection: even ids infer, odd
+    // ids simulate. Every thread must get exactly its own reply back.
+    let workers: Vec<_> = (0..32u64)
+        .map(|i| {
+            let addr = addr.clone();
+            thread::spawn(move || {
+                let mut client =
+                    WireClient::connect(&addr, Duration::from_secs(120)).expect("connect");
+                let req = if i % 2 == 0 {
+                    Request::new(i, RequestBody::Infer { input: vec![i as f32; 4] })
+                } else {
+                    Request::new(
+                        i,
+                        RequestBody::Simulate {
+                            model: ModelSpec::Zoo("mobilenet-v3-small".into()),
+                            variant: FuseVariant::Half,
+                            config: ConfigPatch::sized(8),
+                        },
+                    )
+                };
+                let resp = client.roundtrip(&req).expect("roundtrip");
+                assert_eq!(resp.id, i, "reply must carry the request id");
+                (i, resp)
+            })
+        })
+        .collect();
+
+    let mut infer_seen = 0;
+    let mut sim_cycles = Vec::new();
+    for w in workers {
+        let (i, resp) = w.join().expect("client thread");
+        match resp.result {
+            Ok(Reply::Infer(r)) => {
+                assert_eq!(i % 2, 0);
+                // MockEngine: output[0] = sum(input) = 4i
+                assert_eq!(r.output.len(), 2);
+                assert_eq!(r.output[0], (4 * i) as f32);
+                infer_seen += 1;
+            }
+            Ok(Reply::Sim(s)) => {
+                assert_eq!(i % 2, 1);
+                assert!(s.total_cycles > 0);
+                sim_cycles.push(s.total_cycles);
+            }
+            other => panic!("request {i}: unexpected {other:?}"),
+        }
+    }
+    assert_eq!(infer_seen, 16, "all infer replies arrived");
+    assert_eq!(sim_cycles.len(), 16, "all simulate replies arrived");
+    // determinism: every identical scenario priced identically
+    assert!(sim_cycles.windows(2).all(|w| w[0] == w[1]));
+
+    shutdown_frontend(&addr, handle);
+}
+
+#[test]
+fn wire_simulate_matches_direct_simulation() {
+    let (addr, handle) = start_frontend(64);
+    let mut client = WireClient::connect(&addr, Duration::from_secs(120)).expect("connect");
+
+    for (model, variant, size) in [
+        ("mobilenet-v2", FuseVariant::Base, 16),
+        ("mobilenet-v2", FuseVariant::Half, 16),
+        ("mobilenet-v3-small", FuseVariant::Full, 32),
+        ("mnasnet-b1", FuseVariant::Half, 8),
+    ] {
+        let resp = client
+            .roundtrip(&Request::new(
+                7,
+                RequestBody::Simulate {
+                    model: ModelSpec::Zoo(model.into()),
+                    variant,
+                    config: ConfigPatch::sized(size),
+                },
+            ))
+            .expect("roundtrip");
+        let got = match resp.result {
+            Ok(Reply::Sim(s)) => s,
+            other => panic!("{model}: unexpected {other:?}"),
+        };
+        let net = models::by_name(model).unwrap();
+        let expect = simulate_network(&variant.apply(&net), &SimConfig::with_size(size));
+        assert_eq!(
+            got.total_cycles, expect.total_cycles,
+            "{model}/{}/{size}: wire cycles must equal direct simulation",
+            variant.label()
+        );
+        assert_eq!(got.network, expect.network);
+        assert_eq!(got.num_layers, expect.layers.len());
+    }
+
+    drop(client);
+    shutdown_frontend(&addr, handle);
+}
+
+#[test]
+fn full_bounded_queue_answers_busy_over_the_wire() {
+    // capacity 1 → a burst of pipelined simulates must include at least
+    // one `busy` answer, and every frame still gets a reply (no hang).
+    let (addr, handle) = start_frontend(1);
+    let mut client = WireClient::connect(&addr, Duration::from_secs(120)).expect("connect");
+
+    const BURST: u64 = 8;
+    for i in 0..BURST {
+        client
+            .send(&Request::new(
+                100 + i,
+                RequestBody::Simulate {
+                    model: ModelSpec::Zoo("mobilenet-v2".into()),
+                    variant: FuseVariant::Full,
+                    config: ConfigPatch::sized(32),
+                },
+            ))
+            .expect("send");
+    }
+    let mut ok = 0;
+    let mut busy = 0;
+    for _ in 0..BURST {
+        let resp = client.recv().expect("every frame gets a reply");
+        match resp.result {
+            Ok(Reply::Sim(_)) => ok += 1,
+            Err(ServeError::Busy) => busy += 1,
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+    assert_eq!(ok + busy, BURST, "zero dropped replies");
+    assert!(ok >= 1, "the admitted request completes");
+    assert!(busy >= 1, "overload must surface as typed Busy, not a hang");
+
+    drop(client);
+    shutdown_frontend(&addr, handle);
+}
+
+#[test]
+fn stats_and_zoo_over_the_wire() {
+    let (addr, handle) = start_frontend(64);
+    let mut client = WireClient::connect(&addr, Duration::from_secs(60)).expect("connect");
+
+    // drive one of each, then check the counters moved
+    let resp = client
+        .roundtrip(&Request::new(1, RequestBody::Infer { input: vec![0.5; 4] }))
+        .expect("infer");
+    assert!(resp.is_ok());
+    let resp = client
+        .roundtrip(&Request::new(
+            2,
+            RequestBody::Simulate {
+                model: ModelSpec::Zoo("mobilenet-v3-small".into()),
+                variant: FuseVariant::Base,
+                config: ConfigPatch::default(),
+            },
+        ))
+        .expect("simulate");
+    assert!(resp.is_ok());
+
+    let resp = client.roundtrip(&Request::new(3, RequestBody::Zoo)).expect("zoo");
+    match resp.result {
+        Ok(Reply::Zoo(entries)) => {
+            assert_eq!(entries.len(), models::ZOO_NAMES.len());
+        }
+        other => panic!("unexpected {other:?}"),
+    }
+    let resp = client.roundtrip(&Request::new(4, RequestBody::Stats)).expect("stats");
+    match resp.result {
+        Ok(Reply::Stats(s)) => {
+            assert_eq!(s.infer_served, 1);
+            assert_eq!(s.sim_completed, 1);
+            assert!(s.cache_misses > 0);
+        }
+        other => panic!("unexpected {other:?}"),
+    }
+
+    drop(client);
+    shutdown_frontend(&addr, handle);
+}
+
+#[test]
+fn deadline_is_enforced_over_the_wire() {
+    let (addr, handle) = start_frontend(64);
+    let mut client = WireClient::connect(&addr, Duration::from_secs(60)).expect("connect");
+    // a deadline that has effectively already expired
+    let resp = client
+        .roundtrip(
+            &Request::new(
+                11,
+                RequestBody::Simulate {
+                    model: ModelSpec::Zoo("mobilenet-v2".into()),
+                    variant: FuseVariant::Base,
+                    config: ConfigPatch::default(),
+                },
+            )
+            .with_deadline_ms(0),
+        )
+        .expect("roundtrip");
+    assert_eq!(resp.result, Err(ServeError::Deadline));
+    drop(client);
+    shutdown_frontend(&addr, handle);
+}
