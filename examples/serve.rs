@@ -54,7 +54,7 @@ fn main() {
     }
     let mut correct_shape = 0;
     for ticket in pending {
-        match ticket.recv_deadline(Duration::from_secs(300)).result {
+        match ticket.wait_deadline(Duration::from_secs(300)).result {
             Ok(Reply::Infer(r)) if r.output.len() == classes => correct_shape += 1,
             Ok(_) => {}
             Err(e) => panic!("request failed: {e}"),

@@ -4,6 +4,10 @@
 //! wire client — exactly what `fuseconv serve` / `fuseconv request` do,
 //! in one process.
 //!
+//! Protocol v2 is a frame-stream contract: the sweep below arrives as
+//! incremental `Row` frames (consumed with a running ETA) instead of one
+//! giant end-of-grid reply.
+//!
 //! ```sh
 //! cargo run --release --example wire_demo
 //! ```
@@ -11,12 +15,12 @@
 use fuseconv::coordinator::batcher::BatchPolicy;
 use fuseconv::coordinator::wire::encode_response;
 use fuseconv::coordinator::{
-    ConfigPatch, MockEngine, ModelSpec, Reply, Request, RequestBody, Router, Server,
+    ConfigPatch, Frame, MockEngine, ModelSpec, Reply, Request, RequestBody, Router, Server,
     SimServer, WireClient, WireServer,
 };
 use fuseconv::sim::FuseVariant;
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 fn main() {
     // server side: mock engine (4 floats in, 2 out) + sim pool
@@ -29,7 +33,7 @@ fn main() {
     println!("listening on {addr}");
     let listener = std::thread::spawn(move || server.run().expect("serve"));
 
-    // client side: one connection, mixed traffic
+    // client side: one connection, point queries first
     let mut client = WireClient::connect(&addr, Duration::from_secs(60)).expect("connect");
     let requests = vec![
         Request::new(1, RequestBody::Zoo),
@@ -42,43 +46,81 @@ fn main() {
             },
         ),
         Request::new(3, RequestBody::Infer { input: vec![1.0, 2.0, 3.0, 4.0] }),
-        Request::new(
-            4,
-            RequestBody::Sweep {
-                models: vec!["mobilenet-v3-small".into()],
-                variants: vec![FuseVariant::Base, FuseVariant::Half],
-                configs: vec![ConfigPatch::sized(8), ConfigPatch::sized(16)],
-            },
-        ),
-        Request::new(5, RequestBody::Stats),
     ];
     for req in &requests {
         client.send(req).expect("send");
     }
-    for _ in 0..requests.len() {
-        let resp = client.recv().expect("recv");
+    for req in &requests {
+        let resp = client.recv_response(req.id).expect("recv");
         match &resp.result {
             Ok(Reply::Zoo(entries)) => println!("zoo: {} models", entries.len()),
-            Ok(Reply::Sim(s)) => {
-                println!(
-                    "sim: {} on {} -> {} cycles ({:.3} ms)",
-                    s.network, s.config_label, s.total_cycles, s.latency_ms
-                )
-            }
+            Ok(Reply::Sim(s)) => println!(
+                "sim: {} on {} -> {} cycles ({:.3} ms)",
+                s.network, s.config_label, s.total_cycles, s.latency_ms
+            ),
             Ok(Reply::Infer(r)) => {
                 println!("infer: output {:?} (batch {})", r.output, r.batch_size)
             }
-            Ok(Reply::Sweep(rows)) => println!("sweep: {} cells", rows.len()),
-            Ok(Reply::Stats(s)) => println!(
-                "stats: {} sims, cache {}h/{}m, raw frame: {}",
-                s.sim_completed,
-                s.cache_hits,
-                s.cache_misses,
-                encode_response(&resp)
-            ),
-            Ok(Reply::Done) => println!("done"),
-            Err(e) => println!("error: {e}"),
+            other => println!("unexpected: {other:?}"),
         }
+    }
+
+    // streamed sweep: consume Row frames as the grid completes, with a
+    // running ETA from the progress counter
+    client
+        .send(&Request::new(
+            4,
+            RequestBody::Sweep {
+                models: vec!["mobilenet-v3-small".into(), "mobilenet-v2".into()],
+                variants: vec![FuseVariant::Base, FuseVariant::Half],
+                configs: vec![
+                    ConfigPatch::sized(8),
+                    ConfigPatch::sized(16),
+                    ConfigPatch::sized(32),
+                ],
+            },
+        ))
+        .expect("send sweep");
+    let t0 = Instant::now();
+    let mut rows = 0usize;
+    loop {
+        match client.recv_frame(4).expect("sweep frame") {
+            Frame::Progress { done, total } if done > 0 => {
+                let elapsed = t0.elapsed().as_secs_f64();
+                let eta = elapsed / done as f64 * (total - done) as f64;
+                println!("progress: {done}/{total} cells, eta {eta:.2}s");
+            }
+            Frame::Progress { .. } => {}
+            Frame::Row(row) => {
+                rows += 1;
+                println!(
+                    "row: {:24} {:10} {:>3}x{:<3} -> {} cycles ({:.3} ms)",
+                    row.network,
+                    row.variant.label(),
+                    row.rows,
+                    row.cols,
+                    row.total_cycles,
+                    row.latency_ms
+                );
+            }
+            Frame::Final(result) => {
+                assert_eq!(result, Ok(Reply::Done));
+                break;
+            }
+        }
+    }
+    println!("sweep: {rows} rows streamed in {:.2}s", t0.elapsed().as_secs_f64());
+
+    // stats, printed as the raw wire frame
+    let resp = client.roundtrip(&Request::new(5, RequestBody::Stats)).expect("stats");
+    if let Ok(Reply::Stats(s)) = &resp.result {
+        println!(
+            "stats: {} sims, cache {}h/{}m, raw frame: {}",
+            s.sim_completed,
+            s.cache_hits,
+            s.cache_misses,
+            encode_response(&resp)
+        );
     }
 
     // clean shutdown over the wire

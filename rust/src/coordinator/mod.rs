@@ -16,7 +16,7 @@ pub mod wire;
 pub use evaluator::{Evaluator, HybridSpace, NetEval};
 pub use net::{request_once, WireClient, WireServer};
 pub use protocol::{
-    ConfigPatch, ModelSpec, Reply, Request, RequestBody, Response, ServeError, Service,
-    Ticket, PROTOCOL_VERSION,
+    ConfigPatch, Frame, FrameSink, ModelSpec, Priority, RecvError, Reply, Request,
+    RequestBody, Response, ServeError, Service, SweepRow, Ticket, PROTOCOL_VERSION,
 };
 pub use server::{Engine, MockEngine, Router, Server, SimServer};

@@ -1,28 +1,41 @@
 //! Wire-level frontend: a `std::net::TcpListener` speaking the JSON
-//! protocol of [`wire`](super::wire), one newline-delimited frame per
-//! request/response, feeding any shared [`Service`].
+//! frame protocol of [`wire`](super::wire), one newline-delimited frame
+//! per request or reply-stream element, feeding any shared [`Service`].
 //!
-//! Threading model: one reader thread per connection decodes frames and
-//! performs admission through `Service::call` (which never blocks on the
-//! work), plus one writer thread per connection that redeems [`Ticket`]s
-//! in request order. Responses on one connection are therefore FIFO;
-//! clients that want out-of-order completion open more connections (ids
-//! still match replies to requests either way).
+//! Threading model (protocol v2): one reader thread per connection
+//! decodes request frames and performs admission through `Service::call`
+//! (which never blocks on the work). Each admitted request's [`Ticket`]
+//! is drained by a small *stream forwarder* thread into one shared
+//! per-connection writer channel, and the writer thread serializes
+//! frames onto the socket in arrival order. Frames from concurrent
+//! requests therefore interleave on the wire — every frame carries its
+//! request id, and clients demultiplex by id ([`WireClient`] does this
+//! transparently). There is no whole-response FIFO guarantee any more;
+//! `final` frames land whenever their work completes.
+//!
+//! Per-connection limits: an optional request budget
+//! (`--max-requests-per-conn`) bounds how many requests one connection
+//! may submit; the first request past the budget is answered with a
+//! terminal `busy` frame and the connection is closed.
 //!
 //! Lifecycle: a decoded `Shutdown` frame is forwarded to the service
 //! (the [`Router`](super::server::Router) latches closed and acks
 //! `Done`), the ack is flushed, and the accept loop is released.
 //! Shutdown then *drains*: every connection reader polls the stop latch
 //! (reads carry a short timeout), so idle connections close promptly
-//! while queued replies still flush through each connection's writer —
-//! in-flight work is never cut off, and [`WireServer::run`] returns
-//! once every handler has exited. Frames that fail to decode answer
-//! `bad_request` without killing the connection.
+//! while queued frames still flush through each connection's writer —
+//! in-flight streams are never cut off, and [`WireServer::run`] returns
+//! once every handler has exited. Frames that fail to decode answer a
+//! terminal `bad_request` without killing the connection.
 
-use super::protocol::{Request, RequestBody, Response, ServeError, Service, Ticket};
-use super::wire::{
-    decode_response, encode_request, encode_response, parse_json, Json, WireError,
+use super::protocol::{
+    collapse_stream, Frame, RecvError, Request, RequestBody, Response, ServeError, Service,
+    SweepRow, Ticket,
 };
+use super::wire::{
+    decode_frame, encode_frame, encode_request, parse_json, Json, WireError,
+};
+use std::collections::{HashMap, VecDeque};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -30,9 +43,9 @@ use std::sync::{mpsc, Arc};
 use std::thread;
 use std::time::Duration;
 
-/// Upper bound a connection writer waits on any single ticket; a service
-/// that never answers turns into a typed `deadline` error, not a wedged
-/// connection.
+/// Upper bound a stream forwarder waits between any two frames of one
+/// ticket; a service that never answers turns into a typed `deadline`
+/// error, not a wedged connection.
 pub const MAX_TICKET_WAIT: Duration = Duration::from_secs(600);
 
 /// Read-poll interval on server-side connections: how often an idle
@@ -54,15 +67,24 @@ pub struct WireServer {
     listener: TcpListener,
     addr: SocketAddr,
     service: Arc<dyn Service>,
+    /// Per-connection request budget; `None` = unlimited.
+    max_requests_per_conn: Option<u64>,
 }
 
 impl WireServer {
     /// Bind `addr` (e.g. `127.0.0.1:0` for an ephemeral port) in front
-    /// of `service`.
+    /// of `service`, with no per-connection limits.
     pub fn bind(addr: &str, service: Arc<dyn Service>) -> std::io::Result<WireServer> {
         let listener = TcpListener::bind(addr)?;
         let addr = listener.local_addr()?;
-        Ok(WireServer { listener, addr, service })
+        Ok(WireServer { listener, addr, service, max_requests_per_conn: None })
+    }
+
+    /// Cap how many requests one connection may submit. The request that
+    /// exceeds the budget is answered `busy` and the connection closes.
+    pub fn with_request_budget(mut self, budget: Option<u64>) -> WireServer {
+        self.max_requests_per_conn = budget;
+        self
     }
 
     /// The actual bound address (resolves `:0` to the ephemeral port).
@@ -92,9 +114,10 @@ impl WireServer {
             let service = Arc::clone(&self.service);
             let stop = Arc::clone(&stop);
             let self_addr = self.addr;
+            let budget = self.max_requests_per_conn;
             let h = thread::Builder::new()
                 .name("fuseconv-conn".into())
-                .spawn(move || handle_conn(stream, service, stop, self_addr))
+                .spawn(move || handle_conn(stream, service, stop, self_addr, budget))
                 .expect("spawn connection handler");
             handlers.push(h);
         }
@@ -106,7 +129,7 @@ impl WireServer {
 }
 
 /// Best-effort id recovery from a frame that failed full decoding, so
-/// the bad_request response still correlates with the client's request.
+/// the bad_request frame still correlates with the client's request.
 fn salvage_id(line: &str) -> u64 {
     parse_json(line)
         .ok()
@@ -114,25 +137,53 @@ fn salvage_id(line: &str) -> u64 {
         .unwrap_or(0)
 }
 
+/// Drain one ticket's frame stream into the connection's shared writer
+/// channel, tagging every frame with the request id. A forwarder always
+/// terminates the stream with a `final` frame, even when the service
+/// wedges (typed `deadline`) or drops the sink (typed `shutdown`).
+fn forward_stream(mut ticket: Ticket, out: mpsc::Sender<(u64, Frame)>) {
+    let id = ticket.id();
+    loop {
+        match ticket.recv_deadline(MAX_TICKET_WAIT) {
+            Ok(frame) => {
+                let last = frame.is_final();
+                if out.send((id, frame)).is_err() || last {
+                    break;
+                }
+            }
+            Err(RecvError::Deadline) => {
+                let _ = out.send((id, Frame::Final(Err(ServeError::Deadline))));
+                break;
+            }
+            Err(RecvError::Disconnected) => {
+                let _ = out.send((id, Frame::Final(Err(ServeError::Shutdown))));
+                break;
+            }
+        }
+    }
+}
+
 fn handle_conn(
     stream: TcpStream,
     service: Arc<dyn Service>,
     stop: Arc<AtomicBool>,
     self_addr: SocketAddr,
+    budget: Option<u64>,
 ) {
     // Reads poll: an idle connection must notice the shutdown latch and
     // close instead of parking `run`'s join forever.
     let _ = stream.set_read_timeout(Some(READ_POLL));
     let Ok(read_half) = stream.try_clone() else { return };
     let mut reader = BufReader::new(read_half);
-    let (wtx, wrx) = mpsc::channel::<Ticket>();
+    // One writer thread serializes interleaved frames from every
+    // in-flight stream (plus immediate error frames from the reader).
+    let (wtx, wrx) = mpsc::channel::<(u64, Frame)>();
     let mut write_half = stream;
     let writer = thread::Builder::new()
         .name("fuseconv-conn-write".into())
         .spawn(move || {
-            for ticket in wrx {
-                let resp = ticket.recv_deadline(MAX_TICKET_WAIT);
-                let mut line = encode_response(&resp);
+            for (id, frame) in wrx {
+                let mut line = encode_frame(id, &frame);
                 line.push('\n');
                 if write_half.write_all(line.as_bytes()).is_err() {
                     break;
@@ -143,6 +194,10 @@ fn handle_conn(
         })
         .expect("spawn connection writer");
 
+    // In-flight stream table: one forwarder per admitted request; all are
+    // joined before the connection closes so streams are never cut off.
+    let mut streams: Vec<thread::JoinHandle<()>> = Vec::new();
+    let mut served: u64 = 0;
     let mut saw_shutdown = false;
     // One persistent buffer: a timed-out read keeps any partial frame,
     // and the next pass appends the rest (no mid-frame desync).
@@ -157,18 +212,92 @@ fn handle_conn(
                 }
                 let line = buf.trim();
                 if !line.is_empty() {
-                    let ticket = match super::wire::decode_request(line) {
+                    match super::wire::decode_request(line) {
                         Ok(req) => {
+                            // Only decoded requests count against the
+                            // budget (malformed lines answer bad_request
+                            // without consuming a slot).
+                            served += 1;
+                            if budget.is_some_and(|b| served > b) {
+                                // Budget exhausted: typed Busy, hang up.
+                                let _ = wtx
+                                    .send((req.id, Frame::Final(Err(ServeError::Busy))));
+                                break;
+                            }
                             saw_shutdown = matches!(req.body, RequestBody::Shutdown);
-                            service.call(req)
+                            let mut ticket = service.call(req);
+                            // Fast path: admission-time errors and
+                            // immediate replies (Busy, Stats, Zoo, the
+                            // Shutdown ack, ...) already hold their
+                            // terminal frame — forward it without
+                            // spawning a per-request thread.
+                            let still_streaming = match ticket.try_recv() {
+                                Ok(Some(frame)) if frame.is_final() => {
+                                    let _ = wtx.send((ticket.id(), frame));
+                                    false
+                                }
+                                Ok(Some(frame)) => {
+                                    // stream already flowing: pass the
+                                    // first frame on, forward the rest
+                                    // from a dedicated thread below
+                                    let _ = wtx.send((ticket.id(), frame));
+                                    true
+                                }
+                                Ok(None) => true,
+                                Err(_) => {
+                                    let _ = wtx.send((
+                                        ticket.id(),
+                                        Frame::Final(Err(ServeError::Shutdown)),
+                                    ));
+                                    false
+                                }
+                            };
+                            if still_streaming {
+                                let out = wtx.clone();
+                                // The ticket rides in a take-slot so it
+                                // survives a failed spawn (the closure —
+                                // and anything moved into it — is
+                                // dropped on spawn error).
+                                let slot = Arc::new(std::sync::Mutex::new(Some(ticket)));
+                                let slot2 = Arc::clone(&slot);
+                                match thread::Builder::new()
+                                    .name("fuseconv-conn-stream".into())
+                                    .spawn(move || {
+                                        if let Some(t) = slot2.lock().unwrap().take() {
+                                            forward_stream(t, out);
+                                        }
+                                    }) {
+                                    Ok(h) => streams.push(h),
+                                    // Thread exhaustion: forward inline —
+                                    // pipelining on this connection
+                                    // stalls, but the request is still
+                                    // answered.
+                                    Err(_) => {
+                                        if let Some(t) = slot.lock().unwrap().take() {
+                                            forward_stream(t, wtx.clone());
+                                        }
+                                    }
+                                }
+                            }
+                            // Reap completed forwarders so a long-lived
+                            // connection doesn't accumulate unjoined
+                            // threads one per request served.
+                            let mut live = Vec::with_capacity(streams.len());
+                            for h in streams.drain(..) {
+                                if h.is_finished() {
+                                    let _ = h.join();
+                                } else {
+                                    live.push(h);
+                                }
+                            }
+                            streams = live;
                         }
-                        Err(e) => Ticket::immediate(Response::err(
-                            salvage_id(line),
-                            ServeError::BadRequest(e.to_string()),
-                        )),
-                    };
-                    if wtx.send(ticket).is_err() {
-                        break;
+                        Err(e) => {
+                            let _ = wtx.send((
+                                salvage_id(line),
+                                Frame::Final(Err(ServeError::BadRequest(e.to_string()))),
+                            ));
+                        }
                     }
                 }
                 buf.clear();
@@ -184,8 +313,12 @@ fn handle_conn(
             Err(_) => break,
         }
     }
-    // Flush everything queued (including the Shutdown ack), then release
-    // the accept loop with a self-dial if we are the closing connection.
+    // Let every in-flight stream finish (including the Shutdown ack),
+    // flush the writer, then release the accept loop with a self-dial if
+    // we are the closing connection.
+    for h in streams {
+        let _ = h.join();
+    }
     drop(wtx);
     let _ = writer.join();
     if saw_shutdown {
@@ -215,14 +348,20 @@ fn dial_addr(mut addr: SocketAddr) -> SocketAddr {
 // Client
 // ---------------------------------------------------------------------------
 
-/// Blocking wire client: pipelined `send`/`recv` over one connection
-/// (responses arrive in request order), for scripted load and tests.
+/// Blocking wire client for protocol v2: pipelined `send` plus
+/// id-demultiplexed frame receives over one connection. Frames for
+/// requests other than the one being awaited are parked in per-id queues
+/// and handed out when their request is polled, so concurrent streams on
+/// one connection reassemble independently.
 pub struct WireClient {
     reader: BufReader<TcpStream>,
     stream: TcpStream,
-    /// Partial frame carried across a timed-out `recv`, so a retry
+    /// Partial frame carried across a timed-out read, so a retry
     /// resumes mid-frame instead of desynchronizing the stream.
     pending: String,
+    /// Demux table: frames read off the wire while waiting on a
+    /// different request id.
+    parked: HashMap<u64, VecDeque<Frame>>,
 }
 
 impl WireClient {
@@ -241,7 +380,12 @@ impl WireClient {
             s
         };
         let reader = BufReader::new(stream.try_clone()?);
-        Ok(WireClient { reader, stream, pending: String::new() })
+        Ok(WireClient {
+            reader,
+            stream,
+            pending: String::new(),
+            parked: HashMap::new(),
+        })
     }
 
     pub fn send(&mut self, req: &Request) -> std::io::Result<()> {
@@ -251,17 +395,17 @@ impl WireClient {
         self.stream.flush()
     }
 
-    /// Receive one response frame. A timed-out read returns an error but
-    /// keeps the partially-read frame buffered — calling `recv` again
-    /// continues from where the stream left off.
-    pub fn recv(&mut self) -> Result<Response, WireError> {
+    /// Read the next frame off the wire (no demux). A timed-out read
+    /// returns an error but keeps the partially-read frame buffered —
+    /// calling again continues from where the stream left off.
+    fn read_frame(&mut self) -> Result<(u64, Frame), WireError> {
         match self.reader.read_line(&mut self.pending) {
             Ok(0) => {
                 self.pending.clear();
                 Err(WireError("connection closed by server".into()))
             }
             Ok(_) => {
-                let result = decode_response(self.pending.trim_end());
+                let result = decode_frame(self.pending.trim_end());
                 self.pending.clear();
                 result
             }
@@ -270,9 +414,67 @@ impl WireClient {
         }
     }
 
+    /// Pop the oldest parked frame for `id`, dropping the queue once it
+    /// drains so the demux table never grows with finished request ids.
+    fn unpark(&mut self, id: u64) -> Option<Frame> {
+        let q = self.parked.get_mut(&id)?;
+        let frame = q.pop_front();
+        if q.is_empty() {
+            self.parked.remove(&id);
+        }
+        frame
+    }
+
+    /// Next frame for *any* request: parked frames first (oldest id
+    /// order is not defined), then the wire. The workhorse for streaming
+    /// consumers that track several requests at once.
+    pub fn recv_any(&mut self) -> Result<(u64, Frame), WireError> {
+        let parked_id = self
+            .parked
+            .iter()
+            .find(|(_, q)| !q.is_empty())
+            .map(|(&id, _)| id);
+        if let Some(id) = parked_id {
+            let frame = self.unpark(id).expect("non-empty parked queue");
+            return Ok((id, frame));
+        }
+        self.read_frame()
+    }
+
+    /// Next frame of request `id`'s stream, demultiplexing: frames for
+    /// other ids encountered on the way are parked for their own polls.
+    pub fn recv_frame(&mut self, id: u64) -> Result<Frame, WireError> {
+        if let Some(frame) = self.unpark(id) {
+            return Ok(frame);
+        }
+        loop {
+            let (got, frame) = self.read_frame()?;
+            if got == id {
+                return Ok(frame);
+            }
+            self.parked.entry(got).or_default().push_back(frame);
+        }
+    }
+
+    /// Drain request `id`'s stream to its terminal frame and collapse it
+    /// into one [`Response`] (streamed sweep rows are merged, mirroring
+    /// [`Ticket::wait`]).
+    pub fn recv_response(&mut self, id: u64) -> Result<Response, WireError> {
+        let mut rows: Vec<SweepRow> = Vec::new();
+        loop {
+            match self.recv_frame(id)? {
+                Frame::Progress { .. } => {}
+                Frame::Row(row) => rows.push(row),
+                Frame::Final(result) => {
+                    return Ok(Response { id, result: collapse_stream(result, rows) });
+                }
+            }
+        }
+    }
+
     pub fn roundtrip(&mut self, req: &Request) -> Result<Response, WireError> {
         self.send(req).map_err(|e| WireError(format!("send: {e}")))?;
-        self.recv()
+        self.recv_response(req.id)
     }
 }
 
@@ -295,9 +497,16 @@ mod tests {
     use crate::sim::FuseVariant;
 
     fn start_sim_frontend() -> (String, thread::JoinHandle<()>) {
+        start_sim_frontend_budget(None)
+    }
+
+    fn start_sim_frontend_budget(
+        budget: Option<u64>,
+    ) -> (String, thread::JoinHandle<()>) {
         let router = Router::new(SimServer::new(2));
-        let server =
-            WireServer::bind("127.0.0.1:0", Arc::new(router)).expect("bind ephemeral");
+        let server = WireServer::bind("127.0.0.1:0", Arc::new(router))
+            .expect("bind ephemeral")
+            .with_request_budget(budget);
         let addr = server.local_addr().to_string();
         let h = thread::spawn(move || server.run().expect("serve"));
         (addr, h)
@@ -332,8 +541,8 @@ mod tests {
         }
 
         // malformed frame answers bad_request without dropping the conn
-        self::send_raw(&mut client, "{\"v\":1,\"id\":42,\"op\":\"nope\"}\n");
-        let resp = client.recv().expect("error response");
+        self::send_raw(&mut client, "{\"v\":2,\"id\":42,\"op\":\"nope\"}\n");
+        let resp = client.recv_response(42).expect("error response");
         assert_eq!(resp.id, 42);
         assert!(matches!(resp.result, Err(ServeError::BadRequest(_))));
 
@@ -359,7 +568,10 @@ mod tests {
     }
 
     #[test]
-    fn pipelined_requests_reply_in_order() {
+    fn pipelined_requests_each_get_their_own_reply() {
+        // v2 drops the whole-response FIFO guarantee (streams interleave);
+        // what must hold is that every id is answered exactly once and
+        // demux hands each poll the right stream.
         let (addr, h) = start_sim_frontend();
         let mut client = WireClient::connect(&addr, Duration::from_secs(60)).unwrap();
         for id in 10..14u64 {
@@ -374,12 +586,36 @@ mod tests {
                 ))
                 .unwrap();
         }
-        for id in 10..14u64 {
-            let resp = client.recv().expect("pipelined response");
-            assert_eq!(resp.id, id, "responses must be FIFO per connection");
+        // redeem out of order on purpose: the demux table must park and
+        // replay frames read while waiting on a different id
+        for id in (10..14u64).rev() {
+            let resp = client.recv_response(id).expect("pipelined response");
+            assert_eq!(resp.id, id);
             assert!(resp.is_ok());
         }
         let _ = client.roundtrip(&Request::new(99, RequestBody::Shutdown));
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn request_budget_answers_busy_and_closes() {
+        let (addr, h) = start_sim_frontend_budget(Some(2));
+        let mut client = WireClient::connect(&addr, Duration::from_secs(30)).unwrap();
+        for id in [1, 2] {
+            let resp = client.roundtrip(&Request::new(id, RequestBody::Stats)).unwrap();
+            assert!(resp.is_ok(), "within budget: {resp:?}");
+        }
+        // third request: typed Busy, then the server hangs up
+        let resp = client.roundtrip(&Request::new(3, RequestBody::Stats)).unwrap();
+        assert_eq!(resp.result, Err(ServeError::Busy));
+        assert!(
+            client.roundtrip(&Request::new(4, RequestBody::Stats)).is_err(),
+            "connection must be closed after the budget bounce"
+        );
+        // a fresh connection gets a fresh budget
+        let mut c2 = WireClient::connect(&addr, Duration::from_secs(30)).unwrap();
+        assert!(c2.roundtrip(&Request::new(5, RequestBody::Stats)).unwrap().is_ok());
+        let _ = c2.roundtrip(&Request::new(6, RequestBody::Shutdown));
         h.join().unwrap();
     }
 }

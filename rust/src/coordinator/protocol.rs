@@ -1,27 +1,39 @@
 //! The unified serving protocol (DESIGN.md S12): one versioned, typed
-//! request/response vocabulary shared by every serving surface — the
+//! request/frame vocabulary shared by every serving surface — the
 //! in-process [`Service`] trait implemented by the batched inference
 //! server and the cache-backed simulation pool, and the wire-level
 //! TCP/JSON frontend in [`net`](super::net).
 //!
+//! Protocol v2 is a *streaming* contract: a request is answered by a
+//! stream of [`Frame`]s keyed by the request's id — zero or more
+//! [`Frame::Progress`]/[`Frame::Row`] frames followed by exactly one
+//! [`Frame::Final`]. Point queries (Infer/Simulate/Stats/Zoo) emit just
+//! the `Final`; a `Sweep` streams each grid row as the sweep engine
+//! completes it, so large grids never buffer into one giant frame.
+//!
 //! Design rules:
-//! * every request carries a client-chosen `id` echoed on its response,
-//!   so replies can be matched over pipelined/wire transports;
+//! * every request carries a client-chosen `id` echoed on every frame of
+//!   its reply stream, so frames from concurrent requests interleave
+//!   safely on one pipelined/wire transport;
 //! * deadlines are explicit (`deadline_ms` from admission) and produce a
 //!   typed [`ServeError::Deadline`], never a hang;
-//! * admission control is part of the contract: a full bounded queue
-//!   answers [`ServeError::Busy`] immediately;
+//! * admission control is part of the contract, and is *priority-tiered*:
+//!   interactive traffic (`Infer`/`Simulate`/`Stats`/`Zoo`) and batch
+//!   traffic (`Sweep`) are admitted through separate bounded lanes, so a
+//!   full batch lane answers [`ServeError::Busy`] without starving point
+//!   queries (see [`RequestBody::priority`]);
 //! * models are addressed by zoo name *or* shipped inline as layer
 //!   specs, so remote clients need no access to the zoo crate.
 
 use crate::nn::{models, Layer, Network, OpKind};
 use crate::sim::{Dataflow, FuseVariant, MappingPolicy, NetworkSim, SimConfig};
 use std::sync::mpsc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Wire/protocol version; bumped on any incompatible change to the
-/// request or response schema.
-pub const PROTOCOL_VERSION: u32 = 1;
+/// request or frame schema. v2 replaced the one-shot response with the
+/// frame-stream grammar (`progress*`/`row*` then one `final`).
+pub const PROTOCOL_VERSION: u32 = 2;
 
 /// Largest accepted PE-array side length in a request config — a sanity
 /// bound on remote input, far above any hardware the paper models.
@@ -82,6 +94,26 @@ impl RequestBody {
             RequestBody::Shutdown => "shutdown",
         }
     }
+
+    /// Which admission lane this operation rides: whole-grid `Sweep`s are
+    /// batch traffic; everything else is interactive. The lanes have
+    /// separate bounds so EA/NAS sweep populations can never starve
+    /// dashboard point queries.
+    pub fn priority(&self) -> Priority {
+        match self {
+            RequestBody::Sweep { .. } => Priority::Batch,
+            _ => Priority::Interactive,
+        }
+    }
+}
+
+/// Admission lane of a request (see [`RequestBody::priority`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Priority {
+    /// Point queries: single Infer/Simulate, Stats, Zoo, Shutdown.
+    Interactive,
+    /// Whole-grid traffic: Sweep (EA/NAS populations, table reproduction).
+    Batch,
 }
 
 /// How a simulation request names its network: by zoo name, or as an
@@ -392,8 +424,55 @@ impl std::fmt::Display for ServeError {
 impl std::error::Error for ServeError {}
 
 // ---------------------------------------------------------------------------
-// Service + Ticket
+// Frames, Service + Ticket
 // ---------------------------------------------------------------------------
+
+/// One element of a reply stream. A request's stream is
+/// `Progress*/Row*` interleaved, then exactly one `Final`.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Frame {
+    /// Completion counter for a multi-frame request (`done`/`total`
+    /// grid cells). Servers emit one up front (`done == 0`) so clients
+    /// learn the grid size before the first row lands.
+    Progress { done: u64, total: u64 },
+    /// One incremental sweep grid row, emitted in plan order.
+    Row(SweepRow),
+    /// Terminal frame: the typed result (or error) that ends the stream.
+    Final(Result<Reply, ServeError>),
+}
+
+impl Frame {
+    pub fn is_final(&self) -> bool {
+        matches!(self, Frame::Final(_))
+    }
+}
+
+/// The protocol's stream-collapse rule, shared by every consumer that
+/// folds a frame stream into one result ([`Ticket::wait`] in-process,
+/// `WireClient::recv_response` on the wire): a streamed sweep terminates
+/// with `Done` and its rows are reassembled into [`Reply::Sweep`]; any
+/// other terminal result passes through unchanged.
+pub fn collapse_stream(
+    result: Result<Reply, ServeError>,
+    rows: Vec<SweepRow>,
+) -> Result<Reply, ServeError> {
+    match result {
+        Ok(Reply::Done) if !rows.is_empty() => Ok(Reply::Sweep(rows)),
+        other => other,
+    }
+}
+
+/// Receive failure on a [`Ticket`] — distinct cases so callers can tell
+/// "nothing arrived within the timeout" (retryable) from "the serving
+/// side dropped the stream" (terminal).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RecvError {
+    /// The timeout expired with no frame; the stream is still live.
+    Deadline,
+    /// The service dropped its sink without a `Final` (shutdown/crash),
+    /// or the stream already delivered its `Final`.
+    Disconnected,
+}
 
 /// Anything that can serve protocol requests. Both halves of the
 /// coordinator implement this — the batched inference [`Server`]
@@ -402,31 +481,66 @@ impl std::error::Error for ServeError {}
 /// TCP listener.
 ///
 /// `call` never blocks on the work itself: it performs admission control
-/// and returns a [`Ticket`] the caller redeems for the [`Response`].
+/// and returns a [`Ticket`] the caller redeems for the reply stream.
 pub trait Service: Send + Sync {
     fn call(&self, req: Request) -> Ticket;
 }
 
-/// A claim on one in-flight request: wraps the reply channel with
-/// deadline-aware receive semantics so callers can never hang forever.
+/// The serving side of one reply stream: emits frames into the matching
+/// [`Ticket`]. Cheap to clone (worker threads can share it). Send
+/// failures are deliberately swallowed — a client that dropped its
+/// ticket is not the server's problem.
+#[derive(Debug, Clone)]
+pub struct FrameSink {
+    id: u64,
+    tx: mpsc::Sender<Frame>,
+}
+
+impl FrameSink {
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Emit a progress frame; `false` if the client hung up.
+    pub fn progress(&self, done: u64, total: u64) -> bool {
+        self.tx.send(Frame::Progress { done, total }).is_ok()
+    }
+
+    /// Emit one sweep row; `false` if the client hung up.
+    pub fn row(&self, row: SweepRow) -> bool {
+        self.tx.send(Frame::Row(row)).is_ok()
+    }
+
+    /// Terminate the stream with its final result. Must be called exactly
+    /// once; dropping the sink without it surfaces as a disconnect.
+    pub fn finish(&self, result: Result<Reply, ServeError>) {
+        let _ = self.tx.send(Frame::Final(result));
+    }
+}
+
+/// A claim on one in-flight request: the receiving end of its frame
+/// stream, with deadline-aware receive semantics so callers can never
+/// hang forever.
 #[derive(Debug)]
 pub struct Ticket {
     id: u64,
-    rx: mpsc::Receiver<Response>,
+    rx: mpsc::Receiver<Frame>,
+    /// Set once `Final` has been delivered; later receives disconnect.
+    finished: bool,
 }
 
 impl Ticket {
-    /// A ticket plus the sender the service uses to complete it.
-    pub fn pending(id: u64) -> (Ticket, mpsc::Sender<Response>) {
+    /// A ticket plus the sink the service uses to stream into it.
+    pub fn pending(id: u64) -> (Ticket, FrameSink) {
         let (tx, rx) = mpsc::channel();
-        (Ticket { id, rx }, tx)
+        (Ticket { id, rx, finished: false }, FrameSink { id, tx })
     }
 
-    /// A ticket that is already resolved (admission-time errors and
-    /// immediate replies).
+    /// A ticket whose stream is already terminal (admission-time errors
+    /// and immediate replies).
     pub fn immediate(resp: Response) -> Ticket {
-        let (ticket, tx) = Ticket::pending(resp.id);
-        let _ = tx.send(resp);
+        let (ticket, sink) = Ticket::pending(resp.id);
+        sink.finish(resp.result);
         ticket
     }
 
@@ -434,29 +548,90 @@ impl Ticket {
         self.id
     }
 
-    /// Block until the response arrives. If the serving side dropped the
-    /// reply channel without answering, this is a [`ServeError::Shutdown`].
-    pub fn wait(self) -> Response {
-        let id = self.id;
-        self.rx.recv().unwrap_or_else(|_| Response::err(id, ServeError::Shutdown))
-    }
-
-    /// Block at most `timeout`; expiry yields [`ServeError::Deadline`]
-    /// (the work may still complete server-side, but the claim is gone).
-    pub fn recv_deadline(self, timeout: Duration) -> Response {
-        let id = self.id;
+    /// Block at most `timeout` for the next frame. After the `Final`
+    /// frame has been delivered the stream is over: further calls return
+    /// [`RecvError::Disconnected`].
+    pub fn recv_deadline(&mut self, timeout: Duration) -> Result<Frame, RecvError> {
+        if self.finished {
+            return Err(RecvError::Disconnected);
+        }
         match self.rx.recv_timeout(timeout) {
-            Ok(resp) => resp,
-            Err(mpsc::RecvTimeoutError::Timeout) => Response::err(id, ServeError::Deadline),
-            Err(mpsc::RecvTimeoutError::Disconnected) => {
-                Response::err(id, ServeError::Shutdown)
+            Ok(frame) => {
+                self.finished = frame.is_final();
+                Ok(frame)
             }
+            Err(mpsc::RecvTimeoutError::Timeout) => Err(RecvError::Deadline),
+            Err(mpsc::RecvTimeoutError::Disconnected) => Err(RecvError::Disconnected),
         }
     }
 
-    /// Non-blocking poll; `None` while the work is still in flight.
-    pub fn try_recv(&self) -> Option<Response> {
-        self.rx.try_recv().ok()
+    /// Non-blocking poll: `Ok(None)` while the stream is live but idle.
+    pub fn try_recv(&mut self) -> Result<Option<Frame>, RecvError> {
+        if self.finished {
+            return Err(RecvError::Disconnected);
+        }
+        match self.rx.try_recv() {
+            Ok(frame) => {
+                self.finished = frame.is_final();
+                Ok(Some(frame))
+            }
+            Err(mpsc::TryRecvError::Empty) => Ok(None),
+            Err(mpsc::TryRecvError::Disconnected) => Err(RecvError::Disconnected),
+        }
+    }
+
+    /// Drain the whole stream and collapse it into one [`Response`]:
+    /// `Row` frames are merged (a streamed sweep that ends in `Done`
+    /// becomes [`Reply::Sweep`] with the rows in emission order), and a
+    /// dropped sink becomes [`ServeError::Shutdown`].
+    pub fn wait(self) -> Response {
+        self.drain(None)
+    }
+
+    /// As [`Ticket::wait`], bounded by an overall `timeout`; expiry
+    /// yields a [`ServeError::Deadline`] response (the work may still
+    /// complete server-side, but the claim is gone).
+    pub fn wait_deadline(self, timeout: Duration) -> Response {
+        self.drain(Some(Instant::now() + timeout))
+    }
+
+    /// Block indefinitely for the next frame (no timeout path).
+    fn recv_blocking(&mut self) -> Result<Frame, RecvError> {
+        if self.finished {
+            return Err(RecvError::Disconnected);
+        }
+        match self.rx.recv() {
+            Ok(frame) => {
+                self.finished = frame.is_final();
+                Ok(frame)
+            }
+            Err(mpsc::RecvError) => Err(RecvError::Disconnected),
+        }
+    }
+
+    fn drain(mut self, deadline: Option<Instant>) -> Response {
+        let id = self.id;
+        let mut rows: Vec<SweepRow> = Vec::new();
+        loop {
+            let received = match deadline {
+                None => self.recv_blocking(),
+                Some(d) => match d.checked_duration_since(Instant::now()) {
+                    Some(left) => self.recv_deadline(left),
+                    None => return Response::err(id, ServeError::Deadline),
+                },
+            };
+            match received {
+                Ok(Frame::Progress { .. }) => {}
+                Ok(Frame::Row(row)) => rows.push(row),
+                Ok(Frame::Final(result)) => {
+                    return Response { id, result: collapse_stream(result, rows) };
+                }
+                Err(RecvError::Deadline) => return Response::err(id, ServeError::Deadline),
+                Err(RecvError::Disconnected) => {
+                    return Response::err(id, ServeError::Shutdown)
+                }
+            }
+        }
     }
 }
 
@@ -556,25 +731,97 @@ mod tests {
         assert_eq!(resp.id, 7);
         assert_eq!(resp.result, Err(ServeError::Busy));
 
-        let (t, tx) = Ticket::pending(9);
-        assert!(t.try_recv().is_none());
-        tx.send(Response::ok(9, Reply::Done)).unwrap();
+        let (mut t, sink) = Ticket::pending(9);
+        assert_eq!(t.try_recv(), Ok(None));
+        sink.finish(Ok(Reply::Done));
         assert_eq!(t.wait(), Response::ok(9, Reply::Done));
     }
 
     #[test]
-    fn ticket_recv_deadline_times_out_typed() {
-        let (t, _tx) = Ticket::pending(3);
-        let resp = t.recv_deadline(Duration::from_millis(5));
-        assert_eq!(resp.result, Err(ServeError::Deadline));
-        assert_eq!(resp.id, 3);
+    fn ticket_recv_deadline_distinguishes_timeout_from_disconnect() {
+        // live-but-idle stream: a timed-out recv is Deadline, not a
+        // disconnect — the caller may retry.
+        let (mut t, sink) = Ticket::pending(3);
+        assert_eq!(t.recv_deadline(Duration::from_millis(5)), Err(RecvError::Deadline));
+        sink.finish(Ok(Reply::Done));
+        assert!(matches!(
+            t.recv_deadline(Duration::from_millis(100)),
+            Ok(Frame::Final(Ok(Reply::Done)))
+        ));
+        // stream over: further receives are Disconnected
+        assert_eq!(t.recv_deadline(Duration::from_millis(5)), Err(RecvError::Disconnected));
+
+        // dropped sink without a Final: Disconnected, never Deadline
+        let (mut t, sink) = Ticket::pending(4);
+        drop(sink);
+        assert_eq!(t.recv_deadline(Duration::from_secs(5)), Err(RecvError::Disconnected));
     }
 
     #[test]
-    fn ticket_dropped_sender_is_shutdown() {
-        let (t, tx) = Ticket::pending(4);
-        drop(tx);
+    fn ticket_dropped_sink_waits_as_shutdown() {
+        let (t, sink) = Ticket::pending(4);
+        drop(sink);
         assert_eq!(t.wait().result, Err(ServeError::Shutdown));
+    }
+
+    #[test]
+    fn ticket_wait_merges_streamed_rows() {
+        let (t, sink) = Ticket::pending(11);
+        let row = SweepRow {
+            network: "MobileNet-V2".into(),
+            variant: FuseVariant::Half,
+            rows: 16,
+            cols: 16,
+            dataflow: Dataflow::OutputStationary,
+            stos: true,
+            total_cycles: 42,
+            latency_ms: 0.5,
+        };
+        assert!(sink.progress(0, 2));
+        assert!(sink.row(row.clone()));
+        assert!(sink.progress(1, 2));
+        let mut row2 = row.clone();
+        row2.rows = 32;
+        assert!(sink.row(row2.clone()));
+        sink.finish(Ok(Reply::Done));
+        match t.wait().result {
+            Ok(Reply::Sweep(rows)) => assert_eq!(rows, vec![row, row2]),
+            other => panic!("expected merged sweep rows, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn ticket_try_recv_streams_in_order() {
+        let (mut t, sink) = Ticket::pending(5);
+        assert_eq!(t.try_recv(), Ok(None));
+        sink.progress(1, 3);
+        sink.finish(Ok(Reply::Done));
+        assert_eq!(t.try_recv(), Ok(Some(Frame::Progress { done: 1, total: 3 })));
+        assert_eq!(t.try_recv(), Ok(Some(Frame::Final(Ok(Reply::Done)))));
+        assert_eq!(t.try_recv(), Err(RecvError::Disconnected));
+    }
+
+    #[test]
+    fn request_priorities_split_interactive_from_batch() {
+        assert_eq!(RequestBody::Stats.priority(), Priority::Interactive);
+        assert_eq!(
+            RequestBody::Infer { input: vec![] }.priority(),
+            Priority::Interactive
+        );
+        assert_eq!(
+            RequestBody::Simulate {
+                model: ModelSpec::Zoo("mobilenet-v2".into()),
+                variant: FuseVariant::Base,
+                config: ConfigPatch::default(),
+            }
+            .priority(),
+            Priority::Interactive
+        );
+        assert_eq!(
+            RequestBody::Sweep { models: vec![], variants: vec![], configs: vec![] }
+                .priority(),
+            Priority::Batch
+        );
     }
 
     #[test]

@@ -7,25 +7,31 @@
 //!   [`ServeError::Busy`] instead of growing without limit.
 //! * [`SimServer`] — simulation-as-a-service: scenario requests
 //!   (model × variant × config) fan out across the worker pool through
-//!   the sweep engine's shared layer cache, with a bounded in-flight
-//!   window for the same backpressure contract.
+//!   the sweep engine's shared layer cache. Admission is split into two
+//!   priority lanes with separate bounds — interactive `Simulate` point
+//!   queries and batch `Sweep` grids — so EA/NAS sweep traffic can fill
+//!   its lane without ever starving dashboard queries. A `Sweep` is
+//!   served as a *stream*: `Progress`/`Row` frames as the sweep engine
+//!   completes cells (plan order), then a terminal `Done`.
 //! * [`Router`] — one [`Service`] fronting both, used by the TCP/JSON
 //!   frontend (`coordinator::net`) and `fuseconv serve`.
 //!
 //! Both halves speak only protocol types: requests arrive as
-//! [`Request`]s and leave as [`Response`]s through [`Ticket`]s, whether
-//! the caller is in-process or a wire client.
+//! [`Request`]s and leave as [`Frame`](super::protocol::Frame) streams
+//! through [`Ticket`]s, whether the caller is in-process or a wire
+//! client.
 
 use super::batcher::{BatchPolicy, Batcher, Pending};
 use super::protocol::{
-    ConfigPatch, InferReply, ModelSpec, Reply, Request, RequestBody, Response, ServeError,
-    Service, SimSummary, StatsReply, SweepRow, Ticket, ZooEntry, PROTOCOL_VERSION,
+    ConfigPatch, FrameSink, InferReply, ModelSpec, Priority, Reply, Request, RequestBody,
+    Response, ServeError, Service, SimSummary, StatsReply, SweepRow, Ticket, ZooEntry,
+    PROTOCOL_VERSION,
 };
 use crate::exec::Pool;
 use crate::nn::models;
 use crate::sim::{
-    run_sweep, simulate_network_cached, CacheStats, FuseVariant, LayerCache, SweepOutcome,
-    SweepPlan,
+    run_sweep, run_sweep_with, simulate_network_cached, CacheStats, FuseVariant, LayerCache,
+    SweepEvent, SweepOutcome, SweepPlan, SweepRecord,
 };
 use crate::stats::Summary;
 use std::panic::{catch_unwind, AssertUnwindSafe};
@@ -124,12 +130,12 @@ impl ServerStats {
 /// Default bound on the inference admission queue.
 pub const DEFAULT_INFER_QUEUE: usize = 1024;
 
-/// One admitted inference job (internal to the dispatcher).
+/// One admitted inference job (internal to the dispatcher). The reply
+/// sink carries the request id.
 struct InferJob {
-    id: u64,
     input: Vec<f32>,
     deadline: Option<Instant>,
-    reply: mpsc::Sender<Response>,
+    reply: FrameSink,
     accepted: Instant,
 }
 
@@ -214,8 +220,7 @@ impl Service for Server {
                 let deadline =
                     req.deadline_ms.map(|ms| Instant::now() + Duration::from_millis(ms));
                 let (ticket, reply) = Ticket::pending(id);
-                let job =
-                    InferJob { id, input, deadline, reply, accepted: Instant::now() };
+                let job = InferJob { input, deadline, reply, accepted: Instant::now() };
                 match self.tx.try_send(ServerMsg::Req(job)) {
                     Ok(()) => ticket,
                     Err(mpsc::TrySendError::Full(_)) => {
@@ -288,17 +293,13 @@ fn dispatch_loop<E: Engine>(
             let mut live: Vec<Pending<InferJob>> = Vec::with_capacity(batch.len());
             for p in batch {
                 if p.item.input.len() != in_len {
-                    let resp = Response::err(
-                        p.item.id,
-                        ServeError::BadRequest(format!(
-                            "input length {} != engine input length {}",
-                            p.item.input.len(),
-                            in_len
-                        )),
-                    );
-                    let _ = p.item.reply.send(resp);
+                    p.item.reply.finish(Err(ServeError::BadRequest(format!(
+                        "input length {} != engine input length {}",
+                        p.item.input.len(),
+                        in_len
+                    ))));
                 } else if p.item.deadline.is_some_and(|d| now > d) {
-                    let _ = p.item.reply.send(Response::err(p.item.id, ServeError::Deadline));
+                    p.item.reply.finish(Err(ServeError::Deadline));
                 } else {
                     live.push(p);
                 }
@@ -333,7 +334,7 @@ fn dispatch_loop<E: Engine>(
                 stats.served += 1;
                 served.fetch_add(1, Ordering::Relaxed);
                 stats.latencies_us.push(latency_us as f64);
-                let _ = p.item.reply.send(Response::ok(p.item.id, Reply::Infer(reply)));
+                p.item.reply.finish(Ok(Reply::Infer(reply)));
             }
         }
     }
@@ -344,48 +345,26 @@ fn dispatch_loop<E: Engine>(
 // Simulation serving
 // ---------------------------------------------------------------------------
 
-/// Default bound on concurrently admitted simulation jobs.
+/// Default bound on concurrently admitted interactive simulation jobs.
 pub const DEFAULT_SIM_CAPACITY: usize = 256;
 
-/// Simulation-serving handle: protocol requests in, [`Ticket`]s out.
-/// All workers share one sweep-engine layer cache, so a traffic mix that
-/// revisits models/configs (EA populations, dashboard queries, repeated
-/// what-if scenarios) degenerates to cache lookups.
-pub struct SimServer {
-    pool: Arc<Pool>,
-    cache: Arc<LayerCache>,
+/// Default bound on concurrently admitted batch (`Sweep`) jobs. Each
+/// sweep is a whole grid, so the lane is much narrower than the
+/// interactive one.
+pub const DEFAULT_BATCH_CAPACITY: usize = 32;
+
+
+/// One bounded admission lane: a capacity plus its in-flight counter.
+/// The counter is shared (`Arc`) with worker closures that release the
+/// slot on completion.
+struct Lane {
     capacity: usize,
     inflight: Arc<AtomicUsize>,
-    submitted: AtomicU64,
-    completed: Arc<AtomicU64>,
 }
 
-impl SimServer {
-    /// `threads == 0` means one worker per CPU.
-    pub fn new(threads: usize) -> SimServer {
-        SimServer::with_cache(threads, Arc::new(LayerCache::new()))
-    }
-
-    /// Share a cache with other subsystems (sweeps, evaluators).
-    pub fn with_cache(threads: usize, cache: Arc<LayerCache>) -> SimServer {
-        SimServer::with_capacity(threads, cache, DEFAULT_SIM_CAPACITY)
-    }
-
-    /// Explicit admission bound: once `capacity` jobs are in flight,
-    /// further `Simulate`/`Sweep` calls answer [`ServeError::Busy`].
-    pub fn with_capacity(
-        threads: usize,
-        cache: Arc<LayerCache>,
-        capacity: usize,
-    ) -> SimServer {
-        SimServer {
-            pool: Arc::new(Pool::new(threads)),
-            cache,
-            capacity: capacity.max(1),
-            inflight: Arc::new(AtomicUsize::new(0)),
-            submitted: 0.into(),
-            completed: Arc::new(AtomicU64::new(0)),
-        }
+impl Lane {
+    fn new(capacity: usize) -> Lane {
+        Lane { capacity: capacity.max(1), inflight: Arc::new(AtomicUsize::new(0)) }
     }
 
     /// Try to take one admission slot.
@@ -404,6 +383,90 @@ impl SimServer {
                 Ok(_) => return true,
                 Err(actual) => cur = actual,
             }
+        }
+    }
+}
+
+/// Simulation-serving handle: protocol requests in, [`Ticket`] frame
+/// streams out. All workers share one sweep-engine layer cache, so a
+/// traffic mix that revisits models/configs (EA populations, dashboard
+/// queries, repeated what-if scenarios) degenerates to cache lookups.
+///
+/// Admission is two-lane (see [`RequestBody::priority`]): interactive
+/// `Simulate` point queries and batch `Sweep` grids are bounded
+/// separately, so a lane full of sweeps still admits point queries. The
+/// isolation holds at *execution* too, not just admission: point
+/// queries run on a dedicated pool (`ipool`, half the batch width), so
+/// they never queue behind the hundreds of grid cells an admitted sweep
+/// fans out onto the batch pool.
+pub struct SimServer {
+    /// Batch pool: sweep grid cells (and in-process `sweep()` callers).
+    pool: Arc<Pool>,
+    /// Interactive pool: `Simulate` point queries only.
+    ipool: Arc<Pool>,
+    cache: Arc<LayerCache>,
+    interactive: Lane,
+    batch: Lane,
+    submitted: AtomicU64,
+    completed: Arc<AtomicU64>,
+}
+
+impl SimServer {
+    /// `threads == 0` means one worker per CPU.
+    pub fn new(threads: usize) -> SimServer {
+        SimServer::with_cache(threads, Arc::new(LayerCache::new()))
+    }
+
+    /// Share a cache with other subsystems (sweeps, evaluators).
+    pub fn with_cache(threads: usize, cache: Arc<LayerCache>) -> SimServer {
+        SimServer::with_lanes(threads, cache, DEFAULT_SIM_CAPACITY, DEFAULT_BATCH_CAPACITY)
+    }
+
+    /// Explicit *interactive* admission bound (the batch lane keeps its
+    /// default): once `capacity` point queries are in flight, further
+    /// `Simulate` calls answer [`ServeError::Busy`].
+    pub fn with_capacity(
+        threads: usize,
+        cache: Arc<LayerCache>,
+        capacity: usize,
+    ) -> SimServer {
+        SimServer::with_lanes(threads, cache, capacity, DEFAULT_BATCH_CAPACITY)
+    }
+
+    /// Both lane bounds explicit: `interactive` bounds `Simulate` point
+    /// queries, `batch` bounds in-flight `Sweep` grids. A full lane
+    /// answers [`ServeError::Busy`] for its own traffic only. Admission
+    /// is always bounded — capacities are clamped to ≥ 1, there is no
+    /// "unlimited" setting.
+    pub fn with_lanes(
+        threads: usize,
+        cache: Arc<LayerCache>,
+        interactive: usize,
+        batch: usize,
+    ) -> SimServer {
+        let pool = Arc::new(Pool::new(threads));
+        // Half the batch width (≥2): wide enough that point-query-only
+        // traffic keeps real parallelism, small enough that the extra
+        // workers are a bounded oversubscription while a sweep runs.
+        let ipool = Arc::new(Pool::new((pool.threads() / 2).max(2)));
+        SimServer {
+            pool,
+            ipool,
+            cache,
+            interactive: Lane::new(interactive),
+            batch: Lane::new(batch),
+            submitted: 0.into(),
+            completed: Arc::new(AtomicU64::new(0)),
+        }
+    }
+
+    /// The admission lane for a given request class — [`RequestBody::priority`]
+    /// is the protocol's lane-selection contract, and this is its one
+    /// consumer, so the two cannot drift.
+    fn lane(&self, priority: Priority) -> &Lane {
+        match priority {
+            Priority::Interactive => &self.interactive,
+            Priority::Batch => &self.batch,
         }
     }
 
@@ -448,17 +511,20 @@ impl Service for SimServer {
     fn call(&self, req: Request) -> Ticket {
         let id = req.id;
         let deadline = req.deadline_ms.map(|ms| Instant::now() + Duration::from_millis(ms));
+        let lane = self.lane(req.body.priority());
         match req.body {
             RequestBody::Simulate { model, variant, config } => {
-                if !self.admit() {
+                // Interactive lane: a full batch lane never bounces this.
+                if !lane.admit() {
                     return Ticket::immediate(Response::err(id, ServeError::Busy));
                 }
                 self.submitted.fetch_add(1, Ordering::Relaxed);
-                let (ticket, reply) = Ticket::pending(id);
+                let (ticket, sink) = Ticket::pending(id);
                 let cache = Arc::clone(&self.cache);
-                let inflight = Arc::clone(&self.inflight);
+                let inflight = Arc::clone(&lane.inflight);
                 let completed = Arc::clone(&self.completed);
-                self.pool.spawn(move || {
+                // Dedicated interactive pool: never behind sweep cells.
+                self.ipool.spawn(move || {
                     // Unwind guard: a panicking scenario must neither kill
                     // the pool worker nor leak its admission slot.
                     let result = catch_unwind(AssertUnwindSafe(|| {
@@ -471,19 +537,20 @@ impl Service for SimServer {
                     inflight.fetch_sub(1, Ordering::Release);
                     // The client may have hung up (dropped the ticket);
                     // that is not the server's problem.
-                    let _ = reply.send(Response { id, result: result.map(Reply::Sim) });
+                    sink.finish(result.map(Reply::Sim));
                 });
                 ticket
             }
             RequestBody::Sweep { models, variants, configs } => {
-                if !self.admit() {
+                // Batch lane: sweeps only compete with other sweeps.
+                if !lane.admit() {
                     return Ticket::immediate(Response::err(id, ServeError::Busy));
                 }
                 self.submitted.fetch_add(1, Ordering::Relaxed);
-                let (ticket, reply) = Ticket::pending(id);
+                let (ticket, sink) = Ticket::pending(id);
                 let pool = Arc::clone(&self.pool);
                 let cache = Arc::clone(&self.cache);
-                let inflight = Arc::clone(&self.inflight);
+                let inflight = Arc::clone(&lane.inflight);
                 let completed = Arc::clone(&self.completed);
                 // A sweep is a whole fork/join grid: run it from a fresh
                 // coordinator thread so the pool's workers stay job-sized
@@ -492,14 +559,16 @@ impl Service for SimServer {
                     .name("fuseconv-sweep-req".into())
                     .spawn(move || {
                         let result = catch_unwind(AssertUnwindSafe(|| {
-                            sweep_request(models, variants, configs, deadline, &pool, &cache)
+                            sweep_request(
+                                models, variants, configs, deadline, &pool, &cache, &sink,
+                            )
                         }))
                         .unwrap_or_else(|_| {
                             Err(ServeError::BadRequest("sweep panicked".into()))
                         });
                         completed.fetch_add(1, Ordering::Relaxed);
                         inflight.fetch_sub(1, Ordering::Release);
-                        let _ = reply.send(Response { id, result: result.map(Reply::Sweep) });
+                        sink.finish(result);
                     })
                     .expect("spawn sweep thread");
                 ticket
@@ -539,7 +608,26 @@ fn simulate_one(
     Ok(SimSummary::of(&simulate_network_cached(&realized, &cfg, cache)))
 }
 
-/// One `Sweep` request: resolve the grid, run it, summarize the cells.
+/// One grid cell as its wire row.
+pub fn sweep_row_of(r: &SweepRecord) -> SweepRow {
+    SweepRow {
+        network: r.network.clone(),
+        variant: r.variant,
+        rows: r.cfg.rows,
+        cols: r.cfg.cols,
+        dataflow: r.cfg.dataflow,
+        stos: r.cfg.stos,
+        total_cycles: r.total_cycles(),
+        latency_ms: r.latency_ms(),
+    }
+}
+
+/// One streamed `Sweep` request: resolve the grid, run it with
+/// incremental row emission, streaming `Progress` (completion counter)
+/// and `Row` (plan-order cells) frames into the sink as the sweep engine
+/// finishes cells. The deadline is checked at start; an admitted grid
+/// runs to completion. Returns the terminal reply (`Done`; the rows
+/// already left through the sink).
 fn sweep_request(
     models: Vec<String>,
     variants: Vec<FuseVariant>,
@@ -547,7 +635,8 @@ fn sweep_request(
     deadline: Option<Instant>,
     pool: &Pool,
     cache: &Arc<LayerCache>,
-) -> Result<Vec<SweepRow>, ServeError> {
+    sink: &FrameSink,
+) -> Result<Reply, ServeError> {
     if deadline.is_some_and(|d| Instant::now() > d) {
         return Err(ServeError::Deadline);
     }
@@ -563,21 +652,18 @@ fn sweep_request(
     if plan.is_empty() {
         return Err(ServeError::BadRequest("empty sweep grid".into()));
     }
-    let out = run_sweep(&plan, pool, cache);
-    Ok(out
-        .records()
-        .iter()
-        .map(|r| SweepRow {
-            network: r.network.clone(),
-            variant: r.variant,
-            rows: r.cfg.rows,
-            cols: r.cfg.cols,
-            dataflow: r.cfg.dataflow,
-            stos: r.cfg.stos,
-            total_cycles: r.total_cycles(),
-            latency_ms: r.latency_ms(),
-        })
-        .collect())
+    // Up-front progress frame: the client learns the grid size before
+    // the first row lands (and even 1-cell grids stream ≥1 progress).
+    sink.progress(0, plan.len() as u64);
+    run_sweep_with(&plan, pool, cache, |event| match event {
+        SweepEvent::Progress { done, total } => {
+            sink.progress(done as u64, total as u64);
+        }
+        SweepEvent::Row { record, .. } => {
+            sink.row(sweep_row_of(record));
+        }
+    });
+    Ok(Reply::Done)
 }
 
 /// The zoo listing served to `Zoo` requests.
@@ -676,7 +762,8 @@ impl Service for Router {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::sim::{simulate_network, SimConfig};
+    use crate::coordinator::protocol::Frame;
+    use crate::sim::{run_sweep_serial, simulate_network, SimConfig};
 
     fn mock(delay_ms: u64) -> MockEngine {
         MockEngine {
@@ -706,7 +793,7 @@ mod tests {
     fn serves_single_request() {
         let server = Server::start(mock(0), BatchPolicy::default());
         let t = server.submit(vec![1.0, 2.0, 3.0, 4.0]);
-        let r = infer_ok(t.recv_deadline(Duration::from_secs(2)));
+        let r = infer_ok(t.wait_deadline(Duration::from_secs(2)));
         assert_eq!(r.output, vec![10.0, 11.0]);
         assert_eq!(server.served(), 1);
         let stats = server.shutdown();
@@ -721,7 +808,7 @@ mod tests {
         );
         let tickets: Vec<_> = (0..24).map(|i| server.submit(vec![i as f32; 4])).collect();
         for (i, t) in tickets.into_iter().enumerate() {
-            let r = infer_ok(t.recv_deadline(Duration::from_secs(5)));
+            let r = infer_ok(t.wait_deadline(Duration::from_secs(5)));
             assert_eq!(r.output[0], (i * 4) as f32);
             assert!(r.batch_size >= 1);
         }
@@ -745,8 +832,11 @@ mod tests {
         let stats = server.shutdown(); // deadline far away: drain on shutdown
         assert_eq!(stats.served, 11);
         assert!(stats.batches >= 3, "drain must respect max_batch: {}", stats.batches);
-        for t in tickets {
-            assert!(t.try_recv().is_some());
+        for mut t in tickets {
+            assert!(
+                matches!(t.try_recv(), Ok(Some(frame)) if frame.is_final()),
+                "drained ticket must hold its final frame"
+            );
         }
     }
 
@@ -760,7 +850,7 @@ mod tests {
         );
         let tickets: Vec<_> = (0..12).map(|i| server.submit(vec![i as f32; 4])).collect();
         for t in tickets {
-            let r = infer_ok(t.recv_deadline(Duration::from_secs(10)));
+            let r = infer_ok(t.wait_deadline(Duration::from_secs(10)));
             assert!(
                 r.queue_us <= r.latency_us,
                 "queue {} > latency {}",
@@ -793,8 +883,8 @@ mod tests {
         let r3 = t3.wait();
         assert_eq!(r3.result, Err(ServeError::Busy), "expected Busy, got {r3:?}");
         // the admitted requests still complete
-        infer_ok(t1.recv_deadline(Duration::from_secs(5)));
-        infer_ok(t2.recv_deadline(Duration::from_secs(5)));
+        infer_ok(t1.wait_deadline(Duration::from_secs(5)));
+        infer_ok(t2.wait_deadline(Duration::from_secs(5)));
         server.shutdown();
     }
 
@@ -815,8 +905,8 @@ mod tests {
             Request::new(999, RequestBody::Infer { input: vec![1.0; 4] })
                 .with_deadline_ms(5),
         );
-        infer_ok(t1.recv_deadline(Duration::from_secs(5)));
-        let r2 = t2.recv_deadline(Duration::from_secs(5));
+        infer_ok(t1.wait_deadline(Duration::from_secs(5)));
+        let r2 = t2.wait_deadline(Duration::from_secs(5));
         assert_eq!(r2.id, 999);
         assert_eq!(r2.result, Err(ServeError::Deadline));
         server.shutdown();
@@ -826,7 +916,7 @@ mod tests {
     fn wrong_input_length_is_bad_request_not_panic() {
         let server = Server::start(mock(0), BatchPolicy::default());
         let t = server.submit(vec![1.0; 3]); // engine wants 4
-        let r = t.recv_deadline(Duration::from_secs(2));
+        let r = t.wait_deadline(Duration::from_secs(2));
         assert!(
             matches!(r.result, Err(ServeError::BadRequest(_))),
             "got {:?}",
@@ -855,7 +945,7 @@ mod tests {
     fn sim_service_matches_direct_simulation() {
         let server = SimServer::new(2);
         let t = server.call(simulate_req(1, "mobilenet-v2", FuseVariant::Half, ConfigPatch::default()));
-        let sim = sim_ok(t.recv_deadline(Duration::from_secs(60)));
+        let sim = sim_ok(t.wait_deadline(Duration::from_secs(60)));
         let net = models::by_name("mobilenet-v2").unwrap();
         let expect =
             simulate_network(&FuseVariant::Half.apply(&net), &SimConfig::default());
@@ -880,7 +970,7 @@ mod tests {
             .collect();
         let sims: Vec<_> = tickets
             .into_iter()
-            .map(|t| sim_ok(t.recv_deadline(Duration::from_secs(60))))
+            .map(|t| sim_ok(t.wait_deadline(Duration::from_secs(60))))
             .collect();
         assert!(sims.windows(2).all(|w| w[0].total_cycles == w[1].total_cycles));
         let stats = server.cache_stats();
@@ -894,7 +984,7 @@ mod tests {
     fn sim_service_unknown_model_is_bad_request() {
         let server = SimServer::new(1);
         let t = server.call(simulate_req(7, "nonesuch", FuseVariant::Base, ConfigPatch::default()));
-        let r = t.recv_deadline(Duration::from_secs(10));
+        let r = t.wait_deadline(Duration::from_secs(10));
         assert!(matches!(r.result, Err(ServeError::BadRequest(_))), "got {:?}", r.result);
     }
 
@@ -916,7 +1006,7 @@ mod tests {
         let mut ok = 0;
         let mut busy = 0;
         for t in tickets {
-            match t.recv_deadline(Duration::from_secs(60)).result {
+            match t.wait_deadline(Duration::from_secs(60)).result {
                 Ok(Reply::Sim(_)) => ok += 1,
                 Err(ServeError::Busy) => busy += 1,
                 other => panic!("unexpected {other:?}"),
@@ -925,6 +1015,90 @@ mod tests {
         assert_eq!(ok + busy, 8);
         assert!(ok >= 1, "at least the first admitted job completes");
         assert!(busy >= 1, "burst past capacity must bounce as Busy");
+    }
+
+    #[test]
+    fn batch_lane_full_still_admits_interactive_simulate() {
+        // batch lane bound 1: while one sweep occupies it, further sweeps
+        // bounce Busy — but the interactive lane must keep admitting.
+        let server = SimServer::with_lanes(2, Arc::new(LayerCache::new()), 4, 1);
+        let sweep_body = RequestBody::Sweep {
+            models: vec!["mobilenet-v2".into()],
+            variants: vec![FuseVariant::Base, FuseVariant::Half, FuseVariant::Full],
+            configs: (0..4).map(|i| ConfigPatch::sized(8 << i)).collect(),
+        };
+        let mut admitted = Vec::new();
+        let mut saw_busy = false;
+        for id in 0..32u64 {
+            let mut t = server.call(Request::new(id, sweep_body.clone()));
+            if matches!(t.try_recv(), Ok(Some(Frame::Final(Err(ServeError::Busy))))) {
+                // The batch lane is full *right now*; a point query must
+                // still be admitted and answered.
+                saw_busy = true;
+                let t = server.call(simulate_req(
+                    1000,
+                    "mobilenet-v3-small",
+                    FuseVariant::Base,
+                    ConfigPatch::sized(8),
+                ));
+                let r = t.wait_deadline(Duration::from_secs(60));
+                assert!(
+                    matches!(r.result, Ok(Reply::Sim(_))),
+                    "interactive query starved by the batch lane: {:?}",
+                    r.result
+                );
+                break;
+            }
+            admitted.push(t);
+        }
+        assert!(saw_busy, "batch lane never filled");
+        for t in admitted {
+            assert!(t.wait_deadline(Duration::from_secs(120)).is_ok());
+        }
+    }
+
+    #[test]
+    fn sweep_streams_progress_and_rows_before_final() {
+        let server = SimServer::new(2);
+        let mut t = server.call(Request::new(
+            9,
+            RequestBody::Sweep {
+                models: vec!["mobilenet-v3-small".into()],
+                variants: vec![FuseVariant::Base, FuseVariant::Half],
+                configs: vec![ConfigPatch::sized(8), ConfigPatch::sized(16)],
+            },
+        ));
+        let mut progress = 0;
+        let mut rows = Vec::new();
+        loop {
+            match t.recv_deadline(Duration::from_secs(120)).expect("stream frame") {
+                Frame::Progress { done, total } => {
+                    assert_eq!(total, 4);
+                    assert!(done <= total);
+                    progress += 1;
+                }
+                Frame::Row(row) => rows.push(row),
+                Frame::Final(result) => {
+                    assert_eq!(result, Ok(Reply::Done));
+                    break;
+                }
+            }
+        }
+        assert!(progress >= 2, "want the up-front + completion progress frames");
+        assert_eq!(rows.len(), 4);
+        // rows arrive in plan order and price identically to a direct sweep
+        let plan = SweepPlan::new(
+            vec![models::by_name("mobilenet-v3-small").unwrap()],
+            vec![FuseVariant::Base, FuseVariant::Half],
+            vec![SimConfig::with_size(8), SimConfig::with_size(16)],
+        );
+        let direct = run_sweep_serial(&plan);
+        for (row, rec) in rows.iter().zip(direct.records()) {
+            assert_eq!(row.network, rec.network);
+            assert_eq!(row.variant, rec.variant);
+            assert_eq!((row.rows, row.cols), (rec.cfg.rows, rec.cfg.cols));
+            assert_eq!(row.total_cycles, rec.total_cycles());
+        }
     }
 
     #[test]
@@ -938,7 +1112,7 @@ mod tests {
                 configs: vec![ConfigPatch::default(), ConfigPatch::sized(8)],
             },
         ));
-        let r = t.recv_deadline(Duration::from_secs(120));
+        let r = t.wait_deadline(Duration::from_secs(120));
         match r.result {
             Ok(Reply::Sweep(rows)) => {
                 assert_eq!(rows.len(), 4);
@@ -985,7 +1159,7 @@ mod tests {
         let server = Server::start(mock(0), BatchPolicy::default());
         for _ in 0..10 {
             let t = server.submit(vec![0.0; 4]);
-            infer_ok(t.recv_deadline(Duration::from_secs(2)));
+            infer_ok(t.wait_deadline(Duration::from_secs(2)));
         }
         let stats = server.shutdown();
         let s = stats.latency_summary().unwrap();
@@ -999,11 +1173,11 @@ mod tests {
             .with_engine(Server::start(mock(0), BatchPolicy::default()));
         // infer through the engine
         let t = router.call(Request::new(1, RequestBody::Infer { input: vec![1.0; 4] }));
-        let r = infer_ok(t.recv_deadline(Duration::from_secs(5)));
+        let r = infer_ok(t.wait_deadline(Duration::from_secs(5)));
         assert_eq!(r.output.len(), 2);
         // simulate through the pool
         let t = router.call(simulate_req(2, "mobilenet-v3-small", FuseVariant::Base, ConfigPatch::default()));
-        assert!(sim_ok(t.recv_deadline(Duration::from_secs(60))).total_cycles > 0);
+        assert!(sim_ok(t.wait_deadline(Duration::from_secs(60))).total_cycles > 0);
         // stats merges both halves
         let t = router.call(Request::new(3, RequestBody::Stats));
         match t.wait().result {

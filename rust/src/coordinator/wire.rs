@@ -1,7 +1,16 @@
 //! Wire codec for the serving protocol: a hand-rolled, zero-dependency
 //! JSON reader/writer plus the encode/decode rules for every
-//! [`protocol`](super::protocol) type. One request or response is one
+//! [`protocol`](super::protocol) type. One request or frame is one
 //! newline-delimited JSON object (see README §Wire protocol).
+//!
+//! Protocol v2 frame grammar (server → client): every frame carries the
+//! request's `id` plus a `frame` tag —
+//! `{"v":2,"id":N,"frame":"progress","done":D,"total":T}`,
+//! `{"v":2,"id":N,"frame":"row","row":{...}}`, and the terminal
+//! `{"v":2,"id":N,"frame":"final","ok":{...}}` (or `"err":{...}`). A
+//! reply stream is `progress`/`row` frames then exactly one `final`;
+//! frames from concurrent requests may interleave and are demultiplexed
+//! by `id`.
 //!
 //! The codec is total: `decode(encode(x)) == x` for every protocol value
 //! (the round-trip tests below cover each variant), and decoding never
@@ -13,8 +22,8 @@
 //! floats use Rust's shortest round-trip formatting.
 
 use super::protocol::{
-    ConfigPatch, InferReply, LayerSpec, ModelSpec, Reply, Request, RequestBody, Response,
-    ServeError, SimSummary, StatsReply, SweepRow, ZooEntry, PROTOCOL_VERSION,
+    ConfigPatch, Frame, InferReply, LayerSpec, ModelSpec, Reply, Request, RequestBody,
+    Response, ServeError, SimSummary, StatsReply, SweepRow, ZooEntry, PROTOCOL_VERSION,
 };
 use crate::nn::OpKind;
 use crate::sim::{Dataflow, FuseVariant, MappingPolicy, SimConfig};
@@ -1088,33 +1097,80 @@ fn serve_error_from_json(v: &Json) -> Result<ServeError, WireError> {
     })
 }
 
-/// Encode one response as a single-line JSON frame (no trailing newline).
-pub fn encode_response(resp: &Response) -> String {
+/// Encode one frame of a reply stream as a single-line JSON object (no
+/// trailing newline). `id` is the request id the frame belongs to.
+pub fn encode_frame(id: u64, frame: &Frame) -> String {
     let mut pairs: Vec<(&str, Json)> = vec![
         ("v", Json::UInt(PROTOCOL_VERSION as u64)),
-        ("id", Json::UInt(resp.id)),
+        ("id", Json::UInt(id)),
     ];
-    match &resp.result {
-        Ok(reply) => pairs.push(("ok", reply_to_json(reply))),
-        Err(e) => pairs.push(("err", serve_error_to_json(e))),
+    match frame {
+        Frame::Progress { done, total } => {
+            pairs.push(("frame", Json::Str("progress".into())));
+            pairs.push(("done", Json::UInt(*done)));
+            pairs.push(("total", Json::UInt(*total)));
+        }
+        Frame::Row(row) => {
+            pairs.push(("frame", Json::Str("row".into())));
+            pairs.push(("row", sweep_row_to_json(row)));
+        }
+        Frame::Final(result) => {
+            pairs.push(("frame", Json::Str("final".into())));
+            match result {
+                Ok(reply) => pairs.push(("ok", reply_to_json(reply))),
+                Err(e) => pairs.push(("err", serve_error_to_json(e))),
+            }
+        }
     }
     let mut out = String::new();
     obj(pairs).write(&mut out);
     out
 }
 
-/// Decode one response frame.
-pub fn decode_response(text: &str) -> Result<Response, WireError> {
+/// Decode one frame: `(request id, frame)`.
+pub fn decode_frame(text: &str) -> Result<(u64, Frame), WireError> {
     let v = parse_json(text)?;
     check_version(&v)?;
     let id = need_u64(&v, "id")?;
-    if let Some(ok) = v.get("ok") {
-        return Ok(Response { id, result: Ok(reply_from_json(ok)?) });
+    let frame = match need_str(&v, "frame")? {
+        "progress" => Frame::Progress {
+            done: need_u64(&v, "done")?,
+            total: need_u64(&v, "total")?,
+        },
+        "row" => Frame::Row(sweep_row_from_json(need(&v, "row")?)?),
+        "final" => {
+            if let Some(ok) = v.get("ok") {
+                Frame::Final(Ok(reply_from_json(ok)?))
+            } else if let Some(e) = v.get("err") {
+                Frame::Final(Err(serve_error_from_json(e)?))
+            } else {
+                return err("final frame must have \"ok\" or \"err\"");
+            }
+        }
+        other => return err(format!("unknown frame tag {other:?}")),
+    };
+    Ok((id, frame))
+}
+
+/// Encode a one-shot response — exactly its terminal `final` frame.
+pub fn encode_response(resp: &Response) -> String {
+    encode_frame(resp.id, &Frame::Final(resp.result.clone()))
+}
+
+/// Decode a frame that must be terminal (one-shot traffic); a
+/// `progress`/`row` frame here is a [`WireError`].
+pub fn decode_response(text: &str) -> Result<Response, WireError> {
+    match decode_frame(text)? {
+        (id, Frame::Final(result)) => Ok(Response { id, result }),
+        (_, other) => err(format!(
+            "expected a final frame, got a {} frame",
+            match other {
+                Frame::Progress { .. } => "progress",
+                Frame::Row(_) => "row",
+                Frame::Final(_) => unreachable!(),
+            }
+        )),
     }
-    if let Some(e) = v.get("err") {
-        return Ok(Response { id, result: Err(serve_error_from_json(e)?) });
-    }
-    err("response must have \"ok\" or \"err\"")
 }
 
 #[cfg(test)]
@@ -1335,6 +1391,53 @@ mod tests {
         rt_response(Response::err(4, ServeError::Shutdown));
     }
 
+    fn rt_frame(id: u64, frame: Frame) {
+        let line = encode_frame(id, &frame);
+        assert!(!line.contains('\n'), "frames must be single-line: {line}");
+        let (back_id, back) = decode_frame(&line).unwrap();
+        assert_eq!(back_id, id, "id mismatch for {line}");
+        assert_eq!(back, frame, "round-trip mismatch for {line}");
+    }
+
+    #[test]
+    fn stream_frames_round_trip() {
+        rt_frame(7, Frame::Progress { done: 0, total: 24 });
+        rt_frame(7, Frame::Progress { done: 23, total: 24 });
+        rt_frame(
+            7,
+            Frame::Row(SweepRow {
+                network: "MobileNet-V2".into(),
+                variant: FuseVariant::Full,
+                rows: 64,
+                cols: 64,
+                dataflow: Dataflow::WeightStationary,
+                stos: false,
+                total_cycles: 9_007_199_254_740_993, // > 2^53: must stay exact
+                latency_ms: 1.25,
+            }),
+        );
+        rt_frame(7, Frame::Final(Ok(Reply::Done)));
+        rt_frame(8, Frame::Final(Err(ServeError::Busy)));
+    }
+
+    #[test]
+    fn decode_response_rejects_non_final_frames() {
+        let line = encode_frame(3, &Frame::Progress { done: 1, total: 2 });
+        assert!(decode_response(&line).is_err());
+        let line = encode_frame(3, &Frame::Final(Ok(Reply::Done)));
+        assert_eq!(decode_response(&line).unwrap(), Response::ok(3, Reply::Done));
+    }
+
+    #[test]
+    fn decode_frame_rejects_malformed_streams() {
+        assert!(decode_frame(r#"{"v":2,"id":1,"frame":"progress","done":1}"#).is_err());
+        assert!(decode_frame(r#"{"v":2,"id":1,"frame":"row"}"#).is_err());
+        assert!(decode_frame(r#"{"v":2,"id":1,"frame":"final"}"#).is_err());
+        assert!(decode_frame(r#"{"v":2,"id":1,"frame":"chunk"}"#).is_err());
+        assert!(decode_frame(r#"{"v":2,"id":1}"#).is_err(), "frame tag required");
+        assert!(decode_frame(r#"{"v":1,"id":1,"frame":"final","ok":{"kind":"done"}}"#).is_err());
+    }
+
     #[test]
     fn sim_config_round_trips_fully() {
         let mut cfg = SimConfig::with_size(32);
@@ -1356,17 +1459,21 @@ mod tests {
     #[test]
     fn decode_rejects_wrong_version_and_bad_ops() {
         let mut line = encode_request(&Request::new(1, RequestBody::Stats));
-        line = line.replace("\"v\":1", "\"v\":99");
+        line = line.replace("\"v\":2", "\"v\":99");
         assert!(decode_request(&line).is_err());
-        assert!(decode_request(r#"{"v":1,"id":1,"op":"frobnicate"}"#).is_err());
-        assert!(decode_request(r#"{"v":1,"op":"stats"}"#).is_err(), "id is required");
+        // v1 one-shot traffic is rejected with a version error, so old
+        // clients get a clear negotiation failure instead of silence
+        let e = decode_request(r#"{"v":1,"id":1,"op":"stats"}"#).unwrap_err();
+        assert!(e.to_string().contains("version"), "{e}");
+        assert!(decode_request(r#"{"v":2,"id":1,"op":"frobnicate"}"#).is_err());
+        assert!(decode_request(r#"{"v":2,"op":"stats"}"#).is_err(), "id is required");
         assert!(decode_request("not json").is_err());
     }
 
     #[test]
     fn simulate_defaults_when_variant_and_config_absent() {
         let req =
-            decode_request(r#"{"v":1,"id":9,"op":"simulate","model":{"zoo":"mbv2"}}"#).unwrap();
+            decode_request(r#"{"v":2,"id":9,"op":"simulate","model":{"zoo":"mbv2"}}"#).unwrap();
         match req.body {
             RequestBody::Simulate { model, variant, config } => {
                 assert_eq!(model, ModelSpec::Zoo("mbv2".into()));

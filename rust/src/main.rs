@@ -10,8 +10,10 @@
 //!   search-nas OFA-space NAS with FuSe choice (Fig 15)
 //!   trace      per-layer cycle trace CSV
 //!   train      end-to-end NOS pipeline on the AOT artifacts
-//!   serve      TCP/JSON serving frontend (inference + simulation traffic)
-//!   request    wire client for a running `fuseconv serve`
+//!   serve      TCP/JSON serving frontend (inference + simulation traffic,
+//!              protocol v2 frame streams, two-lane admission)
+//!   request    wire client for a running `fuseconv serve` (--stream for
+//!              the raw frame view)
 
 use fuseconv::cli::Cli;
 use fuseconv::coordinator::search::{
@@ -65,7 +67,8 @@ fn print_help() {
          zoo         list model zoo with MACs/params\n  \
          simulate    simulate one network  (--model, --size, --dataflow os|ws, --no-stos)\n  \
          sweep       parallel zoo×config sweep (--models, --variants, --sizes, --dataflows,\n              \
-                     --stos on|off|both, --threads, --format table|csv|json, --out, --verify)\n  \
+                     --stos on|off|both, --threads, --format table|csv|json, --out, --verify,\n              \
+                     --remote host:port to stream the grid from a serve endpoint)\n  \
          speedup     Fig 8a comparison     (--size)\n  \
          vlsi        Table 2 ST-OS overheads\n  \
          search-ea   hybrid EA search      (--model, --pop, --iters, --seed)\n  \
@@ -73,9 +76,10 @@ fn print_help() {
          trace       cycle trace CSV       (--model, --layer)\n  \
          train       NOS pipeline on artifacts (--steps, --artifacts)\n  \
          serve       TCP/JSON frontend     (--listen, --engine mock|none|pjrt, --threads,\n              \
-                     --sim-capacity, --queue, --port-file)\n  \
+                     --sim-capacity, --batch-capacity, --max-requests-per-conn,\n              \
+                     --queue, --port-file)\n  \
          request     wire client           (--connect, --op infer|simulate|sweep|stats|zoo|shutdown,\n              \
-                     --model, --variant, --size, --count)"
+                     --model, --variant, --size, --count, --stream)"
     );
 }
 
@@ -174,9 +178,11 @@ fn cmd_sweep(argv: &[String]) -> i32 {
         .opt("sizes", "comma list of square array sizes", Some("8,16,32,64"))
         .opt("dataflows", "comma list of os,ws", Some("os"))
         .opt("stos", "on | off | both", Some("on"))
-        .opt("threads", "worker threads (0=auto)", Some("0"))
+        .opt("threads", "worker threads (0=auto; local runs only)", Some("0"))
         .opt("format", "table | csv | json", Some("table"))
         .opt("out", "write csv/json to this file", None)
+        .opt("remote", "stream the sweep from a `fuseconv serve` endpoint", None)
+        .opt("timeout-ms", "remote receive timeout", Some("600000"))
         .flag("verify", "re-run serially and check bit-identical cycle counts");
     let args = match cli.parse(argv) {
         Ok(a) => a,
@@ -186,24 +192,23 @@ fn cmd_sweep(argv: &[String]) -> i32 {
         }
     };
 
-    // --- grid spec parsing ---
-    let networks: Vec<fuseconv::nn::Network> = match args.str("models").as_str() {
-        "paper5" => models::paper_five(),
-        "all" => models::ZOO_NAMES.iter().map(|n| models::by_name(n).unwrap()).collect(),
-        list => {
-            let mut nets = Vec::new();
-            for name in list.split(',').filter(|s| !s.is_empty()) {
-                match models::by_name(name) {
-                    Some(n) => nets.push(n),
-                    None => {
-                        eprintln!("unknown model {name:?}; try `fuseconv zoo`");
-                        return 2;
-                    }
-                }
-            }
-            nets
-        }
+    // --- grid spec parsing (zoo names first: the wire protocol addresses
+    //     models by name, and the local path resolves the same list) ---
+    let names: Vec<String> = match args.str("models").as_str() {
+        "paper5" => models::PAPER_FIVE_NAMES.iter().map(|s| s.to_string()).collect(),
+        "all" => models::ZOO_NAMES.iter().map(|s| s.to_string()).collect(),
+        list => list.split(',').filter(|s| !s.is_empty()).map(str::to_string).collect(),
     };
+    let mut networks: Vec<fuseconv::nn::Network> = Vec::with_capacity(names.len());
+    for name in &names {
+        match models::by_name(name) {
+            Some(n) => networks.push(n),
+            None => {
+                eprintln!("unknown model {name:?}; try `fuseconv zoo`");
+                return 2;
+            }
+        }
+    }
     let mut variants = Vec::new();
     for v in args.str("variants").split(',').filter(|s| !s.is_empty()) {
         match FuseVariant::parse(v) {
@@ -244,10 +249,18 @@ fn cmd_sweep(argv: &[String]) -> i32 {
         }
     };
 
-    let plan = SweepPlan::new(networks, variants, grid_configs(&sizes, &dataflows, &stos_modes));
+    let plan = SweepPlan::new(
+        networks,
+        variants.clone(),
+        grid_configs(&sizes, &dataflows, &stos_modes),
+    );
     if plan.is_empty() {
         eprintln!("empty sweep (no models, variants, or configs)");
         return 2;
+    }
+
+    if args.get("remote").is_some() {
+        return sweep_remote(&args, &names, &variants, &plan);
     }
 
     // --- run ---
@@ -329,6 +342,211 @@ fn cmd_sweep(argv: &[String]) -> i32 {
             return 1;
         }
         eprintln!("# verify OK: all {} cells bit-identical to the serial path", plan.len());
+    }
+    0
+}
+
+/// CSV for wire sweep rows (the remote stream carries the serving-sized
+/// row digest — no per-layer utilization/MACs columns).
+fn rows_csv(rows: &[fuseconv::coordinator::SweepRow]) -> String {
+    let mut s = String::from("network,variant,rows,cols,dataflow,stos,total_cycles,latency_ms\n");
+    for r in rows {
+        s.push_str(&format!(
+            "{},{},{},{},{},{},{},{:.6}\n",
+            r.network,
+            r.variant.label(),
+            r.rows,
+            r.cols,
+            r.dataflow.short(),
+            r.stos,
+            r.total_cycles,
+            r.latency_ms,
+        ));
+    }
+    s
+}
+
+fn rows_json(rows: &[fuseconv::coordinator::SweepRow]) -> String {
+    use fuseconv::coordinator::wire::Json;
+    // Built on the wire codec's JSON writer, so escaping and number
+    // formatting match the frames the rows arrived in.
+    Json::Arr(
+        rows.iter()
+            .map(|r| {
+                Json::Obj(vec![
+                    ("network".into(), Json::Str(r.network.clone())),
+                    ("variant".into(), Json::Str(r.variant.label().into())),
+                    ("rows".into(), Json::UInt(r.rows as u64)),
+                    ("cols".into(), Json::UInt(r.cols as u64)),
+                    ("dataflow".into(), Json::Str(r.dataflow.short().into())),
+                    ("stos".into(), Json::Bool(r.stos)),
+                    ("total_cycles".into(), Json::UInt(r.total_cycles)),
+                    ("latency_ms".into(), Json::Num(r.latency_ms)),
+                ])
+            })
+            .collect(),
+    )
+    .to_string()
+}
+
+/// `fuseconv sweep --remote`: run the grid on a `fuseconv serve`
+/// endpoint over the v2 streaming protocol — rows arrive incrementally
+/// (progress on stderr) and are reported, and optionally `--verify`d
+/// against a local serial sweep of the same grid, once the stream ends.
+fn sweep_remote(
+    args: &fuseconv::cli::Args,
+    names: &[String],
+    variants: &[FuseVariant],
+    plan: &SweepPlan,
+) -> i32 {
+    use fuseconv::coordinator::{
+        ConfigPatch, Frame, Request, RequestBody, SweepRow, WireClient,
+    };
+
+    let addr = args.str("remote");
+    let timeout_ms = match args.u64("timeout-ms") {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    // The wire patches are derived from the plan's own config list, so
+    // remote rows structurally arrive in local plan order and `--verify`
+    // can zip against the serial sweep. The CLI grid only varies
+    // geometry/dataflow/ST-OS; everything else stays Table-1 default.
+    let configs: Vec<ConfigPatch> = plan
+        .configs
+        .iter()
+        .map(|c| ConfigPatch {
+            rows: Some(c.rows),
+            cols: Some(c.cols),
+            dataflow: Some(c.dataflow),
+            stos: Some(c.stos),
+            ..ConfigPatch::default()
+        })
+        .collect();
+    let req = Request::new(
+        1,
+        RequestBody::Sweep {
+            models: names.to_vec(),
+            variants: variants.to_vec(),
+            configs,
+        },
+    );
+    let mut client =
+        match WireClient::connect(&addr, std::time::Duration::from_millis(timeout_ms)) {
+            Ok(c) => c,
+            Err(e) => {
+                eprintln!("connect {addr}: {e}");
+                return 1;
+            }
+        };
+    if let Err(e) = client.send(&req) {
+        eprintln!("send: {e}");
+        return 1;
+    }
+
+    let t0 = std::time::Instant::now();
+    let mut rows: Vec<SweepRow> = Vec::new();
+    loop {
+        match client.recv_frame(req.id) {
+            Ok(Frame::Progress { done, total }) => {
+                // throttle progress chatter to ~10 stderr lines per sweep
+                let step = (total / 10).max(1);
+                if done > 0 && (done % step == 0 || done == total) {
+                    eprintln!(
+                        "# progress {done}/{total} cells ({:.2}s)",
+                        t0.elapsed().as_secs_f64()
+                    );
+                }
+            }
+            Ok(Frame::Row(row)) => rows.push(row),
+            Ok(Frame::Final(Ok(_))) => break,
+            Ok(Frame::Final(Err(e))) => {
+                eprintln!("remote sweep failed: {e}");
+                return 1;
+            }
+            Err(e) => {
+                eprintln!("{e}");
+                return 1;
+            }
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    if rows.len() != plan.len() {
+        eprintln!(
+            "remote sweep streamed {} rows for a {}-cell grid",
+            rows.len(),
+            plan.len()
+        );
+        return 1;
+    }
+
+    // --- report ---
+    match args.str("format").as_str() {
+        "csv" => print!("{}", rows_csv(&rows)),
+        "json" => println!("{}", rows_json(&rows)),
+        _ => {
+            println!(
+                "{:26} {:10} {:>6} {:>4} {:>5} {:>14} {:>10}",
+                "network", "variant", "array", "df", "stos", "cycles", "ms"
+            );
+            for r in &rows {
+                println!(
+                    "{:26} {:10} {:>3}x{:<3} {:>4} {:>5} {:>14} {:>10.3}",
+                    r.network,
+                    r.variant.label(),
+                    r.rows,
+                    r.cols,
+                    r.dataflow.short(),
+                    r.stos,
+                    r.total_cycles,
+                    r.latency_ms,
+                );
+            }
+        }
+    }
+    if let Some(path) = args.get("out") {
+        let body = if args.str("format") == "json" { rows_json(&rows) } else { rows_csv(&rows) };
+        if let Err(e) = std::fs::write(path, body) {
+            eprintln!("writing {path}: {e}");
+            return 1;
+        }
+        eprintln!("# wrote {path}");
+    }
+    eprintln!("# {} rows streamed from {addr} in {wall:.2}s", rows.len());
+
+    // --- serial cross-check: streamed rows vs a local serial sweep ---
+    if args.flag("verify") {
+        let serial = run_sweep_serial(plan);
+        let mut bad = 0;
+        for (r, s) in rows.iter().zip(serial.records()) {
+            if r.network != s.network
+                || r.variant != s.variant
+                || r.rows != s.cfg.rows
+                || r.total_cycles != s.total_cycles()
+            {
+                eprintln!(
+                    "MISMATCH {} {} {}x{}: remote {} != serial {}",
+                    r.network,
+                    r.variant.label(),
+                    r.rows,
+                    r.cols,
+                    r.total_cycles,
+                    s.total_cycles()
+                );
+                bad += 1;
+            }
+        }
+        if bad > 0 {
+            eprintln!("# verify FAILED: {bad}/{} cells differ", plan.len());
+            return 1;
+        }
+        eprintln!(
+            "# verify OK: all {} streamed rows bit-identical to the local serial sweep",
+            plan.len()
+        );
     }
     0
 }
@@ -515,7 +733,9 @@ fn cmd_serve(argv: &[String]) -> i32 {
     let cli = Cli::new("serve", "TCP/JSON serving frontend for inference + simulation")
         .opt("listen", "bind address (port 0 = ephemeral)", Some("127.0.0.1:7878"))
         .opt("threads", "simulation worker threads (0=auto)", Some("0"))
-        .opt("sim-capacity", "bounded simulation admission window", Some("256"))
+        .opt("sim-capacity", "interactive simulation admission lane bound (min 1)", Some("256"))
+        .opt("batch-capacity", "batch (sweep) admission lane bound (min 1)", Some("32"))
+        .opt("max-requests-per-conn", "per-connection request budget (0=unlimited)", Some("0"))
         .opt("queue", "bounded inference admission queue", Some("1024"))
         .opt("engine", "inference engine: mock | none | pjrt", Some("mock"))
         .opt("engine-input", "mock engine input length", Some("4"))
@@ -531,23 +751,29 @@ fn cmd_serve(argv: &[String]) -> i32 {
             return 2;
         }
     };
-    let (threads, sim_capacity, queue, max_batch, max_wait) = match (
-        args.usize("threads"),
-        args.usize("sim-capacity"),
-        args.usize("queue"),
-        args.usize("max-batch"),
-        args.u64("max-wait-ms"),
-    ) {
-        (Ok(t), Ok(sc), Ok(q), Ok(mb), Ok(mw)) => (t, sc, q, mb, mw),
-        _ => {
-            eprintln!("bad numeric option\n{}", cli.usage());
-            return 2;
-        }
-    };
-    let sim = SimServer::with_capacity(
+    let (threads, sim_capacity, batch_capacity, conn_budget, queue, max_batch, max_wait) =
+        match (
+            args.usize("threads"),
+            args.usize("sim-capacity"),
+            args.usize("batch-capacity"),
+            args.u64("max-requests-per-conn"),
+            args.usize("queue"),
+            args.usize("max-batch"),
+            args.u64("max-wait-ms"),
+        ) {
+            (Ok(t), Ok(sc), Ok(bc), Ok(rb), Ok(q), Ok(mb), Ok(mw)) => {
+                (t, sc, bc, rb, q, mb, mw)
+            }
+            _ => {
+                eprintln!("bad numeric option\n{}", cli.usage());
+                return 2;
+            }
+        };
+    let sim = SimServer::with_lanes(
         threads,
         std::sync::Arc::new(LayerCache::new()),
         sim_capacity,
+        batch_capacity,
     );
     let policy = BatchPolicy {
         max_batch,
@@ -587,7 +813,7 @@ fn cmd_serve(argv: &[String]) -> i32 {
 
     let listen = args.str("listen");
     let wire = match WireServer::bind(&listen, std::sync::Arc::new(router)) {
-        Ok(w) => w,
+        Ok(w) => w.with_request_budget((conn_budget > 0).then_some(conn_budget)),
         Err(e) => {
             eprintln!("bind {listen}: {e}");
             return 1;
@@ -646,10 +872,14 @@ fn pjrt_router(
 }
 
 /// `fuseconv request` — wire client for a running `fuseconv serve`
-/// (scripted load: `--count N` pipelines N copies on one connection).
+/// (scripted load: `--count N` pipelines N copies on one connection;
+/// `--stream` prints every protocol frame as it arrives instead of the
+/// collapsed one-line response).
 fn cmd_request(argv: &[String]) -> i32 {
-    use fuseconv::coordinator::wire::encode_response;
-    use fuseconv::coordinator::{ConfigPatch, ModelSpec, Request, RequestBody, WireClient};
+    use fuseconv::coordinator::wire::{encode_frame, encode_response};
+    use fuseconv::coordinator::{
+        ConfigPatch, Frame, ModelSpec, Request, RequestBody, WireClient,
+    };
 
     let cli = Cli::new("request", "send protocol requests to a running `fuseconv serve`")
         .opt("connect", "server address host:port", Some("127.0.0.1:7878"))
@@ -666,6 +896,7 @@ fn cmd_request(argv: &[String]) -> i32 {
         .opt("deadline-ms", "per-request deadline", None)
         .opt("timeout-ms", "client receive timeout", Some("60000"))
         .opt("id", "starting request id", Some("1"))
+        .flag("stream", "print every frame (progress/row/final) as it arrives")
         .flag("no-stos", "disable ST-OS in the request config");
     let args = match cli.parse(argv) {
         Ok(a) => a,
@@ -789,7 +1020,7 @@ fn cmd_request(argv: &[String]) -> i32 {
             return 1;
         }
     };
-    // pipeline all requests, then collect all responses (FIFO per conn)
+    // pipeline all requests, then collect every reply stream
     for i in 0..count {
         let mut req = Request::new(base_id + i as u64, body.clone());
         if let Some(ms) = deadline_ms {
@@ -801,17 +1032,44 @@ fn cmd_request(argv: &[String]) -> i32 {
         }
     }
     let mut failures = 0usize;
-    for _ in 0..count {
-        match client.recv() {
-            Ok(resp) => {
-                println!("{}", encode_response(&resp));
-                if !resp.is_ok() {
-                    failures += 1;
+    if args.flag("stream") {
+        // raw frame view: print progress/row/final frames as they arrive,
+        // interleaved across the pipelined requests, until every stream
+        // has delivered its terminal frame
+        let mut outstanding: std::collections::HashSet<u64> =
+            (0..count).map(|i| base_id + i as u64).collect();
+        while !outstanding.is_empty() {
+            match client.recv_any() {
+                Ok((id, frame)) => {
+                    println!("{}", encode_frame(id, &frame));
+                    if let Frame::Final(result) = &frame {
+                        outstanding.remove(&id);
+                        if result.is_err() {
+                            failures += 1;
+                        }
+                    }
+                }
+                Err(e) => {
+                    eprintln!("{e}");
+                    return 1;
                 }
             }
-            Err(e) => {
-                eprintln!("{e}");
-                return 1;
+        }
+    } else {
+        // collapsed view: one line per request (streamed sweep rows are
+        // merged back into a single `sweep` reply)
+        for i in 0..count {
+            match client.recv_response(base_id + i as u64) {
+                Ok(resp) => {
+                    println!("{}", encode_response(&resp));
+                    if !resp.is_ok() {
+                        failures += 1;
+                    }
+                }
+                Err(e) => {
+                    eprintln!("{e}");
+                    return 1;
+                }
             }
         }
     }

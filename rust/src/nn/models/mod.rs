@@ -90,15 +90,23 @@ pub fn by_name(name: &str) -> Option<Network> {
     })
 }
 
+/// Zoo keys of the five efficient networks of Fig 8(a)/Table 3 — the
+/// one list behind both [`paper_five`] and the CLI's `--models paper5`
+/// (local and `--remote` sweep paths address models by these names).
+pub const PAPER_FIVE_NAMES: &[&str] = &[
+    "mobilenet-v1",
+    "mobilenet-v2",
+    "mobilenet-v3-small",
+    "mobilenet-v3-large",
+    "mnasnet-b1",
+];
+
 /// The five efficient networks of Fig 8(a)/Table 3.
 pub fn paper_five() -> Vec<Network> {
-    vec![
-        mobilenet_v1::build(),
-        mobilenet_v2::build(),
-        mobilenet_v3::small(),
-        mobilenet_v3::large(),
-        mnasnet::build(),
-    ]
+    PAPER_FIVE_NAMES
+        .iter()
+        .map(|n| by_name(n).expect("paper-five names resolve in the zoo"))
+        .collect()
 }
 
 /// One row per zoo network: `(name, MACs in millions, params in

@@ -108,7 +108,7 @@ mod tests {
         let out_len = m.const_usize("num_classes").unwrap();
         let tickets: Vec<_> = (0..12).map(|_| server.submit(vec![0.05; in_len])).collect();
         for t in tickets {
-            match t.recv_deadline(Duration::from_secs(120)).result {
+            match t.wait_deadline(Duration::from_secs(120)).result {
                 Ok(crate::coordinator::Reply::Infer(r)) => {
                     assert_eq!(r.output.len(), out_len);
                     assert!(r.output.iter().all(|v| v.is_finite()));

@@ -15,6 +15,6 @@ pub mod trace;
 pub use config::{Dataflow, MappingPolicy, SimConfig};
 pub use engine::{price_layer, simulate_layer, simulate_network, LayerSim, NetworkSim};
 pub use sweep::{
-    grid_configs, run_sweep, run_sweep_serial, simulate_network_cached, CacheStats, FuseVariant,
-    LayerCache, SweepOutcome, SweepPlan, SweepRecord,
+    grid_configs, run_sweep, run_sweep_serial, run_sweep_with, simulate_network_cached,
+    CacheStats, FuseVariant, LayerCache, SweepEvent, SweepOutcome, SweepPlan, SweepRecord,
 };

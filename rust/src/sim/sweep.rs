@@ -391,9 +391,34 @@ fn assemble_outcome(
     }
 }
 
-/// Run the sweep across the pool, sharing `cache` between all workers.
-/// Results are bit-identical to [`run_sweep_serial`] for any thread count.
-pub fn run_sweep(plan: &SweepPlan, pool: &Pool, cache: &Arc<LayerCache>) -> SweepOutcome {
+/// One observable moment of an in-flight sweep, for incremental
+/// consumers (the serving layer streams these to wire clients as
+/// `Progress`/`Row` frames).
+#[derive(Debug)]
+pub enum SweepEvent<'a> {
+    /// A grid cell finished simulating (completion order, which is
+    /// nondeterministic under the pool).
+    Progress { done: usize, total: usize },
+    /// The next *plan-order* record is ready: rows are held back until
+    /// every earlier cell has completed, so consumers see exactly the
+    /// serial order — `index` is the record's plan position.
+    Row { index: usize, record: &'a SweepRecord },
+}
+
+/// Run the sweep across the pool, sharing `cache` between all workers,
+/// invoking `on_event` on the coordinating thread as cells complete.
+/// Row events fire in plan order (a reorder buffer holds out-of-order
+/// completions), so the record sequence — and the returned outcome — is
+/// bit-identical to [`run_sweep_serial`] for any thread count.
+pub fn run_sweep_with<F>(
+    plan: &SweepPlan,
+    pool: &Pool,
+    cache: &Arc<LayerCache>,
+    mut on_event: F,
+) -> SweepOutcome
+where
+    F: FnMut(SweepEvent<'_>),
+{
     // Realize each (network, variant) once — the transform is pure CPU work
     // that every config cell would otherwise repeat.
     let realized: Vec<Arc<Network>> = plan
@@ -401,17 +426,61 @@ pub fn run_sweep(plan: &SweepPlan, pool: &Pool, cache: &Arc<LayerCache>) -> Swee
         .iter()
         .flat_map(|n| plan.variants.iter().map(|v| Arc::new(v.apply(n))))
         .collect();
-    let jobs: Vec<(usize, usize)> = (0..realized.len())
-        .flat_map(|nv| (0..plan.configs.len()).map(move |c| (nv, c)))
-        .collect();
+    let total = realized.len() * plan.configs.len();
 
     let realized = Arc::new(realized);
     let configs = Arc::new(plan.configs.clone());
-    let cache_ref = Arc::clone(cache);
-    let sims = pool.scope_map(jobs, move |(nv, c)| {
-        simulate_network_cached(&realized[nv], &configs[c], &cache_ref)
-    });
-    assemble_outcome(plan, sims, cache.stats())
+    let (rtx, rrx) = std::sync::mpsc::channel::<(usize, NetworkSim)>();
+    for i in 0..total {
+        let realized = Arc::clone(&realized);
+        let configs = Arc::clone(&configs);
+        let cache_ref = Arc::clone(cache);
+        let rtx = rtx.clone();
+        pool.spawn(move || {
+            let (nv, c) = (i / configs.len(), i % configs.len());
+            let sim = simulate_network_cached(&realized[nv], &configs[c], &cache_ref);
+            // Receiver outlives all jobs within this call; a send failure
+            // would mean the coordinator returned early (it can't).
+            let _ = rtx.send((i, sim));
+        });
+    }
+    drop(rtx);
+
+    let mut slots: Vec<Option<NetworkSim>> = (0..total).map(|_| None).collect();
+    let mut records: Vec<SweepRecord> = Vec::with_capacity(total);
+    let mut next = 0usize;
+    for done in 1..=total {
+        let (i, sim) = rrx.recv().expect("worker result");
+        slots[i] = Some(sim);
+        on_event(SweepEvent::Progress { done, total });
+        // Flush the ready plan-order prefix.
+        while next < total && slots[next].is_some() {
+            let sim = slots[next].take().expect("checked above");
+            let nv = next / plan.configs.len();
+            let c = next % plan.configs.len();
+            let record = SweepRecord {
+                network: plan.networks[nv / plan.variants.len()].name.clone(),
+                variant: plan.variants[nv % plan.variants.len()],
+                cfg: plan.configs[c].clone(),
+                sim,
+            };
+            on_event(SweepEvent::Row { index: next, record: &record });
+            records.push(record);
+            next += 1;
+        }
+    }
+    SweepOutcome {
+        records,
+        variants: plan.variants.len(),
+        configs: plan.configs.len(),
+        cache_stats: cache.stats(),
+    }
+}
+
+/// Run the sweep across the pool, sharing `cache` between all workers.
+/// Results are bit-identical to [`run_sweep_serial`] for any thread count.
+pub fn run_sweep(plan: &SweepPlan, pool: &Pool, cache: &Arc<LayerCache>) -> SweepOutcome {
+    run_sweep_with(plan, pool, cache, |_| {})
 }
 
 /// Serial reference path: plain [`simulate_network`], no cache, no pool.
@@ -519,6 +588,43 @@ mod tests {
         assert_eq!(r.network, "MobileNet-V3-Small");
         assert_eq!(r.variant, FuseVariant::Half);
         assert_eq!(r.cfg.rows, 8);
+    }
+
+    #[test]
+    fn run_sweep_with_streams_rows_in_plan_order() {
+        let plan = SweepPlan::new(
+            vec![
+                models::by_name("mobilenet-v2").unwrap(),
+                models::by_name("mobilenet-v3-small").unwrap(),
+            ],
+            vec![FuseVariant::Base, FuseVariant::Half],
+            grid_configs(&[8, 16], &[Dataflow::OutputStationary], &[true]),
+        );
+        let pool = Pool::new(3);
+        let cache = Arc::new(LayerCache::new());
+        let mut indices = Vec::new();
+        let mut cycles = Vec::new();
+        let mut last_done = 0usize;
+        let out = run_sweep_with(&plan, &pool, &cache, |e| match e {
+            SweepEvent::Progress { done, total } => {
+                assert_eq!(total, plan.len());
+                assert!(done > last_done && done <= total, "monotonic progress");
+                last_done = done;
+            }
+            SweepEvent::Row { index, record } => {
+                indices.push(index);
+                cycles.push(record.total_cycles());
+            }
+        });
+        assert_eq!(last_done, plan.len(), "one progress event per completed cell");
+        // rows fired for every cell, in plan order, despite pool reordering
+        assert_eq!(indices, (0..plan.len()).collect::<Vec<_>>());
+        let serial = run_sweep_serial(&plan);
+        assert_eq!(out.records().len(), serial.records().len());
+        for ((streamed, r), s) in cycles.iter().zip(out.records()).zip(serial.records()) {
+            assert_eq!(r.total_cycles(), s.total_cycles());
+            assert_eq!(*streamed, s.total_cycles(), "streamed rows must match serial");
+        }
     }
 
     #[test]

@@ -1,22 +1,59 @@
 //! Wire-level integration: the TCP/JSON frontend under concurrent mixed
-//! traffic (acceptance criteria for the unified serving API).
+//! traffic (acceptance criteria for the protocol-v2 streaming API).
 //!
 //! * ≥ 32 concurrent Infer/Simulate requests through one listener, zero
 //!   dropped replies, every id answered;
 //! * `Simulate` by zoo name over the wire returns cycle counts identical
 //!   to a direct in-process `simulate_network`;
-//! * a full bounded queue answers `busy` — it never hangs.
+//! * a `Sweep` over a ≥24-point grid streams incremental `Progress`/`Row`
+//!   frames before its `Final`, and the merged rows are bit-identical to
+//!   a local serial `run_sweep`;
+//! * two concurrent streamed sweeps plus pipelined infers on ONE
+//!   connection each reassemble their own rows, in plan order, with zero
+//!   cross-request leakage;
+//! * a full bounded lane answers `busy` — it never hangs — and a
+//!   saturated batch lane still admits interactive queries.
 
 use fuseconv::coordinator::batcher::BatchPolicy;
 use fuseconv::coordinator::{
-    ConfigPatch, MockEngine, ModelSpec, Reply, Request, RequestBody, Router, ServeError,
-    Server, SimServer, WireClient, WireServer,
+    ConfigPatch, Frame, MockEngine, ModelSpec, Reply, Request, RequestBody, Router,
+    ServeError, Server, SimServer, SweepRow, WireClient, WireServer,
 };
 use fuseconv::nn::models;
-use fuseconv::sim::{simulate_network, FuseVariant, LayerCache, SimConfig};
+use fuseconv::sim::{
+    run_sweep_serial, simulate_network, FuseVariant, LayerCache, SimConfig, SweepPlan,
+};
+use std::collections::HashMap;
 use std::sync::Arc;
 use std::thread;
 use std::time::Duration;
+
+/// Local serial reference sweep for (zoo names × variants × sizes).
+fn serial_reference(
+    names: &[&str],
+    variants: &[FuseVariant],
+    sizes: &[usize],
+) -> fuseconv::sim::SweepOutcome {
+    let plan = SweepPlan::new(
+        names.iter().map(|m| models::by_name(m).unwrap()).collect(),
+        variants.to_vec(),
+        sizes.iter().map(|&s| SimConfig::with_size(s)).collect(),
+    );
+    run_sweep_serial(&plan)
+}
+
+/// Assert streamed rows equal the serial reference, cell for cell.
+fn assert_rows_match(rows: &[SweepRow], reference: &fuseconv::sim::SweepOutcome) {
+    assert_eq!(rows.len(), reference.records().len(), "row count");
+    for (row, rec) in rows.iter().zip(reference.records()) {
+        assert_eq!(row.network, rec.network);
+        assert_eq!(row.variant, rec.variant);
+        assert_eq!((row.rows, row.cols), (rec.cfg.rows, rec.cfg.cols));
+        assert_eq!(row.total_cycles, rec.total_cycles(), "{} {}", row.network, row.rows);
+        // floats survive the wire exactly (shortest round-trip formatting)
+        assert_eq!(row.latency_ms.to_bits(), rec.latency_ms().to_bits());
+    }
+}
 
 /// Boot a full frontend (mock engine + sim pool) on an ephemeral port.
 fn start_frontend(sim_capacity: usize) -> (String, thread::JoinHandle<()>) {
@@ -161,8 +198,10 @@ fn full_bounded_queue_answers_busy_over_the_wire() {
     }
     let mut ok = 0;
     let mut busy = 0;
-    for _ in 0..BURST {
-        let resp = client.recv().expect("every frame gets a reply");
+    for i in 0..BURST {
+        // demux by id: busy bounces land immediately, admitted work later
+        let resp = client.recv_response(100 + i).expect("every request gets a final");
+        assert_eq!(resp.id, 100 + i);
         match resp.result {
             Ok(Reply::Sim(_)) => ok += 1,
             Err(ServeError::Busy) => busy += 1,
@@ -217,6 +256,208 @@ fn stats_and_zoo_over_the_wire() {
     }
 
     drop(client);
+    shutdown_frontend(&addr, handle);
+}
+
+#[test]
+fn large_grid_streams_incremental_frames_before_final() {
+    // Acceptance: a wire Sweep over a ≥24-point grid must stream ≥2
+    // incremental Row/Progress frames before Final, and the merged rows
+    // must be bit-identical to a serial run_sweep of the same grid.
+    let (addr, handle) = start_frontend(64);
+    let mut client = WireClient::connect(&addr, Duration::from_secs(300)).expect("connect");
+
+    const SIZES: [usize; 8] = [4, 8, 12, 16, 24, 32, 48, 64];
+    let variants = [FuseVariant::Base, FuseVariant::Half, FuseVariant::Full];
+    client
+        .send(&Request::new(
+            7,
+            RequestBody::Sweep {
+                models: vec!["mobilenet-v2".into()],
+                variants: variants.to_vec(),
+                configs: SIZES.iter().map(|&s| ConfigPatch::sized(s)).collect(),
+            },
+        ))
+        .expect("send sweep");
+
+    let mut incremental_before_final = 0usize;
+    let mut rows = Vec::new();
+    loop {
+        match client.recv_frame(7).expect("stream frame") {
+            Frame::Progress { done, total } => {
+                assert_eq!(total, 24, "1 model × 3 variants × 8 sizes");
+                assert!(done <= total);
+                incremental_before_final += 1;
+            }
+            Frame::Row(row) => {
+                incremental_before_final += 1;
+                rows.push(row);
+            }
+            Frame::Final(result) => {
+                assert_eq!(result, Ok(Reply::Done));
+                break;
+            }
+        }
+    }
+    assert!(
+        incremental_before_final >= 2,
+        "want ≥2 incremental frames before Final, got {incremental_before_final}"
+    );
+    assert_eq!(rows.len(), 24);
+    assert_rows_match(&rows, &serial_reference(&["mobilenet-v2"], &variants, &SIZES));
+
+    drop(client);
+    shutdown_frontend(&addr, handle);
+}
+
+#[test]
+fn interleaved_streams_reassemble_per_request() {
+    // Two concurrent streamed Sweeps plus pipelined Infers on ONE
+    // connection: each stream must reassemble its own rows in plan
+    // order, with zero cross-request leakage.
+    let (addr, handle) = start_frontend(64);
+    let mut client = WireClient::connect(&addr, Duration::from_secs(300)).expect("connect");
+
+    client
+        .send(&Request::new(
+            1,
+            RequestBody::Sweep {
+                models: vec!["mobilenet-v3-small".into()],
+                variants: vec![FuseVariant::Base, FuseVariant::Half],
+                configs: vec![ConfigPatch::sized(8), ConfigPatch::sized(16)],
+            },
+        ))
+        .expect("send sweep 1");
+    client
+        .send(&Request::new(
+            2,
+            RequestBody::Sweep {
+                models: vec!["mobilenet-v2".into()],
+                variants: vec![FuseVariant::Base, FuseVariant::Full],
+                configs: vec![ConfigPatch::sized(8), ConfigPatch::sized(32)],
+            },
+        ))
+        .expect("send sweep 2");
+    for id in 10..14u64 {
+        client
+            .send(&Request::new(id, RequestBody::Infer { input: vec![id as f32; 4] }))
+            .expect("send infer");
+    }
+
+    // drive the raw interleaved frame stream until all 6 finals land
+    let mut rows: HashMap<u64, Vec<SweepRow>> = HashMap::new();
+    let mut finals: HashMap<u64, Result<Reply, ServeError>> = HashMap::new();
+    while finals.len() < 6 {
+        let (id, frame) = client.recv_any().expect("frame");
+        assert!(!finals.contains_key(&id), "frame after final for id {id}");
+        match frame {
+            Frame::Progress { .. } => {}
+            Frame::Row(row) => rows.entry(id).or_default().push(row),
+            Frame::Final(result) => {
+                finals.insert(id, result);
+            }
+        }
+    }
+
+    // infers: answered correctly, with zero leaked row frames
+    for id in 10..14u64 {
+        match finals.remove(&id) {
+            Some(Ok(Reply::Infer(r))) => assert_eq!(r.output[0], (4 * id) as f32),
+            other => panic!("infer {id}: unexpected {other:?}"),
+        }
+        assert!(!rows.contains_key(&id), "rows leaked into infer stream {id}");
+    }
+    // each sweep's rows match its own grid (and only its own grid)
+    assert_eq!(finals.remove(&1), Some(Ok(Reply::Done)));
+    assert_eq!(finals.remove(&2), Some(Ok(Reply::Done)));
+    assert_rows_match(
+        &rows.remove(&1).expect("sweep 1 rows"),
+        &serial_reference(
+            &["mobilenet-v3-small"],
+            &[FuseVariant::Base, FuseVariant::Half],
+            &[8, 16],
+        ),
+    );
+    assert_rows_match(
+        &rows.remove(&2).expect("sweep 2 rows"),
+        &serial_reference(
+            &["mobilenet-v2"],
+            &[FuseVariant::Base, FuseVariant::Full],
+            &[8, 32],
+        ),
+    );
+    assert!(rows.is_empty(), "rows for unknown request ids: {:?}", rows.keys());
+
+    drop(client);
+    shutdown_frontend(&addr, handle);
+}
+
+#[test]
+fn saturated_batch_lane_still_admits_interactive_over_the_wire() {
+    // Batch lane bound 1: queue it full of sweeps, then an interactive
+    // Simulate on a second connection must be admitted and answered Ok.
+    let sim = SimServer::with_lanes(2, Arc::new(LayerCache::new()), 64, 1);
+    let router = Router::new(sim).with_engine(Server::start(
+        MockEngine::new(4, 2, 8),
+        BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(2) },
+    ));
+    let server = WireServer::bind("127.0.0.1:0", Arc::new(router)).expect("bind");
+    let addr = server.local_addr().to_string();
+    let handle = thread::spawn(move || server.run().expect("frontend run"));
+
+    let mut batch = WireClient::connect(&addr, Duration::from_secs(300)).expect("connect");
+    let sweep_body = RequestBody::Sweep {
+        models: vec!["mobilenet-v2".into()],
+        variants: vec![FuseVariant::Base, FuseVariant::Half, FuseVariant::Full],
+        configs: vec![
+            ConfigPatch::sized(8),
+            ConfigPatch::sized(16),
+            ConfigPatch::sized(32),
+            ConfigPatch::sized(64),
+        ],
+    };
+    const SWEEPS: u64 = 6;
+    for i in 0..SWEEPS {
+        batch.send(&Request::new(200 + i, sweep_body.clone())).expect("send sweep");
+    }
+
+    // interactive lane must stay open regardless of the sweep pile-up
+    let mut interactive =
+        WireClient::connect(&addr, Duration::from_secs(120)).expect("connect");
+    let resp = interactive
+        .roundtrip(&Request::new(
+            1,
+            RequestBody::Simulate {
+                model: ModelSpec::Zoo("mobilenet-v3-small".into()),
+                variant: FuseVariant::Base,
+                config: ConfigPatch::sized(8),
+            },
+        ))
+        .expect("interactive roundtrip");
+    match resp.result {
+        Ok(Reply::Sim(s)) => assert!(s.total_cycles > 0),
+        other => panic!("interactive query starved: {other:?}"),
+    }
+
+    // every queued sweep still resolves (Ok rows or a typed Busy bounce)
+    let mut ok = 0;
+    let mut busy = 0;
+    for i in 0..SWEEPS {
+        match batch.recv_response(200 + i).expect("sweep final").result {
+            Ok(Reply::Sweep(rows)) => {
+                assert_eq!(rows.len(), 12);
+                ok += 1;
+            }
+            Err(ServeError::Busy) => busy += 1,
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+    assert_eq!(ok + busy, SWEEPS);
+    assert!(ok >= 1, "at least one sweep runs");
+    assert!(busy >= 1, "lane bound 1 must bounce a {SWEEPS}-sweep burst");
+
+    drop(batch);
+    drop(interactive);
     shutdown_frontend(&addr, handle);
 }
 

@@ -5,8 +5,8 @@
 use fuseconv::exec::Pool;
 use fuseconv::nn::models;
 use fuseconv::sim::{
-    grid_configs, run_sweep, run_sweep_serial, Dataflow, FuseVariant, LayerCache, SimConfig,
-    SweepPlan,
+    grid_configs, run_sweep, run_sweep_serial, run_sweep_with, Dataflow, FuseVariant,
+    LayerCache, SimConfig, SweepEvent, SweepPlan,
 };
 use std::sync::Arc;
 
@@ -56,6 +56,44 @@ fn parallel_sweep_is_bit_identical_to_serial_for_any_worker_count() {
                 assert_eq!(a.stall_cycles, b.stall_cycles);
                 assert_eq!(a.pe_cycles, b.pe_cycles);
             }
+        }
+    }
+}
+
+#[test]
+fn streamed_sweep_rows_are_bit_identical_to_serial_for_any_worker_count() {
+    // The serving layer's streamed Sweep path rides run_sweep_with; its
+    // plan-order row emission must match the serial sweep exactly, for
+    // any pool size, with progress covering every cell.
+    let plan = acceptance_plan();
+    let serial = run_sweep_serial(&plan);
+    for workers in [1usize, 3, 8] {
+        let pool = Pool::new(workers);
+        let cache = Arc::new(LayerCache::new());
+        let mut streamed: Vec<(usize, String, u64)> = Vec::new();
+        let mut completions = 0usize;
+        let out = run_sweep_with(&plan, &pool, &cache, |e| match e {
+            SweepEvent::Progress { done, total } => {
+                assert_eq!(total, plan.len());
+                assert!(done >= 1 && done <= total);
+                completions += 1;
+            }
+            SweepEvent::Row { index, record } => {
+                streamed.push((index, record.network.clone(), record.total_cycles()));
+            }
+        });
+        assert_eq!(completions, plan.len(), "{workers} workers");
+        assert_eq!(streamed.len(), plan.len());
+        for (pos, ((index, network, cycles), s)) in
+            streamed.iter().zip(serial.records()).enumerate()
+        {
+            assert_eq!(*index, pos, "rows must stream in plan order");
+            assert_eq!(network, &s.network);
+            assert_eq!(*cycles, s.total_cycles(), "{workers} workers");
+        }
+        // the returned outcome is the same records the stream delivered
+        for (r, s) in out.records().iter().zip(serial.records()) {
+            assert_eq!(r.total_cycles(), s.total_cycles());
         }
     }
 }
