@@ -1,0 +1,110 @@
+//! End-to-end HTTP/SSE demo, no artifacts or features needed: boot the
+//! HTTP frontend on an ephemeral port over the simulation pool, then
+//! drive it with the bundled HTTP client — exactly what `fuseconv serve
+//! --http-port` + `curl` do, in one process. The SSE sweep arrives as
+//! incremental `row` events whose `data:` JSON is byte-identical to the
+//! TCP framing (see PROTOCOL.md §HTTP mapping).
+//!
+//! ```sh
+//! cargo run --release --example http_demo
+//! ```
+
+use fuseconv::coordinator::wire::encode_request_body;
+use fuseconv::coordinator::{
+    http_call, http_sse, ConfigPatch, Frame, HttpServer, Reply, Request, RequestBody, Router,
+    SimServer,
+};
+use fuseconv::sim::FuseVariant;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn main() {
+    // server side: simulation-only router behind the HTTP frontend
+    let router = Router::new(SimServer::new(0));
+    let server = HttpServer::bind("127.0.0.1:0", Arc::new(router)).expect("bind");
+    let addr = server.local_addr().to_string();
+    println!("http on {addr}");
+    let listener = std::thread::spawn(move || server.run().expect("serve"));
+    let timeout = Duration::from_secs(120);
+
+    // liveness + a one-shot simulate (the body is the terminal frame)
+    let reply = http_call(&addr, "/healthz", None, None, timeout).expect("healthz");
+    println!("GET /healthz -> {} {}", reply.status, reply.body.trim());
+    let req = Request::new(
+        1,
+        RequestBody::Simulate {
+            model: fuseconv::coordinator::ModelSpec::Zoo("mobilenet-v2".into()),
+            variant: FuseVariant::Half,
+            config: ConfigPatch::sized(16),
+        },
+    );
+    let reply = http_call(&addr, "/v1/simulate", Some(&encode_request_body(&req)), None, timeout)
+        .expect("simulate");
+    match reply.response().expect("terminal frame").result {
+        Ok(Reply::Sim(s)) => println!(
+            "POST /v1/simulate -> {} on {}: {} cycles ({:.3} ms)",
+            s.network, s.config_label, s.total_cycles, s.latency_ms
+        ),
+        other => println!("unexpected: {other:?}"),
+    }
+
+    // streamed sweep over SSE, with a running ETA from progress events
+    let sweep = Request::new(
+        2,
+        RequestBody::Sweep {
+            models: vec!["mobilenet-v3-small".into(), "mobilenet-v2".into()],
+            variants: vec![FuseVariant::Base, FuseVariant::Half],
+            configs: vec![
+                ConfigPatch::sized(8),
+                ConfigPatch::sized(16),
+                ConfigPatch::sized(32),
+            ],
+        },
+    );
+    let t0 = Instant::now();
+    let mut rows = 0usize;
+    let resp = http_sse(
+        &addr,
+        "/v1/sweep",
+        &encode_request_body(&sweep),
+        None,
+        timeout,
+        |_, frame| match frame {
+            Frame::Progress { done, total } if *done > 0 => {
+                let elapsed = t0.elapsed().as_secs_f64();
+                let eta = elapsed / *done as f64 * (total - done) as f64;
+                println!("event: progress {done}/{total} cells, eta {eta:.2}s");
+            }
+            Frame::Progress { .. } => {}
+            Frame::Row(row) => {
+                rows += 1;
+                println!(
+                    "event: row {:24} {:10} {:>3}x{:<3} -> {} cycles",
+                    row.network,
+                    row.variant.label(),
+                    row.rows,
+                    row.cols,
+                    row.total_cycles
+                );
+            }
+            Frame::Final(_) => {}
+        },
+    )
+    .expect("sse sweep");
+    match resp.result {
+        Ok(Reply::Sweep(merged)) => println!(
+            "sweep: {rows} rows streamed ({} merged) in {:.2}s",
+            merged.len(),
+            t0.elapsed().as_secs_f64()
+        ),
+        other => println!("unexpected: {other:?}"),
+    }
+
+    // stats, then a clean shutdown over HTTP
+    let reply = http_call(&addr, "/v1/stats", None, None, timeout).expect("stats");
+    println!("GET /v1/stats -> {}", reply.body.trim());
+    let reply = http_call(&addr, "/v1/shutdown", Some("{}"), None, timeout).expect("shutdown");
+    assert_eq!(reply.response().expect("ack").result, Ok(Reply::Done));
+    listener.join().expect("listener");
+    println!("clean shutdown");
+}

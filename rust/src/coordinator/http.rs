@@ -1,0 +1,881 @@
+//! HTTP/1.1 + SSE frontend: the same [`Service`] the TCP frontend
+//! serves, reachable from `curl`, dashboards, and anything else that
+//! speaks HTTP — zero dependencies, `std` networking only. Runs
+//! standalone or alongside the TCP listener on one shared
+//! [`Router`](super::server::Router) and [`StopLatch`]
+//! (`fuseconv serve --http-port`).
+//!
+//! Endpoint map (`PROTOCOL.md` §HTTP mapping is the normative spec):
+//!
+//! | endpoint | traffic |
+//! |---|---|
+//! | `POST /v1/infer` | one-shot JSON (the reply's terminal frame is the body) |
+//! | `POST /v1/simulate` | one-shot JSON |
+//! | `POST /v1/sweep` | SSE stream — one `progress`/`row`/`final` event per frame |
+//! | `GET /v1/stats` | one-shot JSON |
+//! | `GET /v1/zoo` | one-shot JSON |
+//! | `GET /healthz` | liveness: `200` while serving, `503` once shutdown latches |
+//! | `POST /v1/shutdown` | one-shot JSON; trips the shared stop latch |
+//!
+//! The HTTP rendering reuses the wire codec wholesale: a request body is
+//! the TCP envelope minus `v`/`op` (the URL carries both), a one-shot
+//! response body is the reply's terminal `final` frame, and each SSE
+//! `data:` line is the byte-identical frame JSON the TCP framing would
+//! send — so both transports share [`decode_frame`] and must agree
+//! cycle-for-cycle. Status codes are part of the contract (see
+//! [`status_of`]): `200` success, `400` [`ServeError::BadRequest`],
+//! `429` [`ServeError::Busy`], `503` [`ServeError::Shutdown`], `504`
+//! [`ServeError::Deadline`], plus `404`/`405` for unknown endpoints and
+//! methods. Deadlines ride a `timeout-ms` request header (or a
+//! `deadline_ms` body field), admission goes through the same two
+//! priority lanes as TCP traffic, and `--max-requests-per-conn` counts
+//! decoded requests per kept-alive connection exactly as the TCP budget
+//! does.
+//!
+//! ```
+//! use fuseconv::coordinator::http::status_of;
+//! use fuseconv::coordinator::ServeError;
+//! assert_eq!(status_of(&Err(ServeError::Busy)).0, 429);
+//! ```
+
+use super::net::{accept_loop, is_timeout, RequestBudget, StopLatch, MAX_TICKET_WAIT};
+use super::protocol::{
+    collapse_stream, Frame, RecvError, Reply, Request, RequestBody, Response, ServeError,
+    Service, SweepRow, Ticket, PROTOCOL_VERSION,
+};
+use super::wire::{
+    decode_frame, decode_request_body, encode_response, encode_sse_event, parse_json, Json,
+    WireError,
+};
+use std::fmt::Write as _;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Largest accepted HTTP request body. Inline-model simulate requests
+/// are the biggest legitimate payload; this is far above any of them.
+pub const MAX_BODY_BYTES: usize = 8 * 1024 * 1024;
+
+/// Read-poll interval: how often an idle kept-alive connection wakes to
+/// check the shutdown latch.
+const READ_POLL: Duration = Duration::from_millis(500);
+
+/// Once a request's first byte has arrived, the rest of its head and
+/// body must land within this window (a dribbling client cannot hold a
+/// handler hostage). Idle kept-alive connections are exempt.
+const REQUEST_READ_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Server-side socket write timeout (mirrors the TCP frontend): a
+/// client that accepts zero bytes for this long is declared dead.
+const WRITE_STALL_TIMEOUT: Duration = Duration::from_secs(600);
+
+/// How long the sweep path waits for the stream's first frame before
+/// committing to a `200` SSE response. An admission-time error
+/// (`busy`, `shutdown`) is always already buffered and maps to its
+/// proper status instead of a one-event error stream.
+const SSE_FIRST_FRAME_WAIT: Duration = Duration::from_millis(100);
+
+/// Wait bound for `/healthz`'s internal stats probe.
+const HEALTH_WAIT: Duration = Duration::from_secs(5);
+
+/// HTTP status line for a protocol result — the transport's half of the
+/// error taxonomy (`PROTOCOL.md` §Error taxonomy).
+pub fn status_of(result: &Result<Reply, ServeError>) -> (u16, &'static str) {
+    match result {
+        Ok(_) => (200, "OK"),
+        Err(ServeError::BadRequest(_)) => (400, "Bad Request"),
+        Err(ServeError::Busy) => (429, "Too Many Requests"),
+        Err(ServeError::Shutdown) => (503, "Service Unavailable"),
+        Err(ServeError::Deadline) => (504, "Gateway Timeout"),
+    }
+}
+
+/// A bound HTTP frontend. `bind` then `run`; `run` returns once the
+/// stop latch trips (a `POST /v1/shutdown` here, or a `Shutdown` served
+/// by any frontend sharing the latch).
+pub struct HttpServer {
+    listener: TcpListener,
+    addr: SocketAddr,
+    service: Arc<dyn Service>,
+    /// Per-connection request budget; `None` = unlimited.
+    max_requests_per_conn: Option<u64>,
+    stop: StopLatch,
+}
+
+impl HttpServer {
+    /// Bind `addr` (e.g. `127.0.0.1:0` for an ephemeral port) in front
+    /// of `service`, with no per-connection limits and a private stop
+    /// latch.
+    pub fn bind(addr: &str, service: Arc<dyn Service>) -> std::io::Result<HttpServer> {
+        let listener = TcpListener::bind(addr)?;
+        let addr = listener.local_addr()?;
+        Ok(HttpServer {
+            listener,
+            addr,
+            service,
+            max_requests_per_conn: None,
+            stop: StopLatch::new(),
+        })
+    }
+
+    /// Cap how many requests one kept-alive connection may submit; the
+    /// request that exceeds the budget is answered `429` and the
+    /// connection closes — identical accounting to the TCP frontend.
+    pub fn with_request_budget(mut self, budget: Option<u64>) -> HttpServer {
+        self.max_requests_per_conn = budget;
+        self
+    }
+
+    /// Share a shutdown latch with other frontends: a shutdown served
+    /// by any of them stops all of them.
+    pub fn with_stop(mut self, stop: StopLatch) -> HttpServer {
+        self.stop = stop;
+        self
+    }
+
+    /// The actual bound address (resolves `:0` to the ephemeral port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Accept-and-serve until the stop latch trips; joins every
+    /// connection handler before returning.
+    pub fn run(self) -> std::io::Result<()> {
+        self.stop.register(self.addr);
+        let service = self.service;
+        let stop = self.stop.clone();
+        let budget = self.max_requests_per_conn;
+        accept_loop(self.listener, self.stop, "fuseconv-http-conn", move |stream| {
+            handle_http_conn(stream, Arc::clone(&service), stop.clone(), budget)
+        })
+    }
+}
+
+/// One parsed request head.
+struct HttpHead {
+    method: String,
+    path: String,
+    body_len: usize,
+    /// `timeout-ms` header (deadline in milliseconds from admission).
+    timeout_ms: Option<u64>,
+    /// Close after this request (HTTP/1.0 default, or `connection: close`).
+    close: bool,
+    /// A `transfer-encoding` header was present (unsupported on requests).
+    has_transfer_encoding: bool,
+    /// An `expect: 100-continue` header was present — curl sends it for
+    /// bodies past ~1 KiB and waits for the interim response.
+    expect_continue: bool,
+}
+
+enum HeadRead {
+    Head(Box<HttpHead>),
+    /// EOF / stop latch / dead socket: close silently.
+    Closed,
+    /// Unparsable head: answer 400 and close.
+    Malformed(String),
+}
+
+fn read_head(reader: &mut BufReader<TcpStream>, stop: &StopLatch) -> HeadRead {
+    // --- request line (tolerate blank lines between requests) ---
+    let mut line = String::new();
+    let mut started: Option<Instant> = None;
+    let request_line = loop {
+        match reader.read_line(&mut line) {
+            Ok(0) => return HeadRead::Closed,
+            Ok(_) => {
+                if !line.ends_with('\n') {
+                    return HeadRead::Closed; // EOF mid-line
+                }
+                let t = line.trim();
+                if t.is_empty() {
+                    line.clear();
+                    continue;
+                }
+                break t.to_string();
+            }
+            Err(e) if is_timeout(&e) => {
+                if line.is_empty() {
+                    // idle between requests: only the latch closes us
+                    if stop.stopped() {
+                        return HeadRead::Closed;
+                    }
+                } else {
+                    // mid-request dribble: bounded patience
+                    let t0 = *started.get_or_insert_with(Instant::now);
+                    if t0.elapsed() > REQUEST_READ_TIMEOUT {
+                        return HeadRead::Malformed("request head timed out".into());
+                    }
+                }
+            }
+            Err(_) => return HeadRead::Closed,
+        }
+    };
+    let mut parts = request_line.split_whitespace();
+    let (Some(method), Some(target), Some(version)) = (parts.next(), parts.next(), parts.next())
+    else {
+        return HeadRead::Malformed(format!("bad request line {request_line:?}"));
+    };
+    let mut head = HttpHead {
+        method: method.to_string(),
+        // the endpoint map takes no query strings; drop one if present
+        path: target.split('?').next().unwrap_or(target).to_string(),
+        body_len: 0,
+        timeout_ms: None,
+        close: version.eq_ignore_ascii_case("HTTP/1.0"),
+        has_transfer_encoding: false,
+        expect_continue: false,
+    };
+    // --- headers, until the blank line ---
+    let deadline = Instant::now() + REQUEST_READ_TIMEOUT;
+    line.clear();
+    loop {
+        match reader.read_line(&mut line) {
+            Ok(0) => return HeadRead::Closed,
+            Ok(_) => {
+                if !line.ends_with('\n') {
+                    return HeadRead::Closed;
+                }
+                let t = line.trim();
+                if t.is_empty() {
+                    return HeadRead::Head(Box::new(head));
+                }
+                if let Some((name, value)) = t.split_once(':') {
+                    let name = name.trim().to_ascii_lowercase();
+                    let value = value.trim();
+                    match name.as_str() {
+                        "content-length" => match value.parse::<usize>() {
+                            Ok(n) => head.body_len = n,
+                            Err(_) => {
+                                return HeadRead::Malformed(format!(
+                                    "bad content-length {value:?}"
+                                ))
+                            }
+                        },
+                        "timeout-ms" => match value.parse::<u64>() {
+                            Ok(ms) => head.timeout_ms = Some(ms),
+                            Err(_) => {
+                                return HeadRead::Malformed(format!(
+                                    "bad timeout-ms {value:?}"
+                                ))
+                            }
+                        },
+                        "connection" => {
+                            let v = value.to_ascii_lowercase();
+                            if v.contains("close") {
+                                head.close = true;
+                            } else if v.contains("keep-alive") {
+                                head.close = false;
+                            }
+                        }
+                        "transfer-encoding" => head.has_transfer_encoding = true,
+                        "expect" => {
+                            head.expect_continue =
+                                value.to_ascii_lowercase().contains("100-continue");
+                        }
+                        _ => {}
+                    }
+                }
+                line.clear();
+            }
+            Err(e) if is_timeout(&e) => {
+                if Instant::now() > deadline {
+                    return HeadRead::Malformed("request head timed out".into());
+                }
+            }
+            Err(_) => return HeadRead::Closed,
+        }
+    }
+}
+
+/// Read exactly `len` body bytes, tolerating read-timeout polls; gives
+/// up on EOF, a dead socket, or a dribble past the request timeout.
+fn read_request_body(
+    reader: &mut BufReader<TcpStream>,
+    len: usize,
+    stop: &StopLatch,
+) -> Result<Vec<u8>, ()> {
+    let mut buf = vec![0u8; len];
+    let mut filled = 0;
+    let deadline = Instant::now() + REQUEST_READ_TIMEOUT;
+    while filled < len {
+        match reader.read(&mut buf[filled..]) {
+            Ok(0) => return Err(()),
+            Ok(n) => filled += n,
+            Err(e) if is_timeout(&e) => {
+                if stop.stopped() || Instant::now() > deadline {
+                    return Err(());
+                }
+            }
+            Err(_) => return Err(()),
+        }
+    }
+    Ok(buf)
+}
+
+enum Route {
+    /// A protocol operation; `sse` marks the streaming endpoint.
+    Op { op: &'static str, sse: bool },
+    Health,
+    NotFound,
+    MethodNotAllowed { allow: &'static str },
+}
+
+fn route(method: &str, path: &str) -> Route {
+    let need = |want: &'static str, op: &'static str, sse: bool| {
+        if method == want {
+            Route::Op { op, sse }
+        } else {
+            Route::MethodNotAllowed { allow: want }
+        }
+    };
+    match path {
+        "/healthz" => {
+            if method == "GET" {
+                Route::Health
+            } else {
+                Route::MethodNotAllowed { allow: "GET" }
+            }
+        }
+        "/v1/infer" => need("POST", "infer", false),
+        "/v1/simulate" => need("POST", "simulate", false),
+        "/v1/sweep" => need("POST", "sweep", true),
+        "/v1/shutdown" => need("POST", "shutdown", false),
+        "/v1/stats" => need("GET", "stats", false),
+        "/v1/zoo" => need("GET", "zoo", false),
+        _ => Route::NotFound,
+    }
+}
+
+/// Write one JSON response with explicit status; `close` adds
+/// `connection: close`, and `extra` is verbatim additional header
+/// lines (each `\r\n`-terminated, e.g. `allow: POST\r\n`).
+fn write_json(
+    out: &mut TcpStream,
+    status: u16,
+    phrase: &str,
+    id: u64,
+    body: &str,
+    close: bool,
+    extra: &str,
+) -> std::io::Result<()> {
+    let head = format!(
+        "HTTP/1.1 {status} {phrase}\r\ncontent-type: application/json\r\n\
+         content-length: {}\r\nx-request-id: {id}\r\n{extra}{}\r\n",
+        body.len(),
+        if close { "connection: close\r\n" } else { "" },
+    );
+    out.write_all(head.as_bytes())?;
+    out.write_all(body.as_bytes())?;
+    out.flush()
+}
+
+/// Write a one-shot response: the mapped status plus the terminal
+/// `final` frame as the JSON body.
+fn write_oneshot(out: &mut TcpStream, resp: &Response, close: bool) -> std::io::Result<()> {
+    let (status, phrase) = status_of(&resp.result);
+    let mut body = encode_response(resp);
+    body.push('\n');
+    write_json(out, status, phrase, resp.id, &body, close, "")
+}
+
+/// An error frame body for the plain-HTTP failure statuses (404/405).
+fn error_body(detail: String) -> String {
+    let mut body = encode_response(&Response::err(0, ServeError::BadRequest(detail)));
+    body.push('\n');
+    body
+}
+
+fn write_chunk(out: &mut TcpStream, payload: &str) -> std::io::Result<()> {
+    out.write_all(format!("{:x}\r\n", payload.len()).as_bytes())?;
+    out.write_all(payload.as_bytes())?;
+    out.write_all(b"\r\n")?;
+    out.flush()
+}
+
+fn finish_chunks(out: &mut TcpStream) -> bool {
+    out.write_all(b"0\r\n\r\n").and_then(|_| out.flush()).is_ok()
+}
+
+/// Stream a ticket as chunked SSE. Returns `false` once the connection
+/// is unusable.
+fn stream_sse(out: &mut TcpStream, mut ticket: Ticket, id: u64, first: Option<Frame>) -> bool {
+    let head = format!(
+        "HTTP/1.1 200 OK\r\ncontent-type: text/event-stream\r\ncache-control: no-cache\r\n\
+         transfer-encoding: chunked\r\nx-request-id: {id}\r\n\r\n"
+    );
+    if out.write_all(head.as_bytes()).is_err() {
+        return false;
+    }
+    if let Some(frame) = first {
+        let last = frame.is_final();
+        if write_chunk(out, &encode_sse_event(id, &frame)).is_err() {
+            return false;
+        }
+        if last {
+            return finish_chunks(out);
+        }
+    }
+    loop {
+        // Mirror the TCP stream forwarder: a wedged service becomes a
+        // typed `deadline`, a dropped sink a typed `shutdown` — the
+        // stream always ends with exactly one `final` event.
+        let frame = match ticket.recv_deadline(MAX_TICKET_WAIT) {
+            Ok(f) => f,
+            Err(RecvError::Deadline) => Frame::Final(Err(ServeError::Deadline)),
+            Err(RecvError::Disconnected) => Frame::Final(Err(ServeError::Shutdown)),
+        };
+        let last = frame.is_final();
+        if write_chunk(out, &encode_sse_event(id, &frame)).is_err() {
+            return false;
+        }
+        if last {
+            return finish_chunks(out);
+        }
+    }
+}
+
+/// Serve the streaming endpoint: admission-time terminal errors answer
+/// as plain JSON with their mapped status (`429` for a full batch
+/// lane); anything live becomes a `200` SSE stream.
+fn serve_sse(out: &mut TcpStream, mut ticket: Ticket, id: u64, close: bool) -> bool {
+    match ticket.recv_deadline(SSE_FIRST_FRAME_WAIT) {
+        Ok(Frame::Final(result)) => write_oneshot(out, &Response { id, result }, close).is_ok(),
+        Ok(first) => stream_sse(out, ticket, id, Some(first)),
+        Err(RecvError::Deadline) => stream_sse(out, ticket, id, None),
+        Err(RecvError::Disconnected) => {
+            write_oneshot(out, &Response::err(id, ServeError::Shutdown), close).is_ok()
+        }
+    }
+}
+
+/// `GET /healthz`: probe the service with a `Stats` call so the status
+/// reflects its real state (`503` once the shutdown latch has tripped).
+fn serve_health(out: &mut TcpStream, service: &Arc<dyn Service>, close: bool) -> bool {
+    let resp = service.call(Request::new(0, RequestBody::Stats)).wait_deadline(HEALTH_WAIT);
+    if resp.is_ok() {
+        let body = format!("{{\"status\":\"ok\",\"protocol_version\":{PROTOCOL_VERSION}}}\n");
+        write_json(out, 200, "OK", 0, &body, close, "").is_ok()
+    } else {
+        write_oneshot(out, &resp, close).is_ok()
+    }
+}
+
+fn handle_http_conn(
+    stream: TcpStream,
+    service: Arc<dyn Service>,
+    stop: StopLatch,
+    cap: Option<u64>,
+) {
+    let _ = stream.set_read_timeout(Some(READ_POLL));
+    let _ = stream.set_write_timeout(Some(WRITE_STALL_TIMEOUT));
+    let Ok(read_half) = stream.try_clone() else { return };
+    let mut reader = BufReader::new(read_half);
+    let mut out = stream;
+    let mut budget = RequestBudget::new(cap);
+    // Requests whose body carries no `id` get a per-connection counter.
+    let mut next_auto_id: u64 = 1;
+    let mut saw_shutdown = false;
+    loop {
+        let head = match read_head(&mut reader, &stop) {
+            HeadRead::Head(h) => *h,
+            HeadRead::Closed => break,
+            HeadRead::Malformed(msg) => {
+                let _ = write_json(&mut out, 400, "Bad Request", 0, &error_body(msg), true, "");
+                break;
+            }
+        };
+        if head.has_transfer_encoding {
+            let msg = "chunked request bodies are unsupported; send content-length".to_string();
+            let _ = write_json(&mut out, 400, "Bad Request", 0, &error_body(msg), true, "");
+            break;
+        }
+        if head.body_len > MAX_BODY_BYTES {
+            let msg = format!("body of {} bytes exceeds the {MAX_BODY_BYTES} limit", head.body_len);
+            let _ = write_json(&mut out, 400, "Bad Request", 0, &error_body(msg), true, "");
+            break;
+        }
+        // curl sends `Expect: 100-continue` for bodies past ~1 KiB and
+        // waits ~1 s for the interim response before transmitting; ack
+        // it so large inline-model POSTs don't eat that stall.
+        if head.expect_continue && head.body_len > 0 {
+            let _ = out.write_all(b"HTTP/1.1 100 Continue\r\n\r\n").and_then(|_| out.flush());
+        }
+        // Consume the body before routing so keep-alive framing survives
+        // 404s and bad methods.
+        let Ok(body_bytes) = read_request_body(&mut reader, head.body_len, &stop) else {
+            break;
+        };
+        let (op, sse) = match route(&head.method, &head.path) {
+            Route::Op { op, sse } => (op, sse),
+            Route::Health => {
+                if !serve_health(&mut out, &service, head.close) || head.close {
+                    break;
+                }
+                continue;
+            }
+            Route::NotFound => {
+                let msg = format!("no such endpoint: {} {}", head.method, head.path);
+                if write_json(&mut out, 404, "Not Found", 0, &error_body(msg), head.close, "")
+                    .is_err()
+                    || head.close
+                {
+                    break;
+                }
+                continue;
+            }
+            Route::MethodNotAllowed { allow } => {
+                let msg = format!("{} only accepts {allow}", head.path);
+                if write_json(
+                    &mut out,
+                    405,
+                    "Method Not Allowed",
+                    0,
+                    &error_body(msg),
+                    head.close,
+                    &format!("allow: {allow}\r\n"),
+                )
+                .is_err()
+                    || head.close
+                {
+                    break;
+                }
+                continue;
+            }
+        };
+        // --- body decode (shared with the TCP framing via wire.rs) ---
+        let parsed = String::from_utf8(body_bytes)
+            .map_err(|_| WireError("body is not utf-8".into()))
+            .and_then(|text| {
+                if text.trim().is_empty() {
+                    Ok(Json::Obj(Vec::new()))
+                } else {
+                    parse_json(text.trim())
+                }
+            });
+        let json = match parsed {
+            Ok(j) => j,
+            Err(e) => {
+                let resp = Response::err(0, ServeError::BadRequest(e.to_string()));
+                if write_oneshot(&mut out, &resp, head.close).is_err() || head.close {
+                    break;
+                }
+                continue;
+            }
+        };
+        let id = match json.get("id").and_then(Json::as_u64) {
+            Some(i) => i,
+            None => {
+                let i = next_auto_id;
+                next_auto_id += 1;
+                i
+            }
+        };
+        let deadline_ms = json.get("deadline_ms").and_then(Json::as_u64).or(head.timeout_ms);
+        let body = match decode_request_body(op, &json) {
+            Ok(b) => b,
+            Err(e) => {
+                let resp = Response::err(id, ServeError::BadRequest(e.to_string()));
+                if write_oneshot(&mut out, &resp, head.close).is_err() || head.close {
+                    break;
+                }
+                continue;
+            }
+        };
+        // Only decoded requests count against the budget, exactly like
+        // the TCP frontend; the over-budget request is answered 429 and
+        // the connection closes.
+        if !budget.admit() {
+            let _ = write_oneshot(&mut out, &Response::err(id, ServeError::Busy), true);
+            break;
+        }
+        saw_shutdown = matches!(body, RequestBody::Shutdown);
+        let mut req = Request::new(id, body);
+        if let Some(ms) = deadline_ms {
+            req = req.with_deadline_ms(ms);
+        }
+        let ok = if sse {
+            serve_sse(&mut out, service.call(req), id, head.close)
+        } else {
+            let wait = deadline_ms.map(Duration::from_millis).unwrap_or(MAX_TICKET_WAIT);
+            let resp = service.call(req).wait_deadline(wait);
+            write_oneshot(&mut out, &resp, head.close || saw_shutdown).is_ok()
+        };
+        if !ok || saw_shutdown || head.close {
+            break;
+        }
+    }
+    let _ = out.shutdown(std::net::Shutdown::Both);
+    if saw_shutdown {
+        stop.trip();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Client
+// ---------------------------------------------------------------------------
+
+/// One-shot HTTP reply: the status code plus the (de-chunked) body.
+#[derive(Debug)]
+pub struct HttpReply {
+    pub status: u16,
+    pub body: String,
+}
+
+impl HttpReply {
+    /// Decode the body as the terminal protocol frame every one-shot
+    /// endpoint returns.
+    pub fn response(&self) -> Result<Response, WireError> {
+        super::wire::decode_response(self.body.trim())
+    }
+}
+
+fn http_connect(addr: &str, timeout: Duration) -> Result<TcpStream, WireError> {
+    let sockaddr = addr
+        .to_socket_addrs()
+        .map_err(|e| WireError(format!("resolve {addr}: {e}")))?
+        .next()
+        .ok_or_else(|| WireError(format!("unresolvable address {addr:?}")))?;
+    let stream = if timeout.is_zero() {
+        TcpStream::connect(sockaddr)
+    } else {
+        TcpStream::connect_timeout(&sockaddr, timeout)
+    }
+    .map_err(|e| WireError(format!("connect {addr}: {e}")))?;
+    if !timeout.is_zero() {
+        let _ = stream.set_read_timeout(Some(timeout));
+        let _ = stream.set_write_timeout(Some(timeout));
+    }
+    Ok(stream)
+}
+
+fn send_http_request(
+    stream: &mut TcpStream,
+    host: &str,
+    path: &str,
+    body: Option<&str>,
+    timeout_ms: Option<u64>,
+) -> Result<(), WireError> {
+    let mut req = String::new();
+    let method = if body.is_some() { "POST" } else { "GET" };
+    let _ = write!(req, "{method} {path} HTTP/1.1\r\nhost: {host}\r\nconnection: close\r\n");
+    if let Some(ms) = timeout_ms {
+        let _ = write!(req, "timeout-ms: {ms}\r\n");
+    }
+    match body {
+        Some(payload) => {
+            let _ = write!(
+                req,
+                "content-type: application/json\r\ncontent-length: {}\r\n\r\n{payload}",
+                payload.len()
+            );
+        }
+        None => req.push_str("\r\n"),
+    }
+    stream.write_all(req.as_bytes()).map_err(|e| WireError(format!("send: {e}")))
+}
+
+fn read_line_full(reader: &mut BufReader<TcpStream>, line: &mut String) -> Result<(), WireError> {
+    match reader.read_line(line) {
+        Ok(0) => Err(WireError("connection closed by server".into())),
+        Ok(_) => Ok(()),
+        Err(e) => Err(WireError(format!("read: {e}"))),
+    }
+}
+
+fn read_reply_head(
+    reader: &mut BufReader<TcpStream>,
+) -> Result<(u16, Vec<(String, String)>), WireError> {
+    let mut line = String::new();
+    read_line_full(reader, &mut line)?;
+    let status = line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse::<u16>().ok())
+        .ok_or_else(|| WireError(format!("bad status line {:?}", line.trim())))?;
+    let mut headers = Vec::new();
+    loop {
+        let mut h = String::new();
+        read_line_full(reader, &mut h)?;
+        let t = h.trim();
+        if t.is_empty() {
+            return Ok((status, headers));
+        }
+        if let Some((name, value)) = t.split_once(':') {
+            headers.push((name.trim().to_ascii_lowercase(), value.trim().to_string()));
+        }
+    }
+}
+
+fn header<'a>(headers: &'a [(String, String)], name: &str) -> Option<&'a str> {
+    headers.iter().find(|(k, _)| k == name).map(|(_, v)| v.as_str())
+}
+
+/// Read one chunk of a chunked body; `None` on the terminating 0-chunk.
+fn read_chunk_payload(reader: &mut BufReader<TcpStream>) -> Result<Option<String>, WireError> {
+    let mut line = String::new();
+    read_line_full(reader, &mut line)?;
+    let size_str = line.trim().split(';').next().unwrap_or("").trim();
+    let size = usize::from_str_radix(size_str, 16)
+        .map_err(|_| WireError(format!("bad chunk size {size_str:?}")))?;
+    if size == 0 {
+        let mut end = String::new();
+        let _ = reader.read_line(&mut end); // trailing CRLF (no trailers)
+        return Ok(None);
+    }
+    let mut buf = vec![0u8; size + 2]; // payload + CRLF
+    reader
+        .read_exact(&mut buf)
+        .map_err(|e| WireError(format!("read chunk: {e}")))?;
+    buf.truncate(size);
+    String::from_utf8(buf).map(Some).map_err(|_| WireError("chunk is not utf-8".into()))
+}
+
+fn read_reply_body(
+    reader: &mut BufReader<TcpStream>,
+    headers: &[(String, String)],
+) -> Result<String, WireError> {
+    if header(headers, "transfer-encoding")
+        .is_some_and(|v| v.to_ascii_lowercase().contains("chunked"))
+    {
+        let mut body = String::new();
+        while let Some(chunk) = read_chunk_payload(reader)? {
+            body.push_str(&chunk);
+        }
+        return Ok(body);
+    }
+    if let Some(len) = header(headers, "content-length") {
+        let len: usize =
+            len.parse().map_err(|_| WireError(format!("bad content-length {len:?}")))?;
+        let mut buf = vec![0u8; len];
+        reader.read_exact(&mut buf).map_err(|e| WireError(format!("read body: {e}")))?;
+        return String::from_utf8(buf).map_err(|_| WireError("body is not utf-8".into()));
+    }
+    // no framing: connection-close delimited
+    let mut body = String::new();
+    reader
+        .read_to_string(&mut body)
+        .map_err(|e| WireError(format!("read body: {e}")))?;
+    Ok(body)
+}
+
+/// One-shot HTTP call: `Some(body)` ⇒ `POST`, `None` ⇒ `GET`. A
+/// `timeout_ms` is sent as the `timeout-ms` deadline header; `timeout`
+/// bounds the client's own socket operations (`Duration::ZERO`
+/// disables it).
+pub fn http_call(
+    addr: &str,
+    path: &str,
+    body: Option<&str>,
+    timeout_ms: Option<u64>,
+    timeout: Duration,
+) -> Result<HttpReply, WireError> {
+    let mut stream = http_connect(addr, timeout)?;
+    send_http_request(&mut stream, addr, path, body, timeout_ms)?;
+    let mut reader = BufReader::new(stream);
+    let (status, headers) = read_reply_head(&mut reader)?;
+    let body = read_reply_body(&mut reader, &headers)?;
+    Ok(HttpReply { status, body })
+}
+
+/// `POST` an SSE endpoint (`/v1/sweep`) and invoke `on_frame` for every
+/// event as it arrives, including the terminal one. Returns the
+/// collapsed [`Response`] (streamed rows merged, mirroring
+/// [`Ticket::wait`]); a non-streaming answer — an admission-time error
+/// with its mapped status — decodes its one-shot body instead and
+/// surfaces it through `on_frame` as the final frame.
+pub fn http_sse<F>(
+    addr: &str,
+    path: &str,
+    body: &str,
+    timeout_ms: Option<u64>,
+    timeout: Duration,
+    mut on_frame: F,
+) -> Result<Response, WireError>
+where
+    F: FnMut(u64, &Frame),
+{
+    let mut stream = http_connect(addr, timeout)?;
+    send_http_request(&mut stream, addr, path, Some(body), timeout_ms)?;
+    let mut reader = BufReader::new(stream);
+    let (_status, headers) = read_reply_head(&mut reader)?;
+    let is_sse = header(&headers, "content-type")
+        .is_some_and(|v| v.starts_with("text/event-stream"));
+    if !is_sse {
+        let body = read_reply_body(&mut reader, &headers)?;
+        let resp = super::wire::decode_response(body.trim())?;
+        on_frame(resp.id, &Frame::Final(resp.result.clone()));
+        return Ok(resp);
+    }
+    let mut buf = String::new();
+    let mut rows: Vec<SweepRow> = Vec::new();
+    loop {
+        let Some(chunk) = read_chunk_payload(&mut reader)? else {
+            return Err(WireError("SSE stream ended without a final frame".into()));
+        };
+        buf.push_str(&chunk);
+        // events may span chunks; a blank line terminates each one
+        while let Some(pos) = buf.find("\n\n") {
+            let event: String = buf.drain(..pos + 2).collect();
+            let Some(data) = event.lines().find_map(|l| l.strip_prefix("data:")) else {
+                continue;
+            };
+            let (id, frame) = decode_frame(data.trim())?;
+            on_frame(id, &frame);
+            match frame {
+                Frame::Progress { .. } => {}
+                Frame::Row(row) => rows.push(row),
+                Frame::Final(result) => {
+                    return Ok(Response { id, result: collapse_stream(result, rows) });
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn status_mapping_covers_every_error() {
+        assert_eq!(status_of(&Ok(Reply::Done)).0, 200);
+        assert_eq!(status_of(&Err(ServeError::BadRequest("x".into()))).0, 400);
+        assert_eq!(status_of(&Err(ServeError::Busy)).0, 429);
+        assert_eq!(status_of(&Err(ServeError::Shutdown)).0, 503);
+        assert_eq!(status_of(&Err(ServeError::Deadline)).0, 504);
+    }
+
+    #[test]
+    fn route_table_matches_the_endpoint_map() {
+        assert!(matches!(route("POST", "/v1/infer"), Route::Op { op: "infer", sse: false }));
+        assert!(matches!(
+            route("POST", "/v1/simulate"),
+            Route::Op { op: "simulate", sse: false }
+        ));
+        assert!(matches!(route("POST", "/v1/sweep"), Route::Op { op: "sweep", sse: true }));
+        assert!(matches!(route("GET", "/v1/stats"), Route::Op { op: "stats", sse: false }));
+        assert!(matches!(route("GET", "/v1/zoo"), Route::Op { op: "zoo", sse: false }));
+        assert!(matches!(
+            route("POST", "/v1/shutdown"),
+            Route::Op { op: "shutdown", sse: false }
+        ));
+        assert!(matches!(route("GET", "/healthz"), Route::Health));
+        // query strings are stripped before routing
+        assert!(matches!(route("GET", "/v1/stats"), Route::Op { .. }));
+        assert!(matches!(route("GET", "/v1/sweep"), Route::MethodNotAllowed { allow: "POST" }));
+        assert!(matches!(route("POST", "/v1/stats"), Route::MethodNotAllowed { allow: "GET" }));
+        assert!(matches!(route("GET", "/nope"), Route::NotFound));
+    }
+
+    #[test]
+    fn one_shot_bodies_are_terminal_frames() {
+        let reply = HttpReply {
+            status: 429,
+            body: "{\"v\":2,\"id\":7,\"frame\":\"final\",\"err\":{\"code\":\"busy\"}}\n".into(),
+        };
+        let resp = reply.response().unwrap();
+        assert_eq!(resp.id, 7);
+        assert_eq!(resp.result, Err(ServeError::Busy));
+    }
+}

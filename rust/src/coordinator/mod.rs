@@ -2,10 +2,14 @@
 //! search (EA + OFA-NAS), and the unified serving surface — typed
 //! protocol ([`protocol`]), batched inference + simulation services
 //! behind one [`Service`] trait ([`server`]), the JSON wire codec
-//! ([`wire`]), and the TCP frontend ([`net`]).
+//! ([`wire`]), and two transports over the same service: the TCP frame
+//! frontend ([`net`]) and the HTTP/SSE frontend ([`http`]). The wire
+//! contract both transports render is specified normatively in
+//! `PROTOCOL.md` at the repository root.
 
 pub mod batcher;
 pub mod evaluator;
+pub mod http;
 pub mod mapping;
 pub mod net;
 pub mod protocol;
@@ -14,7 +18,8 @@ pub mod server;
 pub mod wire;
 
 pub use evaluator::{Evaluator, HybridSpace, NetEval};
-pub use net::{request_once, WireClient, WireServer};
+pub use http::{http_call, http_sse, HttpReply, HttpServer};
+pub use net::{request_once, StopLatch, WireClient, WireServer};
 pub use protocol::{
     ConfigPatch, Frame, FrameSink, ModelSpec, Priority, RecvError, Reply, Request,
     RequestBody, Response, ServeError, Service, SweepRow, Ticket, PROTOCOL_VERSION,

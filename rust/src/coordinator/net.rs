@@ -16,17 +16,33 @@
 //! Per-connection limits: an optional request budget
 //! (`--max-requests-per-conn`) bounds how many requests one connection
 //! may submit; the first request past the budget is answered with a
-//! terminal `busy` frame and the connection is closed.
+//! terminal `busy` frame and the connection is closed. The writer
+//! channel is *bounded* ([`WRITER_BOUND`]): a client that stops reading
+//! backs the channel up and pauses the connection's stream forwarders
+//! (which in turn pause the sweep coordinator through the bounded
+//! [`Ticket`] buffer) instead of buffering frames without limit.
 //!
 //! Lifecycle: a decoded `Shutdown` frame is forwarded to the service
 //! (the [`Router`](super::server::Router) latches closed and acks
-//! `Done`), the ack is flushed, and the accept loop is released.
-//! Shutdown then *drains*: every connection reader polls the stop latch
-//! (reads carry a short timeout), so idle connections close promptly
-//! while queued frames still flush through each connection's writer —
-//! in-flight streams are never cut off, and [`WireServer::run`] returns
-//! once every handler has exited. Frames that fail to decode answer a
+//! `Done`), the ack is flushed, and the [`StopLatch`] trips — releasing
+//! the accept loop of *every* frontend registered on it (the HTTP
+//! listener of [`http`](super::http) shares the latch when `fuseconv
+//! serve --http-port` runs both). Shutdown then *drains*: every
+//! connection reader polls the latch (reads carry a short timeout), so
+//! idle connections close promptly while queued frames still flush
+//! through each connection's writer — in-flight streams are never cut
+//! off (only a connection that is both backed up and unread past the
+//! stall timeout is abandoned), and [`WireServer::run`] returns once
+//! every handler has exited. Frames that fail to decode answer a
 //! terminal `bad_request` without killing the connection.
+//!
+//! ```
+//! use fuseconv::coordinator::StopLatch;
+//! let latch = StopLatch::new();
+//! assert!(!latch.stopped());
+//! latch.trip(); // releases every listener registered on the latch
+//! assert!(latch.stopped());
+//! ```
 
 use super::protocol::{
     collapse_stream, Frame, RecvError, Request, RequestBody, Response, ServeError, Service,
@@ -39,7 +55,7 @@ use std::collections::{HashMap, VecDeque};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{mpsc, Arc};
+use std::sync::{mpsc, Arc, Mutex};
 use std::thread;
 use std::time::Duration;
 
@@ -48,42 +64,200 @@ use std::time::Duration;
 /// error, not a wedged connection.
 pub const MAX_TICKET_WAIT: Duration = Duration::from_secs(600);
 
+/// Bound on a connection's writer channel, in frames (ROADMAP
+/// backpressure item): the reader and every stream forwarder pause once
+/// this many frames are queued for a client that is not draining its
+/// socket, rather than buffering without limit.
+pub const WRITER_BOUND: usize = 128;
+
 /// Read-poll interval on server-side connections: how often an idle
 /// reader wakes to check the shutdown latch.
 const READ_POLL: Duration = Duration::from_millis(500);
 
+/// Poll interval while a full writer channel is backpressuring a send.
+const WRITE_POLL: Duration = Duration::from_millis(5);
+
+/// Server-side socket write timeout: a connection that accepts zero
+/// bytes for this long is declared dead and closed (the one case where
+/// an in-flight stream is cut off). Matches [`MAX_TICKET_WAIT`].
+const WRITE_STALL_TIMEOUT: Duration = Duration::from_secs(600);
+
 /// A read error that only means "nothing arrived within the timeout"
 /// (Unix reports WouldBlock, Windows TimedOut).
-fn is_timeout(e: &std::io::Error) -> bool {
+pub(crate) fn is_timeout(e: &std::io::Error) -> bool {
     matches!(
         e.kind(),
         std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
     )
 }
 
+// ---------------------------------------------------------------------------
+// Shared frontend scaffolding (TCP frames + HTTP)
+// ---------------------------------------------------------------------------
+
+#[derive(Debug)]
+struct StopInner {
+    stop: AtomicBool,
+    /// Listener addresses to self-dial on trip, releasing blocked
+    /// `accept` calls.
+    listeners: Mutex<Vec<SocketAddr>>,
+}
+
+/// Shared shutdown latch for every wire frontend serving one deployment.
+/// Each listener registers its bound address; [`StopLatch::trip`] sets
+/// the stop flag and dials every registered listener so blocked accept
+/// loops wake up and exit. Cloning shares the latch.
+#[derive(Debug, Clone)]
+pub struct StopLatch {
+    inner: Arc<StopInner>,
+}
+
+impl StopLatch {
+    pub fn new() -> StopLatch {
+        StopLatch {
+            inner: Arc::new(StopInner {
+                stop: AtomicBool::new(false),
+                listeners: Mutex::new(Vec::new()),
+            }),
+        }
+    }
+
+    /// Has shutdown been requested?
+    pub fn stopped(&self) -> bool {
+        self.inner.stop.load(Ordering::Acquire)
+    }
+
+    /// Register a listener to be released (self-dialed) on [`trip`](StopLatch::trip).
+    pub fn register(&self, addr: SocketAddr) {
+        self.inner.listeners.lock().unwrap().push(addr);
+    }
+
+    /// Latch shutdown and release every registered accept loop.
+    pub fn trip(&self) {
+        self.inner.stop.store(true, Ordering::Release);
+        for addr in self.inner.listeners.lock().unwrap().iter() {
+            let _ = TcpStream::connect(dial_addr(*addr));
+        }
+    }
+}
+
+impl Default for StopLatch {
+    fn default() -> StopLatch {
+        StopLatch::new()
+    }
+}
+
+/// Per-connection request budget, counted identically by the TCP and
+/// HTTP frontends: only *decoded* requests consume a slot (malformed
+/// input answers `bad_request` for free), and the first request past
+/// the cap is answered `busy` before the connection closes.
+pub(crate) struct RequestBudget {
+    cap: Option<u64>,
+    used: u64,
+}
+
+impl RequestBudget {
+    pub(crate) fn new(cap: Option<u64>) -> RequestBudget {
+        RequestBudget { cap, used: 0 }
+    }
+
+    /// Count one decoded request; `false` once it exceeds the budget.
+    pub(crate) fn admit(&mut self) -> bool {
+        self.used += 1;
+        match self.cap {
+            Some(cap) => self.used <= cap,
+            None => true,
+        }
+    }
+}
+
+/// The accept loop both frontends share: accept until the stop latch
+/// trips, spawn one named handler thread per connection (transient
+/// accept failures back off instead of spinning), and join every
+/// handler before returning so shutdown always drains.
+pub(crate) fn accept_loop(
+    listener: TcpListener,
+    stop: StopLatch,
+    thread_name: &str,
+    handler: impl Fn(TcpStream) + Send + Sync + 'static,
+) -> std::io::Result<()> {
+    let handler = Arc::new(handler);
+    let mut handlers: Vec<thread::JoinHandle<()>> = Vec::new();
+    for conn in listener.incoming() {
+        if stop.stopped() {
+            break;
+        }
+        let stream = match conn {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("fuseconv serve: accept error: {e}");
+                thread::sleep(Duration::from_millis(50));
+                continue;
+            }
+        };
+        let h = Arc::clone(&handler);
+        let t = thread::Builder::new()
+            .name(thread_name.into())
+            .spawn(move || h(stream))
+            .expect("spawn connection handler");
+        handlers.push(t);
+        // Reap finished handlers so a long-lived listener serving many
+        // short connections doesn't grow the join list without bound.
+        let mut live = Vec::with_capacity(handlers.len());
+        for t in handlers.drain(..) {
+            if t.is_finished() {
+                let _ = t.join();
+            } else {
+                live.push(t);
+            }
+        }
+        handlers = live;
+    }
+    for t in handlers {
+        let _ = t.join();
+    }
+    Ok(())
+}
+
 /// A bound TCP frontend. `bind` then `run`; `run` returns after a
-/// `Shutdown` request has been served.
+/// `Shutdown` request has been served (or the shared [`StopLatch`]
+/// trips from another frontend).
 pub struct WireServer {
     listener: TcpListener,
     addr: SocketAddr,
     service: Arc<dyn Service>,
     /// Per-connection request budget; `None` = unlimited.
     max_requests_per_conn: Option<u64>,
+    stop: StopLatch,
 }
 
 impl WireServer {
     /// Bind `addr` (e.g. `127.0.0.1:0` for an ephemeral port) in front
-    /// of `service`, with no per-connection limits.
+    /// of `service`, with no per-connection limits and a private stop
+    /// latch.
     pub fn bind(addr: &str, service: Arc<dyn Service>) -> std::io::Result<WireServer> {
         let listener = TcpListener::bind(addr)?;
         let addr = listener.local_addr()?;
-        Ok(WireServer { listener, addr, service, max_requests_per_conn: None })
+        Ok(WireServer {
+            listener,
+            addr,
+            service,
+            max_requests_per_conn: None,
+            stop: StopLatch::new(),
+        })
     }
 
     /// Cap how many requests one connection may submit. The request that
     /// exceeds the budget is answered `busy` and the connection closes.
     pub fn with_request_budget(mut self, budget: Option<u64>) -> WireServer {
         self.max_requests_per_conn = budget;
+        self
+    }
+
+    /// Share a shutdown latch with other frontends: a `Shutdown` served
+    /// by any of them stops all of them.
+    pub fn with_stop(mut self, stop: StopLatch) -> WireServer {
+        self.stop = stop;
         self
     }
 
@@ -95,36 +269,13 @@ impl WireServer {
     /// Accept-and-serve until a `Shutdown` frame arrives; joins every
     /// connection handler before returning.
     pub fn run(self) -> std::io::Result<()> {
-        let stop = Arc::new(AtomicBool::new(false));
-        let mut handlers = Vec::new();
-        for conn in self.listener.incoming() {
-            if stop.load(Ordering::Acquire) {
-                break;
-            }
-            let stream = match conn {
-                Ok(s) => s,
-                Err(e) => {
-                    // Transient accept failure (e.g. fd exhaustion):
-                    // back off instead of spinning hot, and say so.
-                    eprintln!("fuseconv serve: accept error: {e}");
-                    thread::sleep(Duration::from_millis(50));
-                    continue;
-                }
-            };
-            let service = Arc::clone(&self.service);
-            let stop = Arc::clone(&stop);
-            let self_addr = self.addr;
-            let budget = self.max_requests_per_conn;
-            let h = thread::Builder::new()
-                .name("fuseconv-conn".into())
-                .spawn(move || handle_conn(stream, service, stop, self_addr, budget))
-                .expect("spawn connection handler");
-            handlers.push(h);
-        }
-        for h in handlers {
-            let _ = h.join();
-        }
-        Ok(())
+        self.stop.register(self.addr);
+        let service = self.service;
+        let stop = self.stop.clone();
+        let budget = self.max_requests_per_conn;
+        accept_loop(self.listener, self.stop, "fuseconv-conn", move |stream| {
+            handle_conn(stream, Arc::clone(&service), stop.clone(), budget)
+        })
     }
 }
 
@@ -137,26 +288,54 @@ fn salvage_id(line: &str) -> u64 {
         .unwrap_or(0)
 }
 
+/// Backpressure-aware send into a connection's bounded writer channel:
+/// waits (politely polling) while the channel is full, gives up when
+/// the writer is gone or — so a backed-up connection cannot park
+/// shutdown forever — once the stop latch trips mid-wait. Returns
+/// `false` when the frame could not be delivered.
+fn send_frame(
+    out: &mpsc::SyncSender<(u64, Frame)>,
+    mut item: (u64, Frame),
+    stop: &StopLatch,
+) -> bool {
+    loop {
+        match out.try_send(item) {
+            Ok(()) => return true,
+            Err(mpsc::TrySendError::Full(back)) => {
+                if stop.stopped() {
+                    return false;
+                }
+                item = back;
+                thread::sleep(WRITE_POLL);
+            }
+            Err(mpsc::TrySendError::Disconnected(_)) => return false,
+        }
+    }
+}
+
 /// Drain one ticket's frame stream into the connection's shared writer
 /// channel, tagging every frame with the request id. A forwarder always
 /// terminates the stream with a `final` frame, even when the service
-/// wedges (typed `deadline`) or drops the sink (typed `shutdown`).
-fn forward_stream(mut ticket: Ticket, out: mpsc::Sender<(u64, Frame)>) {
+/// wedges (typed `deadline`) or drops the sink (typed `shutdown`); a
+/// full writer channel pauses the forwarder (and, transitively, the
+/// sweep coordinator behind the bounded ticket buffer) until the client
+/// drains.
+fn forward_stream(mut ticket: Ticket, out: mpsc::SyncSender<(u64, Frame)>, stop: StopLatch) {
     let id = ticket.id();
     loop {
         match ticket.recv_deadline(MAX_TICKET_WAIT) {
             Ok(frame) => {
                 let last = frame.is_final();
-                if out.send((id, frame)).is_err() || last {
+                if !send_frame(&out, (id, frame), &stop) || last {
                     break;
                 }
             }
             Err(RecvError::Deadline) => {
-                let _ = out.send((id, Frame::Final(Err(ServeError::Deadline))));
+                let _ = send_frame(&out, (id, Frame::Final(Err(ServeError::Deadline))), &stop);
                 break;
             }
             Err(RecvError::Disconnected) => {
-                let _ = out.send((id, Frame::Final(Err(ServeError::Shutdown))));
+                let _ = send_frame(&out, (id, Frame::Final(Err(ServeError::Shutdown))), &stop);
                 break;
             }
         }
@@ -166,18 +345,21 @@ fn forward_stream(mut ticket: Ticket, out: mpsc::Sender<(u64, Frame)>) {
 fn handle_conn(
     stream: TcpStream,
     service: Arc<dyn Service>,
-    stop: Arc<AtomicBool>,
-    self_addr: SocketAddr,
+    stop: StopLatch,
     budget: Option<u64>,
 ) {
     // Reads poll: an idle connection must notice the shutdown latch and
-    // close instead of parking `run`'s join forever.
+    // close instead of parking `run`'s join forever. Writes time out so
+    // a socket that accepts zero bytes eventually counts as dead.
     let _ = stream.set_read_timeout(Some(READ_POLL));
+    let _ = stream.set_write_timeout(Some(WRITE_STALL_TIMEOUT));
     let Ok(read_half) = stream.try_clone() else { return };
     let mut reader = BufReader::new(read_half);
     // One writer thread serializes interleaved frames from every
     // in-flight stream (plus immediate error frames from the reader).
-    let (wtx, wrx) = mpsc::channel::<(u64, Frame)>();
+    // The channel is bounded: a client that stops draining its socket
+    // backs it up and pauses the senders (see WRITER_BOUND).
+    let (wtx, wrx) = mpsc::sync_channel::<(u64, Frame)>(WRITER_BOUND);
     let mut write_half = stream;
     let writer = thread::Builder::new()
         .name("fuseconv-conn-write".into())
@@ -197,7 +379,7 @@ fn handle_conn(
     // In-flight stream table: one forwarder per admitted request; all are
     // joined before the connection closes so streams are never cut off.
     let mut streams: Vec<thread::JoinHandle<()>> = Vec::new();
-    let mut served: u64 = 0;
+    let mut budget = RequestBudget::new(budget);
     let mut saw_shutdown = false;
     // One persistent buffer: a timed-out read keeps any partial frame,
     // and the next pass appends the rest (no mid-frame desync).
@@ -217,11 +399,13 @@ fn handle_conn(
                             // Only decoded requests count against the
                             // budget (malformed lines answer bad_request
                             // without consuming a slot).
-                            served += 1;
-                            if budget.is_some_and(|b| served > b) {
+                            if !budget.admit() {
                                 // Budget exhausted: typed Busy, hang up.
-                                let _ = wtx
-                                    .send((req.id, Frame::Final(Err(ServeError::Busy))));
+                                let _ = send_frame(
+                                    &wtx,
+                                    (req.id, Frame::Final(Err(ServeError::Busy))),
+                                    &stop,
+                                );
                                 break;
                             }
                             saw_shutdown = matches!(req.body, RequestBody::Shutdown);
@@ -233,27 +417,29 @@ fn handle_conn(
                             // spawning a per-request thread.
                             let still_streaming = match ticket.try_recv() {
                                 Ok(Some(frame)) if frame.is_final() => {
-                                    let _ = wtx.send((ticket.id(), frame));
+                                    let _ = send_frame(&wtx, (ticket.id(), frame), &stop);
                                     false
                                 }
                                 Ok(Some(frame)) => {
                                     // stream already flowing: pass the
                                     // first frame on, forward the rest
                                     // from a dedicated thread below
-                                    let _ = wtx.send((ticket.id(), frame));
+                                    let _ = send_frame(&wtx, (ticket.id(), frame), &stop);
                                     true
                                 }
                                 Ok(None) => true,
                                 Err(_) => {
-                                    let _ = wtx.send((
-                                        ticket.id(),
-                                        Frame::Final(Err(ServeError::Shutdown)),
-                                    ));
+                                    let _ = send_frame(
+                                        &wtx,
+                                        (ticket.id(), Frame::Final(Err(ServeError::Shutdown))),
+                                        &stop,
+                                    );
                                     false
                                 }
                             };
                             if still_streaming {
                                 let out = wtx.clone();
+                                let stop2 = stop.clone();
                                 // The ticket rides in a take-slot so it
                                 // survives a failed spawn (the closure —
                                 // and anything moved into it — is
@@ -264,7 +450,7 @@ fn handle_conn(
                                     .name("fuseconv-conn-stream".into())
                                     .spawn(move || {
                                         if let Some(t) = slot2.lock().unwrap().take() {
-                                            forward_stream(t, out);
+                                            forward_stream(t, out, stop2);
                                         }
                                     }) {
                                     Ok(h) => streams.push(h),
@@ -274,7 +460,7 @@ fn handle_conn(
                                     // answered.
                                     Err(_) => {
                                         if let Some(t) = slot.lock().unwrap().take() {
-                                            forward_stream(t, wtx.clone());
+                                            forward_stream(t, wtx.clone(), stop.clone());
                                         }
                                     }
                                 }
@@ -293,10 +479,14 @@ fn handle_conn(
                             streams = live;
                         }
                         Err(e) => {
-                            let _ = wtx.send((
-                                salvage_id(line),
-                                Frame::Final(Err(ServeError::BadRequest(e.to_string()))),
-                            ));
+                            let _ = send_frame(
+                                &wtx,
+                                (
+                                    salvage_id(line),
+                                    Frame::Final(Err(ServeError::BadRequest(e.to_string()))),
+                                ),
+                                &stop,
+                            );
                         }
                     }
                 }
@@ -306,7 +496,7 @@ fn handle_conn(
                 }
             }
             Err(e) if is_timeout(&e) => {
-                if stop.load(Ordering::Acquire) {
+                if stop.stopped() {
                     break; // shutdown latched elsewhere: close this idle conn
                 }
             }
@@ -314,16 +504,15 @@ fn handle_conn(
         }
     }
     // Let every in-flight stream finish (including the Shutdown ack),
-    // flush the writer, then release the accept loop with a self-dial if
-    // we are the closing connection.
+    // flush the writer, then trip the latch — releasing every frontend
+    // registered on it — if we are the closing connection.
     for h in streams {
         let _ = h.join();
     }
     drop(wtx);
     let _ = writer.join();
     if saw_shutdown {
-        stop.store(true, Ordering::Release);
-        let _ = TcpStream::connect(dial_addr(self_addr));
+        stop.trip();
     }
 }
 

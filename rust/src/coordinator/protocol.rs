@@ -23,7 +23,25 @@
 //!   full batch lane answers [`ServeError::Busy`] without starving point
 //!   queries (see [`RequestBody::priority`]);
 //! * models are addressed by zoo name *or* shipped inline as layer
-//!   specs, so remote clients need no access to the zoo crate.
+//!   specs, so remote clients need no access to the zoo crate;
+//! * reply streams are *bounded* ([`STREAM_BOUND`] frames): a producer
+//!   that outruns its consumer pauses instead of buffering without
+//!   limit, so one slow client can never balloon server memory.
+//!
+//! The normative wire contract — the envelope fields, frame grammar,
+//! error taxonomy, and both transport renderings (newline-delimited
+//! TCP frames and HTTP/SSE) — is pinned in `PROTOCOL.md` at the
+//! repository root; this module is its in-process realization.
+//!
+//! ```
+//! use fuseconv::coordinator::{Reply, Response, Ticket};
+//! // A service streams frames into the sink; the caller collapses the
+//! // ticket into one response (`wait` merges streamed sweep rows).
+//! let (ticket, sink) = Ticket::pending(7);
+//! sink.progress(0, 1);
+//! sink.finish(Ok(Reply::Done));
+//! assert_eq!(ticket.wait(), Response::ok(7, Reply::Done));
+//! ```
 
 use crate::nn::{models, Layer, Network, OpKind};
 use crate::sim::{Dataflow, FuseVariant, MappingPolicy, NetworkSim, SimConfig};
@@ -38,6 +56,14 @@ pub const PROTOCOL_VERSION: u32 = 2;
 /// Largest accepted PE-array side length in a request config — a sanity
 /// bound on remote input, far above any hardware the paper models.
 pub const MAX_ARRAY_DIM: usize = 4096;
+
+/// Bound on one reply stream's frame buffer (the channel between a
+/// [`FrameSink`] and its [`Ticket`]). Point queries emit a single
+/// terminal frame and never block; a streaming producer (sweep rows)
+/// that gets this far ahead of its consumer pauses until the consumer
+/// catches up — backpressure instead of unbounded buffering. Sized so a
+/// typical Table-1 grid streams without a single pause.
+pub const STREAM_BOUND: usize = 256;
 
 // ---------------------------------------------------------------------------
 // Requests
@@ -445,6 +471,16 @@ impl Frame {
     pub fn is_final(&self) -> bool {
         matches!(self, Frame::Final(_))
     }
+
+    /// Stable wire tag of the frame kind — the `frame` field of the TCP
+    /// framing and the `event:` name of the SSE rendering.
+    pub fn tag(&self) -> &'static str {
+        match self {
+            Frame::Progress { .. } => "progress",
+            Frame::Row(_) => "row",
+            Frame::Final(_) => "final",
+        }
+    }
 }
 
 /// The protocol's stream-collapse rule, shared by every consumer that
@@ -490,10 +526,16 @@ pub trait Service: Send + Sync {
 /// [`Ticket`]. Cheap to clone (worker threads can share it). Send
 /// failures are deliberately swallowed — a client that dropped its
 /// ticket is not the server's problem.
+///
+/// The stream buffer is bounded ([`STREAM_BOUND`]): once that many
+/// frames are queued unconsumed, further sends *block* until the
+/// consumer drains — a streaming producer is paused by its slowest
+/// reader rather than buffering without limit. Single-frame replies
+/// (every point query) always fit the buffer and never block.
 #[derive(Debug, Clone)]
 pub struct FrameSink {
     id: u64,
-    tx: mpsc::Sender<Frame>,
+    tx: mpsc::SyncSender<Frame>,
 }
 
 impl FrameSink {
@@ -530,9 +572,11 @@ pub struct Ticket {
 }
 
 impl Ticket {
-    /// A ticket plus the sink the service uses to stream into it.
+    /// A ticket plus the sink the service uses to stream into it. The
+    /// stream buffer holds at most [`STREAM_BOUND`] undelivered frames
+    /// (see [`FrameSink`] for the backpressure contract).
     pub fn pending(id: u64) -> (Ticket, FrameSink) {
-        let (tx, rx) = mpsc::channel();
+        let (tx, rx) = mpsc::sync_channel(STREAM_BOUND);
         (Ticket { id, rx, finished: false }, FrameSink { id, tx })
     }
 
@@ -799,6 +843,58 @@ mod tests {
         assert_eq!(t.try_recv(), Ok(Some(Frame::Progress { done: 1, total: 3 })));
         assert_eq!(t.try_recv(), Ok(Some(Frame::Final(Ok(Reply::Done)))));
         assert_eq!(t.try_recv(), Err(RecvError::Disconnected));
+    }
+
+    #[test]
+    fn bounded_stream_pauses_producer_until_consumer_drains() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        use std::sync::Arc;
+
+        // ROADMAP backpressure item: a producer that outruns its
+        // consumer must pause at STREAM_BOUND queued frames, then
+        // resume losslessly (and in order) once the consumer drains.
+        const EXTRA: usize = 8;
+        let (mut ticket, sink) = Ticket::pending(21);
+        let sent = Arc::new(AtomicUsize::new(0));
+        let sent2 = Arc::clone(&sent);
+        let producer = std::thread::spawn(move || {
+            for i in 0..(STREAM_BOUND + EXTRA) as u64 {
+                assert!(sink.progress(i, (STREAM_BOUND + EXTRA) as u64));
+                sent2.fetch_add(1, Ordering::Release);
+            }
+            sink.finish(Ok(Reply::Done));
+        });
+        // Wait for the producer to fill the buffer, then confirm it has
+        // paused there (the next send is blocked, not counted).
+        let t0 = Instant::now();
+        while sent.load(Ordering::Acquire) < STREAM_BOUND
+            && t0.elapsed() < Duration::from_secs(10)
+        {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        std::thread::sleep(Duration::from_millis(100));
+        assert_eq!(
+            sent.load(Ordering::Acquire),
+            STREAM_BOUND,
+            "producer must pause exactly at the stream bound"
+        );
+        // Drain: every frame arrives, in order, ending with the Final.
+        let mut next = 0u64;
+        loop {
+            match ticket.recv_deadline(Duration::from_secs(10)).expect("frame") {
+                Frame::Progress { done, .. } => {
+                    assert_eq!(done, next, "frames must stay in emission order");
+                    next += 1;
+                }
+                Frame::Final(result) => {
+                    assert_eq!(result, Ok(Reply::Done));
+                    break;
+                }
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        assert_eq!(next as usize, STREAM_BOUND + EXTRA, "no frame lost across the pause");
+        producer.join().expect("producer");
     }
 
     #[test]

@@ -13,13 +13,24 @@
 //!   its lane without ever starving dashboard queries. A `Sweep` is
 //!   served as a *stream*: `Progress`/`Row` frames as the sweep engine
 //!   completes cells (plan order), then a terminal `Done`.
-//! * [`Router`] — one [`Service`] fronting both, used by the TCP/JSON
-//!   frontend (`coordinator::net`) and `fuseconv serve`.
+//! * [`Router`] — one [`Service`] fronting both, shared by every
+//!   transport: the TCP frame frontend (`coordinator::net`), the
+//!   HTTP/SSE frontend (`coordinator::http`), and `fuseconv serve`
+//!   (which can run both listeners on one `Router`).
 //!
 //! Both halves speak only protocol types: requests arrive as
 //! [`Request`]s and leave as [`Frame`](super::protocol::Frame) streams
 //! through [`Ticket`]s, whether the caller is in-process or a wire
-//! client.
+//! client — so every transport prices a scenario identically.
+//!
+//! ```
+//! use fuseconv::coordinator::batcher::BatchPolicy;
+//! use fuseconv::coordinator::{MockEngine, Reply, Server};
+//! let server = Server::start(MockEngine::new(2, 1, 4), BatchPolicy::default());
+//! let resp = server.submit(vec![1.0, 2.0]).wait();
+//! assert!(matches!(resp.result, Ok(Reply::Infer(_))));
+//! server.shutdown();
+//! ```
 
 use super::batcher::{BatchPolicy, Batcher, Pending};
 use super::protocol::{

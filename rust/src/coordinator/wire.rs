@@ -20,6 +20,20 @@
 //! Numbers: JSON integers decode losslessly into `u64`/`i64` (cycle
 //! counts exceed 2^53, so going through `f64` would corrupt them);
 //! floats use Rust's shortest round-trip formatting.
+//!
+//! The HTTP frontend ([`http`](super::http)) reuses this codec: request
+//! *bodies* share the envelope's fields (minus `v` and `op`, which ride
+//! the URL — see [`encode_request_body`] / [`decode_request_body`]), and
+//! streamed frames render as Server-Sent Events via [`encode_sse_event`]
+//! with byte-identical `data:` JSON. `PROTOCOL.md` at the repository
+//! root is the normative spec for both renderings.
+//!
+//! ```
+//! use fuseconv::coordinator::wire::{decode_request, encode_request};
+//! use fuseconv::coordinator::{Request, RequestBody};
+//! let req = Request::new(1, RequestBody::Stats).with_deadline_ms(250);
+//! assert_eq!(decode_request(&encode_request(&req)).unwrap(), req);
+//! ```
 
 use super::protocol::{
     ConfigPatch, Frame, InferReply, LayerSpec, ModelSpec, Reply, Request, RequestBody,
@@ -841,17 +855,11 @@ fn f32s_from_json(v: &Json, key: &str) -> Result<Vec<f32>, WireError> {
         .collect()
 }
 
-/// Encode one request as a single-line JSON frame (no trailing newline).
-pub fn encode_request(req: &Request) -> String {
-    let mut pairs: Vec<(&str, Json)> = vec![
-        ("v", Json::UInt(PROTOCOL_VERSION as u64)),
-        ("id", Json::UInt(req.id)),
-    ];
-    if let Some(ms) = req.deadline_ms {
-        pairs.push(("deadline_ms", Json::UInt(ms)));
-    }
-    pairs.push(("op", Json::Str(req.body.op().to_string())));
-    match &req.body {
+/// The operation-specific fields of a request body — shared by the TCP
+/// envelope encoder and the HTTP body encoder.
+fn body_fields(body: &RequestBody) -> Vec<(&'static str, Json)> {
+    let mut pairs: Vec<(&'static str, Json)> = Vec::new();
+    match body {
         RequestBody::Infer { input } => pairs.push(("input", f32s_to_json(input))),
         RequestBody::Simulate { model, variant, config } => {
             pairs.push(("model", model_to_json(model)));
@@ -871,6 +879,35 @@ pub fn encode_request(req: &Request) -> String {
         }
         RequestBody::Stats | RequestBody::Zoo | RequestBody::Shutdown => {}
     }
+    pairs
+}
+
+/// Encode one request as a single-line JSON frame (no trailing newline).
+pub fn encode_request(req: &Request) -> String {
+    let mut pairs: Vec<(&str, Json)> = vec![
+        ("v", Json::UInt(PROTOCOL_VERSION as u64)),
+        ("id", Json::UInt(req.id)),
+    ];
+    if let Some(ms) = req.deadline_ms {
+        pairs.push(("deadline_ms", Json::UInt(ms)));
+    }
+    pairs.push(("op", Json::Str(req.body.op().to_string())));
+    pairs.extend(body_fields(&req.body));
+    let mut out = String::new();
+    obj(pairs).write(&mut out);
+    out
+}
+
+/// Encode a request as an HTTP body: the same fields as the TCP frame
+/// minus `v` and `op` — the URL carries both (`POST /v1/<op>`, where
+/// `v1` versions the HTTP mapping). `id` and `deadline_ms` stay in the
+/// body so HTTP clients keep the envelope's correlation semantics.
+pub fn encode_request_body(req: &Request) -> String {
+    let mut pairs: Vec<(&str, Json)> = vec![("id", Json::UInt(req.id))];
+    if let Some(ms) = req.deadline_ms {
+        pairs.push(("deadline_ms", Json::UInt(ms)));
+    }
+    pairs.extend(body_fields(&req.body));
     let mut out = String::new();
     obj(pairs).write(&mut out);
     out
@@ -892,11 +929,19 @@ pub fn decode_request(text: &str) -> Result<Request, WireError> {
     check_version(&v)?;
     let id = need_u64(&v, "id")?;
     let deadline_ms = opt_u64(&v, "deadline_ms")?;
-    let op = need_str(&v, "op")?;
+    let body = decode_request_body(need_str(&v, "op")?, &v)?;
+    Ok(Request { id, deadline_ms, body })
+}
+
+/// Decode a request *body* given its operation tag. The TCP framing
+/// reads `op` out of the envelope; the HTTP frontend takes it from the
+/// URL (`/v1/<op>`) and hands the parsed body object in as `v`. Both
+/// share every field rule below.
+pub fn decode_request_body(op: &str, v: &Json) -> Result<RequestBody, WireError> {
     let body = match op {
-        "infer" => RequestBody::Infer { input: f32s_from_json(&v, "input")? },
+        "infer" => RequestBody::Infer { input: f32s_from_json(v, "input")? },
         "simulate" => RequestBody::Simulate {
-            model: model_from_json(need(&v, "model")?)?,
+            model: model_from_json(need(v, "model")?)?,
             variant: match v.get("variant") {
                 None => FuseVariant::Base,
                 Some(j) => variant_from_json(j)?,
@@ -907,7 +952,7 @@ pub fn decode_request(text: &str) -> Result<Request, WireError> {
             },
         },
         "sweep" => {
-            let models = need_arr(&v, "models")?
+            let models = need_arr(v, "models")?
                 .iter()
                 .map(|m| {
                     m.as_str()
@@ -937,7 +982,7 @@ pub fn decode_request(text: &str) -> Result<Request, WireError> {
         "shutdown" => RequestBody::Shutdown,
         other => return err(format!("unknown op {other:?}")),
     };
-    Ok(Request { id, deadline_ms, body })
+    Ok(body)
 }
 
 // ---------------------------------------------------------------------------
@@ -1103,28 +1148,34 @@ pub fn encode_frame(id: u64, frame: &Frame) -> String {
     let mut pairs: Vec<(&str, Json)> = vec![
         ("v", Json::UInt(PROTOCOL_VERSION as u64)),
         ("id", Json::UInt(id)),
+        ("frame", Json::Str(frame.tag().into())),
     ];
     match frame {
         Frame::Progress { done, total } => {
-            pairs.push(("frame", Json::Str("progress".into())));
             pairs.push(("done", Json::UInt(*done)));
             pairs.push(("total", Json::UInt(*total)));
         }
         Frame::Row(row) => {
-            pairs.push(("frame", Json::Str("row".into())));
             pairs.push(("row", sweep_row_to_json(row)));
         }
-        Frame::Final(result) => {
-            pairs.push(("frame", Json::Str("final".into())));
-            match result {
-                Ok(reply) => pairs.push(("ok", reply_to_json(reply))),
-                Err(e) => pairs.push(("err", serve_error_to_json(e))),
-            }
-        }
+        Frame::Final(result) => match result {
+            Ok(reply) => pairs.push(("ok", reply_to_json(reply))),
+            Err(e) => pairs.push(("err", serve_error_to_json(e))),
+        },
     }
     let mut out = String::new();
     obj(pairs).write(&mut out);
     out
+}
+
+/// Render one frame as a Server-Sent Events block — the HTTP streaming
+/// rendering of the same grammar the TCP framing sends: `event:` is the
+/// frame's [`tag`](Frame::tag), `id:` the request id, and `data:` the
+/// *byte-identical* JSON of [`encode_frame`], so SSE consumers reuse
+/// [`decode_frame`] unchanged. Ends with the blank line that terminates
+/// an SSE event.
+pub fn encode_sse_event(id: u64, frame: &Frame) -> String {
+    format!("event: {}\nid: {id}\ndata: {}\n\n", frame.tag(), encode_frame(id, frame))
 }
 
 /// Decode one frame: `(request id, frame)`.
@@ -1162,14 +1213,7 @@ pub fn encode_response(resp: &Response) -> String {
 pub fn decode_response(text: &str) -> Result<Response, WireError> {
     match decode_frame(text)? {
         (id, Frame::Final(result)) => Ok(Response { id, result }),
-        (_, other) => err(format!(
-            "expected a final frame, got a {} frame",
-            match other {
-                Frame::Progress { .. } => "progress",
-                Frame::Row(_) => "row",
-                Frame::Final(_) => unreachable!(),
-            }
-        )),
+        (_, other) => err(format!("expected a final frame, got a {} frame", other.tag())),
     }
 }
 
@@ -1418,6 +1462,64 @@ mod tests {
         );
         rt_frame(7, Frame::Final(Ok(Reply::Done)));
         rt_frame(8, Frame::Final(Err(ServeError::Busy)));
+    }
+
+    #[test]
+    fn http_body_codec_round_trips_without_envelope() {
+        // The HTTP body is the envelope minus v/op; decode_request_body
+        // with the op from the URL must rebuild the identical body.
+        for req in [
+            Request::new(3, RequestBody::Infer { input: vec![1.0, -0.5] }),
+            Request::new(
+                4,
+                RequestBody::Simulate {
+                    model: ModelSpec::Zoo("mobilenet-v2".into()),
+                    variant: FuseVariant::Half,
+                    config: ConfigPatch::sized(16),
+                },
+            )
+            .with_deadline_ms(750),
+            Request::new(
+                5,
+                RequestBody::Sweep {
+                    models: vec!["mobilenet-v2".into()],
+                    variants: vec![FuseVariant::Base, FuseVariant::Full],
+                    configs: vec![ConfigPatch::sized(8), ConfigPatch::sized(32)],
+                },
+            ),
+            Request::new(6, RequestBody::Stats),
+        ] {
+            let body = encode_request_body(&req);
+            assert!(!body.contains("\"v\":"), "no version field in HTTP bodies: {body}");
+            assert!(!body.contains("\"op\":"), "no op field in HTTP bodies: {body}");
+            let v = parse_json(&body).unwrap();
+            assert_eq!(v.get("id").and_then(Json::as_u64), Some(req.id));
+            assert_eq!(
+                v.get("deadline_ms").and_then(Json::as_u64),
+                req.deadline_ms,
+                "{body}"
+            );
+            let back = decode_request_body(req.body.op(), &v).unwrap();
+            assert_eq!(back, req.body, "round-trip mismatch for {body}");
+        }
+    }
+
+    #[test]
+    fn sse_rendering_carries_the_tcp_frame_json() {
+        let frame = Frame::Progress { done: 3, total: 24 };
+        let event = encode_sse_event(9, &frame);
+        assert!(event.starts_with("event: progress\nid: 9\ndata: "));
+        assert!(event.ends_with("\n\n"), "an SSE event ends with a blank line");
+        let data = event
+            .lines()
+            .find_map(|l| l.strip_prefix("data: "))
+            .expect("data line");
+        // byte-identical to the TCP framing, so decode_frame is shared
+        assert_eq!(data, encode_frame(9, &frame));
+        assert_eq!(decode_frame(data).unwrap(), (9, frame));
+        // every frame kind carries its tag as the event name
+        let event = encode_sse_event(1, &Frame::Final(Err(ServeError::Busy)));
+        assert!(event.starts_with("event: final\n"), "{event}");
     }
 
     #[test]

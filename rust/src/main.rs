@@ -10,10 +10,11 @@
 //!   search-nas OFA-space NAS with FuSe choice (Fig 15)
 //!   trace      per-layer cycle trace CSV
 //!   train      end-to-end NOS pipeline on the AOT artifacts
-//!   serve      TCP/JSON serving frontend (inference + simulation traffic,
-//!              protocol v2 frame streams, two-lane admission)
-//!   request    wire client for a running `fuseconv serve` (--stream for
-//!              the raw frame view)
+//!   serve      serving frontends: TCP/JSON frames, plus HTTP/SSE with
+//!              --http-port (inference + simulation traffic, protocol v2
+//!              frame streams, two-lane admission, one shared router)
+//!   request    client for a running `fuseconv serve` (--stream for the
+//!              raw frame view, --http for the HTTP transport)
 
 use fuseconv::cli::Cli;
 use fuseconv::coordinator::search::{
@@ -75,11 +76,11 @@ fn print_help() {
          search-nas  OFA NAS               (--pop, --iters, --seed, --no-fuse)\n  \
          trace       cycle trace CSV       (--model, --layer)\n  \
          train       NOS pipeline on artifacts (--steps, --artifacts)\n  \
-         serve       TCP/JSON frontend     (--listen, --engine mock|none|pjrt, --threads,\n              \
-                     --sim-capacity, --batch-capacity, --max-requests-per-conn,\n              \
-                     --queue, --port-file)\n  \
-         request     wire client           (--connect, --op infer|simulate|sweep|stats|zoo|shutdown,\n              \
-                     --model, --variant, --size, --count, --stream)"
+         serve       TCP + HTTP frontends  (--listen, --http-port, --engine mock|none|pjrt,\n              \
+                     --threads, --sim-capacity, --batch-capacity,\n              \
+                     --max-requests-per-conn, --queue, --port-file, --http-port-file)\n  \
+         request     serve client          (--connect, --op infer|simulate|sweep|stats|zoo|shutdown,\n              \
+                     --model, --variant, --size, --count, --stream, --http)"
     );
 }
 
@@ -723,15 +724,22 @@ fn cmd_train(_argv: &[String]) -> i32 {
     1
 }
 
-/// `fuseconv serve --listen addr` — the TCP/JSON frontend. Simulation
+/// `fuseconv serve --listen addr` — the serving frontends. Simulation
 /// traffic always works; inference traffic needs an engine (`mock` by
-/// default, `pjrt` with `--features xla`, `none` to reject it).
+/// default, `pjrt` with `--features xla`, `none` to reject it). With
+/// `--http-port` an HTTP/SSE listener runs alongside the TCP one on the
+/// same `Router`, so `curl` and dashboards share the caches, lanes, and
+/// shutdown latch with wire clients.
 fn cmd_serve(argv: &[String]) -> i32 {
     use fuseconv::coordinator::batcher::BatchPolicy;
-    use fuseconv::coordinator::{Router, SimServer, WireServer, PROTOCOL_VERSION};
+    use fuseconv::coordinator::{
+        HttpServer, Router, SimServer, StopLatch, WireServer, PROTOCOL_VERSION,
+    };
 
-    let cli = Cli::new("serve", "TCP/JSON serving frontend for inference + simulation")
+    let cli = Cli::new("serve", "TCP + HTTP serving frontends for inference + simulation")
         .opt("listen", "bind address (port 0 = ephemeral)", Some("127.0.0.1:7878"))
+        .opt("http-port", "also serve HTTP/SSE on this port, same host (0 = ephemeral)", None)
+        .opt("http-port-file", "write the bound HTTP address here once listening", None)
         .opt("threads", "simulation worker threads (0=auto)", Some("0"))
         .opt("sim-capacity", "interactive simulation admission lane bound (min 1)", Some("256"))
         .opt("batch-capacity", "batch (sweep) admission lane bound (min 1)", Some("32"))
@@ -811,9 +819,20 @@ fn cmd_serve(argv: &[String]) -> i32 {
         }
     };
 
+    let http_port = match args.opt_u64("http-port") {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("{e}\n{}", cli.usage());
+            return 2;
+        }
+    };
+
     let listen = args.str("listen");
-    let wire = match WireServer::bind(&listen, std::sync::Arc::new(router)) {
-        Ok(w) => w.with_request_budget((conn_budget > 0).then_some(conn_budget)),
+    let budget = (conn_budget > 0).then_some(conn_budget);
+    let router = std::sync::Arc::new(router);
+    let stop = StopLatch::new();
+    let wire = match WireServer::bind(&listen, router.clone()) {
+        Ok(w) => w.with_request_budget(budget).with_stop(stop.clone()),
         Err(e) => {
             eprintln!("bind {listen}: {e}");
             return 1;
@@ -830,7 +849,35 @@ fn cmd_serve(argv: &[String]) -> i32 {
             return 1;
         }
     }
-    match wire.run() {
+
+    // Optional HTTP/SSE listener on the same host, router, and latch:
+    // a shutdown served by either transport stops both.
+    let mut http_thread = None;
+    if let Some(port) = http_port {
+        let host = listen.rsplit_once(':').map(|(h, _)| h).unwrap_or("127.0.0.1");
+        let http_listen = format!("{host}:{port}");
+        let http = match HttpServer::bind(&http_listen, router.clone()) {
+            Ok(h) => h.with_request_budget(budget).with_stop(stop.clone()),
+            Err(e) => {
+                eprintln!("bind {http_listen}: {e}");
+                return 1;
+            }
+        };
+        let http_addr = http.local_addr();
+        eprintln!(
+            "fuseconv serve: http on {http_addr} \
+             (POST /v1/{{infer,simulate}}, POST /v1/sweep streams SSE, GET /v1/stats, GET /healthz)"
+        );
+        if let Some(path) = args.get("http-port-file") {
+            if let Err(e) = std::fs::write(path, http_addr.to_string()) {
+                eprintln!("writing {path}: {e}");
+                return 1;
+            }
+        }
+        http_thread = Some(std::thread::spawn(move || http.run()));
+    }
+
+    let code = match wire.run() {
         Ok(()) => {
             eprintln!("fuseconv serve: clean shutdown");
             0
@@ -839,7 +886,24 @@ fn cmd_serve(argv: &[String]) -> i32 {
             eprintln!("serve failed: {e}");
             1
         }
+    };
+    if let Some(h) = http_thread {
+        // The latch has tripped (or the TCP listener failed): release
+        // and join the HTTP listener too before exiting.
+        stop.trip();
+        match h.join() {
+            Ok(Ok(())) => {}
+            Ok(Err(e)) => {
+                eprintln!("http serve failed: {e}");
+                return 1;
+            }
+            Err(_) => {
+                eprintln!("http serve panicked");
+                return 1;
+            }
+        }
     }
+    code
 }
 
 #[cfg(feature = "xla")]
@@ -897,6 +961,7 @@ fn cmd_request(argv: &[String]) -> i32 {
         .opt("timeout-ms", "client receive timeout", Some("60000"))
         .opt("id", "starting request id", Some("1"))
         .flag("stream", "print every frame (progress/row/final) as it arrives")
+        .flag("http", "speak HTTP to the server (ops map to /v1/<op>, sweep streams SSE)")
         .flag("no-stos", "disable ST-OS in the request config");
     let args = match cli.parse(argv) {
         Ok(a) => a,
@@ -1013,6 +1078,17 @@ fn cmd_request(argv: &[String]) -> i32 {
 
     let addr = args.str("connect");
     let timeout = std::time::Duration::from_millis(timeout_ms);
+    if args.flag("http") {
+        return run_http_requests(
+            &addr,
+            &body,
+            count,
+            base_id,
+            deadline_ms,
+            timeout,
+            args.flag("stream"),
+        );
+    }
     let mut client = match WireClient::connect(&addr, timeout) {
         Ok(c) => c,
         Err(e) => {
@@ -1070,6 +1146,87 @@ fn cmd_request(argv: &[String]) -> i32 {
                     eprintln!("{e}");
                     return 1;
                 }
+            }
+        }
+    }
+    if failures > 0 {
+        eprintln!("# {failures}/{count} requests failed");
+        1
+    } else {
+        0
+    }
+}
+
+/// The `--http` transport of `fuseconv request`: one-shot ops go
+/// through `http_call` (GET for stats/zoo, POST otherwise), sweeps
+/// stream over SSE via `http_sse`. `--stream` prints each frame as it
+/// arrives (`data:` JSON is identical to the TCP framing); otherwise
+/// one collapsed response prints per request.
+#[allow(clippy::too_many_arguments)]
+fn run_http_requests(
+    addr: &str,
+    body: &fuseconv::coordinator::RequestBody,
+    count: usize,
+    base_id: u64,
+    deadline_ms: Option<u64>,
+    timeout: std::time::Duration,
+    stream: bool,
+) -> i32 {
+    use fuseconv::coordinator::wire::{encode_frame, encode_request_body, encode_response};
+    use fuseconv::coordinator::{http_call, http_sse, Request, RequestBody};
+
+    let mut failures = 0usize;
+    for i in 0..count {
+        let mut req = Request::new(base_id + i as u64, body.clone());
+        if let Some(ms) = deadline_ms {
+            req = req.with_deadline_ms(ms);
+        }
+        // POST bodies carry deadline_ms already; also send the
+        // timeout-ms header so body-less GET ops (stats/zoo) get the
+        // same deadline semantics as the TCP transport.
+        let result = match &req.body {
+            RequestBody::Sweep { .. } => http_sse(
+                addr,
+                "/v1/sweep",
+                &encode_request_body(&req),
+                deadline_ms,
+                timeout,
+                |fid, frame| {
+                    if stream {
+                        println!("{}", encode_frame(fid, frame));
+                    }
+                },
+            )
+            .map(|resp| (resp, stream)),
+            _ => {
+                let (path, payload) = match &req.body {
+                    RequestBody::Stats => ("/v1/stats", None),
+                    RequestBody::Zoo => ("/v1/zoo", None),
+                    RequestBody::Shutdown => ("/v1/shutdown", Some(encode_request_body(&req))),
+                    RequestBody::Infer { .. } => ("/v1/infer", Some(encode_request_body(&req))),
+                    RequestBody::Simulate { .. } => {
+                        ("/v1/simulate", Some(encode_request_body(&req)))
+                    }
+                    RequestBody::Sweep { .. } => unreachable!("handled above"),
+                };
+                http_call(addr, path, payload.as_deref(), deadline_ms, timeout)
+                    .and_then(|reply| reply.response())
+                    .map(|resp| (resp, false))
+            }
+        };
+        match result {
+            Ok((resp, already_printed)) => {
+                // streamed sweeps printed their frames (final included)
+                if !already_printed {
+                    println!("{}", encode_response(&resp));
+                }
+                if !resp.is_ok() {
+                    failures += 1;
+                }
+            }
+            Err(e) => {
+                eprintln!("{e}");
+                return 1;
             }
         }
     }

@@ -22,6 +22,22 @@
 //! config) plan position, every layer simulation is a pure function of
 //! (layer, config), and [`Pool::scope_map`] preserves submission order —
 //! so results are bit-identical to the serial path for any worker count.
+//! The serving layer leans on exactly this: `fuseconv sweep --verify`,
+//! the TCP `--remote` path, and the HTTP/SSE frontend all cross-check
+//! their streamed rows against [`run_sweep_serial`].
+//!
+//! ```
+//! use fuseconv::nn::models;
+//! use fuseconv::sim::{run_sweep_serial, FuseVariant, SimConfig, SweepPlan};
+//! let plan = SweepPlan::new(
+//!     vec![models::by_name("mobilenet-v3-small").unwrap()],
+//!     vec![FuseVariant::Base, FuseVariant::Half],
+//!     vec![SimConfig::with_size(8)],
+//! );
+//! let out = run_sweep_serial(&plan);
+//! assert_eq!(out.records().len(), 2);
+//! assert!(out.records().iter().all(|r| r.total_cycles() > 0));
+//! ```
 
 use super::config::{Dataflow, SimConfig};
 use super::engine::{price_layer, schedule_layer, simulate_network, LayerSim, NetworkSim};
@@ -253,6 +269,12 @@ impl SweepPlan {
 
 /// The standard config grid: sizes × dataflows × ST-OS modes, everything
 /// else at the paper's Table 1 defaults.
+///
+/// ```
+/// use fuseconv::sim::{grid_configs, Dataflow};
+/// let grid = grid_configs(&[8, 16], &[Dataflow::OutputStationary], &[true, false]);
+/// assert_eq!(grid.len(), 4);
+/// ```
 pub fn grid_configs(
     sizes: &[usize],
     dataflows: &[Dataflow],

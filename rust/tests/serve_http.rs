@@ -1,0 +1,533 @@
+//! HTTP/SSE frontend integration (acceptance criteria for the HTTP
+//! transport over the v2 Frame protocol):
+//!
+//! * one-shot `POST /v1/infer` / `POST /v1/simulate` answer `200` with
+//!   the reply's terminal frame, and simulate matches a direct
+//!   in-process `simulate_network` cycle-for-cycle;
+//! * a ≥24-cell `POST /v1/sweep` streams SSE `progress`/`row`/`final`
+//!   events whose rows are bit-identical to a local serial `run_sweep`;
+//! * a saturated batch lane answers `429` (typed `busy`) while the
+//!   interactive lane keeps admitting — same semantics as TCP;
+//! * malformed bodies answer `400`, unknown endpoints `404`, wrong
+//!   methods `405`, expired deadlines `504`;
+//! * concurrent TCP and HTTP clients on ONE `Router` agree on every
+//!   cycle count, and a shutdown served over HTTP stops both listeners;
+//! * `--max-requests-per-conn` counts kept-alive HTTP requests exactly
+//!   like the TCP budget (`429` + close past the cap);
+//! * `PROTOCOL.md` documents every `ServeError` code, every `Frame`
+//!   tag, and the HTTP status mapping (the spec cannot drift from
+//!   `protocol.rs` without failing here).
+
+use fuseconv::coordinator::batcher::BatchPolicy;
+use fuseconv::coordinator::wire::encode_request_body;
+use fuseconv::coordinator::{
+    http_call, http_sse, ConfigPatch, Frame, HttpServer, MockEngine, ModelSpec, Reply,
+    Request, RequestBody, Router, ServeError, Server, SimServer, StopLatch, SweepRow,
+    WireClient, WireServer,
+};
+use fuseconv::nn::models;
+use fuseconv::sim::{
+    run_sweep_serial, simulate_network, FuseVariant, LayerCache, SimConfig, SweepPlan,
+};
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::sync::{mpsc, Arc};
+use std::thread;
+use std::time::Duration;
+
+const T: Duration = Duration::from_secs(300);
+
+/// Local serial reference sweep for (zoo names × variants × sizes).
+fn serial_reference(
+    names: &[&str],
+    variants: &[FuseVariant],
+    sizes: &[usize],
+) -> fuseconv::sim::SweepOutcome {
+    let plan = SweepPlan::new(
+        names.iter().map(|m| models::by_name(m).unwrap()).collect(),
+        variants.to_vec(),
+        sizes.iter().map(|&s| SimConfig::with_size(s)).collect(),
+    );
+    run_sweep_serial(&plan)
+}
+
+fn assert_rows_match(rows: &[SweepRow], reference: &fuseconv::sim::SweepOutcome) {
+    assert_eq!(rows.len(), reference.records().len(), "row count");
+    for (row, rec) in rows.iter().zip(reference.records()) {
+        assert_eq!(row.network, rec.network);
+        assert_eq!(row.variant, rec.variant);
+        assert_eq!((row.rows, row.cols), (rec.cfg.rows, rec.cfg.cols));
+        assert_eq!(row.total_cycles, rec.total_cycles(), "{} {}", row.network, row.rows);
+        assert_eq!(row.latency_ms.to_bits(), rec.latency_ms().to_bits());
+    }
+}
+
+fn mock_router(interactive: usize, batch: usize) -> Arc<Router> {
+    let sim = SimServer::with_lanes(2, Arc::new(LayerCache::new()), interactive, batch);
+    Arc::new(Router::new(sim).with_engine(Server::start(
+        MockEngine::new(4, 2, 8),
+        BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(2) },
+    )))
+}
+
+/// Boot an HTTP-only frontend; shut it down with `POST /v1/shutdown`.
+fn start_http(router: Arc<Router>) -> (String, thread::JoinHandle<()>) {
+    let http = HttpServer::bind("127.0.0.1:0", router).expect("bind http");
+    let addr = http.local_addr().to_string();
+    let handle = thread::spawn(move || http.run().expect("http run"));
+    (addr, handle)
+}
+
+fn shutdown_http(addr: &str, handle: thread::JoinHandle<()>) {
+    let reply = http_call(addr, "/v1/shutdown", Some("{}"), None, T).expect("shutdown");
+    assert_eq!(reply.status, 200, "{}", reply.body);
+    assert_eq!(reply.response().unwrap().result, Ok(Reply::Done));
+    handle.join().expect("http listener");
+}
+
+fn sweep_body(models: &[&str], variants: &[FuseVariant], sizes: &[usize]) -> String {
+    encode_request_body(&Request::new(
+        1,
+        RequestBody::Sweep {
+            models: models.iter().map(|m| m.to_string()).collect(),
+            variants: variants.to_vec(),
+            configs: sizes.iter().map(|&s| ConfigPatch::sized(s)).collect(),
+        },
+    ))
+}
+
+#[test]
+fn http_oneshot_infer_simulate_and_ops() {
+    let (addr, handle) = start_http(mock_router(64, 32));
+
+    // healthz: liveness + protocol version
+    let reply = http_call(&addr, "/healthz", None, None, T).expect("healthz");
+    assert_eq!(reply.status, 200, "{}", reply.body);
+    assert!(reply.body.contains("\"protocol_version\":2"), "{}", reply.body);
+
+    // infer through the mock engine: output[0] = sum(input)
+    let reply = http_call(
+        &addr,
+        "/v1/infer",
+        Some("{\"id\":7,\"input\":[1,2,3,4]}"),
+        None,
+        T,
+    )
+    .expect("infer");
+    assert_eq!(reply.status, 200, "{}", reply.body);
+    let resp = reply.response().expect("terminal frame body");
+    assert_eq!(resp.id, 7, "the body id must be echoed");
+    match resp.result {
+        Ok(Reply::Infer(r)) => assert_eq!(r.output, vec![10.0, 11.0]),
+        other => panic!("expected infer reply, got {other:?}"),
+    }
+
+    // simulate: identical cycles to a direct in-process simulation
+    let req = Request::new(
+        8,
+        RequestBody::Simulate {
+            model: ModelSpec::Zoo("mobilenet-v2".into()),
+            variant: FuseVariant::Half,
+            config: ConfigPatch::sized(16),
+        },
+    );
+    let reply = http_call(&addr, "/v1/simulate", Some(&encode_request_body(&req)), None, T)
+        .expect("simulate");
+    assert_eq!(reply.status, 200, "{}", reply.body);
+    let got = match reply.response().unwrap().result {
+        Ok(Reply::Sim(s)) => s,
+        other => panic!("expected sim reply, got {other:?}"),
+    };
+    let net = models::by_name("mobilenet-v2").unwrap();
+    let expect = simulate_network(&FuseVariant::Half.apply(&net), &SimConfig::with_size(16));
+    assert_eq!(got.total_cycles, expect.total_cycles);
+
+    // stats and zoo over GET
+    let reply = http_call(&addr, "/v1/stats", None, None, T).expect("stats");
+    match reply.response().unwrap().result {
+        Ok(Reply::Stats(s)) => {
+            assert_eq!(s.infer_served, 1);
+            assert_eq!(s.sim_completed, 1);
+        }
+        other => panic!("expected stats, got {other:?}"),
+    }
+    let reply = http_call(&addr, "/v1/zoo", None, None, T).expect("zoo");
+    match reply.response().unwrap().result {
+        Ok(Reply::Zoo(entries)) => assert_eq!(entries.len(), models::ZOO_NAMES.len()),
+        other => panic!("expected zoo, got {other:?}"),
+    }
+
+    shutdown_http(&addr, handle);
+}
+
+#[test]
+fn http_sweep_streams_sse_bit_identical_to_serial() {
+    // Acceptance: a ≥24-cell SSE sweep must stream incremental events
+    // before its final, and row-by-row cycle counts must be
+    // bit-identical to the local serial sweep of the same grid.
+    let (addr, handle) = start_http(mock_router(64, 32));
+    const SIZES: [usize; 8] = [4, 8, 12, 16, 20, 24, 28, 32];
+    let variants = [FuseVariant::Base, FuseVariant::Half, FuseVariant::Full];
+
+    let mut tags: Vec<&'static str> = Vec::new();
+    let mut rows: Vec<SweepRow> = Vec::new();
+    let resp = http_sse(
+        &addr,
+        "/v1/sweep",
+        &sweep_body(&["mobilenet-v3-small"], &variants, &SIZES),
+        None,
+        T,
+        |id, frame| {
+            assert_eq!(id, 1, "every event carries the request id");
+            tags.push(frame.tag());
+            if let Frame::Row(row) = frame {
+                rows.push(row.clone());
+            }
+        },
+    )
+    .expect("sse sweep");
+
+    // grammar: progress* / row* then exactly one final, final last
+    assert_eq!(tags.last(), Some(&"final"));
+    assert_eq!(tags.iter().filter(|t| **t == "final").count(), 1);
+    let progress_before_final = tags
+        .iter()
+        .take_while(|t| **t != "final")
+        .filter(|t| **t == "progress")
+        .count();
+    assert!(
+        progress_before_final >= 2,
+        "want ≥2 progress events before final, got {progress_before_final}"
+    );
+    assert_eq!(rows.len(), 24, "1 model × 3 variants × 8 sizes");
+    let reference = serial_reference(&["mobilenet-v3-small"], &variants, &SIZES);
+    assert_rows_match(&rows, &reference);
+    // the collapsed response merges the same rows
+    match resp.result {
+        Ok(Reply::Sweep(merged)) => assert_eq!(merged, rows),
+        other => panic!("expected merged sweep, got {other:?}"),
+    }
+
+    shutdown_http(&addr, handle);
+}
+
+#[test]
+fn http_error_statuses_cover_the_taxonomy() {
+    let (addr, handle) = start_http(mock_router(64, 32));
+
+    // malformed JSON body: 400 + typed bad_request frame
+    let reply = http_call(&addr, "/v1/simulate", Some("{not json"), None, T).expect("call");
+    assert_eq!(reply.status, 400, "{}", reply.body);
+    assert!(
+        matches!(reply.response().unwrap().result, Err(ServeError::BadRequest(_))),
+        "{}",
+        reply.body
+    );
+
+    // well-formed JSON, bad protocol content: still 400
+    let reply = http_call(
+        &addr,
+        "/v1/simulate",
+        Some("{\"model\":{\"zoo\":\"nonesuch\"}}"),
+        None,
+        T,
+    )
+    .expect("call");
+    assert_eq!(reply.status, 400, "{}", reply.body);
+
+    // unknown endpoint: 404; wrong method on a known one: 405
+    let reply = http_call(&addr, "/v1/frobnicate", None, None, T).expect("call");
+    assert_eq!(reply.status, 404, "{}", reply.body);
+    let reply = http_call(&addr, "/v1/sweep", None, None, T).expect("call");
+    assert_eq!(reply.status, 405, "{}", reply.body);
+
+    // expired deadline: 504 + typed deadline error
+    let req = Request::new(
+        9,
+        RequestBody::Simulate {
+            model: ModelSpec::Zoo("mobilenet-v2".into()),
+            variant: FuseVariant::Base,
+            config: ConfigPatch::default(),
+        },
+    )
+    .with_deadline_ms(0);
+    let reply = http_call(&addr, "/v1/simulate", Some(&encode_request_body(&req)), None, T)
+        .expect("call");
+    assert_eq!(reply.status, 504, "{}", reply.body);
+    assert_eq!(reply.response().unwrap().result, Err(ServeError::Deadline));
+
+    shutdown_http(&addr, handle);
+}
+
+#[test]
+fn http_429_on_saturated_batch_lane_still_admits_interactive() {
+    // Batch lane bound 1: while one streamed sweep holds the slot, a
+    // second sweep answers 429 (typed busy) — but interactive simulate
+    // keeps being admitted, exactly like the TCP frontend.
+    let (addr, handle) = start_http(mock_router(64, 1));
+
+    let (started_tx, started_rx) = mpsc::channel();
+    let addr2 = addr.clone();
+    let big = thread::spawn(move || {
+        let mut signalled = false;
+        http_sse(
+            &addr2,
+            "/v1/sweep",
+            &sweep_body(
+                &["mobilenet-v2"],
+                &[FuseVariant::Base, FuseVariant::Half, FuseVariant::Full],
+                &[16, 32, 48, 64],
+            ),
+            None,
+            T,
+            |_, _| {
+                if !signalled {
+                    signalled = true;
+                    let _ = started_tx.send(());
+                }
+            },
+        )
+    });
+    started_rx
+        .recv_timeout(Duration::from_secs(120))
+        .expect("big sweep must start streaming");
+
+    // the batch lane slot is held: a second sweep bounces as busy
+    let resp = http_sse(
+        &addr,
+        "/v1/sweep",
+        &sweep_body(&["mobilenet-v3-small"], &[FuseVariant::Base], &[8]),
+        None,
+        T,
+        |_, _| {},
+    )
+    .expect("bounced sweep decodes");
+    assert_eq!(resp.result, Err(ServeError::Busy), "batch lane bound 1 must bounce");
+
+    // ...while the interactive lane still admits and answers
+    let req = Request::new(
+        3,
+        RequestBody::Simulate {
+            model: ModelSpec::Zoo("mobilenet-v3-small".into()),
+            variant: FuseVariant::Base,
+            config: ConfigPatch::sized(8),
+        },
+    );
+    let reply = http_call(&addr, "/v1/simulate", Some(&encode_request_body(&req)), None, T)
+        .expect("interactive");
+    assert_eq!(reply.status, 200, "interactive query starved: {}", reply.body);
+
+    // the admitted sweep still runs to completion
+    let resp = big.join().expect("big sweep thread").expect("big sweep");
+    match resp.result {
+        Ok(Reply::Sweep(rows)) => assert_eq!(rows.len(), 12),
+        other => panic!("expected sweep rows, got {other:?}"),
+    }
+
+    shutdown_http(&addr, handle);
+}
+
+#[test]
+fn concurrent_tcp_and_http_clients_agree_on_one_router() {
+    // One Router, both transports, one stop latch: identical grids
+    // swept concurrently over TCP frames and HTTP SSE must agree
+    // cell-for-cell, and a shutdown over HTTP stops both listeners.
+    let router = mock_router(64, 32);
+    let stop = StopLatch::new();
+    let wire = WireServer::bind("127.0.0.1:0", router.clone())
+        .expect("bind tcp")
+        .with_stop(stop.clone());
+    let http = HttpServer::bind("127.0.0.1:0", router).expect("bind http").with_stop(stop);
+    let tcp_addr = wire.local_addr().to_string();
+    let http_addr = http.local_addr().to_string();
+    let tcp_handle = thread::spawn(move || wire.run().expect("tcp run"));
+    let http_handle = thread::spawn(move || http.run().expect("http run"));
+
+    const SIZES: [usize; 4] = [8, 16, 24, 32];
+    let variants = [FuseVariant::Base, FuseVariant::Half];
+
+    let tcp_addr2 = tcp_addr.clone();
+    let tcp_worker = thread::spawn(move || {
+        let mut client = WireClient::connect(&tcp_addr2, T).expect("connect tcp");
+        client
+            .send(&Request::new(
+                11,
+                RequestBody::Sweep {
+                    models: vec!["mobilenet-v2".into()],
+                    variants: variants.to_vec(),
+                    configs: SIZES.iter().map(|&s| ConfigPatch::sized(s)).collect(),
+                },
+            ))
+            .expect("send sweep");
+        let mut rows = Vec::new();
+        loop {
+            match client.recv_frame(11).expect("tcp frame") {
+                Frame::Progress { .. } => {}
+                Frame::Row(row) => rows.push(row),
+                Frame::Final(result) => {
+                    assert_eq!(result, Ok(Reply::Done));
+                    break;
+                }
+            }
+        }
+        rows
+    });
+    let http_addr2 = http_addr.clone();
+    let http_worker = thread::spawn(move || {
+        let mut rows = Vec::new();
+        let resp = http_sse(
+            &http_addr2,
+            "/v1/sweep",
+            &sweep_body(&["mobilenet-v2"], &variants, &SIZES),
+            None,
+            T,
+            |_, frame| {
+                if let Frame::Row(row) = frame {
+                    rows.push(row.clone());
+                }
+            },
+        )
+        .expect("http sweep");
+        assert!(resp.is_ok(), "{resp:?}");
+        rows
+    });
+
+    let tcp_rows = tcp_worker.join().expect("tcp worker");
+    let http_rows = http_worker.join().expect("http worker");
+    assert_eq!(tcp_rows, http_rows, "transports must agree cell-for-cell");
+    assert_rows_match(&tcp_rows, &serial_reference(&["mobilenet-v2"], &variants, &SIZES));
+
+    // one more point of agreement: the same simulate on both transports
+    let sim_req = Request::new(
+        21,
+        RequestBody::Simulate {
+            model: ModelSpec::Zoo("mnasnet-b1".into()),
+            variant: FuseVariant::Half,
+            config: ConfigPatch::sized(16),
+        },
+    );
+    let mut tcp_client = WireClient::connect(&tcp_addr, T).expect("connect tcp");
+    let tcp_sim = match tcp_client.roundtrip(&sim_req).expect("tcp simulate").result {
+        Ok(Reply::Sim(s)) => s,
+        other => panic!("tcp: expected sim, got {other:?}"),
+    };
+    let reply = http_call(&http_addr, "/v1/simulate", Some(&encode_request_body(&sim_req)), None, T)
+        .expect("http simulate");
+    match reply.response().unwrap().result {
+        Ok(Reply::Sim(s)) => assert_eq!(s.total_cycles, tcp_sim.total_cycles),
+        other => panic!("http: expected sim, got {other:?}"),
+    }
+    drop(tcp_client);
+
+    // shutdown over HTTP trips the shared latch: both listeners exit
+    shutdown_http(&http_addr, http_handle);
+    tcp_handle.join().expect("tcp listener released by the shared latch");
+}
+
+/// Read one HTTP response (status + content-length framed body) off a
+/// raw kept-alive connection; `None` once the server closed it.
+fn read_http_response(reader: &mut BufReader<TcpStream>) -> Option<(u16, String)> {
+    let mut line = String::new();
+    if reader.read_line(&mut line).ok()? == 0 {
+        return None;
+    }
+    let status: u16 = line.split_whitespace().nth(1)?.parse().ok()?;
+    let mut len = 0usize;
+    loop {
+        let mut h = String::new();
+        reader.read_line(&mut h).ok()?;
+        let t = h.trim();
+        if t.is_empty() {
+            break;
+        }
+        if let Some((name, value)) = t.split_once(':') {
+            if name.trim().eq_ignore_ascii_case("content-length") {
+                len = value.trim().parse().ok()?;
+            }
+        }
+    }
+    let mut buf = vec![0u8; len];
+    reader.read_exact(&mut buf).ok()?;
+    Some((status, String::from_utf8(buf).ok()?))
+}
+
+#[test]
+fn keep_alive_budget_answers_429_and_closes() {
+    // --max-requests-per-conn over HTTP: three pipelined requests on one
+    // kept-alive connection against a budget of 2 → 200, 200, 429 +
+    // close. A fresh connection gets a fresh budget.
+    let router = mock_router(64, 32);
+    let http = HttpServer::bind("127.0.0.1:0", router)
+        .expect("bind http")
+        .with_request_budget(Some(2));
+    let addr = http.local_addr().to_string();
+    let handle = thread::spawn(move || http.run().expect("http run"));
+
+    let mut conn = TcpStream::connect(&addr).expect("connect");
+    conn.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+    let one = format!("GET /v1/stats HTTP/1.1\r\nhost: {addr}\r\n\r\n");
+    conn.write_all(one.repeat(3).as_bytes()).expect("pipeline 3 requests");
+    let mut reader = BufReader::new(conn);
+    let mut statuses = Vec::new();
+    while let Some((status, _body)) = read_http_response(&mut reader) {
+        statuses.push(status);
+        if statuses.len() > 3 {
+            break;
+        }
+    }
+    assert_eq!(statuses, vec![200, 200, 429], "budget must bounce the third request");
+    // the connection is closed after the bounce (read_http_response → None)
+
+    // fresh connection, fresh budget
+    let reply = http_call(&addr, "/v1/stats", None, None, T).expect("fresh stats");
+    assert_eq!(reply.status, 200);
+
+    shutdown_http(&addr, handle);
+}
+
+#[test]
+fn protocol_md_documents_the_wire_contract() {
+    // Acceptance: the spec must name every ServeError code, every Frame
+    // tag, and the HTTP status each error maps to. Enumerated from the
+    // protocol types themselves so the spec cannot silently drift.
+    let spec = std::fs::read_to_string(concat!(env!("CARGO_MANIFEST_DIR"), "/../PROTOCOL.md"))
+        .expect("PROTOCOL.md at the repository root");
+    let errors = [
+        ServeError::Busy,
+        ServeError::BadRequest(String::new()),
+        ServeError::Deadline,
+        ServeError::Shutdown,
+    ];
+    for e in &errors {
+        let code = format!("`{}`", e.code());
+        assert!(spec.contains(&code), "PROTOCOL.md must document the {code} error code");
+        let (status, _) = fuseconv::coordinator::http::status_of(&Err(e.clone()));
+        assert!(
+            spec.contains(&status.to_string()),
+            "PROTOCOL.md must document the HTTP {status} mapping of `{}`",
+            e.code()
+        );
+    }
+    let frames = [
+        Frame::Progress { done: 0, total: 0 },
+        Frame::Row(SweepRow {
+            network: String::new(),
+            variant: FuseVariant::Base,
+            rows: 0,
+            cols: 0,
+            dataflow: fuseconv::sim::Dataflow::OutputStationary,
+            stos: true,
+            total_cycles: 0,
+            latency_ms: 0.0,
+        }),
+        Frame::Final(Ok(Reply::Done)),
+    ];
+    for f in &frames {
+        let tag = format!("`{}`", f.tag());
+        assert!(spec.contains(&tag), "PROTOCOL.md must document the {tag} frame");
+    }
+    // the ordering guarantees and both renderings must be spelled out
+    for needle in ["plan order", "exactly one", "text/event-stream", "timeout-ms"] {
+        assert!(spec.contains(needle), "PROTOCOL.md must cover {needle:?}");
+    }
+}

@@ -462,6 +462,63 @@ fn saturated_batch_lane_still_admits_interactive_over_the_wire() {
 }
 
 #[test]
+fn stalled_reader_pauses_stream_and_resumes_losslessly() {
+    // ROADMAP backpressure item, end to end: a sweep client that stops
+    // reading mid-stream is paced by the bounded writer channel and
+    // bounded ticket buffer — the server neither buffers without limit
+    // nor wedges — and on resume it still receives every row, in plan
+    // order, bit-identical to the serial sweep.
+    let (addr, handle) = start_frontend(64);
+    let mut stalled = WireClient::connect(&addr, Duration::from_secs(300)).expect("connect");
+    const SIZES: [usize; 8] = [4, 8, 12, 16, 24, 32, 48, 64];
+    let variants = [FuseVariant::Base, FuseVariant::Half, FuseVariant::Full];
+    stalled
+        .send(&Request::new(
+            5,
+            RequestBody::Sweep {
+                models: vec!["mobilenet-v3-small".into()],
+                variants: variants.to_vec(),
+                configs: SIZES.iter().map(|&s| ConfigPatch::sized(s)).collect(),
+            },
+        ))
+        .expect("send sweep");
+    // Deliberately stall: read nothing while the sweep streams.
+    thread::sleep(Duration::from_millis(1500));
+
+    // The server must stay fully responsive for other connections.
+    let mut other = WireClient::connect(&addr, Duration::from_secs(120)).expect("connect 2");
+    let resp = other
+        .roundtrip(&Request::new(
+            1,
+            RequestBody::Simulate {
+                model: ModelSpec::Zoo("mobilenet-v3-small".into()),
+                variant: FuseVariant::Base,
+                config: ConfigPatch::sized(8),
+            },
+        ))
+        .expect("interactive roundtrip");
+    assert!(resp.is_ok(), "server wedged by a stalled reader: {resp:?}");
+
+    // Resume: the paused stream picks up where it left off, losslessly.
+    let mut rows = Vec::new();
+    loop {
+        match stalled.recv_frame(5).expect("frame after resume") {
+            Frame::Progress { .. } => {}
+            Frame::Row(row) => rows.push(row),
+            Frame::Final(result) => {
+                assert_eq!(result, Ok(Reply::Done));
+                break;
+            }
+        }
+    }
+    assert_rows_match(&rows, &serial_reference(&["mobilenet-v3-small"], &variants, &SIZES));
+
+    drop(stalled);
+    drop(other);
+    shutdown_frontend(&addr, handle);
+}
+
+#[test]
 fn deadline_is_enforced_over_the_wire() {
     let (addr, handle) = start_frontend(64);
     let mut client = WireClient::connect(&addr, Duration::from_secs(60)).expect("connect");
