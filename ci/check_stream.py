@@ -1,0 +1,89 @@
+#!/usr/bin/env python3
+"""Check a streamed fuseconv sweep against a local sweep CSV.
+
+One parser for every smoke step in CI (TCP, HTTP/SSE, and the shard
+front tier over both transports):
+
+    ci/check_stream.py --format jsonl /tmp/sweep-stream.jsonl /tmp/local.csv
+    ci/check_stream.py --format sse   /tmp/sweep.sse          /tmp/local.csv
+
+Asserts the protocol-v2 stream contract (PROTOCOL.md section 3):
+
+* at least one `progress` frame arrives before the `final` frame;
+* progress is monotonic with `done <= total`;
+* the stream ends with exactly one `final`, and it is `ok`;
+* the streamed `row` cycle counts equal the local sweep's rows,
+  cell for cell and in plan order.
+"""
+
+import argparse
+import json
+import sys
+
+
+def frames_from_jsonl(path):
+    """Newline-delimited TCP frames: one JSON object per line."""
+    with open(path) as fh:
+        return [json.loads(line) for line in fh if line.strip()]
+
+
+def frames_from_sse(path):
+    """SSE events: blank-line-separated blocks; `data:` carries the
+    byte-identical frame JSON, `event:` must match its `frame` tag."""
+    frames = []
+    with open(path) as fh:
+        raw = fh.read()
+    for block in raw.split("\n\n"):
+        event = None
+        for line in block.splitlines():
+            if line.startswith("event:"):
+                event = line.split(":", 1)[1].strip()
+            elif line.startswith("data:"):
+                frame = json.loads(line.split(":", 1)[1])
+                assert event == frame["frame"], (event, frame)
+                frames.append(frame)
+    return frames
+
+
+def local_cycles(csv_path):
+    with open(csv_path) as fh:
+        lines = fh.read().splitlines()
+    col = lines[0].split(",").index("total_cycles")
+    return [int(line.split(",")[col]) for line in lines[1:]]
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--format", choices=["jsonl", "sse"], required=True)
+    ap.add_argument("stream", help="captured frame stream")
+    ap.add_argument("local_csv", help="local `fuseconv sweep --format csv` output")
+    args = ap.parse_args()
+
+    parse = frames_from_jsonl if args.format == "jsonl" else frames_from_sse
+    frames = parse(args.stream)
+    assert frames, f"no frames parsed from {args.stream}"
+
+    kinds = [f["frame"] for f in frames]
+    assert "progress" in kinds, kinds
+    assert kinds.index("progress") < kinds.index("final"), kinds
+    assert kinds[-1] == "final", kinds
+    assert kinds.count("final") == 1, kinds
+    assert "ok" in frames[-1], frames[-1]
+
+    progress = [(f["done"], f["total"]) for f in frames if f["frame"] == "progress"]
+    assert all(d <= t for d, t in progress), progress
+    dones = [d for d, _ in progress]
+    assert dones == sorted(dones), f"progress must be monotonic: {dones}"
+
+    streamed = [f["row"]["total_cycles"] for f in frames if f["frame"] == "row"]
+    local = local_cycles(args.local_csv)
+    assert streamed == local, (streamed, local)
+
+    print(
+        f"stream ok ({args.format}): {len(streamed)} rows match the local sweep, "
+        f"{len(progress)} progress frames before a single final"
+    )
+
+
+if __name__ == "__main__":
+    sys.exit(main())

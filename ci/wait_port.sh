@@ -1,0 +1,22 @@
+#!/usr/bin/env bash
+# Wait for a port file (written by `fuseconv serve/shard --port-file`
+# once the listener is bound) and print the address it holds.
+#
+#   ADDR=$(ci/wait_port.sh /tmp/fuseconv-port [tries])
+#
+# Polls every 0.1 s for up to `tries` attempts (default 100 = 10 s).
+set -euo pipefail
+
+file="${1:?usage: wait_port.sh <port-file> [tries]}"
+tries="${2:-100}"
+
+for _ in $(seq 1 "$tries"); do
+  if [ -s "$file" ]; then
+    cat "$file"
+    exit 0
+  fi
+  sleep 0.1
+done
+
+echo "timed out waiting for port file $file" >&2
+exit 1

@@ -3,7 +3,9 @@
 //! speaks HTTP — zero dependencies, `std` networking only. Runs
 //! standalone or alongside the TCP listener on one shared
 //! [`Router`](super::server::Router) and [`StopLatch`]
-//! (`fuseconv serve --http-port`).
+//! (`fuseconv serve --http-port`), and mounts the multi-node
+//! [`ShardRouter`](super::shard::ShardRouter) identically
+//! (`fuseconv shard --http-port`).
 //!
 //! Endpoint map (`PROTOCOL.md` §HTTP mapping is the normative spec):
 //!

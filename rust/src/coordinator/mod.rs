@@ -3,9 +3,12 @@
 //! protocol ([`protocol`]), batched inference + simulation services
 //! behind one [`Service`] trait ([`server`]), the JSON wire codec
 //! ([`wire`]), and two transports over the same service: the TCP frame
-//! frontend ([`net`]) and the HTTP/SSE frontend ([`http`]). The wire
-//! contract both transports render is specified normatively in
-//! `PROTOCOL.md` at the repository root.
+//! frontend ([`net`]) and the HTTP/SSE frontend ([`http`]). Deployments
+//! scale out horizontally through the shard-router front tier
+//! ([`shard`]), which implements the same [`Service`] trait over many
+//! `fuseconv serve` backends, so both transports mount it unchanged.
+//! The wire contract every transport renders is specified normatively
+//! in `PROTOCOL.md` at the repository root.
 
 pub mod batcher;
 pub mod evaluator;
@@ -15,6 +18,7 @@ pub mod net;
 pub mod protocol;
 pub mod search;
 pub mod server;
+pub mod shard;
 pub mod wire;
 
 pub use evaluator::{Evaluator, HybridSpace, NetEval};
@@ -25,3 +29,4 @@ pub use protocol::{
     RequestBody, Response, ServeError, Service, SweepRow, Ticket, PROTOCOL_VERSION,
 };
 pub use server::{Engine, MockEngine, Router, Server, SimServer};
+pub use shard::ShardRouter;

@@ -1,6 +1,9 @@
 //! Wire-level frontend: a `std::net::TcpListener` speaking the JSON
 //! frame protocol of [`wire`](super::wire), one newline-delimited frame
-//! per request or reply-stream element, feeding any shared [`Service`].
+//! per request or reply-stream element, feeding any shared [`Service`]
+//! — the single-node [`Router`](super::server::Router) of `fuseconv
+//! serve` or the multi-node [`ShardRouter`](super::shard::ShardRouter)
+//! of `fuseconv shard`, which mounts here unchanged.
 //!
 //! Threading model (protocol v2): one reader thread per connection
 //! decodes request frames and performs admission through `Service::call`

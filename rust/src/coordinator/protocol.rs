@@ -388,6 +388,11 @@ pub struct SweepRow {
 }
 
 /// Serving statistics snapshot (inference + simulation + shared cache).
+///
+/// A shard front tier ([`ShardRouter`](super::shard::ShardRouter))
+/// answers `Stats` with the *sum* of every backend's counters and sets
+/// [`backends`](StatsReply::backends) to the number of nodes
+/// aggregated; a direct single-process server reports `backends: 0`.
 #[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct StatsReply {
     pub protocol_version: u32,
@@ -398,6 +403,9 @@ pub struct StatsReply {
     pub cache_hits: u64,
     pub cache_misses: u64,
     pub cache_entries: u64,
+    /// Number of shard backends aggregated into this snapshot; `0`
+    /// means the counters come from the answering process itself.
+    pub backends: u64,
 }
 
 /// One zoo listing row.

@@ -367,18 +367,31 @@ pub const DEFAULT_BATCH_CAPACITY: usize = 32;
 
 /// One bounded admission lane: a capacity plus its in-flight counter.
 /// The counter is shared (`Arc`) with worker closures that release the
-/// slot on completion.
-struct Lane {
+/// slot on completion (or with a [`LaneSlot`] RAII guard for callers
+/// outside this module — the shard front tier bounds its own admission
+/// on the same primitive).
+pub(crate) struct Lane {
     capacity: usize,
     inflight: Arc<AtomicUsize>,
 }
 
+/// RAII admission slot: dropping it releases one unit of its lane's
+/// in-flight budget, however the holder finishes.
+pub(crate) struct LaneSlot(Arc<AtomicUsize>);
+
+impl Drop for LaneSlot {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::Release);
+    }
+}
+
 impl Lane {
-    fn new(capacity: usize) -> Lane {
+    pub(crate) fn new(capacity: usize) -> Lane {
         Lane { capacity: capacity.max(1), inflight: Arc::new(AtomicUsize::new(0)) }
     }
 
-    /// Try to take one admission slot.
+    /// Try to take one admission slot (released manually through the
+    /// shared `inflight` counter).
     fn admit(&self) -> bool {
         let mut cur = self.inflight.load(Ordering::Relaxed);
         loop {
@@ -394,6 +407,15 @@ impl Lane {
                 Ok(_) => return true,
                 Err(actual) => cur = actual,
             }
+        }
+    }
+
+    /// Try to take one admission slot as an RAII guard.
+    pub(crate) fn admit_slot(&self) -> Option<LaneSlot> {
+        if self.admit() {
+            Some(LaneSlot(Arc::clone(&self.inflight)))
+        } else {
+            None
         }
     }
 }
@@ -514,6 +536,7 @@ impl SimServer {
             cache_hits: cs.hits,
             cache_misses: cs.misses,
             cache_entries: cs.entries as u64,
+            backends: 0,
         }
     }
 }

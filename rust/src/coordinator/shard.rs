@@ -1,0 +1,686 @@
+//! Shard-router front tier: one [`Service`] that partitions traffic
+//! across several `fuseconv serve` backends (`fuseconv shard
+//! --backends addr1,addr2,...`).
+//!
+//! The paper's ST-OS argument — map *independent* work onto rows of the
+//! array so every resource stays busy — has a direct serving analogue:
+//! simulation traffic partitions cleanly by (model, price-relevant
+//! config), so a front tier can pin each shard to one backend and keep
+//! that backend's two-level layer cache permanently hot on its slice of
+//! the keyspace. The router implements the same [`Service`] trait as
+//! the single-node [`Router`](super::server::Router), so both wire
+//! frontends (TCP in [`net`](super::net), HTTP/SSE in
+//! [`http`](super::http)) mount it unchanged and the wire contract of
+//! `PROTOCOL.md` §Sharded deployment holds on every transport.
+//!
+//! Routing:
+//! * `Simulate` pins to one backend by [`shard_key`] of
+//!   (model name, price-relevant config fields) — a stable FNV-1a fold
+//!   with an avalanche finish, deliberately *not* std's hasher, so the
+//!   mapping survives process restarts and never depends on hasher
+//!   seeding;
+//! * `Sweep` splits the grid into per-backend **sub-plans** (for one
+//!   model the configs partition across backends; every non-empty
+//!   (backend, model) pair becomes one sub-sweep), fans them out
+//!   concurrently, and re-multiplexes the backends' `row` streams back
+//!   into **plan order** under the client's original request id with
+//!   one consolidated `progress` counter — the reorder-buffer pattern
+//!   of [`run_sweep_with`](crate::sim::run_sweep_with) — so a sharded
+//!   sweep is frame-for-frame identical to a single-node sweep;
+//! * `Stats` aggregates every backend's counters (and reports how many
+//!   backends contributed via [`StatsReply::backends`]); `Shutdown`
+//!   fans out to every backend before the ack; `Infer`/`Zoo` are
+//!   unsharded and round-robin across backends.
+//!
+//! Failure mapping: a backend that refuses a connection, drops a stream
+//! mid-sweep, or goes silent past the configured timeout terminates the
+//! client's stream with a typed `final` + `err:shutdown` — never a
+//! hang. Typed errors from a backend (`busy`, `bad_request`,
+//! `deadline`) pass through verbatim.
+//!
+//! ```
+//! use fuseconv::coordinator::shard::{route, shard_key};
+//! use fuseconv::sim::SimConfig;
+//! let cfg = SimConfig::with_size(16);
+//! // the routing key is a pure function: same (model, config) → same backend
+//! assert_eq!(shard_key("mobilenet-v2", &cfg), shard_key("mobilenet-v2", &cfg));
+//! assert!(route("mobilenet-v2", &cfg, 4) < 4);
+//! ```
+
+use super::net::{request_once, WireClient};
+use super::protocol::{
+    ConfigPatch, Frame, FrameSink, ModelSpec, Reply, Request, RequestBody, Response,
+    ServeError, Service, StatsReply, SweepRow, Ticket, PROTOCOL_VERSION, STREAM_BOUND,
+};
+use super::server::{Lane, LaneSlot};
+use crate::sim::{FuseVariant, SimConfig, SweepPlan};
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::thread;
+use std::time::Duration;
+
+/// Default backend connect/receive timeout (matches the stream-forwarder
+/// bound of the wire frontends: a silent backend becomes a typed error,
+/// not a wedged stream).
+pub const DEFAULT_BACKEND_TIMEOUT: Duration = Duration::from_secs(600);
+
+/// Default bound on concurrently in-flight front-tier requests. The
+/// router spawns one relay thread (plus backend connections) per
+/// admitted request, so admission must shed load past a bound — a
+/// request past it answers [`ServeError::Busy`], exactly like the
+/// single node's bounded lanes — instead of growing threads and file
+/// descriptors without limit.
+pub const DEFAULT_SHARD_INFLIGHT: usize = 1024;
+
+/// Cap on each backend's shutdown round-trip: the fan-out is
+/// best-effort and concurrent, and one hung (accepted-but-silent)
+/// backend must not stall the client's shutdown ack for the full
+/// backend timeout.
+const SHUTDOWN_FANOUT_TIMEOUT: Duration = Duration::from_secs(10);
+
+fn fnv1a(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h = (h ^ b as u64).wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Final avalanche (splitmix64's mixer). FNV-1a alone is too regular to
+/// route on: its low bit is a pure XOR-parity of the input bytes, so
+/// `key % 2` would collapse (e.g. every *square* geometry of one model
+/// on the same backend — rows and cols contribute identical bytes and
+/// their parity cancels). The mixer diffuses every input bit into every
+/// output bit before the modulo.
+fn mix(mut h: u64) -> u64 {
+    h ^= h >> 30;
+    h = h.wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    h ^= h >> 27;
+    h = h.wrapping_mul(0x94d0_49bb_1331_11eb);
+    h ^ (h >> 31)
+}
+
+/// Stable routing hash of one (model, config) shard: an FNV-1a fold
+/// over the model name and exactly the price-relevant config fields
+/// (the fields behind [`SimConfig::price_key`] — geometry, SRAM sizes,
+/// element width, dataflow, ST-OS, mapping, and the memory model;
+/// frequency is excluded because it never changes a backend's cached
+/// pricing), finished with an avalanche mix. The whole computation is
+/// self-contained — no `std` hasher — so the key is deterministic
+/// across processes, restarts, and deployments of the same config
+/// vocabulary.
+pub fn shard_key(model: &str, cfg: &SimConfig) -> u64 {
+    let mut h = fnv1a(0xcbf2_9ce4_8422_2325, model.as_bytes());
+    for n in [
+        cfg.rows as u64,
+        cfg.cols as u64,
+        cfg.ifmap_sram_kb as u64,
+        cfg.weight_sram_kb as u64,
+        cfg.ofmap_sram_kb as u64,
+        cfg.bytes_per_elem as u64,
+        cfg.dram_bw.to_bits(),
+        cfg.dataflow as u64,
+        cfg.stos as u64,
+        cfg.mapping as u64,
+        cfg.enforce_dram_bw as u64,
+    ] {
+        h = fnv1a(h, &n.to_le_bytes());
+    }
+    mix(h)
+}
+
+/// Which of `backends` serves the (model, config) shard.
+pub fn route(model: &str, cfg: &SimConfig, backends: usize) -> usize {
+    (shard_key(model, cfg) % backends.max(1) as u64) as usize
+}
+
+/// The display name a [`ModelSpec`] routes by (zoo name or inline name).
+fn model_name(m: &ModelSpec) -> &str {
+    match m {
+        ModelSpec::Zoo(name) => name,
+        ModelSpec::Inline { name, .. } => name,
+    }
+}
+
+/// The shard-router front tier. Holds backend addresses plus its own
+/// bounded admission lane — every admitted request opens its own
+/// backend connection(s) from a relay thread, so `call` never blocks
+/// (all backend I/O happens off the admission path, exactly like the
+/// single-node servers), and load past the lane bound sheds as
+/// [`ServeError::Busy`].
+pub struct ShardRouter {
+    backends: Vec<String>,
+    timeout: Duration,
+    /// Round-robin cursor for the unsharded ops (`Infer`, `Zoo`).
+    rr: AtomicUsize,
+    /// The front tier's own bounded admission (one slot per in-flight
+    /// relay) — the same primitive as the single node's lanes.
+    lane: Lane,
+    /// Latched once a `Shutdown` has been accepted; later calls answer
+    /// [`ServeError::Shutdown`], mirroring the single-node `Router`.
+    closing: AtomicBool,
+}
+
+impl ShardRouter {
+    /// Front `backends` (at least one `host:port` address) with
+    /// `timeout` bounding every backend connect/read/write.
+    pub fn new(backends: Vec<String>, timeout: Duration) -> ShardRouter {
+        assert!(!backends.is_empty(), "shard router needs at least one backend");
+        ShardRouter {
+            backends,
+            timeout,
+            rr: AtomicUsize::new(0),
+            lane: Lane::new(DEFAULT_SHARD_INFLIGHT),
+            closing: AtomicBool::new(false),
+        }
+    }
+
+    /// Bound the front tier's own admission: once `capacity` requests
+    /// are in flight, further calls answer [`ServeError::Busy`].
+    /// Clamped to ≥ 1 — admission is always bounded.
+    pub fn with_inflight(mut self, capacity: usize) -> ShardRouter {
+        self.lane = Lane::new(capacity);
+        self
+    }
+
+    pub fn backends(&self) -> &[String] {
+        &self.backends
+    }
+
+    /// Has a `Shutdown` request been accepted?
+    pub fn closing(&self) -> bool {
+        self.closing.load(Ordering::Acquire)
+    }
+
+    /// Forward `req` to backend `b` verbatim from a fresh thread,
+    /// streaming every reply frame into `sink`.
+    fn spawn_proxy(&self, b: usize, req: Request, sink: FrameSink, slot: Option<LaneSlot>) {
+        let addr = self.backends[b].clone();
+        let timeout = self.timeout;
+        thread::Builder::new()
+            .name("fuseconv-shard-proxy".into())
+            .spawn(move || {
+                let _slot = slot;
+                proxy(&addr, timeout, &req, &sink)
+            })
+            .expect("spawn shard proxy");
+    }
+}
+
+impl Service for ShardRouter {
+    fn call(&self, req: Request) -> Ticket {
+        let id = req.id;
+        let deadline_ms = req.deadline_ms;
+        if self.closing() {
+            return Ticket::immediate(Response::err(id, ServeError::Shutdown));
+        }
+        // Bounded admission (everything but `Shutdown`, which must stay
+        // reachable): past `capacity` in-flight relays, shed load with a
+        // typed Busy instead of spawning threads without limit.
+        let slot = if matches!(req.body, RequestBody::Shutdown) {
+            None
+        } else if let Some(s) = self.lane.admit_slot() {
+            Some(s)
+        } else {
+            return Ticket::immediate(Response::err(id, ServeError::Busy));
+        };
+        // Rebuild the forwarded request (same id + deadline) after the
+        // routing decision; the body round-trips untouched.
+        let forward = |body: RequestBody| {
+            let mut fwd = Request::new(id, body);
+            if let Some(ms) = deadline_ms {
+                fwd = fwd.with_deadline_ms(ms);
+            }
+            fwd
+        };
+        match req.body {
+            RequestBody::Simulate { model, variant, config } => {
+                // Resolve the config up front: routing needs the
+                // price-relevant fields, and a bad config answers
+                // `bad_request` at admission exactly like a single node.
+                let cfg = match config.to_config() {
+                    Ok(c) => c,
+                    Err(e) => return Ticket::immediate(Response::err(id, e)),
+                };
+                let b = route(model_name(&model), &cfg, self.backends.len());
+                let (ticket, sink) = Ticket::pending(id);
+                let body = RequestBody::Simulate { model, variant, config };
+                self.spawn_proxy(b, forward(body), sink, slot);
+                ticket
+            }
+            body @ (RequestBody::Infer { .. } | RequestBody::Zoo) => {
+                let b = self.rr.fetch_add(1, Ordering::Relaxed) % self.backends.len();
+                let (ticket, sink) = Ticket::pending(id);
+                self.spawn_proxy(b, forward(body), sink, slot);
+                ticket
+            }
+            RequestBody::Stats => {
+                let (ticket, sink) = Ticket::pending(id);
+                let backends = self.backends.clone();
+                let timeout = self.timeout;
+                thread::Builder::new()
+                    .name("fuseconv-shard-stats".into())
+                    .spawn(move || {
+                        let _slot = slot;
+                        sink.finish(aggregate_stats(&backends, timeout, id));
+                    })
+                    .expect("spawn shard stats");
+                ticket
+            }
+            RequestBody::Shutdown => {
+                // Latch first so no new traffic is admitted while the
+                // fan-out is in flight, then stop every backend —
+                // concurrently and with a capped per-node round-trip,
+                // so an already-dead or hung backend cannot stall the
+                // ack for the rest — and ack. The frontend mounting
+                // this router trips its own stop latch on the ack,
+                // exactly as it does for the single-node router.
+                self.closing.store(true, Ordering::Release);
+                let (ticket, sink) = Ticket::pending(id);
+                let backends = self.backends.clone();
+                let timeout = if self.timeout.is_zero() {
+                    SHUTDOWN_FANOUT_TIMEOUT
+                } else {
+                    self.timeout.min(SHUTDOWN_FANOUT_TIMEOUT)
+                };
+                thread::Builder::new()
+                    .name("fuseconv-shard-shutdown".into())
+                    .spawn(move || {
+                        thread::scope(|s| {
+                            for addr in &backends {
+                                s.spawn(move || {
+                                    let shutdown = Request::new(id, RequestBody::Shutdown);
+                                    let _ = request_once(addr, &shutdown, timeout);
+                                });
+                            }
+                        });
+                        sink.finish(Ok(Reply::Done));
+                    })
+                    .expect("spawn shard shutdown");
+                ticket
+            }
+            RequestBody::Sweep { models, variants, configs } => {
+                let (ticket, sink) = Ticket::pending(id);
+                let backends = self.backends.clone();
+                let timeout = self.timeout;
+                let job = move || {
+                    let _slot = slot;
+                    sweep_fanout(backends, timeout, models, variants, configs, deadline_ms, sink)
+                };
+                thread::Builder::new()
+                    .name("fuseconv-shard-sweep".into())
+                    .spawn(job)
+                    .expect("spawn shard sweep");
+                ticket
+            }
+        }
+    }
+}
+
+/// The sweep thread's whole job: run the sharded sweep, translate a
+/// panic into a typed error, and always terminate the stream.
+fn sweep_fanout(
+    backends: Vec<String>,
+    timeout: Duration,
+    models: Vec<String>,
+    variants: Vec<FuseVariant>,
+    configs: Vec<ConfigPatch>,
+    deadline_ms: Option<u64>,
+    sink: FrameSink,
+) {
+    let result = catch_unwind(AssertUnwindSafe(|| {
+        sweep_sharded(&backends, timeout, models, variants, configs, deadline_ms, &sink)
+    }))
+    .unwrap_or_else(|_| Err(ServeError::BadRequest("sharded sweep panicked".into())));
+    sink.finish(result);
+}
+
+/// Forward one request over its own backend connection, relaying every
+/// frame of the reply stream into `sink`. Transport failures (refused
+/// connection, dropped stream, silence past the timeout) become a typed
+/// terminal `shutdown`; a typed backend error passes through verbatim.
+fn proxy(addr: &str, timeout: Duration, req: &Request, sink: &FrameSink) {
+    let mut client = match WireClient::connect(addr, timeout) {
+        Ok(c) => c,
+        Err(_) => {
+            sink.finish(Err(ServeError::Shutdown));
+            return;
+        }
+    };
+    if client.send(req).is_err() {
+        sink.finish(Err(ServeError::Shutdown));
+        return;
+    }
+    loop {
+        match client.recv_frame(req.id) {
+            Ok(Frame::Final(result)) => {
+                sink.finish(result);
+                return;
+            }
+            Ok(Frame::Progress { done, total }) => {
+                let _ = sink.progress(done, total);
+            }
+            Ok(Frame::Row(row)) => {
+                let _ = sink.row(row);
+            }
+            Err(_) => {
+                sink.finish(Err(ServeError::Shutdown));
+                return;
+            }
+        }
+    }
+}
+
+/// `Stats` fan-out: the sum of every backend's counters, stamped with
+/// how many backends contributed. Backends are probed concurrently —
+/// aggregate latency is one round-trip (and at worst one timeout), not
+/// a sum over nodes — which also keeps `/healthz` probes through a
+/// front tier cheap. A backend that cannot answer fails the aggregate
+/// with a typed error (partial counters would silently under-report).
+fn aggregate_stats(
+    backends: &[String],
+    timeout: Duration,
+    id: u64,
+) -> Result<Reply, ServeError> {
+    let results: Vec<Result<Reply, ServeError>> = thread::scope(|s| {
+        let probes: Vec<_> = backends
+            .iter()
+            .map(|addr| {
+                s.spawn(move || {
+                    let req = Request::new(id, RequestBody::Stats);
+                    let resp = request_once(addr, &req, timeout)
+                        .map_err(|_| ServeError::Shutdown)?;
+                    resp.result
+                })
+            })
+            .collect();
+        probes.into_iter().map(|p| p.join().expect("stats probe")).collect()
+    });
+    let mut agg = StatsReply {
+        protocol_version: PROTOCOL_VERSION,
+        backends: backends.len() as u64,
+        ..StatsReply::default()
+    };
+    for result in results {
+        match result? {
+            Reply::Stats(s) => {
+                agg.infer_served += s.infer_served;
+                agg.infer_batches += s.infer_batches;
+                agg.sim_submitted += s.sim_submitted;
+                agg.sim_completed += s.sim_completed;
+                agg.cache_hits += s.cache_hits;
+                agg.cache_misses += s.cache_misses;
+                agg.cache_entries += s.cache_entries;
+            }
+            _ => {
+                return Err(ServeError::BadRequest(
+                    "backend answered stats with a non-stats reply".into(),
+                ))
+            }
+        }
+    }
+    Ok(Reply::Stats(agg))
+}
+
+/// One per-backend sub-sweep: the request to send plus the *global*
+/// plan positions its rows will fill, in the order the backend will
+/// emit them (the backend streams its own plan order — variant-major,
+/// then config — which maps 1:1 onto these precomputed slots).
+struct SubSweep {
+    req: Request,
+    slots: VecDeque<usize>,
+}
+
+enum Msg {
+    /// One row landed, destined for global plan position `usize`.
+    Row(usize, SweepRow),
+    /// A backend failed; the whole sharded sweep fails with this error.
+    Fail(ServeError),
+}
+
+/// One streamed sharded `Sweep`: validate the grid exactly like a
+/// single node, split it into per-backend sub-plans, fan out, and merge
+/// the backends' row streams back into plan order with one consolidated
+/// progress counter. Returns the terminal reply (`Done`; rows already
+/// left through the sink).
+fn sweep_sharded(
+    backends: &[String],
+    timeout: Duration,
+    models: Vec<String>,
+    variants: Vec<FuseVariant>,
+    configs: Vec<ConfigPatch>,
+    deadline_ms: Option<u64>,
+    sink: &FrameSink,
+) -> Result<Reply, ServeError> {
+    // Validation mirrors the single-node sweep path, so error replies
+    // (unknown model, bad config, empty grid) are identical on the wire.
+    let networks = models
+        .iter()
+        .map(|m| ModelSpec::Zoo(m.clone()).resolve())
+        .collect::<Result<Vec<_>, _>>()?;
+    let cfgs = configs
+        .iter()
+        .map(|p| p.to_config())
+        .collect::<Result<Vec<_>, _>>()?;
+    let plan = SweepPlan::new(networks, variants.clone(), cfgs);
+    if plan.is_empty() {
+        return Err(ServeError::BadRequest("empty sweep grid".into()));
+    }
+    let total = plan.len();
+    let n = backends.len();
+
+    // --- sub-plan construction -------------------------------------
+    // Cells route by (model, config); variants never affect routing, so
+    // for one model the config list partitions across backends and each
+    // non-empty (backend, model) pair is one cross-product sub-sweep.
+    let mut subs: Vec<Vec<SubSweep>> = (0..n).map(|_| Vec::new()).collect();
+    for (m, name) in models.iter().enumerate() {
+        let mut per_backend: Vec<Vec<usize>> = vec![Vec::new(); n];
+        for (c, cfg) in plan.configs.iter().enumerate() {
+            per_backend[route(name, cfg, n)].push(c);
+        }
+        for (b, cs) in per_backend.into_iter().enumerate() {
+            if cs.is_empty() {
+                continue;
+            }
+            let mut slots = VecDeque::with_capacity(variants.len() * cs.len());
+            for v in 0..variants.len() {
+                for &c in &cs {
+                    slots.push_back(plan.index_of(m, v, c));
+                }
+            }
+            // Sub-request ids only need to be unique per backend
+            // connection; the merge re-keys every frame under the
+            // client's original id.
+            let mut req = Request::new(
+                subs[b].len() as u64 + 1,
+                RequestBody::Sweep {
+                    models: vec![name.clone()],
+                    variants: variants.clone(),
+                    configs: cs.iter().map(|&c| configs[c].clone()).collect(),
+                },
+            );
+            if let Some(ms) = deadline_ms {
+                req = req.with_deadline_ms(ms);
+            }
+            subs[b].push(SubSweep { req, slots });
+        }
+    }
+
+    // Up-front progress: the client learns the full grid size before
+    // any backend answers, identical to the single-node stream.
+    let _ = sink.progress(0, total as u64);
+
+    // --- fan out ----------------------------------------------------
+    // The merge channel is bounded so backpressure stays end to end: a
+    // slow client pauses the merge, the merge pauses the workers, the
+    // workers stop draining their backend sockets, and each backend's
+    // own bounded writer pauses its sweep — no tier buffers unboundedly.
+    let (tx, rx) = mpsc::sync_channel::<Msg>(STREAM_BOUND);
+    for (b, backend_subs) in subs.into_iter().enumerate() {
+        if backend_subs.is_empty() {
+            continue;
+        }
+        let addr = backends[b].clone();
+        let tx = tx.clone();
+        thread::Builder::new()
+            .name("fuseconv-shard-fanout".into())
+            .spawn(move || backend_worker(&addr, timeout, backend_subs, &tx))
+            .expect("spawn shard fan-out");
+    }
+    drop(tx);
+
+    // --- plan-order merge (the run_sweep_with reorder buffer) -------
+    let mut slots: Vec<Option<SweepRow>> = (0..total).map(|_| None).collect();
+    let mut next = 0usize;
+    let mut done = 0usize;
+    while done < total {
+        match rx.recv() {
+            Ok(Msg::Row(i, row)) => {
+                slots[i] = Some(row);
+                done += 1;
+                let _ = sink.progress(done as u64, total as u64);
+                // Flush the ready plan-order prefix.
+                while next < total {
+                    let Some(row) = slots[next].take() else { break };
+                    let _ = sink.row(row);
+                    next += 1;
+                }
+            }
+            Ok(Msg::Fail(e)) => return Err(e),
+            // Every worker hung up without delivering the full grid.
+            Err(_) => return Err(ServeError::Shutdown),
+        }
+    }
+    Ok(Reply::Done)
+}
+
+/// Drive one backend's sub-sweeps over a single connection — strictly
+/// one at a time, so a client's sharded sweep consumes at most *one*
+/// batch-lane admission slot per backend (exactly like the single
+/// `Sweep` request it replaces; pipelining them would make a grid that
+/// one node admits bounce `busy` behind a narrow `--batch-capacity`) —
+/// translating rows to global plan positions. Any transport failure or
+/// early stream end fails the whole sweep (a typed error, reported
+/// once through the merge channel).
+fn backend_worker(
+    addr: &str,
+    timeout: Duration,
+    subs: Vec<SubSweep>,
+    tx: &mpsc::SyncSender<Msg>,
+) {
+    let fail = |e: ServeError| {
+        let _ = tx.send(Msg::Fail(e));
+    };
+    let mut client = match WireClient::connect(addr, timeout) {
+        Ok(c) => c,
+        Err(_) => return fail(ServeError::Shutdown),
+    };
+    for sub in subs {
+        if client.send(&sub.req).is_err() {
+            return fail(ServeError::Shutdown);
+        }
+        let mut slots = sub.slots;
+        loop {
+            match client.recv_frame(sub.req.id) {
+                Ok(Frame::Row(row)) => {
+                    let Some(slot) = slots.pop_front() else {
+                        return fail(ServeError::BadRequest(
+                            "backend emitted an unexpected sweep row".into(),
+                        ));
+                    };
+                    if tx.send(Msg::Row(slot, row)).is_err() {
+                        return; // merge already ended (failure elsewhere)
+                    }
+                }
+                Ok(Frame::Progress { .. }) => {
+                    // Per-backend progress is consolidated at the merge;
+                    // the client sees one counter over the whole grid.
+                }
+                Ok(Frame::Final(Ok(_))) => {
+                    if !slots.is_empty() {
+                        return fail(ServeError::BadRequest(
+                            "backend ended a sub-sweep before streaming every row".into(),
+                        ));
+                    }
+                    break;
+                }
+                Ok(Frame::Final(Err(e))) => return fail(e),
+                Err(_) => return fail(ServeError::Shutdown),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::models;
+    use crate::sim::grid_configs;
+    use crate::sim::Dataflow;
+
+    #[test]
+    fn shard_key_is_deterministic_and_price_relevant() {
+        let cfg = SimConfig::with_size(16);
+        // Pure function of its arguments: identical across calls (and,
+        // because it never touches std's seeded hashers, across
+        // processes of any build of this vocabulary).
+        assert_eq!(shard_key("mobilenet-v2", &cfg), shard_key("mobilenet-v2", &cfg));
+        let from_thread = std::thread::spawn({
+            let cfg = cfg.clone();
+            move || shard_key("mobilenet-v2", &cfg)
+        })
+        .join()
+        .unwrap();
+        assert_eq!(from_thread, shard_key("mobilenet-v2", &cfg));
+
+        // Model identity and price-relevant fields move the key…
+        assert_ne!(shard_key("mobilenet-v2", &cfg), shard_key("mnasnet-b1", &cfg));
+        assert_ne!(shard_key("m", &cfg), shard_key("m", &SimConfig::with_size(32)));
+        let throttled =
+            SimConfig { enforce_dram_bw: true, dram_bw: 2.0, ..SimConfig::with_size(16) };
+        assert_ne!(shard_key("m", &cfg), shard_key("m", &throttled));
+        // …but frequency does not (it never changes cached pricing, so
+        // frequency-only what-ifs stay on their warm backend).
+        let fast = SimConfig { freq_mhz: 500, ..SimConfig::with_size(16) };
+        assert_eq!(shard_key("m", &cfg), shard_key("m", &fast));
+    }
+
+    #[test]
+    fn zoo_grid_distribution_never_starves_a_backend() {
+        // Satellite acceptance: a zoo×config grid spreads across 2–4
+        // backends with every shard taking a meaningful share.
+        let grid = grid_configs(
+            &[8, 16, 32, 64],
+            &[Dataflow::OutputStationary, Dataflow::WeightStationary],
+            &[true, false],
+        );
+        for n in 2..=4usize {
+            let mut counts = vec![0usize; n];
+            for name in models::ZOO_NAMES {
+                for cfg in &grid {
+                    counts[route(name, cfg, n)] += 1;
+                }
+            }
+            let cells = models::ZOO_NAMES.len() * grid.len();
+            for (b, &count) in counts.iter().enumerate() {
+                assert!(
+                    count * n * 4 >= cells,
+                    "backend {b}/{n} starved: {count} of {cells} cells ({counts:?})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn route_is_stable_under_backend_count() {
+        let cfg = SimConfig::with_size(8);
+        for n in 1..=8 {
+            let b = route("mobilenet-v2", &cfg, n);
+            assert!(b < n);
+            // same inputs → same backend, every time
+            assert_eq!(b, route("mobilenet-v2", &cfg, n));
+        }
+    }
+}

@@ -1047,6 +1047,7 @@ fn reply_to_json(reply: &Reply) -> Json {
             ("cache_hits", Json::UInt(s.cache_hits)),
             ("cache_misses", Json::UInt(s.cache_misses)),
             ("cache_entries", Json::UInt(s.cache_entries)),
+            ("backends", Json::UInt(s.backends)),
         ]),
         Reply::Zoo(entries) => obj(vec![
             ("kind", Json::Str("zoo".into())),
@@ -1103,6 +1104,8 @@ fn reply_from_json(v: &Json) -> Result<Reply, WireError> {
             cache_hits: need_u64(v, "cache_hits")?,
             cache_misses: need_u64(v, "cache_misses")?,
             cache_entries: need_u64(v, "cache_entries")?,
+            // additive v2 field (shard front tiers); absent = direct node
+            backends: opt_u64(v, "backends")?.unwrap_or(0),
         }),
         "zoo" => Reply::Zoo(
             need_arr(v, "models")?
@@ -1413,6 +1416,7 @@ mod tests {
                 cache_hits: 100,
                 cache_misses: 20,
                 cache_entries: 15,
+                backends: 2,
             }),
         ));
         rt_response(Response::ok(

@@ -13,8 +13,11 @@
 //!   serve      serving frontends: TCP/JSON frames, plus HTTP/SSE with
 //!              --http-port (inference + simulation traffic, protocol v2
 //!              frame streams, two-lane admission, one shared router)
-//!   request    client for a running `fuseconv serve` (--stream for the
-//!              raw frame view, --http for the HTTP transport)
+//!   shard      multi-node front tier over several `fuseconv serve`
+//!              backends: (model, config)-sharded routing, plan-order
+//!              sweep merge, aggregated stats, fan-out shutdown
+//!   request    client for a running `fuseconv serve`/`fuseconv shard`
+//!              (--stream for the raw frame view, --http for HTTP)
 
 use fuseconv::cli::Cli;
 use fuseconv::coordinator::search::{
@@ -46,6 +49,7 @@ fn main() {
         "trace" => cmd_trace(&rest),
         "train" => cmd_train(&rest),
         "serve" => cmd_serve(&rest),
+        "shard" => cmd_shard(&rest),
         "request" => cmd_request(&rest),
         "help" | "--help" | "-h" => {
             print_help();
@@ -79,6 +83,8 @@ fn print_help() {
          serve       TCP + HTTP frontends  (--listen, --http-port, --engine mock|none|pjrt,\n              \
                      --threads, --sim-capacity, --batch-capacity,\n              \
                      --max-requests-per-conn, --queue, --port-file, --http-port-file)\n  \
+         shard       multi-node front tier (--backends addr1,addr2,..., --listen, --http-port,\n              \
+                     --timeout-ms, --max-requests-per-conn, --port-file, --http-port-file)\n  \
          request     serve client          (--connect, --op infer|simulate|sweep|stats|zoo|shutdown,\n              \
                      --model, --variant, --size, --count, --stream, --http)"
     );
@@ -732,9 +738,7 @@ fn cmd_train(_argv: &[String]) -> i32 {
 /// shutdown latch with wire clients.
 fn cmd_serve(argv: &[String]) -> i32 {
     use fuseconv::coordinator::batcher::BatchPolicy;
-    use fuseconv::coordinator::{
-        HttpServer, Router, SimServer, StopLatch, WireServer, PROTOCOL_VERSION,
-    };
+    use fuseconv::coordinator::{Router, SimServer};
 
     let cli = Cli::new("serve", "TCP + HTTP serving frontends for inference + simulation")
         .opt("listen", "bind address (port 0 = ephemeral)", Some("127.0.0.1:7878"))
@@ -828,36 +832,73 @@ fn cmd_serve(argv: &[String]) -> i32 {
     };
 
     let listen = args.str("listen");
-    let budget = (conn_budget > 0).then_some(conn_budget);
-    let router = std::sync::Arc::new(router);
+    run_frontends(
+        std::sync::Arc::new(router),
+        &FrontendOpts {
+            listen: &listen,
+            http_port,
+            budget: (conn_budget > 0).then_some(conn_budget),
+            port_file: args.get("port-file"),
+            http_port_file: args.get("http-port-file"),
+            label: "serve",
+        },
+    )
+}
+
+/// Everything `run_frontends` needs besides the service itself.
+struct FrontendOpts<'a> {
+    /// TCP bind address (port 0 = ephemeral).
+    listen: &'a str,
+    /// Also run an HTTP/SSE listener on this port (same host).
+    http_port: Option<u64>,
+    /// Per-connection request budget (both transports).
+    budget: Option<u64>,
+    port_file: Option<&'a str>,
+    http_port_file: Option<&'a str>,
+    /// Subcommand name for banner lines (`serve` / `shard`).
+    label: &'a str,
+}
+
+/// Mount one service on the wire frontends: the TCP listener always,
+/// plus an HTTP/SSE listener when requested — both sharing one
+/// `StopLatch`, so a `Shutdown` served by either transport stops
+/// both. Shared by `fuseconv serve` (single node) and `fuseconv shard`
+/// (front tier): the frontends mount any `Service` unchanged.
+fn run_frontends(
+    service: std::sync::Arc<dyn fuseconv::coordinator::Service>,
+    opts: &FrontendOpts<'_>,
+) -> i32 {
+    use fuseconv::coordinator::{HttpServer, StopLatch, WireServer, PROTOCOL_VERSION};
+
     let stop = StopLatch::new();
-    let wire = match WireServer::bind(&listen, router.clone()) {
-        Ok(w) => w.with_request_budget(budget).with_stop(stop.clone()),
+    let label = opts.label;
+    let wire = match WireServer::bind(opts.listen, std::sync::Arc::clone(&service)) {
+        Ok(w) => w.with_request_budget(opts.budget).with_stop(stop.clone()),
         Err(e) => {
-            eprintln!("bind {listen}: {e}");
+            eprintln!("bind {}: {e}", opts.listen);
             return 1;
         }
     };
     let addr = wire.local_addr();
     eprintln!(
-        "fuseconv serve: listening on {addr} (protocol v{PROTOCOL_VERSION}); \
+        "fuseconv {label}: listening on {addr} (protocol v{PROTOCOL_VERSION}); \
          send {{\"op\":\"shutdown\"}} to stop"
     );
-    if let Some(path) = args.get("port-file") {
+    if let Some(path) = opts.port_file {
         if let Err(e) = std::fs::write(path, addr.to_string()) {
             eprintln!("writing {path}: {e}");
             return 1;
         }
     }
 
-    // Optional HTTP/SSE listener on the same host, router, and latch:
+    // Optional HTTP/SSE listener on the same host, service, and latch:
     // a shutdown served by either transport stops both.
     let mut http_thread = None;
-    if let Some(port) = http_port {
-        let host = listen.rsplit_once(':').map(|(h, _)| h).unwrap_or("127.0.0.1");
+    if let Some(port) = opts.http_port {
+        let host = opts.listen.rsplit_once(':').map(|(h, _)| h).unwrap_or("127.0.0.1");
         let http_listen = format!("{host}:{port}");
-        let http = match HttpServer::bind(&http_listen, router.clone()) {
-            Ok(h) => h.with_request_budget(budget).with_stop(stop.clone()),
+        let http = match HttpServer::bind(&http_listen, std::sync::Arc::clone(&service)) {
+            Ok(h) => h.with_request_budget(opts.budget).with_stop(stop.clone()),
             Err(e) => {
                 eprintln!("bind {http_listen}: {e}");
                 return 1;
@@ -865,10 +906,10 @@ fn cmd_serve(argv: &[String]) -> i32 {
         };
         let http_addr = http.local_addr();
         eprintln!(
-            "fuseconv serve: http on {http_addr} \
+            "fuseconv {label}: http on {http_addr} \
              (POST /v1/{{infer,simulate}}, POST /v1/sweep streams SSE, GET /v1/stats, GET /healthz)"
         );
-        if let Some(path) = args.get("http-port-file") {
+        if let Some(path) = opts.http_port_file {
             if let Err(e) = std::fs::write(path, http_addr.to_string()) {
                 eprintln!("writing {path}: {e}");
                 return 1;
@@ -879,11 +920,11 @@ fn cmd_serve(argv: &[String]) -> i32 {
 
     let code = match wire.run() {
         Ok(()) => {
-            eprintln!("fuseconv serve: clean shutdown");
+            eprintln!("fuseconv {label}: clean shutdown");
             0
         }
         Err(e) => {
-            eprintln!("serve failed: {e}");
+            eprintln!("{label} failed: {e}");
             1
         }
     };
@@ -894,16 +935,94 @@ fn cmd_serve(argv: &[String]) -> i32 {
         match h.join() {
             Ok(Ok(())) => {}
             Ok(Err(e)) => {
-                eprintln!("http serve failed: {e}");
+                eprintln!("http {label} failed: {e}");
                 return 1;
             }
             Err(_) => {
-                eprintln!("http serve panicked");
+                eprintln!("http {label} panicked");
                 return 1;
             }
         }
     }
     code
+}
+
+/// `fuseconv shard --backends addr1,addr2,...` — the multi-node front
+/// tier: partitions `Simulate` traffic across backends by a stable
+/// (model, config) hash so each backend's layer cache stays hot on its
+/// shard, splits `Sweep` grids into per-backend sub-plans and merges
+/// the row streams back into plan order, aggregates `Stats`, and fans
+/// `Shutdown` out to the whole deployment. Mounts the same TCP and
+/// HTTP/SSE frontends as `fuseconv serve`.
+fn cmd_shard(argv: &[String]) -> i32 {
+    use fuseconv::coordinator::ShardRouter;
+
+    let cli = Cli::new("shard", "shard-router front tier over several `fuseconv serve` backends")
+        .opt("backends", "comma list of backend addresses host:port (required)", None)
+        .opt("listen", "bind address (port 0 = ephemeral)", Some("127.0.0.1:7900"))
+        .opt("http-port", "also serve HTTP/SSE on this port, same host (0 = ephemeral)", None)
+        .opt("http-port-file", "write the bound HTTP address here once listening", None)
+        .opt("max-requests-per-conn", "per-connection request budget (0=unlimited)", Some("0"))
+        .opt("max-inflight", "front-tier in-flight request bound (min 1)", Some("1024"))
+        .opt("timeout-ms", "backend connect/receive timeout (0 = none)", Some("600000"))
+        .opt("port-file", "write the bound address here once listening", None);
+    let args = match cli.parse(argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}\n{}", cli.usage());
+            return 2;
+        }
+    };
+    let backends: Vec<String> = args
+        .get("backends")
+        .unwrap_or("")
+        .split(',')
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+        .map(str::to_string)
+        .collect();
+    if backends.is_empty() {
+        eprintln!("--backends needs at least one host:port address\n{}", cli.usage());
+        return 2;
+    }
+    let (conn_budget, max_inflight, timeout_ms) = match (
+        args.u64("max-requests-per-conn"),
+        args.usize("max-inflight"),
+        args.u64("timeout-ms"),
+    ) {
+        (Ok(rb), Ok(mi), Ok(t)) => (rb, mi, t),
+        _ => {
+            eprintln!("bad numeric option\n{}", cli.usage());
+            return 2;
+        }
+    };
+    let http_port = match args.opt_u64("http-port") {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("{e}\n{}", cli.usage());
+            return 2;
+        }
+    };
+
+    let timeout = std::time::Duration::from_millis(timeout_ms);
+    let router = ShardRouter::new(backends.clone(), timeout).with_inflight(max_inflight);
+    eprintln!(
+        "fuseconv shard: fronting {} backend(s): {}",
+        backends.len(),
+        backends.join(", ")
+    );
+    let listen = args.str("listen");
+    run_frontends(
+        std::sync::Arc::new(router),
+        &FrontendOpts {
+            listen: &listen,
+            http_port,
+            budget: (conn_budget > 0).then_some(conn_budget),
+            port_file: args.get("port-file"),
+            http_port_file: args.get("http-port-file"),
+            label: "shard",
+        },
+    )
 }
 
 #[cfg(feature = "xla")]

@@ -265,6 +265,22 @@ impl SweepPlan {
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
+
+    /// Plan position of the (n-th network, v-th variant, c-th config)
+    /// cell. Plan order is network-major, then variant, then config —
+    /// the one ordering every sweep consumer (serial path, pool path,
+    /// wire streams, the shard front tier's sub-grid merge) agrees on.
+    pub fn index_of(&self, n: usize, v: usize, c: usize) -> usize {
+        (n * self.variants.len() + v) * self.configs.len() + c
+    }
+
+    /// Inverse of [`SweepPlan::index_of`]: the (network, variant,
+    /// config) indices of plan position `index`.
+    pub fn cell_at(&self, index: usize) -> (usize, usize, usize) {
+        let c = index % self.configs.len();
+        let nv = index / self.configs.len();
+        (nv / self.variants.len(), nv % self.variants.len(), c)
+    }
 }
 
 /// The standard config grid: sizes × dataflows × ST-OS modes, everything
@@ -478,11 +494,10 @@ where
         // Flush the ready plan-order prefix.
         while next < total && slots[next].is_some() {
             let sim = slots[next].take().expect("checked above");
-            let nv = next / plan.configs.len();
-            let c = next % plan.configs.len();
+            let (n, v, c) = plan.cell_at(next);
             let record = SweepRecord {
-                network: plan.networks[nv / plan.variants.len()].name.clone(),
-                variant: plan.variants[nv % plan.variants.len()],
+                network: plan.networks[n].name.clone(),
+                variant: plan.variants[v],
                 cfg: plan.configs[c].clone(),
                 sim,
             };
@@ -665,6 +680,32 @@ mod tests {
         let json = out.to_json();
         assert_eq!(json.matches("\"network\"").count(), plan.len());
         assert!(json.starts_with('[') && json.ends_with(']'));
+    }
+
+    #[test]
+    fn plan_indexing_round_trips_every_cell() {
+        let plan = SweepPlan::new(
+            vec![
+                models::by_name("mobilenet-v2").unwrap(),
+                models::by_name("mobilenet-v3-small").unwrap(),
+            ],
+            vec![FuseVariant::Base, FuseVariant::Half, FuseVariant::Full],
+            grid_configs(&[8, 16], &[Dataflow::OutputStationary], &[true, false]),
+        );
+        // index_of and cell_at are inverses over the whole grid, and the
+        // flat order is network-major, then variant, then config.
+        let mut seen = 0usize;
+        for n in 0..plan.networks.len() {
+            for v in 0..plan.variants.len() {
+                for c in 0..plan.configs.len() {
+                    let i = plan.index_of(n, v, c);
+                    assert_eq!(i, seen, "plan order must be n-major, then v, then c");
+                    assert_eq!(plan.cell_at(i), (n, v, c));
+                    seen += 1;
+                }
+            }
+        }
+        assert_eq!(seen, plan.len());
     }
 
     #[test]

@@ -526,8 +526,17 @@ fn protocol_md_documents_the_wire_contract() {
         let tag = format!("`{}`", f.tag());
         assert!(spec.contains(&tag), "PROTOCOL.md must document the {tag} frame");
     }
-    // the ordering guarantees and both renderings must be spelled out
-    for needle in ["plan order", "exactly one", "text/event-stream", "timeout-ms"] {
+    // the ordering guarantees, both renderings, and the sharded
+    // front-tier semantics must be spelled out
+    for needle in [
+        "plan order",
+        "exactly one",
+        "text/event-stream",
+        "timeout-ms",
+        "Sharded deployment",
+        "consolidated",
+        "`backends`",
+    ] {
         assert!(spec.contains(needle), "PROTOCOL.md must cover {needle:?}");
     }
 }

@@ -1,0 +1,398 @@
+//! Multi-node sharded serving acceptance: a `ShardRouter` front tier
+//! over several real `fuseconv serve`-style backends, each a full
+//! `Router` behind its own TCP listener.
+//!
+//! * a sharded sweep over ≥2 backends is identical on the wire to the
+//!   same sweep against a single node — row frames byte-for-byte (kind,
+//!   order, payload), one consolidated monotonic progress counter, one
+//!   terminal `final` — and both match a local serial sweep;
+//! * `Simulate` through the front tier prices identically to a direct
+//!   in-process `simulate_network`;
+//! * `Stats` aggregates every backend's counters and stamps the
+//!   backend count (the `request --op stats` regression);
+//! * a lost backend (refused connection / dropped stream) terminates
+//!   the affected streams with a typed `final` error — never a hang —
+//!   while the surviving backend keeps serving;
+//! * `Shutdown` through the front tier stops the whole deployment;
+//! * the HTTP/SSE frontend mounts the shard router unchanged.
+
+use fuseconv::coordinator::batcher::BatchPolicy;
+use fuseconv::coordinator::shard::{route, ShardRouter};
+use fuseconv::coordinator::wire::encode_frame;
+use fuseconv::coordinator::{
+    http_call, http_sse, request_once, ConfigPatch, Frame, HttpServer, MockEngine, ModelSpec,
+    Reply, Request, RequestBody, Router, ServeError, Server, Service, SimServer, SweepRow,
+    WireClient, WireServer,
+};
+use fuseconv::nn::models;
+use fuseconv::sim::{
+    run_sweep_serial, simulate_network, FuseVariant, SimConfig, SweepPlan,
+};
+use std::net::TcpListener;
+use std::sync::Arc;
+use std::thread;
+use std::time::Duration;
+
+const T: Duration = Duration::from_secs(120);
+
+/// Boot one full backend (mock inference engine + sim pool) on an
+/// ephemeral TCP port — exactly what `fuseconv serve` mounts.
+fn start_backend() -> (String, thread::JoinHandle<()>) {
+    let router = Router::new(SimServer::new(2)).with_engine(Server::start(
+        MockEngine::new(4, 2, 8),
+        BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(2) },
+    ));
+    let server = WireServer::bind("127.0.0.1:0", Arc::new(router)).expect("bind backend");
+    let addr = server.local_addr().to_string();
+    let handle = thread::spawn(move || server.run().expect("backend run"));
+    (addr, handle)
+}
+
+/// Mount a shard router over `backends` on its own TCP frontend.
+fn start_shard_frontend(backends: Vec<String>) -> (String, thread::JoinHandle<()>) {
+    let shard = ShardRouter::new(backends, T);
+    let server = WireServer::bind("127.0.0.1:0", Arc::new(shard)).expect("bind shard");
+    let addr = server.local_addr().to_string();
+    let handle = thread::spawn(move || server.run().expect("shard run"));
+    (addr, handle)
+}
+
+/// A host:port that refuses connections (bound once, then released).
+fn dead_addr() -> String {
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind throwaway");
+    let addr = listener.local_addr().unwrap().to_string();
+    drop(listener);
+    addr
+}
+
+fn sweep_req(id: u64, names: &[&str], variants: &[FuseVariant], sizes: &[usize]) -> Request {
+    Request::new(
+        id,
+        RequestBody::Sweep {
+            models: names.iter().map(|s| s.to_string()).collect(),
+            variants: variants.to_vec(),
+            configs: sizes.iter().map(|&s| ConfigPatch::sized(s)).collect(),
+        },
+    )
+}
+
+/// Drain one request's reply stream into its raw frame sequence.
+fn stream_frames(client: &mut WireClient, id: u64) -> Vec<Frame> {
+    let mut frames = Vec::new();
+    loop {
+        let frame = client.recv_frame(id).expect("stream frame");
+        let last = frame.is_final();
+        frames.push(frame);
+        if last {
+            return frames;
+        }
+    }
+}
+
+fn row_frames(frames: &[Frame], id: u64) -> Vec<String> {
+    frames
+        .iter()
+        .filter(|f| matches!(f, Frame::Row(_)))
+        .map(|f| encode_frame(id, f))
+        .collect()
+}
+
+fn progress_frames(frames: &[Frame]) -> Vec<(u64, u64)> {
+    frames
+        .iter()
+        .filter_map(|f| match f {
+            Frame::Progress { done, total } => Some((*done, *total)),
+            _ => None,
+        })
+        .collect()
+}
+
+#[test]
+fn sharded_sweep_is_frame_identical_to_single_node() {
+    let (b1, h1) = start_backend();
+    let (b2, h2) = start_backend();
+    let (single, hs) = start_backend();
+    let (shard, hsh) = start_shard_frontend(vec![b1.clone(), b2.clone()]);
+
+    let names = ["mobilenet-v2", "mobilenet-v3-small"];
+    let variants = [FuseVariant::Base, FuseVariant::Half];
+    let sizes = [8, 16, 32, 64]; // 2 × 2 × 4 = 16 cells
+
+    let mut sc = WireClient::connect(&shard, T).expect("connect shard");
+    sc.send(&sweep_req(7, &names, &variants, &sizes)).expect("send sharded sweep");
+    let sharded = stream_frames(&mut sc, 7);
+
+    let mut nc = WireClient::connect(&single, T).expect("connect single node");
+    nc.send(&sweep_req(7, &names, &variants, &sizes)).expect("send single sweep");
+    let direct = stream_frames(&mut nc, 7);
+
+    // Acceptance: identical frame kinds and counts, row frames
+    // byte-for-byte identical (order and payload), identical
+    // consolidated progress counter, identical terminal frame.
+    assert_eq!(row_frames(&sharded, 7), row_frames(&direct, 7), "row frames must match");
+    assert_eq!(
+        progress_frames(&sharded),
+        progress_frames(&direct),
+        "consolidated progress must match the single-node counter"
+    );
+    assert_eq!(sharded.last(), direct.last(), "terminal frame must match");
+    assert_eq!(sharded.len(), direct.len(), "frame-for-frame identical streams");
+
+    // The progress counter is the single consolidated 0..=total walk.
+    let ps = progress_frames(&sharded);
+    assert_eq!(ps.first(), Some(&(0, 16)), "up-front progress with the full grid size");
+    assert_eq!(ps.len(), 17, "one progress frame per completed cell plus the up-front one");
+    assert!(ps.windows(2).all(|w| w[0].0 < w[1].0), "monotonic progress");
+    assert!(matches!(sharded.last(), Some(Frame::Final(Ok(Reply::Done)))));
+
+    // Both streams must also equal the local serial reference.
+    let plan = SweepPlan::new(
+        names.iter().map(|m| models::by_name(m).unwrap()).collect(),
+        variants.to_vec(),
+        sizes.iter().map(|&s| SimConfig::with_size(s)).collect(),
+    );
+    let serial = run_sweep_serial(&plan);
+    let streamed: Vec<SweepRow> = sharded
+        .iter()
+        .filter_map(|f| match f {
+            Frame::Row(r) => Some(r.clone()),
+            _ => None,
+        })
+        .collect();
+    assert_eq!(streamed.len(), serial.records().len());
+    for (row, rec) in streamed.iter().zip(serial.records()) {
+        assert_eq!(row.network, rec.network);
+        assert_eq!(row.variant, rec.variant);
+        assert_eq!((row.rows, row.cols), (rec.cfg.rows, rec.cfg.cols));
+        assert_eq!(row.total_cycles, rec.total_cycles());
+        assert_eq!(row.latency_ms.to_bits(), rec.latency_ms().to_bits());
+    }
+
+    // The fan-out really crossed backends: this grid's shard keys split
+    // it over both, so each backend must have served ≥ 1 sub-sweep.
+    for backend in [&b1, &b2] {
+        let resp = request_once(backend, &Request::new(55, RequestBody::Stats), T)
+            .expect("backend stats");
+        match resp.result {
+            Ok(Reply::Stats(s)) => {
+                assert!(s.sim_completed >= 1, "backend {backend} served no sub-sweep: {s:?}");
+            }
+            other => panic!("expected stats, got {other:?}"),
+        }
+    }
+
+    // Shutdown through the front tier stops the whole deployment.
+    let resp = sc.roundtrip(&Request::new(99, RequestBody::Shutdown)).expect("shutdown ack");
+    assert_eq!(resp.result, Ok(Reply::Done));
+    hsh.join().expect("shard frontend");
+    h1.join().expect("backend 1");
+    h2.join().expect("backend 2");
+
+    // The stand-alone single node is its own deployment.
+    let mut c = WireClient::connect(&single, T).expect("connect single");
+    let _ = c.roundtrip(&Request::new(1, RequestBody::Shutdown));
+    hs.join().expect("single node");
+}
+
+#[test]
+fn sharded_simulate_matches_direct_and_stats_aggregate() {
+    let (b1, h1) = start_backend();
+    let (b2, h2) = start_backend();
+    let shard = ShardRouter::new(vec![b1, b2], T);
+
+    let cases: &[(&str, usize)] = &[
+        ("mobilenet-v2", 8),
+        ("mobilenet-v2", 16),
+        ("mobilenet-v3-small", 8),
+        ("mobilenet-v3-small", 32),
+        ("mnasnet-b1", 16),
+        ("mobilenet-v1", 32),
+    ];
+    for (i, (name, size)) in cases.iter().enumerate() {
+        let ticket = shard.call(Request::new(
+            i as u64,
+            RequestBody::Simulate {
+                model: ModelSpec::Zoo(name.to_string()),
+                variant: FuseVariant::Half,
+                config: ConfigPatch::sized(*size),
+            },
+        ));
+        let resp = ticket.wait_deadline(T);
+        let net = models::by_name(name).unwrap();
+        let direct =
+            simulate_network(&FuseVariant::Half.apply(&net), &SimConfig::with_size(*size));
+        match resp.result {
+            Ok(Reply::Sim(s)) => {
+                assert_eq!(s.total_cycles, direct.total_cycles, "{name} @ {size}");
+                assert_eq!(s.network, direct.network);
+            }
+            other => panic!("expected sim reply for {name}, got {other:?}"),
+        }
+    }
+
+    // Satellite regression: stats against the front tier are the *sum*
+    // over backends (here: every simulate above), stamped with the
+    // backend count — not one node's counters.
+    let resp = shard.call(Request::new(100, RequestBody::Stats)).wait_deadline(T);
+    match resp.result {
+        Ok(Reply::Stats(s)) => {
+            assert_eq!(s.backends, 2, "front tier must report how many nodes it aggregates");
+            assert_eq!(s.sim_submitted, cases.len() as u64);
+            assert_eq!(s.sim_completed, cases.len() as u64);
+            assert!(s.cache_hits + s.cache_misses > 0, "cache counters must aggregate");
+        }
+        other => panic!("expected stats, got {other:?}"),
+    }
+
+    // Fan-out shutdown stops both backends and latches the front tier.
+    let resp = shard.call(Request::new(101, RequestBody::Shutdown)).wait_deadline(T);
+    assert_eq!(resp.result, Ok(Reply::Done));
+    h1.join().expect("backend 1");
+    h2.join().expect("backend 2");
+    let resp = shard.call(Request::new(102, RequestBody::Stats)).wait_deadline(T);
+    assert_eq!(resp.result, Err(ServeError::Shutdown), "latched after shutdown");
+}
+
+#[test]
+fn backend_loss_is_a_typed_error_not_a_hang() {
+    let (live, h) = start_backend();
+    let dead = dead_addr();
+    let shard = ShardRouter::new(vec![live.clone(), dead], Duration::from_secs(30));
+
+    // Pick sizes deterministically on each side of the 2-way split.
+    let name = "mobilenet-v2";
+    let dead_size = (4..64)
+        .find(|&s| route(name, &SimConfig::with_size(s), 2) == 1)
+        .expect("some size routes to the dead backend");
+    let live_size = (4..64)
+        .find(|&s| route(name, &SimConfig::with_size(s), 2) == 0)
+        .expect("some size routes to the live backend");
+
+    // Point query pinned to the dead backend: typed error, promptly.
+    let ticket = shard.call(Request::new(
+        1,
+        RequestBody::Simulate {
+            model: ModelSpec::Zoo(name.into()),
+            variant: FuseVariant::Base,
+            config: ConfigPatch::sized(dead_size),
+        },
+    ));
+    let resp = ticket.wait_deadline(Duration::from_secs(60));
+    assert_eq!(resp.result, Err(ServeError::Shutdown), "dead backend must map to a typed error");
+
+    // A grid spanning both backends: losing one fails the whole sweep
+    // with a typed final instead of stalling on the missing cells.
+    let ticket = shard.call(sweep_req(2, &[name], &[FuseVariant::Base], &[live_size, dead_size]));
+    let resp = ticket.wait_deadline(Duration::from_secs(60));
+    assert_eq!(resp.result, Err(ServeError::Shutdown), "lost backend mid-sweep");
+
+    // The surviving backend is untouched and still serves directly.
+    let resp = request_once(&live, &Request::new(3, RequestBody::Stats), T).expect("live stats");
+    assert!(resp.is_ok());
+
+    // Shutdown fan-out tolerates the dead backend and still acks.
+    let resp = shard.call(Request::new(4, RequestBody::Shutdown)).wait_deadline(T);
+    assert_eq!(resp.result, Ok(Reply::Done));
+    h.join().expect("live backend");
+}
+
+#[test]
+fn front_tier_admission_is_bounded() {
+    // A backend that accepts connections but never answers: connects
+    // land in the listen backlog, replies never come. The first request
+    // occupies the only in-flight slot; the second must shed as Busy
+    // instead of spawning another relay thread.
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind silent backend");
+    let addr = listener.local_addr().unwrap().to_string();
+    let shard = ShardRouter::new(vec![addr], Duration::from_secs(2)).with_inflight(1);
+
+    let simulate = |id: u64| {
+        shard.call(Request::new(
+            id,
+            RequestBody::Simulate {
+                model: ModelSpec::Zoo("mobilenet-v2".into()),
+                variant: FuseVariant::Base,
+                config: ConfigPatch::sized(8),
+            },
+        ))
+    };
+    let first = simulate(1); // holds the only slot, parked on the silent backend
+    let second = simulate(2);
+    assert_eq!(
+        second.wait_deadline(Duration::from_secs(5)).result,
+        Err(ServeError::Busy),
+        "over-capacity admission must shed, not spawn"
+    );
+    // The parked request still resolves (typed) once the silent backend
+    // times out — and its slot is released for new traffic. The release
+    // trails the final frame by a hair (relay-thread exit), so poll.
+    let resp = first.wait_deadline(Duration::from_secs(30));
+    assert_eq!(resp.result, Err(ServeError::Shutdown));
+    let t0 = std::time::Instant::now();
+    loop {
+        let resp = simulate(3).wait_deadline(Duration::from_secs(30));
+        if resp.result == Err(ServeError::Busy) && t0.elapsed() < Duration::from_secs(10) {
+            thread::sleep(Duration::from_millis(10));
+            continue;
+        }
+        assert_eq!(resp.result, Err(ServeError::Shutdown), "released slot must admit again");
+        break;
+    }
+    drop(listener);
+}
+
+#[test]
+fn http_frontend_mounts_the_shard_router_unchanged() {
+    let (b1, h1) = start_backend();
+    let (b2, h2) = start_backend();
+    let shard = ShardRouter::new(vec![b1, b2], T);
+    let http = HttpServer::bind("127.0.0.1:0", Arc::new(shard)).expect("bind http");
+    let addr = http.local_addr().to_string();
+    let hh = thread::spawn(move || http.run().expect("http run"));
+
+    // Liveness probes the whole deployment (healthz → Stats fan-out).
+    let reply = http_call(&addr, "/healthz", None, None, T).expect("healthz");
+    assert_eq!(reply.status, 200);
+
+    // An SSE sweep through the front tier matches the serial reference.
+    let body = concat!(
+        "{\"id\":9,\"models\":[\"mobilenet-v2\",\"mnasnet-b1\"],",
+        "\"variants\":[\"base\",\"fuse-half\"],\"configs\":[{\"size\":8},{\"size\":16}]}"
+    );
+    let mut rows: Vec<SweepRow> = Vec::new();
+    let resp = http_sse(&addr, "/v1/sweep", body, None, T, |_, frame| {
+        if let Frame::Row(r) = frame {
+            rows.push(r.clone());
+        }
+    })
+    .expect("sse sweep");
+    assert!(resp.is_ok(), "sweep must succeed: {resp:?}");
+    let plan = SweepPlan::new(
+        vec![
+            models::by_name("mobilenet-v2").unwrap(),
+            models::by_name("mnasnet-b1").unwrap(),
+        ],
+        vec![FuseVariant::Base, FuseVariant::Half],
+        vec![SimConfig::with_size(8), SimConfig::with_size(16)],
+    );
+    let serial = run_sweep_serial(&plan);
+    assert_eq!(rows.len(), serial.records().len());
+    for (row, rec) in rows.iter().zip(serial.records()) {
+        assert_eq!(row.network, rec.network);
+        assert_eq!(row.total_cycles, rec.total_cycles());
+    }
+
+    // Aggregated stats are visible over HTTP too.
+    let reply = http_call(&addr, "/v1/stats", None, None, T).expect("stats");
+    match reply.response().expect("stats body").result {
+        Ok(Reply::Stats(s)) => assert_eq!(s.backends, 2),
+        other => panic!("expected stats, got {other:?}"),
+    }
+
+    // Shutdown over HTTP stops the front tier and both backends.
+    let reply = http_call(&addr, "/v1/shutdown", Some("{}"), None, T).expect("shutdown");
+    assert_eq!(reply.status, 200);
+    hh.join().expect("http frontend");
+    h1.join().expect("backend 1");
+    h2.join().expect("backend 2");
+}
