@@ -1,0 +1,125 @@
+#!/usr/bin/env python3
+"""Validate a `fuseconv bench` report (BENCH_<n>.json).
+
+    python3 ci/check_bench.py BENCH_6.json [--min-rps-ratio 0.9]
+
+Checks, in order:
+
+  * the report parses as JSON and carries every schema key the perf
+    trajectory depends on (so later tooling can chart BENCH_*.json
+    files without per-file special cases);
+  * achieved RPS >= --min-rps-ratio x target RPS (default 0.9): the
+    serving tier kept up with the open-loop schedule;
+  * zero transport errors: no dead sockets, no undecodable frames —
+    app-level errors (`busy`, `deadline`) are load-shedding and allowed,
+    transport errors are always a bug;
+  * nothing was left unanswered after the drain grace;
+  * latency percentiles are present, finite, positive, and monotone
+    (p50 <= p95 <= p99 <= p999 <= max);
+  * the request ledger adds up (completed + unanswered <= sent is the
+    floor; completed alone must support the achieved-RPS figure).
+
+Exit code 0 on pass; 1 with a reason on the first failure.
+"""
+
+import argparse
+import json
+import math
+import sys
+
+SCHEMA_KEYS = [
+    "bench",
+    "transport",
+    "target_rps",
+    "achieved_rps",
+    "duration_s",
+    "connections",
+    "peak_inflight",
+    "requests",
+    "latency_ms",
+    "op_mix",
+    "errors_by_code",
+]
+REQUEST_KEYS = ["sent", "completed", "app_errors", "transport_errors", "unanswered"]
+LATENCY_KEYS = ["p50", "p95", "p99", "p999", "mean", "max"]
+
+
+def fail(msg: str) -> None:
+    print(f"check_bench: FAIL: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def positive_finite(name: str, value) -> float:
+    if not isinstance(value, (int, float)) or isinstance(value, bool):
+        fail(f"{name} must be a number, got {value!r}")
+    value = float(value)
+    if not math.isfinite(value) or value <= 0:
+        fail(f"{name} must be finite and positive, got {value}")
+    return value
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("report", help="path to a BENCH_<n>.json bench report")
+    ap.add_argument(
+        "--min-rps-ratio",
+        type=float,
+        default=0.9,
+        help="floor on achieved_rps / target_rps (default 0.9)",
+    )
+    args = ap.parse_args()
+
+    try:
+        with open(args.report, encoding="utf-8") as fh:
+            report = json.load(fh)
+    except (OSError, json.JSONDecodeError) as e:
+        fail(f"cannot read {args.report}: {e}")
+
+    for key in SCHEMA_KEYS:
+        if key not in report:
+            fail(f"missing schema key {key!r}")
+    requests = report["requests"]
+    for key in REQUEST_KEYS:
+        if key not in requests:
+            fail(f"missing requests.{key}")
+    latency = report["latency_ms"]
+    for key in LATENCY_KEYS:
+        if key not in latency:
+            fail(f"missing latency_ms.{key}")
+
+    target = positive_finite("target_rps", report["target_rps"])
+    achieved = positive_finite("achieved_rps", report["achieved_rps"])
+    positive_finite("duration_s", report["duration_s"])
+    if report["connections"] < 1:
+        fail("connections must be >= 1")
+
+    ratio = achieved / target
+    if ratio < args.min_rps_ratio:
+        fail(
+            f"achieved {achieved:.1f} rps is {ratio:.1%} of the {target:.0f} rps "
+            f"target (floor {args.min_rps_ratio:.0%})"
+        )
+
+    if requests["transport_errors"] != 0:
+        fail(f"{requests['transport_errors']} transport error(s); the floor is zero")
+    if requests["unanswered"] != 0:
+        fail(f"{requests['unanswered']} request(s) never answered within the drain grace")
+    if requests["completed"] > requests["sent"]:
+        fail("completed exceeds sent — the request ledger is inconsistent")
+
+    values = {k: positive_finite(f"latency_ms.{k}", latency[k]) for k in LATENCY_KEYS}
+    ladder = ["p50", "p95", "p99", "p999", "max"]
+    for lo, hi in zip(ladder, ladder[1:]):
+        if values[lo] > values[hi]:
+            fail(f"latency_ms.{lo} ({values[lo]}) > latency_ms.{hi} ({values[hi]})")
+
+    print(
+        f"check_bench: OK: {achieved:.1f}/{target:.0f} rps ({ratio:.1%}) over "
+        f"{report['connections']} conns on the {report['transport']} transport, "
+        f"p50 {values['p50']:.2f} ms, p99 {values['p99']:.2f} ms, "
+        f"0 transport errors"
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -2,21 +2,32 @@
 # Wait for a port file (written by `fuseconv serve/shard --port-file`
 # once the listener is bound) and print the address it holds.
 #
-#   ADDR=$(ci/wait_port.sh /tmp/fuseconv-port [tries])
+#   ADDR=$(ci/wait_port.sh /tmp/fuseconv-port [deadline-secs] [pid])
 #
-# Polls every 0.1 s for up to `tries` attempts (default 100 = 10 s).
+# Polls every 0.1 s against a wall-clock deadline (default 30 s) and
+# exits nonzero on timeout — a hung server fails the step instead of
+# wedging the job until the runner-level timeout. When a PID is given,
+# the wait also aborts as soon as that process is gone (a crashed
+# server fails in ~0.1 s, not after the full deadline).
 set -euo pipefail
 
-file="${1:?usage: wait_port.sh <port-file> [tries]}"
-tries="${2:-100}"
+file="${1:?usage: wait_port.sh <port-file> [deadline-secs] [pid]}"
+deadline_secs="${2:-30}"
+pid="${3:-}"
 
-for _ in $(seq 1 "$tries"); do
+start=$(date +%s)
+while :; do
   if [ -s "$file" ]; then
     cat "$file"
     exit 0
   fi
+  if [ -n "$pid" ] && ! kill -0 "$pid" 2>/dev/null; then
+    echo "process $pid exited before writing port file $file" >&2
+    exit 1
+  fi
+  if [ $(( $(date +%s) - start )) -ge "$deadline_secs" ]; then
+    echo "timed out after ${deadline_secs}s waiting for port file $file" >&2
+    exit 1
+  fi
   sleep 0.1
 done
-
-echo "timed out waiting for port file $file" >&2
-exit 1

@@ -1,0 +1,649 @@
+//! `fuseconv bench` — an open-loop load generator for a running
+//! `fuseconv serve` / `fuseconv shard` frame endpoint, and the producer
+//! of the repo's perf-trajectory points (`BENCH_<n>.json`).
+//!
+//! Open loop means the send schedule is fixed by the target rate, not
+//! by completions: requests go out every `1/rps` seconds across a pool
+//! of persistent connections whether or not earlier replies have come
+//! back, so a slow server shows up as rising latency and falling
+//! achieved RPS instead of a politely self-throttling client
+//! (closed-loop generators hide exactly the overload the benchmark
+//! exists to measure). The client itself is a single thread over the
+//! same epoll [`Poller`](crate::coordinator::reactor) the serving tier
+//! uses — it comfortably drives more connections than the
+//! thread-per-connection transport could host.
+//!
+//! The run has three phases: a ramped **warmup** (rate climbs linearly
+//! to the target; samples discarded), the **measured window** (every
+//! completion's latency recorded), and a **drain** (no new sends;
+//! in-flight requests get a bounded grace to finish). The report —
+//! written as single-line JSON, schema checked by `ci/check_bench.py` —
+//! records achieved RPS, p50/p95/p99/p999 latency, error counts split
+//! into *app* errors (typed protocol errors: `busy`, `deadline`, …)
+//! and *transport* errors (dead sockets, undecodable frames — always a
+//! bug somewhere), peak in-flight depth, and a post-run server stats
+//! snapshot whose gauges document the `O(threads) ≪ O(connections)`
+//! claim while the full connection pool is still open.
+
+use crate::cli::Cli;
+use crate::coordinator::protocol::{
+    ConfigPatch, ModelSpec, Reply, Request, RequestBody, ServeError,
+};
+use crate::coordinator::reactor::{PollEvent, Poller};
+use crate::coordinator::wire::{decode_frame, encode_request, Json};
+use crate::coordinator::{request_once, Frame};
+use crate::sim::FuseVariant;
+use crate::stats::percentile_sorted;
+use std::collections::HashMap;
+use std::io::{ErrorKind, Read, Write};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+/// How long the drain phase waits for still-in-flight replies after the
+/// measured window closes.
+const DRAIN_GRACE: Duration = Duration::from_secs(10);
+
+/// Socket-level timeout for the post-run stats snapshot.
+const SNAPSHOT_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// Floor on the instantaneous send rate during ramp (requests/second).
+const MIN_RATE: f64 = 1.0;
+
+/// The operations the generator can mix, with the request each renders.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum OpKind {
+    Simulate,
+    Infer,
+    Sweep,
+}
+
+impl OpKind {
+    fn parse(s: &str) -> Option<OpKind> {
+        match s {
+            "simulate" => Some(OpKind::Simulate),
+            "infer" => Some(OpKind::Infer),
+            "sweep" => Some(OpKind::Sweep),
+            _ => None,
+        }
+    }
+
+    fn name(self) -> &'static str {
+        match self {
+            OpKind::Simulate => "simulate",
+            OpKind::Infer => "infer",
+            OpKind::Sweep => "sweep",
+        }
+    }
+
+    /// The request this op sends. Payloads are deliberately small and
+    /// repetitive (two simulate configs, one-cell sweep grids) so the
+    /// server's layer cache converges and the benchmark measures the
+    /// serving tier, not simulator throughput.
+    fn request(self, id: u64) -> Request {
+        let body = match self {
+            OpKind::Simulate => RequestBody::Simulate {
+                model: ModelSpec::Zoo("mobilenet-v2".into()),
+                variant: FuseVariant::Half,
+                config: ConfigPatch::sized(if id % 2 == 0 { 8 } else { 16 }),
+            },
+            OpKind::Infer => RequestBody::Infer { input: vec![0.5, -0.5, 0.25, -0.25] },
+            OpKind::Sweep => RequestBody::Sweep {
+                models: vec!["mobilenet-v2".into()],
+                variants: vec![FuseVariant::Base],
+                configs: vec![ConfigPatch::sized(8)],
+            },
+        };
+        Request::new(id, body)
+    }
+}
+
+/// Smooth weighted round-robin over the op mix: deterministic (no RNG —
+/// runs are reproducible) and evenly interleaved, unlike drawing from
+/// a shuffled block.
+struct MixPicker {
+    ops: Vec<(OpKind, f64)>,
+    credit: Vec<f64>,
+    total: f64,
+}
+
+impl MixPicker {
+    /// Parse `"simulate=80,infer=10,sweep=10"`. Zero-weight entries are
+    /// dropped; at least one positive weight is required.
+    fn parse(spec: &str) -> Result<MixPicker, String> {
+        let mut ops: Vec<(OpKind, f64)> = Vec::new();
+        for part in spec.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let Some((name, weight)) = part.split_once('=') else {
+                return Err(format!("bad mix entry {part:?} (want op=weight)"));
+            };
+            let op = OpKind::parse(name.trim())
+                .ok_or_else(|| format!("unknown mix op {name:?} (want simulate|infer|sweep)"))?;
+            let w: f64 = weight
+                .trim()
+                .parse()
+                .map_err(|_| format!("bad mix weight {weight:?}"))?;
+            if w < 0.0 {
+                return Err(format!("negative mix weight {weight:?}"));
+            }
+            if ops.iter().any(|(o, _)| *o == op) {
+                return Err(format!("duplicate mix op {name:?}"));
+            }
+            if w > 0.0 {
+                ops.push((op, w));
+            }
+        }
+        if ops.is_empty() {
+            return Err("op mix needs at least one positive weight".into());
+        }
+        let total = ops.iter().map(|(_, w)| w).sum();
+        let credit = vec![0.0; ops.len()];
+        Ok(MixPicker { ops, credit, total })
+    }
+
+    fn next(&mut self) -> OpKind {
+        let mut best = 0;
+        for (i, (_, w)) in self.ops.iter().enumerate() {
+            self.credit[i] += w;
+            if self.credit[i] > self.credit[best] {
+                best = i;
+            }
+        }
+        self.credit[best] -= self.total;
+        self.ops[best].0
+    }
+}
+
+/// One persistent bench connection.
+struct BenchConn {
+    stream: TcpStream,
+    /// Bytes queued but not yet accepted by the socket.
+    out: Vec<u8>,
+    /// Raw bytes read but not yet framed into reply lines.
+    inbuf: Vec<u8>,
+    /// EPOLLOUT currently armed.
+    want_write: bool,
+    dead: bool,
+}
+
+#[cfg(unix)]
+fn raw_fd(s: &TcpStream) -> i32 {
+    use std::os::fd::AsRawFd;
+    s.as_raw_fd()
+}
+
+#[cfg(not(unix))]
+fn raw_fd(_s: &TcpStream) -> i32 {
+    -1
+}
+
+/// Everything `run_bench` needs, parsed off the CLI.
+struct BenchOpts {
+    connect: String,
+    rps: f64,
+    connections: usize,
+    duration: Duration,
+    warmup: Duration,
+    mix: MixPicker,
+    transport_label: String,
+}
+
+/// The finished report, ready to render.
+struct BenchReport {
+    json: Json,
+    achieved_rps: f64,
+    p50: f64,
+    p99: f64,
+    transport_errors: u64,
+}
+
+/// One in-flight request: send time, whether it falls in the measured
+/// window, and the owning connection (so a dying socket can fail its
+/// own requests and nothing else's).
+struct InFlight {
+    at: Instant,
+    measured: bool,
+    conn: usize,
+}
+
+pub fn cmd_bench(argv: &[String]) -> i32 {
+    let cli = Cli::new("bench", "open-loop load generator against a frame-protocol endpoint")
+        .opt("connect", "target address of a running serve/shard", Some("127.0.0.1:7878"))
+        .opt("rps", "target requests/second across all connections", Some("500"))
+        .opt("connections", "persistent connections to spread load over", Some("512"))
+        .opt("duration-secs", "measured window (after warmup)", Some("15"))
+        .opt("warmup-secs", "linear ramp to target rate, excluded from stats", Some("3"))
+        .opt("mix", "op mix weights", Some("simulate=80,infer=10,sweep=10"))
+        .opt("transport", "server transport label recorded in the report", Some("epoll"))
+        .opt("out", "write the JSON report here", Some("BENCH_6.json"));
+    let args = match cli.parse(argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}\n{}", cli.usage());
+            return 2;
+        }
+    };
+    let (rps, connections, duration_s, warmup_s) = match (
+        args.u64("rps"),
+        args.usize("connections"),
+        args.u64("duration-secs"),
+        args.u64("warmup-secs"),
+    ) {
+        (Ok(r), Ok(c), Ok(d), Ok(w)) if r > 0 && c > 0 && d > 0 => (r, c, d, w),
+        _ => {
+            eprintln!("bad or zero numeric option\n{}", cli.usage());
+            return 2;
+        }
+    };
+    let mix = match MixPicker::parse(&args.str("mix")) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("{e}\n{}", cli.usage());
+            return 2;
+        }
+    };
+    let opts = BenchOpts {
+        connect: args.str("connect"),
+        rps: rps as f64,
+        connections,
+        duration: Duration::from_secs(duration_s),
+        warmup: Duration::from_secs(warmup_s),
+        mix,
+        transport_label: args.str("transport"),
+    };
+    let out_path = args.str("out");
+    match run_bench(opts) {
+        Ok(report) => {
+            let mut text = String::new();
+            report.json.write(&mut text);
+            text.push('\n');
+            if let Err(e) = std::fs::write(&out_path, &text) {
+                eprintln!("writing {out_path}: {e}");
+                return 1;
+            }
+            eprintln!(
+                "fuseconv bench: {:.1} req/s achieved, p50 {:.2} ms, p99 {:.2} ms, \
+                 {} transport error(s) — report in {out_path}",
+                report.achieved_rps, report.p50, report.p99, report.transport_errors
+            );
+            0
+        }
+        Err(e) => {
+            eprintln!("fuseconv bench: {e}");
+            1
+        }
+    }
+}
+
+fn obj(pairs: Vec<(&str, Json)>) -> Json {
+    Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+/// Round to two decimals so the report doesn't encode float noise.
+fn ms(x: f64) -> Json {
+    Json::Num((x * 100.0).round() / 100.0)
+}
+
+fn run_bench(mut opts: BenchOpts) -> Result<BenchReport, String> {
+    // --- connect the pool (blocking connects, then nonblocking I/O) ---
+    let poller = Poller::new().map_err(|e| format!("epoll setup: {e}"))?;
+    let mut conns: Vec<BenchConn> = Vec::with_capacity(opts.connections);
+    for i in 0..opts.connections {
+        let stream = TcpStream::connect(&opts.connect)
+            .map_err(|e| format!("connect {} (conn {i}): {e}", opts.connect))?;
+        stream
+            .set_nonblocking(true)
+            .map_err(|e| format!("set_nonblocking: {e}"))?;
+        let _ = stream.set_nodelay(true);
+        poller
+            .add(raw_fd(&stream), i as u64, true, false)
+            .map_err(|e| format!("epoll register: {e}"))?;
+        conns.push(BenchConn {
+            stream,
+            out: Vec::new(),
+            inbuf: Vec::new(),
+            want_write: false,
+            dead: false,
+        });
+    }
+
+    // --- load loop state ---
+    let start = Instant::now();
+    let measure_start = start + opts.warmup;
+    let load_end = measure_start + opts.duration;
+    let mut next_send = start;
+    let mut next_id: u64 = 1;
+    let mut rr = 0usize; // connection round-robin cursor
+    let mut in_flight: HashMap<u64, InFlight> = HashMap::new();
+    let mut peak_inflight = 0usize;
+    let mut sent: u64 = 0; // measured-window sends
+    let mut completed: u64 = 0; // measured-window finals
+    let mut warmup_sent: u64 = 0;
+    let mut latencies_ms: Vec<f64> = Vec::new();
+    let mut app_errors: u64 = 0;
+    let mut errors_by_code: HashMap<&'static str, u64> = HashMap::new();
+    let mut transport_errors: u64 = 0;
+    let mut events: Vec<PollEvent> = Vec::new();
+    let mut scratch = vec![0u8; 64 * 1024];
+
+    loop {
+        let now = Instant::now();
+        if now >= load_end && (in_flight.is_empty() || now >= load_end + DRAIN_GRACE) {
+            break;
+        }
+
+        // --- open-loop send phase: emit every send that is due ---
+        if now < load_end {
+            while next_send <= now {
+                // linear ramp to the target rate across the warmup
+                let rate = if opts.warmup.is_zero() || now >= measure_start {
+                    opts.rps
+                } else {
+                    let frac = now.duration_since(start).as_secs_f64()
+                        / opts.warmup.as_secs_f64();
+                    (opts.rps * frac).max(MIN_RATE)
+                };
+                // next live connection, round-robin
+                let Some(c) = pick_conn(&conns, &mut rr) else {
+                    return Err("every connection died under load".into());
+                };
+                let id = next_id;
+                next_id += 1;
+                let op = opts.mix.next();
+                let mut line = encode_request(&op.request(id));
+                line.push('\n');
+                conns[c].out.extend_from_slice(line.as_bytes());
+                let measured = now >= measure_start;
+                if measured {
+                    sent += 1;
+                } else {
+                    warmup_sent += 1;
+                }
+                in_flight.insert(id, InFlight { at: now, measured, conn: c });
+                peak_inflight = peak_inflight.max(in_flight.len());
+                flush_conn(&poller, &mut conns[c], c);
+                next_send += Duration::from_secs_f64(1.0 / rate.max(MIN_RATE));
+            }
+        }
+
+        // --- wait for readiness (bounded by the next scheduled send) ---
+        let wait_until =
+            if now < load_end { next_send.min(load_end) } else { load_end + DRAIN_GRACE };
+        let timeout = wait_until
+            .saturating_duration_since(now)
+            .min(Duration::from_millis(100))
+            .max(Duration::from_millis(1));
+        poller.wait(&mut events, Some(timeout)).map_err(|e| format!("epoll wait: {e}"))?;
+
+        // --- service readiness ---
+        for &ev in &events {
+            let c = ev.token as usize;
+            if c >= conns.len() || conns[c].dead {
+                continue;
+            }
+            if ev.writable {
+                flush_conn(&poller, &mut conns[c], c);
+            }
+            if ev.readable {
+                read_conn(
+                    &mut conns[c],
+                    &mut scratch,
+                    &mut in_flight,
+                    &mut latencies_ms,
+                    &mut completed,
+                    &mut app_errors,
+                    &mut errors_by_code,
+                    &mut transport_errors,
+                );
+            }
+            if conns[c].dead {
+                reap_conn(&poller, &mut conns, c, &mut in_flight, &mut transport_errors);
+            }
+        }
+    }
+
+    // requests the grace period never answered
+    let unanswered = in_flight.len() as u64;
+
+    // --- stats snapshot while the pool is still connected: the gauges
+    // show open_conns ≈ the pool size against a flat thread count ---
+    let server_stats = request_once(
+        &opts.connect,
+        &Request::new(0, RequestBody::Stats),
+        SNAPSHOT_TIMEOUT,
+    )
+    .ok()
+    .and_then(|resp| match resp.result {
+        Ok(Reply::Stats(s)) => Some(s),
+        _ => None,
+    });
+
+    // --- report ---
+    if latencies_ms.is_empty() {
+        return Err("no requests completed inside the measured window".into());
+    }
+    latencies_ms.sort_by(|a, b| a.partial_cmp(b).expect("finite latencies"));
+    let measured_secs = opts.duration.as_secs_f64();
+    let achieved_rps = completed as f64 / measured_secs;
+    let mean = latencies_ms.iter().sum::<f64>() / latencies_ms.len() as f64;
+    let p50 = percentile_sorted(&latencies_ms, 50.0);
+    let p95 = percentile_sorted(&latencies_ms, 95.0);
+    let p99 = percentile_sorted(&latencies_ms, 99.0);
+    let p999 = percentile_sorted(&latencies_ms, 99.9);
+    let max = *latencies_ms.last().expect("nonempty");
+
+    let mut code_pairs: Vec<(&str, Json)> = errors_by_code
+        .iter()
+        .map(|(code, n)| (*code, Json::UInt(*n)))
+        .collect();
+    code_pairs.sort_by_key(|(code, _)| *code);
+
+    let server = match server_stats {
+        Some(s) => obj(vec![(
+            "gauges",
+            obj(vec![
+                ("open_conns", Json::UInt(s.open_conns)),
+                ("active_streams", Json::UInt(s.active_streams)),
+                ("transport_threads", Json::UInt(s.transport_threads)),
+            ]),
+        )]),
+        None => Json::Null,
+    };
+
+    let json = obj(vec![
+        ("bench", Json::UInt(6)),
+        ("transport", Json::Str(opts.transport_label.clone())),
+        ("target_rps", Json::Num(opts.rps)),
+        ("achieved_rps", ms(achieved_rps)),
+        ("duration_s", Json::Num(measured_secs)),
+        ("warmup_s", Json::Num(opts.warmup.as_secs_f64())),
+        ("connections", Json::UInt(opts.connections as u64)),
+        ("peak_inflight", Json::UInt(peak_inflight as u64)),
+        (
+            "requests",
+            obj(vec![
+                ("sent", Json::UInt(sent)),
+                ("completed", Json::UInt(completed)),
+                ("warmup_sent", Json::UInt(warmup_sent)),
+                ("unanswered", Json::UInt(unanswered)),
+                ("app_errors", Json::UInt(app_errors)),
+                ("transport_errors", Json::UInt(transport_errors)),
+            ]),
+        ),
+        (
+            "latency_ms",
+            obj(vec![
+                ("p50", ms(p50)),
+                ("p95", ms(p95)),
+                ("p99", ms(p99)),
+                ("p999", ms(p999)),
+                ("mean", ms(mean)),
+                ("max", ms(max)),
+            ]),
+        ),
+        (
+            "op_mix",
+            obj(opts.mix.ops.iter().map(|(op, w)| (op.name(), Json::Num(*w))).collect()),
+        ),
+        ("errors_by_code", obj(code_pairs)),
+        ("server", server),
+    ]);
+
+    Ok(BenchReport { json, achieved_rps, p50, p99, transport_errors })
+}
+
+/// Next live connection at or after the cursor; `None` if all are dead.
+fn pick_conn(conns: &[BenchConn], rr: &mut usize) -> Option<usize> {
+    for _ in 0..conns.len() {
+        let c = *rr % conns.len();
+        *rr = (*rr + 1) % conns.len();
+        if !conns[c].dead {
+            return Some(c);
+        }
+    }
+    None
+}
+
+/// Push pending output; arms/disarms EPOLLOUT as the socket accepts it.
+fn flush_conn(poller: &Poller, conn: &mut BenchConn, token: usize) {
+    while !conn.out.is_empty() {
+        match conn.stream.write(&conn.out) {
+            Ok(0) => {
+                conn.dead = true;
+                return;
+            }
+            Ok(n) => {
+                conn.out.drain(..n);
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(_) => {
+                conn.dead = true;
+                return;
+            }
+        }
+    }
+    let want = !conn.out.is_empty();
+    if want != conn.want_write {
+        conn.want_write = want;
+        let _ = poller.modify(raw_fd(&conn.stream), token as u64, true, want);
+    }
+}
+
+/// Drain readable bytes and account every complete reply line.
+#[allow(clippy::too_many_arguments)]
+fn read_conn(
+    conn: &mut BenchConn,
+    scratch: &mut [u8],
+    in_flight: &mut HashMap<u64, InFlight>,
+    latencies_ms: &mut Vec<f64>,
+    completed: &mut u64,
+    app_errors: &mut u64,
+    errors_by_code: &mut HashMap<&'static str, u64>,
+    transport_errors: &mut u64,
+) {
+    loop {
+        match conn.stream.read(scratch) {
+            Ok(0) => {
+                conn.dead = true;
+                break;
+            }
+            Ok(n) => conn.inbuf.extend_from_slice(&scratch[..n]),
+            Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(_) => {
+                conn.dead = true;
+                break;
+            }
+        }
+    }
+    while let Some(pos) = conn.inbuf.iter().position(|&b| b == b'\n') {
+        let line_bytes: Vec<u8> = conn.inbuf.drain(..=pos).collect();
+        let parsed = std::str::from_utf8(&line_bytes)
+            .ok()
+            .map(str::trim)
+            .filter(|l| !l.is_empty())
+            .map(decode_frame);
+        let Some(decoded) = parsed else { continue };
+        let Ok((id, frame)) = decoded else {
+            // an undecodable frame means the stream is desynchronized
+            *transport_errors += 1;
+            conn.dead = true;
+            return;
+        };
+        let Frame::Final(result) = frame else {
+            continue; // progress / row frames of in-flight sweeps
+        };
+        let Some(fl) = in_flight.remove(&id) else { continue };
+        let now = Instant::now();
+        if fl.measured {
+            *completed += 1;
+            latencies_ms.push(now.duration_since(fl.at).as_secs_f64() * 1000.0);
+            if let Err(e) = &result {
+                *app_errors += 1;
+                *errors_by_code.entry(error_code(e)).or_insert(0) += 1;
+            }
+        }
+    }
+}
+
+fn error_code(e: &ServeError) -> &'static str {
+    e.code()
+}
+
+/// Unregister a dead connection and fail everything it still owed.
+fn reap_conn(
+    poller: &Poller,
+    conns: &mut [BenchConn],
+    c: usize,
+    in_flight: &mut HashMap<u64, InFlight>,
+    transport_errors: &mut u64,
+) {
+    let _ = poller.remove(raw_fd(&conns[c].stream));
+    let before = in_flight.len();
+    in_flight.retain(|_, fl| fl.conn != c);
+    *transport_errors += (before - in_flight.len()) as u64;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mix_picker_is_deterministic_and_weighted() {
+        let mut m = MixPicker::parse("simulate=80,infer=10,sweep=10").unwrap();
+        let mut counts = HashMap::new();
+        for _ in 0..100 {
+            *counts.entry(m.next().name()).or_insert(0u32) += 1;
+        }
+        assert_eq!(counts["simulate"], 80);
+        assert_eq!(counts["infer"], 10);
+        assert_eq!(counts["sweep"], 10);
+        // weighted round-robin interleaves: the first ten draws are not
+        // all the heavy op's
+        let mut m2 = MixPicker::parse("simulate=80,infer=10,sweep=10").unwrap();
+        let first: Vec<&str> = (0..10).map(|_| m2.next().name()).collect();
+        assert!(first.iter().any(|op| *op != "simulate"));
+    }
+
+    #[test]
+    fn mix_picker_rejects_junk() {
+        assert!(MixPicker::parse("").is_err());
+        assert!(MixPicker::parse("simulate").is_err());
+        assert!(MixPicker::parse("simulate=0").is_err());
+        assert!(MixPicker::parse("teleport=5").is_err());
+        assert!(MixPicker::parse("simulate=1,simulate=2").is_err());
+        assert!(MixPicker::parse("simulate=-1").is_err());
+    }
+
+    #[test]
+    fn op_requests_use_distinct_ids_and_ops() {
+        for (op, want) in [
+            (OpKind::Simulate, "simulate"),
+            (OpKind::Infer, "infer"),
+            (OpKind::Sweep, "sweep"),
+        ] {
+            let req = op.request(7);
+            assert_eq!(req.id, 7);
+            assert_eq!(req.body.op(), want);
+        }
+    }
+}

@@ -40,11 +40,15 @@
 //! assert_eq!(status_of(&Err(ServeError::Busy)).0, 429);
 //! ```
 
-use super::net::{accept_loop, is_timeout, RequestBudget, StopLatch, MAX_TICKET_WAIT};
+use super::net::{
+    accept_loop, is_timeout, GaugeGuard, RequestBudget, StopLatch, Transport, TransportGauges,
+    MAX_TICKET_WAIT,
+};
 use super::protocol::{
     collapse_stream, Frame, RecvError, Reply, Request, RequestBody, Response, ServeError,
     Service, SweepRow, Ticket, PROTOCOL_VERSION,
 };
+use super::reactor::{self, ConnCx, Driver};
 use super::wire::{
     decode_frame, decode_request_body, encode_response, encode_sse_event, parse_json, Json,
     WireError,
@@ -103,6 +107,8 @@ pub struct HttpServer {
     /// Per-connection request budget; `None` = unlimited.
     max_requests_per_conn: Option<u64>,
     stop: StopLatch,
+    transport: Transport,
+    gauges: TransportGauges,
 }
 
 impl HttpServer {
@@ -118,6 +124,8 @@ impl HttpServer {
             service,
             max_requests_per_conn: None,
             stop: StopLatch::new(),
+            transport: Transport::default(),
+            gauges: TransportGauges::default(),
         })
     }
 
@@ -126,6 +134,19 @@ impl HttpServer {
     /// connection closes — identical accounting to the TCP frontend.
     pub fn with_request_budget(mut self, budget: Option<u64>) -> HttpServer {
         self.max_requests_per_conn = budget;
+        self
+    }
+
+    /// Select the concurrency model (`Threaded` is the default).
+    pub fn with_transport(mut self, transport: Transport) -> HttpServer {
+        self.transport = transport;
+        self
+    }
+
+    /// Share live gauges with other frontends (and the service's
+    /// `Stats` reply) instead of keeping private ones.
+    pub fn with_gauges(mut self, gauges: TransportGauges) -> HttpServer {
+        self.gauges = gauges;
         self
     }
 
@@ -141,16 +162,40 @@ impl HttpServer {
         self.addr
     }
 
-    /// Accept-and-serve until the stop latch trips; joins every
-    /// connection handler before returning.
+    /// Accept-and-serve until the stop latch trips. The threaded
+    /// transport joins every connection handler before returning; the
+    /// epoll transport returns once every connection has drained.
     pub fn run(self) -> std::io::Result<()> {
         self.stop.register(self.addr);
         let service = self.service;
-        let stop = self.stop.clone();
         let budget = self.max_requests_per_conn;
-        accept_loop(self.listener, self.stop, "fuseconv-http-conn", move |stream| {
-            handle_http_conn(stream, Arc::clone(&service), stop.clone(), budget)
-        })
+        let gauges = self.gauges;
+        match self.transport {
+            Transport::Threaded => {
+                let stop = self.stop.clone();
+                let _accept_thread = gauges.thread_started();
+                let conn_gauges = gauges.clone();
+                accept_loop(self.listener, self.stop, "fuseconv-http-conn", move |stream| {
+                    handle_http_conn(
+                        stream,
+                        Arc::clone(&service),
+                        stop.clone(),
+                        budget,
+                        conn_gauges.clone(),
+                    )
+                })
+            }
+            Transport::Epoll => {
+                let driver_gauges = gauges.clone();
+                reactor::serve_event_loop(self.listener, self.stop, gauges, move || {
+                    Box::new(HttpDriver::new(
+                        Arc::clone(&service),
+                        budget,
+                        driver_gauges.clone(),
+                    )) as Box<dyn Driver>
+                })
+            }
+        }
     }
 }
 
@@ -176,6 +221,59 @@ enum HeadRead {
     Closed,
     /// Unparsable head: answer 400 and close.
     Malformed(String),
+}
+
+/// Parse the request line into a fresh [`HttpHead`] — shared by the
+/// threaded reader and the epoll driver so both transports accept the
+/// byte-identical grammar.
+fn parse_request_line(request_line: &str) -> Result<HttpHead, String> {
+    let mut parts = request_line.split_whitespace();
+    let (Some(method), Some(target), Some(version)) = (parts.next(), parts.next(), parts.next())
+    else {
+        return Err(format!("bad request line {request_line:?}"));
+    };
+    Ok(HttpHead {
+        method: method.to_string(),
+        // the endpoint map takes no query strings; drop one if present
+        path: target.split('?').next().unwrap_or(target).to_string(),
+        body_len: 0,
+        timeout_ms: None,
+        close: version.eq_ignore_ascii_case("HTTP/1.0"),
+        has_transfer_encoding: false,
+        expect_continue: false,
+    })
+}
+
+/// Fold one (already-trimmed, non-empty) header line into `head`.
+fn apply_header(head: &mut HttpHead, line: &str) -> Result<(), String> {
+    if let Some((name, value)) = line.split_once(':') {
+        let name = name.trim().to_ascii_lowercase();
+        let value = value.trim();
+        match name.as_str() {
+            "content-length" => match value.parse::<usize>() {
+                Ok(n) => head.body_len = n,
+                Err(_) => return Err(format!("bad content-length {value:?}")),
+            },
+            "timeout-ms" => match value.parse::<u64>() {
+                Ok(ms) => head.timeout_ms = Some(ms),
+                Err(_) => return Err(format!("bad timeout-ms {value:?}")),
+            },
+            "connection" => {
+                let v = value.to_ascii_lowercase();
+                if v.contains("close") {
+                    head.close = true;
+                } else if v.contains("keep-alive") {
+                    head.close = false;
+                }
+            }
+            "transfer-encoding" => head.has_transfer_encoding = true,
+            "expect" => {
+                head.expect_continue = value.to_ascii_lowercase().contains("100-continue");
+            }
+            _ => {}
+        }
+    }
+    Ok(())
 }
 
 fn read_head(reader: &mut BufReader<TcpStream>, stop: &StopLatch) -> HeadRead {
@@ -213,20 +311,9 @@ fn read_head(reader: &mut BufReader<TcpStream>, stop: &StopLatch) -> HeadRead {
             Err(_) => return HeadRead::Closed,
         }
     };
-    let mut parts = request_line.split_whitespace();
-    let (Some(method), Some(target), Some(version)) = (parts.next(), parts.next(), parts.next())
-    else {
-        return HeadRead::Malformed(format!("bad request line {request_line:?}"));
-    };
-    let mut head = HttpHead {
-        method: method.to_string(),
-        // the endpoint map takes no query strings; drop one if present
-        path: target.split('?').next().unwrap_or(target).to_string(),
-        body_len: 0,
-        timeout_ms: None,
-        close: version.eq_ignore_ascii_case("HTTP/1.0"),
-        has_transfer_encoding: false,
-        expect_continue: false,
+    let mut head = match parse_request_line(&request_line) {
+        Ok(h) => h,
+        Err(msg) => return HeadRead::Malformed(msg),
     };
     // --- headers, until the blank line ---
     let deadline = Instant::now() + REQUEST_READ_TIMEOUT;
@@ -242,41 +329,8 @@ fn read_head(reader: &mut BufReader<TcpStream>, stop: &StopLatch) -> HeadRead {
                 if t.is_empty() {
                     return HeadRead::Head(Box::new(head));
                 }
-                if let Some((name, value)) = t.split_once(':') {
-                    let name = name.trim().to_ascii_lowercase();
-                    let value = value.trim();
-                    match name.as_str() {
-                        "content-length" => match value.parse::<usize>() {
-                            Ok(n) => head.body_len = n,
-                            Err(_) => {
-                                return HeadRead::Malformed(format!(
-                                    "bad content-length {value:?}"
-                                ))
-                            }
-                        },
-                        "timeout-ms" => match value.parse::<u64>() {
-                            Ok(ms) => head.timeout_ms = Some(ms),
-                            Err(_) => {
-                                return HeadRead::Malformed(format!(
-                                    "bad timeout-ms {value:?}"
-                                ))
-                            }
-                        },
-                        "connection" => {
-                            let v = value.to_ascii_lowercase();
-                            if v.contains("close") {
-                                head.close = true;
-                            } else if v.contains("keep-alive") {
-                                head.close = false;
-                            }
-                        }
-                        "transfer-encoding" => head.has_transfer_encoding = true,
-                        "expect" => {
-                            head.expect_continue =
-                                value.to_ascii_lowercase().contains("100-continue");
-                        }
-                        _ => {}
-                    }
+                if let Err(msg) = apply_header(&mut head, t) {
+                    return HeadRead::Malformed(msg);
                 }
                 line.clear();
             }
@@ -349,9 +403,54 @@ fn route(method: &str, path: &str) -> Route {
     }
 }
 
-/// Write one JSON response with explicit status; `close` adds
-/// `connection: close`, and `extra` is verbatim additional header
-/// lines (each `\r\n`-terminated, e.g. `allow: POST\r\n`).
+/// Render one complete JSON response (head + body) as text; `close`
+/// adds `connection: close`, and `extra` is verbatim additional header
+/// lines (each `\r\n`-terminated, e.g. `allow: POST\r\n`). Both
+/// transports emit exactly this text — the threaded writers and the
+/// epoll driver's output buffer share it byte for byte.
+fn json_response_text(
+    status: u16,
+    phrase: &str,
+    id: u64,
+    body: &str,
+    close: bool,
+    extra: &str,
+) -> String {
+    format!(
+        "HTTP/1.1 {status} {phrase}\r\ncontent-type: application/json\r\n\
+         content-length: {}\r\nx-request-id: {id}\r\n{extra}{}\r\n{body}",
+        body.len(),
+        if close { "connection: close\r\n" } else { "" },
+    )
+}
+
+/// Render a one-shot response: the mapped status plus the terminal
+/// `final` frame as the JSON body.
+fn oneshot_text(resp: &Response, close: bool) -> String {
+    let (status, phrase) = status_of(&resp.result);
+    let mut body = encode_response(resp);
+    body.push('\n');
+    json_response_text(status, phrase, resp.id, &body, close, "")
+}
+
+/// The SSE response head committing the connection to a chunked
+/// `text/event-stream` reply.
+fn sse_head_text(id: u64) -> String {
+    format!(
+        "HTTP/1.1 200 OK\r\ncontent-type: text/event-stream\r\ncache-control: no-cache\r\n\
+         transfer-encoding: chunked\r\nx-request-id: {id}\r\n\r\n"
+    )
+}
+
+/// One chunked-transfer chunk around `payload`.
+fn chunk_text(payload: &str) -> String {
+    format!("{:x}\r\n{payload}\r\n", payload.len())
+}
+
+/// The chunked-transfer terminator (no trailers).
+const CHUNKS_END: &str = "0\r\n\r\n";
+
+/// Write one JSON response with explicit status (threaded transport).
 fn write_json(
     out: &mut TcpStream,
     status: u16,
@@ -361,24 +460,14 @@ fn write_json(
     close: bool,
     extra: &str,
 ) -> std::io::Result<()> {
-    let head = format!(
-        "HTTP/1.1 {status} {phrase}\r\ncontent-type: application/json\r\n\
-         content-length: {}\r\nx-request-id: {id}\r\n{extra}{}\r\n",
-        body.len(),
-        if close { "connection: close\r\n" } else { "" },
-    );
-    out.write_all(head.as_bytes())?;
-    out.write_all(body.as_bytes())?;
+    out.write_all(json_response_text(status, phrase, id, body, close, extra).as_bytes())?;
     out.flush()
 }
 
-/// Write a one-shot response: the mapped status plus the terminal
-/// `final` frame as the JSON body.
+/// Write a one-shot response (threaded transport).
 fn write_oneshot(out: &mut TcpStream, resp: &Response, close: bool) -> std::io::Result<()> {
-    let (status, phrase) = status_of(&resp.result);
-    let mut body = encode_response(resp);
-    body.push('\n');
-    write_json(out, status, phrase, resp.id, &body, close, "")
+    out.write_all(oneshot_text(resp, close).as_bytes())?;
+    out.flush()
 }
 
 /// An error frame body for the plain-HTTP failure statuses (404/405).
@@ -389,24 +478,18 @@ fn error_body(detail: String) -> String {
 }
 
 fn write_chunk(out: &mut TcpStream, payload: &str) -> std::io::Result<()> {
-    out.write_all(format!("{:x}\r\n", payload.len()).as_bytes())?;
-    out.write_all(payload.as_bytes())?;
-    out.write_all(b"\r\n")?;
+    out.write_all(chunk_text(payload).as_bytes())?;
     out.flush()
 }
 
 fn finish_chunks(out: &mut TcpStream) -> bool {
-    out.write_all(b"0\r\n\r\n").and_then(|_| out.flush()).is_ok()
+    out.write_all(CHUNKS_END.as_bytes()).and_then(|_| out.flush()).is_ok()
 }
 
 /// Stream a ticket as chunked SSE. Returns `false` once the connection
 /// is unusable.
 fn stream_sse(out: &mut TcpStream, mut ticket: Ticket, id: u64, first: Option<Frame>) -> bool {
-    let head = format!(
-        "HTTP/1.1 200 OK\r\ncontent-type: text/event-stream\r\ncache-control: no-cache\r\n\
-         transfer-encoding: chunked\r\nx-request-id: {id}\r\n\r\n"
-    );
-    if out.write_all(head.as_bytes()).is_err() {
+    if out.write_all(sse_head_text(id).as_bytes()).is_err() {
         return false;
     }
     if let Some(frame) = first {
@@ -451,13 +534,17 @@ fn serve_sse(out: &mut TcpStream, mut ticket: Ticket, id: u64, close: bool) -> b
     }
 }
 
+/// The `GET /healthz` success body.
+fn health_ok_body() -> String {
+    format!("{{\"status\":\"ok\",\"protocol_version\":{PROTOCOL_VERSION}}}\n")
+}
+
 /// `GET /healthz`: probe the service with a `Stats` call so the status
 /// reflects its real state (`503` once the shutdown latch has tripped).
 fn serve_health(out: &mut TcpStream, service: &Arc<dyn Service>, close: bool) -> bool {
     let resp = service.call(Request::new(0, RequestBody::Stats)).wait_deadline(HEALTH_WAIT);
     if resp.is_ok() {
-        let body = format!("{{\"status\":\"ok\",\"protocol_version\":{PROTOCOL_VERSION}}}\n");
-        write_json(out, 200, "OK", 0, &body, close, "").is_ok()
+        write_json(out, 200, "OK", 0, &health_ok_body(), close, "").is_ok()
     } else {
         write_oneshot(out, &resp, close).is_ok()
     }
@@ -468,7 +555,10 @@ fn handle_http_conn(
     service: Arc<dyn Service>,
     stop: StopLatch,
     cap: Option<u64>,
+    gauges: TransportGauges,
 ) {
+    let _conn_gauge = gauges.conn_opened();
+    let _thread_gauge = gauges.thread_started();
     let _ = stream.set_read_timeout(Some(READ_POLL));
     let _ = stream.set_write_timeout(Some(WRITE_STALL_TIMEOUT));
     let Ok(read_half) = stream.try_clone() else { return };
@@ -596,12 +686,17 @@ fn handle_http_conn(
         if let Some(ms) = deadline_ms {
             req = req.with_deadline_ms(ms);
         }
-        let ok = if sse {
-            serve_sse(&mut out, service.call(req), id, head.close)
-        } else {
-            let wait = deadline_ms.map(Duration::from_millis).unwrap_or(MAX_TICKET_WAIT);
-            let resp = service.call(req).wait_deadline(wait);
-            write_oneshot(&mut out, &resp, head.close || saw_shutdown).is_ok()
+        let ok = {
+            // forwarding a reply stream — one-shot waits included —
+            // shows up on the `active_streams` gauge on both transports
+            let _stream_gauge = gauges.stream_started();
+            if sse {
+                serve_sse(&mut out, service.call(req), id, head.close)
+            } else {
+                let wait = deadline_ms.map(Duration::from_millis).unwrap_or(MAX_TICKET_WAIT);
+                let resp = service.call(req).wait_deadline(wait);
+                write_oneshot(&mut out, &resp, head.close || saw_shutdown).is_ok()
+            }
         };
         if !ok || saw_shutdown || head.close {
             break;
@@ -610,6 +705,510 @@ fn handle_http_conn(
     let _ = out.shutdown(std::net::Shutdown::Both);
     if saw_shutdown {
         stop.trip();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Epoll transport: HTTP/1.1 + SSE driver
+// ---------------------------------------------------------------------------
+
+/// Index just past the head terminator — `\r\n\r\n`, or the lenient
+/// `\n\n` / `\n\r\n` forms the line-based threaded reader also accepts.
+fn find_head_end(buf: &[u8]) -> Option<usize> {
+    let mut i = 0;
+    while i < buf.len() {
+        if buf[i] == b'\n' {
+            let mut j = i + 1;
+            if j < buf.len() && buf[j] == b'\r' {
+                j += 1;
+            }
+            if j < buf.len() && buf[j] == b'\n' {
+                return Some(j + 1);
+            }
+        }
+        i += 1;
+    }
+    None
+}
+
+/// Parse a complete request head (request line + header lines) with the
+/// same grammar as the threaded [`read_head`].
+fn parse_head_text(bytes: &[u8]) -> Result<HttpHead, String> {
+    let text =
+        std::str::from_utf8(bytes).map_err(|_| "request head is not utf-8".to_string())?;
+    let mut lines = text.lines().map(str::trim).filter(|l| !l.is_empty());
+    let request_line = lines.next().ok_or_else(|| "empty request head".to_string())?;
+    let mut head = parse_request_line(request_line)?;
+    for line in lines {
+        apply_header(&mut head, line)?;
+    }
+    Ok(head)
+}
+
+/// Merge a wanted wake-up into the connection's timer request.
+fn wake_min(cx: &mut ConnCx<'_>, at: Instant) {
+    if cx.wake_at.is_none_or(|w| at < w) {
+        *cx.wake_at = Some(at);
+    }
+}
+
+/// A one-shot endpoint's in-flight ticket on an epoll connection.
+struct OneShotWait {
+    ticket: Ticket,
+    id: u64,
+    /// Absolute reply deadline: `deadline_ms`/`timeout-ms`, else
+    /// [`MAX_TICKET_WAIT`] ([`HEALTH_WAIT`] for `/healthz`).
+    deadline: Instant,
+    close: bool,
+    /// `/healthz` probe: an `Ok` reply renders the health body instead
+    /// of the terminal frame.
+    health: bool,
+    /// A decoded `Shutdown`: trip the latch once the ack flushes.
+    shutdown: bool,
+    /// Rows streamed before the final frame, collapsed into the
+    /// one-shot reply exactly like [`Ticket::wait_deadline`].
+    rows: Vec<SweepRow>,
+    _gauge: GaugeGuard,
+}
+
+/// The sweep endpoint inside its [`SSE_FIRST_FRAME_WAIT`] window: an
+/// admission-time terminal error still becomes a plain JSON reply with
+/// its mapped status instead of a one-event stream.
+struct SseWait {
+    ticket: Ticket,
+    id: u64,
+    until: Instant,
+    close: bool,
+    _gauge: GaugeGuard,
+}
+
+/// A committed (head already written) chunked SSE stream.
+struct SseStream {
+    ticket: Ticket,
+    id: u64,
+    /// Last frame arrival — the [`MAX_TICKET_WAIT`] clock.
+    last_frame: Instant,
+    close: bool,
+    _gauge: GaugeGuard,
+}
+
+enum HttpState {
+    /// Between requests / accumulating a request head.
+    Head,
+    /// Head parsed; waiting for the `content-length` body bytes.
+    Body(Box<HttpHead>),
+    OneShot(Box<OneShotWait>),
+    SsePending(Box<SseWait>),
+    Sse(Box<SseStream>),
+    /// No further requests will be read; pending output flushes, then
+    /// the event loop closes the connection.
+    Closed,
+}
+
+/// The HTTP/1.1 + SSE frontend as a nonblocking [`Driver`]: the same
+/// endpoint map, status mapping, budget accounting, and byte-identical
+/// response text as [`handle_http_conn`], with the blocking waits
+/// replaced by a per-connection state machine the event loop pumps.
+struct HttpDriver {
+    service: Arc<dyn Service>,
+    budget: RequestBudget,
+    gauges: TransportGauges,
+    /// Requests whose body carries no `id` get a per-connection counter.
+    next_auto_id: u64,
+    state: HttpState,
+    /// First byte of the current request arrived here — the
+    /// [`REQUEST_READ_TIMEOUT`] clock; `None` while idle between
+    /// requests (idle kept-alive connections are exempt).
+    request_started: Option<Instant>,
+    /// Peer half-closed: an incomplete request can never finish.
+    eof: bool,
+}
+
+impl HttpDriver {
+    fn new(service: Arc<dyn Service>, budget: Option<u64>, gauges: TransportGauges) -> HttpDriver {
+        HttpDriver {
+            service,
+            budget: RequestBudget::new(budget),
+            gauges,
+            next_auto_id: 1,
+            state: HttpState::Head,
+            request_started: None,
+            eof: false,
+        }
+    }
+
+    /// Queue a rendered response and either return to reading the next
+    /// request or stop reading for good — the driver's analogue of the
+    /// threaded loop's `continue`-vs-`break` after every answer.
+    fn answer(&mut self, cx: &mut ConnCx<'_>, text: String, close: bool) {
+        cx.out.extend_from_slice(text.as_bytes());
+        if close {
+            self.state = HttpState::Closed;
+            *cx.close_after_flush = true;
+        } else {
+            self.state = HttpState::Head;
+        }
+    }
+
+    /// Route one complete request — the nonblocking mirror of the
+    /// threaded per-request block in [`handle_http_conn`].
+    fn dispatch(&mut self, head: HttpHead, body_bytes: Vec<u8>, cx: &mut ConnCx<'_>, now: Instant) {
+        let (op, sse) = match route(&head.method, &head.path) {
+            Route::Op { op, sse } => (op, sse),
+            Route::Health => {
+                self.state = HttpState::OneShot(Box::new(OneShotWait {
+                    ticket: self.service.call(Request::new(0, RequestBody::Stats)),
+                    id: 0,
+                    deadline: now + HEALTH_WAIT,
+                    close: head.close,
+                    health: true,
+                    shutdown: false,
+                    rows: Vec::new(),
+                    _gauge: self.gauges.stream_started(),
+                }));
+                return;
+            }
+            Route::NotFound => {
+                let msg = format!("no such endpoint: {} {}", head.method, head.path);
+                let text =
+                    json_response_text(404, "Not Found", 0, &error_body(msg), head.close, "");
+                self.answer(cx, text, head.close);
+                return;
+            }
+            Route::MethodNotAllowed { allow } => {
+                let msg = format!("{} only accepts {allow}", head.path);
+                let text = json_response_text(
+                    405,
+                    "Method Not Allowed",
+                    0,
+                    &error_body(msg),
+                    head.close,
+                    &format!("allow: {allow}\r\n"),
+                );
+                self.answer(cx, text, head.close);
+                return;
+            }
+        };
+        // --- body decode (shared with the TCP framing via wire.rs) ---
+        let parsed = String::from_utf8(body_bytes)
+            .map_err(|_| WireError("body is not utf-8".into()))
+            .and_then(|text| {
+                if text.trim().is_empty() {
+                    Ok(Json::Obj(Vec::new()))
+                } else {
+                    parse_json(text.trim())
+                }
+            });
+        let json = match parsed {
+            Ok(j) => j,
+            Err(e) => {
+                let resp = Response::err(0, ServeError::BadRequest(e.to_string()));
+                self.answer(cx, oneshot_text(&resp, head.close), head.close);
+                return;
+            }
+        };
+        let id = match json.get("id").and_then(Json::as_u64) {
+            Some(i) => i,
+            None => {
+                let i = self.next_auto_id;
+                self.next_auto_id += 1;
+                i
+            }
+        };
+        let deadline_ms = json.get("deadline_ms").and_then(Json::as_u64).or(head.timeout_ms);
+        let body = match decode_request_body(op, &json) {
+            Ok(b) => b,
+            Err(e) => {
+                let resp = Response::err(id, ServeError::BadRequest(e.to_string()));
+                self.answer(cx, oneshot_text(&resp, head.close), head.close);
+                return;
+            }
+        };
+        // Only decoded requests count against the budget; the
+        // over-budget request is answered 429 and the connection closes.
+        if !self.budget.admit() {
+            self.answer(cx, oneshot_text(&Response::err(id, ServeError::Busy), true), true);
+            return;
+        }
+        let shutdown = matches!(body, RequestBody::Shutdown);
+        let mut req = Request::new(id, body);
+        if let Some(ms) = deadline_ms {
+            req = req.with_deadline_ms(ms);
+        }
+        let ticket = self.service.call(req);
+        if sse {
+            self.state = HttpState::SsePending(Box::new(SseWait {
+                ticket,
+                id,
+                until: now + SSE_FIRST_FRAME_WAIT,
+                close: head.close,
+                _gauge: self.gauges.stream_started(),
+            }));
+        } else {
+            let wait = deadline_ms.map(Duration::from_millis).unwrap_or(MAX_TICKET_WAIT);
+            self.state = HttpState::OneShot(Box::new(OneShotWait {
+                ticket,
+                id,
+                deadline: now + wait,
+                close: head.close || shutdown,
+                health: false,
+                shutdown,
+                rows: Vec::new(),
+                _gauge: self.gauges.stream_started(),
+            }));
+        }
+    }
+
+    /// Make all possible progress: consume buffered input, poll any
+    /// in-flight ticket, and queue output. Idempotent; every blocking
+    /// point either waits for more bytes (reactor read readiness) or
+    /// registers a wake-up through `cx.wake_at`.
+    fn advance(&mut self, cx: &mut ConnCx<'_>, now: Instant) {
+        loop {
+            match std::mem::replace(&mut self.state, HttpState::Closed) {
+                HttpState::Head => {
+                    // tolerate blank lines between requests
+                    let skip =
+                        cx.inbuf.iter().take_while(|&&b| b == b'\r' || b == b'\n').count();
+                    if skip > 0 {
+                        cx.inbuf.drain(..skip);
+                    }
+                    if cx.inbuf.is_empty() {
+                        // idle between requests: only EOF/latch closes us
+                        self.request_started = None;
+                        self.state = HttpState::Head;
+                        return;
+                    }
+                    let Some(end) = find_head_end(cx.inbuf) else {
+                        if self.eof {
+                            // EOF mid-head: close silently (threaded parity)
+                            cx.inbuf.clear();
+                            *cx.close_after_flush = true;
+                            return;
+                        }
+                        // mid-request dribble: bounded patience
+                        let t0 = *self.request_started.get_or_insert(now);
+                        if now.duration_since(t0) > REQUEST_READ_TIMEOUT {
+                            let body = error_body("request head timed out".into());
+                            let text = json_response_text(400, "Bad Request", 0, &body, true, "");
+                            self.answer(cx, text, true);
+                            continue;
+                        }
+                        wake_min(cx, t0 + REQUEST_READ_TIMEOUT);
+                        self.state = HttpState::Head;
+                        return;
+                    };
+                    let head_bytes: Vec<u8> = cx.inbuf.drain(..end).collect();
+                    let head = match parse_head_text(&head_bytes) {
+                        Ok(h) => h,
+                        Err(msg) => {
+                            let text = json_response_text(
+                                400,
+                                "Bad Request",
+                                0,
+                                &error_body(msg),
+                                true,
+                                "",
+                            );
+                            self.answer(cx, text, true);
+                            continue;
+                        }
+                    };
+                    if head.has_transfer_encoding {
+                        let msg =
+                            "chunked request bodies are unsupported; send content-length"
+                                .to_string();
+                        let text =
+                            json_response_text(400, "Bad Request", 0, &error_body(msg), true, "");
+                        self.answer(cx, text, true);
+                        continue;
+                    }
+                    if head.body_len > MAX_BODY_BYTES {
+                        let msg = format!(
+                            "body of {} bytes exceeds the {MAX_BODY_BYTES} limit",
+                            head.body_len
+                        );
+                        let text =
+                            json_response_text(400, "Bad Request", 0, &error_body(msg), true, "");
+                        self.answer(cx, text, true);
+                        continue;
+                    }
+                    // ack `Expect: 100-continue` so large POSTs don't
+                    // stall on curl's interim-response wait
+                    if head.expect_continue && head.body_len > 0 {
+                        cx.out.extend_from_slice(b"HTTP/1.1 100 Continue\r\n\r\n");
+                    }
+                    self.state = HttpState::Body(Box::new(head));
+                }
+                HttpState::Body(head) => {
+                    if cx.inbuf.len() < head.body_len {
+                        if self.eof {
+                            // truncated body: close silently
+                            cx.inbuf.clear();
+                            *cx.close_after_flush = true;
+                            return;
+                        }
+                        let t0 = *self.request_started.get_or_insert(now);
+                        if now.duration_since(t0) > REQUEST_READ_TIMEOUT {
+                            // dribbling body: close silently (threaded parity)
+                            cx.inbuf.clear();
+                            *cx.close_after_flush = true;
+                            return;
+                        }
+                        wake_min(cx, t0 + REQUEST_READ_TIMEOUT);
+                        self.state = HttpState::Body(head);
+                        return;
+                    }
+                    let body_bytes: Vec<u8> = cx.inbuf.drain(..head.body_len).collect();
+                    self.request_started = None;
+                    self.dispatch(*head, body_bytes, cx, now);
+                }
+                HttpState::OneShot(mut w) => {
+                    let done = loop {
+                        match w.ticket.try_recv() {
+                            Ok(Some(Frame::Final(result))) => break Some(result),
+                            Ok(Some(Frame::Row(row))) => w.rows.push(row),
+                            Ok(Some(Frame::Progress { .. })) => {}
+                            Ok(None) => {
+                                if now >= w.deadline {
+                                    break Some(Err(ServeError::Deadline));
+                                }
+                                break None;
+                            }
+                            Err(_) => break Some(Err(ServeError::Shutdown)),
+                        }
+                    };
+                    let Some(result) = done else {
+                        wake_min(cx, w.deadline);
+                        self.state = HttpState::OneShot(w);
+                        return;
+                    };
+                    let result = collapse_stream(result, std::mem::take(&mut w.rows));
+                    let text = if w.health && result.is_ok() {
+                        json_response_text(200, "OK", 0, &health_ok_body(), w.close, "")
+                    } else {
+                        oneshot_text(&Response { id: w.id, result }, w.close)
+                    };
+                    if w.shutdown {
+                        *cx.trip_after_flush = true;
+                        self.answer(cx, text, true);
+                    } else {
+                        self.answer(cx, text, w.close);
+                    }
+                }
+                HttpState::SsePending(mut w) => match w.ticket.try_recv() {
+                    Ok(Some(Frame::Final(result))) => {
+                        let close = w.close;
+                        let text = oneshot_text(&Response { id: w.id, result }, close);
+                        self.answer(cx, text, close);
+                    }
+                    Ok(Some(first)) => {
+                        let SseWait { ticket, id, close, _gauge, .. } = *w;
+                        cx.out.extend_from_slice(sse_head_text(id).as_bytes());
+                        cx.out.extend_from_slice(
+                            chunk_text(&encode_sse_event(id, &first)).as_bytes(),
+                        );
+                        self.state = HttpState::Sse(Box::new(SseStream {
+                            ticket,
+                            id,
+                            last_frame: now,
+                            close,
+                            _gauge,
+                        }));
+                    }
+                    Ok(None) => {
+                        if now >= w.until {
+                            // commit to the SSE response; frames follow
+                            let SseWait { ticket, id, close, _gauge, .. } = *w;
+                            cx.out.extend_from_slice(sse_head_text(id).as_bytes());
+                            self.state = HttpState::Sse(Box::new(SseStream {
+                                ticket,
+                                id,
+                                last_frame: now,
+                                close,
+                                _gauge,
+                            }));
+                        } else {
+                            wake_min(cx, w.until);
+                            self.state = HttpState::SsePending(w);
+                            return;
+                        }
+                    }
+                    Err(_) => {
+                        let close = w.close;
+                        let text =
+                            oneshot_text(&Response::err(w.id, ServeError::Shutdown), close);
+                        self.answer(cx, text, close);
+                    }
+                },
+                HttpState::Sse(mut s) => loop {
+                    if cx.out.len() >= reactor::OUT_BOUND {
+                        // Backpressure maps onto write readiness: park
+                        // the stream (its producer parks on the bounded
+                        // ticket buffer) until the socket drains.
+                        self.state = HttpState::Sse(s);
+                        return;
+                    }
+                    let frame = match s.ticket.try_recv() {
+                        Ok(Some(f)) => f,
+                        Ok(None) => {
+                            if now.duration_since(s.last_frame) > MAX_TICKET_WAIT {
+                                Frame::Final(Err(ServeError::Deadline))
+                            } else {
+                                wake_min(cx, s.last_frame + MAX_TICKET_WAIT);
+                                self.state = HttpState::Sse(s);
+                                return;
+                            }
+                        }
+                        Err(_) => Frame::Final(Err(ServeError::Shutdown)),
+                    };
+                    s.last_frame = now;
+                    let last = frame.is_final();
+                    cx.out
+                        .extend_from_slice(chunk_text(&encode_sse_event(s.id, &frame)).as_bytes());
+                    if last {
+                        cx.out.extend_from_slice(CHUNKS_END.as_bytes());
+                        if s.close {
+                            self.state = HttpState::Closed;
+                            *cx.close_after_flush = true;
+                        } else {
+                            self.state = HttpState::Head;
+                        }
+                        break;
+                    }
+                },
+                HttpState::Closed => {
+                    // no further requests; discard pipelined input so the
+                    // event loop's EOF close condition can fire
+                    cx.inbuf.clear();
+                    *cx.close_after_flush = true;
+                    return;
+                }
+            }
+        }
+    }
+}
+
+impl Driver for HttpDriver {
+    fn on_data(&mut self, cx: &mut ConnCx<'_>, now: Instant) {
+        self.advance(cx, now);
+    }
+
+    fn on_eof(&mut self, _cx: &mut ConnCx<'_>) {
+        // In-flight replies still flush to a half-closed peer; advance
+        // observes the flag at its next blocking point.
+        self.eof = true;
+    }
+
+    fn pump(&mut self, cx: &mut ConnCx<'_>, now: Instant) {
+        self.advance(cx, now);
+    }
+
+    fn is_streaming(&self) -> bool {
+        matches!(
+            self.state,
+            HttpState::OneShot(_) | HttpState::SsePending(_) | HttpState::Sse(_)
+        )
     }
 }
 

@@ -3,7 +3,11 @@
 //! protocol ([`protocol`]), batched inference + simulation services
 //! behind one [`Service`] trait ([`server`]), the JSON wire codec
 //! ([`wire`]), and two transports over the same service: the TCP frame
-//! frontend ([`net`]) and the HTTP/SSE frontend ([`http`]). Deployments
+//! frontend ([`net`]) and the HTTP/SSE frontend ([`http`]). Each
+//! transport runs on either of two concurrency models selected at bind
+//! time ([`Transport`]): classic thread-per-connection, or a
+//! single-threaded epoll event loop (the `reactor` module) that holds
+//! thread count flat while connections scale. Deployments
 //! scale out horizontally through the shard-router front tier
 //! ([`shard`]), which implements the same [`Service`] trait over many
 //! `fuseconv serve` backends, so both transports mount it unchanged.
@@ -16,6 +20,7 @@ pub mod http;
 pub mod mapping;
 pub mod net;
 pub mod protocol;
+pub(crate) mod reactor;
 pub mod search;
 pub mod server;
 pub mod shard;
@@ -23,7 +28,9 @@ pub mod wire;
 
 pub use evaluator::{Evaluator, HybridSpace, NetEval};
 pub use http::{http_call, http_sse, HttpReply, HttpServer};
-pub use net::{request_once, StopLatch, WireClient, WireServer};
+pub use net::{
+    request_once, GaugeGuard, StopLatch, Transport, TransportGauges, WireClient, WireServer,
+};
 pub use protocol::{
     ConfigPatch, Frame, FrameSink, ModelSpec, Priority, RecvError, Reply, Request,
     RequestBody, Response, ServeError, Service, SweepRow, Ticket, PROTOCOL_VERSION,

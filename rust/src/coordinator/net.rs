@@ -49,18 +49,19 @@
 
 use super::protocol::{
     collapse_stream, Frame, RecvError, Request, RequestBody, Response, ServeError, Service,
-    SweepRow, Ticket,
+    StatsReply, SweepRow, Ticket,
 };
+use super::reactor::{self, ConnCx, Driver};
 use super::wire::{
     decode_frame, encode_frame, encode_request, parse_json, Json, WireError,
 };
 use std::collections::{HashMap, VecDeque};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Upper bound a stream forwarder waits between any two frames of one
 /// ticket; a service that never answers turns into a typed `deadline`
@@ -150,6 +151,108 @@ impl Default for StopLatch {
     }
 }
 
+/// Transport concurrency model both frontends can run on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Transport {
+    /// Thread-per-connection: one reader + one writer thread per
+    /// connection, plus one forwarder thread per in-flight stream.
+    #[default]
+    Threaded,
+    /// Single-threaded epoll readiness loop
+    /// ([`reactor`](super::reactor)); Linux only — `run` reports
+    /// `Unsupported` elsewhere.
+    Epoll,
+}
+
+impl Transport {
+    /// Parse a `--transport` flag value.
+    pub fn parse(s: &str) -> Option<Transport> {
+        match s {
+            "threaded" => Some(Transport::Threaded),
+            "epoll" => Some(Transport::Epoll),
+            _ => None,
+        }
+    }
+}
+
+#[derive(Debug, Default)]
+struct GaugeCells {
+    open_conns: AtomicU64,
+    active_streams: AtomicU64,
+    transport_threads: AtomicU64,
+}
+
+/// Live transport gauges (`open_conns` / `active_streams` /
+/// `transport_threads`), shared by every frontend of one deployment
+/// and overlaid onto `Stats` replies (see `Router::with_gauges`).
+/// Cloning shares the cells; increments are RAII [`GaugeGuard`]s, so a
+/// leaked forwarder is visible as a gauge that never returns to
+/// baseline.
+#[derive(Debug, Clone, Default)]
+pub struct TransportGauges {
+    cells: Arc<GaugeCells>,
+}
+
+impl TransportGauges {
+    pub fn new() -> TransportGauges {
+        TransportGauges::default()
+    }
+
+    fn guard(&self, cell: fn(&GaugeCells) -> &AtomicU64) -> GaugeGuard {
+        cell(&self.cells).fetch_add(1, Ordering::AcqRel);
+        GaugeGuard { cells: Arc::clone(&self.cells), cell }
+    }
+
+    /// Count one open connection until the guard drops.
+    pub fn conn_opened(&self) -> GaugeGuard {
+        self.guard(|c| &c.open_conns)
+    }
+
+    /// Count one in-flight reply stream until the guard drops.
+    pub fn stream_started(&self) -> GaugeGuard {
+        self.guard(|c| &c.active_streams)
+    }
+
+    /// Count one transport-owned OS thread until the guard drops.
+    pub fn thread_started(&self) -> GaugeGuard {
+        self.guard(|c| &c.transport_threads)
+    }
+
+    /// Connections currently open.
+    pub fn open_conns(&self) -> u64 {
+        self.cells.open_conns.load(Ordering::Acquire)
+    }
+
+    /// Reply streams currently being forwarded.
+    pub fn active_streams(&self) -> u64 {
+        self.cells.active_streams.load(Ordering::Acquire)
+    }
+
+    /// OS threads the transports currently own.
+    pub fn transport_threads(&self) -> u64 {
+        self.cells.transport_threads.load(Ordering::Acquire)
+    }
+
+    /// Stamp the live gauge values into a stats reply.
+    pub fn overlay(&self, s: &mut StatsReply) {
+        s.open_conns = self.open_conns();
+        s.active_streams = self.active_streams();
+        s.transport_threads = self.transport_threads();
+    }
+}
+
+/// RAII increment of one [`TransportGauges`] cell; decrements on drop.
+pub struct GaugeGuard {
+    cells: Arc<GaugeCells>,
+    cell: fn(&GaugeCells) -> &AtomicU64,
+}
+
+impl Drop for GaugeGuard {
+    fn drop(&mut self) {
+        (self.cell)(&self.cells).fetch_sub(1, Ordering::AcqRel);
+    }
+}
+
 /// Per-connection request budget, counted identically by the TCP and
 /// HTTP frontends: only *decoded* requests consume a slot (malformed
 /// input answers `bad_request` for free), and the first request past
@@ -232,6 +335,8 @@ pub struct WireServer {
     /// Per-connection request budget; `None` = unlimited.
     max_requests_per_conn: Option<u64>,
     stop: StopLatch,
+    transport: Transport,
+    gauges: TransportGauges,
 }
 
 impl WireServer {
@@ -247,7 +352,22 @@ impl WireServer {
             service,
             max_requests_per_conn: None,
             stop: StopLatch::new(),
+            transport: Transport::default(),
+            gauges: TransportGauges::default(),
         })
+    }
+
+    /// Select the concurrency model (`Threaded` is the default).
+    pub fn with_transport(mut self, transport: Transport) -> WireServer {
+        self.transport = transport;
+        self
+    }
+
+    /// Share live gauges with other frontends (and the service's
+    /// `Stats` reply) instead of keeping private ones.
+    pub fn with_gauges(mut self, gauges: TransportGauges) -> WireServer {
+        self.gauges = gauges;
+        self
     }
 
     /// Cap how many requests one connection may submit. The request that
@@ -269,16 +389,40 @@ impl WireServer {
         self.addr
     }
 
-    /// Accept-and-serve until a `Shutdown` frame arrives; joins every
-    /// connection handler before returning.
+    /// Accept-and-serve until a `Shutdown` frame arrives. The threaded
+    /// transport joins every connection handler before returning; the
+    /// epoll transport returns once every connection has drained.
     pub fn run(self) -> std::io::Result<()> {
         self.stop.register(self.addr);
         let service = self.service;
-        let stop = self.stop.clone();
         let budget = self.max_requests_per_conn;
-        accept_loop(self.listener, self.stop, "fuseconv-conn", move |stream| {
-            handle_conn(stream, Arc::clone(&service), stop.clone(), budget)
-        })
+        let gauges = self.gauges;
+        match self.transport {
+            Transport::Threaded => {
+                let stop = self.stop.clone();
+                let _accept_thread = gauges.thread_started();
+                let conn_gauges = gauges.clone();
+                accept_loop(self.listener, self.stop, "fuseconv-conn", move |stream| {
+                    handle_conn(
+                        stream,
+                        Arc::clone(&service),
+                        stop.clone(),
+                        budget,
+                        conn_gauges.clone(),
+                    )
+                })
+            }
+            Transport::Epoll => {
+                let driver_gauges = gauges.clone();
+                reactor::serve_event_loop(self.listener, self.stop, gauges, move || {
+                    Box::new(FrameDriver::new(
+                        Arc::clone(&service),
+                        budget,
+                        driver_gauges.clone(),
+                    )) as Box<dyn Driver>
+                })
+            }
+        }
     }
 }
 
@@ -350,7 +494,10 @@ fn handle_conn(
     service: Arc<dyn Service>,
     stop: StopLatch,
     budget: Option<u64>,
+    gauges: TransportGauges,
 ) {
+    let _conn_gauge = gauges.conn_opened();
+    let _reader_gauge = gauges.thread_started();
     // Reads poll: an idle connection must notice the shutdown latch and
     // close instead of parking `run`'s join forever. Writes time out so
     // a socket that accepts zero bytes eventually counts as dead.
@@ -364,9 +511,11 @@ fn handle_conn(
     // backs it up and pauses the senders (see WRITER_BOUND).
     let (wtx, wrx) = mpsc::sync_channel::<(u64, Frame)>(WRITER_BOUND);
     let mut write_half = stream;
+    let writer_gauges = gauges.clone();
     let writer = thread::Builder::new()
         .name("fuseconv-conn-write".into())
         .spawn(move || {
+            let _writer_gauge = writer_gauges.thread_started();
             for (id, frame) in wrx {
                 let mut line = encode_frame(id, &frame);
                 line.push('\n');
@@ -443,6 +592,7 @@ fn handle_conn(
                             if still_streaming {
                                 let out = wtx.clone();
                                 let stop2 = stop.clone();
+                                let stream_gauges = gauges.clone();
                                 // The ticket rides in a take-slot so it
                                 // survives a failed spawn (the closure —
                                 // and anything moved into it — is
@@ -452,6 +602,8 @@ fn handle_conn(
                                 match thread::Builder::new()
                                     .name("fuseconv-conn-stream".into())
                                     .spawn(move || {
+                                        let _thread_gauge = stream_gauges.thread_started();
+                                        let _stream_gauge = stream_gauges.stream_started();
                                         if let Some(t) = slot2.lock().unwrap().take() {
                                             forward_stream(t, out, stop2);
                                         }
@@ -534,6 +686,189 @@ fn dial_addr(mut addr: SocketAddr) -> SocketAddr {
         }
     }
     addr
+}
+
+// ---------------------------------------------------------------------------
+// Epoll transport: frame-protocol driver
+// ---------------------------------------------------------------------------
+
+/// Append one encoded frame line to a connection's pending output.
+fn push_wire_frame(out: &mut Vec<u8>, id: u64, frame: &Frame) {
+    let mut line = encode_frame(id, frame);
+    line.push('\n');
+    out.extend_from_slice(line.as_bytes());
+}
+
+/// One in-flight stream on an epoll connection: the ticket the event
+/// loop polls in place of a forwarder thread.
+struct EpollStream {
+    ticket: Ticket,
+    /// Last frame arrival — the [`MAX_TICKET_WAIT`] clock.
+    last_frame: Instant,
+    _gauge: GaugeGuard,
+}
+
+/// The newline-framed TCP protocol as a nonblocking [`Driver`]: wire
+/// semantics identical to [`handle_conn`] (same admission, budget,
+/// fast path, and error taxonomy), with per-ticket forwarder threads
+/// collapsed into [`Driver::pump`] polls.
+struct FrameDriver {
+    service: Arc<dyn Service>,
+    budget: RequestBudget,
+    gauges: TransportGauges,
+    streams: Vec<EpollStream>,
+    /// Stop consuming input: shutdown seen, budget bounced, or EOF.
+    draining: bool,
+}
+
+impl FrameDriver {
+    fn new(service: Arc<dyn Service>, budget: Option<u64>, gauges: TransportGauges) -> FrameDriver {
+        FrameDriver {
+            service,
+            budget: RequestBudget::new(budget),
+            gauges,
+            streams: Vec::new(),
+            draining: false,
+        }
+    }
+
+    /// Serve one decoded line — the nonblocking mirror of the threaded
+    /// reader's per-line block.
+    fn serve_line(&mut self, line: &str, cx: &mut ConnCx<'_>, now: Instant) {
+        match super::wire::decode_request(line) {
+            Ok(req) => {
+                if !self.budget.admit() {
+                    push_wire_frame(cx.out, req.id, &Frame::Final(Err(ServeError::Busy)));
+                    self.draining = true;
+                    *cx.close_after_flush = true;
+                    return;
+                }
+                let shutdown = matches!(req.body, RequestBody::Shutdown);
+                let mut ticket = self.service.call(req);
+                // Fast path: immediate replies forward without joining
+                // the stream table.
+                let still_streaming = match ticket.try_recv() {
+                    Ok(Some(frame)) if frame.is_final() => {
+                        push_wire_frame(cx.out, ticket.id(), &frame);
+                        false
+                    }
+                    Ok(Some(frame)) => {
+                        push_wire_frame(cx.out, ticket.id(), &frame);
+                        true
+                    }
+                    Ok(None) => true,
+                    Err(_) => {
+                        push_wire_frame(
+                            cx.out,
+                            ticket.id(),
+                            &Frame::Final(Err(ServeError::Shutdown)),
+                        );
+                        false
+                    }
+                };
+                if still_streaming {
+                    self.streams.push(EpollStream {
+                        ticket,
+                        last_frame: now,
+                        _gauge: self.gauges.stream_started(),
+                    });
+                }
+                if shutdown {
+                    // stop reading; ack flushes, then the latch trips
+                    self.draining = true;
+                    *cx.close_after_flush = true;
+                    *cx.trip_after_flush = true;
+                }
+            }
+            Err(e) => {
+                push_wire_frame(
+                    cx.out,
+                    salvage_id(line),
+                    &Frame::Final(Err(ServeError::BadRequest(e.to_string()))),
+                );
+            }
+        }
+    }
+}
+
+impl Driver for FrameDriver {
+    fn on_data(&mut self, cx: &mut ConnCx<'_>, now: Instant) {
+        while !self.draining {
+            let Some(pos) = cx.inbuf.iter().position(|&b| b == b'\n') else { break };
+            let line_bytes: Vec<u8> = cx.inbuf.drain(..=pos).collect();
+            let Ok(line) = std::str::from_utf8(&line_bytes) else {
+                // mirrors the threaded reader: a non-UTF-8 stream is
+                // desynchronized beyond repair — hang up
+                self.draining = true;
+                *cx.close_after_flush = true;
+                break;
+            };
+            let line = line.trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            self.serve_line(&line, cx, now);
+        }
+    }
+
+    fn on_eof(&mut self, cx: &mut ConnCx<'_>) {
+        // Keep pumping in-flight streams (their frames still flush to a
+        // half-closed peer); the loop closes us once they drain.
+        self.draining = true;
+        *cx.close_after_flush = true;
+    }
+
+    fn pump(&mut self, cx: &mut ConnCx<'_>, now: Instant) {
+        let mut wake: Option<Instant> = None;
+        let out = &mut *cx.out;
+        self.streams.retain_mut(|s| loop {
+            if out.len() >= reactor::OUT_BOUND {
+                // Backpressure maps onto write readiness: pending
+                // output is over the bound, so park this stream (its
+                // producer parks on the bounded ticket buffer) until
+                // the socket drains.
+                break true;
+            }
+            match s.ticket.try_recv() {
+                Ok(Some(frame)) => {
+                    s.last_frame = now;
+                    let done = frame.is_final();
+                    push_wire_frame(out, s.ticket.id(), &frame);
+                    if done {
+                        break false;
+                    }
+                }
+                Ok(None) => {
+                    if now.duration_since(s.last_frame) > MAX_TICKET_WAIT {
+                        push_wire_frame(
+                            out,
+                            s.ticket.id(),
+                            &Frame::Final(Err(ServeError::Deadline)),
+                        );
+                        break false;
+                    }
+                    let at = s.last_frame + MAX_TICKET_WAIT;
+                    if wake.is_none_or(|w| at < w) {
+                        wake = Some(at);
+                    }
+                    break true;
+                }
+                Err(_) => {
+                    push_wire_frame(out, s.ticket.id(), &Frame::Final(Err(ServeError::Shutdown)));
+                    break false;
+                }
+            }
+        });
+        if let Some(at) = wake {
+            if cx.wake_at.is_none_or(|w| at < w) {
+                *cx.wake_at = Some(at);
+            }
+        }
+    }
+
+    fn is_streaming(&self) -> bool {
+        !self.streams.is_empty()
+    }
 }
 
 // ---------------------------------------------------------------------------

@@ -406,6 +406,18 @@ pub struct StatsReply {
     /// Number of shard backends aggregated into this snapshot; `0`
     /// means the counters come from the answering process itself.
     pub backends: u64,
+    /// Live transport gauge: connections currently open across the
+    /// answering process's frontends. Additive v2 field (absent = 0 on
+    /// the wire); unlike the counters above, gauges are *not* summed by
+    /// a shard front tier — they always describe the answering process.
+    pub open_conns: u64,
+    /// Live transport gauge: reply streams currently being forwarded.
+    pub active_streams: u64,
+    /// Live transport gauge: OS threads owned by the transports. The
+    /// threaded transport grows this with connections; the epoll
+    /// transport holds it at one per frontend — the observable
+    /// O(threads) ≪ O(connections) claim.
+    pub transport_threads: u64,
 }
 
 /// One zoo listing row.

@@ -1,0 +1,778 @@
+//! Event-loop core for the epoll transports (`--transport epoll`):
+//! readiness registration ([`Poller`]), a hashed timer wheel for
+//! deadlines ([`TimerWheel`]), and the generic
+//! accept/read/pump/flush loop ([`serve_event_loop`]) that both wire
+//! frontends mount through a per-connection [`Driver`] state machine.
+//!
+//! Concurrency model: **one** OS thread runs the whole tier. Sockets
+//! are nonblocking; epoll reports readiness level-triggered, with
+//! `EPOLLOUT` interest armed only while a connection has unflushed
+//! output (the classic on-demand write-interest pattern). The bounded
+//! per-ticket buffers ([`STREAM_BOUND`](super::protocol)) map onto
+//! write readiness: once a connection's pending output reaches
+//! [`OUT_BOUND`] its driver stops draining tickets, the producers
+//! park on their bounded channels, and everything resumes when the
+//! socket drains — a stalled reader parks its *connection*, not a
+//! thread. Deadlines (ticket waits, request-read timeouts, write
+//! stalls) ride the timer wheel; expiry is advisory — the driver
+//! rechecks its own clocks, so stale entries are harmless (lazy
+//! cancellation).
+//!
+//! The epoll syscalls are declared directly (`std` already links
+//! libc), keeping the tree zero-dependency. Linux-only: on other
+//! platforms [`Poller::new`] reports `Unsupported` and the threaded
+//! transport remains the default.
+
+use super::net::{StopLatch, TransportGauges};
+use std::io::{self, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::time::{Duration, Instant};
+
+/// Per-connection pending-output bound, in bytes. A driver stops
+/// pumping ticket frames once this much output is queued; the
+/// connection resumes when the socket accepts the backlog.
+pub(crate) const OUT_BOUND: usize = 256 * 1024;
+
+/// Hard cap on buffered unparsed input per connection; past it the
+/// connection is abusive and is dropped.
+const INBUF_MAX: usize = 32 * 1024 * 1024;
+
+/// Wait granularity while any connection has live reply streams: the
+/// loop wakes at least this often to pump tickets.
+const PUMP_INTERVAL: Duration = Duration::from_millis(1);
+
+/// Idle wait bound: how long `epoll_wait` may sleep with no streams,
+/// timers, or pending output (bounds stop-latch detection latency; a
+/// latch trip also self-dials the listener, which wakes the loop
+/// immediately).
+const IDLE_POLL: Duration = Duration::from_millis(200);
+
+/// Write-stall bound, mirroring the threaded transport: a socket that
+/// accepts zero bytes for this long while output is pending is
+/// declared dead and closed.
+const WRITE_STALL_TIMEOUT: Duration = Duration::from_secs(600);
+
+/// Read buffer size per `read` syscall.
+const READ_CHUNK: usize = 64 * 1024;
+
+/// `epoll_wait` event batch per wakeup.
+const EVENT_BATCH: usize = 256;
+
+// ---------------------------------------------------------------------------
+// Raw epoll bindings (Linux)
+// ---------------------------------------------------------------------------
+
+#[cfg(target_os = "linux")]
+mod sys {
+    use std::os::raw::c_int;
+
+    pub const EPOLL_CLOEXEC: c_int = 0o2000000;
+    pub const EPOLL_CTL_ADD: c_int = 1;
+    pub const EPOLL_CTL_DEL: c_int = 2;
+    pub const EPOLL_CTL_MOD: c_int = 3;
+    pub const EPOLLIN: u32 = 0x001;
+    pub const EPOLLOUT: u32 = 0x004;
+    pub const EPOLLERR: u32 = 0x008;
+    pub const EPOLLHUP: u32 = 0x010;
+    pub const EPOLLRDHUP: u32 = 0x2000;
+
+    /// Mirror of `struct epoll_event`; packed on x86 where the kernel
+    /// ABI packs it.
+    #[repr(C)]
+    #[cfg_attr(any(target_arch = "x86", target_arch = "x86_64"), repr(packed))]
+    #[derive(Clone, Copy)]
+    pub struct EpollEvent {
+        pub events: u32,
+        pub data: u64,
+    }
+
+    extern "C" {
+        pub fn epoll_create1(flags: c_int) -> c_int;
+        pub fn epoll_ctl(epfd: c_int, op: c_int, fd: c_int, event: *mut EpollEvent) -> c_int;
+        pub fn epoll_wait(
+            epfd: c_int,
+            events: *mut EpollEvent,
+            maxevents: c_int,
+            timeout_ms: c_int,
+        ) -> c_int;
+        pub fn close(fd: c_int) -> c_int;
+    }
+}
+
+/// One readiness report from [`Poller::wait`]. Error/hangup conditions
+/// are folded into `readable`/`writable` — the next read or write
+/// surfaces them as `io::Error`/EOF.
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct PollEvent {
+    pub token: u64,
+    pub readable: bool,
+    pub writable: bool,
+}
+
+/// Readiness registration over one epoll instance.
+#[cfg(target_os = "linux")]
+pub(crate) struct Poller {
+    epfd: std::os::raw::c_int,
+}
+
+/// Readiness registration stub for non-Linux hosts: every operation
+/// reports `Unsupported`.
+#[cfg(not(target_os = "linux"))]
+pub(crate) struct Poller {}
+
+#[cfg(not(target_os = "linux"))]
+fn unsupported() -> io::Error {
+    io::Error::new(io::ErrorKind::Unsupported, "the epoll transport requires linux")
+}
+
+#[cfg(target_os = "linux")]
+impl Poller {
+    pub(crate) fn new() -> io::Result<Poller> {
+        let epfd = unsafe { sys::epoll_create1(sys::EPOLL_CLOEXEC) };
+        if epfd < 0 {
+            return Err(io::Error::last_os_error());
+        }
+        Ok(Poller { epfd })
+    }
+
+    fn mask(readable: bool, writable: bool) -> u32 {
+        let mut m = sys::EPOLLRDHUP;
+        if readable {
+            m |= sys::EPOLLIN;
+        }
+        if writable {
+            m |= sys::EPOLLOUT;
+        }
+        m
+    }
+
+    fn ctl(&self, op: std::os::raw::c_int, fd: i32, events: u32, token: u64) -> io::Result<()> {
+        let mut ev = sys::EpollEvent { events, data: token };
+        let rc = unsafe { sys::epoll_ctl(self.epfd, op, fd, &mut ev) };
+        if rc < 0 {
+            return Err(io::Error::last_os_error());
+        }
+        Ok(())
+    }
+
+    /// Register `fd` under `token` with the given interest set.
+    pub(crate) fn add(&self, fd: i32, token: u64, readable: bool, writable: bool) -> io::Result<()> {
+        self.ctl(sys::EPOLL_CTL_ADD, fd, Self::mask(readable, writable), token)
+    }
+
+    /// Change an existing registration's interest set.
+    pub(crate) fn modify(
+        &self,
+        fd: i32,
+        token: u64,
+        readable: bool,
+        writable: bool,
+    ) -> io::Result<()> {
+        self.ctl(sys::EPOLL_CTL_MOD, fd, Self::mask(readable, writable), token)
+    }
+
+    /// Drop a registration (the fd may already be closing; errors are
+    /// the caller's to ignore).
+    pub(crate) fn remove(&self, fd: i32) -> io::Result<()> {
+        self.ctl(sys::EPOLL_CTL_DEL, fd, 0, 0)
+    }
+
+    /// Block until readiness or `timeout` (`None` = forever), filling
+    /// `out` with the batch.
+    pub(crate) fn wait(&self, out: &mut Vec<PollEvent>, timeout: Option<Duration>) -> io::Result<()> {
+        out.clear();
+        let ms: std::os::raw::c_int = match timeout {
+            None => -1,
+            Some(d) => {
+                let ms = d.as_millis().min(i32::MAX as u128) as i32;
+                if ms == 0 && !d.is_zero() {
+                    1 // round a sub-millisecond wait up, not down to a spin
+                } else {
+                    ms
+                }
+            }
+        };
+        let mut buf = [sys::EpollEvent { events: 0, data: 0 }; EVENT_BATCH];
+        loop {
+            let n = unsafe {
+                sys::epoll_wait(self.epfd, buf.as_mut_ptr(), EVENT_BATCH as i32, ms)
+            };
+            if n < 0 {
+                let e = io::Error::last_os_error();
+                if e.kind() == io::ErrorKind::Interrupted {
+                    continue;
+                }
+                return Err(e);
+            }
+            for ev in buf.iter().take(n as usize) {
+                // copy out of the (possibly packed) struct before use
+                let events = ev.events;
+                let data = ev.data;
+                let fail = events & (sys::EPOLLERR | sys::EPOLLHUP) != 0;
+                out.push(PollEvent {
+                    token: data,
+                    readable: events & (sys::EPOLLIN | sys::EPOLLRDHUP) != 0 || fail,
+                    writable: events & sys::EPOLLOUT != 0 || fail,
+                });
+            }
+            return Ok(());
+        }
+    }
+}
+
+#[cfg(target_os = "linux")]
+impl Drop for Poller {
+    fn drop(&mut self) {
+        unsafe {
+            sys::close(self.epfd);
+        }
+    }
+}
+
+#[cfg(not(target_os = "linux"))]
+impl Poller {
+    pub(crate) fn new() -> io::Result<Poller> {
+        Err(unsupported())
+    }
+
+    pub(crate) fn add(&self, _fd: i32, _t: u64, _r: bool, _w: bool) -> io::Result<()> {
+        Err(unsupported())
+    }
+
+    pub(crate) fn modify(&self, _fd: i32, _t: u64, _r: bool, _w: bool) -> io::Result<()> {
+        Err(unsupported())
+    }
+
+    pub(crate) fn remove(&self, _fd: i32) -> io::Result<()> {
+        Err(unsupported())
+    }
+
+    pub(crate) fn wait(&self, _out: &mut Vec<PollEvent>, _t: Option<Duration>) -> io::Result<()> {
+        Err(unsupported())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Timer wheel
+// ---------------------------------------------------------------------------
+
+const WHEEL_SLOTS: usize = 256;
+const WHEEL_GRANULARITY: Duration = Duration::from_millis(25);
+
+/// Hashed timer wheel: `schedule` hashes a deadline into one of
+/// [`WHEEL_SLOTS`] buckets of [`WHEEL_GRANULARITY`]; deadlines beyond
+/// the wheel's span land in the far bucket and cascade (re-hash) each
+/// revolution. Cancellation is lazy — expiry only *wakes* the owner,
+/// which rechecks its real deadline state, so stale entries cost one
+/// spurious wakeup instead of bookkeeping.
+pub(crate) struct TimerWheel {
+    slots: Vec<Vec<(u64, Instant)>>,
+    /// Bucket whose window starts at `base`.
+    hand: usize,
+    base: Instant,
+    live: usize,
+    earliest: Option<Instant>,
+}
+
+impl Default for TimerWheel {
+    fn default() -> TimerWheel {
+        TimerWheel::new()
+    }
+}
+
+impl TimerWheel {
+    pub(crate) fn new() -> TimerWheel {
+        TimerWheel {
+            slots: (0..WHEEL_SLOTS).map(|_| Vec::new()).collect(),
+            hand: 0,
+            base: Instant::now(),
+            live: 0,
+            earliest: None,
+        }
+    }
+
+    /// Arm a wakeup for `token` at `deadline` (already-past deadlines
+    /// fire on the next `expire`).
+    pub(crate) fn schedule(&mut self, token: u64, deadline: Instant) {
+        let ticks = deadline.saturating_duration_since(self.base).as_nanos()
+            / WHEEL_GRANULARITY.as_nanos();
+        let offset = (ticks as usize).min(WHEEL_SLOTS - 1);
+        self.slots[(self.hand + offset) % WHEEL_SLOTS].push((token, deadline));
+        self.live += 1;
+        if self.earliest.is_none_or(|e| deadline < e) {
+            self.earliest = Some(deadline);
+        }
+    }
+
+    /// Time until the nearest armed deadline (zero if already due);
+    /// `None` when the wheel is empty.
+    pub(crate) fn next_timeout(&self, now: Instant) -> Option<Duration> {
+        self.earliest.map(|e| e.saturating_duration_since(now))
+    }
+
+    /// Advance the hand to `now`, appending every due token to `due`.
+    /// Not-yet-due entries passed over (or sharing the hand bucket)
+    /// are re-hashed — this is the cascade.
+    pub(crate) fn expire(&mut self, now: Instant, due: &mut Vec<u64>) {
+        due.clear();
+        if self.live == 0 {
+            self.base = now; // fast-forward an idle wheel
+            return;
+        }
+        while self.base + WHEEL_GRANULARITY <= now {
+            let drained = std::mem::take(&mut self.slots[self.hand]);
+            self.hand = (self.hand + 1) % WHEEL_SLOTS;
+            self.base += WHEEL_GRANULARITY;
+            for (token, deadline) in drained {
+                self.live -= 1;
+                if deadline <= now {
+                    due.push(token);
+                } else {
+                    self.schedule(token, deadline);
+                }
+            }
+        }
+        // the hand bucket's own window may hold already-due entries
+        let bucket = std::mem::take(&mut self.slots[self.hand]);
+        let mut keep = Vec::with_capacity(bucket.len());
+        for (token, deadline) in bucket {
+            if deadline <= now {
+                self.live -= 1;
+                due.push(token);
+            } else {
+                keep.push((token, deadline));
+            }
+        }
+        self.slots[self.hand] = keep;
+        if !due.is_empty() || self.earliest.is_some_and(|e| e <= now) {
+            self.earliest = self.slots.iter().flatten().map(|&(_, d)| d).min();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Driver interface
+// ---------------------------------------------------------------------------
+
+/// Mutable per-connection surfaces a [`Driver`] works against. The
+/// flags are *requests to the loop*: `close_after_flush` closes the
+/// connection once output drains and no streams remain;
+/// `trip_after_flush` additionally trips the stop latch at that point
+/// (the shutdown ack path); `wake_at` asks for a timer wakeup.
+pub(crate) struct ConnCx<'a> {
+    /// Unparsed input bytes (consume what's complete).
+    pub inbuf: &'a mut Vec<u8>,
+    /// Pending output bytes (append encoded frames/responses).
+    pub out: &'a mut Vec<u8>,
+    pub close_after_flush: &'a mut bool,
+    pub trip_after_flush: &'a mut bool,
+    /// Earliest instant the driver needs a wakeup at (deadline
+    /// checks); cleared by the loop before every driver call.
+    pub wake_at: &'a mut Option<Instant>,
+}
+
+/// Per-connection protocol state machine mounted on the event loop:
+/// the frame transport and the HTTP transport each implement one.
+pub(crate) trait Driver {
+    /// New bytes landed in `cx.inbuf` — consume complete units.
+    fn on_data(&mut self, cx: &mut ConnCx<'_>, now: Instant);
+    /// Peer closed its write side; buffered input may still be
+    /// pending, and replies may still be flushing.
+    fn on_eof(&mut self, cx: &mut ConnCx<'_>);
+    /// Poll in-flight tickets and deadline state; called on every
+    /// loop pass while [`Driver::is_streaming`], and on timer expiry.
+    fn pump(&mut self, cx: &mut ConnCx<'_>, now: Instant);
+    /// Live reply streams in flight?
+    fn is_streaming(&self) -> bool;
+}
+
+// ---------------------------------------------------------------------------
+// The loop
+// ---------------------------------------------------------------------------
+
+struct Conn {
+    stream: TcpStream,
+    driver: Box<dyn Driver>,
+    inbuf: Vec<u8>,
+    out: Vec<u8>,
+    /// Prefix of `out` already written to the socket.
+    sent: usize,
+    close_after_flush: bool,
+    trip_after_flush: bool,
+    wake_at: Option<Instant>,
+    /// Last deadline actually handed to the wheel (dedup).
+    armed_timer: Option<Instant>,
+    /// EOF observed on the read side (read interest disarmed).
+    read_eof: bool,
+    /// EPOLLOUT currently armed.
+    want_write: bool,
+    last_write_progress: Instant,
+    _gauge: super::net::GaugeGuard,
+}
+
+impl Conn {
+    fn flushed(&self) -> bool {
+        self.sent == self.out.len()
+    }
+}
+
+/// Accept-and-serve on a single thread until the stop latch trips and
+/// every connection drains. `make_driver` builds one [`Driver`] per
+/// accepted connection.
+#[cfg(target_os = "linux")]
+pub(crate) fn serve_event_loop(
+    listener: TcpListener,
+    stop: StopLatch,
+    gauges: TransportGauges,
+    mut make_driver: impl FnMut() -> Box<dyn Driver>,
+) -> io::Result<()> {
+    use std::os::fd::AsRawFd;
+
+    const LISTENER_TOKEN: u64 = 0;
+    listener.set_nonblocking(true)?;
+    let poller = Poller::new()?;
+    poller.add(listener.as_raw_fd(), LISTENER_TOKEN, true, false)?;
+    let _thread_gauge = gauges.thread_started();
+
+    let mut conns: Vec<Option<Conn>> = Vec::new();
+    let mut live = 0usize;
+    let mut free: Vec<usize> = Vec::new();
+    let mut events: Vec<PollEvent> = Vec::with_capacity(EVENT_BATCH);
+    let mut due: Vec<u64> = Vec::new();
+    let mut wheel = TimerWheel::new();
+    let mut scratch = vec![0u8; READ_CHUNK];
+
+    loop {
+        let draining = stop.stopped();
+        if draining && live == 0 {
+            return Ok(());
+        }
+        let now = Instant::now();
+        let mut timeout = IDLE_POLL;
+        if conns.iter().flatten().any(|c| c.driver.is_streaming()) {
+            timeout = PUMP_INTERVAL;
+        } else if let Some(d) = wheel.next_timeout(now) {
+            timeout = timeout.min(d);
+        }
+        poller.wait(&mut events, Some(timeout))?;
+        let now = Instant::now();
+        let draining = stop.stopped();
+
+        // --- socket readiness ---
+        for &ev in &events {
+            if ev.token == LISTENER_TOKEN {
+                accept_burst(
+                    &listener, &poller, &gauges, &mut conns, &mut free, &mut live, draining,
+                    &mut make_driver, now,
+                );
+                continue;
+            }
+            let idx = (ev.token - 1) as usize;
+            if !conns.get(idx).is_some_and(|c| c.is_some()) {
+                continue; // already closed this pass
+            }
+            if ev.readable {
+                let gone = {
+                    let conn = conns[idx].as_mut().expect("live conn");
+                    !read_burst(conn, &mut scratch, now)
+                };
+                if gone {
+                    close_conn(&poller, &mut conns, &mut free, &mut live, idx);
+                    continue;
+                }
+            }
+            service_conn(&poller, &stop, &mut wheel, &mut conns, &mut free, &mut live, idx, now);
+        }
+
+        // --- timer expiry (advisory wakeups; drivers recheck) ---
+        wheel.expire(now, &mut due);
+        for &token in &due {
+            if token == LISTENER_TOKEN {
+                continue;
+            }
+            let idx = (token - 1) as usize;
+            if let Some(c) = conns.get_mut(idx).and_then(Option::as_mut) {
+                c.armed_timer = None;
+            } else {
+                continue;
+            }
+            service_conn(&poller, &stop, &mut wheel, &mut conns, &mut free, &mut live, idx, now);
+        }
+
+        // --- pump every streaming connection; close drained ones ---
+        for idx in 0..conns.len() {
+            let needs_visit = match &conns[idx] {
+                Some(c) => {
+                    c.driver.is_streaming()
+                        || (c.flushed() && c.close_after_flush)
+                        || (draining && c.flushed())
+                }
+                None => false,
+            };
+            if needs_visit {
+                service_conn(
+                    &poller, &stop, &mut wheel, &mut conns, &mut free, &mut live, idx, now,
+                );
+            }
+        }
+    }
+}
+
+/// Non-Linux stub: the epoll transport is unavailable.
+#[cfg(not(target_os = "linux"))]
+pub(crate) fn serve_event_loop(
+    _listener: TcpListener,
+    _stop: StopLatch,
+    _gauges: TransportGauges,
+    _make_driver: impl FnMut() -> Box<dyn Driver>,
+) -> io::Result<()> {
+    Err(unsupported())
+}
+
+#[cfg(target_os = "linux")]
+#[allow(clippy::too_many_arguments)]
+fn accept_burst(
+    listener: &TcpListener,
+    poller: &Poller,
+    gauges: &TransportGauges,
+    conns: &mut Vec<Option<Conn>>,
+    free: &mut Vec<usize>,
+    live: &mut usize,
+    draining: bool,
+    make_driver: &mut impl FnMut() -> Box<dyn Driver>,
+    now: Instant,
+) {
+    use std::os::fd::AsRawFd;
+    loop {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                // post-shutdown accepts (including the latch's wakeup
+                // self-dial) are closed on the floor
+                if draining {
+                    continue;
+                }
+                if stream.set_nonblocking(true).is_err() {
+                    continue;
+                }
+                let _ = stream.set_nodelay(true);
+                let idx = free.pop().unwrap_or_else(|| {
+                    conns.push(None);
+                    conns.len() - 1
+                });
+                let token = idx as u64 + 1;
+                if poller.add(stream.as_raw_fd(), token, true, false).is_err() {
+                    free.push(idx);
+                    continue;
+                }
+                conns[idx] = Some(Conn {
+                    stream,
+                    driver: make_driver(),
+                    inbuf: Vec::new(),
+                    out: Vec::new(),
+                    sent: 0,
+                    close_after_flush: false,
+                    trip_after_flush: false,
+                    wake_at: None,
+                    armed_timer: None,
+                    read_eof: false,
+                    want_write: false,
+                    last_write_progress: now,
+                    _gauge: gauges.conn_opened(),
+                });
+                *live += 1;
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => return,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(_) => return,
+        }
+    }
+}
+
+/// Drain the socket's readable bytes into `inbuf`. Returns `false`
+/// when the connection is dead (hard error or input-flood cap).
+#[cfg(target_os = "linux")]
+fn read_burst(conn: &mut Conn, scratch: &mut [u8], _now: Instant) -> bool {
+    if conn.read_eof {
+        return true;
+    }
+    loop {
+        match conn.stream.read(scratch) {
+            Ok(0) => {
+                conn.read_eof = true;
+                return true;
+            }
+            Ok(n) => {
+                conn.inbuf.extend_from_slice(&scratch[..n]);
+                if conn.inbuf.len() > INBUF_MAX {
+                    return false;
+                }
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => return true,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(_) => return false,
+        }
+    }
+}
+
+/// Run one connection through its driver, flush, and apply the close /
+/// trip / timer flags. The single place connection state advances.
+#[cfg(target_os = "linux")]
+#[allow(clippy::too_many_arguments)]
+fn service_conn(
+    poller: &Poller,
+    stop: &StopLatch,
+    wheel: &mut TimerWheel,
+    conns: &mut [Option<Conn>],
+    free: &mut Vec<usize>,
+    live: &mut usize,
+    idx: usize,
+    now: Instant,
+) {
+    let Some(conn) = conns[idx].as_mut() else { return };
+    let token = idx as u64 + 1;
+
+    // drive the protocol state machine
+    {
+        let Conn { driver, inbuf, out, close_after_flush, trip_after_flush, wake_at, read_eof, .. } =
+            conn;
+        *wake_at = None;
+        let mut cx = ConnCx { inbuf, out, close_after_flush, trip_after_flush, wake_at };
+        driver.on_data(&mut cx, now);
+        if *read_eof {
+            driver.on_eof(&mut cx);
+        }
+        driver.pump(&mut cx, now);
+    }
+
+    // flush pending output opportunistically (don't wait for EPOLLOUT)
+    let dead = !flush_burst(conn, now);
+    let stalled = !conn.flushed()
+        && now.duration_since(conn.last_write_progress) > WRITE_STALL_TIMEOUT;
+    if dead || stalled {
+        close_conn(poller, conns, free, live, idx);
+        return;
+    }
+
+    let conn = conns[idx].as_mut().expect("live conn");
+    if conn.flushed() && !conn.driver.is_streaming() {
+        if conn.trip_after_flush {
+            conn.trip_after_flush = false;
+            stop.trip();
+        }
+        if conn.close_after_flush || stop.stopped() || (conn.read_eof && conn.inbuf.is_empty()) {
+            close_conn(poller, conns, free, live, idx);
+            return;
+        }
+    }
+
+    // (re)arm interest and timers
+    let want_write = !conn.flushed();
+    let want_read = !conn.read_eof;
+    if want_write != conn.want_write {
+        use std::os::fd::AsRawFd;
+        conn.want_write = want_write;
+        let _ = poller.modify(conn.stream.as_raw_fd(), token, want_read, want_write);
+        if want_write {
+            // write-stall watchdog for non-streaming conns that
+            // nothing else would revisit
+            wheel.schedule(token, now + WRITE_STALL_TIMEOUT);
+        }
+    }
+    if let Some(at) = conn.wake_at {
+        if conn.armed_timer != Some(at) {
+            conn.armed_timer = Some(at);
+            wheel.schedule(token, at);
+        }
+    }
+}
+
+/// Write as much pending output as the socket accepts. Returns `false`
+/// when the connection is dead.
+#[cfg(target_os = "linux")]
+fn flush_burst(conn: &mut Conn, now: Instant) -> bool {
+    while conn.sent < conn.out.len() {
+        match conn.stream.write(&conn.out[conn.sent..]) {
+            Ok(0) => return false,
+            Ok(n) => {
+                conn.sent += n;
+                conn.last_write_progress = now;
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(_) => return false,
+        }
+    }
+    if conn.sent == conn.out.len() {
+        conn.out.clear();
+        conn.sent = 0;
+        conn.last_write_progress = now;
+    } else if conn.sent > 0 {
+        conn.out.drain(..conn.sent);
+        conn.sent = 0;
+    }
+    true
+}
+
+#[cfg(target_os = "linux")]
+fn close_conn(
+    poller: &Poller,
+    conns: &mut [Option<Conn>],
+    free: &mut Vec<usize>,
+    live: &mut usize,
+    idx: usize,
+) {
+    use std::os::fd::AsRawFd;
+    if let Some(conn) = conns[idx].take() {
+        let _ = poller.remove(conn.stream.as_raw_fd());
+        let _ = conn.stream.shutdown(std::net::Shutdown::Both);
+        free.push(idx);
+        *live -= 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wheel_fires_due_and_keeps_pending() {
+        let mut w = TimerWheel::new();
+        let now = Instant::now();
+        w.schedule(1, now); // already due
+        w.schedule(2, now + Duration::from_secs(60)); // far future (cascades)
+        let mut due = Vec::new();
+        w.expire(now + Duration::from_millis(1), &mut due);
+        assert_eq!(due, vec![1]);
+        assert!(w.next_timeout(now).is_some());
+        // the far deadline survives many revolutions of the wheel
+        w.expire(now + Duration::from_secs(30), &mut due);
+        assert!(due.is_empty());
+        w.expire(now + Duration::from_secs(61), &mut due);
+        assert_eq!(due, vec![2]);
+        assert!(w.next_timeout(now).is_none());
+    }
+
+    #[test]
+    fn wheel_empty_fast_forwards() {
+        let mut w = TimerWheel::new();
+        let mut due = Vec::new();
+        w.expire(Instant::now() + Duration::from_secs(3600), &mut due);
+        assert!(due.is_empty());
+        assert!(w.next_timeout(Instant::now()).is_none());
+    }
+
+    #[cfg(target_os = "linux")]
+    #[test]
+    fn poller_reports_listener_readable() {
+        use std::os::fd::AsRawFd;
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let poller = Poller::new().unwrap();
+        poller.add(listener.as_raw_fd(), 7, true, false).unwrap();
+        let mut events = Vec::new();
+        poller.wait(&mut events, Some(Duration::from_millis(10))).unwrap();
+        assert!(events.is_empty(), "nothing connected yet");
+        let _client = TcpStream::connect(listener.local_addr().unwrap()).unwrap();
+        poller.wait(&mut events, Some(Duration::from_secs(5))).unwrap();
+        assert!(events.iter().any(|e| e.token == 7 && e.readable));
+    }
+}

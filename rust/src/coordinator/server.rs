@@ -33,6 +33,7 @@
 //! ```
 
 use super::batcher::{BatchPolicy, Batcher, Pending};
+use super::net::TransportGauges;
 use super::protocol::{
     ConfigPatch, FrameSink, InferReply, ModelSpec, Priority, Reply, Request, RequestBody,
     Response, ServeError, Service, SimSummary, StatsReply, SweepRow, Ticket, ZooEntry,
@@ -537,6 +538,9 @@ impl SimServer {
             cache_misses: cs.misses,
             cache_entries: cs.entries as u64,
             backends: 0,
+            // transport gauges are overlaid by whoever mounts the
+            // service behind a frontend (see Router::with_gauges)
+            ..StatsReply::default()
         }
     }
 }
@@ -725,17 +729,26 @@ pub struct Router {
     infer: Option<Server>,
     sim: SimServer,
     closing: AtomicBool,
+    gauges: Option<TransportGauges>,
 }
 
 impl Router {
     /// Simulation-only deployment (no inference engine attached).
     pub fn new(sim: SimServer) -> Router {
-        Router { infer: None, sim, closing: AtomicBool::new(false) }
+        Router { infer: None, sim, closing: AtomicBool::new(false), gauges: None }
     }
 
     /// Attach a batched inference server for `Infer` traffic.
     pub fn with_engine(mut self, server: Server) -> Router {
         self.infer = Some(server);
+        self
+    }
+
+    /// Attach the transport gauges its frontends update, so `Stats`
+    /// replies carry live `open_conns`/`active_streams`/
+    /// `transport_threads` (zeros when unattached).
+    pub fn with_gauges(mut self, gauges: TransportGauges) -> Router {
+        self.gauges = Some(gauges);
         self
     }
 
@@ -754,6 +767,9 @@ impl Router {
         if let Some(srv) = &self.infer {
             s.infer_served = srv.served();
             s.infer_batches = srv.batches();
+        }
+        if let Some(g) = &self.gauges {
+            g.overlay(&mut s);
         }
         s
     }

@@ -47,7 +47,7 @@
 //! assert!(route("mobilenet-v2", &cfg, 4) < 4);
 //! ```
 
-use super::net::{request_once, WireClient};
+use super::net::{request_once, TransportGauges, WireClient};
 use super::protocol::{
     ConfigPatch, Frame, FrameSink, ModelSpec, Reply, Request, RequestBody, Response,
     ServeError, Service, StatsReply, SweepRow, Ticket, PROTOCOL_VERSION, STREAM_BOUND,
@@ -160,6 +160,10 @@ pub struct ShardRouter {
     /// Latched once a `Shutdown` has been accepted; later calls answer
     /// [`ServeError::Shutdown`], mirroring the single-node `Router`.
     closing: AtomicBool,
+    /// The front tier's own live transport gauges, stamped onto
+    /// aggregated stats replies. Backend gauges are deliberately *not*
+    /// summed — gauges always describe the answering process.
+    gauges: Option<TransportGauges>,
 }
 
 impl ShardRouter {
@@ -173,7 +177,15 @@ impl ShardRouter {
             rr: AtomicUsize::new(0),
             lane: Lane::new(DEFAULT_SHARD_INFLIGHT),
             closing: AtomicBool::new(false),
+            gauges: None,
         }
+    }
+
+    /// Report the frontends' live transport gauges in aggregated stats
+    /// replies (the single-node `Router::with_gauges` counterpart).
+    pub fn with_gauges(mut self, gauges: TransportGauges) -> ShardRouter {
+        self.gauges = Some(gauges);
+        self
     }
 
     /// Bound the front tier's own admission: once `capacity` requests
@@ -259,11 +271,18 @@ impl Service for ShardRouter {
                 let (ticket, sink) = Ticket::pending(id);
                 let backends = self.backends.clone();
                 let timeout = self.timeout;
+                let gauges = self.gauges.clone();
                 thread::Builder::new()
                     .name("fuseconv-shard-stats".into())
                     .spawn(move || {
                         let _slot = slot;
-                        sink.finish(aggregate_stats(&backends, timeout, id));
+                        let mut result = aggregate_stats(&backends, timeout, id);
+                        // counters are summed from the backends; the
+                        // gauges describe this front tier
+                        if let (Ok(Reply::Stats(s)), Some(g)) = (&mut result, &gauges) {
+                            g.overlay(s);
+                        }
+                        sink.finish(result);
                     })
                     .expect("spawn shard stats");
                 ticket

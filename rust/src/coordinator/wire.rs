@@ -1048,6 +1048,9 @@ fn reply_to_json(reply: &Reply) -> Json {
             ("cache_misses", Json::UInt(s.cache_misses)),
             ("cache_entries", Json::UInt(s.cache_entries)),
             ("backends", Json::UInt(s.backends)),
+            ("open_conns", Json::UInt(s.open_conns)),
+            ("active_streams", Json::UInt(s.active_streams)),
+            ("transport_threads", Json::UInt(s.transport_threads)),
         ]),
         Reply::Zoo(entries) => obj(vec![
             ("kind", Json::Str("zoo".into())),
@@ -1106,6 +1109,10 @@ fn reply_from_json(v: &Json) -> Result<Reply, WireError> {
             cache_entries: need_u64(v, "cache_entries")?,
             // additive v2 field (shard front tiers); absent = direct node
             backends: opt_u64(v, "backends")?.unwrap_or(0),
+            // additive v2 transport gauges (PR 6); absent = old node
+            open_conns: opt_u64(v, "open_conns")?.unwrap_or(0),
+            active_streams: opt_u64(v, "active_streams")?.unwrap_or(0),
+            transport_threads: opt_u64(v, "transport_threads")?.unwrap_or(0),
         }),
         "zoo" => Reply::Zoo(
             need_arr(v, "models")?
@@ -1417,6 +1424,9 @@ mod tests {
                 cache_misses: 20,
                 cache_entries: 15,
                 backends: 2,
+                open_conns: 4,
+                active_streams: 1,
+                transport_threads: 2,
             }),
         ));
         rt_response(Response::ok(

@@ -15,6 +15,7 @@
 //! * [`cli`], [`exec`], [`rng`], [`stats`], [`testkit`] — in-repo substrates
 //!   for the offline build environment.
 
+pub mod bench;
 pub mod cli;
 pub mod coordinator;
 pub mod exec;

@@ -51,6 +51,7 @@ fn main() {
         "serve" => cmd_serve(&rest),
         "shard" => cmd_shard(&rest),
         "request" => cmd_request(&rest),
+        "bench" => fuseconv::bench::cmd_bench(&rest),
         "help" | "--help" | "-h" => {
             print_help();
             0
@@ -81,12 +82,15 @@ fn print_help() {
          trace       cycle trace CSV       (--model, --layer)\n  \
          train       NOS pipeline on artifacts (--steps, --artifacts)\n  \
          serve       TCP + HTTP frontends  (--listen, --http-port, --engine mock|none|pjrt,\n              \
-                     --threads, --sim-capacity, --batch-capacity,\n              \
+                     --transport threaded|epoll, --threads, --sim-capacity, --batch-capacity,\n              \
                      --max-requests-per-conn, --queue, --port-file, --http-port-file)\n  \
          shard       multi-node front tier (--backends addr1,addr2,..., --listen, --http-port,\n              \
-                     --timeout-ms, --max-requests-per-conn, --port-file, --http-port-file)\n  \
+                     --transport threaded|epoll, --timeout-ms, --max-requests-per-conn,\n              \
+                     --port-file, --http-port-file)\n  \
          request     serve client          (--connect, --op infer|simulate|sweep|stats|zoo|shutdown,\n              \
-                     --model, --variant, --size, --count, --stream, --http)"
+                     --model, --variant, --size, --count, --stream, --http)\n  \
+         bench       open-loop load generator (--connect, --rps, --connections, --duration-secs,\n              \
+                     --warmup-secs, --mix simulate=80,infer=10,sweep=10, --out BENCH_6.json)"
     );
 }
 
@@ -755,7 +759,8 @@ fn cmd_serve(argv: &[String]) -> i32 {
         .opt("max-batch", "dynamic batch cap", Some("8"))
         .opt("max-wait-ms", "batch deadline (ms)", Some("2"))
         .opt("port-file", "write the bound address here once listening", None)
-        .opt("artifacts", "artifacts dir (pjrt engine only)", Some("artifacts"));
+        .opt("artifacts", "artifacts dir (pjrt engine only)", Some("artifacts"))
+        .opt("transport", "connection concurrency: threaded | epoll", Some("threaded"));
     let args = match cli.parse(argv) {
         Ok(a) => a,
         Err(e) => {
@@ -830,7 +835,19 @@ fn cmd_serve(argv: &[String]) -> i32 {
             return 2;
         }
     };
+    let Some(transport) = fuseconv::coordinator::Transport::parse(&args.str("transport")) else {
+        eprintln!(
+            "unknown --transport {:?} (want threaded|epoll)\n{}",
+            args.str("transport"),
+            cli.usage()
+        );
+        return 2;
+    };
 
+    // One set of live gauges shared by both listeners, reported through
+    // the service's stats reply.
+    let gauges = fuseconv::coordinator::TransportGauges::new();
+    let router = router.with_gauges(gauges.clone());
     let listen = args.str("listen");
     run_frontends(
         std::sync::Arc::new(router),
@@ -841,6 +858,8 @@ fn cmd_serve(argv: &[String]) -> i32 {
             port_file: args.get("port-file"),
             http_port_file: args.get("http-port-file"),
             label: "serve",
+            transport,
+            gauges,
         },
     )
 }
@@ -857,6 +876,11 @@ struct FrontendOpts<'a> {
     http_port_file: Option<&'a str>,
     /// Subcommand name for banner lines (`serve` / `shard`).
     label: &'a str,
+    /// Concurrency model for both listeners.
+    transport: fuseconv::coordinator::Transport,
+    /// Live gauges shared by both listeners (and the mounted service's
+    /// stats reply, via `with_gauges` on the router).
+    gauges: fuseconv::coordinator::TransportGauges,
 }
 
 /// Mount one service on the wire frontends: the TCP listener always,
@@ -873,7 +897,11 @@ fn run_frontends(
     let stop = StopLatch::new();
     let label = opts.label;
     let wire = match WireServer::bind(opts.listen, std::sync::Arc::clone(&service)) {
-        Ok(w) => w.with_request_budget(opts.budget).with_stop(stop.clone()),
+        Ok(w) => w
+            .with_request_budget(opts.budget)
+            .with_stop(stop.clone())
+            .with_transport(opts.transport)
+            .with_gauges(opts.gauges.clone()),
         Err(e) => {
             eprintln!("bind {}: {e}", opts.listen);
             return 1;
@@ -898,7 +926,11 @@ fn run_frontends(
         let host = opts.listen.rsplit_once(':').map(|(h, _)| h).unwrap_or("127.0.0.1");
         let http_listen = format!("{host}:{port}");
         let http = match HttpServer::bind(&http_listen, std::sync::Arc::clone(&service)) {
-            Ok(h) => h.with_request_budget(opts.budget).with_stop(stop.clone()),
+            Ok(h) => h
+                .with_request_budget(opts.budget)
+                .with_stop(stop.clone())
+                .with_transport(opts.transport)
+                .with_gauges(opts.gauges.clone()),
             Err(e) => {
                 eprintln!("bind {http_listen}: {e}");
                 return 1;
@@ -965,7 +997,8 @@ fn cmd_shard(argv: &[String]) -> i32 {
         .opt("max-requests-per-conn", "per-connection request budget (0=unlimited)", Some("0"))
         .opt("max-inflight", "front-tier in-flight request bound (min 1)", Some("1024"))
         .opt("timeout-ms", "backend connect/receive timeout (0 = none)", Some("600000"))
-        .opt("port-file", "write the bound address here once listening", None);
+        .opt("port-file", "write the bound address here once listening", None)
+        .opt("transport", "connection concurrency: threaded | epoll", Some("threaded"));
     let args = match cli.parse(argv) {
         Ok(a) => a,
         Err(e) => {
@@ -1004,8 +1037,20 @@ fn cmd_shard(argv: &[String]) -> i32 {
         }
     };
 
+    let Some(transport) = fuseconv::coordinator::Transport::parse(&args.str("transport")) else {
+        eprintln!(
+            "unknown --transport {:?} (want threaded|epoll)\n{}",
+            args.str("transport"),
+            cli.usage()
+        );
+        return 2;
+    };
+
     let timeout = std::time::Duration::from_millis(timeout_ms);
-    let router = ShardRouter::new(backends.clone(), timeout).with_inflight(max_inflight);
+    let gauges = fuseconv::coordinator::TransportGauges::new();
+    let router = ShardRouter::new(backends.clone(), timeout)
+        .with_inflight(max_inflight)
+        .with_gauges(gauges.clone());
     eprintln!(
         "fuseconv shard: fronting {} backend(s): {}",
         backends.len(),
@@ -1021,6 +1066,8 @@ fn cmd_shard(argv: &[String]) -> i32 {
             port_file: args.get("port-file"),
             http_port_file: args.get("http-port-file"),
             label: "shard",
+            transport,
+            gauges,
         },
     )
 }

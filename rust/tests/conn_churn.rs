@@ -1,0 +1,352 @@
+//! Connection-churn regression: transports must not leak connection,
+//! stream, or thread accounting under sustained open/close traffic.
+//! The live gauges ([`TransportGauges`]) are shared between the test
+//! and the server, so every scenario can assert the *exact* quiescent
+//! state instead of eyeballing `lsof`:
+//!
+//! * ~200 sequential TCP connections (connect → one request → close)
+//!   leave `open_conns`/`active_streams` at zero;
+//! * 64 concurrent TCP connections with sweeps in flight register 64
+//!   open connections, and all gauges return to baseline after the
+//!   churn — including the half that disconnect mid-stream;
+//! * the same sequence over HTTP (sequential keep-alive-less calls +
+//!   concurrent SSE sweeps with mid-stream aborts);
+//! * a mid-sweep client disconnect frees its stream slot: a bounded
+//!   batch lane that a vanished client was occupying admits new work
+//!   again, and `active_streams` drops back to zero;
+//! * the wire `stats` reply carries the same gauge values (overlay
+//!   wiring), observed while a connection is provably open.
+//!
+//! Threaded-transport scenarios run everywhere; the epoll copies are
+//! Linux-only like the event loop itself.
+
+use fuseconv::coordinator::batcher::BatchPolicy;
+use fuseconv::coordinator::{
+    request_once, ConfigPatch, HttpServer, MockEngine, Reply, Request, RequestBody, Router,
+    ServeError, Server, SimServer, Transport, TransportGauges, WireClient, WireServer,
+};
+use fuseconv::sim::{FuseVariant, LayerCache};
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::{Arc, Barrier};
+use std::thread;
+use std::time::{Duration, Instant};
+
+const T: Duration = Duration::from_secs(300);
+
+/// Mock router with a roomy sim pool (the churn is the subject here,
+/// not admission control). The gauges are attached to the Router so
+/// wire `stats` replies overlay them, same as `fuseconv serve` does.
+fn mock_router(gauges: &TransportGauges) -> Arc<Router> {
+    let sim = SimServer::with_capacity(2, Arc::new(LayerCache::new()), 256);
+    Arc::new(
+        Router::new(sim)
+            .with_engine(Server::start(
+                MockEngine::new(4, 2, 8),
+                BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(2) },
+            ))
+            .with_gauges(gauges.clone()),
+    )
+}
+
+/// Poll `cond` until it holds or a generous deadline passes. Gauge
+/// decrements race the client-side close (the serving thread unwinds
+/// after the socket drops), so quiescence is awaited, never asserted
+/// immediately.
+fn wait_until(what: &str, mut cond: impl FnMut() -> bool) {
+    let deadline = Instant::now() + Duration::from_secs(120);
+    while !cond() {
+        assert!(Instant::now() < deadline, "timed out waiting for {what}");
+        thread::sleep(Duration::from_millis(20));
+    }
+}
+
+fn small_sweep(id: u64) -> Request {
+    Request::new(
+        id,
+        RequestBody::Sweep {
+            models: vec!["mobilenet-v2".into()],
+            variants: vec![FuseVariant::Base, FuseVariant::Half],
+            configs: vec![ConfigPatch::sized(8), ConfigPatch::sized(16)],
+        },
+    )
+}
+
+/// Sequential + concurrent churn over the TCP frame frontend.
+fn tcp_churn(transport: Transport) {
+    let gauges = TransportGauges::new();
+    let server = WireServer::bind("127.0.0.1:0", mock_router(&gauges))
+        .expect("bind")
+        .with_transport(transport)
+        .with_gauges(gauges.clone());
+    let addr = server.local_addr().to_string();
+    let handle = thread::spawn(move || server.run().expect("run"));
+
+    // -- 200 sequential connect → infer → close cycles --
+    for i in 0..200u64 {
+        let mut client =
+            WireClient::connect(&addr, Duration::from_secs(60)).expect("connect");
+        let resp = client
+            .roundtrip(&Request::new(i, RequestBody::Infer { input: vec![1.0; 4] }))
+            .expect("roundtrip");
+        assert!(resp.is_ok(), "churn request {i}: {resp:?}");
+    }
+    wait_until("sequential churn to quiesce", || {
+        gauges.open_conns() == 0 && gauges.active_streams() == 0
+    });
+
+    // -- 64 concurrent connections, each with a sweep in flight --
+    // Every worker holds at the barrier with ≥1 streamed frame received,
+    // so all 64 connections and their streams are provably live at once.
+    let hold = Arc::new(Barrier::new(65));
+    let workers: Vec<_> = (0..64u64)
+        .map(|i| {
+            let addr = addr.clone();
+            let hold = Arc::clone(&hold);
+            thread::spawn(move || {
+                let mut client = WireClient::connect(&addr, T).expect("connect");
+                client.send(&small_sweep(i)).expect("send sweep");
+                let first = client.recv_frame(i).expect("first streamed frame");
+                assert!(!first.is_final(), "a 4-cell sweep must stream before Final");
+                hold.wait();
+                if i % 2 == 0 {
+                    // vanish mid-stream: the server must reap the
+                    // connection and its stream slot on its own
+                    drop(client);
+                } else {
+                    loop {
+                        if client.recv_frame(i).expect("frame").is_final() {
+                            break;
+                        }
+                    }
+                }
+            })
+        })
+        .collect();
+    hold.wait();
+    assert_eq!(gauges.open_conns(), 64, "all churn connections live at the barrier");
+    // the wire stats reply overlays the same gauges — observed while the
+    // 64 connections are provably open
+    let resp = request_once(&addr, &Request::new(0, RequestBody::Stats), T).expect("stats");
+    match resp.result {
+        Ok(Reply::Stats(s)) => {
+            // 64 held workers, plus the stats connection itself
+            assert!(
+                s.open_conns >= 64,
+                "stats overlay must see the live connections, got {}",
+                s.open_conns
+            );
+        }
+        other => panic!("expected stats, got {other:?}"),
+    }
+    for w in workers {
+        w.join().expect("churn worker");
+    }
+    wait_until("concurrent churn to quiesce", || {
+        gauges.open_conns() == 0 && gauges.active_streams() == 0
+    });
+
+    // -- clean shutdown --
+    let mut client = WireClient::connect(&addr, Duration::from_secs(30)).expect("connect");
+    let resp = client
+        .roundtrip(&Request::new(u64::MAX, RequestBody::Shutdown))
+        .expect("shutdown");
+    assert_eq!(resp.result, Ok(Reply::Done));
+    handle.join().expect("listener");
+}
+
+/// Sequential + concurrent churn over the HTTP frontend.
+fn http_churn(transport: Transport) {
+    let gauges = TransportGauges::new();
+    let http = HttpServer::bind("127.0.0.1:0", mock_router(&gauges))
+        .expect("bind http")
+        .with_transport(transport)
+        .with_gauges(gauges.clone());
+    let addr = http.local_addr().to_string();
+    let handle = thread::spawn(move || http.run().expect("http run"));
+
+    // -- 200 sequential one-shot calls (connection: close each) --
+    for _ in 0..200 {
+        let reply = fuseconv::coordinator::http_call(&addr, "/v1/stats", None, None, T)
+            .expect("stats");
+        assert_eq!(reply.status, 200);
+    }
+    wait_until("sequential HTTP churn to quiesce", || {
+        gauges.open_conns() == 0 && gauges.active_streams() == 0
+    });
+
+    // -- 64 concurrent raw SSE sweeps; half abort mid-stream --
+    let body = fuseconv::coordinator::wire::encode_request_body(&small_sweep(1));
+    let hold = Arc::new(Barrier::new(65));
+    let workers: Vec<_> = (0..64u32)
+        .map(|i| {
+            let addr = addr.clone();
+            let body = body.clone();
+            let hold = Arc::clone(&hold);
+            thread::spawn(move || {
+                let mut conn = TcpStream::connect(&addr).expect("connect");
+                conn.set_read_timeout(Some(T)).unwrap();
+                // connection: close so the drain below sees EOF after
+                // the final chunk instead of a parked keep-alive socket
+                let req = format!(
+                    "POST /v1/sweep HTTP/1.1\r\nhost: {addr}\r\nconnection: close\r\n\
+                     content-type: application/json\r\ncontent-length: {}\r\n\r\n{body}",
+                    body.len()
+                );
+                conn.write_all(req.as_bytes()).expect("send sweep");
+                // read at least the SSE head: the stream slot is live
+                let mut buf = [0u8; 256];
+                let n = conn.read(&mut buf).expect("sse head");
+                assert!(n > 0, "server must start streaming");
+                hold.wait();
+                if i % 2 == 0 {
+                    drop(conn); // mid-stream abort
+                } else {
+                    // drain until the server finishes the chunked stream
+                    let mut rest = Vec::new();
+                    conn.read_to_end(&mut rest).expect("drain sse");
+                    let text = String::from_utf8_lossy(&rest);
+                    assert!(text.contains("final"), "stream must end with a final event");
+                }
+            })
+        })
+        .collect();
+    hold.wait();
+    assert_eq!(gauges.open_conns(), 64, "all SSE connections live at the barrier");
+    for w in workers {
+        w.join().expect("sse worker");
+    }
+    wait_until("concurrent HTTP churn to quiesce", || {
+        gauges.open_conns() == 0 && gauges.active_streams() == 0
+    });
+
+    let reply = fuseconv::coordinator::http_call(&addr, "/v1/shutdown", Some("{}"), None, T)
+        .expect("shutdown");
+    assert_eq!(reply.status, 200, "{}", reply.body);
+    handle.join().expect("http listener");
+}
+
+/// A client that vanishes mid-sweep must release its batch-lane slot:
+/// with the lane bounded at 1, follow-up sweeps regain admission.
+fn disconnect_frees_stream_slot(transport: Transport) {
+    let sim = SimServer::with_lanes(2, Arc::new(LayerCache::new()), 64, 1);
+    let router = Arc::new(Router::new(sim).with_engine(Server::start(
+        MockEngine::new(4, 2, 8),
+        BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(2) },
+    )));
+    let gauges = TransportGauges::new();
+    let server = WireServer::bind("127.0.0.1:0", router)
+        .expect("bind")
+        .with_transport(transport)
+        .with_gauges(gauges.clone());
+    let addr = server.local_addr().to_string();
+    let handle = thread::spawn(move || server.run().expect("run"));
+
+    // occupy the single batch-lane slot, then vanish mid-stream
+    let mut doomed = WireClient::connect(&addr, T).expect("connect");
+    doomed
+        .send(&Request::new(
+            1,
+            RequestBody::Sweep {
+                models: vec!["mobilenet-v2".into()],
+                variants: vec![FuseVariant::Base, FuseVariant::Half, FuseVariant::Full],
+                configs: (0..6).map(|i| ConfigPatch::sized(8 << (i % 4))).collect(),
+            },
+        ))
+        .expect("send big sweep");
+    assert!(
+        !doomed.recv_frame(1).expect("first frame").is_final(),
+        "the sweep must be mid-stream when the client vanishes"
+    );
+    drop(doomed);
+
+    // the server reaps the dead connection and its stream slot…
+    wait_until("the vanished client's slots to free", || {
+        gauges.open_conns() == 0 && gauges.active_streams() == 0
+    });
+    // …and the bounded lane admits new sweeps again (the in-flight work
+    // may still be draining server-side, so admission is awaited too)
+    wait_until("the batch lane to admit a new sweep", || {
+        let mut probe = WireClient::connect(&addr, T).expect("connect");
+        let resp = probe.roundtrip(&small_sweep(2)).expect("probe sweep");
+        match resp.result {
+            Ok(Reply::Sweep(rows)) => {
+                assert_eq!(rows.len(), 4);
+                true
+            }
+            Err(ServeError::Busy) => false,
+            other => panic!("probe sweep: unexpected {other:?}"),
+        }
+    });
+
+    let mut client = WireClient::connect(&addr, Duration::from_secs(30)).expect("connect");
+    let resp = client
+        .roundtrip(&Request::new(u64::MAX, RequestBody::Shutdown))
+        .expect("shutdown");
+    assert_eq!(resp.result, Ok(Reply::Done));
+    handle.join().expect("listener");
+}
+
+#[test]
+fn threaded_tcp_churn_returns_gauges_to_baseline() {
+    tcp_churn(Transport::Threaded);
+}
+
+#[test]
+fn threaded_http_churn_returns_gauges_to_baseline() {
+    http_churn(Transport::Threaded);
+}
+
+#[test]
+fn threaded_disconnect_mid_sweep_frees_stream_slot() {
+    disconnect_frees_stream_slot(Transport::Threaded);
+}
+
+#[cfg(target_os = "linux")]
+#[test]
+fn epoll_tcp_churn_returns_gauges_to_baseline() {
+    tcp_churn(Transport::Epoll);
+}
+
+#[cfg(target_os = "linux")]
+#[test]
+fn epoll_http_churn_returns_gauges_to_baseline() {
+    http_churn(Transport::Epoll);
+}
+
+#[cfg(target_os = "linux")]
+#[test]
+fn epoll_disconnect_mid_sweep_frees_stream_slot() {
+    disconnect_frees_stream_slot(Transport::Epoll);
+}
+
+#[test]
+fn stats_without_gauges_reports_zeroes() {
+    // A server with no gauge registry (direct Router, no overlay) still
+    // answers stats — the gauge fields just stay at their defaults.
+    let sim = SimServer::with_capacity(2, Arc::new(LayerCache::new()), 64);
+    let router = Arc::new(Router::new(sim).with_engine(Server::start(
+        MockEngine::new(4, 2, 8),
+        BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(2) },
+    )));
+    let server = WireServer::bind("127.0.0.1:0", router).expect("bind");
+    let addr = server.local_addr().to_string();
+    let handle = thread::spawn(move || server.run().expect("run"));
+    let resp = request_once(&addr, &Request::new(0, RequestBody::Stats), T).expect("stats");
+    match resp.result {
+        Ok(Reply::Stats(s)) => {
+            assert_eq!(
+                (s.open_conns, s.active_streams, s.transport_threads),
+                (0, 0, 0),
+                "ungauged servers report zeroed gauges"
+            );
+        }
+        other => panic!("expected stats, got {other:?}"),
+    }
+    let mut client = WireClient::connect(&addr, Duration::from_secs(30)).expect("connect");
+    let resp = client
+        .roundtrip(&Request::new(u64::MAX, RequestBody::Shutdown))
+        .expect("shutdown");
+    assert_eq!(resp.result, Ok(Reply::Done));
+    handle.join().expect("listener");
+}

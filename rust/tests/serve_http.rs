@@ -539,4 +539,22 @@ fn protocol_md_documents_the_wire_contract() {
     ] {
         assert!(spec.contains(needle), "PROTOCOL.md must cover {needle:?}");
     }
+    // the transport concurrency appendix: both models, wire-invisible,
+    // backpressure via write-readiness, and every live gauge the stats
+    // reply carries (enumerated from the field names so the spec tracks
+    // `StatsReply`)
+    for needle in [
+        "Transport concurrency model",
+        "--transport threaded|epoll",
+        "thread-per-connection",
+        "readiness loop",
+        "write-readiness",
+        "not observable on the wire",
+        "`open_conns`",
+        "`active_streams`",
+        "`transport_threads`",
+        "fuseconv bench",
+    ] {
+        assert!(spec.contains(needle), "PROTOCOL.md must cover {needle:?}");
+    }
 }

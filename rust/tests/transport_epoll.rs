@@ -1,0 +1,461 @@
+//! Epoll transport parity: the single-threaded event loop must be
+//! frame-identical on the wire to the thread-per-connection transport,
+//! for both frontends. Everything here drives the SAME client helpers
+//! the threaded-transport suites use (`WireClient`, `http_call`,
+//! `http_sse`) against servers booted with `Transport::Epoll`:
+//!
+//! * mixed concurrent Infer/Simulate over TCP, every id answered, and
+//!   simulate cycles identical to a direct in-process simulation;
+//! * a ≥24-cell TCP sweep streams incremental frames before its Final,
+//!   rows bit-identical to a serial `run_sweep`, interleaved with
+//!   pipelined infers on the same connection;
+//! * `--max-requests-per-conn` answers a typed Busy then closes, same
+//!   as the threaded budget;
+//! * HTTP one-shot + SSE + the error-status taxonomy (400/404/405/504)
+//!   on the epoll loop, byte-compatible enough that the stock client
+//!   helpers parse it without change;
+//! * both transports mount ONE Router concurrently and a shutdown over
+//!   the epoll TCP listener trips the shared stop latch.
+//!
+//! Epoll is Linux-only; the whole file is gated accordingly (the
+//! portable stub returns `Unsupported`, covered by unit tests).
+#![cfg(target_os = "linux")]
+
+use fuseconv::coordinator::batcher::BatchPolicy;
+use fuseconv::coordinator::wire::encode_request_body;
+use fuseconv::coordinator::{
+    http_call, http_sse, ConfigPatch, Frame, HttpServer, MockEngine, ModelSpec, Reply,
+    Request, RequestBody, Router, ServeError, Server, SimServer, StopLatch, SweepRow,
+    Transport, TransportGauges, WireClient, WireServer,
+};
+use fuseconv::nn::models;
+use fuseconv::sim::{
+    run_sweep_serial, simulate_network, FuseVariant, LayerCache, SimConfig, SweepPlan,
+};
+use std::sync::Arc;
+use std::thread;
+use std::time::Duration;
+
+const T: Duration = Duration::from_secs(300);
+
+fn mock_router() -> Arc<Router> {
+    let sim = SimServer::with_capacity(2, Arc::new(LayerCache::new()), 64);
+    Arc::new(Router::new(sim).with_engine(Server::start(
+        MockEngine::new(4, 2, 8),
+        BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(2) },
+    )))
+}
+
+/// Boot a TCP frontend on the epoll event loop.
+fn start_epoll_wire(router: Arc<Router>) -> (String, thread::JoinHandle<()>) {
+    let server = WireServer::bind("127.0.0.1:0", router)
+        .expect("bind ephemeral")
+        .with_transport(Transport::Epoll);
+    let addr = server.local_addr().to_string();
+    let handle = thread::spawn(move || server.run().expect("epoll wire run"));
+    (addr, handle)
+}
+
+/// Boot an HTTP frontend on the epoll event loop.
+fn start_epoll_http(router: Arc<Router>) -> (String, thread::JoinHandle<()>) {
+    let http = HttpServer::bind("127.0.0.1:0", router)
+        .expect("bind http")
+        .with_transport(Transport::Epoll);
+    let addr = http.local_addr().to_string();
+    let handle = thread::spawn(move || http.run().expect("epoll http run"));
+    (addr, handle)
+}
+
+fn shutdown_wire(addr: &str, handle: thread::JoinHandle<()>) {
+    let mut client = WireClient::connect(addr, Duration::from_secs(30)).expect("connect");
+    let resp = client
+        .roundtrip(&Request::new(u64::MAX, RequestBody::Shutdown))
+        .expect("shutdown ack");
+    assert_eq!(resp.result, Ok(Reply::Done));
+    handle.join().expect("listener thread");
+}
+
+fn serial_reference(
+    names: &[&str],
+    variants: &[FuseVariant],
+    sizes: &[usize],
+) -> fuseconv::sim::SweepOutcome {
+    let plan = SweepPlan::new(
+        names.iter().map(|m| models::by_name(m).unwrap()).collect(),
+        variants.to_vec(),
+        sizes.iter().map(|&s| SimConfig::with_size(s)).collect(),
+    );
+    run_sweep_serial(&plan)
+}
+
+fn assert_rows_match(rows: &[SweepRow], reference: &fuseconv::sim::SweepOutcome) {
+    assert_eq!(rows.len(), reference.records().len(), "row count");
+    for (row, rec) in rows.iter().zip(reference.records()) {
+        assert_eq!(row.network, rec.network);
+        assert_eq!(row.variant, rec.variant);
+        assert_eq!((row.rows, row.cols), (rec.cfg.rows, rec.cfg.cols));
+        assert_eq!(row.total_cycles, rec.total_cycles(), "{} {}", row.network, row.rows);
+        assert_eq!(row.latency_ms.to_bits(), rec.latency_ms().to_bits());
+    }
+}
+
+#[test]
+fn epoll_wire_concurrent_mixed_traffic_zero_dropped_replies() {
+    let (addr, handle) = start_epoll_wire(mock_router());
+
+    let workers: Vec<_> = (0..32u64)
+        .map(|i| {
+            let addr = addr.clone();
+            thread::spawn(move || {
+                let mut client = WireClient::connect(&addr, T).expect("connect");
+                let req = if i % 2 == 0 {
+                    Request::new(i, RequestBody::Infer { input: vec![i as f32; 4] })
+                } else {
+                    Request::new(
+                        i,
+                        RequestBody::Simulate {
+                            model: ModelSpec::Zoo("mobilenet-v3-small".into()),
+                            variant: FuseVariant::Half,
+                            config: ConfigPatch::sized(8),
+                        },
+                    )
+                };
+                let resp = client.roundtrip(&req).expect("roundtrip");
+                assert_eq!(resp.id, i, "reply must carry the request id");
+                (i, resp)
+            })
+        })
+        .collect();
+
+    let mut infer_seen = 0;
+    let mut sim_seen = 0;
+    for w in workers {
+        let (i, resp) = w.join().expect("client thread");
+        match resp.result {
+            Ok(Reply::Infer(r)) => {
+                assert_eq!(i % 2, 0);
+                assert_eq!(r.output[0], (4 * i) as f32);
+                infer_seen += 1;
+            }
+            Ok(Reply::Sim(s)) => {
+                assert_eq!(i % 2, 1);
+                assert!(s.total_cycles > 0);
+                sim_seen += 1;
+            }
+            other => panic!("request {i}: unexpected {other:?}"),
+        }
+    }
+    assert_eq!((infer_seen, sim_seen), (16, 16), "zero dropped replies");
+
+    shutdown_wire(&addr, handle);
+}
+
+#[test]
+fn epoll_wire_simulate_matches_direct_simulation() {
+    let (addr, handle) = start_epoll_wire(mock_router());
+    let mut client = WireClient::connect(&addr, T).expect("connect");
+    for (model, variant, size) in [
+        ("mobilenet-v2", FuseVariant::Base, 16),
+        ("mobilenet-v3-small", FuseVariant::Full, 32),
+    ] {
+        let resp = client
+            .roundtrip(&Request::new(
+                7,
+                RequestBody::Simulate {
+                    model: ModelSpec::Zoo(model.into()),
+                    variant,
+                    config: ConfigPatch::sized(size),
+                },
+            ))
+            .expect("roundtrip");
+        let got = match resp.result {
+            Ok(Reply::Sim(s)) => s,
+            other => panic!("{model}: unexpected {other:?}"),
+        };
+        let net = models::by_name(model).unwrap();
+        let expect = simulate_network(&variant.apply(&net), &SimConfig::with_size(size));
+        assert_eq!(got.total_cycles, expect.total_cycles, "{model}: epoll wire parity");
+    }
+    drop(client);
+    shutdown_wire(&addr, handle);
+}
+
+#[test]
+fn epoll_wire_sweep_streams_and_interleaves_with_infers() {
+    // The event loop's pump must interleave sweep row frames with
+    // pipelined one-shot replies on ONE connection, exactly like the
+    // per-ticket forwarder threads it replaced.
+    let (addr, handle) = start_epoll_wire(mock_router());
+    let mut client = WireClient::connect(&addr, T).expect("connect");
+
+    const SIZES: [usize; 8] = [4, 8, 12, 16, 24, 32, 48, 64];
+    let variants = [FuseVariant::Base, FuseVariant::Half, FuseVariant::Full];
+    client
+        .send(&Request::new(
+            7,
+            RequestBody::Sweep {
+                models: vec!["mobilenet-v2".into()],
+                variants: variants.to_vec(),
+                configs: SIZES.iter().map(|&s| ConfigPatch::sized(s)).collect(),
+            },
+        ))
+        .expect("send sweep");
+    for id in 100..104u64 {
+        client
+            .send(&Request::new(id, RequestBody::Infer { input: vec![id as f32; 4] }))
+            .expect("send infer");
+    }
+
+    let mut incremental_before_final = 0usize;
+    let mut rows = Vec::new();
+    let mut infer_answers = 0usize;
+    loop {
+        let (id, frame) = client.recv_any().expect("frame");
+        match frame {
+            Frame::Progress { done, total } => {
+                assert_eq!(id, 7);
+                assert_eq!(total, 24, "1 model × 3 variants × 8 sizes");
+                assert!(done <= total);
+                incremental_before_final += 1;
+            }
+            Frame::Row(row) => {
+                assert_eq!(id, 7, "rows must not leak into infer streams");
+                incremental_before_final += 1;
+                rows.push(row);
+            }
+            Frame::Final(Ok(Reply::Infer(r))) => {
+                assert!((100..104).contains(&id));
+                assert_eq!(r.output[0], (4 * id) as f32);
+                infer_answers += 1;
+            }
+            Frame::Final(result) => {
+                assert_eq!(id, 7);
+                assert_eq!(result, Ok(Reply::Done));
+                break;
+            }
+        }
+    }
+    // drain any infer finals that landed after the sweep's Final
+    while infer_answers < 4 {
+        match client.recv_any().expect("trailing infer final") {
+            (id, Frame::Final(Ok(Reply::Infer(r)))) => {
+                assert_eq!(r.output[0], (4 * id) as f32);
+                infer_answers += 1;
+            }
+            (id, frame) => panic!("unexpected trailing frame {frame:?} for id {id}"),
+        }
+    }
+    assert!(
+        incremental_before_final >= 2,
+        "want ≥2 incremental frames before Final, got {incremental_before_final}"
+    );
+    assert_rows_match(&rows, &serial_reference(&["mobilenet-v2"], &variants, &SIZES));
+
+    drop(client);
+    shutdown_wire(&addr, handle);
+}
+
+#[test]
+fn epoll_wire_request_budget_answers_busy_and_closes() {
+    let router = mock_router();
+    let server = WireServer::bind("127.0.0.1:0", router.clone())
+        .expect("bind")
+        .with_transport(Transport::Epoll)
+        .with_request_budget(Some(2));
+    let addr = server.local_addr().to_string();
+    let stop_handle = thread::spawn(move || server.run().expect("run"));
+
+    let mut client = WireClient::connect(&addr, Duration::from_secs(60)).expect("connect");
+    for id in [1u64, 2] {
+        let resp = client
+            .roundtrip(&Request::new(id, RequestBody::Infer { input: vec![1.0; 4] }))
+            .expect("admitted roundtrip");
+        assert!(resp.is_ok(), "{resp:?}");
+    }
+    let resp = client
+        .roundtrip(&Request::new(3, RequestBody::Infer { input: vec![1.0; 4] }))
+        .expect("the bounce is still a well-formed frame");
+    assert_eq!(resp.result, Err(ServeError::Busy), "budget must bounce request 3");
+    // past the budget the server closes the connection
+    assert!(
+        client.roundtrip(&Request::new(4, RequestBody::Stats)).is_err(),
+        "connection must be closed after the budget bounce"
+    );
+
+    // a fresh connection gets a fresh budget — and can shut us down
+    shutdown_wire(&addr, stop_handle);
+}
+
+#[test]
+fn epoll_http_oneshot_sse_and_error_taxonomy() {
+    let (addr, handle) = start_epoll_http(mock_router());
+
+    // healthz + one-shot infer, stock client helpers unchanged
+    let reply = http_call(&addr, "/healthz", None, None, T).expect("healthz");
+    assert_eq!(reply.status, 200, "{}", reply.body);
+    assert!(reply.body.contains("\"protocol_version\":2"), "{}", reply.body);
+
+    let reply = http_call(&addr, "/v1/infer", Some("{\"id\":7,\"input\":[1,2,3,4]}"), None, T)
+        .expect("infer");
+    assert_eq!(reply.status, 200, "{}", reply.body);
+    let resp = reply.response().expect("terminal frame body");
+    assert_eq!(resp.id, 7);
+    match resp.result {
+        Ok(Reply::Infer(r)) => assert_eq!(r.output, vec![10.0, 11.0]),
+        other => panic!("expected infer reply, got {other:?}"),
+    }
+
+    // SSE sweep: rows bit-identical to the serial reference
+    const SIZES: [usize; 4] = [8, 16, 24, 32];
+    let variants = [FuseVariant::Base, FuseVariant::Half];
+    let body = encode_request_body(&Request::new(
+        1,
+        RequestBody::Sweep {
+            models: vec!["mobilenet-v3-small".into()],
+            variants: variants.to_vec(),
+            configs: SIZES.iter().map(|&s| ConfigPatch::sized(s)).collect(),
+        },
+    ));
+    let mut rows: Vec<SweepRow> = Vec::new();
+    let resp = http_sse(&addr, "/v1/sweep", &body, None, T, |id, frame| {
+        assert_eq!(id, 1);
+        if let Frame::Row(row) = frame {
+            rows.push(row.clone());
+        }
+    })
+    .expect("sse sweep");
+    assert!(resp.is_ok(), "{resp:?}");
+    assert_rows_match(&rows, &serial_reference(&["mobilenet-v3-small"], &variants, &SIZES));
+
+    // error taxonomy parity: 400 / 404 / 405 / 504
+    let reply = http_call(&addr, "/v1/simulate", Some("{not json"), None, T).expect("call");
+    assert_eq!(reply.status, 400, "{}", reply.body);
+    assert!(matches!(reply.response().unwrap().result, Err(ServeError::BadRequest(_))));
+    let reply = http_call(&addr, "/v1/frobnicate", None, None, T).expect("call");
+    assert_eq!(reply.status, 404, "{}", reply.body);
+    let reply = http_call(&addr, "/v1/sweep", None, None, T).expect("call");
+    assert_eq!(reply.status, 405, "{}", reply.body);
+    let req = Request::new(
+        9,
+        RequestBody::Simulate {
+            model: ModelSpec::Zoo("mobilenet-v2".into()),
+            variant: FuseVariant::Base,
+            config: ConfigPatch::default(),
+        },
+    )
+    .with_deadline_ms(0);
+    let reply = http_call(&addr, "/v1/simulate", Some(&encode_request_body(&req)), None, T)
+        .expect("call");
+    assert_eq!(reply.status, 504, "{}", reply.body);
+    assert_eq!(reply.response().unwrap().result, Err(ServeError::Deadline));
+
+    // shutdown over the epoll HTTP loop
+    let reply = http_call(&addr, "/v1/shutdown", Some("{}"), None, T).expect("shutdown");
+    assert_eq!(reply.status, 200, "{}", reply.body);
+    handle.join().expect("http listener");
+}
+
+#[test]
+fn epoll_http_keep_alive_budget_answers_429() {
+    let router = mock_router();
+    let stop = StopLatch::new();
+    let http = HttpServer::bind("127.0.0.1:0", router)
+        .expect("bind http")
+        .with_transport(Transport::Epoll)
+        .with_request_budget(Some(2))
+        .with_stop(stop.clone());
+    let addr = http.local_addr().to_string();
+    let handle = thread::spawn(move || http.run().expect("http run"));
+
+    // three sequential keep-alive calls: 200, 200, then the bounce
+    let reply = http_call(&addr, "/v1/stats", None, None, T).expect("stats 1");
+    assert_eq!(reply.status, 200);
+    let reply = http_call(&addr, "/v1/stats", None, None, T).expect("stats 2");
+    assert_eq!(reply.status, 200);
+    let reply = http_call(&addr, "/v1/stats", None, None, T).expect("stats 3");
+    // http_call opens a fresh connection per call, so each gets a fresh
+    // budget; pipelining on one connection is what trips it. Drive raw:
+    use std::io::{Read as _, Write as _};
+    let mut conn = std::net::TcpStream::connect(&addr).expect("connect");
+    conn.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+    let one = format!("GET /v1/stats HTTP/1.1\r\nhost: {addr}\r\n\r\n");
+    conn.write_all(one.repeat(3).as_bytes()).expect("pipeline 3 requests");
+    let mut raw = String::new();
+    let _ = conn.read_to_string(&mut raw); // server closes after the bounce
+    let codes: Vec<&str> = raw
+        .lines()
+        .filter(|l| l.starts_with("HTTP/1.1 "))
+        .map(|l| &l[9..12])
+        .collect();
+    assert_eq!(codes, vec!["200", "200", "429"], "budget must bounce the third request");
+    assert_eq!(reply.status, 200, "fresh connections keep their own budget");
+
+    stop.trip();
+    handle.join().expect("http listener");
+}
+
+#[test]
+fn epoll_and_threaded_transports_agree_on_one_router() {
+    // Both concurrency models mount ONE Router at once; identical sweeps
+    // must agree cell-for-cell, and the shared stop latch stops both.
+    let router = mock_router();
+    let gauges = TransportGauges::new();
+    let stop = StopLatch::new();
+    let threaded = WireServer::bind("127.0.0.1:0", router.clone())
+        .expect("bind threaded")
+        .with_stop(stop.clone())
+        .with_gauges(gauges.clone());
+    let epoll = WireServer::bind("127.0.0.1:0", router)
+        .expect("bind epoll")
+        .with_transport(Transport::Epoll)
+        .with_stop(stop)
+        .with_gauges(gauges);
+    let threaded_addr = threaded.local_addr().to_string();
+    let epoll_addr = epoll.local_addr().to_string();
+    let threaded_handle = thread::spawn(move || threaded.run().expect("threaded run"));
+    let epoll_handle = thread::spawn(move || epoll.run().expect("epoll run"));
+
+    const SIZES: [usize; 4] = [8, 16, 24, 32];
+    let variants = [FuseVariant::Base, FuseVariant::Half];
+    let sweep = |addr: String| {
+        thread::spawn(move || {
+            let mut client = WireClient::connect(&addr, T).expect("connect");
+            client
+                .send(&Request::new(
+                    11,
+                    RequestBody::Sweep {
+                        models: vec!["mobilenet-v2".into()],
+                        variants: variants.to_vec(),
+                        configs: SIZES.iter().map(|&s| ConfigPatch::sized(s)).collect(),
+                    },
+                ))
+                .expect("send sweep");
+            let mut rows = Vec::new();
+            loop {
+                match client.recv_frame(11).expect("frame") {
+                    Frame::Progress { .. } => {}
+                    Frame::Row(row) => rows.push(row),
+                    Frame::Final(result) => {
+                        assert_eq!(result, Ok(Reply::Done));
+                        break;
+                    }
+                }
+            }
+            rows
+        })
+    };
+    let threaded_rows = sweep(threaded_addr.clone()).join().expect("threaded sweep");
+    let epoll_rows = sweep(epoll_addr.clone()).join().expect("epoll sweep");
+    assert_eq!(threaded_rows, epoll_rows, "transports must agree cell-for-cell");
+    assert_rows_match(&epoll_rows, &serial_reference(&["mobilenet-v2"], &variants, &SIZES));
+
+    // shutdown over the epoll listener trips the shared latch: both exit
+    let mut client = WireClient::connect(&epoll_addr, Duration::from_secs(30)).expect("connect");
+    let resp = client
+        .roundtrip(&Request::new(u64::MAX, RequestBody::Shutdown))
+        .expect("shutdown ack");
+    assert_eq!(resp.result, Ok(Reply::Done));
+    drop(client);
+    epoll_handle.join().expect("epoll listener");
+    threaded_handle.join().expect("threaded listener released by the shared latch");
+}
