@@ -1,7 +1,7 @@
 #!/usr/bin/env python3
 """Validate a `fuseconv bench` report (BENCH_<n>.json).
 
-    python3 ci/check_bench.py BENCH_6.json [--min-rps-ratio 0.9]
+    python3 ci/check_bench.py BENCH_7.json [--min-rps-ratio 0.9] [--min-hit-rate 0.5]
 
 Checks, in order:
 
@@ -17,7 +17,12 @@ Checks, in order:
   * latency percentiles are present, finite, positive, and monotone
     (p50 <= p95 <= p99 <= p999 <= max);
   * the request ledger adds up (completed + unanswered <= sent is the
-    floor; completed alone must support the achieved-RPS figure).
+    floor; completed alone must support the achieved-RPS figure);
+  * when the report carries a `server.cache` section (a run against
+    `serve --cache-entries`), its counters are well-formed and its
+    `hit_rate` agrees with (hits + coalesced) / (hits + coalesced +
+    misses); `--min-hit-rate` additionally *requires* the section and
+    enforces a floor on the rate — the warm-cache trajectory gate.
 
 Exit code 0 on pass; 1 with a reason on the first failure.
 """
@@ -42,6 +47,14 @@ SCHEMA_KEYS = [
 ]
 REQUEST_KEYS = ["sent", "completed", "app_errors", "transport_errors", "unanswered"]
 LATENCY_KEYS = ["p50", "p95", "p99", "p999", "mean", "max"]
+CACHE_COUNTER_KEYS = [
+    "result_hits",
+    "result_misses",
+    "result_coalesced",
+    "result_evicted",
+    "result_entries",
+    "result_bytes",
+]
 
 
 def fail(msg: str) -> None:
@@ -66,6 +79,15 @@ def main() -> None:
         type=float,
         default=0.9,
         help="floor on achieved_rps / target_rps (default 0.9)",
+    )
+    ap.add_argument(
+        "--min-hit-rate",
+        type=float,
+        default=None,
+        help=(
+            "require a server.cache section and floor its hit_rate "
+            "(omit to only validate the section when present)"
+        ),
     )
     args = ap.parse_args()
 
@@ -113,11 +135,42 @@ def main() -> None:
         if values[lo] > values[hi]:
             fail(f"latency_ms.{lo} ({values[lo]}) > latency_ms.{hi} ({values[hi]})")
 
+    cache = (report.get("server") or {}).get("cache")
+    if args.min_hit_rate is not None and cache is None:
+        fail("--min-hit-rate given but the report has no server.cache section")
+    hit_rate = None
+    if cache is not None:
+        for key in CACHE_COUNTER_KEYS:
+            v = cache.get(key)
+            if not isinstance(v, int) or isinstance(v, bool) or v < 0:
+                fail(f"server.cache.{key} must be a nonnegative integer, got {v!r}")
+        if "hit_rate" not in cache:
+            fail("server.cache present but missing hit_rate")
+        hit_rate = cache["hit_rate"]
+        if not isinstance(hit_rate, (int, float)) or isinstance(hit_rate, bool):
+            fail(f"server.cache.hit_rate must be a number, got {hit_rate!r}")
+        hit_rate = float(hit_rate)
+        served = cache["result_hits"] + cache["result_coalesced"]
+        looked = served + cache["result_misses"]
+        derived = served / looked if looked else 0.0
+        # the report rounds to 4 decimals; anything past that is a bug
+        if abs(hit_rate - derived) > 5e-4:
+            fail(
+                f"server.cache.hit_rate {hit_rate} disagrees with its own "
+                f"counters ({derived:.4f})"
+            )
+        if args.min_hit_rate is not None and hit_rate < args.min_hit_rate:
+            fail(
+                f"cache hit_rate {hit_rate:.1%} is below the "
+                f"{args.min_hit_rate:.0%} floor"
+            )
+
+    cache_note = f", cache hit rate {hit_rate:.1%}" if hit_rate is not None else ""
     print(
         f"check_bench: OK: {achieved:.1f}/{target:.0f} rps ({ratio:.1%}) over "
         f"{report['connections']} conns on the {report['transport']} transport, "
         f"p50 {values['p50']:.2f} ms, p99 {values['p99']:.2f} ms, "
-        f"0 transport errors"
+        f"0 transport errors{cache_note}"
     )
 
 

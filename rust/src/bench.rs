@@ -213,7 +213,7 @@ pub fn cmd_bench(argv: &[String]) -> i32 {
         .opt("warmup-secs", "linear ramp to target rate, excluded from stats", Some("3"))
         .opt("mix", "op mix weights", Some("simulate=80,infer=10,sweep=10"))
         .opt("transport", "server transport label recorded in the report", Some("epoll"))
-        .opt("out", "write the JSON report here", Some("BENCH_6.json"));
+        .opt("out", "write the JSON report here", Some("BENCH_7.json"));
     let args = match cli.parse(argv) {
         Ok(a) => a,
         Err(e) => {
@@ -437,19 +437,40 @@ fn run_bench(mut opts: BenchOpts) -> Result<BenchReport, String> {
     code_pairs.sort_by_key(|(code, _)| *code);
 
     let server = match server_stats {
-        Some(s) => obj(vec![(
-            "gauges",
+        Some(s) => {
+            // result-cache effectiveness over the whole run (warmup
+            // included: the warmup IS what warms the cache)
+            let served = s.result_hits + s.result_coalesced;
+            let looked = served + s.result_misses;
+            let hit_rate = if looked == 0 { 0.0 } else { served as f64 / looked as f64 };
             obj(vec![
-                ("open_conns", Json::UInt(s.open_conns)),
-                ("active_streams", Json::UInt(s.active_streams)),
-                ("transport_threads", Json::UInt(s.transport_threads)),
-            ]),
-        )]),
+                (
+                    "gauges",
+                    obj(vec![
+                        ("open_conns", Json::UInt(s.open_conns)),
+                        ("active_streams", Json::UInt(s.active_streams)),
+                        ("transport_threads", Json::UInt(s.transport_threads)),
+                    ]),
+                ),
+                (
+                    "cache",
+                    obj(vec![
+                        ("result_hits", Json::UInt(s.result_hits)),
+                        ("result_misses", Json::UInt(s.result_misses)),
+                        ("result_coalesced", Json::UInt(s.result_coalesced)),
+                        ("result_evicted", Json::UInt(s.result_evicted)),
+                        ("result_entries", Json::UInt(s.result_entries)),
+                        ("result_bytes", Json::UInt(s.result_bytes)),
+                        ("hit_rate", Json::Num((hit_rate * 10_000.0).round() / 10_000.0)),
+                    ]),
+                ),
+            ])
+        }
         None => Json::Null,
     };
 
     let json = obj(vec![
-        ("bench", Json::UInt(6)),
+        ("bench", Json::UInt(7)),
         ("transport", Json::Str(opts.transport_label.clone())),
         ("target_rps", Json::Num(opts.rps)),
         ("achieved_rps", ms(achieved_rps)),

@@ -418,6 +418,25 @@ pub struct StatsReply {
     /// transport holds it at one per frontend — the observable
     /// O(threads) ≪ O(connections) claim.
     pub transport_threads: u64,
+    /// Global result cache: requests served from a completed entry.
+    /// The `result_*` fields describe the cross-request *result* cache
+    /// (`serve --cache-entries`); the `cache_*` fields above describe
+    /// the per-layer cache. Additive v2 fields (absent = 0 on the
+    /// wire); all six are summed by a shard front tier, so `entries`/
+    /// `bytes` read as fleet-wide residency.
+    pub result_hits: u64,
+    /// Global result cache: requests that simulated (single-flight
+    /// leaders).
+    pub result_misses: u64,
+    /// Global result cache: requests that coalesced onto another
+    /// request's in-flight simulation.
+    pub result_coalesced: u64,
+    /// Global result cache: entries retired by the LRU size bound.
+    pub result_evicted: u64,
+    /// Global result cache gauge: completed entries resident.
+    pub result_entries: u64,
+    /// Global result cache gauge: estimated bytes resident.
+    pub result_bytes: u64,
 }
 
 /// One zoo listing row.

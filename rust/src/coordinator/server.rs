@@ -42,8 +42,8 @@ use super::protocol::{
 use crate::exec::Pool;
 use crate::nn::models;
 use crate::sim::{
-    run_sweep, run_sweep_with, simulate_network_cached, CacheStats, FuseVariant, LayerCache,
-    SweepEvent, SweepOutcome, SweepPlan, SweepRecord,
+    run_sweep_coalesced, simulate_network_cached, CacheStats, FuseVariant, LayerCache,
+    ResultCache, ResultCacheStats, SweepEvent, SweepOutcome, SweepPlan, SweepRecord,
 };
 use crate::stats::Summary;
 use std::panic::{catch_unwind, AssertUnwindSafe};
@@ -439,6 +439,9 @@ pub struct SimServer {
     /// Interactive pool: `Simulate` point queries only.
     ipool: Arc<Pool>,
     cache: Arc<LayerCache>,
+    /// Optional cross-request result cache with single-flight dedup
+    /// (`serve --cache-entries`; `None` = every request simulates).
+    results: Option<Arc<ResultCache>>,
     interactive: Lane,
     batch: Lane,
     submitted: AtomicU64,
@@ -487,11 +490,31 @@ impl SimServer {
             pool,
             ipool,
             cache,
+            results: None,
             interactive: Lane::new(interactive),
             batch: Lane::new(batch),
             submitted: 0.into(),
             completed: Arc::new(AtomicU64::new(0)),
         }
+    }
+
+    /// Attach (or share) a cross-request [`ResultCache`]: `Simulate`
+    /// and per-cell `Sweep` lookups consult it before pool dispatch,
+    /// and concurrent identical scenarios coalesce onto one simulation.
+    pub fn with_result_cache(mut self, results: Arc<ResultCache>) -> SimServer {
+        self.results = Some(results);
+        self
+    }
+
+    /// The attached result cache, if any (shared with stats/tests).
+    pub fn result_cache(&self) -> Option<&Arc<ResultCache>> {
+        self.results.as_ref()
+    }
+
+    /// Result-cache counters (zeros when no cache is attached, so the
+    /// stats surface is uniform either way).
+    pub fn result_cache_stats(&self) -> ResultCacheStats {
+        self.results.as_ref().map(|r| r.stats()).unwrap_or_default()
     }
 
     /// The admission lane for a given request class — [`RequestBody::priority`]
@@ -507,7 +530,7 @@ impl SimServer {
     /// Run a whole sweep plan synchronously on the server's pool + cache
     /// (in-process callers; wire traffic goes through `Sweep` requests).
     pub fn sweep(&self, plan: &SweepPlan) -> SweepOutcome {
-        run_sweep(plan, &self.pool, &self.cache)
+        run_sweep_coalesced(plan, &self.pool, &self.cache, self.results.as_ref(), |_| {})
     }
 
     /// Scenario requests admitted since start.
@@ -528,6 +551,7 @@ impl SimServer {
     /// overlays them when an engine is attached).
     pub fn stats_reply(&self) -> StatsReply {
         let cs = self.cache_stats();
+        let rs = self.result_cache_stats();
         StatsReply {
             protocol_version: PROTOCOL_VERSION,
             infer_served: 0,
@@ -538,6 +562,12 @@ impl SimServer {
             cache_misses: cs.misses,
             cache_entries: cs.entries as u64,
             backends: 0,
+            result_hits: rs.hits,
+            result_misses: rs.misses,
+            result_coalesced: rs.coalesced,
+            result_evicted: rs.evicted,
+            result_entries: rs.entries,
+            result_bytes: rs.bytes,
             // transport gauges are overlaid by whoever mounts the
             // service behind a frontend (see Router::with_gauges)
             ..StatsReply::default()
@@ -559,6 +589,7 @@ impl Service for SimServer {
                 self.submitted.fetch_add(1, Ordering::Relaxed);
                 let (ticket, sink) = Ticket::pending(id);
                 let cache = Arc::clone(&self.cache);
+                let results = self.results.clone();
                 let inflight = Arc::clone(&lane.inflight);
                 let completed = Arc::clone(&self.completed);
                 // Dedicated interactive pool: never behind sweep cells.
@@ -566,7 +597,7 @@ impl Service for SimServer {
                     // Unwind guard: a panicking scenario must neither kill
                     // the pool worker nor leak its admission slot.
                     let result = catch_unwind(AssertUnwindSafe(|| {
-                        simulate_one(&model, variant, &config, deadline, &cache)
+                        simulate_one(&model, variant, &config, deadline, &cache, results.as_deref())
                     }))
                     .unwrap_or_else(|_| {
                         Err(ServeError::BadRequest("simulation panicked".into()))
@@ -588,6 +619,7 @@ impl Service for SimServer {
                 let (ticket, sink) = Ticket::pending(id);
                 let pool = Arc::clone(&self.pool);
                 let cache = Arc::clone(&self.cache);
+                let results = self.results.clone();
                 let inflight = Arc::clone(&lane.inflight);
                 let completed = Arc::clone(&self.completed);
                 // A sweep is a whole fork/join grid: run it from a fresh
@@ -598,7 +630,14 @@ impl Service for SimServer {
                     .spawn(move || {
                         let result = catch_unwind(AssertUnwindSafe(|| {
                             sweep_request(
-                                models, variants, configs, deadline, &pool, &cache, &sink,
+                                models,
+                                variants,
+                                configs,
+                                deadline,
+                                &pool,
+                                &cache,
+                                results.as_ref(),
+                                &sink,
                             )
                         }))
                         .unwrap_or_else(|_| {
@@ -630,12 +669,17 @@ impl Service for SimServer {
 }
 
 /// One `Simulate` scenario, start to finish (runs on a pool worker).
+/// With a result cache attached the scenario is looked up (and, when
+/// another request is already simulating it, coalesced onto that
+/// flight) before any simulator work; a follower whose deadline expires
+/// mid-wait answers `Deadline` like any other late request.
 fn simulate_one(
     model: &ModelSpec,
     variant: FuseVariant,
     config: &ConfigPatch,
     deadline: Option<Instant>,
     cache: &LayerCache,
+    results: Option<&ResultCache>,
 ) -> Result<SimSummary, ServeError> {
     if deadline.is_some_and(|d| Instant::now() > d) {
         return Err(ServeError::Deadline);
@@ -643,7 +687,13 @@ fn simulate_one(
     let net = model.resolve()?;
     let cfg = config.to_config()?;
     let realized = variant.apply(&net);
-    Ok(SimSummary::of(&simulate_network_cached(&realized, &cfg, cache)))
+    match results {
+        Some(rc) => match rc.simulate(&realized, &cfg, cache, deadline) {
+            Some(sim) => Ok(SimSummary::of(&sim)),
+            None => Err(ServeError::Deadline),
+        },
+        None => Ok(SimSummary::of(&simulate_network_cached(&realized, &cfg, cache))),
+    }
 }
 
 /// One grid cell as its wire row.
@@ -673,6 +723,7 @@ fn sweep_request(
     deadline: Option<Instant>,
     pool: &Pool,
     cache: &Arc<LayerCache>,
+    results: Option<&Arc<ResultCache>>,
     sink: &FrameSink,
 ) -> Result<Reply, ServeError> {
     if deadline.is_some_and(|d| Instant::now() > d) {
@@ -693,7 +744,7 @@ fn sweep_request(
     // Up-front progress frame: the client learns the grid size before
     // the first row lands (and even 1-cell grids stream ≥1 progress).
     sink.progress(0, plan.len() as u64);
-    run_sweep_with(&plan, pool, cache, |event| match event {
+    run_sweep_coalesced(&plan, pool, cache, results, |event| match event {
         SweepEvent::Progress { done, total } => {
             sink.progress(done as u64, total as u64);
         }

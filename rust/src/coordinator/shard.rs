@@ -431,6 +431,15 @@ fn aggregate_stats(
                 agg.cache_hits += s.cache_hits;
                 agg.cache_misses += s.cache_misses;
                 agg.cache_entries += s.cache_entries;
+                // global result cache: counters sum like the layer
+                // cache's; entries/bytes sum into fleet-wide residency
+                // (hash-pinned keys make per-backend caches disjoint)
+                agg.result_hits += s.result_hits;
+                agg.result_misses += s.result_misses;
+                agg.result_coalesced += s.result_coalesced;
+                agg.result_evicted += s.result_evicted;
+                agg.result_entries += s.result_entries;
+                agg.result_bytes += s.result_bytes;
             }
             _ => {
                 return Err(ServeError::BadRequest(

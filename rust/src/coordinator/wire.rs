@@ -1051,6 +1051,12 @@ fn reply_to_json(reply: &Reply) -> Json {
             ("open_conns", Json::UInt(s.open_conns)),
             ("active_streams", Json::UInt(s.active_streams)),
             ("transport_threads", Json::UInt(s.transport_threads)),
+            ("result_hits", Json::UInt(s.result_hits)),
+            ("result_misses", Json::UInt(s.result_misses)),
+            ("result_coalesced", Json::UInt(s.result_coalesced)),
+            ("result_evicted", Json::UInt(s.result_evicted)),
+            ("result_entries", Json::UInt(s.result_entries)),
+            ("result_bytes", Json::UInt(s.result_bytes)),
         ]),
         Reply::Zoo(entries) => obj(vec![
             ("kind", Json::Str("zoo".into())),
@@ -1113,6 +1119,14 @@ fn reply_from_json(v: &Json) -> Result<Reply, WireError> {
             open_conns: opt_u64(v, "open_conns")?.unwrap_or(0),
             active_streams: opt_u64(v, "active_streams")?.unwrap_or(0),
             transport_threads: opt_u64(v, "transport_threads")?.unwrap_or(0),
+            // additive v2 result-cache counters (PR 7); absent = old
+            // node or no cache attached
+            result_hits: opt_u64(v, "result_hits")?.unwrap_or(0),
+            result_misses: opt_u64(v, "result_misses")?.unwrap_or(0),
+            result_coalesced: opt_u64(v, "result_coalesced")?.unwrap_or(0),
+            result_evicted: opt_u64(v, "result_evicted")?.unwrap_or(0),
+            result_entries: opt_u64(v, "result_entries")?.unwrap_or(0),
+            result_bytes: opt_u64(v, "result_bytes")?.unwrap_or(0),
         }),
         "zoo" => Reply::Zoo(
             need_arr(v, "models")?
@@ -1427,6 +1441,12 @@ mod tests {
                 open_conns: 4,
                 active_streams: 1,
                 transport_threads: 2,
+                result_hits: 50,
+                result_misses: 9,
+                result_coalesced: 8,
+                result_evicted: 3,
+                result_entries: 6,
+                result_bytes: 48_000,
             }),
         ));
         rt_response(Response::ok(

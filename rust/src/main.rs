@@ -28,7 +28,7 @@ use fuseconv::nn::models;
 use fuseconv::nn::{fuse_all, Variant};
 use fuseconv::sim::{
     grid_configs, run_sweep, run_sweep_serial, simulate_network, Dataflow, FuseVariant,
-    LayerCache, SimConfig, SweepPlan,
+    LayerCache, ResultCache, SimConfig, SweepPlan,
 };
 
 fn main() {
@@ -83,7 +83,7 @@ fn print_help() {
          train       NOS pipeline on artifacts (--steps, --artifacts)\n  \
          serve       TCP + HTTP frontends  (--listen, --http-port, --engine mock|none|pjrt,\n              \
                      --transport threaded|epoll, --threads, --sim-capacity, --batch-capacity,\n              \
-                     --max-requests-per-conn, --queue, --port-file, --http-port-file)\n  \
+                     --cache-entries, --max-requests-per-conn, --queue, --port-file, --http-port-file)\n  \
          shard       multi-node front tier (--backends addr1,addr2,..., --listen, --http-port,\n              \
                      --transport threaded|epoll, --timeout-ms, --max-requests-per-conn,\n              \
                      --port-file, --http-port-file)\n  \
@@ -751,6 +751,7 @@ fn cmd_serve(argv: &[String]) -> i32 {
         .opt("threads", "simulation worker threads (0=auto)", Some("0"))
         .opt("sim-capacity", "interactive simulation admission lane bound (min 1)", Some("256"))
         .opt("batch-capacity", "batch (sweep) admission lane bound (min 1)", Some("32"))
+        .opt("cache-entries", "global result cache size (entries; 0 = off)", Some("0"))
         .opt("max-requests-per-conn", "per-connection request budget (0=unlimited)", Some("0"))
         .opt("queue", "bounded inference admission queue", Some("1024"))
         .opt("engine", "inference engine: mock | none | pjrt", Some("mock"))
@@ -786,12 +787,22 @@ fn cmd_serve(argv: &[String]) -> i32 {
                 return 2;
             }
         };
-    let sim = SimServer::with_lanes(
+    let cache_entries = match args.usize("cache-entries") {
+        Ok(ce) => ce,
+        Err(_) => {
+            eprintln!("bad numeric option\n{}", cli.usage());
+            return 2;
+        }
+    };
+    let mut sim = SimServer::with_lanes(
         threads,
         std::sync::Arc::new(LayerCache::new()),
         sim_capacity,
         batch_capacity,
     );
+    if cache_entries > 0 {
+        sim = sim.with_result_cache(std::sync::Arc::new(ResultCache::new(cache_entries)));
+    }
     let policy = BatchPolicy {
         max_batch,
         max_wait: std::time::Duration::from_millis(max_wait),

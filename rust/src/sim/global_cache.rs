@@ -1,0 +1,588 @@
+//! Cross-request global result cache with single-flight dedup.
+//!
+//! The [`LayerCache`] (in [`sweep`](super::sweep)) splits
+//! schedule-once/price-many *within* the process, but every request
+//! still re-assembles whole-network results from per-layer lookups.
+//! Production traffic is heavily repetitive — the same zoo models ×
+//! popular configs — so this cache memoizes the *finished*
+//! [`NetworkSim`] per (network identity, [`SimConfig::price_key`],
+//! frequency) and serves repeats without touching the simulator at all.
+//!
+//! Two properties distinguish it from a plain memo table:
+//!
+//! * **Size-bounded LRU.** Entries are sharded by key hash; each shard
+//!   holds a bounded number of completed results and evicts the least
+//!   recently used one when full, so the cache's residency is capped
+//!   regardless of traffic shape. Eviction and invalidation retract an
+//!   entry atomically — a retracted entry is never served again.
+//! * **Single-flight coalescing.** The first request for a missing key
+//!   becomes the *leader*: it simulates once and publishes the result.
+//!   Concurrent identical requests become *followers*: they block on
+//!   the leader's in-flight slot (bounded by their own deadline) and
+//!   receive the shared result, so N identical cells cost one
+//!   simulation. Followers never feed the leader's output stream —
+//!   each one re-emits frames through its own sink under its own
+//!   backpressure bound. A leader that unwinds (panicking scenario)
+//!   retracts its in-flight slot and wakes every follower, one of which
+//!   retries as the new leader — an abandoned flight can neither stall
+//!   followers nor leak its table slot.
+//!
+//! Keying: the network identity is a structural fingerprint (name +
+//! per-layer operator/geometry), not just the model name, so inline
+//! models that happen to share a name with a zoo entry can never alias.
+//! `price_key` already folds in every simulation-relevant config field
+//! except frequency; `freq_mhz` rides alongside because the cached
+//! value carries `latency_ms`.
+
+use super::config::SimConfig;
+use super::engine::{LayerSim, NetworkSim};
+use super::sweep::{simulate_network_cached, LayerCache};
+use crate::nn::Network;
+use std::collections::hash_map::DefaultHasher;
+use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+/// Cache key: structural network fingerprint × priced-config identity.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+struct ResultKey {
+    net: u64,
+    price: u64,
+    freq_mhz: u64,
+}
+
+impl ResultKey {
+    fn of(net: &Network, cfg: &SimConfig) -> ResultKey {
+        let mut h = DefaultHasher::new();
+        net.name.hash(&mut h);
+        net.layers.len().hash(&mut h);
+        for l in &net.layers {
+            l.op.hash(&mut h);
+            l.h.hash(&mut h);
+            l.w.hash(&mut h);
+        }
+        ResultKey { net: h.finish(), price: cfg.price_key(), freq_mhz: cfg.freq_mhz }
+    }
+}
+
+/// Counters and gauges of a [`ResultCache`] at a point in time. Counters
+/// (`hits`/`misses`/`coalesced`/`evicted`) are monotone; `entries` and
+/// `bytes` are gauges of current residency.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ResultCacheStats {
+    /// Requests served from a completed entry.
+    pub hits: u64,
+    /// Requests that became a leader and simulated.
+    pub misses: u64,
+    /// Requests that joined a leader's in-flight simulation.
+    pub coalesced: u64,
+    /// Entries retired by the LRU bound.
+    pub evicted: u64,
+    /// Completed entries currently resident.
+    pub entries: u64,
+    /// Estimated bytes of the resident entries.
+    pub bytes: u64,
+}
+
+impl ResultCacheStats {
+    /// Fraction of lookups that avoided a simulation (hit or coalesced).
+    pub fn hit_rate(&self) -> f64 {
+        let served = self.hits + self.coalesced;
+        let total = served + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            served as f64 / total as f64
+        }
+    }
+}
+
+/// The leader's publication slot: followers block here until the result
+/// lands (or the leader abandons the flight).
+#[derive(Debug)]
+struct Flight {
+    state: Mutex<FlightState>,
+    cv: Condvar,
+}
+
+#[derive(Debug)]
+enum FlightState {
+    Pending,
+    Done(Arc<NetworkSim>),
+    /// The leader unwound without publishing; a follower must retry.
+    Abandoned,
+}
+
+/// Outcome of waiting on a [`Flight`].
+enum Joined {
+    Done(Arc<NetworkSim>),
+    Abandoned,
+    Expired,
+}
+
+impl Flight {
+    fn new() -> Flight {
+        Flight { state: Mutex::new(FlightState::Pending), cv: Condvar::new() }
+    }
+
+    /// Block until the leader resolves the flight, bounded by `deadline`.
+    fn wait(&self, deadline: Option<Instant>) -> Joined {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            match &*st {
+                FlightState::Done(sim) => return Joined::Done(Arc::clone(sim)),
+                FlightState::Abandoned => return Joined::Abandoned,
+                FlightState::Pending => {}
+            }
+            match deadline {
+                None => st = self.cv.wait(st).unwrap(),
+                Some(d) => {
+                    let Some(left) = d.checked_duration_since(Instant::now()) else {
+                        return Joined::Expired;
+                    };
+                    st = self.cv.wait_timeout(st, left).unwrap().0;
+                }
+            }
+        }
+    }
+
+    /// Resolve the flight (first resolution wins) and wake all waiters.
+    fn resolve(&self, terminal: FlightState) {
+        let mut st = self.state.lock().unwrap();
+        if matches!(*st, FlightState::Pending) {
+            *st = terminal;
+        }
+        self.cv.notify_all();
+    }
+}
+
+/// One table slot: a completed result, or the leader currently
+/// producing one. In-flight slots do not count toward the LRU bound and
+/// are never evicted — they retire through publish or abandonment.
+enum Slot {
+    Ready { sim: Arc<NetworkSim>, bytes: u64, used: u64 },
+    InFlight(Arc<Flight>),
+}
+
+struct Shard {
+    map: HashMap<ResultKey, Slot>,
+    /// Per-shard LRU clock: bumped on every lookup, stamped into the
+    /// touched entry; eviction retires the minimum stamp.
+    clock: u64,
+}
+
+impl Shard {
+    fn ready_count(&self) -> usize {
+        self.map.values().filter(|s| matches!(s, Slot::Ready { .. })).count()
+    }
+}
+
+/// RAII claim on a missing key: the holder is the single flight's
+/// leader. [`LeaderGuard::publish`] installs the result; dropping the
+/// guard without publishing (unwind path) retracts the in-flight slot
+/// and wakes followers so one of them can retry.
+struct LeaderGuard<'a> {
+    cache: &'a ResultCache,
+    key: ResultKey,
+    flight: Arc<Flight>,
+    published: bool,
+}
+
+impl LeaderGuard<'_> {
+    fn publish(mut self, sim: Arc<NetworkSim>) {
+        self.published = true;
+        self.cache.install(self.key, &self.flight, Arc::clone(&sim));
+        self.flight.resolve(FlightState::Done(sim));
+    }
+}
+
+impl Drop for LeaderGuard<'_> {
+    fn drop(&mut self) {
+        if self.published {
+            return;
+        }
+        self.cache.retract(self.key, &self.flight);
+        self.flight.resolve(FlightState::Abandoned);
+    }
+}
+
+/// What a lookup found.
+enum Lookup<'a> {
+    Ready(Arc<NetworkSim>),
+    Lead(LeaderGuard<'a>),
+    Join(Arc<Flight>),
+}
+
+/// Sharded, size-bounded, single-flight global result cache. See the
+/// module docs for semantics; [`ResultCache::simulate`] is the one
+/// entry point the serving layer uses.
+pub struct ResultCache {
+    shards: Vec<Mutex<Shard>>,
+    /// Completed-entry bound per shard (in-flight slots excluded).
+    per_shard: usize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    coalesced: AtomicU64,
+    evicted: AtomicU64,
+    entries: AtomicU64,
+    bytes: AtomicU64,
+}
+
+/// Default shard count for [`ResultCache::new`].
+pub const DEFAULT_SHARDS: usize = 16;
+
+impl ResultCache {
+    /// A cache bounded to (at most) `capacity` completed entries,
+    /// spread over up to [`DEFAULT_SHARDS`] shards. `capacity` is
+    /// clamped to ≥ 1 — an unbounded or zero-sized cache is not a
+    /// configuration; callers gate "off" by not constructing one.
+    pub fn new(capacity: usize) -> ResultCache {
+        ResultCache::with_shards(capacity, DEFAULT_SHARDS)
+    }
+
+    /// Explicit shard count (tests pin `shards == 1` to observe exact
+    /// global LRU order). The per-shard bound is `capacity / shards`
+    /// (floored, ≥ 1, shards clamped to ≤ capacity), so total residency
+    /// never exceeds `capacity`.
+    pub fn with_shards(capacity: usize, shards: usize) -> ResultCache {
+        let capacity = capacity.max(1);
+        let shards = shards.clamp(1, capacity);
+        ResultCache {
+            shards: (0..shards)
+                .map(|_| Mutex::new(Shard { map: HashMap::new(), clock: 0 }))
+                .collect(),
+            per_shard: (capacity / shards).max(1),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            coalesced: AtomicU64::new(0),
+            evicted: AtomicU64::new(0),
+            entries: AtomicU64::new(0),
+            bytes: AtomicU64::new(0),
+        }
+    }
+
+    fn shard_of(&self, key: ResultKey) -> &Mutex<Shard> {
+        let mut h = DefaultHasher::new();
+        key.hash(&mut h);
+        &self.shards[(h.finish() as usize) % self.shards.len()]
+    }
+
+    /// Simulate `net` under `cfg` through the cache: a hit returns the
+    /// shared result, a miss simulates (through the shared layer cache)
+    /// and publishes, and a concurrent identical request coalesces onto
+    /// the in-flight leader. Returns `None` only when `deadline`
+    /// expired while waiting on another request's in-flight simulation
+    /// (never when this caller is the leader).
+    pub fn simulate(
+        &self,
+        net: &Network,
+        cfg: &SimConfig,
+        layers: &LayerCache,
+        deadline: Option<Instant>,
+    ) -> Option<Arc<NetworkSim>> {
+        let key = ResultKey::of(net, cfg);
+        loop {
+            match self.begin(key) {
+                Lookup::Ready(sim) => return Some(sim),
+                Lookup::Lead(guard) => {
+                    let sim = Arc::new(simulate_network_cached(net, cfg, layers));
+                    guard.publish(Arc::clone(&sim));
+                    return Some(sim);
+                }
+                Lookup::Join(flight) => match flight.wait(deadline) {
+                    Joined::Done(sim) => {
+                        self.coalesced.fetch_add(1, Ordering::Relaxed);
+                        return Some(sim);
+                    }
+                    // Leader unwound: loop back and retry (likely as
+                    // the new leader).
+                    Joined::Abandoned => continue,
+                    Joined::Expired => return None,
+                },
+            }
+        }
+    }
+
+    /// One lookup step: hit, lead, or join.
+    fn begin(&self, key: ResultKey) -> Lookup<'_> {
+        let mut s = self.shard_of(key).lock().unwrap();
+        s.clock += 1;
+        let now = s.clock;
+        match s.map.get_mut(&key) {
+            Some(Slot::Ready { sim, used, .. }) => {
+                *used = now;
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Lookup::Ready(Arc::clone(sim))
+            }
+            Some(Slot::InFlight(f)) => Lookup::Join(Arc::clone(f)),
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                let flight = Arc::new(Flight::new());
+                s.map.insert(key, Slot::InFlight(Arc::clone(&flight)));
+                Lookup::Lead(LeaderGuard { cache: self, key, flight, published: false })
+            }
+        }
+    }
+
+    /// Install a published result over its in-flight slot, then enforce
+    /// the shard's LRU bound. No-op if the slot was invalidated while
+    /// the flight ran (the waiting followers still get the result
+    /// through the flight itself — they asked before the invalidation —
+    /// but later lookups must re-simulate).
+    fn install(&self, key: ResultKey, flight: &Arc<Flight>, sim: Arc<NetworkSim>) {
+        let mut s = self.shard_of(key).lock().unwrap();
+        match s.map.get(&key) {
+            Some(Slot::InFlight(f)) if Arc::ptr_eq(f, flight) => {}
+            _ => return,
+        }
+        s.clock += 1;
+        let bytes = cost_of(&sim);
+        let used = s.clock;
+        s.map.insert(key, Slot::Ready { sim, bytes, used });
+        self.entries.fetch_add(1, Ordering::Relaxed);
+        self.bytes.fetch_add(bytes, Ordering::Relaxed);
+        while s.ready_count() > self.per_shard {
+            let oldest = s
+                .map
+                .iter()
+                .filter_map(|(k, slot)| match slot {
+                    Slot::Ready { used, .. } => Some((*used, *k)),
+                    Slot::InFlight(_) => None,
+                })
+                .min_by_key(|&(used, _)| used)
+                .map(|(_, k)| k)
+                .expect("ready_count > 0");
+            if let Some(Slot::Ready { bytes, .. }) = s.map.remove(&oldest) {
+                self.evicted.fetch_add(1, Ordering::Relaxed);
+                self.entries.fetch_sub(1, Ordering::Relaxed);
+                self.bytes.fetch_sub(bytes, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Remove the in-flight slot of an abandoned flight (only if it is
+    /// still *that* flight — an invalidation may already have cleared
+    /// it, or a later leader may occupy the key).
+    fn retract(&self, key: ResultKey, flight: &Arc<Flight>) {
+        let mut s = self.shard_of(key).lock().unwrap();
+        if matches!(s.map.get(&key), Some(Slot::InFlight(f)) if Arc::ptr_eq(f, flight)) {
+            s.map.remove(&key);
+        }
+    }
+
+    /// Drop the entry for (`net`, `cfg`), completed or in flight. A
+    /// retracted entry is never served to a later lookup.
+    pub fn invalidate(&self, net: &Network, cfg: &SimConfig) {
+        let key = ResultKey::of(net, cfg);
+        let mut s = self.shard_of(key).lock().unwrap();
+        if let Some(Slot::Ready { bytes, .. }) = s.map.remove(&key) {
+            self.entries.fetch_sub(1, Ordering::Relaxed);
+            self.bytes.fetch_sub(bytes, Ordering::Relaxed);
+        }
+    }
+
+    /// Drop every completed entry (in-flight leaders still publish to
+    /// their followers, but nothing re-enters the table for them).
+    pub fn clear(&self) {
+        for shard in &self.shards {
+            let mut s = shard.lock().unwrap();
+            s.map.retain(|_, slot| matches!(slot, Slot::InFlight(_)));
+        }
+        // Gauges rebuilt from scratch: everything Ready is gone.
+        self.entries.store(0, Ordering::Relaxed);
+        self.bytes.store(0, Ordering::Relaxed);
+    }
+
+    /// Counter/gauge snapshot.
+    pub fn stats(&self) -> ResultCacheStats {
+        ResultCacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            coalesced: self.coalesced.load(Ordering::Relaxed),
+            evicted: self.evicted.load(Ordering::Relaxed),
+            entries: self.entries.load(Ordering::Relaxed),
+            bytes: self.bytes.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Estimated heap residency of one cached result.
+fn cost_of(sim: &NetworkSim) -> u64 {
+    let layers: usize = sim
+        .layers
+        .iter()
+        .map(|l| std::mem::size_of::<LayerSim>() + l.name.len())
+        .sum();
+    (std::mem::size_of::<NetworkSim>() + sim.network.len() + sim.config_label.len() + layers)
+        as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::models;
+    use crate::sim::simulate_network;
+    use std::thread;
+    use std::time::Duration;
+
+    fn net(name: &str) -> Network {
+        models::by_name(name).unwrap()
+    }
+
+    #[test]
+    fn hit_returns_identical_result_without_resimulating() {
+        let rc = ResultCache::new(8);
+        let layers = LayerCache::new();
+        let n = net("mobilenet-v2");
+        let cfg = SimConfig::default();
+        let a = rc.simulate(&n, &cfg, &layers, None).unwrap();
+        let lc_before = layers.stats();
+        let b = rc.simulate(&n, &cfg, &layers, None).unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "hit must serve the resident result");
+        assert_eq!(layers.stats().hits, lc_before.hits, "hit must not touch the layer cache");
+        let direct = simulate_network(&n, &cfg);
+        assert_eq!(a.total_cycles, direct.total_cycles);
+        assert_eq!(a.latency_ms, direct.latency_ms);
+        let s = rc.stats();
+        assert_eq!((s.hits, s.misses, s.entries), (1, 1, 1));
+        assert!(s.bytes > 0);
+    }
+
+    #[test]
+    fn frequency_and_structure_are_part_of_the_key() {
+        let rc = ResultCache::new(8);
+        let layers = LayerCache::new();
+        let n = net("mobilenet-v2");
+        let base = SimConfig::default();
+        let slow = SimConfig { freq_mhz: 500, ..SimConfig::default() };
+        let a = rc.simulate(&n, &base, &layers, None).unwrap();
+        let b = rc.simulate(&n, &slow, &layers, None).unwrap();
+        assert_ne!(a.latency_ms, b.latency_ms, "freq-distinct configs must not alias");
+        // same name, different structure (inline-model aliasing guard)
+        let mut other = net("mobilenet-v3-small");
+        other.name = n.name.clone();
+        let c = rc.simulate(&other, &base, &layers, None).unwrap();
+        assert_ne!(a.total_cycles, c.total_cycles);
+        assert_eq!(rc.stats().misses, 3);
+    }
+
+    #[test]
+    fn lru_eviction_under_pressure_retires_oldest_first() {
+        // One shard: exact global LRU order is observable.
+        let rc = ResultCache::with_shards(2, 1);
+        let layers = LayerCache::new();
+        let n = net("mobilenet-v2");
+        let cfgs: Vec<SimConfig> =
+            [8, 16, 32].iter().map(|&s| SimConfig::with_size(s)).collect();
+        rc.simulate(&n, &cfgs[0], &layers, None).unwrap(); // A
+        rc.simulate(&n, &cfgs[1], &layers, None).unwrap(); // B
+        rc.simulate(&n, &cfgs[0], &layers, None).unwrap(); // touch A → B is LRU
+        rc.simulate(&n, &cfgs[2], &layers, None).unwrap(); // C evicts B
+        let s = rc.stats();
+        assert_eq!((s.entries, s.evicted), (2, 1));
+        let before = rc.stats();
+        rc.simulate(&n, &cfgs[0], &layers, None).unwrap(); // A survived
+        assert_eq!(rc.stats().hits, before.hits + 1);
+        rc.simulate(&n, &cfgs[1], &layers, None).unwrap(); // B was evicted
+        assert_eq!(rc.stats().misses, before.misses + 1);
+        // the bound held throughout
+        assert!(rc.stats().entries <= 2);
+    }
+
+    #[test]
+    fn invalidated_entry_is_never_served_again() {
+        let rc = ResultCache::new(8);
+        let layers = LayerCache::new();
+        let n = net("mobilenet-v3-small");
+        let cfg = SimConfig::default();
+        rc.simulate(&n, &cfg, &layers, None).unwrap();
+        assert_eq!(rc.stats().entries, 1);
+        rc.invalidate(&n, &cfg);
+        let s = rc.stats();
+        assert_eq!((s.entries, s.bytes), (0, 0));
+        rc.simulate(&n, &cfg, &layers, None).unwrap();
+        assert_eq!(rc.stats().misses, 2, "post-invalidation lookup must re-simulate");
+        rc.clear();
+        assert_eq!(rc.stats().entries, 0);
+        rc.simulate(&n, &cfg, &layers, None).unwrap();
+        assert_eq!(rc.stats().misses, 3);
+    }
+
+    #[test]
+    fn single_flight_coalesces_concurrent_identical_requests() {
+        // Drive the leader/follower protocol deterministically: take the
+        // leader guard by hand, park followers, then publish.
+        let rc = Arc::new(ResultCache::new(8));
+        let layers = Arc::new(LayerCache::new());
+        let n = Arc::new(net("mobilenet-v3-small"));
+        let cfg = SimConfig::default();
+        let key = ResultKey::of(&n, &cfg);
+        let Lookup::Lead(guard) = rc.begin(key) else { panic!("first lookup must lead") };
+        let followers: Vec<_> = (0..4)
+            .map(|_| {
+                let (rc, layers, n) = (Arc::clone(&rc), Arc::clone(&layers), Arc::clone(&n));
+                let cfg = cfg.clone();
+                thread::spawn(move || rc.simulate(&n, &cfg, &layers, None).unwrap())
+            })
+            .collect();
+        // Followers are blocked on the flight; nobody simulates.
+        thread::sleep(Duration::from_millis(50));
+        assert_eq!(layers.stats().misses, 0, "a follower simulated past the leader");
+        let sim = Arc::new(simulate_network_cached(&n, &cfg, &layers));
+        guard.publish(Arc::clone(&sim));
+        for f in followers {
+            let got = f.join().unwrap();
+            assert!(Arc::ptr_eq(&got, &sim), "follower must get the leader's result");
+        }
+        let s = rc.stats();
+        assert_eq!(s.misses, 1, "exactly one leader");
+        assert_eq!(s.hits + s.coalesced, 4, "every follower served without simulating");
+    }
+
+    #[test]
+    fn abandoned_leader_wakes_followers_and_a_retry_succeeds() {
+        let rc = Arc::new(ResultCache::new(8));
+        let layers = Arc::new(LayerCache::new());
+        let n = Arc::new(net("mobilenet-v3-small"));
+        let cfg = SimConfig::default();
+        let key = ResultKey::of(&n, &cfg);
+        let guard = match rc.begin(key) {
+            Lookup::Lead(g) => g,
+            _ => panic!("first lookup must lead"),
+        };
+        let follower = {
+            let (rc, layers, n) = (Arc::clone(&rc), Arc::clone(&layers), Arc::clone(&n));
+            let cfg = cfg.clone();
+            thread::spawn(move || rc.simulate(&n, &cfg, &layers, None).unwrap())
+        };
+        thread::sleep(Duration::from_millis(30));
+        drop(guard); // leader dies without publishing
+        let got = follower.join().unwrap();
+        let direct = simulate_network(&n, &cfg);
+        assert_eq!(got.total_cycles, direct.total_cycles);
+        // the follower retried as the new leader — no leaked flight
+        assert_eq!(rc.stats().misses, 2);
+        assert_eq!(rc.stats().entries, 1);
+    }
+
+    #[test]
+    fn follower_deadline_expires_without_stalling() {
+        let rc = Arc::new(ResultCache::new(8));
+        let n = net("mobilenet-v3-small");
+        let cfg = SimConfig::default();
+        let key = ResultKey::of(&n, &cfg);
+        let guard = match rc.begin(key) {
+            Lookup::Lead(g) => g,
+            _ => panic!("lead"),
+        };
+        let layers = LayerCache::new();
+        let deadline = Some(Instant::now() + Duration::from_millis(40));
+        assert!(
+            rc.simulate(&n, &cfg, &layers, deadline).is_none(),
+            "an expired follower must report the deadline, not block"
+        );
+        drop(guard);
+    }
+}

@@ -7,6 +7,7 @@ pub mod config;
 pub mod engine;
 pub mod fold;
 pub mod gemm;
+pub mod global_cache;
 pub mod memory;
 pub mod stos;
 pub mod sweep;
@@ -14,7 +15,9 @@ pub mod trace;
 
 pub use config::{Dataflow, MappingPolicy, SimConfig};
 pub use engine::{price_layer, simulate_layer, simulate_network, LayerSim, NetworkSim};
+pub use global_cache::{ResultCache, ResultCacheStats};
 pub use sweep::{
-    grid_configs, run_sweep, run_sweep_serial, run_sweep_with, simulate_network_cached,
-    CacheStats, FuseVariant, LayerCache, SweepEvent, SweepOutcome, SweepPlan, SweepRecord,
+    grid_configs, run_sweep, run_sweep_coalesced, run_sweep_serial, run_sweep_with,
+    simulate_network_cached, CacheStats, FuseVariant, LayerCache, SweepEvent, SweepOutcome,
+    SweepPlan, SweepRecord,
 };

@@ -42,6 +42,7 @@
 use super::config::{Dataflow, SimConfig};
 use super::engine::{price_layer, schedule_layer, simulate_network, LayerSim, NetworkSim};
 use super::fold::FoldSet;
+use super::global_cache::ResultCache;
 use crate::exec::Pool;
 use crate::nn::{fuse_all, Layer, Network, OpKind, Variant};
 use std::collections::HashMap;
@@ -452,6 +453,27 @@ pub fn run_sweep_with<F>(
     plan: &SweepPlan,
     pool: &Pool,
     cache: &Arc<LayerCache>,
+    on_event: F,
+) -> SweepOutcome
+where
+    F: FnMut(SweepEvent<'_>),
+{
+    run_sweep_coalesced(plan, pool, cache, None, on_event)
+}
+
+/// [`run_sweep_with`], with each cell additionally routed through an
+/// optional cross-request [`ResultCache`]: a cell whose (network,
+/// priced-config) result is already resident costs a lookup instead of
+/// a simulation, and a cell identical to one *currently simulating*
+/// anywhere in the process coalesces onto that single flight. Rows
+/// still stream in plan order through this sweep's own reorder buffer
+/// and sink — a coalesced cell re-emits under this caller's
+/// backpressure bound, never the leader's.
+pub fn run_sweep_coalesced<F>(
+    plan: &SweepPlan,
+    pool: &Pool,
+    cache: &Arc<LayerCache>,
+    results: Option<&Arc<ResultCache>>,
     mut on_event: F,
 ) -> SweepOutcome
 where
@@ -469,14 +491,25 @@ where
     let realized = Arc::new(realized);
     let configs = Arc::new(plan.configs.clone());
     let (rtx, rrx) = std::sync::mpsc::channel::<(usize, NetworkSim)>();
+    let results = results.map(Arc::clone);
     for i in 0..total {
         let realized = Arc::clone(&realized);
         let configs = Arc::clone(&configs);
         let cache_ref = Arc::clone(cache);
+        let results = results.clone();
         let rtx = rtx.clone();
         pool.spawn(move || {
             let (nv, c) = (i / configs.len(), i % configs.len());
-            let sim = simulate_network_cached(&realized[nv], &configs[c], &cache_ref);
+            let sim = match &results {
+                // No per-cell deadline: an admitted grid runs to
+                // completion, so a follower waits out its leader and
+                // the expiry path is unreachable.
+                Some(rc) => (*rc
+                    .simulate(&realized[nv], &configs[c], &cache_ref, None)
+                    .expect("deadline-free single-flight wait cannot expire"))
+                .clone(),
+                None => simulate_network_cached(&realized[nv], &configs[c], &cache_ref),
+            };
             // Receiver outlives all jobs within this call; a send failure
             // would mean the coordinator returned early (it can't).
             let _ = rtx.send((i, sim));

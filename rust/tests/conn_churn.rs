@@ -22,10 +22,10 @@
 
 use fuseconv::coordinator::batcher::BatchPolicy;
 use fuseconv::coordinator::{
-    request_once, ConfigPatch, HttpServer, MockEngine, Reply, Request, RequestBody, Router,
-    ServeError, Server, SimServer, Transport, TransportGauges, WireClient, WireServer,
+    request_once, ConfigPatch, Frame, HttpServer, MockEngine, Reply, Request, RequestBody,
+    Router, ServeError, Server, SimServer, Transport, TransportGauges, WireClient, WireServer,
 };
-use fuseconv::sim::{FuseVariant, LayerCache};
+use fuseconv::sim::{FuseVariant, LayerCache, ResultCache};
 use std::io::{Read, Write};
 use std::net::TcpStream;
 use std::sync::{Arc, Barrier};
@@ -287,9 +287,120 @@ fn disconnect_frees_stream_slot(transport: Transport) {
     handle.join().expect("listener");
 }
 
+/// Result-cache churn regression: a follower that vanishes while
+/// coalesced onto another request's in-flight simulation must neither
+/// stall the single-flight leader nor leak the in-flight cache entry.
+/// Half of K identical concurrent sweeps disconnect right after their
+/// up-front progress frame; the survivors still drain complete row
+/// streams, the gauges quiesce, the miss ledger stays exact (each
+/// unique cell simulated once), and a later probe sweep is served from
+/// the published entries.
+fn follower_disconnect_mid_coalesce(transport: Transport) {
+    let results = Arc::new(ResultCache::new(64));
+    let sim = SimServer::with_capacity(2, Arc::new(LayerCache::new()), 256)
+        .with_result_cache(Arc::clone(&results));
+    let gauges = TransportGauges::new();
+    let router = Arc::new(
+        Router::new(sim)
+            .with_engine(Server::start(
+                MockEngine::new(4, 2, 8),
+                BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(2) },
+            ))
+            .with_gauges(gauges.clone()),
+    );
+    let server = WireServer::bind("127.0.0.1:0", router)
+        .expect("bind")
+        .with_transport(transport)
+        .with_gauges(gauges.clone());
+    let addr = server.local_addr().to_string();
+    let handle = thread::spawn(move || server.run().expect("run"));
+
+    const K: u64 = 8;
+    const CELLS: u64 = 4; // small_sweep: 1 model × 2 variants × 2 sizes
+    let hold = Arc::new(Barrier::new(K as usize));
+    let workers: Vec<_> = (0..K)
+        .map(|i| {
+            let addr = addr.clone();
+            let hold = Arc::clone(&hold);
+            thread::spawn(move || {
+                let mut client = WireClient::connect(&addr, T).expect("connect");
+                client.send(&small_sweep(i)).expect("send sweep");
+                // the up-front progress frame: the sweep is provably live
+                assert!(!client.recv_frame(i).expect("first frame").is_final());
+                hold.wait();
+                if i % 2 == 0 {
+                    drop(client); // follower vanishes mid-coalesce
+                    return 0;
+                }
+                let mut rows: u64 = 0;
+                loop {
+                    match client.recv_frame(i).expect("frame") {
+                        Frame::Row(_) => rows += 1,
+                        Frame::Progress { .. } => {}
+                        Frame::Final(result) => {
+                            assert_eq!(result, Ok(Reply::Done));
+                            return rows;
+                        }
+                    }
+                }
+            })
+        })
+        .collect();
+    for (i, w) in workers.into_iter().enumerate() {
+        let rows = w.join().expect("sweep worker");
+        if i % 2 == 1 {
+            assert_eq!(rows, CELLS, "survivors must drain their full streams");
+        }
+    }
+    // the vanished followers' server-side sweeps drain on their own
+    wait_until("disconnected followers to quiesce", || {
+        gauges.open_conns() == 0 && gauges.active_streams() == 0
+    });
+    // K sweeps × 4 cells = 32 lookups; wait for the last detached sweep
+    // thread, then the single-flight ledger must be exact
+    wait_until("every server-side sweep to finish", || {
+        let s = results.stats();
+        s.hits + s.coalesced >= (K - 1) * CELLS
+    });
+    let s = results.stats();
+    assert_eq!(s.misses, CELLS, "each unique cell simulated exactly once");
+    assert_eq!(s.hits + s.coalesced, (K - 1) * CELLS);
+    assert_eq!(s.entries, CELLS, "no abandoned in-flight entry may leak");
+
+    // the leader really published despite its dead followers: a fresh
+    // probe is served from cache without a single new simulation
+    let mut probe = WireClient::connect(&addr, T).expect("connect");
+    match probe.roundtrip(&small_sweep(99)).expect("probe sweep").result {
+        Ok(Reply::Sweep(rows)) => assert_eq!(rows.len(), CELLS as usize),
+        other => panic!("probe sweep: unexpected {other:?}"),
+    }
+    let after = results.stats();
+    assert_eq!(after.misses, CELLS, "the probe must not re-simulate");
+    assert_eq!(after.hits + after.coalesced, K * CELLS);
+    drop(probe);
+
+    let mut client = WireClient::connect(&addr, Duration::from_secs(30)).expect("connect");
+    let resp = client
+        .roundtrip(&Request::new(u64::MAX, RequestBody::Shutdown))
+        .expect("shutdown");
+    assert_eq!(resp.result, Ok(Reply::Done));
+    handle.join().expect("listener");
+}
+
 #[test]
 fn threaded_tcp_churn_returns_gauges_to_baseline() {
     tcp_churn(Transport::Threaded);
+}
+
+#[test]
+fn threaded_follower_disconnect_mid_coalesce_never_stalls() {
+    follower_disconnect_mid_coalesce(Transport::Threaded);
+}
+
+#[cfg(target_os = "linux")]
+#[test]
+fn epoll_follower_disconnect_mid_coalesce_never_stalls() {
+    follower_disconnect_mid_coalesce(Transport::Epoll);
 }
 
 #[test]

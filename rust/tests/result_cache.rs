@@ -1,0 +1,265 @@
+//! Global result cache, end to end over the wire frontend:
+//!
+//! * K concurrent identical sweeps through one listener simulate each
+//!   grid cell exactly once (single-flight dedup, proven by the cache's
+//!   own miss counter — a miss IS a simulation), while every client
+//!   still receives its own complete, plan-ordered row stream;
+//! * every client's rows are identical to each other and to a local
+//!   serial sweep of the same grid (a cache hit may change latency,
+//!   never rows);
+//! * `Simulate` point queries and per-cell `Sweep` lookups share one
+//!   cache — a point query warms the sweep path and vice versa;
+//! * the `result_*` counters render in wire `stats` replies, and stay
+//!   zeroed on a server running without `--cache-entries`.
+
+use fuseconv::coordinator::batcher::BatchPolicy;
+use fuseconv::coordinator::{
+    ConfigPatch, Frame, MockEngine, ModelSpec, Reply, Request, RequestBody, Router, Server,
+    SimServer, SweepRow, WireClient, WireServer,
+};
+use fuseconv::nn::models;
+use fuseconv::sim::{
+    run_sweep_serial, FuseVariant, LayerCache, ResultCache, SimConfig, SweepPlan,
+};
+use std::sync::{Arc, Barrier};
+use std::thread;
+use std::time::Duration;
+
+const T: Duration = Duration::from_secs(300);
+
+/// Frontend with a result cache attached; the cache handle stays with
+/// the test so counters can be asserted directly.
+fn start_cached_frontend(entries: usize) -> (String, thread::JoinHandle<()>, Arc<ResultCache>) {
+    let results = Arc::new(ResultCache::new(entries));
+    let sim = SimServer::with_capacity(2, Arc::new(LayerCache::new()), 256)
+        .with_result_cache(Arc::clone(&results));
+    let router = Router::new(sim).with_engine(Server::start(
+        MockEngine::new(4, 2, 8),
+        BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(2) },
+    ));
+    let server = WireServer::bind("127.0.0.1:0", Arc::new(router)).expect("bind ephemeral");
+    let addr = server.local_addr().to_string();
+    let handle = thread::spawn(move || server.run().expect("frontend run"));
+    (addr, handle, results)
+}
+
+fn shutdown_frontend(addr: &str, handle: thread::JoinHandle<()>) {
+    let mut client = WireClient::connect(addr, Duration::from_secs(30)).expect("connect");
+    let resp = client
+        .roundtrip(&Request::new(u64::MAX, RequestBody::Shutdown))
+        .expect("shutdown ack");
+    assert_eq!(resp.result, Ok(Reply::Done));
+    handle.join().expect("listener thread");
+}
+
+/// The one grid every test in this file sweeps: 1 model × 2 variants ×
+/// 2 sizes = 4 cells.
+const GRID_CELLS: usize = 4;
+
+fn grid_sweep(id: u64) -> Request {
+    Request::new(
+        id,
+        RequestBody::Sweep {
+            models: vec!["mobilenet-v3-small".into()],
+            variants: vec![FuseVariant::Base, FuseVariant::Half],
+            configs: vec![ConfigPatch::sized(8), ConfigPatch::sized(16)],
+        },
+    )
+}
+
+/// Drain one request's stream: plan-ordered rows plus its Final.
+fn collect_rows(client: &mut WireClient, id: u64) -> Vec<SweepRow> {
+    let mut rows = Vec::new();
+    loop {
+        match client.recv_frame(id).expect("stream frame") {
+            Frame::Progress { done, total } => {
+                assert_eq!(total as usize, GRID_CELLS);
+                assert!(done <= total);
+            }
+            Frame::Row(row) => rows.push(row),
+            Frame::Final(result) => {
+                assert_eq!(result, Ok(Reply::Done));
+                return rows;
+            }
+        }
+    }
+}
+
+/// Rows must equal the serial local sweep of the same grid, cell for
+/// cell and in plan order (floats compared exactly).
+fn assert_rows_are_canonical(rows: &[SweepRow]) {
+    let reference = run_sweep_serial(&SweepPlan::new(
+        vec![models::by_name("mobilenet-v3-small").unwrap()],
+        vec![FuseVariant::Base, FuseVariant::Half],
+        vec![SimConfig::with_size(8), SimConfig::with_size(16)],
+    ));
+    assert_eq!(rows.len(), reference.records().len());
+    for (row, rec) in rows.iter().zip(reference.records()) {
+        assert_eq!(row.network, rec.network);
+        assert_eq!(row.variant, rec.variant);
+        assert_eq!(row.total_cycles, rec.total_cycles());
+        assert_eq!(row.latency_ms.to_bits(), rec.latency_ms().to_bits());
+    }
+}
+
+#[test]
+fn concurrent_identical_sweeps_simulate_each_cell_exactly_once() {
+    let (addr, handle, results) = start_cached_frontend(64);
+
+    // K identical sweeps released together: whatever the interleaving,
+    // each of the 4 unique cells may simulate only once — every other
+    // lookup must resolve as a hit (entry already published) or a
+    // coalesce (joined the leader's in-flight simulation).
+    const K: usize = 6;
+    let release = Arc::new(Barrier::new(K));
+    let clients: Vec<_> = (0..K as u64)
+        .map(|i| {
+            let addr = addr.clone();
+            let release = Arc::clone(&release);
+            thread::spawn(move || {
+                let mut client = WireClient::connect(&addr, T).expect("connect");
+                release.wait();
+                client.send(&grid_sweep(i)).expect("send sweep");
+                collect_rows(&mut client, i)
+            })
+        })
+        .collect();
+    let all_rows: Vec<Vec<SweepRow>> =
+        clients.into_iter().map(|c| c.join().expect("sweep client")).collect();
+
+    // every client got its own full plan-ordered stream...
+    for rows in &all_rows {
+        assert_rows_are_canonical(rows);
+    }
+    // ...and the streams are identical to each other
+    for rows in &all_rows[1..] {
+        assert_eq!(rows, &all_rows[0], "coalesced streams must be identical");
+    }
+
+    let s = results.stats();
+    assert_eq!(
+        s.misses as usize, GRID_CELLS,
+        "each unique cell simulates exactly once across all {K} sweeps"
+    );
+    assert_eq!(
+        (s.hits + s.coalesced) as usize,
+        (K - 1) * GRID_CELLS,
+        "every other lookup is served without simulating"
+    );
+    assert_eq!(s.entries as usize, GRID_CELLS);
+    assert!(s.bytes > 0);
+
+    shutdown_frontend(&addr, handle);
+}
+
+#[test]
+fn point_queries_and_sweep_cells_share_one_cache() {
+    let (addr, handle, results) = start_cached_frontend(64);
+    let mut client = WireClient::connect(&addr, T).expect("connect");
+
+    // a Simulate point query warms the cache...
+    let scenario = RequestBody::Simulate {
+        model: ModelSpec::Zoo("mobilenet-v2".into()),
+        variant: FuseVariant::Half,
+        config: ConfigPatch::sized(8),
+    };
+    let first = client.roundtrip(&Request::new(1, scenario.clone())).expect("simulate");
+    let cycles = match first.result {
+        Ok(Reply::Sim(s)) => s.total_cycles,
+        other => panic!("unexpected {other:?}"),
+    };
+    assert_eq!(results.stats().misses, 1);
+
+    // ...a one-cell sweep of the same scenario is a hit, not a miss...
+    client
+        .send(&Request::new(
+            2,
+            RequestBody::Sweep {
+                models: vec!["mobilenet-v2".into()],
+                variants: vec![FuseVariant::Half],
+                configs: vec![ConfigPatch::sized(8)],
+            },
+        ))
+        .expect("send sweep");
+    let mut rows = Vec::new();
+    loop {
+        match client.recv_frame(2).expect("frame") {
+            Frame::Row(row) => rows.push(row),
+            Frame::Final(result) => {
+                assert_eq!(result, Ok(Reply::Done));
+                break;
+            }
+            Frame::Progress { .. } => {}
+        }
+    }
+    assert_eq!(rows.len(), 1);
+    assert_eq!(rows[0].total_cycles, cycles, "hit must serve the identical result");
+
+    // ...and the repeat point query hits the same entry
+    let again = client.roundtrip(&Request::new(3, scenario)).expect("simulate again");
+    assert!(again.is_ok());
+    let s = results.stats();
+    assert_eq!((s.misses, s.hits, s.entries), (1, 2, 1));
+
+    drop(client);
+    shutdown_frontend(&addr, handle);
+}
+
+#[test]
+fn result_counters_render_in_wire_stats() {
+    let (addr, handle, _results) = start_cached_frontend(64);
+    let mut client = WireClient::connect(&addr, T).expect("connect");
+
+    // cold pass simulates the grid, warm pass is served from cache
+    client.send(&grid_sweep(1)).expect("send cold sweep");
+    collect_rows(&mut client, 1);
+    client.send(&grid_sweep(2)).expect("send warm sweep");
+    collect_rows(&mut client, 2);
+
+    let resp = client.roundtrip(&Request::new(3, RequestBody::Stats)).expect("stats");
+    match resp.result {
+        Ok(Reply::Stats(s)) => {
+            assert_eq!(s.result_misses as usize, GRID_CELLS);
+            assert_eq!(s.result_hits as usize, GRID_CELLS);
+            assert_eq!(s.result_coalesced, 0, "sequential sweeps never coalesce");
+            assert_eq!(s.result_evicted, 0);
+            assert_eq!(s.result_entries as usize, GRID_CELLS);
+            assert!(s.result_bytes > 0);
+        }
+        other => panic!("unexpected {other:?}"),
+    }
+
+    drop(client);
+    shutdown_frontend(&addr, handle);
+}
+
+#[test]
+fn uncached_server_reports_zeroed_result_counters() {
+    // no --cache-entries → the additive fields exist but never move
+    let sim = SimServer::with_capacity(2, Arc::new(LayerCache::new()), 256);
+    let router = Router::new(sim).with_engine(Server::start(
+        MockEngine::new(4, 2, 8),
+        BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(2) },
+    ));
+    let server = WireServer::bind("127.0.0.1:0", Arc::new(router)).expect("bind");
+    let addr = server.local_addr().to_string();
+    let handle = thread::spawn(move || server.run().expect("run"));
+
+    let mut client = WireClient::connect(&addr, T).expect("connect");
+    client.send(&grid_sweep(1)).expect("send sweep");
+    collect_rows(&mut client, 1);
+    let resp = client.roundtrip(&Request::new(2, RequestBody::Stats)).expect("stats");
+    match resp.result {
+        Ok(Reply::Stats(s)) => {
+            assert_eq!(
+                (s.result_hits, s.result_misses, s.result_coalesced, s.result_entries),
+                (0, 0, 0, 0),
+                "a cacheless server must report zeroed result counters"
+            );
+        }
+        other => panic!("unexpected {other:?}"),
+    }
+
+    drop(client);
+    shutdown_frontend(&addr, handle);
+}

@@ -27,7 +27,8 @@ use fuseconv::coordinator::{
 };
 use fuseconv::nn::models;
 use fuseconv::sim::{
-    run_sweep_serial, simulate_network, FuseVariant, LayerCache, SimConfig, SweepPlan,
+    run_sweep_serial, simulate_network, FuseVariant, LayerCache, ResultCache, SimConfig,
+    SweepPlan,
 };
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::TcpStream;
@@ -486,6 +487,53 @@ fn keep_alive_budget_answers_429_and_closes() {
 }
 
 #[test]
+fn http_stats_render_result_cache_counters() {
+    // `request --op stats`-equivalent over HTTP: a cache-enabled server
+    // renders the additive result_* fields, with values matching a
+    // cold-then-warm pair of identical sweeps.
+    let results = Arc::new(ResultCache::new(64));
+    let sim = SimServer::with_lanes(2, Arc::new(LayerCache::new()), 64, 32)
+        .with_result_cache(Arc::clone(&results));
+    let router = Arc::new(Router::new(sim).with_engine(Server::start(
+        MockEngine::new(4, 2, 8),
+        BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(2) },
+    )));
+    let (addr, handle) = start_http(router);
+
+    let body =
+        sweep_body(&["mobilenet-v3-small"], &[FuseVariant::Base, FuseVariant::Half], &[8, 16]);
+    for _ in 0..2 {
+        let resp = http_sse(&addr, "/v1/sweep", &body, None, T, |_, _| {}).expect("sweep");
+        assert!(resp.is_ok(), "{resp:?}");
+    }
+
+    let reply = http_call(&addr, "/v1/stats", None, None, T).expect("stats");
+    assert_eq!(reply.status, 200, "{}", reply.body);
+    // raw rendering: every additive field is spelled out in the JSON
+    for field in [
+        "result_hits",
+        "result_misses",
+        "result_coalesced",
+        "result_evicted",
+        "result_entries",
+        "result_bytes",
+    ] {
+        assert!(reply.body.contains(field), "stats body must render {field}: {}", reply.body);
+    }
+    match reply.response().unwrap().result {
+        Ok(Reply::Stats(s)) => {
+            assert_eq!(s.result_misses, 4, "cold pass simulates the 4-cell grid");
+            assert_eq!(s.result_hits, 4, "warm pass is served from cache");
+            assert_eq!(s.result_entries, 4);
+            assert!(s.result_bytes > 0);
+        }
+        other => panic!("expected stats, got {other:?}"),
+    }
+
+    shutdown_http(&addr, handle);
+}
+
+#[test]
 fn protocol_md_documents_the_wire_contract() {
     // Acceptance: the spec must name every ServeError code, every Frame
     // tag, and the HTTP status each error maps to. Enumerated from the
@@ -554,6 +602,23 @@ fn protocol_md_documents_the_wire_contract() {
         "`active_streams`",
         "`transport_threads`",
         "fuseconv bench",
+    ] {
+        assert!(spec.contains(needle), "PROTOCOL.md must cover {needle:?}");
+    }
+    // the global result cache section: keying, single-flight
+    // coalescing, shard locality, and every result_* stats field
+    for needle in [
+        "Global result cache",
+        "--cache-entries",
+        "single-flight",
+        "coalesc",
+        "price_key",
+        "`result_hits`",
+        "`result_misses`",
+        "`result_coalesced`",
+        "`result_evicted`",
+        "`result_entries`",
+        "`result_bytes`",
     ] {
         assert!(spec.contains(needle), "PROTOCOL.md must cover {needle:?}");
     }

@@ -26,7 +26,7 @@ use fuseconv::coordinator::{
 };
 use fuseconv::nn::models;
 use fuseconv::sim::{
-    run_sweep_serial, simulate_network, FuseVariant, SimConfig, SweepPlan,
+    run_sweep_serial, simulate_network, FuseVariant, ResultCache, SimConfig, SweepPlan,
 };
 use std::net::TcpListener;
 use std::sync::Arc;
@@ -251,6 +251,91 @@ fn sharded_simulate_matches_direct_and_stats_aggregate() {
     h2.join().expect("backend 2");
     let resp = shard.call(Request::new(102, RequestBody::Stats)).wait_deadline(T);
     assert_eq!(resp.result, Err(ServeError::Shutdown), "latched after shutdown");
+}
+
+/// Like [`start_backend`], with a per-node global result cache — what
+/// `fuseconv serve --cache-entries N` mounts.
+fn start_cached_backend() -> (String, thread::JoinHandle<()>) {
+    let sim = SimServer::new(2).with_result_cache(Arc::new(ResultCache::new(64)));
+    let router = Router::new(sim).with_engine(Server::start(
+        MockEngine::new(4, 2, 8),
+        BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(2) },
+    ));
+    let server = WireServer::bind("127.0.0.1:0", Arc::new(router)).expect("bind backend");
+    let addr = server.local_addr().to_string();
+    let handle = thread::spawn(move || server.run().expect("backend run"));
+    (addr, handle)
+}
+
+#[test]
+fn sharded_stats_sum_result_cache_counters() {
+    // Hash-pinned routing gives each backend a disjoint slice of the
+    // key space, so front-tier `result_*` sums read as fleet totals:
+    // 16 unique cells → 16 misses fleet-wide on the cold pass, 16 hits
+    // on the identical warm pass, and entry/byte residency that equals
+    // the sum over backends.
+    let (b1, h1) = start_cached_backend();
+    let (b2, h2) = start_cached_backend();
+    let (shard, hsh) = start_shard_frontend(vec![b1.clone(), b2.clone()]);
+
+    let names = ["mobilenet-v2", "mobilenet-v3-small"];
+    let variants = [FuseVariant::Base, FuseVariant::Half];
+    let sizes = [8, 16, 32, 64]; // 16 cells, split across both backends
+
+    let mut sc = WireClient::connect(&shard, T).expect("connect shard");
+    sc.send(&sweep_req(1, &names, &variants, &sizes)).expect("send cold sweep");
+    let cold = stream_frames(&mut sc, 1);
+    sc.send(&sweep_req(2, &names, &variants, &sizes)).expect("send warm sweep");
+    let warm = stream_frames(&mut sc, 2);
+    // the warm pass is served from the backends' caches, yet stays
+    // byte-identical row for row (re-encoded under one id to compare)
+    assert_eq!(
+        row_frames(&cold, 0),
+        row_frames(&warm, 0),
+        "cached repeat must re-emit identical rows"
+    );
+
+    let resp = request_once(&shard, &Request::new(3, RequestBody::Stats), T).expect("stats");
+    let agg = match resp.result {
+        Ok(Reply::Stats(s)) => s,
+        other => panic!("expected aggregated stats, got {other:?}"),
+    };
+    assert_eq!(agg.backends, 2);
+    assert_eq!(agg.result_misses, 16, "each unique cell simulated once fleet-wide");
+    assert_eq!(agg.result_hits, 16, "the warm pass hit on every cell");
+    assert_eq!(agg.result_entries, 16, "disjoint per-backend caches sum to the fleet");
+    assert!(agg.result_bytes > 0);
+
+    // ...and the aggregate really is the sum over both backends, each
+    // of which holds a strict subset of the grid
+    let (mut hits, mut entries, mut bytes) = (0, 0, 0);
+    for backend in [&b1, &b2] {
+        let resp = request_once(backend, &Request::new(4, RequestBody::Stats), T)
+            .expect("backend stats");
+        match resp.result {
+            Ok(Reply::Stats(s)) => {
+                assert!(
+                    s.result_entries > 0 && s.result_entries < 16,
+                    "the grid must split across backends, got {s:?}"
+                );
+                hits += s.result_hits;
+                entries += s.result_entries;
+                bytes += s.result_bytes;
+            }
+            other => panic!("expected backend stats, got {other:?}"),
+        }
+    }
+    assert_eq!(
+        (hits, entries, bytes),
+        (agg.result_hits, agg.result_entries, agg.result_bytes),
+        "front-tier counters must be the exact per-backend sums"
+    );
+
+    let resp = sc.roundtrip(&Request::new(99, RequestBody::Shutdown)).expect("shutdown ack");
+    assert_eq!(resp.result, Ok(Reply::Done));
+    hsh.join().expect("shard frontend");
+    h1.join().expect("backend 1");
+    h2.join().expect("backend 2");
 }
 
 #[test]
