@@ -1,19 +1,24 @@
 #!/usr/bin/env python3
-"""Check a streamed fuseconv sweep against a local sweep CSV.
+"""Check a streamed fuseconv frame capture against the v2 contract.
 
 One parser for every smoke step in CI (TCP, HTTP/SSE, and the shard
 front tier over both transports):
 
     ci/check_stream.py --format jsonl /tmp/sweep-stream.jsonl /tmp/local.csv
     ci/check_stream.py --format sse   /tmp/sweep.sse          /tmp/local.csv
+    ci/check_stream.py --format sse --mode search /tmp/search.sse
 
-Asserts the protocol-v2 stream contract (PROTOCOL.md section 3):
+Asserts the protocol-v2 stream contract (PROTOCOL.md sections 3, 11):
 
 * at least one `progress` frame arrives before the `final` frame;
 * progress is monotonic with `done <= total`;
 * the stream ends with exactly one `final`, and it is `ok`;
-* the streamed `row` cycle counts equal the local sweep's rows,
-  cell for cell and in plan order.
+* `--mode sweep` (default): the streamed `row` cycle counts equal the
+  local sweep's rows, cell for cell and in plan order;
+* `--mode search`: `search_row` frames stream, the terminal reply is a
+  `search` with a non-empty frontier, and the last generation's rows
+  equal the frontier point for point (`--expect-cancelled` flips the
+  check to a cancelled partial run instead).
 """
 
 import argparse
@@ -52,11 +57,51 @@ def local_cycles(csv_path):
     return [int(line.split(",")[col]) for line in lines[1:]]
 
 
+def check_sweep(frames, local_csv):
+    streamed = [f["row"]["total_cycles"] for f in frames if f["frame"] == "row"]
+    local = local_cycles(local_csv)
+    assert streamed == local, (streamed, local)
+    return f"{len(streamed)} rows match the local sweep"
+
+
+def check_search(frames, expect_cancelled):
+    rows = [f["point"] for f in frames if f["frame"] == "search_row"]
+    assert rows, "a search stream must carry search_row frames"
+    reply = frames[-1]["ok"]
+    assert reply["kind"] == "search", reply
+    assert reply["frontier"], "the converged frontier must be non-empty"
+    assert reply["cancelled"] is expect_cancelled, reply
+    if expect_cancelled:
+        total = frames[0]["total"]
+        assert reply["generations"] < total, (reply["generations"], total)
+        return (
+            f"cancelled after {reply['generations']}/{total} generations, "
+            f"{len(reply['frontier'])} partial frontier points"
+        )
+    # the last generation's rows ARE the converged frontier
+    tail = rows[-len(reply["frontier"]):]
+    assert tail == reply["frontier"], (tail, reply["frontier"])
+    return (
+        f"{len(rows)} pareto rows streamed, final frontier of "
+        f"{len(reply['frontier'])} matches the last generation"
+    )
+
+
 def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--format", choices=["jsonl", "sse"], required=True)
+    ap.add_argument("--mode", choices=["sweep", "search"], default="sweep")
+    ap.add_argument(
+        "--expect-cancelled",
+        action="store_true",
+        help="search mode: the capture is of a cancelled run",
+    )
     ap.add_argument("stream", help="captured frame stream")
-    ap.add_argument("local_csv", help="local `fuseconv sweep --format csv` output")
+    ap.add_argument(
+        "local_csv",
+        nargs="?",
+        help="local `fuseconv sweep --format csv` output (sweep mode)",
+    )
     args = ap.parse_args()
 
     parse = frames_from_jsonl if args.format == "jsonl" else frames_from_sse
@@ -75,12 +120,14 @@ def main():
     dones = [d for d, _ in progress]
     assert dones == sorted(dones), f"progress must be monotonic: {dones}"
 
-    streamed = [f["row"]["total_cycles"] for f in frames if f["frame"] == "row"]
-    local = local_cycles(args.local_csv)
-    assert streamed == local, (streamed, local)
+    if args.mode == "sweep":
+        assert args.local_csv, "sweep mode needs the local CSV to compare against"
+        detail = check_sweep(frames, args.local_csv)
+    else:
+        detail = check_search(frames, args.expect_cancelled)
 
     print(
-        f"stream ok ({args.format}): {len(streamed)} rows match the local sweep, "
+        f"stream ok ({args.format}, {args.mode}): {detail}, "
         f"{len(progress)} progress frames before a single final"
     )
 

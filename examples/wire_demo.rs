@@ -91,6 +91,7 @@ fn main() {
                 println!("progress: {done}/{total} cells, eta {eta:.2}s");
             }
             Frame::Progress { .. } => {}
+            Frame::SearchRow(_) => {} // search streams only; a sweep never emits these
             Frame::Row(row) => {
                 rows += 1;
                 println!(

@@ -464,6 +464,14 @@ fn run_bench(mut opts: BenchOpts) -> Result<BenchReport, String> {
                         ("hit_rate", Json::Num((hit_rate * 10_000.0).round() / 10_000.0)),
                     ]),
                 ),
+                (
+                    "search",
+                    obj(vec![
+                        ("started", Json::UInt(s.search_started)),
+                        ("completed", Json::UInt(s.search_completed)),
+                        ("cancelled", Json::UInt(s.search_cancelled)),
+                    ]),
+                ),
             ])
         }
         None => Json::Null,

@@ -14,6 +14,8 @@
 //! | `POST /v1/infer` | one-shot JSON (the reply's terminal frame is the body) |
 //! | `POST /v1/simulate` | one-shot JSON |
 //! | `POST /v1/sweep` | SSE stream — one `progress`/`row`/`final` event per frame |
+//! | `POST /v1/search` | SSE stream — `progress`/`search_row`/`final` events |
+//! | `POST /v1/cancel` | one-shot JSON; trips the target stream's cancel token |
 //! | `GET /v1/stats` | one-shot JSON |
 //! | `GET /v1/zoo` | one-shot JSON |
 //! | `GET /healthz` | liveness: `200` while serving, `503` once shutdown latches |
@@ -26,13 +28,19 @@
 //! send — so both transports share [`decode_frame`] and must agree
 //! cycle-for-cycle. Status codes are part of the contract (see
 //! [`status_of`]): `200` success, `400` [`ServeError::BadRequest`],
-//! `429` [`ServeError::Busy`], `503` [`ServeError::Shutdown`], `504`
-//! [`ServeError::Deadline`], plus `404`/`405` for unknown endpoints and
-//! methods. Deadlines ride a `timeout-ms` request header (or a
-//! `deadline_ms` body field), admission goes through the same two
-//! priority lanes as TCP traffic, and `--max-requests-per-conn` counts
-//! decoded requests per kept-alive connection exactly as the TCP budget
-//! does.
+//! `401` [`ServeError::Unauthorized`], `429` [`ServeError::Busy`],
+//! `503` [`ServeError::Shutdown`], `504` [`ServeError::Deadline`], plus
+//! `404`/`405` for unknown endpoints and methods. Deadlines ride a
+//! `timeout-ms` request header (or a `deadline_ms` body field),
+//! admission goes through the same priority lanes as TCP traffic, and
+//! `--max-requests-per-conn` counts decoded requests per kept-alive
+//! connection exactly as the TCP budget does.
+//!
+//! Auth (`--auth-token`): the token rides an `authorization: Bearer
+//! <token>` request header — never the body — and is required on every
+//! `/v1/*` endpoint once configured; `/healthz` stays open for probes.
+//! Failures answer `401` with a terminal `unauthorized` frame. The
+//! comparison is constant-time (see `net::token_eq`).
 //!
 //! ```
 //! use fuseconv::coordinator::http::status_of;
@@ -41,8 +49,8 @@
 //! ```
 
 use super::net::{
-    accept_loop, is_timeout, GaugeGuard, RequestBudget, StopLatch, Transport, TransportGauges,
-    MAX_TICKET_WAIT,
+    accept_loop, authorized, is_timeout, GaugeGuard, RequestBudget, StopLatch, Transport,
+    TransportGauges, MAX_TICKET_WAIT,
 };
 use super::protocol::{
     collapse_stream, Frame, RecvError, Reply, Request, RequestBody, Response, ServeError,
@@ -91,6 +99,7 @@ pub fn status_of(result: &Result<Reply, ServeError>) -> (u16, &'static str) {
     match result {
         Ok(_) => (200, "OK"),
         Err(ServeError::BadRequest(_)) => (400, "Bad Request"),
+        Err(ServeError::Unauthorized) => (401, "Unauthorized"),
         Err(ServeError::Busy) => (429, "Too Many Requests"),
         Err(ServeError::Shutdown) => (503, "Service Unavailable"),
         Err(ServeError::Deadline) => (504, "Gateway Timeout"),
@@ -106,6 +115,9 @@ pub struct HttpServer {
     service: Arc<dyn Service>,
     /// Per-connection request budget; `None` = unlimited.
     max_requests_per_conn: Option<u64>,
+    /// When set, every `/v1/*` request must present it as a bearer
+    /// token; failures answer `401`. `/healthz` stays open.
+    auth_token: Option<Arc<str>>,
     stop: StopLatch,
     transport: Transport,
     gauges: TransportGauges,
@@ -123,10 +135,20 @@ impl HttpServer {
             addr,
             service,
             max_requests_per_conn: None,
+            auth_token: None,
             stop: StopLatch::new(),
             transport: Transport::default(),
             gauges: TransportGauges::default(),
         })
+    }
+
+    /// Require an `authorization: Bearer <token>` header on every
+    /// `/v1/*` request (`None` = open); `/healthz` is exempt so
+    /// liveness probes keep working. Checked after body decode and
+    /// before the budget, mirroring the TCP frontend.
+    pub fn with_auth_token(mut self, token: Option<String>) -> HttpServer {
+        self.auth_token = token.map(Arc::from);
+        self
     }
 
     /// Cap how many requests one kept-alive connection may submit; the
@@ -169,6 +191,7 @@ impl HttpServer {
         self.stop.register(self.addr);
         let service = self.service;
         let budget = self.max_requests_per_conn;
+        let auth = self.auth_token;
         let gauges = self.gauges;
         match self.transport {
             Transport::Threaded => {
@@ -181,6 +204,7 @@ impl HttpServer {
                         Arc::clone(&service),
                         stop.clone(),
                         budget,
+                        auth.clone(),
                         conn_gauges.clone(),
                     )
                 })
@@ -191,6 +215,7 @@ impl HttpServer {
                     Box::new(HttpDriver::new(
                         Arc::clone(&service),
                         budget,
+                        auth.clone(),
                         driver_gauges.clone(),
                     )) as Box<dyn Driver>
                 })
@@ -213,6 +238,8 @@ struct HttpHead {
     /// An `expect: 100-continue` header was present — curl sends it for
     /// bodies past ~1 KiB and waits for the interim response.
     expect_continue: bool,
+    /// Token from an `authorization: Bearer <token>` header.
+    auth_token: Option<String>,
 }
 
 enum HeadRead {
@@ -241,6 +268,7 @@ fn parse_request_line(request_line: &str) -> Result<HttpHead, String> {
         close: version.eq_ignore_ascii_case("HTTP/1.0"),
         has_transfer_encoding: false,
         expect_continue: false,
+        auth_token: None,
     })
 }
 
@@ -269,6 +297,15 @@ fn apply_header(head: &mut HttpHead, line: &str) -> Result<(), String> {
             "transfer-encoding" => head.has_transfer_encoding = true,
             "expect" => {
                 head.expect_continue = value.to_ascii_lowercase().contains("100-continue");
+            }
+            "authorization" => {
+                // only the Bearer scheme is recognized (case-insensitive
+                // scheme, per RFC 7235); other schemes present no token
+                if let Some((scheme, token)) = value.split_once(' ') {
+                    if scheme.eq_ignore_ascii_case("bearer") {
+                        head.auth_token = Some(token.trim().to_string());
+                    }
+                }
             }
             _ => {}
         }
@@ -396,6 +433,8 @@ fn route(method: &str, path: &str) -> Route {
         "/v1/infer" => need("POST", "infer", false),
         "/v1/simulate" => need("POST", "simulate", false),
         "/v1/sweep" => need("POST", "sweep", true),
+        "/v1/search" => need("POST", "search", true),
+        "/v1/cancel" => need("POST", "cancel", false),
         "/v1/shutdown" => need("POST", "shutdown", false),
         "/v1/stats" => need("GET", "stats", false),
         "/v1/zoo" => need("GET", "zoo", false),
@@ -555,6 +594,7 @@ fn handle_http_conn(
     service: Arc<dyn Service>,
     stop: StopLatch,
     cap: Option<u64>,
+    auth: Option<Arc<str>>,
     gauges: TransportGauges,
 ) {
     let _conn_gauge = gauges.conn_opened();
@@ -674,6 +714,18 @@ fn handle_http_conn(
                 continue;
             }
         };
+        // Auth gate, mirroring the TCP reader: after decode (so the 401
+        // correlates with the request's id), before the budget (an
+        // unauthorized request consumes no slot, and cannot shut the
+        // deployment down). The token rides the Authorization header,
+        // never the body.
+        if !authorized(auth.as_deref(), head.auth_token.as_deref()) {
+            let resp = Response::err(id, ServeError::Unauthorized);
+            if write_oneshot(&mut out, &resp, head.close).is_err() || head.close {
+                break;
+            }
+            continue;
+        }
         // Only decoded requests count against the budget, exactly like
         // the TCP frontend; the over-budget request is answered 429 and
         // the connection closes.
@@ -812,6 +864,7 @@ enum HttpState {
 struct HttpDriver {
     service: Arc<dyn Service>,
     budget: RequestBudget,
+    auth: Option<Arc<str>>,
     gauges: TransportGauges,
     /// Requests whose body carries no `id` get a per-connection counter.
     next_auto_id: u64,
@@ -825,10 +878,16 @@ struct HttpDriver {
 }
 
 impl HttpDriver {
-    fn new(service: Arc<dyn Service>, budget: Option<u64>, gauges: TransportGauges) -> HttpDriver {
+    fn new(
+        service: Arc<dyn Service>,
+        budget: Option<u64>,
+        auth: Option<Arc<str>>,
+        gauges: TransportGauges,
+    ) -> HttpDriver {
         HttpDriver {
             service,
             budget: RequestBudget::new(budget),
+            auth,
             gauges,
             next_auto_id: 1,
             state: HttpState::Head,
@@ -924,6 +983,13 @@ impl HttpDriver {
                 return;
             }
         };
+        // Auth gate (threaded parity): after decode, before the budget;
+        // an unauthorized request consumes no slot.
+        if !authorized(self.auth.as_deref(), head.auth_token.as_deref()) {
+            let resp = Response::err(id, ServeError::Unauthorized);
+            self.answer(cx, oneshot_text(&resp, head.close), head.close);
+            return;
+        }
         // Only decoded requests count against the budget; the
         // over-budget request is answered 429 and the connection closes.
         if !self.budget.admit() {
@@ -1069,6 +1135,7 @@ impl HttpDriver {
                             Ok(Some(Frame::Final(result))) => break Some(result),
                             Ok(Some(Frame::Row(row))) => w.rows.push(row),
                             Ok(Some(Frame::Progress { .. })) => {}
+                            Ok(Some(Frame::SearchRow(_))) => {}
                             Ok(None) => {
                                 if now >= w.deadline {
                                     break Some(Err(ServeError::Deadline));
@@ -1256,12 +1323,16 @@ fn send_http_request(
     path: &str,
     body: Option<&str>,
     timeout_ms: Option<u64>,
+    bearer: Option<&str>,
 ) -> Result<(), WireError> {
     let mut req = String::new();
     let method = if body.is_some() { "POST" } else { "GET" };
     let _ = write!(req, "{method} {path} HTTP/1.1\r\nhost: {host}\r\nconnection: close\r\n");
     if let Some(ms) = timeout_ms {
         let _ = write!(req, "timeout-ms: {ms}\r\n");
+    }
+    if let Some(token) = bearer {
+        let _ = write!(req, "authorization: Bearer {token}\r\n");
     }
     match body {
         Some(payload) => {
@@ -1371,8 +1442,21 @@ pub fn http_call(
     timeout_ms: Option<u64>,
     timeout: Duration,
 ) -> Result<HttpReply, WireError> {
+    http_call_auth(addr, path, body, timeout_ms, None, timeout)
+}
+
+/// [`http_call`] with an optional bearer token, sent as an
+/// `authorization: Bearer <token>` header (tokens never ride the body).
+pub fn http_call_auth(
+    addr: &str,
+    path: &str,
+    body: Option<&str>,
+    timeout_ms: Option<u64>,
+    bearer: Option<&str>,
+    timeout: Duration,
+) -> Result<HttpReply, WireError> {
     let mut stream = http_connect(addr, timeout)?;
-    send_http_request(&mut stream, addr, path, body, timeout_ms)?;
+    send_http_request(&mut stream, addr, path, body, timeout_ms, bearer)?;
     let mut reader = BufReader::new(stream);
     let (status, headers) = read_reply_head(&mut reader)?;
     let body = read_reply_body(&mut reader, &headers)?;
@@ -1391,13 +1475,30 @@ pub fn http_sse<F>(
     body: &str,
     timeout_ms: Option<u64>,
     timeout: Duration,
+    on_frame: F,
+) -> Result<Response, WireError>
+where
+    F: FnMut(u64, &Frame),
+{
+    http_sse_auth(addr, path, body, timeout_ms, None, timeout, on_frame)
+}
+
+/// [`http_sse`] with an optional bearer token (see [`http_call_auth`]).
+#[allow(clippy::too_many_arguments)]
+pub fn http_sse_auth<F>(
+    addr: &str,
+    path: &str,
+    body: &str,
+    timeout_ms: Option<u64>,
+    bearer: Option<&str>,
+    timeout: Duration,
     mut on_frame: F,
 ) -> Result<Response, WireError>
 where
     F: FnMut(u64, &Frame),
 {
     let mut stream = http_connect(addr, timeout)?;
-    send_http_request(&mut stream, addr, path, Some(body), timeout_ms)?;
+    send_http_request(&mut stream, addr, path, Some(body), timeout_ms, bearer)?;
     let mut reader = BufReader::new(stream);
     let (_status, headers) = read_reply_head(&mut reader)?;
     let is_sse = header(&headers, "content-type")
@@ -1426,6 +1527,9 @@ where
             match frame {
                 Frame::Progress { .. } => {}
                 Frame::Row(row) => rows.push(row),
+                // display stream; the terminal Search reply carries the
+                // converged frontier
+                Frame::SearchRow(_) => {}
                 Frame::Final(result) => {
                     return Ok(Response { id, result: collapse_stream(result, rows) });
                 }
@@ -1442,9 +1546,25 @@ mod tests {
     fn status_mapping_covers_every_error() {
         assert_eq!(status_of(&Ok(Reply::Done)).0, 200);
         assert_eq!(status_of(&Err(ServeError::BadRequest("x".into()))).0, 400);
+        assert_eq!(status_of(&Err(ServeError::Unauthorized)).0, 401);
         assert_eq!(status_of(&Err(ServeError::Busy)).0, 429);
         assert_eq!(status_of(&Err(ServeError::Shutdown)).0, 503);
         assert_eq!(status_of(&Err(ServeError::Deadline)).0, 504);
+    }
+
+    #[test]
+    fn authorization_header_parses_bearer_only() {
+        let mut head = parse_request_line("POST /v1/search HTTP/1.1").unwrap();
+        apply_header(&mut head, "authorization: Bearer s3cret").unwrap();
+        assert_eq!(head.auth_token.as_deref(), Some("s3cret"));
+        // scheme is case-insensitive
+        let mut head = parse_request_line("POST /v1/search HTTP/1.1").unwrap();
+        apply_header(&mut head, "Authorization: bearer tok").unwrap();
+        assert_eq!(head.auth_token.as_deref(), Some("tok"));
+        // other schemes present no token
+        let mut head = parse_request_line("POST /v1/search HTTP/1.1").unwrap();
+        apply_header(&mut head, "authorization: Basic dXNlcjpwdw==").unwrap();
+        assert_eq!(head.auth_token, None);
     }
 
     #[test]
@@ -1455,6 +1575,8 @@ mod tests {
             Route::Op { op: "simulate", sse: false }
         ));
         assert!(matches!(route("POST", "/v1/sweep"), Route::Op { op: "sweep", sse: true }));
+        assert!(matches!(route("POST", "/v1/search"), Route::Op { op: "search", sse: true }));
+        assert!(matches!(route("POST", "/v1/cancel"), Route::Op { op: "cancel", sse: false }));
         assert!(matches!(route("GET", "/v1/stats"), Route::Op { op: "stats", sse: false }));
         assert!(matches!(route("GET", "/v1/zoo"), Route::Op { op: "zoo", sse: false }));
         assert!(matches!(

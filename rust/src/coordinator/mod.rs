@@ -27,13 +27,14 @@ pub mod shard;
 pub mod wire;
 
 pub use evaluator::{Evaluator, HybridSpace, NetEval};
-pub use http::{http_call, http_sse, HttpReply, HttpServer};
+pub use http::{http_call, http_call_auth, http_sse, http_sse_auth, HttpReply, HttpServer};
 pub use net::{
     request_once, GaugeGuard, StopLatch, Transport, TransportGauges, WireClient, WireServer,
 };
 pub use protocol::{
     ConfigPatch, Frame, FrameSink, ModelSpec, Priority, RecvError, Reply, Request,
-    RequestBody, Response, ServeError, Service, SweepRow, Ticket, PROTOCOL_VERSION,
+    RequestBody, Response, SearchPoint, SearchReply, SearchSpec, ServeError, Service,
+    StatsReply, SweepRow, Ticket, PROTOCOL_VERSION,
 };
 pub use server::{Engine, MockEngine, Router, Server, SimServer};
 pub use shard::ShardRouter;

@@ -95,6 +95,31 @@ pub(crate) fn is_timeout(e: &std::io::Error) -> bool {
     )
 }
 
+/// Constant-time token equality: runtime depends only on the length of
+/// the *configured* token, never on how many leading bytes of the
+/// presented one match, so the comparison cannot be used as a
+/// byte-at-a-time oracle.
+pub(crate) fn token_eq(expected: &str, presented: &str) -> bool {
+    let a = expected.as_bytes();
+    let b = presented.as_bytes();
+    let mut diff = a.len() ^ b.len();
+    for (i, &x) in a.iter().enumerate() {
+        let y = if i < b.len() { b[i] } else { 0 };
+        diff |= (x ^ y) as usize;
+    }
+    diff == 0
+}
+
+/// The auth gate both transports share: with no configured token every
+/// request passes; with one, the request must present a matching token
+/// (its absence is not secret — only the comparison is constant-time).
+pub(crate) fn authorized(required: Option<&str>, presented: Option<&str>) -> bool {
+    match required {
+        None => true,
+        Some(want) => presented.is_some_and(|got| token_eq(want, got)),
+    }
+}
+
 // ---------------------------------------------------------------------------
 // Shared frontend scaffolding (TCP frames + HTTP)
 // ---------------------------------------------------------------------------
@@ -334,6 +359,9 @@ pub struct WireServer {
     service: Arc<dyn Service>,
     /// Per-connection request budget; `None` = unlimited.
     max_requests_per_conn: Option<u64>,
+    /// When set, every request must carry a matching `token` envelope
+    /// field; mismatches answer a terminal `unauthorized` frame.
+    auth_token: Option<Arc<str>>,
     stop: StopLatch,
     transport: Transport,
     gauges: TransportGauges,
@@ -351,10 +379,20 @@ impl WireServer {
             addr,
             service,
             max_requests_per_conn: None,
+            auth_token: None,
             stop: StopLatch::new(),
             transport: Transport::default(),
             gauges: TransportGauges::default(),
         })
+    }
+
+    /// Require every request on this frontend to carry `token` in its
+    /// envelope (`None` = open). Checked before admission and before the
+    /// budget, with a constant-time comparison; failures answer a
+    /// terminal `unauthorized` frame without consuming a budget slot.
+    pub fn with_auth_token(mut self, token: Option<String>) -> WireServer {
+        self.auth_token = token.map(Arc::from);
+        self
     }
 
     /// Select the concurrency model (`Threaded` is the default).
@@ -396,6 +434,7 @@ impl WireServer {
         self.stop.register(self.addr);
         let service = self.service;
         let budget = self.max_requests_per_conn;
+        let auth = self.auth_token;
         let gauges = self.gauges;
         match self.transport {
             Transport::Threaded => {
@@ -408,6 +447,7 @@ impl WireServer {
                         Arc::clone(&service),
                         stop.clone(),
                         budget,
+                        auth.clone(),
                         conn_gauges.clone(),
                     )
                 })
@@ -418,6 +458,7 @@ impl WireServer {
                     Box::new(FrameDriver::new(
                         Arc::clone(&service),
                         budget,
+                        auth.clone(),
                         driver_gauges.clone(),
                     )) as Box<dyn Driver>
                 })
@@ -494,6 +535,7 @@ fn handle_conn(
     service: Arc<dyn Service>,
     stop: StopLatch,
     budget: Option<u64>,
+    auth: Option<Arc<str>>,
     gauges: TransportGauges,
 ) {
     let _conn_gauge = gauges.conn_opened();
@@ -548,6 +590,18 @@ fn handle_conn(
                 if !line.is_empty() {
                     match super::wire::decode_request(line) {
                         Ok(req) => {
+                            // Auth gate first: an unauthorized request is
+                            // answered (typed, same id) and consumes no
+                            // budget slot — and it can't shut us down.
+                            if !authorized(auth.as_deref(), req.token.as_deref()) {
+                                let _ = send_frame(
+                                    &wtx,
+                                    (req.id, Frame::Final(Err(ServeError::Unauthorized))),
+                                    &stop,
+                                );
+                                buf.clear();
+                                continue;
+                            }
                             // Only decoded requests count against the
                             // budget (malformed lines answer bad_request
                             // without consuming a slot).
@@ -715,6 +769,7 @@ struct EpollStream {
 struct FrameDriver {
     service: Arc<dyn Service>,
     budget: RequestBudget,
+    auth: Option<Arc<str>>,
     gauges: TransportGauges,
     streams: Vec<EpollStream>,
     /// Stop consuming input: shutdown seen, budget bounced, or EOF.
@@ -722,10 +777,16 @@ struct FrameDriver {
 }
 
 impl FrameDriver {
-    fn new(service: Arc<dyn Service>, budget: Option<u64>, gauges: TransportGauges) -> FrameDriver {
+    fn new(
+        service: Arc<dyn Service>,
+        budget: Option<u64>,
+        auth: Option<Arc<str>>,
+        gauges: TransportGauges,
+    ) -> FrameDriver {
         FrameDriver {
             service,
             budget: RequestBudget::new(budget),
+            auth,
             gauges,
             streams: Vec::new(),
             draining: false,
@@ -737,6 +798,16 @@ impl FrameDriver {
     fn serve_line(&mut self, line: &str, cx: &mut ConnCx<'_>, now: Instant) {
         match super::wire::decode_request(line) {
             Ok(req) => {
+                // Same gate as the threaded reader: unauthorized answers
+                // typed, consumes no budget, and cannot latch shutdown.
+                if !authorized(self.auth.as_deref(), req.token.as_deref()) {
+                    push_wire_frame(
+                        cx.out,
+                        req.id,
+                        &Frame::Final(Err(ServeError::Unauthorized)),
+                    );
+                    return;
+                }
                 if !self.budget.admit() {
                     push_wire_frame(cx.out, req.id, &Frame::Final(Err(ServeError::Busy)));
                     self.draining = true;
@@ -992,6 +1063,9 @@ impl WireClient {
             match self.recv_frame(id)? {
                 Frame::Progress { .. } => {}
                 Frame::Row(row) => rows.push(row),
+                // live pareto rows are a display stream; the terminal
+                // Search reply already carries the converged frontier
+                Frame::SearchRow(_) => {}
                 Frame::Final(result) => {
                     return Ok(Response { id, result: collapse_stream(result, rows) });
                 }
@@ -1143,6 +1217,51 @@ mod tests {
         let mut c2 = WireClient::connect(&addr, Duration::from_secs(30)).unwrap();
         assert!(c2.roundtrip(&Request::new(5, RequestBody::Stats)).unwrap().is_ok());
         let _ = c2.roundtrip(&Request::new(6, RequestBody::Shutdown));
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn token_eq_is_exact() {
+        assert!(token_eq("s3cret", "s3cret"));
+        assert!(!token_eq("s3cret", "s3cres"));
+        assert!(!token_eq("s3cret", "s3cre"));
+        assert!(!token_eq("s3cret", "s3crets"));
+        assert!(!token_eq("s3cret", ""));
+        assert!(token_eq("", ""));
+    }
+
+    #[test]
+    fn auth_token_gates_every_op_including_shutdown() {
+        let router = Router::new(SimServer::new(1));
+        let server = WireServer::bind("127.0.0.1:0", Arc::new(router))
+            .expect("bind ephemeral")
+            .with_auth_token(Some("s3cret".into()));
+        let addr = server.local_addr().to_string();
+        let h = thread::spawn(move || server.run().expect("serve"));
+        let mut client = WireClient::connect(&addr, Duration::from_secs(30)).unwrap();
+
+        // missing and wrong tokens answer typed unauthorized (same conn)
+        let resp = client.roundtrip(&Request::new(1, RequestBody::Stats)).unwrap();
+        assert_eq!(resp.result, Err(ServeError::Unauthorized));
+        let resp = client
+            .roundtrip(&Request::new(2, RequestBody::Stats).with_token("wrong"))
+            .unwrap();
+        assert_eq!(resp.result, Err(ServeError::Unauthorized));
+        // an unauthorized shutdown must NOT stop the deployment
+        let resp = client
+            .roundtrip(&Request::new(3, RequestBody::Shutdown))
+            .unwrap();
+        assert_eq!(resp.result, Err(ServeError::Unauthorized));
+
+        // the right token unlocks the same connection
+        let resp = client
+            .roundtrip(&Request::new(4, RequestBody::Stats).with_token("s3cret"))
+            .unwrap();
+        assert!(matches!(resp.result, Ok(Reply::Stats(_))));
+        let resp = client
+            .roundtrip(&Request::new(5, RequestBody::Shutdown).with_token("s3cret"))
+            .unwrap();
+        assert_eq!(resp.result, Ok(Reply::Done));
         h.join().unwrap();
     }
 }

@@ -77,16 +77,28 @@ pub struct Request {
     /// Optional deadline, in milliseconds from admission. Work still
     /// queued when it expires is answered with [`ServeError::Deadline`].
     pub deadline_ms: Option<u64>,
+    /// Optional auth token (`PROTOCOL.md` §Authentication). On the TCP
+    /// framing this rides the envelope; the HTTP rendering carries it as
+    /// an `Authorization: Bearer` header instead and never places it in
+    /// the body. A frontend started with `--auth-token` rejects
+    /// requests whose token is absent or wrong with
+    /// [`ServeError::Unauthorized`].
+    pub token: Option<String>,
     pub body: RequestBody,
 }
 
 impl Request {
     pub fn new(id: u64, body: RequestBody) -> Request {
-        Request { id, deadline_ms: None, body }
+        Request { id, deadline_ms: None, token: None, body }
     }
 
     pub fn with_deadline_ms(mut self, ms: u64) -> Request {
         self.deadline_ms = Some(ms);
+        self
+    }
+
+    pub fn with_token(mut self, token: impl Into<String>) -> Request {
+        self.token = Some(token.into());
         self
     }
 }
@@ -104,6 +116,15 @@ pub enum RequestBody {
     Stats,
     /// List the model zoo (names + MAC/param totals).
     Zoo,
+    /// Run an evolutionary NAS job over the FuSe-extended OFA space;
+    /// the reply is a long-lived frame stream (`progress` per
+    /// generation, `search_row` per Pareto-front point, then a terminal
+    /// `search` reply with the converged frontier).
+    Search { spec: SearchSpec },
+    /// Cooperatively cancel the in-flight streaming request whose
+    /// envelope id is `target`. Idempotent: cancelling an unknown or
+    /// already-finished id still acks `Done`.
+    Cancel { target: u64 },
     /// Ask the frontend to stop accepting traffic and exit cleanly.
     Shutdown,
 }
@@ -117,17 +138,21 @@ impl RequestBody {
             RequestBody::Sweep { .. } => "sweep",
             RequestBody::Stats => "stats",
             RequestBody::Zoo => "zoo",
+            RequestBody::Search { .. } => "search",
+            RequestBody::Cancel { .. } => "cancel",
             RequestBody::Shutdown => "shutdown",
         }
     }
 
     /// Which admission lane this operation rides: whole-grid `Sweep`s are
-    /// batch traffic; everything else is interactive. The lanes have
-    /// separate bounds so EA/NAS sweep populations can never starve
+    /// batch traffic, multi-minute `Search` jobs get their own (narrow)
+    /// lane, and everything else is interactive. The lanes have separate
+    /// bounds so searches can't starve sweeps and neither can starve
     /// dashboard point queries.
     pub fn priority(&self) -> Priority {
         match self {
             RequestBody::Sweep { .. } => Priority::Batch,
+            RequestBody::Search { .. } => Priority::Search,
             _ => Priority::Interactive,
         }
     }
@@ -136,10 +161,73 @@ impl RequestBody {
 /// Admission lane of a request (see [`RequestBody::priority`]).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Priority {
-    /// Point queries: single Infer/Simulate, Stats, Zoo, Shutdown.
+    /// Point queries: single Infer/Simulate, Stats, Zoo, Cancel, Shutdown.
     Interactive,
     /// Whole-grid traffic: Sweep (EA/NAS populations, table reproduction).
     Batch,
+    /// Long-lived evolutionary search jobs (`Search`).
+    Search,
+}
+
+/// Parameters of one wire-served NAS job — the serving-side mirror of
+/// `NasConfig` (thread count stays a server concern and is deliberately
+/// absent: results are thread-count-invariant by construction).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SearchSpec {
+    pub population: usize,
+    pub iterations: usize,
+    pub mutation_p: f64,
+    pub allow_fuse: bool,
+    pub seed: u64,
+    /// Hardware config the candidates are priced on (Table-1 defaults
+    /// plus these overrides, exactly like `Simulate`).
+    pub config: ConfigPatch,
+}
+
+impl Default for SearchSpec {
+    fn default() -> SearchSpec {
+        SearchSpec {
+            population: 32,
+            iterations: 16,
+            mutation_p: 0.15,
+            allow_fuse: true,
+            seed: 42,
+            config: ConfigPatch::default(),
+        }
+    }
+}
+
+/// Remote-input sanity bounds on a search job (far above any useful
+/// run; a genuinely bigger experiment belongs in-process, not behind a
+/// serving lane).
+pub const MAX_SEARCH_POPULATION: usize = 1024;
+pub const MAX_SEARCH_ITERATIONS: usize = 1024;
+
+impl SearchSpec {
+    /// Validate remote input. The evolutionary loop needs at least two
+    /// elites, so populations below 2 are rejected rather than panicking
+    /// mid-generation.
+    pub fn validate(&self) -> Result<(), ServeError> {
+        if self.population < 2 || self.population > MAX_SEARCH_POPULATION {
+            return Err(ServeError::BadRequest(format!(
+                "population {} outside 2..={MAX_SEARCH_POPULATION}",
+                self.population
+            )));
+        }
+        if self.iterations > MAX_SEARCH_ITERATIONS {
+            return Err(ServeError::BadRequest(format!(
+                "iterations {} exceeds {MAX_SEARCH_ITERATIONS}",
+                self.iterations
+            )));
+        }
+        if !(0.0..=1.0).contains(&self.mutation_p) {
+            return Err(ServeError::BadRequest(format!(
+                "mutation_p {} outside 0..=1",
+                self.mutation_p
+            )));
+        }
+        Ok(())
+    }
 }
 
 /// How a simulation request names its network: by zoo name, or as an
@@ -332,7 +420,9 @@ pub enum Reply {
     Sweep(Vec<SweepRow>),
     Stats(StatsReply),
     Zoo(Vec<ZooEntry>),
-    /// Acknowledgement with no payload (e.g. `Shutdown`).
+    /// Terminal reply of a `Search` stream: the converged frontier.
+    Search(SearchReply),
+    /// Acknowledgement with no payload (e.g. `Shutdown`, `Cancel`).
     Done,
 }
 
@@ -387,6 +477,38 @@ pub struct SweepRow {
     pub latency_ms: f64,
 }
 
+/// One point on a search's Pareto front, as streamed in `search_row`
+/// frames and carried by the terminal [`SearchReply`]. The genome rides
+/// as its compact string form (`OfaGenome::compact`) — clients plot and
+/// compare points; the server alone realizes genomes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SearchPoint {
+    pub genome: String,
+    /// Predicted top-1 accuracy (calibrated OFA predictor, NOS-trained).
+    pub acc: f64,
+    /// Simulated latency on the requested config.
+    pub latency_ms: f64,
+    pub macs_m: f64,
+    pub params_m: f64,
+    /// Pareto rank at emission time (0 = non-dominated).
+    pub rank: u64,
+}
+
+/// Terminal payload of a `Search` stream.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SearchReply {
+    /// The converged Pareto frontier, sorted by latency ascending.
+    pub frontier: Vec<SearchPoint>,
+    /// Genomes evaluated across all generations run.
+    pub evaluated: u64,
+    /// Generations completed (equals the requested iterations unless
+    /// cancelled).
+    pub generations: u64,
+    /// The job was cancelled (explicit `cancel` frame or client
+    /// disconnect); the frontier covers the generations that ran.
+    pub cancelled: bool,
+}
+
 /// Serving statistics snapshot (inference + simulation + shared cache).
 ///
 /// A shard front tier ([`ShardRouter`](super::shard::ShardRouter))
@@ -437,6 +559,14 @@ pub struct StatsReply {
     pub result_entries: u64,
     /// Global result cache gauge: estimated bytes resident.
     pub result_bytes: u64,
+    /// Search jobs admitted into the search lane. Additive v2 fields
+    /// (absent = 0 on the wire); summed by a shard front tier.
+    pub search_started: u64,
+    /// Search jobs that ran every requested generation to completion.
+    pub search_completed: u64,
+    /// Search jobs stopped early — explicit `cancel` frame or client
+    /// disconnect.
+    pub search_cancelled: u64,
 }
 
 /// One zoo listing row.
@@ -459,6 +589,9 @@ pub enum ServeError {
     BadRequest(String),
     /// The request's deadline expired before the work ran to completion.
     Deadline,
+    /// The frontend requires an auth token and the request carried none,
+    /// or the wrong one. Maps to HTTP 401.
+    Unauthorized,
     /// The service is shutting down (or already gone).
     Shutdown,
 }
@@ -470,6 +603,7 @@ impl ServeError {
             ServeError::Busy => "busy",
             ServeError::BadRequest(_) => "bad_request",
             ServeError::Deadline => "deadline",
+            ServeError::Unauthorized => "unauthorized",
             ServeError::Shutdown => "shutdown",
         }
     }
@@ -481,6 +615,7 @@ impl std::fmt::Display for ServeError {
             ServeError::Busy => write!(f, "busy: admission queue full"),
             ServeError::BadRequest(msg) => write!(f, "bad request: {msg}"),
             ServeError::Deadline => write!(f, "deadline expired"),
+            ServeError::Unauthorized => write!(f, "unauthorized: missing or invalid token"),
             ServeError::Shutdown => write!(f, "service shutting down"),
         }
     }
@@ -497,11 +632,16 @@ impl std::error::Error for ServeError {}
 #[derive(Debug, Clone, PartialEq)]
 pub enum Frame {
     /// Completion counter for a multi-frame request (`done`/`total`
-    /// grid cells). Servers emit one up front (`done == 0`) so clients
-    /// learn the grid size before the first row lands.
+    /// grid cells, or generations for a search). Servers emit one up
+    /// front (`done == 0`) so clients learn the total before the first
+    /// row lands.
     Progress { done: u64, total: u64 },
     /// One incremental sweep grid row, emitted in plan order.
     Row(SweepRow),
+    /// One Pareto-front point of an in-flight search, re-emitted per
+    /// generation as the frontier evolves (v2-additive frame kind; only
+    /// `search` streams carry it).
+    SearchRow(SearchPoint),
     /// Terminal frame: the typed result (or error) that ends the stream.
     Final(Result<Reply, ServeError>),
 }
@@ -517,6 +657,7 @@ impl Frame {
         match self {
             Frame::Progress { .. } => "progress",
             Frame::Row(_) => "row",
+            Frame::SearchRow(_) => "search_row",
             Frame::Final(_) => "final",
         }
     }
@@ -590,6 +731,12 @@ impl FrameSink {
     /// Emit one sweep row; `false` if the client hung up.
     pub fn row(&self, row: SweepRow) -> bool {
         self.tx.send(Frame::Row(row)).is_ok()
+    }
+
+    /// Emit one search Pareto-front point; `false` if the client hung
+    /// up — search loops treat that as a cancellation signal.
+    pub fn search_row(&self, point: SearchPoint) -> bool {
+        self.tx.send(Frame::SearchRow(point)).is_ok()
     }
 
     /// Terminate the stream with its final result. Must be called exactly
@@ -706,6 +853,9 @@ impl Ticket {
             match received {
                 Ok(Frame::Progress { .. }) => {}
                 Ok(Frame::Row(row)) => rows.push(row),
+                // Incremental frontier previews; the terminal
+                // `Reply::Search` carries the converged frontier.
+                Ok(Frame::SearchRow(_)) => {}
                 Ok(Frame::Final(result)) => {
                     return Response { id, result: collapse_stream(result, rows) };
                 }
@@ -957,6 +1107,13 @@ mod tests {
                 .priority(),
             Priority::Batch
         );
+        // searches get their own lane; the cancel that stops one is a
+        // point query (it must be admittable while every lane is full)
+        assert_eq!(
+            RequestBody::Search { spec: SearchSpec::default() }.priority(),
+            Priority::Search
+        );
+        assert_eq!(RequestBody::Cancel { target: 7 }.priority(), Priority::Interactive);
     }
 
     #[test]
@@ -964,6 +1121,23 @@ mod tests {
         assert_eq!(ServeError::Busy.code(), "busy");
         assert_eq!(ServeError::BadRequest("x".into()).code(), "bad_request");
         assert_eq!(ServeError::Deadline.code(), "deadline");
+        assert_eq!(ServeError::Unauthorized.code(), "unauthorized");
         assert_eq!(ServeError::Shutdown.code(), "shutdown");
+    }
+
+    #[test]
+    fn search_spec_validation_bounds_remote_input() {
+        assert!(SearchSpec::default().validate().is_ok());
+        let tiny = SearchSpec { population: 1, ..SearchSpec::default() };
+        assert!(tiny.validate().is_err());
+        let huge = SearchSpec { population: MAX_SEARCH_POPULATION + 1, ..SearchSpec::default() };
+        assert!(huge.validate().is_err());
+        let long = SearchSpec { iterations: MAX_SEARCH_ITERATIONS + 1, ..SearchSpec::default() };
+        assert!(long.validate().is_err());
+        let wild = SearchSpec { mutation_p: 1.5, ..SearchSpec::default() };
+        assert!(wild.validate().is_err());
+        // zero iterations is legal: initial population + frontier only
+        let flat = SearchSpec { iterations: 0, ..SearchSpec::default() };
+        assert!(flat.validate().is_ok());
     }
 }

@@ -6,7 +6,8 @@
 use super::super::evaluator::HybridSpace;
 use super::pareto::{pareto_front, pareto_ranks, Point};
 use super::predictor::{AccuracyPredictor, TrainMethod};
-use crate::exec::Pool;
+use super::SearchEvent;
+use crate::exec::{CancelToken, Pool};
 use crate::rng::Rng;
 use std::sync::Arc;
 
@@ -57,6 +58,10 @@ pub struct EaResult {
     pub evaluated: usize,
     pub best_acc: Candidate,
     pub fastest: Candidate,
+    /// Generations actually completed (== `iterations` unless cancelled).
+    pub generations: usize,
+    /// The run stopped early on a tripped [`CancelToken`].
+    pub cancelled: bool,
 }
 
 fn evaluate(
@@ -95,6 +100,32 @@ pub fn run_ea(
     method: TrainMethod,
     cfg: &EaConfig,
 ) -> EaResult {
+    run_ea_with(space, pred, method, cfg, &CancelToken::new(), |_| {})
+}
+
+/// Pareto front over everything evaluated so far (latency-sorted).
+fn front_of(all: &[Candidate]) -> Vec<Candidate> {
+    let pts: Vec<Point<usize>> = all
+        .iter()
+        .enumerate()
+        .map(|(i, c)| Point { acc: c.acc, latency_ms: c.latency_ms, tag: i })
+        .collect();
+    pareto_front(&pts).into_iter().map(|p| all[p.tag].clone()).collect()
+}
+
+/// [`run_ea`] with the serving hooks (same contract as `run_nas_with`):
+/// `on_event` fires after every completed generation with the running
+/// pareto front; `cancel` is checked between generations, so a tripped
+/// token stops the run within one generation and the partial frontier
+/// comes back flagged `cancelled`. Determinism per seed is unchanged.
+pub fn run_ea_with(
+    space: &HybridSpace,
+    pred: &AccuracyPredictor,
+    method: TrainMethod,
+    cfg: &EaConfig,
+    cancel: &CancelToken,
+    mut on_event: impl FnMut(SearchEvent<Candidate>),
+) -> EaResult {
     let n = space.num_blocks();
     let mut rng = Rng::new(cfg.seed);
     let pool = Pool::new(cfg.threads);
@@ -109,8 +140,14 @@ pub fn run_ea(
     );
     let mut pop = eval_batch(init, &pool, &space_arc, &pred_arc, method);
     let mut all: Vec<Candidate> = pop.clone();
+    let mut generations = 0;
+    let mut cancelled = false;
 
     for _ in 0..cfg.iterations {
+        if cancel.is_cancelled() {
+            cancelled = true;
+            break;
+        }
         // Pareto-rank the population; parents come from the best ranks.
         let pts: Vec<Point<usize>> = pop
             .iter()
@@ -150,15 +187,15 @@ pub fn run_ea(
         next.extend(eval_batch(children, &pool, &space_arc, &pred_arc, method));
         all.extend(next.iter().cloned());
         pop = next;
+        generations += 1;
+        on_event(SearchEvent::Generation {
+            done: generations,
+            total: cfg.iterations,
+            front: &front_of(&all),
+        });
     }
 
-    let pts: Vec<Point<usize>> = all
-        .iter()
-        .enumerate()
-        .map(|(i, c)| Point { acc: c.acc, latency_ms: c.latency_ms, tag: i })
-        .collect();
-    let front = pareto_front(&pts);
-    let frontier: Vec<Candidate> = front.iter().map(|p| all[p.tag].clone()).collect();
+    let frontier = front_of(&all);
     let best_acc = frontier
         .iter()
         .max_by(|a, b| a.acc.partial_cmp(&b.acc).unwrap())
@@ -169,7 +206,7 @@ pub fn run_ea(
         .min_by(|a, b| a.latency_ms.partial_cmp(&b.latency_ms).unwrap())
         .unwrap()
         .clone();
-    EaResult { frontier, evaluated: all.len(), best_acc, fastest }
+    EaResult { frontier, evaluated: all.len(), best_acc, fastest, generations, cancelled }
 }
 
 #[cfg(test)]
@@ -272,5 +309,30 @@ mod tests {
     fn evaluated_counts_grow_with_iterations() {
         let (_, r) = small_run(11);
         assert_eq!(r.evaluated, 24 + 12 * 24);
+        assert_eq!(r.generations, 12);
+        assert!(!r.cancelled);
+    }
+
+    #[test]
+    fn cancel_and_events_mirror_the_nas_contract() {
+        let ev = Evaluator::new(SimConfig::default());
+        let space = HybridSpace::new(&mobilenet_v3::large(), &ev);
+        let pred = AccuracyPredictor::for_space(&space);
+        let cfg = EaConfig { population: 12, iterations: 50, seed: 4, ..EaConfig::default() };
+        let token = CancelToken::new();
+        let mut events = 0;
+        let r = run_ea_with(&space, &pred, TrainMethod::Nos, &cfg, &token, |e| {
+            let SearchEvent::Generation { done, total, front } = e;
+            events += 1;
+            assert_eq!(done, events);
+            assert_eq!(total, 50);
+            assert!(!front.is_empty());
+            if done == 2 {
+                token.cancel();
+            }
+        });
+        assert!(r.cancelled);
+        assert_eq!(r.generations, 2);
+        assert!(!r.frontier.is_empty());
     }
 }

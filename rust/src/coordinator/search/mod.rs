@@ -1,13 +1,28 @@
 //! Search strategies over FuSe design spaces: evolutionary hybrid search
 //! (Fig 13), OFA-space NAS with the FuSe operator choice (Fig 15), the
-//! calibrated accuracy predictor, and pareto utilities.
+//! calibrated accuracy predictor, and pareto utilities. The `*_with`
+//! entry points ([`run_nas_with`], [`run_ea_with`]) add the serving
+//! hooks — a per-generation [`SearchEvent`] callback and a cooperative
+//! [`CancelToken`](crate::exec::CancelToken) — that the `search` wire op
+//! streams over the frame API.
 
 pub mod ea;
 pub mod nas;
 pub mod pareto;
 pub mod predictor;
 
-pub use ea::{run_ea, Candidate, EaConfig, EaResult};
-pub use nas::{run_nas, NasCandidate, NasConfig, NasResult};
+/// Progress callback payload for the `*_with` search runners (mirrors
+/// `SweepEvent` in the sweep engine). `C` is the runner's candidate
+/// type ([`NasCandidate`] or [`Candidate`]).
+#[derive(Debug)]
+pub enum SearchEvent<'a, C> {
+    /// One generation finished: `done` of `total` iterations complete,
+    /// with the current pareto front over everything evaluated so far
+    /// (latency-sorted; the serving layer emits one row per point).
+    Generation { done: usize, total: usize, front: &'a [C] },
+}
+
+pub use ea::{run_ea, run_ea_with, Candidate, EaConfig, EaResult};
+pub use nas::{run_nas, run_nas_with, NasCandidate, NasConfig, NasResult};
 pub use pareto::{pareto_front, pareto_ranks, Point};
 pub use predictor::{paper_anchor, predict_ofa, AccuracyPredictor, TrainMethod};

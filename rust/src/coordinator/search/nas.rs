@@ -7,9 +7,11 @@
 use super::super::evaluator::Evaluator;
 use super::pareto::{pareto_front, pareto_ranks, Point};
 use super::predictor::{predict_ofa, TrainMethod};
-use crate::exec::Pool;
+use super::SearchEvent;
+use crate::exec::{CancelToken, Pool};
 use crate::nn::models::ofa::OfaGenome;
 use crate::rng::Rng;
+use crate::sim::ResultCache;
 use std::sync::Arc;
 
 #[derive(Debug, Clone)]
@@ -48,19 +50,53 @@ pub struct NasCandidate {
 pub struct NasResult {
     pub frontier: Vec<NasCandidate>,
     pub evaluated: usize,
+    /// Generations actually completed (== `iterations` unless cancelled).
+    pub generations: usize,
+    /// The run stopped early on a tripped [`CancelToken`]; `frontier`
+    /// covers everything evaluated before the stop.
+    pub cancelled: bool,
 }
 
-fn evaluate(genome: OfaGenome, ev: &Evaluator) -> NasCandidate {
+fn evaluate(genome: OfaGenome, ev: &Evaluator, results: Option<&ResultCache>) -> NasCandidate {
     let net = genome.realize("nas");
-    let e = ev.eval(&net);
-    let macs_m = e.macs as f64 / 1e6;
+    let (cycles, macs, params) = match results {
+        // Route the whole-network simulation through the global result
+        // cache: repeated genomes across generations (elites re-emitted
+        // by mutation) and across concurrent searches simulate once.
+        // Cycle counts are identical to the plain path — the cache runs
+        // the same simulate_network_cached over the same layer cache —
+        // so routing does not perturb determinism. No deadline: the
+        // leader always completes, so `simulate` cannot return None.
+        Some(rc) => {
+            let sim = rc
+                .simulate(&net, &ev.cfg, ev.cache(), None)
+                .expect("deadline-free simulate always completes");
+            (sim.total_cycles, net.total_macs(), net.total_params())
+        }
+        None => {
+            let e = ev.eval(&net);
+            (e.cycles, e.macs, e.params)
+        }
+    };
+    let macs_m = macs as f64 / 1e6;
     NasCandidate {
         acc: predict_ofa(&genome, macs_m, TrainMethod::Nos),
-        latency_ms: e.latency_ms,
+        latency_ms: ev.cfg.cycles_to_ms(cycles),
         macs_millions: macs_m,
-        params_millions: e.params as f64 / 1e6,
+        params_millions: params as f64 / 1e6,
         genome,
     }
+}
+
+/// Pareto front over everything evaluated so far (latency-sorted, so the
+/// emitted row order is deterministic).
+fn front_of(all: &[NasCandidate]) -> Vec<NasCandidate> {
+    let pts: Vec<Point<usize>> = all
+        .iter()
+        .enumerate()
+        .map(|(i, c)| Point { acc: c.acc, latency_ms: c.latency_ms, tag: i })
+        .collect();
+    pareto_front(&pts).into_iter().map(|p| all[p.tag].clone()).collect()
 }
 
 /// Evolutionary NAS. Population evaluation is parallel (genome realization
@@ -68,20 +104,47 @@ fn evaluate(genome: OfaGenome, ev: &Evaluator) -> NasCandidate {
 /// is shared across all workers, so recurring block geometries across
 /// genomes are priced once).
 pub fn run_nas(ev: Arc<Evaluator>, cfg: &NasConfig) -> NasResult {
+    run_nas_with(ev, cfg, None, &CancelToken::new(), |_| {})
+}
+
+/// [`run_nas`] with the serving hooks (mirrors `run_sweep_with`):
+/// `on_event` fires after every completed generation with the current
+/// pareto front over everything evaluated so far; `cancel` is checked
+/// between generations, so a tripped token stops the run within one
+/// generation (the partial frontier is still returned, flagged
+/// `cancelled`); `results` optionally routes per-genome simulation
+/// through the global [`ResultCache`]. Determinism is unchanged: genome
+/// generation stays serial on the seeded RNG, evaluation order is
+/// preserved by `scope_map`, so equal seeds give byte-equal frontiers
+/// for any thread count, with or without the cache.
+pub fn run_nas_with(
+    ev: Arc<Evaluator>,
+    cfg: &NasConfig,
+    results: Option<&Arc<ResultCache>>,
+    cancel: &CancelToken,
+    mut on_event: impl FnMut(SearchEvent<NasCandidate>),
+) -> NasResult {
     let mut rng = Rng::new(cfg.seed);
     let pool = Pool::new(cfg.threads);
 
     let eval_batch = |genomes: Vec<OfaGenome>, pool: &Pool, ev: &Arc<Evaluator>| {
         let ev = Arc::clone(ev);
-        pool.scope_map(genomes, move |g| evaluate(g, &ev))
+        let rc = results.map(Arc::clone);
+        pool.scope_map(genomes, move |g| evaluate(g, &ev, rc.as_deref()))
     };
 
     let init: Vec<OfaGenome> =
         (0..cfg.population).map(|_| OfaGenome::random(&mut rng, cfg.allow_fuse)).collect();
     let mut pop = eval_batch(init, &pool, &ev);
     let mut all = pop.clone();
+    let mut generations = 0;
+    let mut cancelled = false;
 
     for _ in 0..cfg.iterations {
+        if cancel.is_cancelled() {
+            cancelled = true;
+            break;
+        }
         let pts: Vec<Point<usize>> = pop
             .iter()
             .enumerate()
@@ -105,15 +168,15 @@ pub fn run_nas(ev: Arc<Evaluator>, cfg: &NasConfig) -> NasResult {
         }
         pop = eval_batch(children, &pool, &ev);
         all.extend(pop.iter().cloned());
+        generations += 1;
+        on_event(SearchEvent::Generation {
+            done: generations,
+            total: cfg.iterations,
+            front: &front_of(&all),
+        });
     }
 
-    let pts: Vec<Point<usize>> = all
-        .iter()
-        .enumerate()
-        .map(|(i, c)| Point { acc: c.acc, latency_ms: c.latency_ms, tag: i })
-        .collect();
-    let frontier = pareto_front(&pts).into_iter().map(|p| all[p.tag].clone()).collect();
-    NasResult { frontier, evaluated: all.len() }
+    NasResult { frontier: front_of(&all), evaluated: all.len(), generations, cancelled }
 }
 
 #[cfg(test)]
@@ -173,10 +236,78 @@ mod tests {
     fn deterministic_given_seed() {
         let a = tiny(true, 9);
         let b = tiny(true, 9);
+        assert!(!a.cancelled);
+        assert_eq!(a.generations, 4);
         assert_eq!(a.frontier.len(), b.frontier.len());
         for (x, y) in a.frontier.iter().zip(&b.frontier) {
             assert!((x.acc - y.acc).abs() < 1e-12);
             assert!((x.latency_ms - y.latency_ms).abs() < 1e-12);
         }
+    }
+
+    #[test]
+    fn events_fire_per_generation_with_the_running_front() {
+        let ev = Arc::new(Evaluator::new(SimConfig::default()));
+        let cfg = NasConfig { population: 6, iterations: 3, threads: 2, ..NasConfig::default() };
+        let mut seen: Vec<(usize, usize, usize)> = Vec::new();
+        let r = run_nas_with(ev, &cfg, None, &CancelToken::new(), |e| {
+            let SearchEvent::Generation { done, total, front } = e;
+            assert!(!front.is_empty());
+            seen.push((done, total, front.len()));
+        });
+        assert_eq!(seen.len(), 3);
+        for (i, (done, total, _)) in seen.iter().enumerate() {
+            assert_eq!(*done, i + 1);
+            assert_eq!(*total, 3);
+        }
+        // the last event's front is the final frontier
+        assert_eq!(seen.last().unwrap().2, r.frontier.len());
+    }
+
+    #[test]
+    fn tripped_token_stops_within_one_generation() {
+        let ev = Arc::new(Evaluator::new(SimConfig::default()));
+        let cfg =
+            NasConfig { population: 6, iterations: 100, threads: 2, ..NasConfig::default() };
+        let token = CancelToken::new();
+        let mut events = 0;
+        let r = run_nas_with(Arc::clone(&ev), &cfg, None, &token, |_| {
+            events += 1;
+            token.cancel(); // trip after the first generation's event
+        });
+        assert!(r.cancelled);
+        assert_eq!(r.generations, 1);
+        assert_eq!(events, 1);
+        assert_eq!(r.evaluated, 6 + 6); // init + one generation, not 100
+        assert!(!r.frontier.is_empty(), "partial frontier survives a cancel");
+    }
+
+    #[test]
+    fn result_cache_routing_is_bit_identical_and_dedups() {
+        let ev = Arc::new(Evaluator::new(SimConfig::default()));
+        let cfg = NasConfig { population: 8, iterations: 3, threads: 2, ..NasConfig::default() };
+        let plain = run_nas(Arc::clone(&ev), &cfg);
+        let rc = Arc::new(ResultCache::new(256));
+        let cached =
+            run_nas_with(Arc::clone(&ev), &cfg, Some(&rc), &CancelToken::new(), |_| {});
+        assert_eq!(plain.frontier.len(), cached.frontier.len());
+        for (x, y) in plain.frontier.iter().zip(&cached.frontier) {
+            assert_eq!(x.genome, y.genome);
+            assert_eq!(x.acc.to_bits(), y.acc.to_bits(), "acc must be bit-identical");
+            assert_eq!(x.latency_ms.to_bits(), y.latency_ms.to_bits());
+        }
+        // repeated genomes across generations simulate once
+        let stats = rc.stats();
+        assert!(
+            (stats.misses as usize) <= cached.evaluated,
+            "misses {} > evaluated {}",
+            stats.misses,
+            cached.evaluated
+        );
+        // a second same-seed run through the same cache is all hits
+        let before = rc.stats().misses;
+        let again = run_nas_with(Arc::clone(&ev), &cfg, Some(&rc), &CancelToken::new(), |_| {});
+        assert_eq!(again.frontier.len(), cached.frontier.len());
+        assert_eq!(rc.stats().misses, before, "no new simulations on a repeat run");
     }
 }

@@ -33,22 +33,25 @@
 //! ```
 
 use super::batcher::{BatchPolicy, Batcher, Pending};
+use super::evaluator::Evaluator;
 use super::net::TransportGauges;
 use super::protocol::{
     ConfigPatch, FrameSink, InferReply, ModelSpec, Priority, Reply, Request, RequestBody,
-    Response, ServeError, Service, SimSummary, StatsReply, SweepRow, Ticket, ZooEntry,
-    PROTOCOL_VERSION,
+    Response, SearchPoint, SearchReply, SearchSpec, ServeError, Service, SimSummary,
+    StatsReply, SweepRow, Ticket, ZooEntry, PROTOCOL_VERSION,
 };
-use crate::exec::Pool;
+use super::search::{run_nas_with, NasCandidate, NasConfig, SearchEvent};
+use crate::exec::{CancelToken, Pool};
 use crate::nn::models;
 use crate::sim::{
     run_sweep_coalesced, simulate_network_cached, CacheStats, FuseVariant, LayerCache,
     ResultCache, ResultCacheStats, SweepEvent, SweepOutcome, SweepPlan, SweepRecord,
 };
 use crate::stats::Summary;
+use std::collections::HashMap;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc};
+use std::sync::{mpsc, Arc, Mutex};
 use std::thread;
 use std::time::{Duration, Instant};
 
@@ -365,6 +368,20 @@ pub const DEFAULT_SIM_CAPACITY: usize = 256;
 /// interactive one.
 pub const DEFAULT_BATCH_CAPACITY: usize = 32;
 
+/// Default bound on concurrently admitted `Search` jobs. A search is a
+/// multi-minute evolutionary run that owns a worker pool for its whole
+/// lifetime, so the lane is the narrowest of the three — searches can
+/// never starve sweeps or point queries, and vice versa.
+pub const DEFAULT_SEARCH_CAPACITY: usize = 4;
+
+/// Cooperative-cancellation registry: client request id → the
+/// [`CancelToken`]s of every live stream admitted under that id. A
+/// `cancel` request trips all of them (ids are per-connection counters,
+/// so distinct clients may collide — tripping both is the safe
+/// reading); each stream deregisters its own token (pointer equality)
+/// when it finishes, so cancel-after-final is a no-op.
+type CancelRegistry = Arc<Mutex<HashMap<u64, Vec<CancelToken>>>>;
+
 
 /// One bounded admission lane: a capacity plus its in-flight counter.
 /// The counter is shared (`Arc`) with worker closures that release the
@@ -444,8 +461,15 @@ pub struct SimServer {
     results: Option<Arc<ResultCache>>,
     interactive: Lane,
     batch: Lane,
+    /// Third admission lane: long-lived `Search` jobs.
+    search: Lane,
+    /// Live cancel tokens by client request id (`Cancel` requests).
+    cancels: CancelRegistry,
     submitted: AtomicU64,
     completed: Arc<AtomicU64>,
+    search_started: AtomicU64,
+    search_completed: Arc<AtomicU64>,
+    search_cancelled: Arc<AtomicU64>,
 }
 
 impl SimServer {
@@ -493,9 +517,21 @@ impl SimServer {
             results: None,
             interactive: Lane::new(interactive),
             batch: Lane::new(batch),
+            search: Lane::new(DEFAULT_SEARCH_CAPACITY),
+            cancels: Arc::new(Mutex::new(HashMap::new())),
             submitted: 0.into(),
             completed: Arc::new(AtomicU64::new(0)),
+            search_started: 0.into(),
+            search_completed: Arc::new(AtomicU64::new(0)),
+            search_cancelled: Arc::new(AtomicU64::new(0)),
         }
+    }
+
+    /// Override the `Search` lane bound (defaults to
+    /// [`DEFAULT_SEARCH_CAPACITY`]).
+    pub fn with_search_capacity(mut self, capacity: usize) -> SimServer {
+        self.search = Lane::new(capacity);
+        self
     }
 
     /// Attach (or share) a cross-request [`ResultCache`]: `Simulate`
@@ -524,13 +560,42 @@ impl SimServer {
         match priority {
             Priority::Interactive => &self.interactive,
             Priority::Batch => &self.batch,
+            Priority::Search => &self.search,
         }
+    }
+
+    /// Register a stream's cancel token under its client request id.
+    fn register_cancel(&self, id: u64, token: CancelToken) {
+        self.cancels.lock().unwrap().entry(id).or_default().push(token);
+    }
+
+    /// Trip every live token registered under `target`. Idempotent:
+    /// unknown (or already-finished) ids trip nothing — the reply is
+    /// `Done` either way, so cancel-after-final is harmless.
+    fn cancel_target(&self, target: u64) {
+        if let Some(tokens) = self.cancels.lock().unwrap().get(&target) {
+            for t in tokens {
+                t.cancel();
+            }
+        }
+    }
+
+    /// In-flight `Search` jobs right now (tests observe slot release).
+    pub fn search_inflight(&self) -> usize {
+        self.search.inflight.load(Ordering::Acquire)
     }
 
     /// Run a whole sweep plan synchronously on the server's pool + cache
     /// (in-process callers; wire traffic goes through `Sweep` requests).
     pub fn sweep(&self, plan: &SweepPlan) -> SweepOutcome {
-        run_sweep_coalesced(plan, &self.pool, &self.cache, self.results.as_ref(), |_| {})
+        run_sweep_coalesced(
+            plan,
+            &self.pool,
+            &self.cache,
+            self.results.as_ref(),
+            &CancelToken::new(),
+            |_| {},
+        )
     }
 
     /// Scenario requests admitted since start.
@@ -568,6 +633,9 @@ impl SimServer {
             result_evicted: rs.evicted,
             result_entries: rs.entries,
             result_bytes: rs.bytes,
+            search_started: self.search_started.load(Ordering::Relaxed),
+            search_completed: self.search_completed.load(Ordering::Relaxed),
+            search_cancelled: self.search_cancelled.load(Ordering::Relaxed),
             // transport gauges are overlaid by whoever mounts the
             // service behind a frontend (see Router::with_gauges)
             ..StatsReply::default()
@@ -622,6 +690,9 @@ impl Service for SimServer {
                 let results = self.results.clone();
                 let inflight = Arc::clone(&lane.inflight);
                 let completed = Arc::clone(&self.completed);
+                let token = CancelToken::new();
+                self.register_cancel(id, token.clone());
+                let cancels = Arc::clone(&self.cancels);
                 // A sweep is a whole fork/join grid: run it from a fresh
                 // coordinator thread so the pool's workers stay job-sized
                 // (a sweep *on* a worker would deadlock the join).
@@ -638,17 +709,75 @@ impl Service for SimServer {
                                 &cache,
                                 results.as_ref(),
                                 &sink,
+                                &token,
                             )
                         }))
                         .unwrap_or_else(|_| {
                             Err(ServeError::BadRequest("sweep panicked".into()))
                         });
+                        deregister_cancel(&cancels, id, &token);
                         completed.fetch_add(1, Ordering::Relaxed);
                         inflight.fetch_sub(1, Ordering::Release);
                         sink.finish(result);
                     })
                     .expect("spawn sweep thread");
                 ticket
+            }
+            RequestBody::Search { spec } => {
+                if let Err(e) = spec.validate() {
+                    return Ticket::immediate(Response::err(id, e));
+                }
+                // Search lane: long jobs only compete with other searches.
+                if !lane.admit() {
+                    return Ticket::immediate(Response::err(id, ServeError::Busy));
+                }
+                self.search_started.fetch_add(1, Ordering::Relaxed);
+                let (ticket, sink) = Ticket::pending(id);
+                let cache = Arc::clone(&self.cache);
+                let results = self.results.clone();
+                let inflight = Arc::clone(&lane.inflight);
+                let completed = Arc::clone(&self.search_completed);
+                let cancelled = Arc::clone(&self.search_cancelled);
+                let token = CancelToken::new();
+                self.register_cancel(id, token.clone());
+                let cancels = Arc::clone(&self.cancels);
+                // Like a sweep, a search owns a fork/join pool for its
+                // whole run — coordinate it from a dedicated thread.
+                let _detached = thread::Builder::new()
+                    .name("fuseconv-search-req".into())
+                    .spawn(move || {
+                        let result = catch_unwind(AssertUnwindSafe(|| {
+                            search_request(
+                                spec,
+                                deadline,
+                                &cache,
+                                results.as_ref(),
+                                &sink,
+                                &token,
+                            )
+                        }))
+                        .unwrap_or_else(|_| {
+                            Err(ServeError::BadRequest("search panicked".into()))
+                        });
+                        deregister_cancel(&cancels, id, &token);
+                        match &result {
+                            Ok(Reply::Search(r)) if r.cancelled => {
+                                cancelled.fetch_add(1, Ordering::Relaxed);
+                            }
+                            Ok(_) => {
+                                completed.fetch_add(1, Ordering::Relaxed);
+                            }
+                            Err(_) => {}
+                        }
+                        inflight.fetch_sub(1, Ordering::Release);
+                        sink.finish(result);
+                    })
+                    .expect("spawn search thread");
+                ticket
+            }
+            RequestBody::Cancel { target } => {
+                self.cancel_target(target);
+                Ticket::immediate(Response::ok(id, Reply::Done))
             }
             RequestBody::Stats => {
                 Ticket::immediate(Response::ok(id, Reply::Stats(self.stats_reply())))
@@ -725,6 +854,7 @@ fn sweep_request(
     cache: &Arc<LayerCache>,
     results: Option<&Arc<ResultCache>>,
     sink: &FrameSink,
+    cancel: &CancelToken,
 ) -> Result<Reply, ServeError> {
     if deadline.is_some_and(|d| Instant::now() > d) {
         return Err(ServeError::Deadline);
@@ -743,16 +873,105 @@ fn sweep_request(
     }
     // Up-front progress frame: the client learns the grid size before
     // the first row lands (and even 1-cell grids stream ≥1 progress).
-    sink.progress(0, plan.len() as u64);
-    run_sweep_coalesced(&plan, pool, cache, results, |event| match event {
+    if !sink.progress(0, plan.len() as u64) {
+        cancel.cancel();
+    }
+    // A failed send means the client hung up: trip the token so the
+    // sweep engine's workers stop pricing the remaining cells instead
+    // of burning pool cycles into a closed socket.
+    run_sweep_coalesced(&plan, pool, cache, results, cancel, |event| match event {
         SweepEvent::Progress { done, total } => {
-            sink.progress(done as u64, total as u64);
+            if !sink.progress(done as u64, total as u64) {
+                cancel.cancel();
+            }
         }
         SweepEvent::Row { record, .. } => {
-            sink.row(sweep_row_of(record));
+            if !sink.row(sweep_row_of(record)) {
+                cancel.cancel();
+            }
         }
     });
     Ok(Reply::Done)
+}
+
+/// Wire form of a search candidate: the genome travels as its compact
+/// string encoding so the shard tier can relay rows without re-parsing.
+fn point_of(c: &NasCandidate, rank: u64) -> SearchPoint {
+    SearchPoint {
+        genome: c.genome.compact(),
+        acc: c.acc,
+        latency_ms: c.latency_ms,
+        macs_m: c.macs_millions,
+        params_m: c.params_millions,
+        rank,
+    }
+}
+
+/// One streamed `Search` request: run evolutionary NAS over the OFA+FuSe
+/// space, streaming `Progress` per generation plus the running pareto
+/// front as `SearchRow` frames, with per-genome simulation routed through
+/// the global result cache. Cancellation is cooperative: an explicit
+/// `cancel` frame trips the registered token, and a dead client (any
+/// frame send returning `false`) trips it too — either way the run stops
+/// within one generation and the terminal reply carries the partial
+/// frontier flagged `cancelled`.
+fn search_request(
+    spec: SearchSpec,
+    deadline: Option<Instant>,
+    cache: &Arc<LayerCache>,
+    results: Option<&Arc<ResultCache>>,
+    sink: &FrameSink,
+    cancel: &CancelToken,
+) -> Result<Reply, ServeError> {
+    if deadline.is_some_and(|d| Instant::now() > d) {
+        return Err(ServeError::Deadline);
+    }
+    let cfg = spec.config.to_config()?;
+    let ev = Arc::new(Evaluator::with_cache(cfg, Arc::clone(cache)));
+    let nas = NasConfig {
+        population: spec.population,
+        iterations: spec.iterations,
+        mutation_p: spec.mutation_p,
+        allow_fuse: spec.allow_fuse,
+        seed: spec.seed,
+        threads: 0,
+    };
+    if !sink.progress(0, nas.iterations as u64) {
+        cancel.cancel();
+    }
+    let result = run_nas_with(ev, &nas, results, cancel, |event| {
+        let SearchEvent::Generation { done, total, front } = event;
+        let mut alive = sink.progress(done as u64, total as u64);
+        for c in front {
+            if !alive {
+                break;
+            }
+            alive = sink.search_row(point_of(c, 0));
+        }
+        if !alive {
+            cancel.cancel();
+        }
+    });
+    Ok(Reply::Search(SearchReply {
+        frontier: result.frontier.iter().map(|c| point_of(c, 0)).collect(),
+        evaluated: result.evaluated as u64,
+        generations: result.generations as u64,
+        cancelled: result.cancelled,
+    }))
+}
+
+/// Drop one finished stream's token from the cancel registry (keyed by
+/// client request id; ids can collide across connections, so only the
+/// exact token is removed). Free function because the detached request
+/// thread outlives its borrow of the server.
+fn deregister_cancel(cancels: &CancelRegistry, id: u64, token: &CancelToken) {
+    let mut map = cancels.lock().unwrap();
+    if let Some(tokens) = map.get_mut(&id) {
+        tokens.retain(|t| !t.same(token));
+        if tokens.is_empty() {
+            map.remove(&id);
+        }
+    }
 }
 
 /// The zoo listing served to `Zoo` requests.
@@ -1179,6 +1398,7 @@ mod tests {
                     progress += 1;
                 }
                 Frame::Row(row) => rows.push(row),
+                Frame::SearchRow(p) => panic!("sweep stream leaked a search row: {p:?}"),
                 Frame::Final(result) => {
                     assert_eq!(result, Ok(Reply::Done));
                     break;
@@ -1303,5 +1523,132 @@ mod tests {
         let t = router.call(Request::new(1, RequestBody::Infer { input: vec![0.0; 4] }));
         assert!(matches!(t.wait().result, Err(ServeError::BadRequest(_))));
         assert!(router.into_stats().is_none());
+    }
+
+    fn tiny_search() -> SearchSpec {
+        SearchSpec {
+            population: 6,
+            iterations: 3,
+            config: ConfigPatch::sized(8),
+            ..SearchSpec::default()
+        }
+    }
+
+    /// Drain a search stream into (progress, rows, terminal reply).
+    fn drain_search(mut t: Ticket) -> (Vec<(u64, u64)>, Vec<SearchPoint>, SearchReply) {
+        let mut progress = Vec::new();
+        let mut rows = Vec::new();
+        loop {
+            match t.recv_deadline(Duration::from_secs(120)).expect("stream frame") {
+                Frame::Progress { done, total } => progress.push((done, total)),
+                Frame::SearchRow(p) => rows.push(p),
+                Frame::Row(row) => panic!("search stream leaked a sweep row: {row:?}"),
+                Frame::Final(result) => match result {
+                    Ok(Reply::Search(r)) => return (progress, rows, r),
+                    other => panic!("expected search reply, got {other:?}"),
+                },
+            }
+        }
+    }
+
+    #[test]
+    fn search_streams_progress_and_rows_before_final() {
+        let server = SimServer::new(2);
+        let spec = tiny_search();
+        let t = server.call(Request::new(11, RequestBody::Search { spec: spec.clone() }));
+        let (progress, rows, reply) = drain_search(t);
+        // the up-front 0/total frame plus one per generation
+        assert_eq!(progress.first(), Some(&(0, 3)));
+        assert_eq!(progress.len(), 4);
+        assert_eq!(progress.last(), Some(&(3, 3)));
+        assert!(!rows.is_empty(), "per-generation pareto rows must stream");
+        assert!(!reply.cancelled);
+        assert_eq!(reply.generations, 3);
+        assert_eq!(reply.evaluated, 6 + 3 * 6);
+        assert!(!reply.frontier.is_empty());
+        // the last generation's rows are exactly the final frontier
+        let tail = &rows[rows.len() - reply.frontier.len()..];
+        for (row, fin) in tail.iter().zip(&reply.frontier) {
+            assert_eq!(row.genome, fin.genome);
+            assert_eq!(row.latency_ms.to_bits(), fin.latency_ms.to_bits());
+        }
+        // same seed ⇒ byte-identical stream and reply
+        let t = server.call(Request::new(12, RequestBody::Search { spec }));
+        let (progress2, rows2, reply2) = drain_search(t);
+        assert_eq!(progress, progress2);
+        assert_eq!(rows.len(), rows2.len());
+        for (a, b) in rows.iter().zip(&rows2) {
+            assert_eq!(a.genome, b.genome);
+            assert_eq!(a.acc.to_bits(), b.acc.to_bits());
+            assert_eq!(a.latency_ms.to_bits(), b.latency_ms.to_bits());
+        }
+        assert_eq!(reply.frontier.len(), reply2.frontier.len());
+        let stats = server.stats_reply();
+        assert_eq!(stats.search_started, 2);
+        assert_eq!(stats.search_completed, 2);
+        assert_eq!(stats.search_cancelled, 0);
+    }
+
+    #[test]
+    fn cancel_frame_stops_search_and_frees_the_lane_slot() {
+        let server = SimServer::new(2);
+        let spec = SearchSpec { iterations: 1024, ..tiny_search() };
+        let mut t = server.call(Request::new(21, RequestBody::Search { spec }));
+        // wait until the run is demonstrably underway
+        match t.recv_deadline(Duration::from_secs(60)).expect("first frame") {
+            Frame::Progress { done: 0, total: 1024 } => {}
+            other => panic!("expected up-front progress, got {other:?}"),
+        }
+        assert_eq!(server.search_inflight(), 1);
+        let c = server.call(Request::new(22, RequestBody::Cancel { target: 21 }));
+        assert_eq!(c.wait().result, Ok(Reply::Done));
+        // drain to the terminal frame: partial frontier, flagged cancelled
+        let reply = loop {
+            match t.recv_deadline(Duration::from_secs(120)).expect("stream frame") {
+                Frame::Final(Ok(Reply::Search(r))) => break r,
+                Frame::Final(other) => panic!("expected search reply, got {other:?}"),
+                _ => {}
+            }
+        };
+        assert!(reply.cancelled);
+        assert!(reply.generations < 1024, "cancel must stop the run early");
+        // the detached thread releases its slot after finish()
+        let t0 = Instant::now();
+        while server.search_inflight() != 0 {
+            assert!(t0.elapsed() < Duration::from_secs(10), "search lane slot never freed");
+            thread::sleep(Duration::from_millis(5));
+        }
+        let stats = server.stats_reply();
+        assert_eq!(stats.search_started, 1);
+        assert_eq!(stats.search_completed, 0);
+        assert_eq!(stats.search_cancelled, 1);
+        // cancel of a finished (or unknown) id is still Done
+        let c = server.call(Request::new(23, RequestBody::Cancel { target: 999 }));
+        assert_eq!(c.wait().result, Ok(Reply::Done));
+    }
+
+    #[test]
+    fn search_lane_is_bounded_and_validation_rejects_bad_specs() {
+        let server = SimServer::with_lanes(2, Arc::new(LayerCache::new()), 4, 4)
+            .with_search_capacity(1);
+        // population below the floor bounces before touching the lane
+        let spec = SearchSpec { population: 1, ..SearchSpec::default() };
+        let t = server.call(Request::new(31, RequestBody::Search { spec }));
+        assert!(matches!(t.wait().result, Err(ServeError::BadRequest(_))));
+        assert_eq!(server.stats_reply().search_started, 0);
+        // one long search occupies the single slot; the next must bounce Busy
+        let spec = SearchSpec { iterations: 1024, ..tiny_search() };
+        let mut t1 = server.call(Request::new(32, RequestBody::Search { spec: spec.clone() }));
+        assert!(t1.recv_deadline(Duration::from_secs(60)).is_ok());
+        let t2 = server.call(Request::new(33, RequestBody::Search { spec }));
+        assert_eq!(t2.wait().result, Err(ServeError::Busy));
+        server.cancel_target(32);
+        let reply = loop {
+            match t1.recv_deadline(Duration::from_secs(120)).expect("stream frame") {
+                Frame::Final(r) => break r,
+                _ => {}
+            }
+        };
+        assert!(matches!(reply, Ok(Reply::Search(r)) if r.cancelled));
     }
 }

@@ -261,10 +261,44 @@ impl Service for ShardRouter {
                 self.spawn_proxy(b, forward(body), sink, slot);
                 ticket
             }
-            body @ (RequestBody::Infer { .. } | RequestBody::Zoo) => {
+            // `Search` is a single long-lived job, not a partitionable
+            // grid: round-robin it onto one backend whole (its layer
+            // traffic is spread across the whole OFA space, so no
+            // backend's cache has an affinity edge) and relay the frame
+            // stream — progress, live pareto rows, terminal reply —
+            // verbatim. The relay also passes *disconnect* through: a
+            // front-tier client that hangs up kills the proxy's backend
+            // connection, and the backend cancels within a generation.
+            body @ (RequestBody::Infer { .. } | RequestBody::Zoo | RequestBody::Search { .. }) => {
                 let b = self.rr.fetch_add(1, Ordering::Relaxed) % self.backends.len();
                 let (ticket, sink) = Ticket::pending(id);
                 self.spawn_proxy(b, forward(body), sink, slot);
+                ticket
+            }
+            RequestBody::Cancel { target } => {
+                // The target stream was pinned to *one* backend, but the
+                // front tier doesn't track which: fan the cancel out to
+                // all of them. Cancel is idempotent (`Done` on unknown
+                // ids), so the non-owners ack harmlessly.
+                let (ticket, sink) = Ticket::pending(id);
+                let backends = self.backends.clone();
+                let timeout = self.timeout;
+                thread::Builder::new()
+                    .name("fuseconv-shard-cancel".into())
+                    .spawn(move || {
+                        let _slot = slot;
+                        thread::scope(|s| {
+                            for addr in &backends {
+                                s.spawn(move || {
+                                    let cancel =
+                                        Request::new(id, RequestBody::Cancel { target });
+                                    let _ = request_once(addr, &cancel, timeout);
+                                });
+                            }
+                        });
+                        sink.finish(Ok(Reply::Done));
+                    })
+                    .expect("spawn shard cancel");
                 ticket
             }
             RequestBody::Stats => {
@@ -377,11 +411,24 @@ fn proxy(addr: &str, timeout: Duration, req: &Request, sink: &FrameSink) {
                 sink.finish(result);
                 return;
             }
+            // A failed send means the front-tier client hung up. Stop
+            // relaying and drop the backend connection: the backend's
+            // transport sees the disconnect and cancels its stream, so
+            // an abandoned search stops burning a whole node's pool.
             Ok(Frame::Progress { done, total }) => {
-                let _ = sink.progress(done, total);
+                if !sink.progress(done, total) {
+                    return;
+                }
             }
             Ok(Frame::Row(row)) => {
-                let _ = sink.row(row);
+                if !sink.row(row) {
+                    return;
+                }
+            }
+            Ok(Frame::SearchRow(point)) => {
+                if !sink.search_row(point) {
+                    return;
+                }
             }
             Err(_) => {
                 sink.finish(Err(ServeError::Shutdown));
@@ -440,6 +487,9 @@ fn aggregate_stats(
                 agg.result_evicted += s.result_evicted;
                 agg.result_entries += s.result_entries;
                 agg.result_bytes += s.result_bytes;
+                agg.search_started += s.search_started;
+                agg.search_completed += s.search_completed;
+                agg.search_cancelled += s.search_cancelled;
             }
             _ => {
                 return Err(ServeError::BadRequest(
@@ -625,6 +675,11 @@ fn backend_worker(
                 Ok(Frame::Progress { .. }) => {
                     // Per-backend progress is consolidated at the merge;
                     // the client sees one counter over the whole grid.
+                }
+                Ok(Frame::SearchRow(_)) => {
+                    return fail(ServeError::BadRequest(
+                        "backend emitted a search row during a sweep".into(),
+                    ));
                 }
                 Ok(Frame::Final(Ok(_))) => {
                     if !slots.is_empty() {

@@ -37,7 +37,8 @@
 
 use super::protocol::{
     ConfigPatch, Frame, InferReply, LayerSpec, ModelSpec, Reply, Request, RequestBody,
-    Response, ServeError, SimSummary, StatsReply, SweepRow, ZooEntry, PROTOCOL_VERSION,
+    Response, SearchPoint, SearchReply, SearchSpec, ServeError, SimSummary, StatsReply,
+    SweepRow, ZooEntry, PROTOCOL_VERSION,
 };
 use crate::nn::OpKind;
 use crate::sim::{Dataflow, FuseVariant, MappingPolicy, SimConfig};
@@ -877,6 +878,15 @@ fn body_fields(body: &RequestBody) -> Vec<(&'static str, Json)> {
             ));
             pairs.push(("configs", Json::Arr(configs.iter().map(patch_to_json).collect())));
         }
+        RequestBody::Search { spec } => {
+            pairs.push(("population", Json::UInt(spec.population as u64)));
+            pairs.push(("iterations", Json::UInt(spec.iterations as u64)));
+            pairs.push(("mutation_p", Json::Num(spec.mutation_p)));
+            pairs.push(("allow_fuse", Json::Bool(spec.allow_fuse)));
+            pairs.push(("seed", Json::UInt(spec.seed)));
+            pairs.push(("config", patch_to_json(&spec.config)));
+        }
+        RequestBody::Cancel { target } => pairs.push(("target", Json::UInt(*target))),
         RequestBody::Stats | RequestBody::Zoo | RequestBody::Shutdown => {}
     }
     pairs
@@ -891,6 +901,9 @@ pub fn encode_request(req: &Request) -> String {
     if let Some(ms) = req.deadline_ms {
         pairs.push(("deadline_ms", Json::UInt(ms)));
     }
+    if let Some(tok) = &req.token {
+        pairs.push(("token", Json::Str(tok.clone())));
+    }
     pairs.push(("op", Json::Str(req.body.op().to_string())));
     pairs.extend(body_fields(&req.body));
     let mut out = String::new();
@@ -901,7 +914,9 @@ pub fn encode_request(req: &Request) -> String {
 /// Encode a request as an HTTP body: the same fields as the TCP frame
 /// minus `v` and `op` — the URL carries both (`POST /v1/<op>`, where
 /// `v1` versions the HTTP mapping). `id` and `deadline_ms` stay in the
-/// body so HTTP clients keep the envelope's correlation semantics.
+/// body so HTTP clients keep the envelope's correlation semantics. The
+/// `token` envelope field is also omitted: HTTP auth rides the
+/// `Authorization: Bearer` header, never the body (PROTOCOL.md §12).
 pub fn encode_request_body(req: &Request) -> String {
     let mut pairs: Vec<(&str, Json)> = vec![("id", Json::UInt(req.id))];
     if let Some(ms) = req.deadline_ms {
@@ -929,8 +944,16 @@ pub fn decode_request(text: &str) -> Result<Request, WireError> {
     check_version(&v)?;
     let id = need_u64(&v, "id")?;
     let deadline_ms = opt_u64(&v, "deadline_ms")?;
+    let token = match v.get("token") {
+        None | Some(Json::Null) => None,
+        Some(t) => Some(
+            t.as_str()
+                .ok_or_else(|| WireError("field \"token\" must be a string".into()))?
+                .to_string(),
+        ),
+    };
     let body = decode_request_body(need_str(&v, "op")?, &v)?;
-    Ok(Request { id, deadline_ms, body })
+    Ok(Request { id, deadline_ms, token, body })
 }
 
 /// Decode a request *body* given its operation tag. The TCP framing
@@ -977,6 +1000,25 @@ pub fn decode_request_body(op: &str, v: &Json) -> Result<RequestBody, WireError>
             };
             RequestBody::Sweep { models, variants, configs }
         }
+        "search" => {
+            // absent fields keep SearchSpec defaults, so a minimal
+            // `{"op":"search"}` runs the default NAS job
+            let d = SearchSpec::default();
+            RequestBody::Search {
+                spec: SearchSpec {
+                    population: opt_usize(v, "population")?.unwrap_or(d.population),
+                    iterations: opt_usize(v, "iterations")?.unwrap_or(d.iterations),
+                    mutation_p: opt_f64(v, "mutation_p")?.unwrap_or(d.mutation_p),
+                    allow_fuse: opt_bool(v, "allow_fuse")?.unwrap_or(d.allow_fuse),
+                    seed: opt_u64(v, "seed")?.unwrap_or(d.seed),
+                    config: match v.get("config") {
+                        None => ConfigPatch::default(),
+                        Some(j) => patch_from_json(j)?,
+                    },
+                },
+            }
+        }
+        "cancel" => RequestBody::Cancel { target: need_u64(v, "target")? },
         "stats" => RequestBody::Stats,
         "zoo" => RequestBody::Zoo,
         "shutdown" => RequestBody::Shutdown,
@@ -1012,6 +1054,28 @@ fn sweep_row_from_json(v: &Json) -> Result<SweepRow, WireError> {
         stos: need_bool(v, "stos")?,
         total_cycles: need_u64(v, "total_cycles")?,
         latency_ms: need_f64(v, "latency_ms")?,
+    })
+}
+
+fn search_point_to_json(p: &SearchPoint) -> Json {
+    obj(vec![
+        ("genome", Json::Str(p.genome.clone())),
+        ("acc", Json::Num(p.acc)),
+        ("latency_ms", Json::Num(p.latency_ms)),
+        ("macs_m", Json::Num(p.macs_m)),
+        ("params_m", Json::Num(p.params_m)),
+        ("rank", Json::UInt(p.rank)),
+    ])
+}
+
+fn search_point_from_json(v: &Json) -> Result<SearchPoint, WireError> {
+    Ok(SearchPoint {
+        genome: need_str(v, "genome")?.to_string(),
+        acc: need_f64(v, "acc")?,
+        latency_ms: need_f64(v, "latency_ms")?,
+        macs_m: need_f64(v, "macs_m")?,
+        params_m: need_f64(v, "params_m")?,
+        rank: need_u64(v, "rank")?,
     })
 }
 
@@ -1057,6 +1121,19 @@ fn reply_to_json(reply: &Reply) -> Json {
             ("result_evicted", Json::UInt(s.result_evicted)),
             ("result_entries", Json::UInt(s.result_entries)),
             ("result_bytes", Json::UInt(s.result_bytes)),
+            ("search_started", Json::UInt(s.search_started)),
+            ("search_completed", Json::UInt(s.search_completed)),
+            ("search_cancelled", Json::UInt(s.search_cancelled)),
+        ]),
+        Reply::Search(s) => obj(vec![
+            ("kind", Json::Str("search".into())),
+            (
+                "frontier",
+                Json::Arr(s.frontier.iter().map(search_point_to_json).collect()),
+            ),
+            ("evaluated", Json::UInt(s.evaluated)),
+            ("generations", Json::UInt(s.generations)),
+            ("cancelled", Json::Bool(s.cancelled)),
         ]),
         Reply::Zoo(entries) => obj(vec![
             ("kind", Json::Str("zoo".into())),
@@ -1127,6 +1204,19 @@ fn reply_from_json(v: &Json) -> Result<Reply, WireError> {
             result_evicted: opt_u64(v, "result_evicted")?.unwrap_or(0),
             result_entries: opt_u64(v, "result_entries")?.unwrap_or(0),
             result_bytes: opt_u64(v, "result_bytes")?.unwrap_or(0),
+            // additive v2 search counters (PR 8); absent = old node
+            search_started: opt_u64(v, "search_started")?.unwrap_or(0),
+            search_completed: opt_u64(v, "search_completed")?.unwrap_or(0),
+            search_cancelled: opt_u64(v, "search_cancelled")?.unwrap_or(0),
+        }),
+        "search" => Reply::Search(SearchReply {
+            frontier: need_arr(v, "frontier")?
+                .iter()
+                .map(search_point_from_json)
+                .collect::<Result<Vec<_>, _>>()?,
+            evaluated: need_u64(v, "evaluated")?,
+            generations: need_u64(v, "generations")?,
+            cancelled: need_bool(v, "cancelled")?,
         }),
         "zoo" => Reply::Zoo(
             need_arr(v, "models")?
@@ -1161,6 +1251,7 @@ fn serve_error_from_json(v: &Json) -> Result<ServeError, WireError> {
             v.get("detail").and_then(Json::as_str).unwrap_or("").to_string(),
         ),
         "deadline" => ServeError::Deadline,
+        "unauthorized" => ServeError::Unauthorized,
         "shutdown" => ServeError::Shutdown,
         other => return err(format!("unknown error code {other:?}")),
     })
@@ -1181,6 +1272,9 @@ pub fn encode_frame(id: u64, frame: &Frame) -> String {
         }
         Frame::Row(row) => {
             pairs.push(("row", sweep_row_to_json(row)));
+        }
+        Frame::SearchRow(point) => {
+            pairs.push(("point", search_point_to_json(point)));
         }
         Frame::Final(result) => match result {
             Ok(reply) => pairs.push(("ok", reply_to_json(reply))),
@@ -1213,6 +1307,7 @@ pub fn decode_frame(text: &str) -> Result<(u64, Frame), WireError> {
             total: need_u64(&v, "total")?,
         },
         "row" => Frame::Row(sweep_row_from_json(need(&v, "row")?)?),
+        "search_row" => Frame::SearchRow(search_point_from_json(need(&v, "point")?)?),
         "final" => {
             if let Some(ok) = v.get("ok") {
                 Frame::Final(Ok(reply_from_json(ok)?))
@@ -1447,6 +1542,25 @@ mod tests {
                 result_evicted: 3,
                 result_entries: 6,
                 result_bytes: 48_000,
+                search_started: 5,
+                search_completed: 4,
+                search_cancelled: 1,
+            }),
+        ));
+        rt_response(Response::ok(
+            7,
+            Reply::Search(SearchReply {
+                frontier: vec![SearchPoint {
+                    genome: "d2:k3e4f.k5e6d/d2:k3e3d.k7e6f/d2:k3e4d.k3e4d".into(),
+                    acc: 76.55,
+                    latency_ms: 1.75,
+                    macs_m: 312.5,
+                    params_m: 4.25,
+                    rank: 0,
+                }],
+                evaluated: 40,
+                generations: 4,
+                cancelled: true,
             }),
         ));
         rt_response(Response::ok(
@@ -1467,6 +1581,43 @@ mod tests {
         rt_response(Response::err(2, ServeError::BadRequest("unknown model \"x\"".into())));
         rt_response(Response::err(3, ServeError::Deadline));
         rt_response(Response::err(4, ServeError::Shutdown));
+        rt_response(Response::err(5, ServeError::Unauthorized));
+    }
+
+    #[test]
+    fn search_and_cancel_requests_round_trip() {
+        rt_request(Request::new(
+            9,
+            RequestBody::Search {
+                spec: SearchSpec {
+                    population: 16,
+                    iterations: 8,
+                    mutation_p: 0.25,
+                    allow_fuse: false,
+                    seed: 777,
+                    config: ConfigPatch::sized(32),
+                },
+            },
+        ));
+        rt_request(Request::new(10, RequestBody::Cancel { target: 9 }).with_deadline_ms(100));
+        // absent fields keep SearchSpec defaults
+        let req = decode_request(r#"{"v":2,"id":1,"op":"search"}"#).unwrap();
+        assert_eq!(req.body, RequestBody::Search { spec: SearchSpec::default() });
+        // cancel requires a target
+        assert!(decode_request(r#"{"v":2,"id":1,"op":"cancel"}"#).is_err());
+    }
+
+    #[test]
+    fn token_rides_the_tcp_envelope_but_never_the_http_body() {
+        let req = Request::new(11, RequestBody::Stats).with_token("s3cret");
+        let line = encode_request(&req);
+        assert!(line.contains("\"token\":\"s3cret\""), "{line}");
+        assert_eq!(decode_request(&line).unwrap(), req);
+        let body = encode_request_body(&req);
+        assert!(!body.contains("token"), "HTTP bodies must not carry tokens: {body}");
+        // tokenless requests omit the field entirely
+        let line = encode_request(&Request::new(12, RequestBody::Stats));
+        assert!(!line.contains("token"), "{line}");
     }
 
     fn rt_frame(id: u64, frame: Frame) {
@@ -1496,6 +1647,17 @@ mod tests {
         );
         rt_frame(7, Frame::Final(Ok(Reply::Done)));
         rt_frame(8, Frame::Final(Err(ServeError::Busy)));
+        rt_frame(
+            9,
+            Frame::SearchRow(SearchPoint {
+                genome: "d3:k3e3d.k7e6f.k3e4d/d2:k3e4f.k5e6d/d2:k3e4d.k3e4d".into(),
+                acc: 76.875,
+                latency_ms: 2.5,
+                macs_m: 400.25,
+                params_m: 5.5,
+                rank: 0,
+            }),
+        );
     }
 
     #[test]

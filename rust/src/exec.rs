@@ -98,6 +98,36 @@ pub fn available_parallelism() -> usize {
     thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
 }
 
+/// Cooperative cancellation flag shared between a long-running job (a
+/// sweep grid, a search loop) and whoever can stop it (an explicit
+/// `cancel` request, a disconnect-detecting frame sink). Cheap to clone;
+/// workers poll [`CancelToken::is_cancelled`] at their natural
+/// checkpoints (between grid cells, between generations) and wind down
+/// instead of burning pool cycles nobody will read.
+#[derive(Debug, Clone, Default)]
+pub struct CancelToken(Arc<std::sync::atomic::AtomicBool>);
+
+impl CancelToken {
+    pub fn new() -> CancelToken {
+        CancelToken::default()
+    }
+
+    /// Trip the flag. Idempotent; safe from any thread.
+    pub fn cancel(&self) {
+        self.0.store(true, std::sync::atomic::Ordering::Release);
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.0.load(std::sync::atomic::Ordering::Acquire)
+    }
+
+    /// Do these two handles share one flag? (Used by registries that
+    /// must remove exactly the entry they inserted.)
+    pub fn same(&self, other: &CancelToken) -> bool {
+        Arc::ptr_eq(&self.0, &other.0)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -149,6 +179,18 @@ mod tests {
         let mut got: Vec<u64> = rx.iter().collect();
         got.sort_unstable();
         assert_eq!(got, (0..10).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn cancel_token_is_shared_and_idempotent() {
+        let t = CancelToken::new();
+        let clone = t.clone();
+        assert!(!t.is_cancelled());
+        clone.cancel();
+        clone.cancel(); // idempotent
+        assert!(t.is_cancelled());
+        assert!(t.same(&clone));
+        assert!(!t.same(&CancelToken::new()));
     }
 
     #[test]

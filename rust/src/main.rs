@@ -8,6 +8,9 @@
 //!   vlsi       ST-OS area/power overheads (Table 2)
 //!   search-ea  hybrid evolutionary search (Fig 13)
 //!   search-nas OFA-space NAS with FuSe choice (Fig 15)
+//!   search     streaming NAS job: local, or on a serve/shard endpoint
+//!              via the `search` op (--remote, --http for SSE), with
+//!              per-generation progress and live Pareto rows
 //!   trace      per-layer cycle trace CSV
 //!   train      end-to-end NOS pipeline on the AOT artifacts
 //!   serve      serving frontends: TCP/JSON frames, plus HTTP/SSE with
@@ -46,6 +49,7 @@ fn main() {
         "vlsi" => cmd_vlsi(),
         "search-ea" => cmd_search_ea(&rest),
         "search-nas" => cmd_search_nas(&rest),
+        "search" => cmd_search(&rest),
         "trace" => cmd_trace(&rest),
         "train" => cmd_train(&rest),
         "serve" => cmd_serve(&rest),
@@ -79,16 +83,20 @@ fn print_help() {
          vlsi        Table 2 ST-OS overheads\n  \
          search-ea   hybrid EA search      (--model, --pop, --iters, --seed)\n  \
          search-nas  OFA NAS               (--pop, --iters, --seed, --no-fuse)\n  \
+         search      streaming NAS job     (--pop, --iters, --mutation-p, --seed, --no-fuse,\n              \
+                     --remote host:port to run it on a serve/shard endpoint, --http for SSE,\n              \
+                     --token for authenticated endpoints, --rows for live pareto rows)\n  \
          trace       cycle trace CSV       (--model, --layer)\n  \
          train       NOS pipeline on artifacts (--steps, --artifacts)\n  \
          serve       TCP + HTTP frontends  (--listen, --http-port, --engine mock|none|pjrt,\n              \
                      --transport threaded|epoll, --threads, --sim-capacity, --batch-capacity,\n              \
-                     --cache-entries, --max-requests-per-conn, --queue, --port-file, --http-port-file)\n  \
+                     --search-capacity, --cache-entries, --max-requests-per-conn, --queue,\n              \
+                     --auth-token, --port-file, --http-port-file)\n  \
          shard       multi-node front tier (--backends addr1,addr2,..., --listen, --http-port,\n              \
                      --transport threaded|epoll, --timeout-ms, --max-requests-per-conn,\n              \
-                     --port-file, --http-port-file)\n  \
-         request     serve client          (--connect, --op infer|simulate|sweep|stats|zoo|shutdown,\n              \
-                     --model, --variant, --size, --count, --stream, --http)\n  \
+                     --auth-token, --port-file, --http-port-file)\n  \
+         request     serve client          (--connect, --op infer|simulate|sweep|stats|zoo|cancel|shutdown,\n              \
+                     --model, --variant, --size, --count, --stream, --http, --token)\n  \
          bench       open-loop load generator (--connect, --rps, --connections, --duration-secs,\n              \
                      --warmup-secs, --mix simulate=80,infer=10,sweep=10, --out BENCH_6.json)"
     );
@@ -697,6 +705,288 @@ fn cmd_search_nas(argv: &[String]) -> i32 {
     0
 }
 
+/// `fuseconv search` — the streaming NAS job. Locally it runs the same
+/// engine the server mounts (per-generation progress on stderr); with
+/// `--remote` it sends a `search` request to a running `fuseconv serve`
+/// or `fuseconv shard` and renders the v2 frame stream — `Progress` per
+/// generation, live Pareto `search_row` frames (`--rows` to print
+/// them), and the converged frontier from the terminal frame. The same
+/// seed yields byte-identical frontiers locally and remotely.
+fn cmd_search(argv: &[String]) -> i32 {
+    use fuseconv::coordinator::search::SearchEvent;
+    use fuseconv::coordinator::{ConfigPatch, SearchSpec};
+    use fuseconv::exec::CancelToken;
+
+    let cli = Cli::new("search", "streaming OFA NAS job, local or on a serving endpoint")
+        .opt("pop", "population", Some("32"))
+        .opt("iters", "iterations (generations)", Some("16"))
+        .opt("mutation-p", "per-gene mutation probability", Some("0.15"))
+        .opt("seed", "rng seed", Some("42"))
+        .opt("size", "array dimension", Some("16"))
+        .opt("dataflow", "os|ws", Some("os"))
+        .opt("threads", "local worker threads (0=auto; remote runs ignore this)", Some("0"))
+        .opt("remote", "run on a `fuseconv serve`/`fuseconv shard` endpoint host:port", None)
+        .opt("token", "auth token for an authenticated endpoint", None)
+        .opt("id", "request id of the remote stream (the key `cancel` targets)", Some("21"))
+        .opt("timeout-ms", "remote receive timeout", Some("600000"))
+        .flag("http", "speak HTTP/SSE to the remote instead of TCP frames")
+        .flag("rows", "print each streamed pareto row as it arrives (remote)")
+        .flag("no-stos", "disable ST-OS")
+        .flag("no-fuse", "search without the FuSe operator (baseline OFA)");
+    let args = match cli.parse(argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}\n{}", cli.usage());
+            return 2;
+        }
+    };
+    let (pop, iters, seed, threads, mutation_p) = match (
+        args.usize("pop"),
+        args.usize("iters"),
+        args.u64("seed"),
+        args.usize("threads"),
+        args.f64("mutation-p"),
+    ) {
+        (Ok(p), Ok(i), Ok(s), Ok(t), Ok(m)) => (p, i, s, t, m),
+        _ => {
+            eprintln!("bad numeric option\n{}", cli.usage());
+            return 2;
+        }
+    };
+    let allow_fuse = !args.flag("no-fuse");
+
+    if let Some(addr) = args.get("remote") {
+        // --- remote: one `search` request, rendered from the stream ---
+        let size = match args.usize("size") {
+            Ok(s) => Some(s),
+            Err(e) => {
+                eprintln!("{e}\n{}", cli.usage());
+                return 2;
+            }
+        };
+        let dataflow = match args.get("dataflow") {
+            None => None,
+            Some(df) => match Dataflow::parse(df) {
+                Some(d) => Some(d),
+                None => {
+                    eprintln!("bad --dataflow {df:?} (want os|ws)\n{}", cli.usage());
+                    return 2;
+                }
+            },
+        };
+        let spec = SearchSpec {
+            population: pop,
+            iterations: iters,
+            mutation_p,
+            allow_fuse,
+            seed,
+            config: ConfigPatch {
+                size,
+                dataflow,
+                stos: if args.flag("no-stos") { Some(false) } else { None },
+                ..ConfigPatch::default()
+            },
+        };
+        let (id, timeout_ms) = match (args.u64("id"), args.u64("timeout-ms")) {
+            (Ok(i), Ok(t)) => (i, t),
+            _ => {
+                eprintln!("bad numeric option\n{}", cli.usage());
+                return 2;
+            }
+        };
+        return search_remote(
+            addr,
+            spec,
+            id,
+            args.get("token"),
+            std::time::Duration::from_millis(timeout_ms),
+            args.flag("http"),
+            args.flag("rows"),
+        );
+    }
+
+    // --- local: same engine the server mounts, progress on stderr ---
+    let Some(cfg) = sim_config_or_usage(&args, &cli) else {
+        return 2;
+    };
+    let ev = std::sync::Arc::new(Evaluator::new(cfg));
+    let nas = NasConfig {
+        population: pop,
+        iterations: iters,
+        mutation_p,
+        allow_fuse,
+        seed,
+        threads,
+    };
+    let t0 = std::time::Instant::now();
+    let r = fuseconv::coordinator::search::run_nas_with(
+        ev,
+        &nas,
+        None,
+        &CancelToken::new(),
+        |event| {
+            let SearchEvent::Generation { done, total, front } = event;
+            eprintln!(
+                "# gen {done}/{total}: {} points on the front ({:.2}s)",
+                front.len(),
+                t0.elapsed().as_secs_f64()
+            );
+        },
+    );
+    eprintln!(
+        "# evaluated {} genomes over {} generations in {:.2}s",
+        r.evaluated,
+        r.generations,
+        t0.elapsed().as_secs_f64()
+    );
+    println!("{:>8} {:>9} {:>10} {:>11}  genome", "acc %", "lat ms", "MACs (M)", "params (M)");
+    for c in &r.frontier {
+        println!(
+            "{:>8.2} {:>9.3} {:>10.1} {:>11.2}  {}",
+            c.acc,
+            c.latency_ms,
+            c.macs_millions,
+            c.params_millions,
+            c.genome.compact()
+        );
+    }
+    0
+}
+
+/// The `--remote` leg of `fuseconv search`: send one `search` request
+/// (TCP frames by default, HTTP/SSE with `--http`) and render its
+/// stream. Progress goes to stderr; the terminal frontier prints as a
+/// table on stdout.
+fn search_remote(
+    addr: &str,
+    spec: fuseconv::coordinator::SearchSpec,
+    id: u64,
+    token: Option<&str>,
+    timeout: std::time::Duration,
+    http: bool,
+    rows: bool,
+) -> i32 {
+    use fuseconv::coordinator::wire::encode_request_body;
+    use fuseconv::coordinator::{
+        http_sse_auth, Frame, Reply, Request, RequestBody, SearchReply, WireClient,
+    };
+
+    let t0 = std::time::Instant::now();
+    let mut streamed = 0usize;
+    let print_point = |p: &fuseconv::coordinator::SearchPoint| {
+        println!(
+            "row acc={:.2} lat_ms={:.3} macs_m={:.1} params_m={:.2} genome={}",
+            p.acc, p.latency_ms, p.macs_m, p.params_m, p.genome
+        );
+    };
+    let reply: Result<SearchReply, i32> = if http {
+        let mut req = Request::new(id, RequestBody::Search { spec });
+        if let Some(tok) = token {
+            req = req.with_token(tok);
+        }
+        let result = http_sse_auth(
+            addr,
+            "/v1/search",
+            &encode_request_body(&req),
+            None,
+            token,
+            timeout,
+            |_fid, frame| match frame {
+                Frame::Progress { done, total } => {
+                    eprintln!("# gen {done}/{total} ({:.2}s)", t0.elapsed().as_secs_f64());
+                }
+                Frame::SearchRow(p) => {
+                    streamed += 1;
+                    if rows {
+                        print_point(p);
+                    }
+                }
+                Frame::Row(_) | Frame::Final(_) => {}
+            },
+        );
+        match result {
+            Ok(resp) => match resp.result {
+                Ok(Reply::Search(r)) => Ok(r),
+                Ok(_) => {
+                    eprintln!("remote answered search with a non-search reply");
+                    Err(1)
+                }
+                Err(e) => {
+                    eprintln!("remote search failed: {e}");
+                    Err(1)
+                }
+            },
+            Err(e) => {
+                eprintln!("{e}");
+                Err(1)
+            }
+        }
+    } else {
+        let mut req = Request::new(id, RequestBody::Search { spec });
+        if let Some(tok) = token {
+            req = req.with_token(tok);
+        }
+        let mut client = match WireClient::connect(addr, timeout) {
+            Ok(c) => c,
+            Err(e) => {
+                eprintln!("connect {addr}: {e}");
+                return 1;
+            }
+        };
+        if let Err(e) = client.send(&req) {
+            eprintln!("send: {e}");
+            return 1;
+        }
+        loop {
+            match client.recv_frame(req.id) {
+                Ok(Frame::Progress { done, total }) => {
+                    eprintln!("# gen {done}/{total} ({:.2}s)", t0.elapsed().as_secs_f64());
+                }
+                Ok(Frame::SearchRow(p)) => {
+                    streamed += 1;
+                    if rows {
+                        print_point(&p);
+                    }
+                }
+                Ok(Frame::Row(_)) => {}
+                Ok(Frame::Final(Ok(Reply::Search(r)))) => break Ok(r),
+                Ok(Frame::Final(Ok(_))) => {
+                    eprintln!("remote answered search with a non-search reply");
+                    break Err(1);
+                }
+                Ok(Frame::Final(Err(e))) => {
+                    eprintln!("remote search failed: {e}");
+                    break Err(1);
+                }
+                Err(e) => {
+                    eprintln!("{e}");
+                    break Err(1);
+                }
+            }
+        }
+    };
+    let r = match reply {
+        Ok(r) => r,
+        Err(code) => return code,
+    };
+    eprintln!(
+        "# evaluated {} genomes over {} generations in {:.2}s \
+         ({streamed} pareto rows streamed{})",
+        r.evaluated,
+        r.generations,
+        t0.elapsed().as_secs_f64(),
+        if r.cancelled { "; CANCELLED early" } else { "" },
+    );
+    println!("{:>8} {:>9} {:>10} {:>11}  genome", "acc %", "lat ms", "MACs (M)", "params (M)");
+    for p in &r.frontier {
+        println!(
+            "{:>8.2} {:>9.3} {:>10.1} {:>11.2}  {}",
+            p.acc, p.latency_ms, p.macs_m, p.params_m, p.genome
+        );
+    }
+    0
+}
+
 fn cmd_trace(argv: &[String]) -> i32 {
     let cli = Cli::new("trace", "cycle-trace one layer")
         .opt("model", "zoo network", Some("mobilenet-v2"))
@@ -751,6 +1041,8 @@ fn cmd_serve(argv: &[String]) -> i32 {
         .opt("threads", "simulation worker threads (0=auto)", Some("0"))
         .opt("sim-capacity", "interactive simulation admission lane bound (min 1)", Some("256"))
         .opt("batch-capacity", "batch (sweep) admission lane bound (min 1)", Some("32"))
+        .opt("search-capacity", "search admission lane bound (min 1)", Some("4"))
+        .opt("auth-token", "require this token on every request (TCP envelope / HTTP bearer)", None)
         .opt("cache-entries", "global result cache size (entries; 0 = off)", Some("0"))
         .opt("max-requests-per-conn", "per-connection request budget (0=unlimited)", Some("0"))
         .opt("queue", "bounded inference admission queue", Some("1024"))
@@ -787,6 +1079,13 @@ fn cmd_serve(argv: &[String]) -> i32 {
                 return 2;
             }
         };
+    let search_capacity = match args.usize("search-capacity") {
+        Ok(sc) => sc,
+        Err(_) => {
+            eprintln!("bad numeric option\n{}", cli.usage());
+            return 2;
+        }
+    };
     let cache_entries = match args.usize("cache-entries") {
         Ok(ce) => ce,
         Err(_) => {
@@ -799,7 +1098,8 @@ fn cmd_serve(argv: &[String]) -> i32 {
         std::sync::Arc::new(LayerCache::new()),
         sim_capacity,
         batch_capacity,
-    );
+    )
+    .with_search_capacity(search_capacity);
     if cache_entries > 0 {
         sim = sim.with_result_cache(std::sync::Arc::new(ResultCache::new(cache_entries)));
     }
@@ -871,6 +1171,7 @@ fn cmd_serve(argv: &[String]) -> i32 {
             label: "serve",
             transport,
             gauges,
+            auth_token: args.get("auth-token"),
         },
     )
 }
@@ -892,6 +1193,9 @@ struct FrontendOpts<'a> {
     /// Live gauges shared by both listeners (and the mounted service's
     /// stats reply, via `with_gauges` on the router).
     gauges: fuseconv::coordinator::TransportGauges,
+    /// Require this token on every request, both transports (TCP
+    /// `token` envelope field / HTTP `Authorization: Bearer`).
+    auth_token: Option<&'a str>,
 }
 
 /// Mount one service on the wire frontends: the TCP listener always,
@@ -912,7 +1216,8 @@ fn run_frontends(
             .with_request_budget(opts.budget)
             .with_stop(stop.clone())
             .with_transport(opts.transport)
-            .with_gauges(opts.gauges.clone()),
+            .with_gauges(opts.gauges.clone())
+            .with_auth_token(opts.auth_token.map(str::to_string)),
         Err(e) => {
             eprintln!("bind {}: {e}", opts.listen);
             return 1;
@@ -941,7 +1246,8 @@ fn run_frontends(
                 .with_request_budget(opts.budget)
                 .with_stop(stop.clone())
                 .with_transport(opts.transport)
-                .with_gauges(opts.gauges.clone()),
+                .with_gauges(opts.gauges.clone())
+                .with_auth_token(opts.auth_token.map(str::to_string)),
             Err(e) => {
                 eprintln!("bind {http_listen}: {e}");
                 return 1;
@@ -950,7 +1256,8 @@ fn run_frontends(
         let http_addr = http.local_addr();
         eprintln!(
             "fuseconv {label}: http on {http_addr} \
-             (POST /v1/{{infer,simulate}}, POST /v1/sweep streams SSE, GET /v1/stats, GET /healthz)"
+             (POST /v1/{{infer,simulate,cancel}}, POST /v1/{{sweep,search}} stream SSE, \
+             GET /v1/stats, GET /healthz)"
         );
         if let Some(path) = opts.http_port_file {
             if let Err(e) = std::fs::write(path, http_addr.to_string()) {
@@ -1008,6 +1315,7 @@ fn cmd_shard(argv: &[String]) -> i32 {
         .opt("max-requests-per-conn", "per-connection request budget (0=unlimited)", Some("0"))
         .opt("max-inflight", "front-tier in-flight request bound (min 1)", Some("1024"))
         .opt("timeout-ms", "backend connect/receive timeout (0 = none)", Some("600000"))
+        .opt("auth-token", "require this token on every request (TCP envelope / HTTP bearer)", None)
         .opt("port-file", "write the bound address here once listening", None)
         .opt("transport", "connection concurrency: threaded | epoll", Some("threaded"));
     let args = match cli.parse(argv) {
@@ -1079,6 +1387,7 @@ fn cmd_shard(argv: &[String]) -> i32 {
             label: "shard",
             transport,
             gauges,
+            auth_token: args.get("auth-token"),
         },
     )
 }
@@ -1124,7 +1433,8 @@ fn cmd_request(argv: &[String]) -> i32 {
 
     let cli = Cli::new("request", "send protocol requests to a running `fuseconv serve`")
         .opt("connect", "server address host:port", Some("127.0.0.1:7878"))
-        .opt("op", "infer | simulate | sweep | stats | zoo | shutdown", Some("simulate"))
+        .opt("op", "infer | simulate | sweep | stats | zoo | cancel | shutdown", Some("simulate"))
+        .opt("token", "auth token for an authenticated server", None)
         .opt("model", "zoo model (simulate)", Some("mobilenet-v2"))
         .opt("models", "comma list of zoo models (sweep)", Some("mobilenet-v2"))
         .opt("variant", "base|half|full (simulate)", Some("base"))
@@ -1233,6 +1543,16 @@ fn cmd_request(argv: &[String]) -> i32 {
         }
         "stats" => RequestBody::Stats,
         "zoo" => RequestBody::Zoo,
+        // `--op cancel --id N` targets the in-flight stream whose
+        // request id is N (typically a `fuseconv search --remote --id N`
+        // on another connection). Idempotent: unknown ids still ack.
+        "cancel" => match args.u64("id") {
+            Ok(target) => RequestBody::Cancel { target },
+            Err(e) => {
+                eprintln!("{e}\n{}", cli.usage());
+                return 2;
+            }
+        },
         "shutdown" => RequestBody::Shutdown,
         other => {
             eprintln!("unknown --op {other:?}\n{}", cli.usage());
@@ -1262,6 +1582,7 @@ fn cmd_request(argv: &[String]) -> i32 {
             count,
             base_id,
             deadline_ms,
+            args.get("token"),
             timeout,
             args.flag("stream"),
         );
@@ -1278,6 +1599,9 @@ fn cmd_request(argv: &[String]) -> i32 {
         let mut req = Request::new(base_id + i as u64, body.clone());
         if let Some(ms) = deadline_ms {
             req = req.with_deadline_ms(ms);
+        }
+        if let Some(tok) = args.get("token") {
+            req = req.with_token(tok);
         }
         if let Err(e) = client.send(&req) {
             eprintln!("send: {e}");
@@ -1346,11 +1670,12 @@ fn run_http_requests(
     count: usize,
     base_id: u64,
     deadline_ms: Option<u64>,
+    token: Option<&str>,
     timeout: std::time::Duration,
     stream: bool,
 ) -> i32 {
     use fuseconv::coordinator::wire::{encode_frame, encode_request_body, encode_response};
-    use fuseconv::coordinator::{http_call, http_sse, Request, RequestBody};
+    use fuseconv::coordinator::{http_call_auth, http_sse_auth, Request, RequestBody};
 
     let mut failures = 0usize;
     for i in 0..count {
@@ -1360,21 +1685,30 @@ fn run_http_requests(
         }
         // POST bodies carry deadline_ms already; also send the
         // timeout-ms header so body-less GET ops (stats/zoo) get the
-        // same deadline semantics as the TCP transport.
+        // same deadline semantics as the TCP transport. Auth rides the
+        // `authorization: Bearer` header, never the body.
         let result = match &req.body {
-            RequestBody::Sweep { .. } => http_sse(
-                addr,
-                "/v1/sweep",
-                &encode_request_body(&req),
-                deadline_ms,
-                timeout,
-                |fid, frame| {
-                    if stream {
-                        println!("{}", encode_frame(fid, frame));
-                    }
-                },
-            )
-            .map(|resp| (resp, stream)),
+            RequestBody::Sweep { .. } | RequestBody::Search { .. } => {
+                let path = if matches!(req.body, RequestBody::Sweep { .. }) {
+                    "/v1/sweep"
+                } else {
+                    "/v1/search"
+                };
+                http_sse_auth(
+                    addr,
+                    path,
+                    &encode_request_body(&req),
+                    deadline_ms,
+                    token,
+                    timeout,
+                    |fid, frame| {
+                        if stream {
+                            println!("{}", encode_frame(fid, frame));
+                        }
+                    },
+                )
+                .map(|resp| (resp, stream))
+            }
             _ => {
                 let (path, payload) = match &req.body {
                     RequestBody::Stats => ("/v1/stats", None),
@@ -1384,9 +1718,12 @@ fn run_http_requests(
                     RequestBody::Simulate { .. } => {
                         ("/v1/simulate", Some(encode_request_body(&req)))
                     }
-                    RequestBody::Sweep { .. } => unreachable!("handled above"),
+                    RequestBody::Cancel { .. } => ("/v1/cancel", Some(encode_request_body(&req))),
+                    RequestBody::Sweep { .. } | RequestBody::Search { .. } => {
+                        unreachable!("handled above")
+                    }
                 };
-                http_call(addr, path, payload.as_deref(), deadline_ms, timeout)
+                http_call_auth(addr, path, payload.as_deref(), deadline_ms, token, timeout)
                     .and_then(|reply| reply.response())
                     .map(|resp| (resp, false))
             }

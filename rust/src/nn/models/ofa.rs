@@ -153,6 +153,34 @@ impl OfaGenome {
         self.depths.iter().sum::<usize>() + 1
     }
 
+    /// Compact, deterministic string form for wire rows and log lines:
+    /// one `d<depth>:<blocks>` group per stage, active blocks only,
+    /// each block `k<kernel>e<expand>` plus `f` (FuSe) or `d`
+    /// (depthwise). Equal genomes (over their active slots) produce
+    /// equal strings, so streamed search rows compare bytewise.
+    pub fn compact(&self) -> String {
+        let mut s = String::new();
+        for stage in 0..5 {
+            if stage > 0 {
+                s.push('/');
+            }
+            s.push_str(&format!("d{}:", self.depths[stage]));
+            for b in 0..self.depths[stage] {
+                if b > 0 {
+                    s.push('.');
+                }
+                let g = self.blocks[stage][b];
+                s.push_str(&format!(
+                    "k{}e{}{}",
+                    g.kernel,
+                    g.expand,
+                    if g.fuse { 'f' } else { 'd' }
+                ));
+            }
+        }
+        s
+    }
+
     // ---- Reference genomes for Table 4 (searched; frozen for
     // reproducibility — see EXPERIMENTS.md E15) ----
 

@@ -43,7 +43,7 @@ use super::config::{Dataflow, SimConfig};
 use super::engine::{price_layer, schedule_layer, simulate_network, LayerSim, NetworkSim};
 use super::fold::FoldSet;
 use super::global_cache::ResultCache;
-use crate::exec::Pool;
+use crate::exec::{CancelToken, Pool};
 use crate::nn::{fuse_all, Layer, Network, OpKind, Variant};
 use std::collections::HashMap;
 use std::hash::{Hash, Hasher};
@@ -458,7 +458,7 @@ pub fn run_sweep_with<F>(
 where
     F: FnMut(SweepEvent<'_>),
 {
-    run_sweep_coalesced(plan, pool, cache, None, on_event)
+    run_sweep_coalesced(plan, pool, cache, None, &CancelToken::new(), on_event)
 }
 
 /// [`run_sweep_with`], with each cell additionally routed through an
@@ -469,11 +469,18 @@ where
 /// still stream in plan order through this sweep's own reorder buffer
 /// and sink — a coalesced cell re-emits under this caller's
 /// backpressure bound, never the leader's.
+///
+/// `cancel` is polled by each worker before it prices its cell: once
+/// tripped (disconnect, explicit `cancel` frame), remaining cells skip
+/// simulation entirely — no layer-cache or result-cache traffic — and
+/// the outcome comes back with only the plan-order prefix of records
+/// that completed. Callers that can't be cancelled pass a fresh token.
 pub fn run_sweep_coalesced<F>(
     plan: &SweepPlan,
     pool: &Pool,
     cache: &Arc<LayerCache>,
     results: Option<&Arc<ResultCache>>,
+    cancel: &CancelToken,
     mut on_event: F,
 ) -> SweepOutcome
 where
@@ -490,25 +497,33 @@ where
 
     let realized = Arc::new(realized);
     let configs = Arc::new(plan.configs.clone());
-    let (rtx, rrx) = std::sync::mpsc::channel::<(usize, NetworkSim)>();
+    let (rtx, rrx) = std::sync::mpsc::channel::<(usize, Option<NetworkSim>)>();
     let results = results.map(Arc::clone);
     for i in 0..total {
         let realized = Arc::clone(&realized);
         let configs = Arc::clone(&configs);
         let cache_ref = Arc::clone(cache);
         let results = results.clone();
+        let cancel = cancel.clone();
         let rtx = rtx.clone();
         pool.spawn(move || {
-            let (nv, c) = (i / configs.len(), i % configs.len());
-            let sim = match &results {
-                // No per-cell deadline: an admitted grid runs to
-                // completion, so a follower waits out its leader and
-                // the expiry path is unreachable.
-                Some(rc) => (*rc
-                    .simulate(&realized[nv], &configs[c], &cache_ref, None)
-                    .expect("deadline-free single-flight wait cannot expire"))
-                .clone(),
-                None => simulate_network_cached(&realized[nv], &configs[c], &cache_ref),
+            // A cancelled cell still reports in (None) so the
+            // coordinator's recv-count bookkeeping stays exact, but it
+            // skips pricing — no cache traffic, no pool cycles burned.
+            let sim = if cancel.is_cancelled() {
+                None
+            } else {
+                let (nv, c) = (i / configs.len(), i % configs.len());
+                Some(match &results {
+                    // No per-cell deadline: an admitted grid runs to
+                    // completion, so a follower waits out its leader and
+                    // the expiry path is unreachable.
+                    Some(rc) => (*rc
+                        .simulate(&realized[nv], &configs[c], &cache_ref, None)
+                        .expect("deadline-free single-flight wait cannot expire"))
+                    .clone(),
+                    None => simulate_network_cached(&realized[nv], &configs[c], &cache_ref),
+                })
             };
             // Receiver outlives all jobs within this call; a send failure
             // would mean the coordinator returned early (it can't).
@@ -522,6 +537,7 @@ where
     let mut next = 0usize;
     for done in 1..=total {
         let (i, sim) = rrx.recv().expect("worker result");
+        let Some(sim) = sim else { continue }; // cancelled cell: hole stays
         slots[i] = Some(sim);
         on_event(SweepEvent::Progress { done, total });
         // Flush the ready plan-order prefix.
@@ -573,6 +589,26 @@ pub fn run_sweep_serial(plan: &SweepPlan) -> SweepOutcome {
 mod tests {
     use super::*;
     use crate::nn::models;
+
+    #[test]
+    fn tripped_cancel_token_skips_all_pricing() {
+        let cache = Arc::new(LayerCache::new());
+        let pool = Pool::new(2);
+        let plan = SweepPlan::new(
+            vec![models::by_name("mobilenet-v2").unwrap()],
+            vec![FuseVariant::Base, FuseVariant::Half],
+            vec![SimConfig::with_size(8), SimConfig::with_size(16)],
+        );
+        let rc = Arc::new(ResultCache::new(64));
+        let token = CancelToken::new();
+        token.cancel();
+        let out = run_sweep_coalesced(&plan, &pool, &cache, Some(&rc), &token, |_| {
+            panic!("no events once every cell is cancelled")
+        });
+        assert!(out.records().is_empty());
+        assert_eq!(rc.stats().misses, 0, "cancelled cells must not simulate");
+        assert_eq!(cache.stats().misses, 0, "cancelled cells must not touch the layer cache");
+    }
 
     #[test]
     fn cached_simulation_matches_uncached() {

@@ -337,6 +337,7 @@ fn follower_disconnect_mid_coalesce(transport: Transport) {
                     match client.recv_frame(i).expect("frame") {
                         Frame::Row(_) => rows += 1,
                         Frame::Progress { .. } => {}
+                        Frame::SearchRow(p) => panic!("search row in a sweep stream: {p:?}"),
                         Frame::Final(result) => {
                             assert_eq!(result, Ok(Reply::Done));
                             return rows;
@@ -387,9 +388,104 @@ fn follower_disconnect_mid_coalesce(transport: Transport) {
     handle.join().expect("listener");
 }
 
+/// A disconnected sweep client must stop burning pool cycles: the sink
+/// failure trips the sweep's CancelToken, and `run_sweep_coalesced`
+/// skips the remaining cells. Observed through the result cache's miss
+/// ledger — every simulated cell is a miss on this all-unique grid, so
+/// a frozen `result_misses` proves the pool went idle, and a count
+/// below the grid size proves cells were actually skipped.
+fn disconnect_cancels_sweep_work(transport: Transport) {
+    let results = Arc::new(ResultCache::new(256));
+    let sim = SimServer::with_capacity(2, Arc::new(LayerCache::new()), 256)
+        .with_result_cache(Arc::clone(&results));
+    let gauges = TransportGauges::new();
+    let router = Arc::new(
+        Router::new(sim)
+            .with_engine(Server::start(
+                MockEngine::new(4, 2, 8),
+                BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(2) },
+            ))
+            .with_gauges(gauges.clone()),
+    );
+    let server = WireServer::bind("127.0.0.1:0", router)
+        .expect("bind")
+        .with_transport(transport)
+        .with_gauges(gauges.clone());
+    let addr = server.local_addr().to_string();
+    let handle = thread::spawn(move || server.run().expect("run"));
+
+    // 2 models × 3 variants × 8 sizes = 48 unique, individually cheap
+    // cells — far more work than can finish before the disconnect lands,
+    // with no single cell slow enough to fake a frozen ledger below.
+    const TOTAL: u64 = 48;
+    let mut doomed = WireClient::connect(&addr, T).expect("connect");
+    doomed
+        .send(&Request::new(
+            1,
+            RequestBody::Sweep {
+                models: vec!["mobilenet-v2".into(), "mobilenet-v3-large".into()],
+                variants: vec![FuseVariant::Base, FuseVariant::Half, FuseVariant::Full],
+                configs: (0..8).map(|i| ConfigPatch::sized(8 + 4 * i)).collect(),
+            },
+        ))
+        .expect("send sweep");
+    assert!(
+        !doomed.recv_frame(1).expect("first frame").is_final(),
+        "the sweep must be mid-stream when the client vanishes"
+    );
+    drop(doomed);
+
+    wait_until("the vanished client to be reaped", || {
+        gauges.open_conns() == 0 && gauges.active_streams() == 0
+    });
+    // wait for the miss ledger to stop moving over a window far longer
+    // than any one cell, so a frozen sample can't be two workers merely
+    // busy on slow cells (a cancelled sweep drains within the couple of
+    // cells already in flight on the pool)…
+    let mut last = results.stats().misses;
+    wait_until("sweep work to stop after the disconnect", || {
+        thread::sleep(Duration::from_millis(1000));
+        let now = results.stats().misses;
+        let stable = now == last;
+        last = now;
+        stable
+    });
+    let frozen = results.stats().misses;
+    assert!(
+        frozen < TOTAL,
+        "disconnect must cancel the remaining cells, but all {TOTAL} were simulated"
+    );
+    // …and prove it stays frozen: no background thread is still pricing
+    // cells for a client that no longer exists.
+    thread::sleep(Duration::from_millis(500));
+    assert_eq!(
+        results.stats().misses,
+        frozen,
+        "result_misses kept growing after the client disconnected"
+    );
+
+    let mut client = WireClient::connect(&addr, Duration::from_secs(30)).expect("connect");
+    let resp = client
+        .roundtrip(&Request::new(u64::MAX, RequestBody::Shutdown))
+        .expect("shutdown");
+    assert_eq!(resp.result, Ok(Reply::Done));
+    handle.join().expect("listener");
+}
+
 #[test]
 fn threaded_tcp_churn_returns_gauges_to_baseline() {
     tcp_churn(Transport::Threaded);
+}
+
+#[test]
+fn threaded_disconnect_cancels_sweep_work() {
+    disconnect_cancels_sweep_work(Transport::Threaded);
+}
+
+#[cfg(target_os = "linux")]
+#[test]
+fn epoll_disconnect_cancels_sweep_work() {
+    disconnect_cancels_sweep_work(Transport::Epoll);
 }
 
 #[test]

@@ -77,6 +77,7 @@ fn collect_rows(client: &mut WireClient, id: u64) -> Vec<SweepRow> {
                 assert!(done <= total);
             }
             Frame::Row(row) => rows.push(row),
+            Frame::SearchRow(p) => panic!("search row in a sweep stream: {p:?}"),
             Frame::Final(result) => {
                 assert_eq!(result, Ok(Reply::Done));
                 return rows;
@@ -185,6 +186,7 @@ fn point_queries_and_sweep_cells_share_one_cache() {
     loop {
         match client.recv_frame(2).expect("frame") {
             Frame::Row(row) => rows.push(row),
+            Frame::SearchRow(p) => panic!("search row in a sweep stream: {p:?}"),
             Frame::Final(result) => {
                 assert_eq!(result, Ok(Reply::Done));
                 break;

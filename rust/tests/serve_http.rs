@@ -22,8 +22,8 @@ use fuseconv::coordinator::batcher::BatchPolicy;
 use fuseconv::coordinator::wire::encode_request_body;
 use fuseconv::coordinator::{
     http_call, http_sse, ConfigPatch, Frame, HttpServer, MockEngine, ModelSpec, Reply,
-    Request, RequestBody, Router, ServeError, Server, SimServer, StopLatch, SweepRow,
-    WireClient, WireServer,
+    Request, RequestBody, Router, SearchPoint, ServeError, Server, SimServer, StopLatch,
+    SweepRow, WireClient, WireServer,
 };
 use fuseconv::nn::models;
 use fuseconv::sim::{
@@ -365,6 +365,7 @@ fn concurrent_tcp_and_http_clients_agree_on_one_router() {
             match client.recv_frame(11).expect("tcp frame") {
                 Frame::Progress { .. } => {}
                 Frame::Row(row) => rows.push(row),
+                Frame::SearchRow(p) => panic!("search row in a sweep stream: {p:?}"),
                 Frame::Final(result) => {
                     assert_eq!(result, Ok(Reply::Done));
                     break;
@@ -545,6 +546,7 @@ fn protocol_md_documents_the_wire_contract() {
         ServeError::BadRequest(String::new()),
         ServeError::Deadline,
         ServeError::Shutdown,
+        ServeError::Unauthorized,
     ];
     for e in &errors {
         let code = format!("`{}`", e.code());
@@ -567,6 +569,14 @@ fn protocol_md_documents_the_wire_contract() {
             stos: true,
             total_cycles: 0,
             latency_ms: 0.0,
+        }),
+        Frame::SearchRow(SearchPoint {
+            genome: String::new(),
+            acc: 0.0,
+            latency_ms: 0.0,
+            macs_m: 0.0,
+            params_m: 0.0,
+            rank: 0,
         }),
         Frame::Final(Ok(Reply::Done)),
     ];
@@ -619,6 +629,34 @@ fn protocol_md_documents_the_wire_contract() {
         "`result_evicted`",
         "`result_entries`",
         "`result_bytes`",
+    ] {
+        assert!(spec.contains(needle), "PROTOCOL.md must cover {needle:?}");
+    }
+    // the search op & cancellation section: the stream grammar, the
+    // cancel semantics (cross-connection, idempotent, one-generation
+    // latency), the admission lane, and every search_* stats field
+    for needle in [
+        "Search op & cancellation",
+        "`search`",
+        "`cancel`",
+        "within one generation",
+        "idempotent",
+        "--search-capacity",
+        "`search_started`",
+        "`search_completed`",
+        "`search_cancelled`",
+    ] {
+        assert!(spec.contains(needle), "PROTOCOL.md must cover {needle:?}");
+    }
+    // the authentication section: both carriers of the credential, the
+    // constant-time check, the open probe, and the shard-tier caveat
+    for needle in [
+        "Authentication",
+        "--auth-token",
+        "Authorization: Bearer",
+        "constant-time",
+        "`/healthz`",
+        "unauthenticated",
     ] {
         assert!(spec.contains(needle), "PROTOCOL.md must cover {needle:?}");
     }

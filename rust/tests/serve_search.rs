@@ -1,0 +1,384 @@
+//! Streaming `Search` acceptance over the real transports:
+//!
+//! * the stream is deterministic — same seed, same spec ⇒ byte-identical
+//!   frame sequences across runs, and the remote frontier (TCP frames
+//!   and HTTP/SSE alike) equals a local `run_nas_with` of the same
+//!   config, point for point, bit for bit;
+//! * an explicit `cancel` frame from another connection stops a running
+//!   search within one generation and frees its lane slot, on both the
+//!   threaded and the epoll transport;
+//! * wire auth: a server started with a token answers `unauthorized` to
+//!   missing/wrong tokens on TCP (and an unauthorized `Shutdown` does
+//!   not stop the deployment) and `401` on HTTP, where `/healthz` stays
+//!   open for probes;
+//! * an HTTP client that vanishes mid-SSE cancels its search — the
+//!   `search_cancelled` counter proves the pool stopped, not just the
+//!   socket.
+
+use fuseconv::coordinator::search::{run_nas_with, NasConfig};
+use fuseconv::coordinator::wire::{encode_frame, encode_request_body};
+use fuseconv::coordinator::{
+    http_call_auth, http_sse_auth, ConfigPatch, Evaluator, Frame, HttpServer, Reply, Request,
+    RequestBody, Router, SearchReply, SearchSpec, ServeError, SimServer, Transport,
+    TransportGauges, WireClient, WireServer,
+};
+use fuseconv::exec::CancelToken;
+use fuseconv::sim::SimConfig;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+const T: Duration = Duration::from_secs(300);
+
+/// The one spec every test runs: small population on a tiny array, so a
+/// generation is cheap; `iterations` picks short vs effectively-endless.
+fn spec(iterations: usize) -> SearchSpec {
+    SearchSpec { population: 6, iterations, config: ConfigPatch::sized(8), ..SearchSpec::default() }
+}
+
+fn search_req(id: u64, iterations: usize) -> Request {
+    Request::new(id, RequestBody::Search { spec: spec(iterations) })
+}
+
+/// Simulation-only deployment with a single-slot search lane (so lane
+/// accounting is deterministic), on the chosen transport, optionally
+/// token-guarded.
+fn start_tcp(
+    transport: Transport,
+    auth: Option<&str>,
+) -> (String, thread::JoinHandle<()>, TransportGauges) {
+    let gauges = TransportGauges::new();
+    let sim = SimServer::new(2).with_search_capacity(1);
+    let router = Arc::new(Router::new(sim).with_gauges(gauges.clone()));
+    let server = WireServer::bind("127.0.0.1:0", router)
+        .expect("bind")
+        .with_transport(transport)
+        .with_gauges(gauges.clone())
+        .with_auth_token(auth.map(str::to_string));
+    let addr = server.local_addr().to_string();
+    let handle = thread::spawn(move || server.run().expect("run"));
+    (addr, handle, gauges)
+}
+
+/// Drain one request's reply stream into its raw frame sequence.
+fn stream_frames(client: &mut WireClient, id: u64) -> Vec<Frame> {
+    let mut frames = Vec::new();
+    loop {
+        let frame = client.recv_frame(id).expect("stream frame");
+        let last = frame.is_final();
+        frames.push(frame);
+        if last {
+            return frames;
+        }
+    }
+}
+
+fn final_search(frames: &[Frame]) -> SearchReply {
+    match frames.last() {
+        Some(Frame::Final(Ok(Reply::Search(r)))) => r.clone(),
+        other => panic!("expected a search terminal, got {other:?}"),
+    }
+}
+
+/// Poll `cond` until it holds or a generous deadline passes (gauge and
+/// counter updates trail the client-visible event by a thread unwind).
+fn wait_until(what: &str, mut cond: impl FnMut() -> bool) {
+    let deadline = Instant::now() + Duration::from_secs(120);
+    while !cond() {
+        assert!(Instant::now() < deadline, "timed out waiting for {what}");
+        thread::sleep(Duration::from_millis(20));
+    }
+}
+
+#[test]
+fn same_seed_streams_are_byte_identical_and_match_local() {
+    let (addr, handle, _gauges) = start_tcp(Transport::Threaded, None);
+    let mut client = WireClient::connect(&addr, T).expect("connect");
+
+    // Two runs of the same seeded spec over the wire: every frame —
+    // progress, rows, terminal — re-encodes to the same bytes.
+    client.send(&search_req(5, 3)).expect("send search");
+    let first = stream_frames(&mut client, 5);
+    client.send(&search_req(5, 3)).expect("send search again");
+    let second = stream_frames(&mut client, 5);
+    let enc = |frames: &[Frame]| frames.iter().map(|f| encode_frame(5, f)).collect::<Vec<_>>();
+    assert_eq!(enc(&first), enc(&second), "same seed must stream byte-identical frames");
+    assert!(
+        first.iter().any(|f| matches!(f, Frame::SearchRow(_))),
+        "per-generation pareto rows must stream"
+    );
+
+    // The remote frontier equals the local library run of the same
+    // config — genome strings and float bits, not approximately.
+    let reply = final_search(&first);
+    assert!(!reply.frontier.is_empty());
+    assert_eq!(reply.generations, 3);
+    let nas = NasConfig { population: 6, iterations: 3, ..NasConfig::default() };
+    let local = run_nas_with(
+        Arc::new(Evaluator::new(SimConfig::with_size(8))),
+        &nas,
+        None,
+        &CancelToken::new(),
+        |_| {},
+    );
+    assert_eq!(reply.evaluated, local.evaluated as u64);
+    assert_eq!(reply.frontier.len(), local.frontier.len());
+    for (remote, here) in reply.frontier.iter().zip(&local.frontier) {
+        assert_eq!(remote.genome, here.genome.compact());
+        assert_eq!(remote.acc.to_bits(), here.acc.to_bits());
+        assert_eq!(remote.latency_ms.to_bits(), here.latency_ms.to_bits());
+    }
+
+    // The HTTP/SSE transport renders the very same stream: row frames
+    // byte-identical to TCP's, the terminal reply equal to TCP's.
+    let http = HttpServer::bind("127.0.0.1:0", Arc::new(Router::new(SimServer::new(2))))
+        .expect("bind http");
+    let haddr = http.local_addr().to_string();
+    let hh = thread::spawn(move || http.run().expect("http run"));
+    let mut sse_rows: Vec<String> = Vec::new();
+    let resp = http_sse_auth(
+        &haddr,
+        "/v1/search",
+        &encode_request_body(&search_req(5, 3)),
+        None,
+        None,
+        T,
+        |fid, frame| {
+            assert_eq!(fid, 5);
+            if let Frame::SearchRow(p) = frame {
+                sse_rows.push(encode_frame(5, &Frame::SearchRow(p.clone())));
+            }
+        },
+    )
+    .expect("sse search");
+    let tcp_rows: Vec<String> = first
+        .iter()
+        .filter(|f| matches!(f, Frame::SearchRow(_)))
+        .map(|f| encode_frame(5, f))
+        .collect();
+    assert_eq!(sse_rows, tcp_rows, "SSE rows must be byte-identical to the TCP stream");
+    match resp.result {
+        Ok(Reply::Search(r)) => assert_eq!(r, reply, "SSE terminal must equal the TCP terminal"),
+        other => panic!("expected a search reply over SSE, got {other:?}"),
+    }
+    let reply = http_call_auth(&haddr, "/v1/shutdown", Some("{}"), None, None, T)
+        .expect("http shutdown");
+    assert_eq!(reply.status, 200);
+    hh.join().expect("http frontend");
+
+    let resp = client.roundtrip(&Request::new(99, RequestBody::Shutdown)).expect("shutdown ack");
+    assert_eq!(resp.result, Ok(Reply::Done));
+    handle.join().expect("tcp frontend");
+}
+
+fn cancel_frees_the_search_lane(transport: Transport) {
+    let (addr, handle, _gauges) = start_tcp(transport, None);
+
+    // The long search holds the only lane slot; its first frame proves
+    // it is registered and running.
+    let mut a = WireClient::connect(&addr, T).expect("connect victim");
+    a.send(&search_req(1, 1024)).expect("send long search");
+    assert!(!a.recv_frame(1).expect("first frame").is_final());
+
+    // While it runs, the lane is full: a second search sheds Busy.
+    let mut b = WireClient::connect(&addr, T).expect("connect second");
+    let resp = b.roundtrip(&search_req(2, 1)).expect("busy roundtrip");
+    assert_eq!(resp.result, Err(ServeError::Busy), "the single search slot must shed");
+
+    // Cancel lands from a DIFFERENT connection — the registry is keyed
+    // by request id on the service, not on the victim's socket.
+    let resp =
+        b.roundtrip(&Request::new(3, RequestBody::Cancel { target: 1 })).expect("cancel ack");
+    assert_eq!(resp.result, Ok(Reply::Done));
+    let reply = final_search(&stream_frames(&mut a, 1));
+    assert!(reply.cancelled, "the terminal must record the cancellation");
+    assert!(reply.generations < 1024, "cancel must stop the run within one generation");
+
+    // The slot is released before the terminal frame is sent, so the
+    // lane must now admit (and finish) a fresh search.
+    b.send(&search_req(4, 1)).expect("send follow-up search");
+    let reply = final_search(&stream_frames(&mut b, 4));
+    assert!(!reply.cancelled);
+    assert_eq!(reply.generations, 1);
+
+    // Taxonomy: the shed request never started; the cancelled and the
+    // completed one each count exactly once.
+    let resp = b.roundtrip(&Request::new(5, RequestBody::Stats)).expect("stats");
+    match resp.result {
+        Ok(Reply::Stats(s)) => {
+            assert_eq!((s.search_started, s.search_completed, s.search_cancelled), (2, 1, 1));
+        }
+        other => panic!("expected stats, got {other:?}"),
+    }
+
+    let resp = b.roundtrip(&Request::new(9, RequestBody::Shutdown)).expect("shutdown ack");
+    assert_eq!(resp.result, Ok(Reply::Done));
+    handle.join().expect("frontend");
+}
+
+#[test]
+fn threaded_cancel_frees_the_search_lane() {
+    cancel_frees_the_search_lane(Transport::Threaded);
+}
+
+#[cfg(target_os = "linux")]
+#[test]
+fn epoll_cancel_frees_the_search_lane() {
+    cancel_frees_the_search_lane(Transport::Epoll);
+}
+
+fn tcp_auth_taxonomy(transport: Transport) {
+    let (addr, handle, _gauges) = start_tcp(transport, Some("sesame"));
+    let mut client = WireClient::connect(&addr, T).expect("connect");
+
+    // Missing and wrong tokens answer typed unauthorized — the
+    // connection survives to try again.
+    let resp = client.roundtrip(&Request::new(1, RequestBody::Stats)).expect("no token");
+    assert_eq!(resp.result, Err(ServeError::Unauthorized));
+    let resp = client
+        .roundtrip(&Request::new(2, RequestBody::Stats).with_token("open-sesame"))
+        .expect("wrong token");
+    assert_eq!(resp.result, Err(ServeError::Unauthorized));
+
+    // An unauthorized Shutdown must NOT stop the deployment...
+    let resp = client
+        .roundtrip(&Request::new(3, RequestBody::Shutdown).with_token("nope"))
+        .expect("unauthorized shutdown");
+    assert_eq!(resp.result, Err(ServeError::Unauthorized));
+
+    // ...because the same connection, correctly tokened, is still
+    // served — including a full search stream.
+    let resp = client
+        .roundtrip(&Request::new(4, RequestBody::Stats).with_token("sesame"))
+        .expect("authorized stats");
+    assert!(matches!(resp.result, Ok(Reply::Stats(_))), "authorized request must serve");
+    client.send(&search_req(5, 2).with_token("sesame")).expect("send authorized search");
+    let reply = final_search(&stream_frames(&mut client, 5));
+    assert!(!reply.cancelled);
+    assert!(!reply.frontier.is_empty());
+
+    let resp = client
+        .roundtrip(&Request::new(9, RequestBody::Shutdown).with_token("sesame"))
+        .expect("authorized shutdown");
+    assert_eq!(resp.result, Ok(Reply::Done));
+    handle.join().expect("frontend");
+}
+
+#[test]
+fn threaded_auth_rejects_bad_tokens() {
+    tcp_auth_taxonomy(Transport::Threaded);
+}
+
+#[cfg(target_os = "linux")]
+#[test]
+fn epoll_auth_rejects_bad_tokens() {
+    tcp_auth_taxonomy(Transport::Epoll);
+}
+
+#[test]
+fn http_auth_rejects_bad_bearers_and_healthz_stays_open() {
+    let http = HttpServer::bind("127.0.0.1:0", Arc::new(Router::new(SimServer::new(2))))
+        .expect("bind http")
+        .with_auth_token(Some("sesame".into()));
+    let addr = http.local_addr().to_string();
+    let handle = thread::spawn(move || http.run().expect("http run"));
+
+    // Missing and wrong bearers are 401 with the typed error body.
+    let reply = http_call_auth(&addr, "/v1/stats", None, None, None, T).expect("no bearer");
+    assert_eq!(reply.status, 401);
+    assert!(reply.body.contains("unauthorized"), "typed error body: {}", reply.body);
+    let reply =
+        http_call_auth(&addr, "/v1/stats", None, None, Some("wrong"), T).expect("wrong bearer");
+    assert_eq!(reply.status, 401);
+
+    // A 401'd search never reaches the lane — no stream, no counters.
+    let body = encode_request_body(&search_req(7, 2));
+    let reply =
+        http_call_auth(&addr, "/v1/search", Some(&body), None, None, T).expect("unauth search");
+    assert_eq!(reply.status, 401);
+
+    // The liveness probe stays open for unauthenticated orchestrators.
+    let reply = http_call_auth(&addr, "/healthz", None, None, None, T).expect("healthz");
+    assert_eq!(reply.status, 200);
+
+    // The right bearer serves — stats, and a full SSE search stream.
+    let reply =
+        http_call_auth(&addr, "/v1/stats", None, None, Some("sesame"), T).expect("auth stats");
+    assert_eq!(reply.status, 200);
+    match reply.response().expect("stats body").result {
+        Ok(Reply::Stats(s)) => assert_eq!(s.search_started, 0, "the 401'd search never started"),
+        other => panic!("expected stats, got {other:?}"),
+    }
+    let mut rows = 0usize;
+    let resp = http_sse_auth(&addr, "/v1/search", &body, None, Some("sesame"), T, |_, frame| {
+        if matches!(frame, Frame::SearchRow(_)) {
+            rows += 1;
+        }
+    })
+    .expect("authorized sse search");
+    assert!(matches!(resp.result, Ok(Reply::Search(_))), "bearer search must stream: {resp:?}");
+    assert!(rows > 0, "pareto rows must stream over SSE");
+
+    let reply = http_call_auth(&addr, "/v1/shutdown", Some("{}"), None, Some("sesame"), T)
+        .expect("authorized shutdown");
+    assert_eq!(reply.status, 200);
+    handle.join().expect("http frontend");
+}
+
+fn http_disconnect_cancels_search(transport: Transport) {
+    let gauges = TransportGauges::new();
+    let sim = SimServer::new(2).with_search_capacity(1);
+    let router = Arc::new(Router::new(sim).with_gauges(gauges.clone()));
+    let http = HttpServer::bind("127.0.0.1:0", router)
+        .expect("bind http")
+        .with_transport(transport)
+        .with_gauges(gauges.clone());
+    let addr = http.local_addr().to_string();
+    let handle = thread::spawn(move || http.run().expect("http run"));
+
+    // A raw SSE client that reads the head of the stream and vanishes.
+    let body = encode_request_body(&search_req(5, 1024));
+    let mut conn = TcpStream::connect(&addr).expect("connect");
+    let req = format!(
+        "POST /v1/search HTTP/1.1\r\nhost: {addr}\r\nconnection: close\r\n\
+         content-length: {}\r\n\r\n{body}",
+        body.len()
+    );
+    conn.write_all(req.as_bytes()).expect("send search");
+    let mut buf = [0u8; 512];
+    let n = conn.read(&mut buf).expect("sse head");
+    assert!(n > 0, "the stream must be live before the disconnect");
+    drop(conn);
+
+    // The dead socket must cancel the search — not just close the
+    // connection: the server-side counter records the cancellation,
+    // which means the NAS loop saw the tripped token and stopped.
+    wait_until("the vanished SSE client to be reaped", || {
+        gauges.open_conns() == 0 && gauges.active_streams() == 0
+    });
+    wait_until("the abandoned search to record its cancellation", || {
+        let reply = http_call_auth(&addr, "/v1/stats", None, None, None, T).expect("stats");
+        matches!(
+            reply.response().expect("stats body").result,
+            Ok(Reply::Stats(s)) if s.search_cancelled == 1
+        )
+    });
+
+    let reply =
+        http_call_auth(&addr, "/v1/shutdown", Some("{}"), None, None, T).expect("shutdown");
+    assert_eq!(reply.status, 200);
+    handle.join().expect("http frontend");
+}
+
+#[test]
+fn threaded_http_disconnect_cancels_search() {
+    http_disconnect_cancels_search(Transport::Threaded);
+}
+
+#[cfg(target_os = "linux")]
+#[test]
+fn epoll_http_disconnect_cancels_search() {
+    http_disconnect_cancels_search(Transport::Epoll);
+}

@@ -293,6 +293,7 @@ fn large_grid_streams_incremental_frames_before_final() {
                 incremental_before_final += 1;
                 rows.push(row);
             }
+            Frame::SearchRow(p) => panic!("search row in a sweep stream: {p:?}"),
             Frame::Final(result) => {
                 assert_eq!(result, Ok(Reply::Done));
                 break;
@@ -353,6 +354,7 @@ fn interleaved_streams_reassemble_per_request() {
         match frame {
             Frame::Progress { .. } => {}
             Frame::Row(row) => rows.entry(id).or_default().push(row),
+            Frame::SearchRow(p) => panic!("search row in a sweep/infer stream: {p:?}"),
             Frame::Final(result) => {
                 finals.insert(id, result);
             }
@@ -505,6 +507,7 @@ fn stalled_reader_pauses_stream_and_resumes_losslessly() {
         match stalled.recv_frame(5).expect("frame after resume") {
             Frame::Progress { .. } => {}
             Frame::Row(row) => rows.push(row),
+            Frame::SearchRow(p) => panic!("search row in a sweep stream: {p:?}"),
             Frame::Final(result) => {
                 assert_eq!(result, Ok(Reply::Done));
                 break;

@@ -21,8 +21,8 @@ use fuseconv::coordinator::shard::{route, ShardRouter};
 use fuseconv::coordinator::wire::encode_frame;
 use fuseconv::coordinator::{
     http_call, http_sse, request_once, ConfigPatch, Frame, HttpServer, MockEngine, ModelSpec,
-    Reply, Request, RequestBody, Router, ServeError, Server, Service, SimServer, SweepRow,
-    WireClient, WireServer,
+    Reply, Request, RequestBody, Router, SearchSpec, ServeError, Server, Service, SimServer,
+    SweepRow, WireClient, WireServer,
 };
 use fuseconv::nn::models;
 use fuseconv::sim::{
@@ -478,6 +478,142 @@ fn http_frontend_mounts_the_shard_router_unchanged() {
     let reply = http_call(&addr, "/v1/shutdown", Some("{}"), None, T).expect("shutdown");
     assert_eq!(reply.status, 200);
     hh.join().expect("http frontend");
+    h1.join().expect("backend 1");
+    h2.join().expect("backend 2");
+}
+
+fn search_req(id: u64, iterations: usize) -> Request {
+    Request::new(
+        id,
+        RequestBody::Search {
+            spec: SearchSpec {
+                population: 6,
+                iterations,
+                config: ConfigPatch::sized(8),
+                ..SearchSpec::default()
+            },
+        },
+    )
+}
+
+/// Every frame of a search stream, re-encoded, for byte-wise stream
+/// comparison (rows AND progress AND the terminal).
+fn encoded_frames(frames: &[Frame], id: u64) -> Vec<String> {
+    frames.iter().map(|f| encode_frame(id, f)).collect()
+}
+
+#[test]
+fn sharded_search_runs_whole_on_one_backend() {
+    let (b1, h1) = start_backend();
+    let (b2, h2) = start_backend();
+    let (single, hs) = start_backend();
+    let (shard, hsh) = start_shard_frontend(vec![b1.clone(), b2.clone()]);
+
+    // The same seeded job through the front tier and against a lone
+    // node: a search is never partitioned, so the relayed stream must
+    // be byte-for-byte the single-node stream.
+    let mut sc = WireClient::connect(&shard, T).expect("connect shard");
+    sc.send(&search_req(7, 3)).expect("send sharded search");
+    let sharded = stream_frames(&mut sc, 7);
+
+    let mut nc = WireClient::connect(&single, T).expect("connect single node");
+    nc.send(&search_req(7, 3)).expect("send single search");
+    let direct = stream_frames(&mut nc, 7);
+
+    assert_eq!(
+        encoded_frames(&sharded, 7),
+        encoded_frames(&direct, 7),
+        "relayed search stream must be byte-identical to the single node"
+    );
+    assert!(
+        sharded.iter().any(|f| matches!(f, Frame::SearchRow(_))),
+        "pareto rows must pass through the relay"
+    );
+    let reply = match sharded.last() {
+        Some(Frame::Final(Ok(Reply::Search(r)))) => r.clone(),
+        other => panic!("expected a search terminal, got {other:?}"),
+    };
+    assert!(!reply.frontier.is_empty(), "converged frontier must be non-empty");
+    assert!(!reply.cancelled);
+    assert_eq!(reply.generations, 3);
+
+    // Round-robin placement, not fan-out: exactly one backend ran it.
+    let mut started = Vec::new();
+    for backend in [&b1, &b2] {
+        let resp = request_once(backend, &Request::new(55, RequestBody::Stats), T)
+            .expect("backend stats");
+        match resp.result {
+            Ok(Reply::Stats(s)) => started.push(s.search_started),
+            other => panic!("expected stats, got {other:?}"),
+        }
+    }
+    started.sort_unstable();
+    assert_eq!(started, vec![0, 1], "one backend must own the whole job");
+
+    // ...and the front tier's aggregate sums the fleet's counters.
+    let resp = request_once(&shard, &Request::new(56, RequestBody::Stats), T).expect("stats");
+    match resp.result {
+        Ok(Reply::Stats(s)) => {
+            assert_eq!((s.search_started, s.search_completed, s.search_cancelled), (1, 1, 0));
+        }
+        other => panic!("expected stats, got {other:?}"),
+    }
+
+    let resp = sc.roundtrip(&Request::new(99, RequestBody::Shutdown)).expect("shutdown ack");
+    assert_eq!(resp.result, Ok(Reply::Done));
+    hsh.join().expect("shard frontend");
+    h1.join().expect("backend 1");
+    h2.join().expect("backend 2");
+    let resp = nc.roundtrip(&Request::new(98, RequestBody::Shutdown)).expect("single shutdown");
+    assert_eq!(resp.result, Ok(Reply::Done));
+    hs.join().expect("single node");
+}
+
+#[test]
+fn cancel_passes_through_the_front_tier() {
+    let (b1, h1) = start_backend();
+    let (b2, h2) = start_backend();
+    let (shard, hsh) = start_shard_frontend(vec![b1.clone(), b2.clone()]);
+
+    // A long search parked on whichever backend round-robin picked; the
+    // first frame proves it is registered and streaming.
+    let mut sc = WireClient::connect(&shard, T).expect("connect shard");
+    sc.send(&search_req(21, 1024)).expect("send long search");
+    assert!(
+        !sc.recv_frame(21).expect("first frame").is_final(),
+        "the long search must still be streaming before the cancel"
+    );
+
+    // The canceller does not know which backend owns request 21 — the
+    // front tier fans the (idempotent) cancel to the whole fleet.
+    let mut cc = WireClient::connect(&shard, T).expect("connect canceller");
+    let resp =
+        cc.roundtrip(&Request::new(90, RequestBody::Cancel { target: 21 })).expect("cancel ack");
+    assert_eq!(resp.result, Ok(Reply::Done), "cancel fan-out must ack");
+
+    // The victim's stream terminates with a cancelled search reply —
+    // partial frontier, fewer generations than asked.
+    let frames = stream_frames(&mut sc, 21);
+    let reply = match frames.last() {
+        Some(Frame::Final(Ok(Reply::Search(r)))) => r.clone(),
+        other => panic!("expected a cancelled search terminal, got {other:?}"),
+    };
+    assert!(reply.cancelled, "the relayed terminal must record the cancellation");
+    assert!(reply.generations < 1024, "cancel must stop the job early: {reply:?}");
+
+    // Aggregate stats attribute the job: started once, cancelled once,
+    // completed never.
+    let resp = request_once(&shard, &Request::new(91, RequestBody::Stats), T).expect("stats");
+    match resp.result {
+        Ok(Reply::Stats(s)) => {
+            assert_eq!((s.search_started, s.search_completed, s.search_cancelled), (1, 0, 1));
+        }
+        other => panic!("expected stats, got {other:?}"),
+    }
+
+    let resp = sc.roundtrip(&Request::new(99, RequestBody::Shutdown)).expect("shutdown ack");
+    assert_eq!(resp.result, Ok(Reply::Done));
+    hsh.join().expect("shard frontend");
     h1.join().expect("backend 1");
     h2.join().expect("backend 2");
 }

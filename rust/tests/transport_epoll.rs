@@ -223,6 +223,7 @@ fn epoll_wire_sweep_streams_and_interleaves_with_infers() {
                 incremental_before_final += 1;
                 rows.push(row);
             }
+            Frame::SearchRow(p) => panic!("search row in a sweep/infer stream: {p:?}"),
             Frame::Final(Ok(Reply::Infer(r))) => {
                 assert!((100..104).contains(&id));
                 assert_eq!(r.output[0], (4 * id) as f32);
@@ -435,6 +436,7 @@ fn epoll_and_threaded_transports_agree_on_one_router() {
                 match client.recv_frame(11).expect("frame") {
                     Frame::Progress { .. } => {}
                     Frame::Row(row) => rows.push(row),
+                    Frame::SearchRow(p) => panic!("search row in a sweep stream: {p:?}"),
                     Frame::Final(result) => {
                         assert_eq!(result, Ok(Reply::Done));
                         break;
