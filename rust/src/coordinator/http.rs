@@ -435,6 +435,8 @@ fn route(method: &str, path: &str) -> Route {
         "/v1/sweep" => need("POST", "sweep", true),
         "/v1/search" => need("POST", "search", true),
         "/v1/cancel" => need("POST", "cancel", false),
+        "/v1/add-backend" => need("POST", "add-backend", false),
+        "/v1/drain-backend" => need("POST", "drain-backend", false),
         "/v1/shutdown" => need("POST", "shutdown", false),
         "/v1/stats" => need("GET", "stats", false),
         "/v1/zoo" => need("GET", "zoo", false),

@@ -125,6 +125,15 @@ pub enum RequestBody {
     /// envelope id is `target`. Idempotent: cancelling an unknown or
     /// already-finished id still acks `Done`.
     Cancel { target: u64 },
+    /// Admin op (shard front tier only): join `addr` to the fleet. New
+    /// traffic starts routing to it immediately; only the keys that
+    /// rendezvous-move to the new node go cold. A direct single node
+    /// answers `bad_request`.
+    AddBackend { addr: String },
+    /// Admin op (shard front tier only): stop routing *new* work to
+    /// `addr`, let its in-flight requests finish, then drop it from the
+    /// fleet. Idempotent; a direct single node answers `bad_request`.
+    DrainBackend { addr: String },
     /// Ask the frontend to stop accepting traffic and exit cleanly.
     Shutdown,
 }
@@ -140,6 +149,8 @@ impl RequestBody {
             RequestBody::Zoo => "zoo",
             RequestBody::Search { .. } => "search",
             RequestBody::Cancel { .. } => "cancel",
+            RequestBody::AddBackend { .. } => "add-backend",
+            RequestBody::DrainBackend { .. } => "drain-backend",
             RequestBody::Shutdown => "shutdown",
         }
     }
@@ -567,6 +578,21 @@ pub struct StatsReply {
     /// Search jobs stopped early — explicit `cancel` frame or client
     /// disconnect.
     pub search_cancelled: u64,
+    /// Shard front tier only: one `addr=state` entry per fleet member
+    /// (`up`, `suspect`, `down`, or `draining`). Additive field (absent
+    /// = empty on the wire); a direct single node reports an empty
+    /// list, and a front tier never sums it — it always describes the
+    /// answering tier's own membership view.
+    pub backend_state: Vec<String>,
+    /// Shard front tier: sweep cells re-planned onto a survivor (plus
+    /// `Simulate` retries) after a backend died mid-request. Additive
+    /// field (absent = 0); summed like the other counters, but backends
+    /// themselves always report 0.
+    pub failover_resteered: u64,
+    /// Shard front tier: health-probe round-trips that failed (each
+    /// failure pushes the probed backend toward `Suspect`/`Down`).
+    /// Additive field (absent = 0).
+    pub probe_failures: u64,
 }
 
 /// One zoo listing row.

@@ -783,6 +783,17 @@ impl Service for SimServer {
                 Ticket::immediate(Response::ok(id, Reply::Stats(self.stats_reply())))
             }
             RequestBody::Zoo => Ticket::immediate(Response::ok(id, Reply::Zoo(zoo_entries()))),
+            RequestBody::AddBackend { .. } | RequestBody::DrainBackend { .. } => {
+                // Fleet membership only means something on a shard front
+                // tier; a direct node has no backends to add or drain.
+                Ticket::immediate(Response::err(
+                    id,
+                    ServeError::BadRequest(
+                        "membership ops need a shard front tier (this is a direct node)"
+                            .into(),
+                    ),
+                ))
+            }
             RequestBody::Shutdown => {
                 // Lifecycle belongs to the frontend (Router / listener).
                 Ticket::immediate(Response::ok(id, Reply::Done))

@@ -11,32 +11,49 @@
 //! the single-node [`Router`](super::server::Router), so both wire
 //! frontends (TCP in [`net`](super::net), HTTP/SSE in
 //! [`http`](super::http)) mount it unchanged and the wire contract of
-//! `PROTOCOL.md` §Sharded deployment holds on every transport.
+//! `PROTOCOL.md` §Sharded deployment + §Health, failover & membership
+//! holds on every transport.
 //!
 //! Routing:
 //! * `Simulate` pins to one backend by [`shard_key`] of
 //!   (model name, price-relevant config fields) — a stable FNV-1a fold
 //!   with an avalanche finish, deliberately *not* std's hasher, so the
 //!   mapping survives process restarts and never depends on hasher
-//!   seeding;
-//! * `Sweep` splits the grid into per-backend **sub-plans** (for one
-//!   model the configs partition across backends; every non-empty
-//!   (backend, model) pair becomes one sub-sweep), fans them out
+//!   seeding. The key picks its backend by **rendezvous hashing**
+//!   ([`route`]): every (key, backend-address) pair scores
+//!   independently and the highest score wins, so adding or removing
+//!   one backend moves *only* the keys that score highest on the
+//!   changed node — every other backend's layer/result caches stay
+//!   warm across membership changes;
+//! * `Sweep` splits the grid into per-backend **sub-plans** (each cell
+//!   routes like the `Simulate` it replaces), fans them out
 //!   concurrently, and re-multiplexes the backends' `row` streams back
 //!   into **plan order** under the client's original request id with
 //!   one consolidated `progress` counter — the reorder-buffer pattern
 //!   of [`run_sweep_with`](crate::sim::run_sweep_with) — so a sharded
 //!   sweep is frame-for-frame identical to a single-node sweep;
-//! * `Stats` aggregates every backend's counters (and reports how many
-//!   backends contributed via [`StatsReply::backends`]); `Shutdown`
-//!   fans out to every backend before the ack; `Infer`/`Zoo` are
+//! * `Stats` aggregates every live backend's counters (and reports how
+//!   many backends contributed via [`StatsReply::backends`], plus the
+//!   fleet view in [`StatsReply::backend_state`]); `Shutdown` fans out
+//!   to every backend before the ack; `Infer`/`Zoo`/`Search` are
 //!   unsharded and round-robin across backends.
 //!
-//! Failure mapping: a backend that refuses a connection, drops a stream
-//! mid-sweep, or goes silent past the configured timeout terminates the
-//! client's stream with a typed `final` + `err:shutdown` — never a
+//! Self-healing: the fleet is *elastic*. Each backend carries a health
+//! state (`Up`/`Suspect`/`Down`) driven by two signals — periodic
+//! lightweight stats probes ([`ShardRouter::with_probes`]) and hard
+//! transport failures observed by in-flight relays. A backend that dies
+//! mid-sweep has its **remaining** sub-grid re-planned onto the
+//! survivors mid-stream (the reorder-buffer merge tolerates rows from
+//! anywhere; the deterministic simulator makes re-simulated rows
+//! byte-identical), counted in [`StatsReply::failover_resteered`]; a
+//! `Simulate` on a dead backend retries once on a survivor; an
+//! in-flight `Search` on a dead backend fails typed (`err:shutdown`),
+//! never hangs. Membership changes at runtime via the `add-backend` /
+//! `drain-backend` admin ops (drain: stop routing new work, finish
+//! in-flight, then remove). Only when *no* eligible backend remains
+//! does traffic fail with a typed `shutdown` error — still never a
 //! hang. Typed errors from a backend (`busy`, `bad_request`,
-//! `deadline`) pass through verbatim.
+//! `deadline`) pass through verbatim and are never retried.
 //!
 //! ```
 //! use fuseconv::coordinator::shard::{route, shard_key};
@@ -44,7 +61,8 @@
 //! let cfg = SimConfig::with_size(16);
 //! // the routing key is a pure function: same (model, config) → same backend
 //! assert_eq!(shard_key("mobilenet-v2", &cfg), shard_key("mobilenet-v2", &cfg));
-//! assert!(route("mobilenet-v2", &cfg, 4) < 4);
+//! let fleet = vec!["10.0.0.1:4242".to_string(), "10.0.0.2:4242".to_string()];
+//! assert!(route("mobilenet-v2", &cfg, &fleet) < fleet.len());
 //! ```
 
 use super::net::{request_once, TransportGauges, WireClient};
@@ -56,10 +74,10 @@ use super::server::{Lane, LaneSlot};
 use crate::sim::{FuseVariant, SimConfig, SweepPlan};
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::mpsc;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, RwLock};
 use std::thread;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Default backend connect/receive timeout (matches the stream-forwarder
 /// bound of the wire frontends: a silent backend becomes a typed error,
@@ -73,6 +91,13 @@ pub const DEFAULT_BACKEND_TIMEOUT: Duration = Duration::from_secs(600);
 /// single node's bounded lanes — instead of growing threads and file
 /// descriptors without limit.
 pub const DEFAULT_SHARD_INFLIGHT: usize = 1024;
+
+/// Default health-probe cadence (`fuseconv shard --probe-interval-ms`).
+pub const DEFAULT_PROBE_INTERVAL: Duration = Duration::from_millis(1000);
+
+/// Default consecutive probe failures before `Suspect` hardens into
+/// `Down` (`fuseconv shard --probe-failures`).
+pub const DEFAULT_PROBE_FAILURES: u32 = 3;
 
 /// Cap on each backend's shutdown round-trip: the fan-out is
 /// best-effort and concurrent, and one hung (accepted-but-silent)
@@ -89,10 +114,10 @@ fn fnv1a(mut h: u64, bytes: &[u8]) -> u64 {
 
 /// Final avalanche (splitmix64's mixer). FNV-1a alone is too regular to
 /// route on: its low bit is a pure XOR-parity of the input bytes, so
-/// `key % 2` would collapse (e.g. every *square* geometry of one model
-/// on the same backend — rows and cols contribute identical bytes and
-/// their parity cancels). The mixer diffuses every input bit into every
-/// output bit before the modulo.
+/// routing on raw FNV would collapse (e.g. every *square* geometry of
+/// one model on the same backend — rows and cols contribute identical
+/// bytes and their parity cancels). The mixer diffuses every input bit
+/// into every output bit before the rendezvous comparison.
 fn mix(mut h: u64) -> u64 {
     h ^= h >> 30;
     h = h.wrapping_mul(0xbf58_476d_1ce4_e5b9);
@@ -130,9 +155,31 @@ pub fn shard_key(model: &str, cfg: &SimConfig) -> u64 {
     mix(h)
 }
 
+/// Rendezvous (highest-random-weight) pick: which of `backends` owns
+/// `key`. Every (key, address) pair scores independently, so removing
+/// one address re-homes *only* the keys it owned, and adding one steals
+/// only the keys that score highest on it — ~1/n of the keyspace moves
+/// per membership change instead of the (n-1)/n a modulo would move.
+/// Ties break toward the lower index (deterministic for duplicate
+/// addresses). Panics on an empty slice — membership emptiness is the
+/// caller's typed-error case, not a routing case.
+pub fn rendezvous_pick(key: u64, backends: &[String]) -> usize {
+    assert!(!backends.is_empty(), "rendezvous over an empty backend set");
+    let mut best = 0usize;
+    let mut best_score = 0u64;
+    for (i, addr) in backends.iter().enumerate() {
+        let score = mix(key ^ mix(fnv1a(0xcbf2_9ce4_8422_2325, addr.as_bytes())));
+        if i == 0 || score > best_score {
+            best = i;
+            best_score = score;
+        }
+    }
+    best
+}
+
 /// Which of `backends` serves the (model, config) shard.
-pub fn route(model: &str, cfg: &SimConfig, backends: usize) -> usize {
-    (shard_key(model, cfg) % backends.max(1) as u64) as usize
+pub fn route(model: &str, cfg: &SimConfig, backends: &[String]) -> usize {
+    rendezvous_pick(shard_key(model, cfg), backends)
 }
 
 /// The display name a [`ModelSpec`] routes by (zoo name or inline name).
@@ -143,16 +190,265 @@ fn model_name(m: &ModelSpec) -> &str {
     }
 }
 
-/// The shard-router front tier. Holds backend addresses plus its own
+// ---------------------------------------------------------------------------
+// Fleet state
+// ---------------------------------------------------------------------------
+
+/// Health of one fleet member, as the front tier sees it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendState {
+    /// Answering probes (or not yet observed to fail).
+    Up,
+    /// Failed recent probe(s), below the `Down` threshold. Still
+    /// routed to — a suspect earns `Down` only through the threshold
+    /// or a hard transport failure on live traffic.
+    Suspect,
+    /// Failed `--probe-failures` consecutive probes, or killed a live
+    /// relay. Excluded from routing and stats aggregation until a
+    /// probe succeeds again (recovery flips it straight back to `Up`).
+    Down,
+}
+
+impl BackendState {
+    fn label(self) -> &'static str {
+        match self {
+            BackendState::Up => "up",
+            BackendState::Suspect => "suspect",
+            BackendState::Down => "down",
+        }
+    }
+}
+
+/// One fleet member. `inflight` counts live relays (sweep workers,
+/// simulate retries, proxies) so a draining member is removed exactly
+/// when its last in-flight request finishes.
+struct Member {
+    addr: String,
+    state: BackendState,
+    draining: bool,
+    consecutive_failures: u32,
+    inflight: usize,
+}
+
+/// The mutable fleet: membership + health, shared by the service path,
+/// the probe thread, and every in-flight relay. All mutation goes
+/// through the one `RwLock`, so `inflight` is a plain counter.
+struct FleetState {
+    members: RwLock<Vec<Member>>,
+    /// Sweep cells re-planned onto survivors + simulate retries.
+    failover_resteered: AtomicU64,
+    /// Failed health-probe round-trips.
+    probe_failures: AtomicU64,
+}
+
+impl FleetState {
+    fn new(addrs: Vec<String>) -> FleetState {
+        let members = addrs
+            .into_iter()
+            .map(|addr| Member {
+                addr,
+                state: BackendState::Up,
+                draining: false,
+                consecutive_failures: 0,
+                inflight: 0,
+            })
+            .collect();
+        FleetState {
+            members: RwLock::new(members),
+            failover_resteered: AtomicU64::new(0),
+            probe_failures: AtomicU64::new(0),
+        }
+    }
+
+    fn lock_read(&self) -> std::sync::RwLockReadGuard<'_, Vec<Member>> {
+        self.members.read().unwrap_or_else(|e| e.into_inner())
+    }
+
+    fn lock_write(&self) -> std::sync::RwLockWriteGuard<'_, Vec<Member>> {
+        self.members.write().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Addresses new work may route to: not `Down`, not draining.
+    fn eligible(&self) -> Vec<String> {
+        self.lock_read()
+            .iter()
+            .filter(|m| m.state != BackendState::Down && !m.draining)
+            .map(|m| m.addr.clone())
+            .collect()
+    }
+
+    /// Addresses believed alive (stats fan-out, cancel fan-out):
+    /// everything not `Down` — draining members still answer.
+    fn alive(&self) -> Vec<String> {
+        self.lock_read()
+            .iter()
+            .filter(|m| m.state != BackendState::Down)
+            .map(|m| m.addr.clone())
+            .collect()
+    }
+
+    /// Every member address, regardless of state (probes, shutdown).
+    fn all(&self) -> Vec<String> {
+        self.lock_read().iter().map(|m| m.addr.clone()).collect()
+    }
+
+    /// The `backend_state` stats rendering: one `addr=state` entry per
+    /// member, `draining` overriding the health label.
+    fn render(&self) -> Vec<String> {
+        self.lock_read()
+            .iter()
+            .map(|m| {
+                let label = if m.draining { "draining" } else { m.state.label() };
+                format!("{}={}", m.addr, label)
+            })
+            .collect()
+    }
+
+    /// Register one in-flight relay against `addr`; the guard's drop
+    /// releases it (and completes a drain if it was the last one).
+    fn track(self: &Arc<Self>, addr: &str) -> InflightGuard {
+        if let Some(m) = self.lock_write().iter_mut().find(|m| m.addr == addr) {
+            m.inflight += 1;
+        }
+        InflightGuard { fleet: Arc::clone(self), addr: addr.to_string() }
+    }
+
+    fn release(&self, addr: &str) {
+        let mut members = self.lock_write();
+        if let Some(i) = members.iter().position(|m| m.addr == addr) {
+            members[i].inflight = members[i].inflight.saturating_sub(1);
+            if members[i].draining && members[i].inflight == 0 {
+                members.remove(i);
+            }
+        }
+    }
+
+    /// A live relay observed a hard transport failure on `addr`: take
+    /// it out of routing immediately (probes may later revive it).
+    fn mark_down(&self, addr: &str) {
+        if let Some(m) = self.lock_write().iter_mut().find(|m| m.addr == addr) {
+            m.state = BackendState::Down;
+        }
+    }
+
+    /// Fold one probe round-trip into `addr`'s health: success resets
+    /// straight to `Up` (recovery); failure counts toward `Suspect`,
+    /// hardening into `Down` at `threshold` consecutive failures.
+    fn record_probe(&self, addr: &str, ok: bool, threshold: u32) {
+        let mut members = self.lock_write();
+        let Some(m) = members.iter_mut().find(|m| m.addr == addr) else { return };
+        if ok {
+            m.consecutive_failures = 0;
+            m.state = BackendState::Up;
+        } else {
+            self.probe_failures.fetch_add(1, Ordering::Relaxed);
+            m.consecutive_failures = m.consecutive_failures.saturating_add(1);
+            m.state = if m.consecutive_failures >= threshold.max(1) {
+                BackendState::Down
+            } else if m.state == BackendState::Up {
+                BackendState::Suspect
+            } else {
+                m.state
+            };
+        }
+    }
+
+    /// `add-backend`: join (or rejoin) `addr`. Idempotent — an existing
+    /// member is un-drained and reset to `Up` (the next probe or relay
+    /// re-judges it).
+    fn add(&self, addr: &str) {
+        let mut members = self.lock_write();
+        match members.iter_mut().find(|m| m.addr == addr) {
+            Some(m) => {
+                m.draining = false;
+                m.state = BackendState::Up;
+                m.consecutive_failures = 0;
+            }
+            None => members.push(Member {
+                addr: addr.to_string(),
+                state: BackendState::Up,
+                draining: false,
+                consecutive_failures: 0,
+                inflight: 0,
+            }),
+        }
+    }
+
+    /// `drain-backend`: stop routing new work to `addr`; the member is
+    /// removed when its in-flight count reaches zero (immediately, if
+    /// idle). Idempotent; unknown addresses are a no-op.
+    fn drain(&self, addr: &str) {
+        let mut members = self.lock_write();
+        if let Some(i) = members.iter().position(|m| m.addr == addr) {
+            if members[i].inflight == 0 {
+                members.remove(i);
+            } else {
+                members[i].draining = true;
+            }
+        }
+    }
+
+    fn resteered(&self, cells: u64) {
+        self.failover_resteered.fetch_add(cells, Ordering::Relaxed);
+    }
+}
+
+/// RAII in-flight marker for one (relay, backend) pair.
+struct InflightGuard {
+    fleet: Arc<FleetState>,
+    addr: String,
+}
+
+impl Drop for InflightGuard {
+    fn drop(&mut self) {
+        self.fleet.release(&self.addr);
+    }
+}
+
+/// The probe thread: every `interval`, one lightweight `stats`
+/// round-trip per member (capped at the interval so a black-holed
+/// backend costs one cycle, not the full backend timeout), folded into
+/// the fleet's health. Runs until `stop` trips (shutdown or drop).
+fn probe_loop(fleet: Arc<FleetState>, stop: Arc<AtomicBool>, interval: Duration, threshold: u32) {
+    let probe_timeout = interval.max(Duration::from_millis(10));
+    loop {
+        // Sleep in small chunks so shutdown never waits a full interval.
+        let mut slept = Duration::ZERO;
+        while slept < interval {
+            if stop.load(Ordering::Acquire) {
+                return;
+            }
+            let chunk = (interval - slept).min(Duration::from_millis(25));
+            thread::sleep(chunk);
+            slept += chunk;
+        }
+        for addr in fleet.all() {
+            if stop.load(Ordering::Acquire) {
+                return;
+            }
+            let probe = Request::new(0, RequestBody::Stats);
+            let ok =
+                matches!(request_once(&addr, &probe, probe_timeout), Ok(resp) if resp.result.is_ok());
+            fleet.record_probe(&addr, ok, threshold);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The router
+// ---------------------------------------------------------------------------
+
+/// The shard-router front tier. Holds the elastic fleet plus its own
 /// bounded admission lane — every admitted request opens its own
 /// backend connection(s) from a relay thread, so `call` never blocks
 /// (all backend I/O happens off the admission path, exactly like the
 /// single-node servers), and load past the lane bound sheds as
 /// [`ServeError::Busy`].
 pub struct ShardRouter {
-    backends: Vec<String>,
+    fleet: Arc<FleetState>,
     timeout: Duration,
-    /// Round-robin cursor for the unsharded ops (`Infer`, `Zoo`).
+    /// Round-robin cursor for the unsharded ops (`Infer`, `Zoo`,
+    /// `Search`).
     rr: AtomicUsize,
     /// The front tier's own bounded admission (one slot per in-flight
     /// relay) — the same primitive as the single node's lanes.
@@ -164,6 +460,8 @@ pub struct ShardRouter {
     /// aggregated stats replies. Backend gauges are deliberately *not*
     /// summed — gauges always describe the answering process.
     gauges: Option<TransportGauges>,
+    /// Trips the probe thread (if one was started) on shutdown/drop.
+    probe_stop: Arc<AtomicBool>,
 }
 
 impl ShardRouter {
@@ -172,12 +470,13 @@ impl ShardRouter {
     pub fn new(backends: Vec<String>, timeout: Duration) -> ShardRouter {
         assert!(!backends.is_empty(), "shard router needs at least one backend");
         ShardRouter {
-            backends,
+            fleet: Arc::new(FleetState::new(backends)),
             timeout,
             rr: AtomicUsize::new(0),
             lane: Lane::new(DEFAULT_SHARD_INFLIGHT),
             closing: AtomicBool::new(false),
             gauges: None,
+            probe_stop: Arc::new(AtomicBool::new(false)),
         }
     }
 
@@ -196,8 +495,28 @@ impl ShardRouter {
         self
     }
 
-    pub fn backends(&self) -> &[String] {
-        &self.backends
+    /// Start the background health prober: every `interval`, one
+    /// lightweight `stats` ping per member (round-trip capped at the
+    /// interval), `threshold` consecutive failures hardening `Suspect`
+    /// into `Down`. A zero `interval` disables probing (health then
+    /// moves only on live-traffic transport failures). The thread stops
+    /// when the router shuts down or is dropped.
+    pub fn with_probes(self, interval: Duration, threshold: u32) -> ShardRouter {
+        if interval.is_zero() {
+            return self;
+        }
+        let fleet = Arc::clone(&self.fleet);
+        let stop = Arc::clone(&self.probe_stop);
+        thread::Builder::new()
+            .name("fuseconv-shard-probe".into())
+            .spawn(move || probe_loop(fleet, stop, interval, threshold))
+            .expect("spawn shard probe");
+        self
+    }
+
+    /// Current member addresses (any state, including draining).
+    pub fn backends(&self) -> Vec<String> {
+        self.fleet.all()
     }
 
     /// Has a `Shutdown` request been accepted?
@@ -205,18 +524,28 @@ impl ShardRouter {
         self.closing.load(Ordering::Acquire)
     }
 
-    /// Forward `req` to backend `b` verbatim from a fresh thread,
-    /// streaming every reply frame into `sink`.
-    fn spawn_proxy(&self, b: usize, req: Request, sink: FrameSink, slot: Option<LaneSlot>) {
-        let addr = self.backends[b].clone();
+    /// Forward `req` to backend `addr` verbatim from a fresh thread,
+    /// streaming every reply frame into `sink`. A hard transport
+    /// failure additionally marks the backend `Down`.
+    fn spawn_proxy(&self, addr: String, req: Request, sink: FrameSink, slot: Option<LaneSlot>) {
         let timeout = self.timeout;
+        let fleet = Arc::clone(&self.fleet);
         thread::Builder::new()
             .name("fuseconv-shard-proxy".into())
             .spawn(move || {
                 let _slot = slot;
-                proxy(&addr, timeout, &req, &sink)
+                let _guard = fleet.track(&addr);
+                if !proxy(&addr, timeout, &req, &sink) {
+                    fleet.mark_down(&addr);
+                }
             })
             .expect("spawn shard proxy");
+    }
+}
+
+impl Drop for ShardRouter {
+    fn drop(&mut self) {
+        self.probe_stop.store(true, Ordering::Release);
     }
 }
 
@@ -255,10 +584,18 @@ impl Service for ShardRouter {
                     Ok(c) => c,
                     Err(e) => return Ticket::immediate(Response::err(id, e)),
                 };
-                let b = route(model_name(&model), &cfg, self.backends.len());
+                let name = model_name(&model).to_string();
                 let (ticket, sink) = Ticket::pending(id);
-                let body = RequestBody::Simulate { model, variant, config };
-                self.spawn_proxy(b, forward(body), sink, slot);
+                let fwd = forward(RequestBody::Simulate { model, variant, config });
+                let fleet = Arc::clone(&self.fleet);
+                let timeout = self.timeout;
+                thread::Builder::new()
+                    .name("fuseconv-shard-proxy".into())
+                    .spawn(move || {
+                        let _slot = slot;
+                        simulate_failover(&fleet, timeout, &name, &cfg, &fwd, &sink);
+                    })
+                    .expect("spawn shard simulate");
                 ticket
             }
             // `Search` is a single long-lived job, not a partitionable
@@ -269,19 +606,27 @@ impl Service for ShardRouter {
             // verbatim. The relay also passes *disconnect* through: a
             // front-tier client that hangs up kills the proxy's backend
             // connection, and the backend cancels within a generation.
+            // A backend that dies mid-search fails the stream typed
+            // (`err:shutdown`, bounded by the timeout) — a search's
+            // stream is stateful on its node, so it is never resteered.
             body @ (RequestBody::Infer { .. } | RequestBody::Zoo | RequestBody::Search { .. }) => {
-                let b = self.rr.fetch_add(1, Ordering::Relaxed) % self.backends.len();
                 let (ticket, sink) = Ticket::pending(id);
-                self.spawn_proxy(b, forward(body), sink, slot);
+                let eligible = self.fleet.eligible();
+                if eligible.is_empty() {
+                    sink.finish(Err(ServeError::Shutdown));
+                    return ticket;
+                }
+                let b = self.rr.fetch_add(1, Ordering::Relaxed) % eligible.len();
+                self.spawn_proxy(eligible[b].clone(), forward(body), sink, slot);
                 ticket
             }
             RequestBody::Cancel { target } => {
                 // The target stream was pinned to *one* backend, but the
                 // front tier doesn't track which: fan the cancel out to
-                // all of them. Cancel is idempotent (`Done` on unknown
-                // ids), so the non-owners ack harmlessly.
+                // every live member. Cancel is idempotent (`Done` on
+                // unknown ids), so the non-owners ack harmlessly.
                 let (ticket, sink) = Ticket::pending(id);
-                let backends = self.backends.clone();
+                let backends = self.fleet.alive();
                 let timeout = self.timeout;
                 thread::Builder::new()
                     .name("fuseconv-shard-cancel".into())
@@ -301,20 +646,45 @@ impl Service for ShardRouter {
                     .expect("spawn shard cancel");
                 ticket
             }
+            RequestBody::AddBackend { addr } => {
+                if addr.is_empty() {
+                    return Ticket::immediate(Response::err(
+                        id,
+                        ServeError::BadRequest("add-backend needs a non-empty address".into()),
+                    ));
+                }
+                // Join immediately; membership is optimistic — if the
+                // node is dead, probes (or the first relay) will mark it
+                // Down and routing heals around it.
+                self.fleet.add(&addr);
+                Ticket::immediate(Response::ok(id, Reply::Done))
+            }
+            RequestBody::DrainBackend { addr } => {
+                self.fleet.drain(&addr);
+                Ticket::immediate(Response::ok(id, Reply::Done))
+            }
             RequestBody::Stats => {
                 let (ticket, sink) = Ticket::pending(id);
-                let backends = self.backends.clone();
+                let fleet = Arc::clone(&self.fleet);
                 let timeout = self.timeout;
                 let gauges = self.gauges.clone();
                 thread::Builder::new()
                     .name("fuseconv-shard-stats".into())
                     .spawn(move || {
                         let _slot = slot;
-                        let mut result = aggregate_stats(&backends, timeout, id);
-                        // counters are summed from the backends; the
-                        // gauges describe this front tier
-                        if let (Ok(Reply::Stats(s)), Some(g)) = (&mut result, &gauges) {
-                            g.overlay(s);
+                        // Aggregate over the members believed alive; a
+                        // Down backend would only fail the fan-out.
+                        let mut result = aggregate_stats(&fleet.alive(), timeout, id);
+                        if let Ok(Reply::Stats(s)) = &mut result {
+                            // counters are summed from the backends; the
+                            // gauges + fleet view describe this front tier
+                            if let Some(g) = &gauges {
+                                g.overlay(s);
+                            }
+                            s.backend_state = fleet.render();
+                            s.failover_resteered +=
+                                fleet.failover_resteered.load(Ordering::Relaxed);
+                            s.probe_failures += fleet.probe_failures.load(Ordering::Relaxed);
                         }
                         sink.finish(result);
                     })
@@ -330,8 +700,9 @@ impl Service for ShardRouter {
                 // this router trips its own stop latch on the ack,
                 // exactly as it does for the single-node router.
                 self.closing.store(true, Ordering::Release);
+                self.probe_stop.store(true, Ordering::Release);
                 let (ticket, sink) = Ticket::pending(id);
-                let backends = self.backends.clone();
+                let backends = self.fleet.all();
                 let timeout = if self.timeout.is_zero() {
                     SHUTDOWN_FANOUT_TIMEOUT
                 } else {
@@ -355,11 +726,11 @@ impl Service for ShardRouter {
             }
             RequestBody::Sweep { models, variants, configs } => {
                 let (ticket, sink) = Ticket::pending(id);
-                let backends = self.backends.clone();
+                let fleet = Arc::clone(&self.fleet);
                 let timeout = self.timeout;
                 let job = move || {
                     let _slot = slot;
-                    sweep_fanout(backends, timeout, models, variants, configs, deadline_ms, sink)
+                    sweep_fanout(fleet, timeout, models, variants, configs, deadline_ms, sink)
                 };
                 thread::Builder::new()
                     .name("fuseconv-shard-sweep".into())
@@ -371,10 +742,54 @@ impl Service for ShardRouter {
     }
 }
 
+/// One pinned `Simulate`, with single-retry failover: a hard transport
+/// failure marks the backend `Down` and re-routes the request once onto
+/// whichever survivor now owns the key (rendezvous re-pick). A second
+/// transport failure — or an empty fleet — answers the typed
+/// `shutdown` error; typed backend errors pass through unretried.
+fn simulate_failover(
+    fleet: &Arc<FleetState>,
+    timeout: Duration,
+    name: &str,
+    cfg: &SimConfig,
+    req: &Request,
+    sink: &FrameSink,
+) {
+    let eligible = fleet.eligible();
+    if eligible.is_empty() {
+        sink.finish(Err(ServeError::Shutdown));
+        return;
+    }
+    let addr = eligible[route(name, cfg, &eligible)].clone();
+    {
+        let _guard = fleet.track(&addr);
+        if let Ok(resp) = request_once(&addr, req, timeout) {
+            sink.finish(resp.result);
+            return;
+        }
+    }
+    fleet.mark_down(&addr);
+    fleet.resteered(1);
+    let survivors = fleet.eligible();
+    if survivors.is_empty() {
+        sink.finish(Err(ServeError::Shutdown));
+        return;
+    }
+    let retry = survivors[route(name, cfg, &survivors)].clone();
+    let _guard = fleet.track(&retry);
+    match request_once(&retry, req, timeout) {
+        Ok(resp) => sink.finish(resp.result),
+        Err(_) => {
+            fleet.mark_down(&retry);
+            sink.finish(Err(ServeError::Shutdown));
+        }
+    }
+}
+
 /// The sweep thread's whole job: run the sharded sweep, translate a
 /// panic into a typed error, and always terminate the stream.
 fn sweep_fanout(
-    backends: Vec<String>,
+    fleet: Arc<FleetState>,
     timeout: Duration,
     models: Vec<String>,
     variants: Vec<FuseVariant>,
@@ -383,33 +798,35 @@ fn sweep_fanout(
     sink: FrameSink,
 ) {
     let result = catch_unwind(AssertUnwindSafe(|| {
-        sweep_sharded(&backends, timeout, models, variants, configs, deadline_ms, &sink)
+        sweep_sharded(&fleet, timeout, models, variants, configs, deadline_ms, &sink)
     }))
     .unwrap_or_else(|_| Err(ServeError::BadRequest("sharded sweep panicked".into())));
     sink.finish(result);
 }
 
 /// Forward one request over its own backend connection, relaying every
-/// frame of the reply stream into `sink`. Transport failures (refused
-/// connection, dropped stream, silence past the timeout) become a typed
-/// terminal `shutdown`; a typed backend error passes through verbatim.
-fn proxy(addr: &str, timeout: Duration, req: &Request, sink: &FrameSink) {
+/// frame of the reply stream into `sink`. Returns `false` on a hard
+/// transport failure (refused connection, dropped stream, silence past
+/// the timeout — reported to the client as a typed terminal
+/// `shutdown`); a typed backend error passes through verbatim and still
+/// counts as a healthy transport.
+fn proxy(addr: &str, timeout: Duration, req: &Request, sink: &FrameSink) -> bool {
     let mut client = match WireClient::connect(addr, timeout) {
         Ok(c) => c,
         Err(_) => {
             sink.finish(Err(ServeError::Shutdown));
-            return;
+            return false;
         }
     };
     if client.send(req).is_err() {
         sink.finish(Err(ServeError::Shutdown));
-        return;
+        return false;
     }
     loop {
         match client.recv_frame(req.id) {
             Ok(Frame::Final(result)) => {
                 sink.finish(result);
-                return;
+                return true;
             }
             // A failed send means the front-tier client hung up. Stop
             // relaying and drop the backend connection: the backend's
@@ -417,33 +834,34 @@ fn proxy(addr: &str, timeout: Duration, req: &Request, sink: &FrameSink) {
             // an abandoned search stops burning a whole node's pool.
             Ok(Frame::Progress { done, total }) => {
                 if !sink.progress(done, total) {
-                    return;
+                    return true;
                 }
             }
             Ok(Frame::Row(row)) => {
                 if !sink.row(row) {
-                    return;
+                    return true;
                 }
             }
             Ok(Frame::SearchRow(point)) => {
                 if !sink.search_row(point) {
-                    return;
+                    return true;
                 }
             }
             Err(_) => {
                 sink.finish(Err(ServeError::Shutdown));
-                return;
+                return false;
             }
         }
     }
 }
 
-/// `Stats` fan-out: the sum of every backend's counters, stamped with
-/// how many backends contributed. Backends are probed concurrently —
-/// aggregate latency is one round-trip (and at worst one timeout), not
-/// a sum over nodes — which also keeps `/healthz` probes through a
-/// front tier cheap. A backend that cannot answer fails the aggregate
-/// with a typed error (partial counters would silently under-report).
+/// `Stats` fan-out: the sum of every live backend's counters, stamped
+/// with how many backends contributed. Backends are probed concurrently
+/// — aggregate latency is one round-trip (and at worst one timeout),
+/// not a sum over nodes — which also keeps `/healthz` probes through a
+/// front tier cheap. A live backend that cannot answer fails the
+/// aggregate with a typed error (partial counters would silently
+/// under-report); `Down` members are excluded by the caller.
 fn aggregate_stats(
     backends: &[String],
     timeout: Duration,
@@ -490,6 +908,10 @@ fn aggregate_stats(
                 agg.search_started += s.search_started;
                 agg.search_completed += s.search_completed;
                 agg.search_cancelled += s.search_cancelled;
+                // fleet-health counters: direct nodes report 0, but a
+                // nested front tier's tally still sums through
+                agg.failover_resteered += s.failover_resteered;
+                agg.probe_failures += s.probe_failures;
             }
             _ => {
                 return Err(ServeError::BadRequest(
@@ -501,29 +923,101 @@ fn aggregate_stats(
     Ok(Reply::Stats(agg))
 }
 
-/// One per-backend sub-sweep: the request to send plus the *global*
-/// plan positions its rows will fill, in the order the backend will
-/// emit them (the backend streams its own plan order — variant-major,
-/// then config — which maps 1:1 onto these precomputed slots).
+/// One grid cell in flight: its *global* plan position plus the
+/// (model, variant, config) indices needed to re-plan it onto a
+/// survivor if its backend dies before delivering the row.
+#[derive(Debug, Clone, Copy)]
+struct Cell {
+    slot: usize,
+    m: usize,
+    v: usize,
+    c: usize,
+}
+
+/// One per-backend sub-sweep: the request to send plus the cells its
+/// rows will fill, in the order the backend will emit them (the
+/// backend streams its own plan order, which maps 1:1 onto these
+/// precomputed cells).
 struct SubSweep {
     req: Request,
-    slots: VecDeque<usize>,
+    cells: VecDeque<Cell>,
 }
 
 enum Msg {
     /// One row landed, destined for global plan position `usize`.
     Row(usize, SweepRow),
-    /// A backend failed; the whole sharded sweep fails with this error.
+    /// A backend's transport died; `remaining` is the sub-grid it never
+    /// delivered — the merge re-plans it onto the survivors.
+    Died { addr: String, remaining: Vec<Cell> },
+    /// A backend answered a *typed* error (busy, bad_request, deadline,
+    /// …); the whole sharded sweep fails with it verbatim.
     Fail(ServeError),
+}
+
+/// Partition `cells` across `eligible` by rendezvous routing and build
+/// each backend's sub-sweep requests: cells group by (model, variant)
+/// in arrival order, so each group is expressible as one single-model,
+/// single-variant `Sweep` whose row order matches the cell order.
+fn plan_subs(
+    cells: Vec<Cell>,
+    models: &[String],
+    variants: &[FuseVariant],
+    patches: &[ConfigPatch],
+    plan: &SweepPlan,
+    eligible: &[String],
+    deadline_ms: Option<u64>,
+) -> Vec<(String, Vec<SubSweep>)> {
+    let mut grouped: Vec<Vec<((usize, usize), Vec<Cell>)>> =
+        (0..eligible.len()).map(|_| Vec::new()).collect();
+    for cell in cells {
+        let b = route(&models[cell.m], &plan.configs[cell.c], eligible);
+        match grouped[b].iter_mut().find(|(k, _)| *k == (cell.m, cell.v)) {
+            Some((_, cs)) => cs.push(cell),
+            None => grouped[b].push(((cell.m, cell.v), vec![cell])),
+        }
+    }
+    eligible
+        .iter()
+        .zip(grouped)
+        .filter(|(_, groups)| !groups.is_empty())
+        .map(|(addr, groups)| {
+            let subs = groups
+                .into_iter()
+                .enumerate()
+                .map(|(i, ((m, v), cs))| {
+                    // Sub-request ids only need to be unique per backend
+                    // connection; the merge re-keys every frame under
+                    // the client's original id.
+                    let mut req = Request::new(
+                        i as u64 + 1,
+                        RequestBody::Sweep {
+                            models: vec![models[m].clone()],
+                            variants: vec![variants[v]],
+                            configs: cs.iter().map(|cell| patches[cell.c].clone()).collect(),
+                        },
+                    );
+                    if let Some(ms) = deadline_ms {
+                        req = req.with_deadline_ms(ms);
+                    }
+                    SubSweep { req, cells: cs.into() }
+                })
+                .collect();
+            (addr.clone(), subs)
+        })
+        .collect()
 }
 
 /// One streamed sharded `Sweep`: validate the grid exactly like a
 /// single node, split it into per-backend sub-plans, fan out, and merge
 /// the backends' row streams back into plan order with one consolidated
-/// progress counter. Returns the terminal reply (`Done`; rows already
-/// left through the sink).
+/// progress counter. A backend that dies mid-stream has its undelivered
+/// cells re-planned onto the survivors (repeatedly, if survivors keep
+/// dying) — the sweep only fails typed when no eligible backend
+/// remains, or a backend answers a typed error, or the request's own
+/// deadline expires at the merge. Returns the terminal reply (`Done`;
+/// rows already left through the sink).
 fn sweep_sharded(
-    backends: &[String],
+    fleet: &Arc<FleetState>,
     timeout: Duration,
     models: Vec<String>,
     variants: Vec<FuseVariant>,
@@ -546,43 +1040,16 @@ fn sweep_sharded(
         return Err(ServeError::BadRequest("empty sweep grid".into()));
     }
     let total = plan.len();
-    let n = backends.len();
+    let deadline = deadline_ms.map(|ms| Instant::now() + Duration::from_millis(ms));
 
-    // --- sub-plan construction -------------------------------------
-    // Cells route by (model, config); variants never affect routing, so
-    // for one model the config list partitions across backends and each
-    // non-empty (backend, model) pair is one cross-product sub-sweep.
-    let mut subs: Vec<Vec<SubSweep>> = (0..n).map(|_| Vec::new()).collect();
-    for (m, name) in models.iter().enumerate() {
-        let mut per_backend: Vec<Vec<usize>> = vec![Vec::new(); n];
-        for (c, cfg) in plan.configs.iter().enumerate() {
-            per_backend[route(name, cfg, n)].push(c);
-        }
-        for (b, cs) in per_backend.into_iter().enumerate() {
-            if cs.is_empty() {
-                continue;
+    // Every cell of the grid, in (model, variant, config) order, each
+    // carrying its global plan position.
+    let mut cells = Vec::with_capacity(total);
+    for m in 0..models.len() {
+        for v in 0..variants.len() {
+            for c in 0..plan.configs.len() {
+                cells.push(Cell { slot: plan.index_of(m, v, c), m, v, c });
             }
-            let mut slots = VecDeque::with_capacity(variants.len() * cs.len());
-            for v in 0..variants.len() {
-                for &c in &cs {
-                    slots.push_back(plan.index_of(m, v, c));
-                }
-            }
-            // Sub-request ids only need to be unique per backend
-            // connection; the merge re-keys every frame under the
-            // client's original id.
-            let mut req = Request::new(
-                subs[b].len() as u64 + 1,
-                RequestBody::Sweep {
-                    models: vec![name.clone()],
-                    variants: variants.clone(),
-                    configs: cs.iter().map(|&c| configs[c].clone()).collect(),
-                },
-            );
-            if let Some(ms) = deadline_ms {
-                req = req.with_deadline_ms(ms);
-            }
-            subs[b].push(SubSweep { req, slots });
         }
     }
 
@@ -595,27 +1062,51 @@ fn sweep_sharded(
     // slow client pauses the merge, the merge pauses the workers, the
     // workers stop draining their backend sockets, and each backend's
     // own bounded writer pauses its sweep — no tier buffers unboundedly.
+    // The merge keeps its own sender alive (workers respawn on
+    // failover), so completion is tracked by row count, never by
+    // channel hangup.
     let (tx, rx) = mpsc::sync_channel::<Msg>(STREAM_BOUND);
-    for (b, backend_subs) in subs.into_iter().enumerate() {
-        if backend_subs.is_empty() {
-            continue;
+    let spawn_wave = |cells: Vec<Cell>| -> Result<(), ServeError> {
+        let eligible = fleet.eligible();
+        if eligible.is_empty() {
+            return Err(ServeError::Shutdown);
         }
-        let addr = backends[b].clone();
-        let tx = tx.clone();
-        thread::Builder::new()
-            .name("fuseconv-shard-fanout".into())
-            .spawn(move || backend_worker(&addr, timeout, backend_subs, &tx))
-            .expect("spawn shard fan-out");
-    }
-    drop(tx);
+        for (addr, subs) in
+            plan_subs(cells, &models, &variants, &configs, &plan, &eligible, deadline_ms)
+        {
+            let guard = fleet.track(&addr);
+            let tx = tx.clone();
+            thread::Builder::new()
+                .name("fuseconv-shard-fanout".into())
+                .spawn(move || {
+                    let _guard = guard;
+                    backend_worker(&addr, timeout, subs, &tx)
+                })
+                .expect("spawn shard fan-out");
+        }
+        Ok(())
+    };
+    spawn_wave(cells)?;
 
     // --- plan-order merge (the run_sweep_with reorder buffer) -------
     let mut slots: Vec<Option<SweepRow>> = (0..total).map(|_| None).collect();
     let mut next = 0usize;
     let mut done = 0usize;
     while done < total {
-        match rx.recv() {
-            Ok(Msg::Row(i, row)) => {
+        let msg = match deadline {
+            None => rx.recv().map_err(|_| ServeError::Shutdown)?,
+            Some(d) => {
+                match rx.recv_timeout(d.saturating_duration_since(Instant::now())) {
+                    Ok(msg) => msg,
+                    Err(mpsc::RecvTimeoutError::Timeout) => return Err(ServeError::Deadline),
+                    Err(mpsc::RecvTimeoutError::Disconnected) => {
+                        return Err(ServeError::Shutdown)
+                    }
+                }
+            }
+        };
+        match msg {
+            Msg::Row(i, row) => {
                 slots[i] = Some(row);
                 done += 1;
                 let _ = sink.progress(done as u64, total as u64);
@@ -626,9 +1117,21 @@ fn sweep_sharded(
                     next += 1;
                 }
             }
-            Ok(Msg::Fail(e)) => return Err(e),
-            // Every worker hung up without delivering the full grid.
-            Err(_) => return Err(ServeError::Shutdown),
+            Msg::Died { addr, remaining } => {
+                // Failover: take the dead node out of routing and
+                // re-plan everything it never delivered onto whichever
+                // survivors now own those keys. Already-delivered cells
+                // are not in `remaining`, so nothing duplicates; the
+                // deterministic simulator makes the re-simulated rows
+                // byte-identical to what the dead node would have sent.
+                fleet.mark_down(&addr);
+                if remaining.is_empty() {
+                    continue;
+                }
+                fleet.resteered(remaining.len() as u64);
+                spawn_wave(remaining)?;
+            }
+            Msg::Fail(e) => return Err(e),
         }
     }
     Ok(Reply::Done)
@@ -639,36 +1142,45 @@ fn sweep_sharded(
 /// batch-lane admission slot per backend (exactly like the single
 /// `Sweep` request it replaces; pipelining them would make a grid that
 /// one node admits bounce `busy` behind a narrow `--batch-capacity`) —
-/// translating rows to global plan positions. Any transport failure or
-/// early stream end fails the whole sweep (a typed error, reported
-/// once through the merge channel).
+/// translating rows to global plan positions. A hard transport failure
+/// reports the undelivered cells as [`Msg::Died`] so the merge can
+/// re-steer them; a typed backend error or protocol violation fails the
+/// whole sweep via [`Msg::Fail`].
 fn backend_worker(
     addr: &str,
     timeout: Duration,
     subs: Vec<SubSweep>,
     tx: &mpsc::SyncSender<Msg>,
 ) {
+    let mut pending: VecDeque<SubSweep> = subs.into();
+    let died = |current: VecDeque<Cell>, pending: VecDeque<SubSweep>| {
+        let mut remaining: Vec<Cell> = current.into_iter().collect();
+        for sub in pending {
+            remaining.extend(sub.cells);
+        }
+        let _ = tx.send(Msg::Died { addr: addr.to_string(), remaining });
+    };
     let fail = |e: ServeError| {
         let _ = tx.send(Msg::Fail(e));
     };
     let mut client = match WireClient::connect(addr, timeout) {
         Ok(c) => c,
-        Err(_) => return fail(ServeError::Shutdown),
+        Err(_) => return died(VecDeque::new(), pending),
     };
-    for sub in subs {
+    while let Some(sub) = pending.pop_front() {
         if client.send(&sub.req).is_err() {
-            return fail(ServeError::Shutdown);
+            return died(sub.cells, pending);
         }
-        let mut slots = sub.slots;
+        let mut cells = sub.cells;
         loop {
             match client.recv_frame(sub.req.id) {
                 Ok(Frame::Row(row)) => {
-                    let Some(slot) = slots.pop_front() else {
+                    let Some(cell) = cells.pop_front() else {
                         return fail(ServeError::BadRequest(
                             "backend emitted an unexpected sweep row".into(),
                         ));
                     };
-                    if tx.send(Msg::Row(slot, row)).is_err() {
+                    if tx.send(Msg::Row(cell.slot, row)).is_err() {
                         return; // merge already ended (failure elsewhere)
                     }
                 }
@@ -682,7 +1194,7 @@ fn backend_worker(
                     ));
                 }
                 Ok(Frame::Final(Ok(_))) => {
-                    if !slots.is_empty() {
+                    if !cells.is_empty() {
                         return fail(ServeError::BadRequest(
                             "backend ended a sub-sweep before streaming every row".into(),
                         ));
@@ -690,7 +1202,7 @@ fn backend_worker(
                     break;
                 }
                 Ok(Frame::Final(Err(e))) => return fail(e),
-                Err(_) => return fail(ServeError::Shutdown),
+                Err(_) => return died(cells, pending),
             }
         }
     }
@@ -702,6 +1214,10 @@ mod tests {
     use crate::nn::models;
     use crate::sim::grid_configs;
     use crate::sim::Dataflow;
+
+    fn addrs(n: usize) -> Vec<String> {
+        (0..n).map(|i| format!("10.0.0.{}:4242", i + 1)).collect()
+    }
 
     #[test]
     fn shard_key_is_deterministic_and_price_relevant() {
@@ -740,10 +1256,11 @@ mod tests {
             &[true, false],
         );
         for n in 2..=4usize {
+            let fleet = addrs(n);
             let mut counts = vec![0usize; n];
             for name in models::ZOO_NAMES {
                 for cfg in &grid {
-                    counts[route(name, cfg, n)] += 1;
+                    counts[route(name, cfg, &fleet)] += 1;
                 }
             }
             let cells = models::ZOO_NAMES.len() * grid.len();
@@ -757,13 +1274,104 @@ mod tests {
     }
 
     #[test]
-    fn route_is_stable_under_backend_count() {
+    fn route_is_stable_and_deterministic() {
         let cfg = SimConfig::with_size(8);
         for n in 1..=8 {
-            let b = route("mobilenet-v2", &cfg, n);
+            let fleet = addrs(n);
+            let b = route("mobilenet-v2", &cfg, &fleet);
             assert!(b < n);
             // same inputs → same backend, every time
-            assert_eq!(b, route("mobilenet-v2", &cfg, n));
+            assert_eq!(b, route("mobilenet-v2", &cfg, &fleet));
         }
+    }
+
+    #[test]
+    fn rendezvous_moves_only_the_changed_shard() {
+        // The membership-change contract behind warm-cache resharding:
+        // removing one backend re-homes exactly the keys it owned
+        // (every other key keeps its backend), and adding one steals
+        // keys only *for the new node* — no key moves between two
+        // surviving backends.
+        let grid = grid_configs(
+            &[8, 12, 16, 24, 32, 48, 64, 96],
+            &[Dataflow::OutputStationary, Dataflow::WeightStationary],
+            &[true, false],
+        );
+        let fleet = addrs(4);
+        let shrunk: Vec<String> =
+            fleet.iter().filter(|a| **a != fleet[2]).cloned().collect();
+        let grown: Vec<String> =
+            fleet.iter().cloned().chain(["10.0.0.9:4242".to_string()]).collect();
+        let mut moved_on_remove = 0usize;
+        let mut moved_to_new = 0usize;
+        let mut total = 0usize;
+        for name in models::ZOO_NAMES {
+            for cfg in &grid {
+                total += 1;
+                let before = &fleet[route(name, cfg, &fleet)];
+                let after_remove = &shrunk[route(name, cfg, &shrunk)];
+                if before == &fleet[2] {
+                    moved_on_remove += 1; // must move — its owner left
+                } else {
+                    assert_eq!(
+                        before, after_remove,
+                        "{name}: key moved between surviving backends on remove"
+                    );
+                }
+                let after_add = &grown[route(name, cfg, &grown)];
+                if after_add == "10.0.0.9:4242" {
+                    moved_to_new += 1;
+                } else {
+                    assert_eq!(
+                        before, after_add,
+                        "{name}: key moved between old backends on add"
+                    );
+                }
+            }
+        }
+        // Both churn directions touch a real (≈1/n) share of the keys.
+        assert!(moved_on_remove > 0 && moved_on_remove < total);
+        assert!(moved_to_new > 0 && moved_to_new < total / 2);
+    }
+
+    #[test]
+    fn fleet_membership_add_drain_and_health() {
+        let fleet = Arc::new(FleetState::new(addrs(2)));
+        assert_eq!(fleet.eligible().len(), 2);
+
+        // add joins; add again is idempotent
+        fleet.add("10.0.0.9:4242");
+        fleet.add("10.0.0.9:4242");
+        assert_eq!(fleet.eligible().len(), 3);
+
+        // drain with no in-flight work removes immediately
+        fleet.drain("10.0.0.9:4242");
+        assert_eq!(fleet.eligible().len(), 2);
+        assert_eq!(fleet.all().len(), 2);
+
+        // drain with in-flight work: excluded from routing immediately,
+        // removed when the last guard drops
+        let a0 = fleet.all()[0].clone();
+        let guard = fleet.track(&a0);
+        fleet.drain(&a0);
+        assert_eq!(fleet.eligible().len(), 1);
+        assert!(fleet.render().iter().any(|e| e == &format!("{a0}=draining")));
+        assert_eq!(fleet.all().len(), 2, "draining member stays until idle");
+        drop(guard);
+        assert_eq!(fleet.all().len(), 1, "drain completes when in-flight hits zero");
+
+        // probes: below threshold → Suspect (still routed), at
+        // threshold → Down (excluded), success → straight back to Up
+        let a1 = fleet.all()[0].clone();
+        fleet.record_probe(&a1, false, 2);
+        assert!(fleet.render().iter().any(|e| e.ends_with("=suspect")));
+        assert_eq!(fleet.eligible().len(), 1, "suspect members still route");
+        fleet.record_probe(&a1, false, 2);
+        assert!(fleet.render().iter().any(|e| e.ends_with("=down")));
+        assert_eq!(fleet.eligible().len(), 0);
+        assert_eq!(fleet.probe_failures.load(Ordering::Relaxed), 2);
+        fleet.record_probe(&a1, true, 2);
+        assert!(fleet.render().iter().any(|e| e.ends_with("=up")), "recovery");
+        assert_eq!(fleet.eligible().len(), 1);
     }
 }

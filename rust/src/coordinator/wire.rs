@@ -887,6 +887,9 @@ fn body_fields(body: &RequestBody) -> Vec<(&'static str, Json)> {
             pairs.push(("config", patch_to_json(&spec.config)));
         }
         RequestBody::Cancel { target } => pairs.push(("target", Json::UInt(*target))),
+        RequestBody::AddBackend { addr } | RequestBody::DrainBackend { addr } => {
+            pairs.push(("backend", Json::Str(addr.clone())))
+        }
         RequestBody::Stats | RequestBody::Zoo | RequestBody::Shutdown => {}
     }
     pairs
@@ -1019,6 +1022,10 @@ pub fn decode_request_body(op: &str, v: &Json) -> Result<RequestBody, WireError>
             }
         }
         "cancel" => RequestBody::Cancel { target: need_u64(v, "target")? },
+        "add-backend" => RequestBody::AddBackend { addr: need_str(v, "backend")?.to_string() },
+        "drain-backend" => {
+            RequestBody::DrainBackend { addr: need_str(v, "backend")?.to_string() }
+        }
         "stats" => RequestBody::Stats,
         "zoo" => RequestBody::Zoo,
         "shutdown" => RequestBody::Shutdown,
@@ -1124,6 +1131,12 @@ fn reply_to_json(reply: &Reply) -> Json {
             ("search_started", Json::UInt(s.search_started)),
             ("search_completed", Json::UInt(s.search_completed)),
             ("search_cancelled", Json::UInt(s.search_cancelled)),
+            (
+                "backend_state",
+                Json::Arr(s.backend_state.iter().map(|e| Json::Str(e.clone())).collect()),
+            ),
+            ("failover_resteered", Json::UInt(s.failover_resteered)),
+            ("probe_failures", Json::UInt(s.probe_failures)),
         ]),
         Reply::Search(s) => obj(vec![
             ("kind", Json::Str("search".into())),
@@ -1208,6 +1221,22 @@ fn reply_from_json(v: &Json) -> Result<Reply, WireError> {
             search_started: opt_u64(v, "search_started")?.unwrap_or(0),
             search_completed: opt_u64(v, "search_completed")?.unwrap_or(0),
             search_cancelled: opt_u64(v, "search_cancelled")?.unwrap_or(0),
+            // additive v2 fleet-health fields (shard front tiers);
+            // absent = old node or direct single node
+            backend_state: match v.get("backend_state") {
+                None | Some(Json::Null) => Vec::new(),
+                Some(Json::Arr(items)) => items
+                    .iter()
+                    .map(|e| {
+                        e.as_str().map(str::to_string).ok_or_else(|| {
+                            WireError("backend_state must hold strings".into())
+                        })
+                    })
+                    .collect::<Result<Vec<_>, _>>()?,
+                Some(_) => return err("backend_state must be an array"),
+            },
+            failover_resteered: opt_u64(v, "failover_resteered")?.unwrap_or(0),
+            probe_failures: opt_u64(v, "probe_failures")?.unwrap_or(0),
         }),
         "search" => Reply::Search(SearchReply {
             frontier: need_arr(v, "frontier")?

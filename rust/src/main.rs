@@ -93,9 +93,10 @@ fn print_help() {
                      --search-capacity, --cache-entries, --max-requests-per-conn, --queue,\n              \
                      --auth-token, --port-file, --http-port-file)\n  \
          shard       multi-node front tier (--backends addr1,addr2,..., --listen, --http-port,\n              \
-                     --transport threaded|epoll, --timeout-ms, --max-requests-per-conn,\n              \
-                     --auth-token, --port-file, --http-port-file)\n  \
-         request     serve client          (--connect, --op infer|simulate|sweep|stats|zoo|cancel|shutdown,\n              \
+                     --transport threaded|epoll, --timeout-ms, --probe-interval-ms, --probe-failures,\n              \
+                     --max-requests-per-conn, --auth-token, --port-file, --http-port-file)\n  \
+         request     serve client          (--connect, --op infer|simulate|sweep|stats|zoo|cancel|\n              \
+                     add-backend|drain-backend|shutdown, --backend host:port,\n              \
                      --model, --variant, --size, --count, --stream, --http, --token)\n  \
          bench       open-loop load generator (--connect, --rps, --connections, --duration-secs,\n              \
                      --warmup-secs, --mix simulate=80,infer=10,sweep=10, --out BENCH_6.json)"
@@ -1302,8 +1303,12 @@ fn run_frontends(
 /// (model, config) hash so each backend's layer cache stays hot on its
 /// shard, splits `Sweep` grids into per-backend sub-plans and merges
 /// the row streams back into plan order, aggregates `Stats`, and fans
-/// `Shutdown` out to the whole deployment. Mounts the same TCP and
-/// HTTP/SSE frontends as `fuseconv serve`.
+/// `Shutdown` out to the whole deployment. The fleet self-heals: health
+/// probes (`--probe-interval-ms`, `--probe-failures`) take dead
+/// backends out of routing, sweeps re-steer a dead backend's remaining
+/// cells onto survivors mid-stream, and membership changes at runtime
+/// via the `add-backend` / `drain-backend` admin ops. Mounts the same
+/// TCP and HTTP/SSE frontends as `fuseconv serve`.
 fn cmd_shard(argv: &[String]) -> i32 {
     use fuseconv::coordinator::ShardRouter;
 
@@ -1315,6 +1320,8 @@ fn cmd_shard(argv: &[String]) -> i32 {
         .opt("max-requests-per-conn", "per-connection request budget (0=unlimited)", Some("0"))
         .opt("max-inflight", "front-tier in-flight request bound (min 1)", Some("1024"))
         .opt("timeout-ms", "backend connect/receive timeout (0 = none)", Some("600000"))
+        .opt("probe-interval-ms", "backend health-probe cadence (0 = disabled)", Some("1000"))
+        .opt("probe-failures", "consecutive probe failures before a backend is Down", Some("3"))
         .opt("auth-token", "require this token on every request (TCP envelope / HTTP bearer)", None)
         .opt("port-file", "write the bound address here once listening", None)
         .opt("transport", "connection concurrency: threaded | epoll", Some("threaded"));
@@ -1337,12 +1344,14 @@ fn cmd_shard(argv: &[String]) -> i32 {
         eprintln!("--backends needs at least one host:port address\n{}", cli.usage());
         return 2;
     }
-    let (conn_budget, max_inflight, timeout_ms) = match (
+    let (conn_budget, max_inflight, timeout_ms, probe_ms, probe_failures) = match (
         args.u64("max-requests-per-conn"),
         args.usize("max-inflight"),
         args.u64("timeout-ms"),
+        args.u64("probe-interval-ms"),
+        args.u64("probe-failures"),
     ) {
-        (Ok(rb), Ok(mi), Ok(t)) => (rb, mi, t),
+        (Ok(rb), Ok(mi), Ok(t), Ok(p), Ok(pf)) => (rb, mi, t, p, pf),
         _ => {
             eprintln!("bad numeric option\n{}", cli.usage());
             return 2;
@@ -1369,7 +1378,11 @@ fn cmd_shard(argv: &[String]) -> i32 {
     let gauges = fuseconv::coordinator::TransportGauges::new();
     let router = ShardRouter::new(backends.clone(), timeout)
         .with_inflight(max_inflight)
-        .with_gauges(gauges.clone());
+        .with_gauges(gauges.clone())
+        .with_probes(
+            std::time::Duration::from_millis(probe_ms),
+            probe_failures.max(1) as u32,
+        );
     eprintln!(
         "fuseconv shard: fronting {} backend(s): {}",
         backends.len(),
@@ -1433,8 +1446,13 @@ fn cmd_request(argv: &[String]) -> i32 {
 
     let cli = Cli::new("request", "send protocol requests to a running `fuseconv serve`")
         .opt("connect", "server address host:port", Some("127.0.0.1:7878"))
-        .opt("op", "infer | simulate | sweep | stats | zoo | cancel | shutdown", Some("simulate"))
+        .opt(
+            "op",
+            "infer | simulate | sweep | stats | zoo | cancel | add-backend | drain-backend | shutdown",
+            Some("simulate"),
+        )
         .opt("token", "auth token for an authenticated server", None)
+        .opt("backend", "backend host:port (add-backend / drain-backend, shard front tier)", None)
         .opt("model", "zoo model (simulate)", Some("mobilenet-v2"))
         .opt("models", "comma list of zoo models (sweep)", Some("mobilenet-v2"))
         .opt("variant", "base|half|full (simulate)", Some("base"))
@@ -1553,6 +1571,20 @@ fn cmd_request(argv: &[String]) -> i32 {
                 return 2;
             }
         },
+        // Fleet membership (shard front tier only): `--op add-backend
+        // --backend host:port` joins a node, `--op drain-backend` stops
+        // routing new work to it and removes it once idle.
+        "add-backend" | "drain-backend" => {
+            let Some(addr) = args.get("backend").map(str::to_string) else {
+                eprintln!("--op {} needs --backend host:port\n{}", args.str("op"), cli.usage());
+                return 2;
+            };
+            if args.str("op") == "add-backend" {
+                RequestBody::AddBackend { addr }
+            } else {
+                RequestBody::DrainBackend { addr }
+            }
+        }
         "shutdown" => RequestBody::Shutdown,
         other => {
             eprintln!("unknown --op {other:?}\n{}", cli.usage());
@@ -1719,6 +1751,12 @@ fn run_http_requests(
                         ("/v1/simulate", Some(encode_request_body(&req)))
                     }
                     RequestBody::Cancel { .. } => ("/v1/cancel", Some(encode_request_body(&req))),
+                    RequestBody::AddBackend { .. } => {
+                        ("/v1/add-backend", Some(encode_request_body(&req)))
+                    }
+                    RequestBody::DrainBackend { .. } => {
+                        ("/v1/drain-backend", Some(encode_request_body(&req)))
+                    }
                     RequestBody::Sweep { .. } | RequestBody::Search { .. } => {
                         unreachable!("handled above")
                     }

@@ -1,12 +1,35 @@
-//! Property-based testing kit (proptest is unavailable offline).
+//! Property-based testing kit (proptest is unavailable offline) plus
+//! the deterministic fault-injection harness behind the self-healing
+//! fleet acceptance tests.
 //!
 //! `forall` runs a property over `cases` randomly generated inputs; on
 //! failure it performs greedy shrinking via the caller-provided `shrink`
 //! steps and reports the minimal failing case with the seed needed to
 //! replay it. The simulator/coordinator invariants (routing, batching,
 //! fold accounting, MAC conservation) are tested through this module.
+//!
+//! [`ChaosProxy`] is a TCP interposer that sits between a shard front
+//! tier and one backend and injects *deterministic* transport faults —
+//! refused connections, black holes, a cut at an exact reply-frame
+//! boundary, per-frame delay — switchable at runtime, so failover paths
+//! are exercised by reproducible faults instead of `kill -9` races.
+//!
+//! [`TestServer`] / [`TestShard`] are RAII guards around the
+//! bind-ephemeral / spawn-run / connect / shutdown-and-join boilerplate
+//! every serving integration test used to hand-roll.
 
+use crate::coordinator::batcher::BatchPolicy;
+use crate::coordinator::{
+    http_call_auth, request_once, HttpServer, MockEngine, Reply, Request, RequestBody, Router,
+    Server, Service, ShardRouter, SimServer, WireClient, WireServer,
+};
 use crate::rng::Rng;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{Shutdown as SockShutdown, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::Duration;
 
 /// Outcome of a property check over one generated case.
 pub enum Check {
@@ -93,6 +116,450 @@ pub fn shrink_usize(x: &usize) -> Vec<usize> {
 pub fn approx_eq(a: f64, b: f64, rel: f64, abs: f64) -> bool {
     let diff = (a - b).abs();
     diff <= abs || diff <= rel * a.abs().max(b.abs())
+}
+
+/// Poll `cond` (every 5 ms, up to ~10 s) until it holds; panic with
+/// `what` if it never does. The standard way the integration tests wait
+/// for asynchronous state (gauges draining, probes tripping) without
+/// fixed sleeps.
+pub fn wait_until(what: &str, mut cond: impl FnMut() -> bool) {
+    for _ in 0..2000 {
+        if cond() {
+            return;
+        }
+        thread::sleep(Duration::from_millis(5));
+    }
+    panic!("timed out waiting for {what}");
+}
+
+// ---------------------------------------------------------------------------
+// Wire-stream test helpers
+// ---------------------------------------------------------------------------
+
+/// A `Sweep` request over zoo `names` × `variants` × square `sizes`.
+pub fn sweep_req(
+    id: u64,
+    names: &[&str],
+    variants: &[crate::sim::FuseVariant],
+    sizes: &[usize],
+) -> Request {
+    Request::new(
+        id,
+        RequestBody::Sweep {
+            models: names.iter().map(|s| s.to_string()).collect(),
+            variants: variants.to_vec(),
+            configs: sizes.iter().map(|&s| crate::coordinator::ConfigPatch::sized(s)).collect(),
+        },
+    )
+}
+
+/// Drain one request's reply stream into its raw frame sequence
+/// (everything up to and including the terminal `Final`).
+pub fn stream_frames(client: &mut WireClient, id: u64) -> Vec<crate::coordinator::Frame> {
+    let mut frames = Vec::new();
+    loop {
+        let frame = client.recv_frame(id).expect("stream frame");
+        let last = frame.is_final();
+        frames.push(frame);
+        if last {
+            return frames;
+        }
+    }
+}
+
+/// The stream's `Row` frames re-encoded under `id`, for byte-for-byte
+/// stream comparison.
+pub fn row_frames(frames: &[crate::coordinator::Frame], id: u64) -> Vec<String> {
+    frames
+        .iter()
+        .filter(|f| matches!(f, crate::coordinator::Frame::Row(_)))
+        .map(|f| crate::coordinator::wire::encode_frame(id, f))
+        .collect()
+}
+
+/// The stream's `(done, total)` progress walk, in arrival order.
+pub fn progress_frames(frames: &[crate::coordinator::Frame]) -> Vec<(u64, u64)> {
+    frames
+        .iter()
+        .filter_map(|f| match f {
+            crate::coordinator::Frame::Progress { done, total } => Some((*done, *total)),
+            _ => None,
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// Deterministic TCP fault injection
+// ---------------------------------------------------------------------------
+
+/// What a [`ChaosProxy`] does to traffic, switchable at runtime.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ChaosMode {
+    /// Relay faithfully (the do-no-harm baseline).
+    Pass,
+    /// Close every accepted connection immediately: a connect "succeeds"
+    /// then dies on first use — the deterministic stand-in for a
+    /// refused/reset connection.
+    Refuse,
+    /// Accept and hold connections open but never answer: the client
+    /// sees pure silence until its own timeout — the deterministic
+    /// stand-in for a hung or partitioned node.
+    BlackHole,
+    /// Relay exactly N upstream reply frames (newline-delimited wire
+    /// frames), then sever both directions — a crash at an exact,
+    /// reproducible frame boundary mid-stream.
+    DropAfterFrames(usize),
+    /// Relay, sleeping this long before each forwarded reply frame.
+    DelayMs(u64),
+}
+
+/// A TCP interposer for deterministic fault injection: listens on its
+/// own ephemeral port, forwards to `upstream`, and applies the current
+/// [`ChaosMode`] — checked per accepted connection (`Refuse`,
+/// `BlackHole`) and per relayed reply frame (`DropAfterFrames`,
+/// `DelayMs`, and live switches *into* `BlackHole`). Point a shard
+/// front tier at `proxy.addr()` instead of the backend and the backend
+/// "crashes" exactly where the test says it does.
+pub struct ChaosProxy {
+    addr: String,
+    mode: Arc<Mutex<ChaosMode>>,
+    stop: Arc<AtomicBool>,
+    conns: Arc<Mutex<Vec<TcpStream>>>,
+    accept: Option<thread::JoinHandle<()>>,
+}
+
+impl ChaosProxy {
+    /// Start interposing in front of `upstream` (mode: [`ChaosMode::Pass`]).
+    pub fn start(upstream: &str) -> ChaosProxy {
+        let listener = TcpListener::bind("127.0.0.1:0").expect("bind chaos proxy");
+        listener.set_nonblocking(true).expect("nonblocking chaos accept");
+        let addr = listener.local_addr().expect("chaos proxy addr").to_string();
+        let mode = Arc::new(Mutex::new(ChaosMode::Pass));
+        let stop = Arc::new(AtomicBool::new(false));
+        let conns: Arc<Mutex<Vec<TcpStream>>> = Arc::new(Mutex::new(Vec::new()));
+        let accept = {
+            let upstream = upstream.to_string();
+            let (mode, stop, conns) =
+                (Arc::clone(&mode), Arc::clone(&stop), Arc::clone(&conns));
+            thread::Builder::new()
+                .name("chaos-proxy-accept".into())
+                .spawn(move || loop {
+                    if stop.load(Ordering::Acquire) {
+                        return;
+                    }
+                    match listener.accept() {
+                        Ok((client, _)) => {
+                            let _ = client.set_nonblocking(false);
+                            let decided = *mode.lock().unwrap_or_else(|e| e.into_inner());
+                            match decided {
+                                ChaosMode::Refuse => drop(client),
+                                ChaosMode::BlackHole => {
+                                    // Hold it open, never read or reply.
+                                    conns.lock().unwrap_or_else(|e| e.into_inner()).push(client);
+                                }
+                                _ => {
+                                    let Ok(up) = TcpStream::connect(&upstream) else {
+                                        drop(client);
+                                        continue;
+                                    };
+                                    register(&conns, &client);
+                                    register(&conns, &up);
+                                    spawn_relay_pair(
+                                        client,
+                                        up,
+                                        Arc::clone(&mode),
+                                        Arc::clone(&stop),
+                                    );
+                                }
+                            }
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            thread::sleep(Duration::from_millis(10));
+                        }
+                        Err(_) => return,
+                    }
+                })
+                .expect("spawn chaos accept")
+        };
+        ChaosProxy { addr, mode, stop, conns, accept: Some(accept) }
+    }
+
+    /// The address clients (the front tier) should connect to.
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// Switch fault mode; applies to new connections immediately and to
+    /// in-flight relays at their next reply frame.
+    pub fn set_mode(&self, m: ChaosMode) {
+        *self.mode.lock().unwrap_or_else(|e| e.into_inner()) = m;
+    }
+
+    /// Hard-close every connection the proxy has carried so far (both
+    /// halves) — the "node dropped off the network" event.
+    pub fn kill_connections(&self) {
+        let mut conns = self.conns.lock().unwrap_or_else(|e| e.into_inner());
+        for c in conns.drain(..) {
+            let _ = c.shutdown(SockShutdown::Both);
+        }
+    }
+}
+
+impl Drop for ChaosProxy {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        self.kill_connections();
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn register(conns: &Arc<Mutex<Vec<TcpStream>>>, stream: &TcpStream) {
+    if let Ok(clone) = stream.try_clone() {
+        conns.lock().unwrap_or_else(|e| e.into_inner()).push(clone);
+    }
+}
+
+/// One relay thread per direction. Requests (client→upstream) always
+/// copy raw bytes; replies (upstream→client) are relayed frame by frame
+/// (newline-delimited) so `DropAfterFrames` cuts at an exact boundary.
+fn spawn_relay_pair(
+    client: TcpStream,
+    up: TcpStream,
+    mode: Arc<Mutex<ChaosMode>>,
+    stop: Arc<AtomicBool>,
+) {
+    let (client_rd, up_wr) = (client.try_clone(), up.try_clone());
+    if let (Ok(mut client_rd), Ok(mut up_wr)) = (client_rd, up_wr) {
+        thread::Builder::new()
+            .name("chaos-proxy-up".into())
+            .spawn(move || {
+                let mut buf = [0u8; 4096];
+                loop {
+                    match client_rd.read(&mut buf) {
+                        Ok(0) | Err(_) => {
+                            let _ = up_wr.shutdown(SockShutdown::Both);
+                            return;
+                        }
+                        Ok(n) => {
+                            if up_wr.write_all(&buf[..n]).is_err() {
+                                let _ = client_rd.shutdown(SockShutdown::Both);
+                                return;
+                            }
+                        }
+                    }
+                }
+            })
+            .expect("spawn chaos relay");
+    }
+    thread::Builder::new()
+        .name("chaos-proxy-down".into())
+        .spawn(move || {
+            let mut client = client;
+            let mut reader = BufReader::new(up);
+            let mut forwarded = 0usize;
+            let mut line = Vec::new();
+            loop {
+                line.clear();
+                match reader.read_until(b'\n', &mut line) {
+                    Ok(0) | Err(_) => {
+                        let _ = client.shutdown(SockShutdown::Both);
+                        return;
+                    }
+                    Ok(_) => {}
+                }
+                // Apply the *current* mode to this frame.
+                loop {
+                    if stop.load(Ordering::Acquire) {
+                        return;
+                    }
+                    match *mode.lock().unwrap_or_else(|e| e.into_inner()) {
+                        ChaosMode::BlackHole => thread::sleep(Duration::from_millis(10)),
+                        ChaosMode::DelayMs(ms) => {
+                            thread::sleep(Duration::from_millis(ms));
+                            break;
+                        }
+                        ChaosMode::DropAfterFrames(n) if forwarded >= n => {
+                            let _ = client.shutdown(SockShutdown::Both);
+                            let _ = reader.get_ref().shutdown(SockShutdown::Both);
+                            return;
+                        }
+                        _ => break,
+                    }
+                }
+                if client.write_all(&line).is_err() {
+                    let _ = reader.get_ref().shutdown(SockShutdown::Both);
+                    return;
+                }
+                forwarded += 1;
+            }
+        })
+        .expect("spawn chaos relay");
+}
+
+// ---------------------------------------------------------------------------
+// RAII server guards
+// ---------------------------------------------------------------------------
+
+enum Flavor {
+    Tcp,
+    Http,
+}
+
+/// One running serving frontend on an ephemeral port, shut down and
+/// joined on drop (best-effort) or via [`TestServer::shutdown`]
+/// (asserting). Wraps the bind / spawn-`run` / connect / shutdown
+/// boilerplate every integration test used to duplicate.
+pub struct TestServer {
+    addr: String,
+    flavor: Flavor,
+    token: Option<String>,
+    handle: Option<thread::JoinHandle<()>>,
+}
+
+impl TestServer {
+    /// Run an already-configured TCP frontend (use this when the test
+    /// needs `with_transport`/`with_gauges`/`with_auth_token` builders).
+    pub fn from_wire(server: WireServer) -> TestServer {
+        let addr = server.local_addr().to_string();
+        let handle = thread::spawn(move || server.run().expect("test wire server run"));
+        TestServer { addr, flavor: Flavor::Tcp, token: None, handle: Some(handle) }
+    }
+
+    /// Run an already-configured HTTP frontend.
+    pub fn from_http(server: HttpServer) -> TestServer {
+        let addr = server.local_addr().to_string();
+        let handle = thread::spawn(move || server.run().expect("test http server run"));
+        TestServer { addr, flavor: Flavor::Http, token: None, handle: Some(handle) }
+    }
+
+    /// Mount `service` behind a plain TCP frontend on an ephemeral port.
+    pub fn wire(service: Arc<dyn Service>) -> TestServer {
+        Self::from_wire(WireServer::bind("127.0.0.1:0", service).expect("bind test server"))
+    }
+
+    /// Mount `service` behind a plain HTTP frontend on an ephemeral port.
+    pub fn http(service: Arc<dyn Service>) -> TestServer {
+        Self::from_http(HttpServer::bind("127.0.0.1:0", service).expect("bind test http"))
+    }
+
+    /// One full mock backend — the standard `fuseconv serve` shape
+    /// (mock inference engine + sim pool) on a TCP port.
+    pub fn mock_backend() -> TestServer {
+        Self::wire(Arc::new(mock_router()))
+    }
+
+    /// Token to present on the drop/shutdown round-trip (for frontends
+    /// started `with_auth_token`).
+    pub fn with_token(mut self, token: &str) -> TestServer {
+        self.token = Some(token.to_string());
+        self
+    }
+
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// Open a wire client to this server (TCP flavor only).
+    pub fn client(&self, timeout: Duration) -> WireClient {
+        WireClient::connect(&self.addr, timeout).expect("connect test server")
+    }
+
+    /// Strict shutdown: the round-trip must succeed and ack `Done`.
+    pub fn shutdown(mut self) {
+        let handle = self.handle.take().expect("server already shut down");
+        let result = self.send_shutdown();
+        handle.join().expect("test server thread");
+        assert_eq!(result, Some(Ok(Reply::Done)), "shutdown ack");
+    }
+
+    /// Join a server something *else* already stopped (e.g. a front
+    /// tier's shutdown fan-out). Sends nothing — if the server is in
+    /// fact still running, this hangs until the test times out, which
+    /// is exactly the proof the caller wants.
+    pub fn join_stopped(mut self) {
+        let handle = self.handle.take().expect("server already shut down");
+        handle.join().expect("test server thread");
+    }
+
+    /// Returns the shutdown round-trip's typed result, `None` if the
+    /// transport failed (already-stopped servers land here).
+    fn send_shutdown(&self) -> Option<Result<Reply, crate::coordinator::ServeError>> {
+        let t = Duration::from_secs(10);
+        match self.flavor {
+            Flavor::Tcp => {
+                let mut req = Request::new(u64::MAX, RequestBody::Shutdown);
+                if let Some(tok) = &self.token {
+                    req = req.with_token(tok.clone());
+                }
+                request_once(&self.addr, &req, t).ok().map(|resp| resp.result)
+            }
+            Flavor::Http => http_call_auth(
+                &self.addr,
+                "/v1/shutdown",
+                Some("{}"),
+                None,
+                self.token.as_deref(),
+                t,
+            )
+            .ok()
+            .and_then(|reply| reply.response().ok())
+            .map(|resp| resp.result),
+        }
+    }
+}
+
+impl Drop for TestServer {
+    fn drop(&mut self) {
+        if let Some(handle) = self.handle.take() {
+            // Best-effort: a front tier's shutdown fan-out may already
+            // have stopped this server, in which case the round-trip
+            // fails to connect and the join returns immediately.
+            let _ = self.send_shutdown();
+            let _ = handle.join();
+        }
+    }
+}
+
+/// The standard full-stack mock router (mock inference engine + sim
+/// pool) that backend-shaped tests mount.
+pub fn mock_router() -> Router {
+    Router::new(SimServer::new(2)).with_engine(Server::start(
+        MockEngine::new(4, 2, 8),
+        BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(2) },
+    ))
+}
+
+/// A whole sharded deployment under RAII: N mock backends plus a shard
+/// front tier over them. Declared front-first so the front tier drops
+/// (and fans its shutdown out) before the backend guards run.
+pub struct TestShard {
+    pub front: TestServer,
+    pub backends: Vec<TestServer>,
+}
+
+impl TestShard {
+    /// N mock backends behind a default-config front tier.
+    pub fn start(n: usize) -> TestShard {
+        Self::start_with(n, |addrs| ShardRouter::new(addrs, Duration::from_secs(120)))
+    }
+
+    /// N mock backends behind a front tier the test configures itself
+    /// (probes, inflight bounds, extra/proxied backend addresses).
+    pub fn start_with(
+        n: usize,
+        make: impl FnOnce(Vec<String>) -> ShardRouter,
+    ) -> TestShard {
+        let backends: Vec<TestServer> = (0..n).map(|_| TestServer::mock_backend()).collect();
+        let addrs = backends.iter().map(|b| b.addr().to_string()).collect();
+        let front = TestServer::wire(Arc::new(make(addrs)));
+        TestShard { front, backends }
+    }
+
+    pub fn front_addr(&self) -> &str {
+        self.front.addr()
+    }
 }
 
 #[cfg(test)]

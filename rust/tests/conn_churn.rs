@@ -26,11 +26,12 @@ use fuseconv::coordinator::{
     Router, ServeError, Server, SimServer, Transport, TransportGauges, WireClient, WireServer,
 };
 use fuseconv::sim::{FuseVariant, LayerCache, ResultCache};
+use fuseconv::testkit::{wait_until, TestServer};
 use std::io::{Read, Write};
 use std::net::TcpStream;
 use std::sync::{Arc, Barrier};
 use std::thread;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 const T: Duration = Duration::from_secs(300);
 
@@ -49,18 +50,6 @@ fn mock_router(gauges: &TransportGauges) -> Arc<Router> {
     )
 }
 
-/// Poll `cond` until it holds or a generous deadline passes. Gauge
-/// decrements race the client-side close (the serving thread unwinds
-/// after the socket drops), so quiescence is awaited, never asserted
-/// immediately.
-fn wait_until(what: &str, mut cond: impl FnMut() -> bool) {
-    let deadline = Instant::now() + Duration::from_secs(120);
-    while !cond() {
-        assert!(Instant::now() < deadline, "timed out waiting for {what}");
-        thread::sleep(Duration::from_millis(20));
-    }
-}
-
 fn small_sweep(id: u64) -> Request {
     Request::new(
         id,
@@ -75,12 +64,12 @@ fn small_sweep(id: u64) -> Request {
 /// Sequential + concurrent churn over the TCP frame frontend.
 fn tcp_churn(transport: Transport) {
     let gauges = TransportGauges::new();
-    let server = WireServer::bind("127.0.0.1:0", mock_router(&gauges))
+    let wire = WireServer::bind("127.0.0.1:0", mock_router(&gauges))
         .expect("bind")
         .with_transport(transport)
         .with_gauges(gauges.clone());
-    let addr = server.local_addr().to_string();
-    let handle = thread::spawn(move || server.run().expect("run"));
+    let server = TestServer::from_wire(wire);
+    let addr = server.addr().to_string();
 
     // -- 200 sequential connect → infer → close cycles --
     for i in 0..200u64 {
@@ -147,12 +136,7 @@ fn tcp_churn(transport: Transport) {
     });
 
     // -- clean shutdown --
-    let mut client = WireClient::connect(&addr, Duration::from_secs(30)).expect("connect");
-    let resp = client
-        .roundtrip(&Request::new(u64::MAX, RequestBody::Shutdown))
-        .expect("shutdown");
-    assert_eq!(resp.result, Ok(Reply::Done));
-    handle.join().expect("listener");
+    server.shutdown();
 }
 
 /// Sequential + concurrent churn over the HTTP frontend.
@@ -162,8 +146,8 @@ fn http_churn(transport: Transport) {
         .expect("bind http")
         .with_transport(transport)
         .with_gauges(gauges.clone());
-    let addr = http.local_addr().to_string();
-    let handle = thread::spawn(move || http.run().expect("http run"));
+    let server = TestServer::from_http(http);
+    let addr = server.addr().to_string();
 
     // -- 200 sequential one-shot calls (connection: close each) --
     for _ in 0..200 {
@@ -220,10 +204,7 @@ fn http_churn(transport: Transport) {
         gauges.open_conns() == 0 && gauges.active_streams() == 0
     });
 
-    let reply = fuseconv::coordinator::http_call(&addr, "/v1/shutdown", Some("{}"), None, T)
-        .expect("shutdown");
-    assert_eq!(reply.status, 200, "{}", reply.body);
-    handle.join().expect("http listener");
+    server.shutdown();
 }
 
 /// A client that vanishes mid-sweep must release its batch-lane slot:
@@ -235,12 +216,12 @@ fn disconnect_frees_stream_slot(transport: Transport) {
         BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(2) },
     )));
     let gauges = TransportGauges::new();
-    let server = WireServer::bind("127.0.0.1:0", router)
+    let wire = WireServer::bind("127.0.0.1:0", router)
         .expect("bind")
         .with_transport(transport)
         .with_gauges(gauges.clone());
-    let addr = server.local_addr().to_string();
-    let handle = thread::spawn(move || server.run().expect("run"));
+    let server = TestServer::from_wire(wire);
+    let addr = server.addr().to_string();
 
     // occupy the single batch-lane slot, then vanish mid-stream
     let mut doomed = WireClient::connect(&addr, T).expect("connect");
@@ -279,12 +260,7 @@ fn disconnect_frees_stream_slot(transport: Transport) {
         }
     });
 
-    let mut client = WireClient::connect(&addr, Duration::from_secs(30)).expect("connect");
-    let resp = client
-        .roundtrip(&Request::new(u64::MAX, RequestBody::Shutdown))
-        .expect("shutdown");
-    assert_eq!(resp.result, Ok(Reply::Done));
-    handle.join().expect("listener");
+    server.shutdown();
 }
 
 /// Result-cache churn regression: a follower that vanishes while
@@ -308,12 +284,12 @@ fn follower_disconnect_mid_coalesce(transport: Transport) {
             ))
             .with_gauges(gauges.clone()),
     );
-    let server = WireServer::bind("127.0.0.1:0", router)
+    let wire = WireServer::bind("127.0.0.1:0", router)
         .expect("bind")
         .with_transport(transport)
         .with_gauges(gauges.clone());
-    let addr = server.local_addr().to_string();
-    let handle = thread::spawn(move || server.run().expect("run"));
+    let server = TestServer::from_wire(wire);
+    let addr = server.addr().to_string();
 
     const K: u64 = 8;
     const CELLS: u64 = 4; // small_sweep: 1 model × 2 variants × 2 sizes
@@ -380,12 +356,7 @@ fn follower_disconnect_mid_coalesce(transport: Transport) {
     assert_eq!(after.hits + after.coalesced, K * CELLS);
     drop(probe);
 
-    let mut client = WireClient::connect(&addr, Duration::from_secs(30)).expect("connect");
-    let resp = client
-        .roundtrip(&Request::new(u64::MAX, RequestBody::Shutdown))
-        .expect("shutdown");
-    assert_eq!(resp.result, Ok(Reply::Done));
-    handle.join().expect("listener");
+    server.shutdown();
 }
 
 /// A disconnected sweep client must stop burning pool cycles: the sink
@@ -407,12 +378,12 @@ fn disconnect_cancels_sweep_work(transport: Transport) {
             ))
             .with_gauges(gauges.clone()),
     );
-    let server = WireServer::bind("127.0.0.1:0", router)
+    let wire = WireServer::bind("127.0.0.1:0", router)
         .expect("bind")
         .with_transport(transport)
         .with_gauges(gauges.clone());
-    let addr = server.local_addr().to_string();
-    let handle = thread::spawn(move || server.run().expect("run"));
+    let server = TestServer::from_wire(wire);
+    let addr = server.addr().to_string();
 
     // 2 models × 3 variants × 8 sizes = 48 unique, individually cheap
     // cells — far more work than can finish before the disconnect lands,
@@ -464,12 +435,7 @@ fn disconnect_cancels_sweep_work(transport: Transport) {
         "result_misses kept growing after the client disconnected"
     );
 
-    let mut client = WireClient::connect(&addr, Duration::from_secs(30)).expect("connect");
-    let resp = client
-        .roundtrip(&Request::new(u64::MAX, RequestBody::Shutdown))
-        .expect("shutdown");
-    assert_eq!(resp.result, Ok(Reply::Done));
-    handle.join().expect("listener");
+    server.shutdown();
 }
 
 #[test]
@@ -536,9 +502,8 @@ fn stats_without_gauges_reports_zeroes() {
         MockEngine::new(4, 2, 8),
         BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(2) },
     )));
-    let server = WireServer::bind("127.0.0.1:0", router).expect("bind");
-    let addr = server.local_addr().to_string();
-    let handle = thread::spawn(move || server.run().expect("run"));
+    let server = TestServer::wire(router);
+    let addr = server.addr().to_string();
     let resp = request_once(&addr, &Request::new(0, RequestBody::Stats), T).expect("stats");
     match resp.result {
         Ok(Reply::Stats(s)) => {
@@ -550,10 +515,5 @@ fn stats_without_gauges_reports_zeroes() {
         }
         other => panic!("expected stats, got {other:?}"),
     }
-    let mut client = WireClient::connect(&addr, Duration::from_secs(30)).expect("connect");
-    let resp = client
-        .roundtrip(&Request::new(u64::MAX, RequestBody::Shutdown))
-        .expect("shutdown");
-    assert_eq!(resp.result, Ok(Reply::Done));
-    handle.join().expect("listener");
+    server.shutdown();
 }

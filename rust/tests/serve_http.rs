@@ -30,6 +30,7 @@ use fuseconv::sim::{
     run_sweep_serial, simulate_network, FuseVariant, LayerCache, ResultCache, SimConfig,
     SweepPlan,
 };
+use fuseconv::testkit::TestServer;
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::TcpStream;
 use std::sync::{mpsc, Arc};
@@ -71,21 +72,6 @@ fn mock_router(interactive: usize, batch: usize) -> Arc<Router> {
     )))
 }
 
-/// Boot an HTTP-only frontend; shut it down with `POST /v1/shutdown`.
-fn start_http(router: Arc<Router>) -> (String, thread::JoinHandle<()>) {
-    let http = HttpServer::bind("127.0.0.1:0", router).expect("bind http");
-    let addr = http.local_addr().to_string();
-    let handle = thread::spawn(move || http.run().expect("http run"));
-    (addr, handle)
-}
-
-fn shutdown_http(addr: &str, handle: thread::JoinHandle<()>) {
-    let reply = http_call(addr, "/v1/shutdown", Some("{}"), None, T).expect("shutdown");
-    assert_eq!(reply.status, 200, "{}", reply.body);
-    assert_eq!(reply.response().unwrap().result, Ok(Reply::Done));
-    handle.join().expect("http listener");
-}
-
 fn sweep_body(models: &[&str], variants: &[FuseVariant], sizes: &[usize]) -> String {
     encode_request_body(&Request::new(
         1,
@@ -99,7 +85,8 @@ fn sweep_body(models: &[&str], variants: &[FuseVariant], sizes: &[usize]) -> Str
 
 #[test]
 fn http_oneshot_infer_simulate_and_ops() {
-    let (addr, handle) = start_http(mock_router(64, 32));
+    let server = TestServer::http(mock_router(64, 32));
+    let addr = server.addr().to_string();
 
     // healthz: liveness + protocol version
     let reply = http_call(&addr, "/healthz", None, None, T).expect("healthz");
@@ -158,7 +145,7 @@ fn http_oneshot_infer_simulate_and_ops() {
         other => panic!("expected zoo, got {other:?}"),
     }
 
-    shutdown_http(&addr, handle);
+    server.shutdown();
 }
 
 #[test]
@@ -166,7 +153,8 @@ fn http_sweep_streams_sse_bit_identical_to_serial() {
     // Acceptance: a ≥24-cell SSE sweep must stream incremental events
     // before its final, and row-by-row cycle counts must be
     // bit-identical to the local serial sweep of the same grid.
-    let (addr, handle) = start_http(mock_router(64, 32));
+    let server = TestServer::http(mock_router(64, 32));
+    let addr = server.addr().to_string();
     const SIZES: [usize; 8] = [4, 8, 12, 16, 20, 24, 28, 32];
     let variants = [FuseVariant::Base, FuseVariant::Half, FuseVariant::Full];
 
@@ -209,12 +197,13 @@ fn http_sweep_streams_sse_bit_identical_to_serial() {
         other => panic!("expected merged sweep, got {other:?}"),
     }
 
-    shutdown_http(&addr, handle);
+    server.shutdown();
 }
 
 #[test]
 fn http_error_statuses_cover_the_taxonomy() {
-    let (addr, handle) = start_http(mock_router(64, 32));
+    let server = TestServer::http(mock_router(64, 32));
+    let addr = server.addr().to_string();
 
     // malformed JSON body: 400 + typed bad_request frame
     let reply = http_call(&addr, "/v1/simulate", Some("{not json"), None, T).expect("call");
@@ -257,7 +246,7 @@ fn http_error_statuses_cover_the_taxonomy() {
     assert_eq!(reply.status, 504, "{}", reply.body);
     assert_eq!(reply.response().unwrap().result, Err(ServeError::Deadline));
 
-    shutdown_http(&addr, handle);
+    server.shutdown();
 }
 
 #[test]
@@ -265,7 +254,8 @@ fn http_429_on_saturated_batch_lane_still_admits_interactive() {
     // Batch lane bound 1: while one streamed sweep holds the slot, a
     // second sweep answers 429 (typed busy) — but interactive simulate
     // keeps being admitted, exactly like the TCP frontend.
-    let (addr, handle) = start_http(mock_router(64, 1));
+    let server = TestServer::http(mock_router(64, 1));
+    let addr = server.addr().to_string();
 
     let (started_tx, started_rx) = mpsc::channel();
     let addr2 = addr.clone();
@@ -325,7 +315,7 @@ fn http_429_on_saturated_batch_lane_still_admits_interactive() {
         other => panic!("expected sweep rows, got {other:?}"),
     }
 
-    shutdown_http(&addr, handle);
+    server.shutdown();
 }
 
 #[test]
@@ -339,10 +329,10 @@ fn concurrent_tcp_and_http_clients_agree_on_one_router() {
         .expect("bind tcp")
         .with_stop(stop.clone());
     let http = HttpServer::bind("127.0.0.1:0", router).expect("bind http").with_stop(stop);
-    let tcp_addr = wire.local_addr().to_string();
-    let http_addr = http.local_addr().to_string();
-    let tcp_handle = thread::spawn(move || wire.run().expect("tcp run"));
-    let http_handle = thread::spawn(move || http.run().expect("http run"));
+    let tcp_front = TestServer::from_wire(wire);
+    let http_front = TestServer::from_http(http);
+    let tcp_addr = tcp_front.addr().to_string();
+    let http_addr = http_front.addr().to_string();
 
     const SIZES: [usize; 4] = [8, 16, 24, 32];
     let variants = [FuseVariant::Base, FuseVariant::Half];
@@ -421,9 +411,10 @@ fn concurrent_tcp_and_http_clients_agree_on_one_router() {
     }
     drop(tcp_client);
 
-    // shutdown over HTTP trips the shared latch: both listeners exit
-    shutdown_http(&http_addr, http_handle);
-    tcp_handle.join().expect("tcp listener released by the shared latch");
+    // shutdown over HTTP trips the shared latch: both listeners exit,
+    // so the TCP guard joins without ever sending its own shutdown
+    http_front.shutdown();
+    tcp_front.join_stopped();
 }
 
 /// Read one HTTP response (status + content-length framed body) off a
@@ -462,8 +453,8 @@ fn keep_alive_budget_answers_429_and_closes() {
     let http = HttpServer::bind("127.0.0.1:0", router)
         .expect("bind http")
         .with_request_budget(Some(2));
-    let addr = http.local_addr().to_string();
-    let handle = thread::spawn(move || http.run().expect("http run"));
+    let server = TestServer::from_http(http);
+    let addr = server.addr().to_string();
 
     let mut conn = TcpStream::connect(&addr).expect("connect");
     conn.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
@@ -484,7 +475,7 @@ fn keep_alive_budget_answers_429_and_closes() {
     let reply = http_call(&addr, "/v1/stats", None, None, T).expect("fresh stats");
     assert_eq!(reply.status, 200);
 
-    shutdown_http(&addr, handle);
+    server.shutdown();
 }
 
 #[test]
@@ -499,7 +490,8 @@ fn http_stats_render_result_cache_counters() {
         MockEngine::new(4, 2, 8),
         BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(2) },
     )));
-    let (addr, handle) = start_http(router);
+    let server = TestServer::http(router);
+    let addr = server.addr().to_string();
 
     let body =
         sweep_body(&["mobilenet-v3-small"], &[FuseVariant::Base, FuseVariant::Half], &[8, 16]);
@@ -531,7 +523,7 @@ fn http_stats_render_result_cache_counters() {
         other => panic!("expected stats, got {other:?}"),
     }
 
-    shutdown_http(&addr, handle);
+    server.shutdown();
 }
 
 #[test]
@@ -657,6 +649,27 @@ fn protocol_md_documents_the_wire_contract() {
         "constant-time",
         "`/healthz`",
         "unauthenticated",
+    ] {
+        assert!(spec.contains(needle), "PROTOCOL.md must cover {needle:?}");
+    }
+    // the health, failover & membership section: probe states, the
+    // failover semantics, both admin ops, the rendezvous key movement,
+    // and every fleet-level stats field
+    for needle in [
+        "Health, failover & membership",
+        "--probe-interval-ms",
+        "--probe-failures",
+        "`up`",
+        "`suspect`",
+        "`down`",
+        "`draining`",
+        "`add-backend`",
+        "`drain-backend`",
+        "rendezvous",
+        "re-plan",
+        "`backend_state`",
+        "`failover_resteered`",
+        "`probe_failures`",
     ] {
         assert!(spec.contains(needle), "PROTOCOL.md must cover {needle:?}");
     }

@@ -20,15 +20,15 @@ use fuseconv::coordinator::wire::{encode_frame, encode_request_body};
 use fuseconv::coordinator::{
     http_call_auth, http_sse_auth, ConfigPatch, Evaluator, Frame, HttpServer, Reply, Request,
     RequestBody, Router, SearchReply, SearchSpec, ServeError, SimServer, Transport,
-    TransportGauges, WireClient, WireServer,
+    TransportGauges, WireServer,
 };
 use fuseconv::exec::CancelToken;
 use fuseconv::sim::SimConfig;
+use fuseconv::testkit::{stream_frames, wait_until, TestServer};
 use std::io::{Read, Write};
 use std::net::TcpStream;
 use std::sync::Arc;
-use std::thread;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 const T: Duration = Duration::from_secs(300);
 
@@ -45,34 +45,16 @@ fn search_req(id: u64, iterations: usize) -> Request {
 /// Simulation-only deployment with a single-slot search lane (so lane
 /// accounting is deterministic), on the chosen transport, optionally
 /// token-guarded.
-fn start_tcp(
-    transport: Transport,
-    auth: Option<&str>,
-) -> (String, thread::JoinHandle<()>, TransportGauges) {
+fn start_tcp(transport: Transport, auth: Option<&str>) -> (TestServer, TransportGauges) {
     let gauges = TransportGauges::new();
     let sim = SimServer::new(2).with_search_capacity(1);
     let router = Arc::new(Router::new(sim).with_gauges(gauges.clone()));
-    let server = WireServer::bind("127.0.0.1:0", router)
+    let wire = WireServer::bind("127.0.0.1:0", router)
         .expect("bind")
         .with_transport(transport)
         .with_gauges(gauges.clone())
         .with_auth_token(auth.map(str::to_string));
-    let addr = server.local_addr().to_string();
-    let handle = thread::spawn(move || server.run().expect("run"));
-    (addr, handle, gauges)
-}
-
-/// Drain one request's reply stream into its raw frame sequence.
-fn stream_frames(client: &mut WireClient, id: u64) -> Vec<Frame> {
-    let mut frames = Vec::new();
-    loop {
-        let frame = client.recv_frame(id).expect("stream frame");
-        let last = frame.is_final();
-        frames.push(frame);
-        if last {
-            return frames;
-        }
-    }
+    (TestServer::from_wire(wire), gauges)
 }
 
 fn final_search(frames: &[Frame]) -> SearchReply {
@@ -82,20 +64,10 @@ fn final_search(frames: &[Frame]) -> SearchReply {
     }
 }
 
-/// Poll `cond` until it holds or a generous deadline passes (gauge and
-/// counter updates trail the client-visible event by a thread unwind).
-fn wait_until(what: &str, mut cond: impl FnMut() -> bool) {
-    let deadline = Instant::now() + Duration::from_secs(120);
-    while !cond() {
-        assert!(Instant::now() < deadline, "timed out waiting for {what}");
-        thread::sleep(Duration::from_millis(20));
-    }
-}
-
 #[test]
 fn same_seed_streams_are_byte_identical_and_match_local() {
-    let (addr, handle, _gauges) = start_tcp(Transport::Threaded, None);
-    let mut client = WireClient::connect(&addr, T).expect("connect");
+    let (server, _gauges) = start_tcp(Transport::Threaded, None);
+    let mut client = server.client(T);
 
     // Two runs of the same seeded spec over the wire: every frame —
     // progress, rows, terminal — re-encodes to the same bytes.
@@ -133,10 +105,8 @@ fn same_seed_streams_are_byte_identical_and_match_local() {
 
     // The HTTP/SSE transport renders the very same stream: row frames
     // byte-identical to TCP's, the terminal reply equal to TCP's.
-    let http = HttpServer::bind("127.0.0.1:0", Arc::new(Router::new(SimServer::new(2))))
-        .expect("bind http");
-    let haddr = http.local_addr().to_string();
-    let hh = thread::spawn(move || http.run().expect("http run"));
+    let hserver = TestServer::http(Arc::new(Router::new(SimServer::new(2))));
+    let haddr = hserver.addr().to_string();
     let mut sse_rows: Vec<String> = Vec::new();
     let resp = http_sse_auth(
         &haddr,
@@ -163,27 +133,24 @@ fn same_seed_streams_are_byte_identical_and_match_local() {
         Ok(Reply::Search(r)) => assert_eq!(r, reply, "SSE terminal must equal the TCP terminal"),
         other => panic!("expected a search reply over SSE, got {other:?}"),
     }
-    let reply = http_call_auth(&haddr, "/v1/shutdown", Some("{}"), None, None, T)
-        .expect("http shutdown");
-    assert_eq!(reply.status, 200);
-    hh.join().expect("http frontend");
+    hserver.shutdown();
 
     let resp = client.roundtrip(&Request::new(99, RequestBody::Shutdown)).expect("shutdown ack");
     assert_eq!(resp.result, Ok(Reply::Done));
-    handle.join().expect("tcp frontend");
+    server.join_stopped();
 }
 
 fn cancel_frees_the_search_lane(transport: Transport) {
-    let (addr, handle, _gauges) = start_tcp(transport, None);
+    let (server, _gauges) = start_tcp(transport, None);
 
     // The long search holds the only lane slot; its first frame proves
     // it is registered and running.
-    let mut a = WireClient::connect(&addr, T).expect("connect victim");
+    let mut a = server.client(T);
     a.send(&search_req(1, 1024)).expect("send long search");
     assert!(!a.recv_frame(1).expect("first frame").is_final());
 
     // While it runs, the lane is full: a second search sheds Busy.
-    let mut b = WireClient::connect(&addr, T).expect("connect second");
+    let mut b = server.client(T);
     let resp = b.roundtrip(&search_req(2, 1)).expect("busy roundtrip");
     assert_eq!(resp.result, Err(ServeError::Busy), "the single search slot must shed");
 
@@ -215,7 +182,7 @@ fn cancel_frees_the_search_lane(transport: Transport) {
 
     let resp = b.roundtrip(&Request::new(9, RequestBody::Shutdown)).expect("shutdown ack");
     assert_eq!(resp.result, Ok(Reply::Done));
-    handle.join().expect("frontend");
+    server.join_stopped();
 }
 
 #[test]
@@ -230,8 +197,8 @@ fn epoll_cancel_frees_the_search_lane() {
 }
 
 fn tcp_auth_taxonomy(transport: Transport) {
-    let (addr, handle, _gauges) = start_tcp(transport, Some("sesame"));
-    let mut client = WireClient::connect(&addr, T).expect("connect");
+    let (server, _gauges) = start_tcp(transport, Some("sesame"));
+    let mut client = server.client(T);
 
     // Missing and wrong tokens answer typed unauthorized — the
     // connection survives to try again.
@@ -263,7 +230,7 @@ fn tcp_auth_taxonomy(transport: Transport) {
         .roundtrip(&Request::new(9, RequestBody::Shutdown).with_token("sesame"))
         .expect("authorized shutdown");
     assert_eq!(resp.result, Ok(Reply::Done));
-    handle.join().expect("frontend");
+    server.join_stopped();
 }
 
 #[test]
@@ -282,8 +249,8 @@ fn http_auth_rejects_bad_bearers_and_healthz_stays_open() {
     let http = HttpServer::bind("127.0.0.1:0", Arc::new(Router::new(SimServer::new(2))))
         .expect("bind http")
         .with_auth_token(Some("sesame".into()));
-    let addr = http.local_addr().to_string();
-    let handle = thread::spawn(move || http.run().expect("http run"));
+    let server = TestServer::from_http(http).with_token("sesame");
+    let addr = server.addr().to_string();
 
     // Missing and wrong bearers are 401 with the typed error body.
     let reply = http_call_auth(&addr, "/v1/stats", None, None, None, T).expect("no bearer");
@@ -321,10 +288,8 @@ fn http_auth_rejects_bad_bearers_and_healthz_stays_open() {
     assert!(matches!(resp.result, Ok(Reply::Search(_))), "bearer search must stream: {resp:?}");
     assert!(rows > 0, "pareto rows must stream over SSE");
 
-    let reply = http_call_auth(&addr, "/v1/shutdown", Some("{}"), None, Some("sesame"), T)
-        .expect("authorized shutdown");
-    assert_eq!(reply.status, 200);
-    handle.join().expect("http frontend");
+    // the shutdown round-trip presents the same bearer
+    server.shutdown();
 }
 
 fn http_disconnect_cancels_search(transport: Transport) {
@@ -335,8 +300,8 @@ fn http_disconnect_cancels_search(transport: Transport) {
         .expect("bind http")
         .with_transport(transport)
         .with_gauges(gauges.clone());
-    let addr = http.local_addr().to_string();
-    let handle = thread::spawn(move || http.run().expect("http run"));
+    let server = TestServer::from_http(http);
+    let addr = server.addr().to_string();
 
     // A raw SSE client that reads the head of the stream and vanishes.
     let body = encode_request_body(&search_req(5, 1024));
@@ -366,10 +331,7 @@ fn http_disconnect_cancels_search(transport: Transport) {
         )
     });
 
-    let reply =
-        http_call_auth(&addr, "/v1/shutdown", Some("{}"), None, None, T).expect("shutdown");
-    assert_eq!(reply.status, 200);
-    handle.join().expect("http frontend");
+    server.shutdown();
 }
 
 #[test]

@@ -17,12 +17,13 @@
 use fuseconv::coordinator::batcher::BatchPolicy;
 use fuseconv::coordinator::{
     ConfigPatch, Frame, MockEngine, ModelSpec, Reply, Request, RequestBody, Router,
-    ServeError, Server, SimServer, SweepRow, WireClient, WireServer,
+    ServeError, Server, SimServer, SweepRow, WireClient,
 };
 use fuseconv::nn::models;
 use fuseconv::sim::{
     run_sweep_serial, simulate_network, FuseVariant, LayerCache, SimConfig, SweepPlan,
 };
+use fuseconv::testkit::TestServer;
 use std::collections::HashMap;
 use std::sync::Arc;
 use std::thread;
@@ -56,30 +57,19 @@ fn assert_rows_match(rows: &[SweepRow], reference: &fuseconv::sim::SweepOutcome)
 }
 
 /// Boot a full frontend (mock engine + sim pool) on an ephemeral port.
-fn start_frontend(sim_capacity: usize) -> (String, thread::JoinHandle<()>) {
+fn start_frontend(sim_capacity: usize) -> TestServer {
     let sim = SimServer::with_capacity(2, Arc::new(LayerCache::new()), sim_capacity);
     let router = Router::new(sim).with_engine(Server::start(
         MockEngine::new(4, 2, 8),
         BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(2) },
     ));
-    let server = WireServer::bind("127.0.0.1:0", Arc::new(router)).expect("bind ephemeral");
-    let addr = server.local_addr().to_string();
-    let handle = thread::spawn(move || server.run().expect("frontend run"));
-    (addr, handle)
-}
-
-fn shutdown_frontend(addr: &str, handle: thread::JoinHandle<()>) {
-    let mut client = WireClient::connect(addr, Duration::from_secs(10)).expect("connect");
-    let resp = client
-        .roundtrip(&Request::new(u64::MAX, RequestBody::Shutdown))
-        .expect("shutdown ack");
-    assert_eq!(resp.result, Ok(Reply::Done));
-    handle.join().expect("listener thread");
+    TestServer::wire(Arc::new(router))
 }
 
 #[test]
 fn concurrent_mixed_traffic_zero_dropped_replies() {
-    let (addr, handle) = start_frontend(256);
+    let server = start_frontend(256);
+    let addr = server.addr().to_string();
 
     // 32 client threads, each its own connection: even ids infer, odd
     // ids simulate. Every thread must get exactly its own reply back.
@@ -133,13 +123,13 @@ fn concurrent_mixed_traffic_zero_dropped_replies() {
     // determinism: every identical scenario priced identically
     assert!(sim_cycles.windows(2).all(|w| w[0] == w[1]));
 
-    shutdown_frontend(&addr, handle);
+    server.shutdown();
 }
 
 #[test]
 fn wire_simulate_matches_direct_simulation() {
-    let (addr, handle) = start_frontend(64);
-    let mut client = WireClient::connect(&addr, Duration::from_secs(120)).expect("connect");
+    let server = start_frontend(64);
+    let mut client = server.client(Duration::from_secs(120));
 
     for (model, variant, size) in [
         ("mobilenet-v2", FuseVariant::Base, 16),
@@ -173,15 +163,15 @@ fn wire_simulate_matches_direct_simulation() {
     }
 
     drop(client);
-    shutdown_frontend(&addr, handle);
+    server.shutdown();
 }
 
 #[test]
 fn full_bounded_queue_answers_busy_over_the_wire() {
     // capacity 1 → a burst of pipelined simulates must include at least
     // one `busy` answer, and every frame still gets a reply (no hang).
-    let (addr, handle) = start_frontend(1);
-    let mut client = WireClient::connect(&addr, Duration::from_secs(120)).expect("connect");
+    let server = start_frontend(1);
+    let mut client = server.client(Duration::from_secs(120));
 
     const BURST: u64 = 8;
     for i in 0..BURST {
@@ -213,13 +203,13 @@ fn full_bounded_queue_answers_busy_over_the_wire() {
     assert!(busy >= 1, "overload must surface as typed Busy, not a hang");
 
     drop(client);
-    shutdown_frontend(&addr, handle);
+    server.shutdown();
 }
 
 #[test]
 fn stats_and_zoo_over_the_wire() {
-    let (addr, handle) = start_frontend(64);
-    let mut client = WireClient::connect(&addr, Duration::from_secs(60)).expect("connect");
+    let server = start_frontend(64);
+    let mut client = server.client(Duration::from_secs(60));
 
     // drive one of each, then check the counters moved
     let resp = client
@@ -256,7 +246,7 @@ fn stats_and_zoo_over_the_wire() {
     }
 
     drop(client);
-    shutdown_frontend(&addr, handle);
+    server.shutdown();
 }
 
 #[test]
@@ -264,8 +254,8 @@ fn large_grid_streams_incremental_frames_before_final() {
     // Acceptance: a wire Sweep over a ≥24-point grid must stream ≥2
     // incremental Row/Progress frames before Final, and the merged rows
     // must be bit-identical to a serial run_sweep of the same grid.
-    let (addr, handle) = start_frontend(64);
-    let mut client = WireClient::connect(&addr, Duration::from_secs(300)).expect("connect");
+    let server = start_frontend(64);
+    let mut client = server.client(Duration::from_secs(300));
 
     const SIZES: [usize; 8] = [4, 8, 12, 16, 24, 32, 48, 64];
     let variants = [FuseVariant::Base, FuseVariant::Half, FuseVariant::Full];
@@ -308,7 +298,7 @@ fn large_grid_streams_incremental_frames_before_final() {
     assert_rows_match(&rows, &serial_reference(&["mobilenet-v2"], &variants, &SIZES));
 
     drop(client);
-    shutdown_frontend(&addr, handle);
+    server.shutdown();
 }
 
 #[test]
@@ -316,8 +306,8 @@ fn interleaved_streams_reassemble_per_request() {
     // Two concurrent streamed Sweeps plus pipelined Infers on ONE
     // connection: each stream must reassemble its own rows in plan
     // order, with zero cross-request leakage.
-    let (addr, handle) = start_frontend(64);
-    let mut client = WireClient::connect(&addr, Duration::from_secs(300)).expect("connect");
+    let server = start_frontend(64);
+    let mut client = server.client(Duration::from_secs(300));
 
     client
         .send(&Request::new(
@@ -391,7 +381,7 @@ fn interleaved_streams_reassemble_per_request() {
     assert!(rows.is_empty(), "rows for unknown request ids: {:?}", rows.keys());
 
     drop(client);
-    shutdown_frontend(&addr, handle);
+    server.shutdown();
 }
 
 #[test]
@@ -403,11 +393,9 @@ fn saturated_batch_lane_still_admits_interactive_over_the_wire() {
         MockEngine::new(4, 2, 8),
         BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(2) },
     ));
-    let server = WireServer::bind("127.0.0.1:0", Arc::new(router)).expect("bind");
-    let addr = server.local_addr().to_string();
-    let handle = thread::spawn(move || server.run().expect("frontend run"));
+    let server = TestServer::wire(Arc::new(router));
 
-    let mut batch = WireClient::connect(&addr, Duration::from_secs(300)).expect("connect");
+    let mut batch = server.client(Duration::from_secs(300));
     let sweep_body = RequestBody::Sweep {
         models: vec!["mobilenet-v2".into()],
         variants: vec![FuseVariant::Base, FuseVariant::Half, FuseVariant::Full],
@@ -424,8 +412,7 @@ fn saturated_batch_lane_still_admits_interactive_over_the_wire() {
     }
 
     // interactive lane must stay open regardless of the sweep pile-up
-    let mut interactive =
-        WireClient::connect(&addr, Duration::from_secs(120)).expect("connect");
+    let mut interactive = server.client(Duration::from_secs(120));
     let resp = interactive
         .roundtrip(&Request::new(
             1,
@@ -460,7 +447,7 @@ fn saturated_batch_lane_still_admits_interactive_over_the_wire() {
 
     drop(batch);
     drop(interactive);
-    shutdown_frontend(&addr, handle);
+    server.shutdown();
 }
 
 #[test]
@@ -470,8 +457,8 @@ fn stalled_reader_pauses_stream_and_resumes_losslessly() {
     // bounded ticket buffer — the server neither buffers without limit
     // nor wedges — and on resume it still receives every row, in plan
     // order, bit-identical to the serial sweep.
-    let (addr, handle) = start_frontend(64);
-    let mut stalled = WireClient::connect(&addr, Duration::from_secs(300)).expect("connect");
+    let server = start_frontend(64);
+    let mut stalled = server.client(Duration::from_secs(300));
     const SIZES: [usize; 8] = [4, 8, 12, 16, 24, 32, 48, 64];
     let variants = [FuseVariant::Base, FuseVariant::Half, FuseVariant::Full];
     stalled
@@ -488,7 +475,7 @@ fn stalled_reader_pauses_stream_and_resumes_losslessly() {
     thread::sleep(Duration::from_millis(1500));
 
     // The server must stay fully responsive for other connections.
-    let mut other = WireClient::connect(&addr, Duration::from_secs(120)).expect("connect 2");
+    let mut other = server.client(Duration::from_secs(120));
     let resp = other
         .roundtrip(&Request::new(
             1,
@@ -518,13 +505,13 @@ fn stalled_reader_pauses_stream_and_resumes_losslessly() {
 
     drop(stalled);
     drop(other);
-    shutdown_frontend(&addr, handle);
+    server.shutdown();
 }
 
 #[test]
 fn deadline_is_enforced_over_the_wire() {
-    let (addr, handle) = start_frontend(64);
-    let mut client = WireClient::connect(&addr, Duration::from_secs(60)).expect("connect");
+    let server = start_frontend(64);
+    let mut client = server.client(Duration::from_secs(60));
     // a deadline that has effectively already expired
     let resp = client
         .roundtrip(
@@ -541,5 +528,5 @@ fn deadline_is_enforced_over_the_wire() {
         .expect("roundtrip");
     assert_eq!(resp.result, Err(ServeError::Deadline));
     drop(client);
-    shutdown_frontend(&addr, handle);
+    server.shutdown();
 }

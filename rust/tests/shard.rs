@@ -10,24 +10,30 @@
 //!   in-process `simulate_network`;
 //! * `Stats` aggregates every backend's counters and stamps the
 //!   backend count (the `request --op stats` regression);
-//! * a lost backend (refused connection / dropped stream) terminates
-//!   the affected streams with a typed `final` error — never a hang —
-//!   while the surviving backend keeps serving;
+//! * a lost backend is marked `Down` and its work fails over: a pinned
+//!   `Simulate` retries once on a survivor, a sweep re-plans the missing
+//!   cells mid-stream — and with no survivors left the stream ends with
+//!   a typed `final` error, never a hang;
 //! * `Shutdown` through the front tier stops the whole deployment;
 //! * the HTTP/SSE frontend mounts the shard router unchanged.
+//!
+//! Fault-injection coverage (killed/black-holed/drained members, probe
+//! hardening, membership cache movement) lives in `shard_chaos.rs`.
 
 use fuseconv::coordinator::batcher::BatchPolicy;
 use fuseconv::coordinator::shard::{route, ShardRouter};
 use fuseconv::coordinator::wire::encode_frame;
 use fuseconv::coordinator::{
-    http_call, http_sse, request_once, ConfigPatch, Frame, HttpServer, MockEngine, ModelSpec,
-    Reply, Request, RequestBody, Router, SearchSpec, ServeError, Server, Service, SimServer,
-    SweepRow, WireClient, WireServer,
+    http_call, http_sse, request_once, ConfigPatch, Frame, MockEngine, ModelSpec, Reply,
+    Request, RequestBody, Router, SearchSpec, ServeError, Server, Service, SimServer,
+    SweepRow,
 };
 use fuseconv::nn::models;
 use fuseconv::sim::{
     run_sweep_serial, simulate_network, FuseVariant, ResultCache, SimConfig, SweepPlan,
 };
+use fuseconv::testkit;
+use fuseconv::testkit::TestServer;
 use std::net::TcpListener;
 use std::sync::Arc;
 use std::thread;
@@ -35,26 +41,9 @@ use std::time::Duration;
 
 const T: Duration = Duration::from_secs(120);
 
-/// Boot one full backend (mock inference engine + sim pool) on an
-/// ephemeral TCP port — exactly what `fuseconv serve` mounts.
-fn start_backend() -> (String, thread::JoinHandle<()>) {
-    let router = Router::new(SimServer::new(2)).with_engine(Server::start(
-        MockEngine::new(4, 2, 8),
-        BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(2) },
-    ));
-    let server = WireServer::bind("127.0.0.1:0", Arc::new(router)).expect("bind backend");
-    let addr = server.local_addr().to_string();
-    let handle = thread::spawn(move || server.run().expect("backend run"));
-    (addr, handle)
-}
-
 /// Mount a shard router over `backends` on its own TCP frontend.
-fn start_shard_frontend(backends: Vec<String>) -> (String, thread::JoinHandle<()>) {
-    let shard = ShardRouter::new(backends, T);
-    let server = WireServer::bind("127.0.0.1:0", Arc::new(shard)).expect("bind shard");
-    let addr = server.local_addr().to_string();
-    let handle = thread::spawn(move || server.run().expect("shard run"));
-    (addr, handle)
+fn start_shard_front(backends: Vec<String>) -> TestServer {
+    TestServer::wire(Arc::new(ShardRouter::new(backends, T)))
 }
 
 /// A host:port that refuses connections (bound once, then released).
@@ -65,81 +54,59 @@ fn dead_addr() -> String {
     addr
 }
 
-fn sweep_req(id: u64, names: &[&str], variants: &[FuseVariant], sizes: &[usize]) -> Request {
-    Request::new(
-        id,
-        RequestBody::Sweep {
-            models: names.iter().map(|s| s.to_string()).collect(),
-            variants: variants.to_vec(),
-            configs: sizes.iter().map(|&s| ConfigPatch::sized(s)).collect(),
-        },
-    )
-}
-
-/// Drain one request's reply stream into its raw frame sequence.
-fn stream_frames(client: &mut WireClient, id: u64) -> Vec<Frame> {
-    let mut frames = Vec::new();
-    loop {
-        let frame = client.recv_frame(id).expect("stream frame");
-        let last = frame.is_final();
-        frames.push(frame);
-        if last {
-            return frames;
+/// How many (name, size) shard keys rendezvous-route to `fleet[which]`.
+/// Ephemeral ports make the split itself random run to run, so tests
+/// compute the actual placement instead of assuming one.
+fn keys_on(fleet: &[String], which: usize, names: &[&str], sizes: &[usize]) -> usize {
+    let mut n = 0;
+    for name in names {
+        for &size in sizes {
+            if route(name, &SimConfig::with_size(size), fleet) == which {
+                n += 1;
+            }
         }
     }
-}
-
-fn row_frames(frames: &[Frame], id: u64) -> Vec<String> {
-    frames
-        .iter()
-        .filter(|f| matches!(f, Frame::Row(_)))
-        .map(|f| encode_frame(id, f))
-        .collect()
-}
-
-fn progress_frames(frames: &[Frame]) -> Vec<(u64, u64)> {
-    frames
-        .iter()
-        .filter_map(|f| match f {
-            Frame::Progress { done, total } => Some((*done, *total)),
-            _ => None,
-        })
-        .collect()
+    n
 }
 
 #[test]
 fn sharded_sweep_is_frame_identical_to_single_node() {
-    let (b1, h1) = start_backend();
-    let (b2, h2) = start_backend();
-    let (single, hs) = start_backend();
-    let (shard, hsh) = start_shard_frontend(vec![b1.clone(), b2.clone()]);
+    let b1 = TestServer::mock_backend();
+    let b2 = TestServer::mock_backend();
+    let single = TestServer::mock_backend();
+    let fleet = vec![b1.addr().to_string(), b2.addr().to_string()];
+    let front = start_shard_front(fleet.clone());
 
     let names = ["mobilenet-v2", "mobilenet-v3-small"];
     let variants = [FuseVariant::Base, FuseVariant::Half];
     let sizes = [8, 16, 32, 64]; // 2 × 2 × 4 = 16 cells
 
-    let mut sc = WireClient::connect(&shard, T).expect("connect shard");
-    sc.send(&sweep_req(7, &names, &variants, &sizes)).expect("send sharded sweep");
-    let sharded = stream_frames(&mut sc, 7);
+    let mut sc = front.client(T);
+    sc.send(&testkit::sweep_req(7, &names, &variants, &sizes)).expect("send sharded sweep");
+    let sharded = testkit::stream_frames(&mut sc, 7);
 
-    let mut nc = WireClient::connect(&single, T).expect("connect single node");
-    nc.send(&sweep_req(7, &names, &variants, &sizes)).expect("send single sweep");
-    let direct = stream_frames(&mut nc, 7);
+    let mut nc = single.client(T);
+    nc.send(&testkit::sweep_req(7, &names, &variants, &sizes)).expect("send single sweep");
+    let direct = testkit::stream_frames(&mut nc, 7);
 
     // Acceptance: identical frame kinds and counts, row frames
     // byte-for-byte identical (order and payload), identical
     // consolidated progress counter, identical terminal frame.
-    assert_eq!(row_frames(&sharded, 7), row_frames(&direct, 7), "row frames must match");
     assert_eq!(
-        progress_frames(&sharded),
-        progress_frames(&direct),
+        testkit::row_frames(&sharded, 7),
+        testkit::row_frames(&direct, 7),
+        "row frames must match"
+    );
+    assert_eq!(
+        testkit::progress_frames(&sharded),
+        testkit::progress_frames(&direct),
         "consolidated progress must match the single-node counter"
     );
     assert_eq!(sharded.last(), direct.last(), "terminal frame must match");
     assert_eq!(sharded.len(), direct.len(), "frame-for-frame identical streams");
 
     // The progress counter is the single consolidated 0..=total walk.
-    let ps = progress_frames(&sharded);
+    let ps = testkit::progress_frames(&sharded);
     assert_eq!(ps.first(), Some(&(0, 16)), "up-front progress with the full grid size");
     assert_eq!(ps.len(), 17, "one progress frame per completed cell plus the up-front one");
     assert!(ps.windows(2).all(|w| w[0].0 < w[1].0), "monotonic progress");
@@ -168,14 +135,18 @@ fn sharded_sweep_is_frame_identical_to_single_node() {
         assert_eq!(row.latency_ms.to_bits(), rec.latency_ms().to_bits());
     }
 
-    // The fan-out really crossed backends: this grid's shard keys split
-    // it over both, so each backend must have served ≥ 1 sub-sweep.
-    for backend in [&b1, &b2] {
-        let resp = request_once(backend, &Request::new(55, RequestBody::Stats), T)
+    // Every backend that owns part of the key space must have served
+    // its sub-sweeps (rendezvous over ephemeral ports decides the split,
+    // so compute it rather than assume it).
+    for (i, backend) in [&b1, &b2].into_iter().enumerate() {
+        if keys_on(&fleet, i, &names, &sizes) == 0 {
+            continue;
+        }
+        let resp = request_once(backend.addr(), &Request::new(55, RequestBody::Stats), T)
             .expect("backend stats");
         match resp.result {
             Ok(Reply::Stats(s)) => {
-                assert!(s.sim_completed >= 1, "backend {backend} served no sub-sweep: {s:?}");
+                assert!(s.sim_completed >= 1, "backend {i} served no sub-sweep: {s:?}");
             }
             other => panic!("expected stats, got {other:?}"),
         }
@@ -184,21 +155,19 @@ fn sharded_sweep_is_frame_identical_to_single_node() {
     // Shutdown through the front tier stops the whole deployment.
     let resp = sc.roundtrip(&Request::new(99, RequestBody::Shutdown)).expect("shutdown ack");
     assert_eq!(resp.result, Ok(Reply::Done));
-    hsh.join().expect("shard frontend");
-    h1.join().expect("backend 1");
-    h2.join().expect("backend 2");
+    front.join_stopped();
+    b1.join_stopped();
+    b2.join_stopped();
 
     // The stand-alone single node is its own deployment.
-    let mut c = WireClient::connect(&single, T).expect("connect single");
-    let _ = c.roundtrip(&Request::new(1, RequestBody::Shutdown));
-    hs.join().expect("single node");
+    single.shutdown();
 }
 
 #[test]
 fn sharded_simulate_matches_direct_and_stats_aggregate() {
-    let (b1, h1) = start_backend();
-    let (b2, h2) = start_backend();
-    let shard = ShardRouter::new(vec![b1, b2], T);
+    let b1 = TestServer::mock_backend();
+    let b2 = TestServer::mock_backend();
+    let shard = ShardRouter::new(vec![b1.addr().to_string(), b2.addr().to_string()], T);
 
     let cases: &[(&str, usize)] = &[
         ("mobilenet-v2", 8),
@@ -247,24 +216,21 @@ fn sharded_simulate_matches_direct_and_stats_aggregate() {
     // Fan-out shutdown stops both backends and latches the front tier.
     let resp = shard.call(Request::new(101, RequestBody::Shutdown)).wait_deadline(T);
     assert_eq!(resp.result, Ok(Reply::Done));
-    h1.join().expect("backend 1");
-    h2.join().expect("backend 2");
+    b1.join_stopped();
+    b2.join_stopped();
     let resp = shard.call(Request::new(102, RequestBody::Stats)).wait_deadline(T);
     assert_eq!(resp.result, Err(ServeError::Shutdown), "latched after shutdown");
 }
 
-/// Like [`start_backend`], with a per-node global result cache — what
-/// `fuseconv serve --cache-entries N` mounts.
-fn start_cached_backend() -> (String, thread::JoinHandle<()>) {
+/// Like [`TestServer::mock_backend`], with a per-node global result
+/// cache — what `fuseconv serve --cache-entries N` mounts.
+fn cached_backend() -> TestServer {
     let sim = SimServer::new(2).with_result_cache(Arc::new(ResultCache::new(64)));
     let router = Router::new(sim).with_engine(Server::start(
         MockEngine::new(4, 2, 8),
         BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(2) },
     ));
-    let server = WireServer::bind("127.0.0.1:0", Arc::new(router)).expect("bind backend");
-    let addr = server.local_addr().to_string();
-    let handle = thread::spawn(move || server.run().expect("backend run"));
-    (addr, handle)
+    TestServer::wire(Arc::new(router))
 }
 
 #[test]
@@ -274,28 +240,30 @@ fn sharded_stats_sum_result_cache_counters() {
     // 16 unique cells → 16 misses fleet-wide on the cold pass, 16 hits
     // on the identical warm pass, and entry/byte residency that equals
     // the sum over backends.
-    let (b1, h1) = start_cached_backend();
-    let (b2, h2) = start_cached_backend();
-    let (shard, hsh) = start_shard_frontend(vec![b1.clone(), b2.clone()]);
+    let b1 = cached_backend();
+    let b2 = cached_backend();
+    let fleet = vec![b1.addr().to_string(), b2.addr().to_string()];
+    let front = start_shard_front(fleet.clone());
 
     let names = ["mobilenet-v2", "mobilenet-v3-small"];
     let variants = [FuseVariant::Base, FuseVariant::Half];
     let sizes = [8, 16, 32, 64]; // 16 cells, split across both backends
 
-    let mut sc = WireClient::connect(&shard, T).expect("connect shard");
-    sc.send(&sweep_req(1, &names, &variants, &sizes)).expect("send cold sweep");
-    let cold = stream_frames(&mut sc, 1);
-    sc.send(&sweep_req(2, &names, &variants, &sizes)).expect("send warm sweep");
-    let warm = stream_frames(&mut sc, 2);
+    let mut sc = front.client(T);
+    sc.send(&testkit::sweep_req(1, &names, &variants, &sizes)).expect("send cold sweep");
+    let cold = testkit::stream_frames(&mut sc, 1);
+    sc.send(&testkit::sweep_req(2, &names, &variants, &sizes)).expect("send warm sweep");
+    let warm = testkit::stream_frames(&mut sc, 2);
     // the warm pass is served from the backends' caches, yet stays
     // byte-identical row for row (re-encoded under one id to compare)
     assert_eq!(
-        row_frames(&cold, 0),
-        row_frames(&warm, 0),
+        testkit::row_frames(&cold, 0),
+        testkit::row_frames(&warm, 0),
         "cached repeat must re-emit identical rows"
     );
 
-    let resp = request_once(&shard, &Request::new(3, RequestBody::Stats), T).expect("stats");
+    let fa = front.addr();
+    let resp = request_once(fa, &Request::new(3, RequestBody::Stats), T).expect("stats");
     let agg = match resp.result {
         Ok(Reply::Stats(s)) => s,
         other => panic!("expected aggregated stats, got {other:?}"),
@@ -307,17 +275,16 @@ fn sharded_stats_sum_result_cache_counters() {
     assert!(agg.result_bytes > 0);
 
     // ...and the aggregate really is the sum over both backends, each
-    // of which holds a strict subset of the grid
+    // holding exactly the cells the rendezvous hash pins to it (each
+    // routed (name, size) key caches one entry per variant).
     let (mut hits, mut entries, mut bytes) = (0, 0, 0);
-    for backend in [&b1, &b2] {
-        let resp = request_once(backend, &Request::new(4, RequestBody::Stats), T)
+    for (i, backend) in [&b1, &b2].into_iter().enumerate() {
+        let expected = (keys_on(&fleet, i, &names, &sizes) * variants.len()) as u64;
+        let resp = request_once(backend.addr(), &Request::new(4, RequestBody::Stats), T)
             .expect("backend stats");
         match resp.result {
             Ok(Reply::Stats(s)) => {
-                assert!(
-                    s.result_entries > 0 && s.result_entries < 16,
-                    "the grid must split across backends, got {s:?}"
-                );
+                assert_eq!(s.result_entries, expected, "backend {i} cache residency: {s:?}");
                 hits += s.result_hits;
                 entries += s.result_entries;
                 bytes += s.result_bytes;
@@ -333,27 +300,30 @@ fn sharded_stats_sum_result_cache_counters() {
 
     let resp = sc.roundtrip(&Request::new(99, RequestBody::Shutdown)).expect("shutdown ack");
     assert_eq!(resp.result, Ok(Reply::Done));
-    hsh.join().expect("shard frontend");
-    h1.join().expect("backend 1");
-    h2.join().expect("backend 2");
+    front.join_stopped();
+    b1.join_stopped();
+    b2.join_stopped();
 }
 
 #[test]
-fn backend_loss_is_a_typed_error_not_a_hang() {
-    let (live, h) = start_backend();
+fn backend_loss_fails_over_to_the_survivor() {
+    let live = TestServer::mock_backend();
     let dead = dead_addr();
-    let shard = ShardRouter::new(vec![live.clone(), dead], Duration::from_secs(30));
+    let fleet = vec![live.addr().to_string(), dead.clone()];
 
-    // Pick sizes deterministically on each side of the 2-way split.
+    // Pick sizes deterministically on each side of the rendezvous split.
     let name = "mobilenet-v2";
     let dead_size = (4..64)
-        .find(|&s| route(name, &SimConfig::with_size(s), 2) == 1)
+        .find(|&s| route(name, &SimConfig::with_size(s), &fleet) == 1)
         .expect("some size routes to the dead backend");
     let live_size = (4..64)
-        .find(|&s| route(name, &SimConfig::with_size(s), 2) == 0)
+        .find(|&s| route(name, &SimConfig::with_size(s), &fleet) == 0)
         .expect("some size routes to the live backend");
 
-    // Point query pinned to the dead backend: typed error, promptly.
+    // Point query pinned to the dead backend: the front tier marks the
+    // member Down and retries once on the survivor — the client gets a
+    // correctly priced reply, not an error.
+    let shard = ShardRouter::new(fleet.clone(), Duration::from_secs(30));
     let ticket = shard.call(Request::new(
         1,
         RequestBody::Simulate {
@@ -363,22 +333,62 @@ fn backend_loss_is_a_typed_error_not_a_hang() {
         },
     ));
     let resp = ticket.wait_deadline(Duration::from_secs(60));
-    assert_eq!(resp.result, Err(ServeError::Shutdown), "dead backend must map to a typed error");
+    let net = models::by_name(name).unwrap();
+    let direct =
+        simulate_network(&FuseVariant::Base.apply(&net), &SimConfig::with_size(dead_size));
+    match resp.result {
+        Ok(Reply::Sim(s)) => {
+            assert_eq!(s.total_cycles, direct.total_cycles, "failover must price identically");
+        }
+        other => panic!("expected a failed-over sim reply, got {other:?}"),
+    }
 
-    // A grid spanning both backends: losing one fails the whole sweep
-    // with a typed final instead of stalling on the missing cells.
-    let ticket = shard.call(sweep_req(2, &[name], &[FuseVariant::Base], &[live_size, dead_size]));
+    // A grid spanning both members, against a fresh front tier that
+    // still believes the dead member is up: the missing cells are
+    // re-planned onto the survivor mid-stream and the sweep completes.
+    // (Row-level byte parity under failover is proven in `shard_chaos`.)
+    let shard_b = ShardRouter::new(fleet.clone(), Duration::from_secs(30));
+    let req = testkit::sweep_req(2, &[name], &[FuseVariant::Base], &[live_size, dead_size]);
+    let resp = shard_b.call(req).wait_deadline(Duration::from_secs(60));
+    assert_eq!(resp.result, Ok(Reply::Done), "sweep must survive the lost backend");
+
+    // The loss is visible in stats: the member is Down and the re-steer
+    // counter attributes the moved work.
+    let resp = shard_b.call(Request::new(3, RequestBody::Stats)).wait_deadline(T);
+    match resp.result {
+        Ok(Reply::Stats(s)) => {
+            assert!(s.failover_resteered >= 1, "re-steers must be counted: {s:?}");
+            assert!(
+                s.backend_state.contains(&format!("{dead}=down")),
+                "dead member must read down: {:?}",
+                s.backend_state
+            );
+            assert!(
+                s.backend_state.contains(&format!("{}=up", live.addr())),
+                "survivor must stay up: {:?}",
+                s.backend_state
+            );
+        }
+        other => panic!("expected stats, got {other:?}"),
+    }
+
+    // With no survivors at all the error is typed — never a hang.
+    let lonely = ShardRouter::new(vec![dead_addr()], Duration::from_secs(5));
+    let ticket = lonely.call(Request::new(
+        4,
+        RequestBody::Simulate {
+            model: ModelSpec::Zoo(name.into()),
+            variant: FuseVariant::Base,
+            config: ConfigPatch::sized(8),
+        },
+    ));
     let resp = ticket.wait_deadline(Duration::from_secs(60));
-    assert_eq!(resp.result, Err(ServeError::Shutdown), "lost backend mid-sweep");
+    assert_eq!(resp.result, Err(ServeError::Shutdown), "no survivors must be a typed error");
 
-    // The surviving backend is untouched and still serves directly.
-    let resp = request_once(&live, &Request::new(3, RequestBody::Stats), T).expect("live stats");
-    assert!(resp.is_ok());
-
-    // Shutdown fan-out tolerates the dead backend and still acks.
-    let resp = shard.call(Request::new(4, RequestBody::Shutdown)).wait_deadline(T);
+    // Shutdown fan-out tolerates the dead member and still acks.
+    let resp = shard.call(Request::new(5, RequestBody::Shutdown)).wait_deadline(T);
     assert_eq!(resp.result, Ok(Reply::Done));
-    h.join().expect("live backend");
+    live.join_stopped();
 }
 
 #[test]
@@ -428,12 +438,11 @@ fn front_tier_admission_is_bounded() {
 
 #[test]
 fn http_frontend_mounts_the_shard_router_unchanged() {
-    let (b1, h1) = start_backend();
-    let (b2, h2) = start_backend();
-    let shard = ShardRouter::new(vec![b1, b2], T);
-    let http = HttpServer::bind("127.0.0.1:0", Arc::new(shard)).expect("bind http");
-    let addr = http.local_addr().to_string();
-    let hh = thread::spawn(move || http.run().expect("http run"));
+    let b1 = TestServer::mock_backend();
+    let b2 = TestServer::mock_backend();
+    let shard = ShardRouter::new(vec![b1.addr().to_string(), b2.addr().to_string()], T);
+    let front = TestServer::http(Arc::new(shard));
+    let addr = front.addr().to_string();
 
     // Liveness probes the whole deployment (healthz → Stats fan-out).
     let reply = http_call(&addr, "/healthz", None, None, T).expect("healthz");
@@ -477,9 +486,9 @@ fn http_frontend_mounts_the_shard_router_unchanged() {
     // Shutdown over HTTP stops the front tier and both backends.
     let reply = http_call(&addr, "/v1/shutdown", Some("{}"), None, T).expect("shutdown");
     assert_eq!(reply.status, 200);
-    hh.join().expect("http frontend");
-    h1.join().expect("backend 1");
-    h2.join().expect("backend 2");
+    front.join_stopped();
+    b1.join_stopped();
+    b2.join_stopped();
 }
 
 fn search_req(id: u64, iterations: usize) -> Request {
@@ -504,21 +513,21 @@ fn encoded_frames(frames: &[Frame], id: u64) -> Vec<String> {
 
 #[test]
 fn sharded_search_runs_whole_on_one_backend() {
-    let (b1, h1) = start_backend();
-    let (b2, h2) = start_backend();
-    let (single, hs) = start_backend();
-    let (shard, hsh) = start_shard_frontend(vec![b1.clone(), b2.clone()]);
+    let b1 = TestServer::mock_backend();
+    let b2 = TestServer::mock_backend();
+    let single = TestServer::mock_backend();
+    let front = start_shard_front(vec![b1.addr().to_string(), b2.addr().to_string()]);
 
     // The same seeded job through the front tier and against a lone
     // node: a search is never partitioned, so the relayed stream must
     // be byte-for-byte the single-node stream.
-    let mut sc = WireClient::connect(&shard, T).expect("connect shard");
+    let mut sc = front.client(T);
     sc.send(&search_req(7, 3)).expect("send sharded search");
-    let sharded = stream_frames(&mut sc, 7);
+    let sharded = testkit::stream_frames(&mut sc, 7);
 
-    let mut nc = WireClient::connect(&single, T).expect("connect single node");
+    let mut nc = single.client(T);
     nc.send(&search_req(7, 3)).expect("send single search");
-    let direct = stream_frames(&mut nc, 7);
+    let direct = testkit::stream_frames(&mut nc, 7);
 
     assert_eq!(
         encoded_frames(&sharded, 7),
@@ -540,7 +549,7 @@ fn sharded_search_runs_whole_on_one_backend() {
     // Round-robin placement, not fan-out: exactly one backend ran it.
     let mut started = Vec::new();
     for backend in [&b1, &b2] {
-        let resp = request_once(backend, &Request::new(55, RequestBody::Stats), T)
+        let resp = request_once(backend.addr(), &Request::new(55, RequestBody::Stats), T)
             .expect("backend stats");
         match resp.result {
             Ok(Reply::Stats(s)) => started.push(s.search_started),
@@ -551,7 +560,8 @@ fn sharded_search_runs_whole_on_one_backend() {
     assert_eq!(started, vec![0, 1], "one backend must own the whole job");
 
     // ...and the front tier's aggregate sums the fleet's counters.
-    let resp = request_once(&shard, &Request::new(56, RequestBody::Stats), T).expect("stats");
+    let fa = front.addr();
+    let resp = request_once(fa, &Request::new(56, RequestBody::Stats), T).expect("stats");
     match resp.result {
         Ok(Reply::Stats(s)) => {
             assert_eq!((s.search_started, s.search_completed, s.search_cancelled), (1, 1, 0));
@@ -561,23 +571,23 @@ fn sharded_search_runs_whole_on_one_backend() {
 
     let resp = sc.roundtrip(&Request::new(99, RequestBody::Shutdown)).expect("shutdown ack");
     assert_eq!(resp.result, Ok(Reply::Done));
-    hsh.join().expect("shard frontend");
-    h1.join().expect("backend 1");
-    h2.join().expect("backend 2");
+    front.join_stopped();
+    b1.join_stopped();
+    b2.join_stopped();
     let resp = nc.roundtrip(&Request::new(98, RequestBody::Shutdown)).expect("single shutdown");
     assert_eq!(resp.result, Ok(Reply::Done));
-    hs.join().expect("single node");
+    single.join_stopped();
 }
 
 #[test]
 fn cancel_passes_through_the_front_tier() {
-    let (b1, h1) = start_backend();
-    let (b2, h2) = start_backend();
-    let (shard, hsh) = start_shard_frontend(vec![b1.clone(), b2.clone()]);
+    let b1 = TestServer::mock_backend();
+    let b2 = TestServer::mock_backend();
+    let front = start_shard_front(vec![b1.addr().to_string(), b2.addr().to_string()]);
 
     // A long search parked on whichever backend round-robin picked; the
     // first frame proves it is registered and streaming.
-    let mut sc = WireClient::connect(&shard, T).expect("connect shard");
+    let mut sc = front.client(T);
     sc.send(&search_req(21, 1024)).expect("send long search");
     assert!(
         !sc.recv_frame(21).expect("first frame").is_final(),
@@ -586,14 +596,14 @@ fn cancel_passes_through_the_front_tier() {
 
     // The canceller does not know which backend owns request 21 — the
     // front tier fans the (idempotent) cancel to the whole fleet.
-    let mut cc = WireClient::connect(&shard, T).expect("connect canceller");
+    let mut cc = front.client(T);
     let resp =
         cc.roundtrip(&Request::new(90, RequestBody::Cancel { target: 21 })).expect("cancel ack");
     assert_eq!(resp.result, Ok(Reply::Done), "cancel fan-out must ack");
 
     // The victim's stream terminates with a cancelled search reply —
     // partial frontier, fewer generations than asked.
-    let frames = stream_frames(&mut sc, 21);
+    let frames = testkit::stream_frames(&mut sc, 21);
     let reply = match frames.last() {
         Some(Frame::Final(Ok(Reply::Search(r)))) => r.clone(),
         other => panic!("expected a cancelled search terminal, got {other:?}"),
@@ -603,7 +613,8 @@ fn cancel_passes_through_the_front_tier() {
 
     // Aggregate stats attribute the job: started once, cancelled once,
     // completed never.
-    let resp = request_once(&shard, &Request::new(91, RequestBody::Stats), T).expect("stats");
+    let fa = front.addr();
+    let resp = request_once(fa, &Request::new(91, RequestBody::Stats), T).expect("stats");
     match resp.result {
         Ok(Reply::Stats(s)) => {
             assert_eq!((s.search_started, s.search_completed, s.search_cancelled), (1, 0, 1));
@@ -613,7 +624,7 @@ fn cancel_passes_through_the_front_tier() {
 
     let resp = sc.roundtrip(&Request::new(99, RequestBody::Shutdown)).expect("shutdown ack");
     assert_eq!(resp.result, Ok(Reply::Done));
-    hsh.join().expect("shard frontend");
-    h1.join().expect("backend 1");
-    h2.join().expect("backend 2");
+    front.join_stopped();
+    b1.join_stopped();
+    b2.join_stopped();
 }

@@ -1,0 +1,424 @@
+//! Self-healing fleet acceptance, driven by the deterministic
+//! fault-injection harness ([`fuseconv::testkit::ChaosProxy`]): every
+//! fault here fires at an exact, reproducible point (a frame boundary,
+//! an accept, a probe), not via `kill -9` races.
+//!
+//! * a backend killed mid-sweep has its remaining sub-grid re-planned
+//!   onto the survivor — the client still receives every row,
+//!   byte-identical to a single node, under one consolidated progress
+//!   counter, and `failover_resteered` records the move;
+//! * draining a backend mid-sweep loses zero rows, then removes the
+//!   member once its in-flight work finishes;
+//! * `add-backend` at runtime routes a fresh sweep's rendezvous share
+//!   onto the new node;
+//! * a black-holed backend cannot hold a deadlined client past its
+//!   deadline, and the health probes harden it `Suspect`→`Down` within
+//!   the probe budget, after which traffic routes around it;
+//! * membership changes only invalidate the moved shard's cache keys —
+//!   the surviving backends' result caches stay warm;
+//! * a `Search` pinned to a dead backend fails typed, never hangs.
+
+use fuseconv::coordinator::batcher::BatchPolicy;
+use fuseconv::coordinator::shard::{route, ShardRouter};
+use fuseconv::coordinator::{
+    request_once, ConfigPatch, Frame, MockEngine, Reply, Request, RequestBody, Router,
+    SearchSpec, ServeError, Server, SimServer,
+};
+use fuseconv::nn::models;
+use fuseconv::sim::{
+    run_sweep_serial, FuseVariant, ResultCache, SimConfig, SweepPlan, SweepRow,
+};
+use fuseconv::testkit::{
+    progress_frames, row_frames, stream_frames, sweep_req, wait_until, ChaosMode, ChaosProxy,
+    TestServer,
+};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+const T: Duration = Duration::from_secs(120);
+
+const NAMES: [&str; 2] = ["mobilenet-v2", "mobilenet-v3-small"];
+const VARIANTS: [FuseVariant; 2] = [FuseVariant::Base, FuseVariant::Half];
+const SIZES: [usize; 6] = [8, 12, 16, 24, 32, 48]; // 2 × 2 × 6 = 24 cells
+
+/// How many of the 24 grid cells rendezvous-route to `fleet[which]`.
+fn cells_on(fleet: &[String], which: usize) -> usize {
+    let mut n = 0;
+    for name in NAMES {
+        for &s in &SIZES {
+            if route(name, &SimConfig::with_size(s), fleet) == which {
+                n += 1;
+            }
+        }
+    }
+    n * VARIANTS.len()
+}
+
+fn fetch_stats(addr: &str, id: u64) -> fuseconv::coordinator::StatsReply {
+    let resp = request_once(addr, &Request::new(id, RequestBody::Stats), T).expect("stats");
+    match resp.result {
+        Ok(Reply::Stats(s)) => s,
+        other => panic!("expected stats, got {other:?}"),
+    }
+}
+
+fn assert_rows_match_serial(frames: &[Frame]) {
+    let plan = SweepPlan::new(
+        NAMES.iter().map(|m| models::by_name(m).unwrap()).collect(),
+        VARIANTS.to_vec(),
+        SIZES.iter().map(|&s| SimConfig::with_size(s)).collect(),
+    );
+    let serial = run_sweep_serial(&plan);
+    let rows: Vec<SweepRow> = frames
+        .iter()
+        .filter_map(|f| match f {
+            Frame::Row(r) => Some(r.clone()),
+            _ => None,
+        })
+        .collect();
+    assert_eq!(rows.len(), serial.records().len(), "every cell must arrive exactly once");
+    for (row, rec) in rows.iter().zip(serial.records()) {
+        assert_eq!(row.network, rec.network);
+        assert_eq!(row.variant, rec.variant);
+        assert_eq!((row.rows, row.cols), (rec.cfg.rows, rec.cfg.cols));
+        assert_eq!(row.total_cycles, rec.total_cycles());
+        assert_eq!(row.latency_ms.to_bits(), rec.latency_ms().to_bits());
+    }
+}
+
+#[test]
+fn killed_backend_mid_sweep_resteers_remaining_cells_byte_identically() {
+    let survivor = TestServer::mock_backend();
+    let victim = TestServer::mock_backend();
+    let proxy = ChaosProxy::start(victim.addr());
+    let single = TestServer::mock_backend();
+    let fleet = vec![proxy.addr().to_string(), survivor.addr().to_string()];
+    let front = TestServer::wire(Arc::new(ShardRouter::new(fleet.clone(), T)));
+
+    // The grid splits over both members (rendezvous over ephemeral-port
+    // addresses: with 24 cells, both sides own a share).
+    let on_victim = cells_on(&fleet, 0);
+    assert!(on_victim > 0, "grid must put cells on the proxied backend");
+
+    // The victim "crashes" after relaying exactly one frame of its
+    // first sub-sweep — before any row it owns has been delivered.
+    proxy.set_mode(ChaosMode::DropAfterFrames(1));
+
+    let mut sc = front.client(T);
+    sc.send(&sweep_req(7, &NAMES, &VARIANTS, &SIZES)).expect("send sharded sweep");
+    let sharded = stream_frames(&mut sc, 7);
+
+    let mut nc = single.client(T);
+    nc.send(&sweep_req(7, &NAMES, &VARIANTS, &SIZES)).expect("send single sweep");
+    let direct = stream_frames(&mut nc, 7);
+
+    // Failover acceptance: despite the mid-stream kill, the client's
+    // stream is row-for-row byte-identical to the single node — no
+    // lost cells, no duplicates, plan order intact — with the same
+    // consolidated 0..=24 progress walk and the same terminal.
+    assert_eq!(row_frames(&sharded, 7), row_frames(&direct, 7), "rows survive the failover");
+    assert_eq!(progress_frames(&sharded), progress_frames(&direct), "one progress counter");
+    assert!(matches!(sharded.last(), Some(Frame::Final(Ok(Reply::Done)))));
+    assert_rows_match_serial(&sharded);
+
+    // The front tier accounted for the re-steer and took the dead
+    // member out of routing.
+    let stats = fetch_stats(front.addr(), 40);
+    assert!(
+        stats.failover_resteered >= on_victim as u64,
+        "re-planned cells must be counted: {stats:?}"
+    );
+    assert!(
+        stats.backend_state.iter().any(|e| *e == format!("{}=down", proxy.addr())),
+        "the killed backend must be Down: {:?}",
+        stats.backend_state
+    );
+    assert!(
+        stats.backend_state.iter().any(|e| *e == format!("{}=up", survivor.addr())),
+        "the survivor must stay Up: {:?}",
+        stats.backend_state
+    );
+
+    single.shutdown();
+    front.shutdown(); // fans out: stops the survivor and (via the proxy) the victim
+    survivor.join_stopped();
+    victim.join_stopped();
+}
+
+#[test]
+fn drain_mid_sweep_loses_zero_rows_then_removes_the_member() {
+    let a = TestServer::mock_backend();
+    let b = TestServer::mock_backend();
+    let proxy = ChaosProxy::start(a.addr());
+    let fleet = vec![proxy.addr().to_string(), b.addr().to_string()];
+    let front = TestServer::wire(Arc::new(ShardRouter::new(fleet.clone(), T)));
+    assert!(cells_on(&fleet, 0) > 0, "grid must put cells on the proxied backend");
+
+    // Slow the proxied backend's stream down so the drain demonstrably
+    // lands while its sub-sweeps are still in flight.
+    proxy.set_mode(ChaosMode::DelayMs(50));
+
+    let mut sc = front.client(T);
+    sc.send(&sweep_req(5, &NAMES, &VARIANTS, &SIZES)).expect("send sweep");
+    let mut frames = vec![sc.recv_frame(5).expect("up-front progress")];
+
+    // Drain the proxied member mid-stream: new work stops routing to
+    // it, but its in-flight sub-sweeps run to completion.
+    let resp = request_once(
+        front.addr(),
+        &Request::new(50, RequestBody::DrainBackend { addr: proxy.addr().to_string() }),
+        T,
+    )
+    .expect("drain ack");
+    assert_eq!(resp.result, Ok(Reply::Done));
+
+    loop {
+        let frame = sc.recv_frame(5).expect("stream frame");
+        let last = frame.is_final();
+        frames.push(frame);
+        if last {
+            break;
+        }
+    }
+    // Zero rows lost: the full grid arrived, in plan order, terminated
+    // cleanly.
+    assert!(matches!(frames.last(), Some(Frame::Final(Ok(Reply::Done)))));
+    assert_rows_match_serial(&frames);
+
+    // Once its in-flight work finished, the drained member left the
+    // fleet entirely.
+    wait_until("drained member removed", || {
+        let stats = fetch_stats(front.addr(), 60);
+        stats.backend_state.len() == 1
+            && stats.backend_state[0] == format!("{}=up", b.addr())
+    });
+
+    front.shutdown();
+    b.join_stopped();
+    // The drained node is no longer in the fleet, so the front tier's
+    // fan-out never reached it: it is its own deployment now.
+    a.shutdown();
+}
+
+#[test]
+fn add_backend_at_runtime_routes_the_new_nodes_share() {
+    let a = TestServer::mock_backend();
+    let front = TestServer::wire(Arc::new(ShardRouter::new(
+        vec![a.addr().to_string()],
+        T,
+    )));
+
+    // Join a brand-new node over the admin op, mid-deployment.
+    let b = TestServer::mock_backend();
+    let resp = request_once(
+        front.addr(),
+        &Request::new(1, RequestBody::AddBackend { addr: b.addr().to_string() }),
+        T,
+    )
+    .expect("add ack");
+    assert_eq!(resp.result, Ok(Reply::Done));
+
+    let fleet = vec![a.addr().to_string(), b.addr().to_string()];
+    let expected_b = cells_on(&fleet, 1);
+    assert!(expected_b > 0, "the new node must own a rendezvous share of the grid");
+
+    // A fresh sweep routes the new node's share onto it — and the
+    // stream stays correct and complete.
+    let mut sc = front.client(T);
+    sc.send(&sweep_req(9, &NAMES, &VARIANTS, &SIZES)).expect("send sweep");
+    let frames = stream_frames(&mut sc, 9);
+    assert!(matches!(frames.last(), Some(Frame::Final(Ok(Reply::Done)))));
+    assert_rows_match_serial(&frames);
+
+    // `sim_*` counters count requests (one per sub-sweep), so the
+    // joined node serving anything at all proves cells routed to it;
+    // the exact per-cell split is pinned by the warm-cache test below.
+    let on_b = fetch_stats(b.addr(), 70);
+    assert!(
+        on_b.sim_completed >= 1,
+        "the new node must serve its rendezvous share ({expected_b} cells): {on_b:?}"
+    );
+    let stats = fetch_stats(front.addr(), 71);
+    assert_eq!(stats.backends, 2, "aggregation must span the joined node");
+    assert!(stats.backend_state.iter().any(|e| *e == format!("{}=up", b.addr())));
+
+    front.shutdown();
+    a.join_stopped();
+    b.join_stopped();
+}
+
+#[test]
+fn black_holed_backend_cannot_hold_a_deadlined_client() {
+    let a = TestServer::mock_backend();
+    let b = TestServer::mock_backend();
+    let proxy = ChaosProxy::start(a.addr());
+    proxy.set_mode(ChaosMode::BlackHole);
+    let fleet = vec![proxy.addr().to_string(), b.addr().to_string()];
+    // Deliberately huge backend timeout: the deadline, not the
+    // transport timeout, must be what unblocks the client.
+    let front = TestServer::wire(Arc::new(ShardRouter::new(fleet.clone(), T)));
+    assert!(cells_on(&fleet, 0) > 0, "grid must put cells on the black hole");
+
+    let t0 = Instant::now();
+    let mut sc = front.client(T);
+    sc.send(&sweep_req(3, &NAMES, &VARIANTS, &SIZES).with_deadline_ms(500))
+        .expect("send deadlined sweep");
+    let frames = stream_frames(&mut sc, 3);
+    assert!(
+        matches!(frames.last(), Some(Frame::Final(Err(ServeError::Deadline)))),
+        "a black-holed shard must surface the deadline, got {:?}",
+        frames.last()
+    );
+    assert!(
+        t0.elapsed() < Duration::from_secs(30),
+        "the client was held {}ms — far past its 500ms deadline",
+        t0.elapsed().as_millis()
+    );
+
+    // Unstick the parked relay threads, then shut down cleanly.
+    proxy.set_mode(ChaosMode::Refuse);
+    proxy.kill_connections();
+    front.shutdown();
+    b.join_stopped();
+    a.shutdown(); // nothing ever got through the black hole to `a`
+}
+
+#[test]
+fn probes_harden_a_black_hole_to_down_and_traffic_routes_around_it() {
+    let a = TestServer::mock_backend();
+    let b = TestServer::mock_backend();
+    let proxy = ChaosProxy::start(a.addr());
+    proxy.set_mode(ChaosMode::BlackHole);
+    let fleet = vec![proxy.addr().to_string(), b.addr().to_string()];
+    let front = TestServer::wire(Arc::new(
+        ShardRouter::new(fleet, T).with_probes(Duration::from_millis(25), 2),
+    ));
+
+    // Probe budget: 2 failed round-trips at a 25ms cadence (each capped
+    // at the interval) — well under the polling ceiling.
+    wait_until("black-holed backend probed Down", || {
+        let stats = fetch_stats(front.addr(), 80);
+        stats.probe_failures >= 2
+            && stats.backend_state.iter().any(|e| *e == format!("{}=down", proxy.addr()))
+    });
+
+    // With the black hole Down, a fresh sweep routes entirely around it
+    // and completes — the fleet healed itself.
+    let mut sc = front.client(T);
+    sc.send(&sweep_req(4, &NAMES, &VARIANTS, &SIZES)).expect("send sweep");
+    let frames = stream_frames(&mut sc, 4);
+    assert!(matches!(frames.last(), Some(Frame::Final(Ok(Reply::Done)))));
+    assert_rows_match_serial(&frames);
+
+    proxy.set_mode(ChaosMode::Refuse);
+    proxy.kill_connections();
+    front.shutdown();
+    b.join_stopped();
+    a.shutdown();
+}
+
+/// A backend with a per-node global result cache, as mounted by
+/// `fuseconv serve --cache-entries N`.
+fn cached_backend() -> TestServer {
+    let sim = SimServer::new(2).with_result_cache(Arc::new(ResultCache::new(64)));
+    let router = Router::new(sim).with_engine(Server::start(
+        MockEngine::new(4, 2, 8),
+        BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(2) },
+    ));
+    TestServer::wire(Arc::new(router))
+}
+
+#[test]
+fn membership_growth_only_invalidates_the_moved_shards_keys() {
+    let a = cached_backend();
+    let b = cached_backend();
+    let front = TestServer::wire(Arc::new(ShardRouter::new(
+        vec![a.addr().to_string(), b.addr().to_string()],
+        T,
+    )));
+
+    // Cold pass fills the fleet's caches; identical warm pass hits on
+    // every cell.
+    let mut sc = front.client(T);
+    sc.send(&sweep_req(1, &NAMES, &VARIANTS, &SIZES)).expect("cold sweep");
+    let _ = stream_frames(&mut sc, 1);
+    sc.send(&sweep_req(2, &NAMES, &VARIANTS, &SIZES)).expect("warm sweep");
+    let _ = stream_frames(&mut sc, 2);
+    let warm = fetch_stats(front.addr(), 10);
+    assert_eq!((warm.result_misses, warm.result_hits), (24, 24));
+    let a_before = fetch_stats(a.addr(), 11).result_misses;
+    let b_before = fetch_stats(b.addr(), 12).result_misses;
+
+    // Grow the fleet. Rendezvous routing moves exactly the new node's
+    // share of the keyspace — nothing shuffles between a and b.
+    let c = cached_backend();
+    let resp = request_once(
+        front.addr(),
+        &Request::new(13, RequestBody::AddBackend { addr: c.addr().to_string() }),
+        T,
+    )
+    .expect("add ack");
+    assert_eq!(resp.result, Ok(Reply::Done));
+    let grown = vec![a.addr().to_string(), b.addr().to_string(), c.addr().to_string()];
+    let moved = cells_on(&grown, 2);
+    assert!(moved > 0 && moved < 24, "the new node must take a proper share, got {moved}");
+
+    sc.send(&sweep_req(3, &NAMES, &VARIANTS, &SIZES)).expect("resharded sweep");
+    let frames = stream_frames(&mut sc, 3);
+    assert_rows_match_serial(&frames);
+
+    // Only the moved keys went cold: fleet-wide misses grew by exactly
+    // the moved count, everything else kept hitting…
+    let after = fetch_stats(front.addr(), 14);
+    assert_eq!(
+        after.result_misses,
+        24 + moved as u64,
+        "only the keys that moved to the new node may miss"
+    );
+    assert_eq!(after.result_hits, 24 + (24 - moved as u64), "unmoved keys stay warm");
+    // …and the incumbents' caches were never invalidated at all.
+    assert_eq!(fetch_stats(a.addr(), 15).result_misses, a_before, "a stayed warm");
+    assert_eq!(fetch_stats(b.addr(), 16).result_misses, b_before, "b stayed warm");
+
+    front.shutdown();
+    a.join_stopped();
+    b.join_stopped();
+    c.join_stopped();
+}
+
+#[test]
+fn search_on_a_dead_backend_fails_typed_never_hangs() {
+    // A fleet whose only member closes every accepted connection: the
+    // relay observes the dead transport and terminates the stream with
+    // a typed error, bounded by the backend timeout — never a hang.
+    let proxy = ChaosProxy::start("127.0.0.1:9"); // upstream never reached
+    proxy.set_mode(ChaosMode::Refuse);
+    let front = TestServer::wire(Arc::new(ShardRouter::new(
+        vec![proxy.addr().to_string()],
+        Duration::from_secs(5),
+    )));
+
+    let t0 = Instant::now();
+    let mut sc = front.client(T);
+    sc.send(&Request::new(
+        21,
+        RequestBody::Search {
+            spec: SearchSpec {
+                population: 6,
+                iterations: 4,
+                config: ConfigPatch::sized(8),
+                ..SearchSpec::default()
+            },
+        },
+    ))
+    .expect("send search");
+    let frames = stream_frames(&mut sc, 21);
+    assert!(
+        matches!(frames.last(), Some(Frame::Final(Err(ServeError::Shutdown)))),
+        "dead backend must fail the search typed, got {:?}",
+        frames.last()
+    );
+    assert!(t0.elapsed() < Duration::from_secs(30), "typed failure must be prompt");
+
+    front.shutdown();
+}

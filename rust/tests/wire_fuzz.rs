@@ -1,0 +1,206 @@
+//! Decoder robustness: no input — random garbage, truncated or mutated
+//! valid frames, hostile JSON — may ever panic the wire codec. Every
+//! decode returns `Ok` or a typed `WireError`; a panic here would tear
+//! down a server connection thread on attacker-controlled bytes.
+//!
+//! Runs 10k seeded cases per surface through the in-tree property
+//! harness (`fuseconv::testkit::forall`), so every failure replays from
+//! its printed seed.
+
+use fuseconv::coordinator::wire::{
+    decode_frame, decode_request, decode_request_body, decode_response, encode_frame,
+    encode_request, parse_json,
+};
+use fuseconv::coordinator::{Frame, Reply, Request, RequestBody, ServeError};
+use fuseconv::rng::Rng;
+use fuseconv::testkit::{forall, no_shrink, Check};
+
+const CASES: usize = 10_000;
+
+/// Random bytes, lossily stringified — exercises the full parser
+/// surface including invalid UTF-8 replacement chars and embedded
+/// NULs/newlines.
+fn garbage(r: &mut Rng, max_len: usize) -> String {
+    let len = r.below(max_len + 1);
+    let bytes: Vec<u8> = (0..len).map(|_| r.below(256) as u8).collect();
+    String::from_utf8_lossy(&bytes).into_owned()
+}
+
+/// JSON-flavored garbage: random splices of structural tokens, so cases
+/// get past the first byte and into the recursive parser.
+fn jsonish(r: &mut Rng) -> String {
+    const TOKENS: [&str; 18] = [
+        "{",
+        "}",
+        "[",
+        "]",
+        ":",
+        ",",
+        "\"",
+        "\\",
+        "op",
+        "\"op\"",
+        "\"id\"",
+        "1e999",
+        "-0.5",
+        "null",
+        "true",
+        "1234567890123456789012345",
+        "\"\\u00\"",
+        " ",
+    ];
+    let n = r.below(40);
+    let mut out = String::new();
+    for _ in 0..n {
+        out.push_str(TOKENS[r.below(TOKENS.len())]);
+    }
+    out
+}
+
+/// A valid encoded frame to mutate/truncate.
+fn valid_frame(r: &mut Rng) -> String {
+    let id = r.next_u64() % 1000;
+    let (done, total) = (r.next_u64() % 100, r.next_u64() % 100);
+    let frame = match r.below(4) {
+        0 => Frame::Progress { done, total },
+        1 => Frame::Final(Ok(Reply::Done)),
+        2 => Frame::Final(Err(ServeError::BadRequest("x".into()))),
+        _ => Frame::Final(Err(ServeError::Busy)),
+    };
+    encode_frame(id, &frame)
+}
+
+/// Corrupt `text`: truncate at a random byte boundary, flip bytes, or
+/// splice in garbage — the shapes a cut TCP stream actually produces.
+fn mutate(r: &mut Rng, text: &str) -> String {
+    let mut bytes = text.as_bytes().to_vec();
+    match r.below(3) {
+        0 => {
+            // truncate (a mid-frame connection cut)
+            bytes.truncate(r.below(bytes.len() + 1));
+        }
+        1 => {
+            // flip a few bytes in place
+            for _ in 0..r.range(1, 8) {
+                if bytes.is_empty() {
+                    break;
+                }
+                let i = r.below(bytes.len());
+                bytes[i] = r.below(256) as u8;
+            }
+        }
+        _ => {
+            // splice garbage into the middle
+            let i = r.below(bytes.len() + 1);
+            let extra: Vec<u8> = (0..r.below(16)).map(|_| r.below(256) as u8).collect();
+            bytes.splice(i..i, extra);
+        }
+    }
+    String::from_utf8_lossy(&bytes).into_owned()
+}
+
+const OPS: [&str; 10] = [
+    "infer",
+    "simulate",
+    "sweep",
+    "search",
+    "stats",
+    "zoo",
+    "cancel",
+    "add-backend",
+    "drain-backend",
+    "shutdown",
+];
+
+#[test]
+fn decoders_never_panic_on_garbage() {
+    forall(
+        0xFACE_FEED,
+        CASES,
+        |r| {
+            if r.chance(0.5) {
+                garbage(r, 200)
+            } else {
+                jsonish(r)
+            }
+        },
+        no_shrink,
+        |input| {
+            // Every decode surface must return, never unwind.
+            let _ = parse_json(input);
+            let _ = decode_frame(input);
+            let _ = decode_request(input);
+            let _ = decode_response(input);
+            Check::Pass
+        },
+    );
+}
+
+#[test]
+fn decoders_never_panic_on_mutated_valid_frames() {
+    forall(
+        0xBADC_0FFE,
+        CASES,
+        |r| {
+            let text = valid_frame(r);
+            mutate(r, &text)
+        },
+        no_shrink,
+        |input| {
+            let _ = decode_frame(input);
+            let _ = decode_response(input);
+            Check::Pass
+        },
+    );
+}
+
+#[test]
+fn request_body_decoder_never_panics_on_hostile_json() {
+    forall(
+        0xDEAD_BEEF,
+        CASES,
+        |r| {
+            let op = OPS[r.below(OPS.len())].to_string();
+            let body = if r.chance(0.5) {
+                garbage(r, 120)
+            } else {
+                jsonish(r)
+            };
+            (op, body)
+        },
+        no_shrink,
+        |(op, body)| {
+            // Only well-formed JSON reaches decode_request_body in the
+            // real pipeline, but it must be panic-free on ANY Json value.
+            if let Ok(v) = parse_json(body) {
+                let _ = decode_request_body(op, &v);
+            }
+            Check::Pass
+        },
+    );
+}
+
+#[test]
+fn round_trip_survives_for_every_op_envelope() {
+    // The structured complement to the garbage cases: for every op, a
+    // canonical request round-trips; mutating its encoding never panics.
+    let mut r = Rng::new(7);
+    let bodies = [
+        RequestBody::Stats,
+        RequestBody::Zoo,
+        RequestBody::Shutdown,
+        RequestBody::Cancel { target: 9 },
+        RequestBody::AddBackend { addr: "10.0.0.9:4242".into() },
+        RequestBody::DrainBackend { addr: "10.0.0.9:4242".into() },
+        RequestBody::Infer { input: vec![0.5, -1.0] },
+    ];
+    for body in bodies {
+        let req = Request::new(3, body);
+        let text = encode_request(&req);
+        let back = decode_request(&text).expect("canonical round-trip");
+        assert_eq!(back, req);
+        for _ in 0..200 {
+            let _ = decode_request(&mutate(&mut r, &text));
+        }
+    }
+}
