@@ -1247,6 +1247,25 @@ mod tests {
     }
 
     #[test]
+    fn every_dataflow_keys_a_disjoint_shard_slot() {
+        // os / ws / is must rendezvous independently: a backend warm on
+        // the os pricing of a model never also answers its is pricing
+        // under the same key.
+        let keys: Vec<u64> = crate::sim::config::ALL_DATAFLOWS
+            .iter()
+            .map(|&df| {
+                let cfg = SimConfig { dataflow: df, ..SimConfig::with_size(16) };
+                shard_key("espnet-c", &cfg)
+            })
+            .collect();
+        for i in 0..keys.len() {
+            for j in (i + 1)..keys.len() {
+                assert_ne!(keys[i], keys[j], "dataflows {i} and {j} share a shard key");
+            }
+        }
+    }
+
+    #[test]
     fn zoo_grid_distribution_never_starves_a_backend() {
         // Satellite acceptance: a zoo×config grid spreads across 2–4
         // backends with every shard taking a meaningful share.

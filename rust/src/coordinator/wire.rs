@@ -570,7 +570,7 @@ fn variant_from_json(v: &Json) -> Result<FuseVariant, WireError> {
 }
 
 fn dataflow_from_str(s: &str) -> Result<Dataflow, WireError> {
-    Dataflow::parse(s).ok_or_else(|| WireError(format!("unknown dataflow {s:?} (want os|ws)")))
+    Dataflow::parse(s).ok_or_else(|| WireError(format!("unknown dataflow {s:?} (want os|ws|is)")))
 }
 
 fn mapping_from_str(s: &str) -> Result<MappingPolicy, WireError> {
@@ -630,6 +630,29 @@ fn op_to_json(op: &OpKind) -> Json {
             ("reduced", u(reduced)),
         ]),
         OpKind::Add { c } => obj(vec![("kind", Json::Str("add".into())), ("c", u(c))]),
+        OpKind::Dilated { k, stride, dilation, cin, cout } => obj(vec![
+            ("kind", Json::Str("dilated".into())),
+            ("k", u(k)),
+            ("stride", u(stride)),
+            ("dilation", u(dilation)),
+            ("cin", u(cin)),
+            ("cout", u(cout)),
+        ]),
+        OpKind::Transposed { k, stride, cin, cout } => obj(vec![
+            ("kind", Json::Str("transposed".into())),
+            ("k", u(k)),
+            ("stride", u(stride)),
+            ("cin", u(cin)),
+            ("cout", u(cout)),
+        ]),
+        OpKind::Grouped { k, stride, groups, cin, cout } => obj(vec![
+            ("kind", Json::Str("grouped".into())),
+            ("k", u(k)),
+            ("stride", u(stride)),
+            ("groups", u(groups)),
+            ("cin", u(cin)),
+            ("cout", u(cout)),
+        ]),
     }
 }
 
@@ -668,6 +691,45 @@ fn op_from_json(v: &Json) -> Result<OpKind, WireError> {
             reduced: need_usize(v, "reduced")?,
         },
         "add" => OpKind::Add { c: need_usize(v, "c")? },
+        // New-op fields are additive: `dilation`/`groups` absent decode to
+        // 1 (the dense-conv degenerate), so a client one vocabulary ahead
+        // of its server round-trips cleanly through proxies that re-encode.
+        "dilated" => {
+            let dilation = opt_usize(v, "dilation")?.unwrap_or(1);
+            if dilation == 0 {
+                return err("dilated: dilation must be >= 1".to_string());
+            }
+            OpKind::Dilated {
+                k: need_usize(v, "k")?,
+                stride: need_usize(v, "stride")?,
+                dilation,
+                cin: need_usize(v, "cin")?,
+                cout: need_usize(v, "cout")?,
+            }
+        }
+        "transposed" => OpKind::Transposed {
+            k: need_usize(v, "k")?,
+            stride: need_usize(v, "stride")?,
+            cin: need_usize(v, "cin")?,
+            cout: need_usize(v, "cout")?,
+        },
+        "grouped" => {
+            let groups = opt_usize(v, "groups")?.unwrap_or(1);
+            let cin = need_usize(v, "cin")?;
+            let cout = need_usize(v, "cout")?;
+            if groups == 0 || cin % groups != 0 || cout % groups != 0 {
+                return err(format!(
+                    "grouped: groups={groups} must be >= 1 and divide cin={cin} and cout={cout}"
+                ));
+            }
+            OpKind::Grouped {
+                k: need_usize(v, "k")?,
+                stride: need_usize(v, "stride")?,
+                groups,
+                cin,
+                cout,
+            }
+        }
         other => return err(format!("unknown op kind {other:?}")),
     })
 }
@@ -703,6 +765,16 @@ fn model_to_json(m: &ModelSpec) -> Json {
             ("layers", Json::Arr(layers.iter().map(layer_spec_to_json).collect())),
         ]),
     }
+}
+
+/// Parse a standalone [`ModelSpec`] JSON document — either
+/// `{"zoo":"name"}` or an inline `{"name":..., "layers":[...]}` — the
+/// same shape `simulate`/`sweep` requests embed. This is the
+/// `fuseconv request --model-file` entry: remote clients can simulate
+/// any operator the vocabulary knows (including dilated / transposed /
+/// grouped) without waiting for a zoo release.
+pub fn model_spec_from_json_str(s: &str) -> Result<ModelSpec, WireError> {
+    model_from_json(&parse_json(s)?)
 }
 
 fn model_from_json(v: &Json) -> Result<ModelSpec, WireError> {
@@ -1461,6 +1533,9 @@ mod tests {
             OpKind::GlobalPool { c: 1280 },
             OpKind::SqueezeExcite { c: 64, reduced: 16 },
             OpKind::Add { c: 64 },
+            OpKind::Dilated { k: 3, stride: 1, dilation: 4, cin: 32, cout: 64 },
+            OpKind::Transposed { k: 4, stride: 2, cin: 64, cout: 32 },
+            OpKind::Grouped { k: 3, stride: 2, groups: 4, cin: 32, cout: 64 },
         ];
         let layers: Vec<LayerSpec> = ops
             .into_iter()
@@ -1501,13 +1576,87 @@ mod tests {
     }
 
     #[test]
+    fn new_op_fields_are_additive_with_dense_defaults() {
+        // `dilation` / `groups` absent ⇒ 1: a v2-era client that re-encodes
+        // specs it doesn't fully know keeps working.
+        let op = op_from_json(
+            &parse_json(r#"{"kind":"dilated","k":3,"stride":1,"cin":8,"cout":16}"#).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(op, OpKind::Dilated { k: 3, stride: 1, dilation: 1, cin: 8, cout: 16 });
+        let op = op_from_json(
+            &parse_json(r#"{"kind":"grouped","k":3,"stride":1,"cin":8,"cout":16}"#).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(op, OpKind::Grouped { k: 3, stride: 1, groups: 1, cin: 8, cout: 16 });
+    }
+
+    #[test]
+    fn new_op_invalid_fields_are_typed_errors_not_panics() {
+        for bad in [
+            r#"{"kind":"dilated","k":3,"stride":1,"dilation":0,"cin":8,"cout":16}"#,
+            r#"{"kind":"grouped","k":3,"stride":1,"groups":0,"cin":8,"cout":16}"#,
+            r#"{"kind":"grouped","k":3,"stride":1,"groups":3,"cin":8,"cout":16}"#,
+            r#"{"kind":"grouped","k":3,"stride":1,"groups":4,"cin":8,"cout":18}"#,
+            r#"{"kind":"transposed","k":4,"stride":2,"cin":8}"#,
+        ] {
+            assert!(op_from_json(&parse_json(bad).unwrap()).is_err(), "accepted {bad}");
+        }
+    }
+
+    #[test]
+    fn dataflow_vocabulary_covers_is_and_rejects_unknowns() {
+        for df in crate::sim::config::ALL_DATAFLOWS {
+            assert_eq!(dataflow_from_str(df.short()).unwrap(), df);
+        }
+        let e = dataflow_from_str("systolic").unwrap_err();
+        assert!(e.0.contains("os|ws|is"), "error should teach the vocabulary: {}", e.0);
+    }
+
+    #[test]
+    fn model_spec_json_str_parses_both_shapes() {
+        assert_eq!(
+            model_spec_from_json_str(r#"{"zoo":"espnet-c"}"#).unwrap(),
+            ModelSpec::Zoo("espnet-c".into())
+        );
+        let m = model_spec_from_json_str(
+            r#"{"name":"edge-decoder","layers":[
+                {"name":"up","op":{"kind":"transposed","k":4,"stride":2,"cin":64,"cout":32},"h":16,"w":16},
+                {"name":"g","op":{"kind":"grouped","k":3,"stride":1,"groups":4,"cin":32,"cout":32},"h":32,"w":32,"block":0}
+            ]}"#,
+        )
+        .unwrap();
+        match m {
+            ModelSpec::Inline { name, layers } => {
+                assert_eq!(name, "edge-decoder");
+                assert_eq!(layers.len(), 2);
+                assert_eq!(
+                    layers[0].op,
+                    OpKind::Transposed { k: 4, stride: 2, cin: 64, cout: 32 }
+                );
+                assert_eq!(layers[1].block, Some(0));
+            }
+            other => panic!("expected inline spec, got {other:?}"),
+        }
+        assert!(model_spec_from_json_str("{\"layers\":[]}").is_err());
+    }
+
+    #[test]
     fn sweep_stats_zoo_shutdown_requests_round_trip() {
         rt_request(Request::new(
             5,
             RequestBody::Sweep {
                 models: vec!["mobilenet-v1".into(), "mnasnet-b1".into()],
                 variants: vec![FuseVariant::Base, FuseVariant::Half, FuseVariant::Full],
-                configs: vec![ConfigPatch::sized(8), ConfigPatch::sized(16)],
+                configs: vec![
+                    ConfigPatch::sized(8),
+                    ConfigPatch::sized(16),
+                    // the is-dataflow axis rides the same patch shape
+                    ConfigPatch {
+                        dataflow: Some(Dataflow::InputStationary),
+                        ..ConfigPatch::sized(16)
+                    },
+                ],
             },
         ));
         rt_request(Request::new(6, RequestBody::Stats));

@@ -75,7 +75,7 @@ fn print_help() {
          usage: fuseconv <subcommand> [options]\n\n\
          subcommands:\n  \
          zoo         list model zoo with MACs/params\n  \
-         simulate    simulate one network  (--model, --size, --dataflow os|ws, --no-stos)\n  \
+         simulate    simulate one network  (--model, --size, --dataflow os|ws|is, --no-stos)\n  \
          sweep       parallel zoo×config sweep (--models, --variants, --sizes, --dataflows,\n              \
                      --stos on|off|both, --threads, --format table|csv|json, --out, --verify,\n              \
                      --remote host:port to stream the grid from a serve endpoint)\n  \
@@ -97,7 +97,8 @@ fn print_help() {
                      --max-requests-per-conn, --auth-token, --port-file, --http-port-file)\n  \
          request     serve client          (--connect, --op infer|simulate|sweep|stats|zoo|cancel|\n              \
                      add-backend|drain-backend|shutdown, --backend host:port,\n              \
-                     --model, --variant, --size, --count, --stream, --http, --token)\n  \
+                     --model, --model-file spec.json, --variant, --size, --count,\n              \
+                     --stream, --http, --token)\n  \
          bench       open-loop load generator (--connect, --rps, --connections, --duration-secs,\n              \
                      --warmup-secs, --mix simulate=80,infer=10,sweep=10, --out BENCH_6.json)"
     );
@@ -112,7 +113,7 @@ fn sim_config(args: &fuseconv::cli::Args) -> Result<SimConfig, String> {
     let mut cfg = SimConfig::with_size(size);
     if let Some(df) = args.get("dataflow") {
         cfg.dataflow =
-            Dataflow::parse(df).ok_or_else(|| format!("bad --dataflow {df:?} (want os|ws)"))?;
+            Dataflow::parse(df).ok_or_else(|| format!("bad --dataflow {df:?} (want os|ws|is)"))?;
     }
     if args.flag("no-stos") {
         cfg.stos = false;
@@ -144,7 +145,7 @@ fn cmd_simulate(argv: &[String]) -> i32 {
     let cli = Cli::new("simulate", "simulate a network on the systolic array")
         .opt("model", "zoo network name", Some("mobilenet-v2"))
         .opt("size", "array dimension", Some("16"))
-        .opt("dataflow", "os|ws", Some("os"))
+        .opt("dataflow", "os|ws|is", Some("os"))
         .flag("no-stos", "disable ST-OS broadcast support")
         .flag("fuse", "apply FuSe-Half transform first")
         .flag("layers", "print per-layer detail");
@@ -196,7 +197,7 @@ fn cmd_sweep(argv: &[String]) -> i32 {
         .opt("models", "paper5 | all | comma-separated zoo names", Some("paper5"))
         .opt("variants", "comma list of base,half,full", Some("base,half,full"))
         .opt("sizes", "comma list of square array sizes", Some("8,16,32,64"))
-        .opt("dataflows", "comma list of os,ws", Some("os"))
+        .opt("dataflows", "comma list of os,ws,is", Some("os"))
         .opt("stos", "on | off | both", Some("on"))
         .opt("threads", "worker threads (0=auto; local runs only)", Some("0"))
         .opt("format", "table | csv | json", Some("table"))
@@ -254,7 +255,7 @@ fn cmd_sweep(argv: &[String]) -> i32 {
         match Dataflow::parse(d) {
             Some(df) => dataflows.push(df),
             None => {
-                eprintln!("unknown dataflow {d:?} (want os|ws)");
+                eprintln!("unknown dataflow {d:?} (want os|ws|is)");
                 return 2;
             }
         }
@@ -574,7 +575,7 @@ fn sweep_remote(
 fn cmd_speedup(argv: &[String]) -> i32 {
     let cli = Cli::new("speedup", "Fig 8a: baseline vs FuSe on the array")
         .opt("size", "array dimension", Some("16"))
-        .opt("dataflow", "os|ws", Some("os"))
+        .opt("dataflow", "os|ws|is", Some("os"))
         .flag("no-stos", "unused (always on for FuSe runs)");
     let args = match cli.parse(argv) {
         Ok(a) => a,
@@ -620,7 +621,7 @@ fn cmd_search_ea(argv: &[String]) -> i32 {
     let cli = Cli::new("search-ea", "evolutionary hybrid search")
         .opt("model", "base network", Some("mobilenet-v3-large"))
         .opt("size", "array dimension", Some("16"))
-        .opt("dataflow", "os|ws", Some("os"))
+        .opt("dataflow", "os|ws|is", Some("os"))
         .opt("pop", "population", Some("100"))
         .opt("iters", "iterations", Some("100"))
         .opt("seed", "rng seed", Some("42"))
@@ -669,7 +670,7 @@ fn cmd_search_ea(argv: &[String]) -> i32 {
 fn cmd_search_nas(argv: &[String]) -> i32 {
     let cli = Cli::new("search-nas", "OFA-space NAS")
         .opt("size", "array dimension", Some("16"))
-        .opt("dataflow", "os|ws", Some("os"))
+        .opt("dataflow", "os|ws|is", Some("os"))
         .opt("pop", "population", Some("32"))
         .opt("iters", "iterations", Some("16"))
         .opt("seed", "rng seed", Some("42"))
@@ -724,7 +725,7 @@ fn cmd_search(argv: &[String]) -> i32 {
         .opt("mutation-p", "per-gene mutation probability", Some("0.15"))
         .opt("seed", "rng seed", Some("42"))
         .opt("size", "array dimension", Some("16"))
-        .opt("dataflow", "os|ws", Some("os"))
+        .opt("dataflow", "os|ws|is", Some("os"))
         .opt("threads", "local worker threads (0=auto; remote runs ignore this)", Some("0"))
         .opt("remote", "run on a `fuseconv serve`/`fuseconv shard` endpoint host:port", None)
         .opt("token", "auth token for an authenticated endpoint", None)
@@ -770,7 +771,7 @@ fn cmd_search(argv: &[String]) -> i32 {
             Some(df) => match Dataflow::parse(df) {
                 Some(d) => Some(d),
                 None => {
-                    eprintln!("bad --dataflow {df:?} (want os|ws)\n{}", cli.usage());
+                    eprintln!("bad --dataflow {df:?} (want os|ws|is)\n{}", cli.usage());
                     return 2;
                 }
             },
@@ -992,7 +993,7 @@ fn cmd_trace(argv: &[String]) -> i32 {
     let cli = Cli::new("trace", "cycle-trace one layer")
         .opt("model", "zoo network", Some("mobilenet-v2"))
         .opt("size", "array dimension", Some("16"))
-        .opt("dataflow", "os|ws", Some("os"))
+        .opt("dataflow", "os|ws|is", Some("os"))
         .opt("layer", "layer index", Some("1"))
         .opt("windows", "max trace windows", Some("64"))
         .flag("no-stos", "disable ST-OS")
@@ -1454,12 +1455,14 @@ fn cmd_request(argv: &[String]) -> i32 {
         .opt("token", "auth token for an authenticated server", None)
         .opt("backend", "backend host:port (add-backend / drain-backend, shard front tier)", None)
         .opt("model", "zoo model (simulate)", Some("mobilenet-v2"))
+        .opt("model-file", "inline ModelSpec JSON file (simulate; overrides --model)", None)
         .opt("models", "comma list of zoo models (sweep)", Some("mobilenet-v2"))
         .opt("variant", "base|half|full (simulate)", Some("base"))
         .opt("variants", "comma list of variants (sweep)", Some("base,half"))
         .opt("size", "square array size override", None)
         .opt("sizes", "comma list of array sizes (sweep)", Some("8,16"))
-        .opt("dataflow", "os|ws override", None)
+        .opt("dataflow", "os|ws|is override", None)
+        .opt("dataflows", "comma list of os,ws,is (sweep grid axis; overrides --dataflow)", None)
         .opt("input", "comma-separated floats (infer)", Some("0,0,0,0"))
         .opt("count", "repeat the request N times on one connection", Some("1"))
         .opt("deadline-ms", "per-request deadline", None)
@@ -1490,7 +1493,7 @@ fn cmd_request(argv: &[String]) -> i32 {
             Some(df) => match Dataflow::parse(df) {
                 Some(d) => Some(d),
                 None => {
-                    eprintln!("bad --dataflow {df:?} (want os|ws)\n{}", cli.usage());
+                    eprintln!("bad --dataflow {df:?} (want os|ws|is)\n{}", cli.usage());
                     return 2;
                 }
             },
@@ -1522,11 +1525,30 @@ fn cmd_request(argv: &[String]) -> i32 {
                 eprintln!("bad --variant (want base|half|full)\n{}", cli.usage());
                 return 2;
             };
-            RequestBody::Simulate {
-                model: ModelSpec::Zoo(args.str("model")),
-                variant,
-                config: patch,
-            }
+            // `--model-file spec.json` sends an *inline* ModelSpec — the
+            // full layer list travels in the request, so non-zoo networks
+            // (including dilated/transposed/grouped layers) can be
+            // simulated without teaching the server their names.
+            let model = match args.get("model-file") {
+                Some(path) => {
+                    let text = match std::fs::read_to_string(path) {
+                        Ok(t) => t,
+                        Err(e) => {
+                            eprintln!("reading {path}: {e}");
+                            return 2;
+                        }
+                    };
+                    match fuseconv::coordinator::wire::model_spec_from_json_str(&text) {
+                        Ok(spec) => spec,
+                        Err(e) => {
+                            eprintln!("{path}: {e}");
+                            return 2;
+                        }
+                    }
+                }
+                None => ModelSpec::Zoo(args.str("model")),
+            };
+            RequestBody::Simulate { model, variant, config: patch }
         }
         "sweep" => {
             let models: Vec<String> = args
@@ -1545,11 +1567,36 @@ fn cmd_request(argv: &[String]) -> i32 {
                     }
                 }
             }
+            // `--dataflows os,ws,is` turns the dataflow into a grid
+            // axis; the cross product is size-major, dataflow-minor —
+            // the same plan order `grid_configs` produces locally.
+            let dataflows: Vec<Option<Dataflow>> = match args.get("dataflows") {
+                None => vec![None],
+                Some(list) => {
+                    let mut v = Vec::new();
+                    for tok in list.split(',').filter(|s| !s.is_empty()) {
+                        match Dataflow::parse(tok) {
+                            Some(d) => v.push(Some(d)),
+                            None => {
+                                eprintln!("unknown dataflow {tok:?} (want os|ws|is)");
+                                return 2;
+                            }
+                        }
+                    }
+                    v
+                }
+            };
             let mut configs = Vec::new();
             for tok in args.str("sizes").split(',').filter(|s| !s.is_empty()) {
                 match tok.parse::<usize>() {
                     Ok(n) if n > 0 => {
-                        configs.push(ConfigPatch { size: Some(n), ..patch.clone() })
+                        for &df in &dataflows {
+                            configs.push(ConfigPatch {
+                                size: Some(n),
+                                dataflow: df.or(patch.dataflow),
+                                ..patch.clone()
+                            })
+                        }
                     }
                     _ => {
                         eprintln!("bad array size {tok:?}");

@@ -173,6 +173,46 @@ impl NetBuilder {
         self
     }
 
+    /// Dilated `k×k` conv at the given rate (DeepLab/ESPNet-style context
+    /// aggregation without spatial downsampling).
+    pub fn dilated(
+        &mut self,
+        name: &str,
+        k: usize,
+        stride: usize,
+        dilation: usize,
+        cout: usize,
+        act: Act,
+    ) -> &mut Self {
+        assert!(dilation >= 1, "{name}: dilation must be >= 1");
+        let cin = self.c;
+        self.push(name.into(), OpKind::Dilated { k, stride, dilation, cin, cout }, act)
+    }
+
+    /// Transposed conv: upsamples the cursor by `stride` (decoder stages).
+    pub fn tconv(&mut self, name: &str, k: usize, stride: usize, cout: usize, act: Act) -> &mut Self {
+        let cin = self.c;
+        self.push(name.into(), OpKind::Transposed { k, stride, cin, cout }, act)
+    }
+
+    /// Grouped `k×k` conv; `groups` must divide both cin and cout.
+    pub fn gconv(
+        &mut self,
+        name: &str,
+        k: usize,
+        stride: usize,
+        groups: usize,
+        cout: usize,
+        act: Act,
+    ) -> &mut Self {
+        let cin = self.c;
+        assert!(
+            groups >= 1 && cin % groups == 0 && cout % groups == 0,
+            "{name}: groups={groups} must divide cin={cin} and cout={cout}"
+        );
+        self.push(name.into(), OpKind::Grouped { k, stride, groups, cin, cout }, act)
+    }
+
     pub fn se(&mut self, name: &str, reduced: usize) -> &mut Self {
         let c = self.c;
         self.push(name.into(), OpKind::SqueezeExcite { c, reduced }, Act::HSigmoid)
@@ -246,6 +286,27 @@ mod tests {
         assert_eq!(net.block_layers(blk).len(), 3);
         assert_eq!(net.bottleneck_blocks(), vec![0]);
         assert_eq!(net.layers.last().unwrap().block, None);
+    }
+
+    #[test]
+    fn builder_threads_new_conv_variant_shapes() {
+        let mut b = NetBuilder::new("t", 32, 8);
+        b.dilated("aspp", 3, 1, 2, 16, Act::Relu);
+        assert_eq!(b.cursor(), (32, 32, 16)); // stride 1, dilation ≠ subsample
+        b.gconv("g", 3, 2, 4, 32, Act::Relu);
+        assert_eq!(b.cursor(), (16, 16, 32));
+        b.tconv("up", 4, 2, 16, Act::Relu);
+        assert_eq!(b.cursor(), (32, 32, 16)); // upsampled back
+        let net = b.build();
+        assert_eq!(net.layers.len(), 3);
+        assert!(net.total_macs() > 0 && net.total_params() > 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "must divide")]
+    fn gconv_rejects_non_dividing_groups() {
+        let mut b = NetBuilder::new("t", 32, 8);
+        b.gconv("bad", 3, 1, 3, 16, Act::None);
     }
 
     #[test]

@@ -44,6 +44,8 @@ impl Layer {
         match self.op {
             OpKind::Fc { .. } | OpKind::GlobalPool { .. } => 1,
             OpKind::SqueezeExcite { .. } | OpKind::Add { .. } => self.h,
+            // fractionally-strided: upsamples instead of subsampling
+            OpKind::Transposed { stride, .. } => self.h * stride,
             op => out_dim(self.h, op.stride()),
         }
     }
@@ -53,6 +55,7 @@ impl Layer {
         match self.op {
             OpKind::Fc { .. } | OpKind::GlobalPool { .. } => 1,
             OpKind::SqueezeExcite { .. } | OpKind::Add { .. } => self.w,
+            OpKind::Transposed { stride, .. } => self.w * stride,
             op => out_dim(self.w, op.stride()),
         }
     }
@@ -76,6 +79,17 @@ impl Layer {
             // pool/add are not MACs; SE's two FCs are.
             OpKind::GlobalPool { .. } | OpKind::Add { .. } => 0,
             OpKind::SqueezeExcite { c, reduced } => 2 * (c * reduced) as u64,
+            // dilation changes *where* taps land, never how many there are
+            OpKind::Dilated { k, cin, cout, .. } => oh * ow * (k * k * cin * cout) as u64,
+            // useful MACs of a transposed conv: every *input* pixel meets
+            // the full kernel once — the zero-insertion waste is a
+            // scheduling artifact, not arithmetic (see sim::engine).
+            OpKind::Transposed { k, cin, cout, .. } => {
+                (self.h * self.w) as u64 * (k * k * cin * cout) as u64
+            }
+            OpKind::Grouped { k, groups, cin, cout, .. } => {
+                oh * ow * (k * k * (cin / groups.max(1)) * cout) as u64
+            }
         }
     }
 
@@ -132,6 +146,55 @@ mod tests {
         let col = Layer::new("c", OpKind::FuseCol { k, stride: 1, c: c / 2 }, h, w);
         let pw = Layer::new("p", OpKind::Pointwise { cin: c, cout: cp }, h, w);
         assert_eq!(row.macs() + col.macs() + pw.macs(), (h * w * c * (k + cp)) as u64);
+    }
+
+    #[test]
+    fn dilated_macs_equal_dense_conv_twin() {
+        // Same k/cin/cout/stride ⇒ identical MAC count at any dilation;
+        // the difference is utilization, not arithmetic.
+        let (h, w, k, cin, cout) = (33, 33, 3, 64, 128);
+        let dense = Layer::new("c", OpKind::Conv2d { k, stride: 1, cin, cout }, h, w);
+        for dilation in [1, 2, 4, 6] {
+            let dil =
+                Layer::new("d", OpKind::Dilated { k, stride: 1, dilation, cin, cout }, h, w);
+            assert_eq!(dil.macs(), dense.macs());
+            assert_eq!(dil.macs(), (h * w * k * k * cin * cout) as u64);
+            assert_eq!((dil.out_h(), dil.out_w()), (h, w));
+        }
+    }
+
+    #[test]
+    fn transposed_upsamples_and_counts_input_side_macs() {
+        let (h, w, k, s, cin, cout) = (16, 16, 4, 2, 64, 32);
+        let t = Layer::new("up", OpKind::Transposed { k, stride: s, cin, cout }, h, w);
+        assert_eq!((t.out_h(), t.out_w(), t.out_c()), (h * s, w * s, cout));
+        // N·M·K²·C·C' over the *input* grid: each input pixel scatters
+        // through the full kernel exactly once.
+        assert_eq!(t.macs(), (h * w * k * k * cin * cout) as u64);
+        assert_eq!(t.ofmap_elems(), (h * s * w * s * cout) as u64);
+    }
+
+    #[test]
+    fn grouped_macs_divide_by_group_count() {
+        let (h, w, k, cin, cout) = (28, 28, 3, 64, 64);
+        let dense = Layer::new("c", OpKind::Conv2d { k, stride: 1, cin, cout }, h, w);
+        for groups in [1, 2, 4, 8] {
+            let g = Layer::new(
+                "g",
+                OpKind::Grouped { k, stride: 1, groups, cin, cout },
+                h,
+                w,
+            );
+            assert_eq!(g.macs(), dense.macs() / groups as u64);
+        }
+        // groups == cin degenerates to (a cout-replicated) depthwise cost
+        let g = Layer::new(
+            "g",
+            OpKind::Grouped { k, stride: 1, groups: cin, cin, cout },
+            h,
+            w,
+        );
+        assert_eq!(g.macs(), (h * w * k * k * cout) as u64);
     }
 
     #[test]

@@ -13,6 +13,7 @@ pub mod mobilenet_v2;
 pub mod mobilenet_v3;
 pub mod nas_zoo;
 pub mod ofa;
+pub mod segmentation;
 
 use super::graph::{NetBuilder, Network};
 use super::ops::Act;
@@ -86,6 +87,8 @@ pub fn by_name(name: &str) -> Option<Network> {
         "ofa" => nas_zoo::ofa_baseline(),
         "fuse-ofa-1" => nas_zoo::fuse_ofa_1(),
         "fuse-ofa-2" => nas_zoo::fuse_ofa_2(),
+        "deeplab-mbv2" | "deeplab" => segmentation::deeplab_mbv2(),
+        "espnet-c" | "espnet" => segmentation::espnet_c(),
         _ => return None,
     })
 }
@@ -136,6 +139,8 @@ pub const ZOO_NAMES: &[&str] = &[
     "ofa",
     "fuse-ofa-1",
     "fuse-ofa-2",
+    "deeplab-mbv2",
+    "espnet-c",
 ];
 
 #[cfg(test)]

@@ -1,0 +1,105 @@
+//! Segmentation-style zoo entries exercising the dilated / transposed /
+//! grouped operators (ROADMAP item 4, EcoFlow/DRACO scenario space).
+//!
+//! These are *workload shapes*, not weight-exact reproductions: a
+//! DeepLabV3-style dilated (ASPP) head on a MobileNetV2-ish backbone, and
+//! an ESPNet-style encoder/decoder built from grouped reductions, dilated
+//! context convs, and transposed-conv upsampling. Both keep at least one
+//! depthwise bottleneck block so the paper's FuSe search space (which
+//! rewrites dw blocks) applies to them unchanged.
+
+use super::mbconv;
+use crate::nn::graph::{NetBuilder, Network};
+use crate::nn::ops::Act;
+
+/// DeepLabV3-style head: MBv2-ish backbone to stride 16, then a chain of
+/// rate-2/4/6 dilated 3×3 convs standing in for the ASPP pyramid (the IR
+/// is linear, so the parallel branches become a sequence with the same
+/// per-branch shapes), projected down to 21 classes.
+pub fn deeplab_mbv2() -> Network {
+    let mut b = NetBuilder::new("DeepLab-MBv2", 224, 3);
+    b.conv("stem", 3, 2, 32, Act::Relu6); // 112
+    mbconv(&mut b, "b0", 3, 1, 32, 16, 0, Act::Relu6);
+    mbconv(&mut b, "b1", 3, 2, 96, 24, 0, Act::Relu6); // 56
+    mbconv(&mut b, "b2", 3, 1, 144, 24, 0, Act::Relu6);
+    mbconv(&mut b, "b3", 3, 2, 144, 32, 0, Act::Relu6); // 28
+    mbconv(&mut b, "b4", 3, 1, 192, 32, 0, Act::Relu6);
+    mbconv(&mut b, "b5", 3, 2, 192, 64, 0, Act::Relu6); // 14 (output stride 16)
+    mbconv(&mut b, "b6", 3, 1, 384, 64, 0, Act::Relu6);
+    // ASPP pyramid: same-resolution context at growing rates.
+    b.dilated("aspp.r2", 3, 1, 2, 128, Act::Relu);
+    b.dilated("aspp.r4", 3, 1, 4, 128, Act::Relu);
+    b.dilated("aspp.r6", 3, 1, 6, 128, Act::Relu);
+    b.pw("aspp.project", 256, Act::Relu);
+    b.pw("classifier", 21, Act::None);
+    b.build()
+}
+
+/// ESPNet-style encoder/decoder: grouped convs do the channel reduction
+/// (the "point-wise group" trick), dilated convs the spatial pyramid, and
+/// transposed convs the ×4 decoder upsampling — the exact operator trio
+/// EcoFlow shows breaking the os/ws systolic dataflows.
+pub fn espnet_c() -> Network {
+    let mut b = NetBuilder::new("ESPNet-C", 224, 3);
+    b.conv("stem", 3, 2, 32, Act::Relu); // 112
+    // one dw bottleneck so the FuSe search space has a handle here too
+    mbconv(&mut b, "b0", 3, 1, 64, 32, 0, Act::Relu);
+    b.gconv("enc1.down", 3, 2, 4, 64, Act::Relu); // 56
+    b.gconv("enc1.reduce", 1, 1, 4, 32, Act::Relu);
+    b.dilated("enc1.d2", 3, 1, 2, 64, Act::Relu);
+    b.dilated("enc1.d4", 3, 1, 4, 64, Act::Relu);
+    b.add("enc1.add");
+    b.gconv("enc2.down", 3, 2, 8, 128, Act::Relu); // 28
+    b.gconv("enc2.reduce", 1, 1, 8, 64, Act::Relu);
+    b.dilated("enc2.d2", 3, 1, 2, 128, Act::Relu);
+    b.dilated("enc2.d8", 3, 1, 8, 128, Act::Relu);
+    b.add("enc2.add");
+    b.tconv("dec1.up", 4, 2, 64, Act::Relu); // 56
+    b.gconv("dec1.refine", 3, 1, 4, 64, Act::Relu);
+    b.tconv("dec2.up", 4, 2, 32, Act::Relu); // 112
+    b.pw("classifier", 20, Act::None);
+    b.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::ops::OpKind;
+
+    #[test]
+    fn deeplab_builds_with_dilated_head() {
+        let net = deeplab_mbv2();
+        assert!(net.total_macs() > 0 && net.total_params() > 0);
+        let dilated = net
+            .layers
+            .iter()
+            .filter(|l| matches!(l.op, OpKind::Dilated { .. }))
+            .count();
+        assert_eq!(dilated, 3);
+        assert!(!net.bottleneck_blocks().is_empty());
+        // the ASPP chain runs at the stride-16 resolution, undownsampled
+        let aspp = net.layers.iter().find(|l| l.name == "aspp.r6").unwrap();
+        assert_eq!((aspp.h, aspp.w), (14, 14));
+        assert_eq!((aspp.out_h(), aspp.out_w()), (14, 14));
+    }
+
+    #[test]
+    fn espnet_contains_all_three_new_operators() {
+        let net = espnet_c();
+        let has = |pred: fn(&OpKind) -> bool| net.layers.iter().any(|l| pred(&l.op));
+        assert!(has(|op| matches!(op, OpKind::Dilated { .. })));
+        assert!(has(|op| matches!(op, OpKind::Transposed { .. })));
+        assert!(has(|op| matches!(op, OpKind::Grouped { .. })));
+        assert!(!net.bottleneck_blocks().is_empty());
+        assert!(net.total_macs() > 0);
+    }
+
+    #[test]
+    fn espnet_decoder_restores_half_resolution() {
+        let net = espnet_c();
+        let last = net.layers.last().unwrap();
+        // classifier runs at 112×112: two ×2 transposed stages undo the
+        // two grouped downsamples
+        assert_eq!((last.h, last.w), (112, 112));
+    }
+}

@@ -39,6 +39,18 @@ pub enum OpKind {
     SqueezeExcite { c: usize, reduced: usize },
     /// Residual elementwise add over `c` channels.
     Add { c: usize },
+    /// Dilated spatial convolution: `k×k` taps spaced `dilation` apart
+    /// (effective receptive field `k + (k-1)(dilation-1)`), `cin → cout`.
+    /// MAC/param counts equal the dense conv; the inflated window is a
+    /// pure scheduling problem (EcoFlow).
+    Dilated { k: usize, stride: usize, dilation: usize, cin: usize, cout: usize },
+    /// Transposed (fractionally-strided) convolution: upsamples `h×w` to
+    /// `h·stride × w·stride`. Lowered via zero-insertion under the GEMM
+    /// dataflows — the inefficiency EcoFlow targets.
+    Transposed { k: usize, stride: usize, cin: usize, cout: usize },
+    /// Grouped convolution: `groups` independent `k×k` convs over
+    /// `cin/groups → cout/groups` channel slices each.
+    Grouped { k: usize, stride: usize, groups: usize, cin: usize, cout: usize },
 }
 
 /// Coarse operator class used by the paper's Fig 9(a) latency attribution.
@@ -57,7 +69,10 @@ impl OpKind {
             OpKind::Depthwise { .. } => OpClass::Depthwise,
             OpKind::Pointwise { .. } => OpClass::Pointwise,
             OpKind::FuseRow { .. } | OpKind::FuseCol { .. } => OpClass::FuSe,
-            OpKind::Conv2d { .. } => OpClass::OtherConv,
+            OpKind::Conv2d { .. }
+            | OpKind::Dilated { .. }
+            | OpKind::Transposed { .. }
+            | OpKind::Grouped { .. } => OpClass::OtherConv,
             OpKind::Fc { .. }
             | OpKind::GlobalPool { .. }
             | OpKind::SqueezeExcite { .. }
@@ -77,6 +92,9 @@ impl OpKind {
             OpKind::GlobalPool { c } => c,
             OpKind::SqueezeExcite { c, .. } => c,
             OpKind::Add { c } => c,
+            OpKind::Dilated { cout, .. }
+            | OpKind::Transposed { cout, .. }
+            | OpKind::Grouped { cout, .. } => cout,
         }
     }
 
@@ -92,6 +110,9 @@ impl OpKind {
             OpKind::GlobalPool { c } => c,
             OpKind::SqueezeExcite { c, .. } => c,
             OpKind::Add { c } => c,
+            OpKind::Dilated { cin, .. }
+            | OpKind::Transposed { cin, .. }
+            | OpKind::Grouped { cin, .. } => cin,
         }
     }
 
@@ -100,7 +121,10 @@ impl OpKind {
             OpKind::Conv2d { stride, .. }
             | OpKind::Depthwise { stride, .. }
             | OpKind::FuseRow { stride, .. }
-            | OpKind::FuseCol { stride, .. } => stride,
+            | OpKind::FuseCol { stride, .. }
+            | OpKind::Dilated { stride, .. }
+            | OpKind::Transposed { stride, .. }
+            | OpKind::Grouped { stride, .. } => stride,
             _ => 1,
         }
     }
@@ -115,7 +139,20 @@ impl OpKind {
             OpKind::Fc { cin, cout } => (cin * cout + cout) as u64,
             OpKind::GlobalPool { .. } | OpKind::Add { .. } => 0,
             OpKind::SqueezeExcite { c, reduced } => (c * reduced + reduced + reduced * c + c) as u64,
+            // Dilation spaces the taps out but adds none: dense-conv params.
+            OpKind::Dilated { k, cin, cout, .. } => (k * k * cin * cout) as u64,
+            OpKind::Transposed { k, cin, cout, .. } => (k * k * cin * cout) as u64,
+            OpKind::Grouped { k, groups, cin, cout, .. } => {
+                (k * k * (cin / groups.max(1)) * cout) as u64
+            }
         }
+    }
+
+    /// Effective receptive-field edge of a dilated kernel:
+    /// `k + (k-1)(dilation-1)` — the window the im2col gather must walk
+    /// even though only `k` taps per axis are real weights.
+    pub fn effective_k(k: usize, dilation: usize) -> usize {
+        k + k.saturating_sub(1) * dilation.saturating_sub(1)
     }
 }
 
@@ -155,6 +192,42 @@ mod tests {
         assert_eq!(dw, (k * k * c) as u64);
         assert_eq!(half, (k * c) as u64);
         assert_eq!(dw / half, k as u64);
+    }
+
+    #[test]
+    fn new_conv_variants_params_match_analytical_formulas() {
+        // dilated = dense conv params (taps spaced, not added)
+        let d = OpKind::Dilated { k: 3, stride: 1, dilation: 2, cin: 32, cout: 64 };
+        assert_eq!(d.params(), 3 * 3 * 32 * 64);
+        // transposed = K²·Cin·Cout, same as forward conv
+        let t = OpKind::Transposed { k: 4, stride: 2, cin: 64, cout: 32 };
+        assert_eq!(t.params(), 4 * 4 * 64 * 32);
+        // grouped = K²·(Cin/G)·Cout — a G× reduction vs dense
+        let g = OpKind::Grouped { k: 3, stride: 1, groups: 4, cin: 32, cout: 64 };
+        assert_eq!(g.params(), 3 * 3 * (32 / 4) * 64);
+        let dense = OpKind::Conv2d { k: 3, stride: 1, cin: 32, cout: 64 };
+        assert_eq!(dense.params(), g.params() * 4);
+    }
+
+    #[test]
+    fn new_conv_variants_accessors_and_class() {
+        let d = OpKind::Dilated { k: 3, stride: 2, dilation: 2, cin: 8, cout: 16 };
+        assert_eq!((d.cin(), d.cout(), d.stride()), (8, 16, 2));
+        assert_eq!(d.class(), OpClass::OtherConv);
+        let t = OpKind::Transposed { k: 4, stride: 2, cin: 16, cout: 8 };
+        assert_eq!((t.cin(), t.cout(), t.stride()), (16, 8, 2));
+        assert_eq!(t.class(), OpClass::OtherConv);
+        let g = OpKind::Grouped { k: 3, stride: 1, groups: 2, cin: 8, cout: 8 };
+        assert_eq!((g.cin(), g.cout(), g.stride()), (8, 8, 1));
+        assert_eq!(g.class(), OpClass::OtherConv);
+    }
+
+    #[test]
+    fn effective_k_inflates_with_dilation() {
+        assert_eq!(OpKind::effective_k(3, 1), 3);
+        assert_eq!(OpKind::effective_k(3, 2), 5);
+        assert_eq!(OpKind::effective_k(3, 4), 9);
+        assert_eq!(OpKind::effective_k(1, 8), 1); // 1×1 can't dilate
     }
 
     #[test]

@@ -3,20 +3,31 @@
 /// Dataflow executed by the PE array for *GEMM-shaped* operators
 /// (standard conv via im2col, pointwise, FC). FuSe layers additionally
 /// use ST-OS when `stos` is enabled, regardless of this baseline choice.
+///
+/// `InputStationary` pins activation tiles in the PEs and streams weight
+/// columns past them (EcoFlow's answer to transposed/dilated convs: a
+/// pinned input never multiplies an inserted zero, so those operators
+/// keep their utilization — see `sim::gemm::is_schedule`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Dataflow {
     OutputStationary,
     WeightStationary,
+    InputStationary,
 }
 
+/// Every dataflow, in the stable order sweeps enumerate them.
+pub const ALL_DATAFLOWS: [Dataflow; 3] =
+    [Dataflow::OutputStationary, Dataflow::WeightStationary, Dataflow::InputStationary];
+
 impl Dataflow {
-    /// The short CLI/wire form (`os` / `ws`). [`Dataflow::parse`] is the
-    /// inverse; every surface (CLI flags, sweep specs, wire configs)
-    /// shares this one vocabulary.
+    /// The short CLI/wire form (`os` / `ws` / `is`). [`Dataflow::parse`]
+    /// is the inverse; every surface (CLI flags, sweep specs, wire
+    /// configs) shares this one vocabulary.
     pub fn short(&self) -> &'static str {
         match self {
             Dataflow::OutputStationary => "os",
             Dataflow::WeightStationary => "ws",
+            Dataflow::InputStationary => "is",
         }
     }
 
@@ -26,6 +37,7 @@ impl Dataflow {
         match s {
             "os" => Some(Dataflow::OutputStationary),
             "ws" => Some(Dataflow::WeightStationary),
+            "is" => Some(Dataflow::InputStationary),
             _ => None,
         }
     }
@@ -248,15 +260,35 @@ mod tests {
 
     #[test]
     fn dataflow_and_mapping_strings_round_trip() {
-        for df in [Dataflow::OutputStationary, Dataflow::WeightStationary] {
+        for df in ALL_DATAFLOWS {
             assert_eq!(Dataflow::parse(df.short()), Some(df));
         }
         assert_eq!(Dataflow::parse("systolic"), None);
+        assert_eq!(Dataflow::parse("IS"), None); // vocabulary is exact, not fuzzy
         for m in [MappingPolicy::SpatialFirst, MappingPolicy::ChannelsFirst, MappingPolicy::Hybrid]
         {
             assert_eq!(MappingPolicy::parse(m.label()), Some(m));
         }
         assert_eq!(MappingPolicy::parse("rows-first"), None);
+    }
+
+    #[test]
+    fn every_dataflow_pair_gets_disjoint_cache_keys() {
+        // `is` must never alias an `os`/`ws` cache entry (and vice versa):
+        // both key tiers hash the dataflow.
+        let keys: Vec<(u64, u64)> = ALL_DATAFLOWS
+            .iter()
+            .map(|&df| {
+                let c = SimConfig::default().with_dataflow(df);
+                (c.schedule_key(), c.price_key())
+            })
+            .collect();
+        for i in 0..keys.len() {
+            for j in (i + 1)..keys.len() {
+                assert_ne!(keys[i].0, keys[j].0, "schedule_key collision {i} vs {j}");
+                assert_ne!(keys[i].1, keys[j].1, "price_key collision {i} vs {j}");
+            }
+        }
     }
 
     #[test]

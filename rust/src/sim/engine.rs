@@ -7,7 +7,7 @@
 
 use super::config::{Dataflow, SimConfig};
 use super::fold::{Fold, FoldSet};
-use super::gemm::{os_schedule, ws_schedule, Gemm};
+use super::gemm::{is_schedule, os_schedule, ws_schedule, Gemm};
 use super::memory::{apply as apply_memory, MemResult};
 use super::stos::{no_stos_schedule, stos_schedule, Conv1dSet};
 use crate::nn::{Layer, Network, OpClass, OpKind};
@@ -50,6 +50,7 @@ pub fn schedule_layer(layer: &Layer, cfg: &SimConfig) -> FoldSet {
     let gemm_sched = |g: &Gemm| match cfg.dataflow {
         Dataflow::OutputStationary => os_schedule(g, cfg),
         Dataflow::WeightStationary => ws_schedule(g, cfg),
+        Dataflow::InputStationary => is_schedule(g, cfg),
     };
     match layer.op {
         OpKind::Conv2d { k, cin, cout, .. } => gemm_sched(&Gemm {
@@ -152,6 +153,88 @@ pub fn schedule_layer(layer: &Layer, cfg: &SimConfig) -> FoldSet {
             f.dram_write_bytes = (elems * cfg.bytes_per_elem) as u64;
             let mut fs = FoldSet::new();
             fs.push(f);
+            fs
+        }
+        OpKind::Dilated { k, dilation, cin, cout, .. } => {
+            // The k-dim the array actually streams depends on the dataflow.
+            // os/ws im2col walks the *effective* window — every tap slot of
+            // the `k_eff × k_eff` receptive field occupies a reduction beat
+            // even though only `k²` of them hold real weights (EcoFlow's
+            // dilated-conv pathology). Input-stationary streams only the
+            // compressed real taps: the pinned inputs are addressed
+            // directly, no window walk to pad.
+            let taps = match cfg.dataflow {
+                Dataflow::InputStationary => k * k,
+                _ => {
+                    let keff = OpKind::effective_k(k, dilation);
+                    keff * keff
+                }
+            };
+            let mut fs = gemm_sched(&Gemm {
+                m: oh * ow,
+                n: cout,
+                k: taps * cin,
+                ifmap_unique: (layer.h * layer.w * cin) as u64,
+                weight_unique: (k * k * cin * cout) as u64,
+            });
+            // Array residency covers the padded taps; arithmetic is only
+            // the dense-kernel share.
+            fs.rescale_pe_cycles(layer.macs());
+            fs
+        }
+        OpKind::Transposed { k, stride, cin, cout } => match cfg.dataflow {
+            // Input-stationary computes the compact scatter GEMM: every
+            // *input* pixel is pinned once and its k²·cout contributions
+            // stream out — no zeros enter the array.
+            Dataflow::InputStationary => gemm_sched(&Gemm {
+                m: layer.h * layer.w,
+                n: k * k * cout,
+                k: cin,
+                ifmap_unique: (layer.h * layer.w * cin) as u64,
+                weight_unique: (k * k * cin * cout) as u64,
+            }),
+            // os/ws lower via zero-insertion: conv over the s×-upsampled
+            // ifmap, so the GEMM is stride² larger than the useful work.
+            // Only 1/stride² of the streamed input slots are real; the
+            // rescale books the array-residency waste as utilization loss
+            // (EcoFlow's transposed-conv pathology).
+            _ => {
+                let mut fs = gemm_sched(&Gemm {
+                    m: oh * ow,
+                    n: cout,
+                    k: k * k * cin,
+                    // DRAM holds only the real (pre-insertion) inputs.
+                    ifmap_unique: (layer.h * layer.w * cin) as u64,
+                    weight_unique: (k * k * cin * cout) as u64,
+                });
+                debug_assert!(stride >= 1);
+                fs.rescale_pe_cycles(layer.macs());
+                fs
+            }
+        },
+        OpKind::Grouped { k, groups, cin, cout, .. } => {
+            // Like depthwise (§2.3) generalized: `groups` independent
+            // GEMMs over cin/g → cout/g channel slices. No cross-group
+            // reuse — when cout/g underfills the columns (os) or
+            // k²·cin/g underfills the rows (ws), the idle PEs are the
+            // grouped-conv utilization loss DRACO co-optimizes against.
+            let g = groups.max(1);
+            let (cing, coutg) = (cin / g, cout / g);
+            let per_group = Gemm {
+                m: oh * ow,
+                n: coutg.max(1),
+                k: (k * k * cing).max(1),
+                ifmap_unique: (layer.h * layer.w * cing.max(1)) as u64,
+                weight_unique: (k * k * cing.max(1) * coutg.max(1)) as u64,
+            };
+            let one = gemm_sched(&per_group);
+            let mut fs = FoldSet::new();
+            for f in one.folds {
+                let mut f = f;
+                f.count *= g as u64;
+                fs.push(f);
+            }
+            fs.rescale_pe_cycles(layer.macs());
             fs
         }
     }
@@ -278,6 +361,105 @@ mod tests {
     }
 
     #[test]
+    fn new_conv_variants_schedule_under_every_dataflow() {
+        // Exact MAC conservation (pe_cycles == analytical MACs) for every
+        // (new op) × (dataflow) cell — the rescale bookkeeping must never
+        // leak or double-count arithmetic.
+        let ops: Vec<Layer> = vec![
+            Layer::new("dil", OpKind::Dilated { k: 3, stride: 1, dilation: 2, cin: 32, cout: 64 }, 33, 33),
+            Layer::new("tc", OpKind::Transposed { k: 4, stride: 2, cin: 64, cout: 32 }, 16, 16),
+            Layer::new("gc", OpKind::Grouped { k: 3, stride: 1, groups: 4, cin: 64, cout: 64 }, 28, 28),
+        ];
+        for df in crate::sim::config::ALL_DATAFLOWS {
+            let cfg = SimConfig::default().with_dataflow(df);
+            for l in &ops {
+                let s = simulate_layer(l, &cfg);
+                assert!(s.total_cycles > 0, "{} zero cycles under {df:?}", l.name);
+                assert_eq!(s.pe_cycles, l.macs(), "{} MAC mismatch under {df:?}", l.name);
+                assert!(
+                    s.utilization > 0.0 && s.utilization <= 1.0 + 1e-9,
+                    "{} util {} under {df:?}",
+                    l.name,
+                    s.utilization
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn transposed_utilization_collapses_under_os_but_not_is() {
+        // EcoFlow's headline: zero-insertion makes a stride-2 transposed
+        // conv waste ~3/4 of its array residency under the GEMM dataflows,
+        // while input-stationary keeps the compact GEMM's utilization.
+        let l = Layer::new("up", OpKind::Transposed { k: 4, stride: 2, cin: 64, cout: 64 }, 16, 16);
+        let os = simulate_layer(&l, &SimConfig::default());
+        let is = simulate_layer(
+            &l,
+            &SimConfig::default().with_dataflow(Dataflow::InputStationary),
+        );
+        assert!(
+            os.utilization < is.utilization / 2.0,
+            "os util {} should collapse vs is util {}",
+            os.utilization,
+            is.utilization
+        );
+        // and the dense-conv twin does NOT collapse under os: the gap is
+        // the operator, not the dataflow being generally bad.
+        let conv = Layer::new("c", OpKind::Conv2d { k: 4, stride: 1, cin: 64, cout: 64 }, 16, 16);
+        let conv_os = simulate_layer(&conv, &SimConfig::default());
+        assert!(conv_os.utilization > 2.0 * os.utilization);
+    }
+
+    #[test]
+    fn dilated_utilization_degrades_with_dilation_under_os() {
+        // The im2col window inflates k→k_eff; the real-tap fraction
+        // (k/k_eff)² bounds utilization under os/ws but not under is.
+        let mk = |dilation| {
+            Layer::new("d", OpKind::Dilated { k: 3, stride: 1, dilation, cin: 64, cout: 64 }, 33, 33)
+        };
+        let cfg = SimConfig::default();
+        let u1 = simulate_layer(&mk(1), &cfg).utilization;
+        let u4 = simulate_layer(&mk(4), &cfg).utilization;
+        assert!(u4 < u1 * 0.25, "d=4 util {u4} vs d=1 util {u1}");
+        let icfg = SimConfig::default().with_dataflow(Dataflow::InputStationary);
+        let i4 = simulate_layer(&mk(4), &icfg).utilization;
+        assert!(i4 > 2.0 * u4, "is util {i4} should beat os util {u4} at d=4");
+    }
+
+    #[test]
+    fn grouped_underfill_pathology_when_group_slice_below_rows() {
+        // k²·cin/g = 9·4 = 36 ≥ 16 rows is fine, but cout/g = 4 columns on
+        // a 16-wide array idles 3/4 of them under ws — and narrow groups
+        // also serialize os. Compare against the dense conv with identical
+        // arithmetic cost.
+        let cfg = SimConfig::default().with_dataflow(Dataflow::WeightStationary);
+        let g = Layer::new(
+            "g",
+            OpKind::Grouped { k: 3, stride: 1, groups: 16, cin: 64, cout: 64 },
+            28,
+            28,
+        );
+        let dense_eq = Layer::new(
+            // same MACs as the grouped op: cin/16 input channels
+            "c",
+            OpKind::Conv2d { k: 3, stride: 1, cin: 4, cout: 64 },
+            28,
+            28,
+        );
+        let sg = simulate_layer(&g, &cfg);
+        let sd = simulate_layer(&dense_eq, &cfg);
+        assert_eq!(g.macs(), dense_eq.macs() * 16);
+        // per-MAC, the grouped op is slower: no cross-group reuse
+        let per_mac_g = sg.total_cycles as f64 / g.macs() as f64;
+        let per_mac_d = sd.total_cycles as f64 / dense_eq.macs() as f64;
+        assert!(
+            per_mac_g > per_mac_d,
+            "grouped {per_mac_g} cyc/MAC should exceed dense {per_mac_d}"
+        );
+        assert!(sg.utilization < 0.30, "grouped ws util {}", sg.utilization);
+    }
+
+    #[test]
     fn depthwise_single_column_pathology() {
         let cfg = SimConfig::default();
         let dw = Layer::new("dw", OpKind::Depthwise { k: 3, stride: 1, c: 96 }, 56, 56);
@@ -332,6 +514,15 @@ mod tests {
         let net = mobilenet_v2::build();
         let sim = simulate_network(&net, &cfg);
         assert!(sim.total_cycles > 0);
+    }
+
+    #[test]
+    fn is_dataflow_runs_whole_networks() {
+        let cfg = SimConfig::default().with_dataflow(Dataflow::InputStationary);
+        let net = mobilenet_v2::build();
+        let sim = simulate_network(&net, &cfg);
+        assert!(sim.total_cycles > 0);
+        assert!(sim.overall_utilization() > 0.0);
     }
 
     #[test]

@@ -114,6 +114,34 @@ impl FoldSet {
     pub fn dram_write_bytes(&self) -> u64 {
         self.folds.iter().map(|f| f.dram_write_bytes * f.count).sum()
     }
+
+    /// Rescale the schedule's active-PE cycles to `target` without touching
+    /// durations or memory traffic. Used when a scheduler's array residency
+    /// covers *more* slots than there are useful MACs — a transposed conv's
+    /// zero-inserted inputs or a dilated conv's zero kernel taps under the
+    /// GEMM dataflows (EcoFlow's pathology): the array cycles are real, the
+    /// arithmetic mostly isn't. Per-fold shares round down; the exact
+    /// remainder lands in a zero-duration accounting fold so
+    /// `pe_cycles() == target` holds exactly and utilization reports the
+    /// *useful* fraction.
+    pub fn rescale_pe_cycles(&mut self, target: u64) {
+        let current = self.pe_cycles();
+        if current == 0 || current == target {
+            return;
+        }
+        let mut assigned = 0u64;
+        for f in &mut self.folds {
+            let scaled = ((f.pe_cycles as u128 * target as u128) / current as u128) as u64;
+            f.pe_cycles = scaled;
+            assigned += scaled * f.count;
+        }
+        let remainder = target.saturating_sub(assigned);
+        if remainder > 0 {
+            let mut f = Fold::once(0);
+            f.pe_cycles = remainder;
+            self.push(f);
+        }
+    }
 }
 
 #[cfg(test)]
@@ -144,6 +172,24 @@ mod tests {
         fs.push(f(10, 100)); // not adjacent to the first — kept separate
         assert_eq!(fs.folds.len(), 3);
         assert_eq!(fs.num_folds(), 3);
+    }
+
+    #[test]
+    fn rescale_pe_cycles_is_exact_and_leaves_durations_alone() {
+        let mut fs = FoldSet::new();
+        let mut a = f(7, 123);
+        a.count = 13;
+        fs.push(a);
+        fs.push(f(11, 77));
+        let cycles = fs.compute_cycles();
+        // down-scale to an awkward target: exact despite per-fold rounding
+        fs.rescale_pe_cycles(419);
+        assert_eq!(fs.pe_cycles(), 419);
+        assert_eq!(fs.compute_cycles(), cycles); // durations untouched
+        // no-op cases
+        let before = fs.folds.len();
+        fs.rescale_pe_cycles(419);
+        assert_eq!(fs.folds.len(), before);
     }
 
     #[test]

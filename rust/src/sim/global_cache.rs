@@ -469,6 +469,48 @@ mod tests {
     }
 
     #[test]
+    fn new_operators_and_dataflows_never_alias_cache_entries() {
+        use crate::nn::graph::NetBuilder;
+        use crate::nn::ops::Act;
+        use crate::sim::config::ALL_DATAFLOWS;
+
+        // Twin networks: same name, same geometry, same MAC count —
+        // only the dilation field of the op distinguishes them. The
+        // structural fingerprint must still tell them apart.
+        let twin = |dilation: usize| {
+            let mut b = NetBuilder::new("twin", 32, 8);
+            b.dilated("ctx", 3, 1, dilation, 16, Act::Relu);
+            b.build()
+        };
+        let (d1, d2) = (twin(1), twin(2));
+        assert_eq!(d1.total_macs(), d2.total_macs(), "twins must agree on MACs");
+        let cfg = SimConfig::default();
+        assert_ne!(
+            ResultKey::of(&d1, &cfg),
+            ResultKey::of(&d2, &cfg),
+            "dilation must be part of the structural fingerprint"
+        );
+        let rc = ResultCache::new(8);
+        let layers = LayerCache::new();
+        rc.simulate(&d1, &cfg, &layers, None).unwrap();
+        rc.simulate(&d2, &cfg, &layers, None).unwrap();
+        let s = rc.stats();
+        assert_eq!((s.misses, s.entries), (2, 2), "twins must occupy two entries");
+
+        // Every dataflow pair (os/ws/is) keys a distinct entry for the
+        // same network — `is` can never serve an os-priced result.
+        let keys: Vec<ResultKey> = ALL_DATAFLOWS
+            .iter()
+            .map(|&df| ResultKey::of(&d2, &SimConfig { dataflow: df, ..SimConfig::default() }))
+            .collect();
+        for i in 0..keys.len() {
+            for j in (i + 1)..keys.len() {
+                assert_ne!(keys[i], keys[j], "dataflows {i} and {j} alias");
+            }
+        }
+    }
+
+    #[test]
     fn lru_eviction_under_pressure_retires_oldest_first() {
         // One shard: exact global LRU order is observable.
         let rc = ResultCache::with_shards(2, 1);

@@ -13,7 +13,7 @@ pub mod stos;
 pub mod sweep;
 pub mod trace;
 
-pub use config::{Dataflow, MappingPolicy, SimConfig};
+pub use config::{Dataflow, MappingPolicy, SimConfig, ALL_DATAFLOWS};
 pub use engine::{price_layer, simulate_layer, simulate_network, LayerSim, NetworkSim};
 pub use global_cache::{ResultCache, ResultCacheStats};
 pub use sweep::{

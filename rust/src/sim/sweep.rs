@@ -697,6 +697,39 @@ mod tests {
     }
 
     #[test]
+    fn new_operator_grid_is_deterministic_across_all_dataflows() {
+        // The segmentation models carry dilated + transposed + grouped
+        // layers; sweeping them over the full os/ws/is grid in parallel
+        // must stay bit-identical to the serial reference.
+        let plan = SweepPlan::new(
+            vec![
+                models::by_name("espnet-c").unwrap(),
+                models::by_name("deeplab-mbv2").unwrap(),
+            ],
+            vec![FuseVariant::Base, FuseVariant::Half],
+            grid_configs(&[8, 16], &crate::sim::config::ALL_DATAFLOWS, &[true]),
+        );
+        assert_eq!(plan.len(), 2 * 2 * 2 * 3);
+        let serial = run_sweep_serial(&plan);
+        let pool = Pool::new(3);
+        let cache = Arc::new(LayerCache::new());
+        let par = run_sweep(&plan, &pool, &cache);
+        for (a, b) in serial.records().iter().zip(par.records()) {
+            assert_eq!(a.network, b.network);
+            assert_eq!(a.cfg.dataflow, b.cfg.dataflow);
+            assert_eq!(
+                a.total_cycles(),
+                b.total_cycles(),
+                "{} {} {} diverged",
+                a.network,
+                a.variant.label(),
+                a.cfg.label()
+            );
+            assert!(a.total_cycles() > 0);
+        }
+    }
+
+    #[test]
     fn run_sweep_with_streams_rows_in_plan_order() {
         let plan = SweepPlan::new(
             vec![

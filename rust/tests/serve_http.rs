@@ -673,4 +673,34 @@ fn protocol_md_documents_the_wire_contract() {
     ] {
         assert!(spec.contains(needle), "PROTOCOL.md must cover {needle:?}");
     }
+    // the operator & dataflow vocabulary section: every inline op kind
+    // tag (enumerated from the codec's own vocabulary), the three
+    // dataflow tokens, and the additive-field defaults for the
+    // dilated/grouped fields
+    for needle in [
+        "Operator & dataflow vocabulary",
+        "`\"conv2d\"`",
+        "`\"depthwise\"`",
+        "`\"pointwise\"`",
+        "`\"fuse_row\"`",
+        "`\"fuse_col\"`",
+        "`\"fc\"`",
+        "`\"global_pool\"`",
+        "`\"squeeze_excite\"`",
+        "`\"add\"`",
+        "`\"dilated\"`",
+        "`\"transposed\"`",
+        "`\"grouped\"`",
+        "`dilation`",
+        "`groups`",
+        "input-stationary",
+        "MUST divide",
+    ] {
+        assert!(spec.contains(needle), "PROTOCOL.md must cover {needle:?}");
+    }
+    // the dataflow vocabulary itself, as the parse/short pair renders it
+    for df in fuseconv::sim::config::ALL_DATAFLOWS {
+        let tok = format!("`{}`", df.short());
+        assert!(spec.contains(&tok), "PROTOCOL.md must document the {tok} dataflow");
+    }
 }
